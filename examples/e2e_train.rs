@@ -1,0 +1,122 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! PD-ORS (L3, rust) admits and schedules a training job; the schedule is
+//! then *executed* — every BSP iteration runs the AOT-compiled JAX model
+//! (L2) whose GEMM/attention/SGD hot-spots are Pallas kernels (L1) —
+//! against synthetic Markov token data, and the loss curve is logged.
+//!
+//! ```bash
+//! cargo run --release --example e2e_train -- [size] [steps]
+//! # default: small (~470k params), 300 steps
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md uses the default arguments.
+
+use dmlrs::cluster::{AllocLedger, ResVec};
+use dmlrs::exec::{execute_schedule, ExecConfig};
+use dmlrs::jobs::Sigmoid;
+use dmlrs::runtime::{ModelBundle, XlaRuntime};
+use dmlrs::sched::{PdOrs, PdOrsConfig};
+use dmlrs::util::{Rng, Timer};
+use dmlrs::workload::synthetic::paper_cluster;
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size = args.first().map(|s| s.as_str()).unwrap_or("small").to_string();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let rt = XlaRuntime::cpu()?;
+    let t_load = Timer::start();
+    let bundle = ModelBundle::load(&rt, "artifacts", &size)?;
+    println!(
+        "loaded lm_{size}: {} params ({}-layer path), compile {:.1}s",
+        bundle.meta.num_params,
+        bundle.meta.files.len(),
+        t_load.elapsed_secs()
+    );
+
+    // L3: schedule the job. Its analytical parameters mirror the model.
+    let horizon = 20;
+    let cluster = paper_cluster(8);
+    let mut rng = Rng::new(7);
+    let mut jobs = synthetic_jobs(&SynthConfig::paper(1, horizon, MIX_DEFAULT), &mut rng);
+    {
+        let job = &mut jobs[0];
+        job.arrival = 0;
+        job.grad_size_mb = bundle.meta.num_params as f64 * 4.0 / 1e6;
+        // F = 4: at most 4 concurrent workers — every scheduled worker
+        // runs a *real* gradient computation per BSP iteration on the one
+        // CPU PJRT device, so the worker group is kept small.
+        job.batch = 4;
+        job.gamma = 4.0;
+        job.tau = 5e-5;
+        job.epochs = 10;
+        job.samples = (job.batch as f64 / job.tau) * 5.0 / job.epochs as f64;
+        job.worker_demand = ResVec::new([1.0, 2.0, 4.0, 2.0]);
+        job.ps_demand = ResVec::new([0.0, 2.0, 4.0, 2.0]);
+        job.utility = Sigmoid { theta1: 80.0, theta2: 0.3, theta3: 12.0 };
+    }
+    let mut pdors = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, horizon);
+    let mut ledger = AllocLedger::new(&cluster, horizon);
+    let schedule = pdors
+        .on_arrival(&jobs[0], &mut ledger)
+        .expect("PD-ORS should admit the sized job");
+    println!(
+        "PD-ORS schedule: {} slots, completes t={}, payoff {:.2}",
+        schedule.slots.len(),
+        schedule.completion_time().unwrap(),
+        pdors.log.last().unwrap().payoff
+    );
+
+    // Execute: spread `steps` BSP iterations over the scheduled slots.
+    let per_slot = steps.div_ceil(schedule.slots.len().max(1)).max(1);
+    let cfg = ExecConfig { max_iters_per_slot: per_slot, eval_each_slot: true, seed: 7 };
+    let report = execute_schedule(&bundle, &jobs[0], &schedule, &cfg)?;
+
+    println!("\nslot  workers ps  locality  iters  mean_loss  wall");
+    for s in &report.slots {
+        println!(
+            "t={:3}  {:6} {:3}  {:>8}  {:5}  {:9.4}  {:.1}s",
+            s.t,
+            s.workers,
+            s.ps,
+            format!("{:?}", s.locality),
+            s.iterations,
+            s.mean_loss,
+            s.wall_secs
+        );
+    }
+
+    // Loss curve (downsampled print; full curve to file).
+    let n = report.losses.len();
+    println!("\nloss curve ({n} BSP steps):");
+    for (i, chunk) in report.losses.chunks((n / 12).max(1)).enumerate() {
+        let mean: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!("  step {:4}: {:.4}", i * (n / 12).max(1), mean);
+    }
+    let mut curve = String::from("step\tloss\n");
+    for (i, l) in report.losses.iter().enumerate() {
+        curve.push_str(&format!("{i}\t{l}\n"));
+    }
+    std::fs::create_dir_all("results").ok();
+    let path = format!("results/e2e_loss_{size}.tsv");
+    std::fs::write(&path, curve)?;
+    println!("\nwrote {path}");
+    println!(
+        "first {:.4} -> last {:.4} over {} steps, {} samples, wall {:.1}s",
+        report.losses.first().unwrap(),
+        report.losses.last().unwrap(),
+        n,
+        report.total_samples,
+        report.total_wall_secs
+    );
+    if let (Some(first), Some(last)) = (report.eval_losses.first(), report.eval_losses.last()) {
+        println!("held-out eval: {first:.4} -> {last:.4}");
+    }
+    assert!(
+        report.losses.last().unwrap() < report.losses.first().unwrap(),
+        "training must reduce the loss"
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: schedule a small workload with PD-ORS and inspect the
+//! decisions.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dmlrs::cluster::AllocLedger;
+use dmlrs::jobs::speed::{per_worker_rate, Locality};
+use dmlrs::sched::{PdOrs, PdOrsConfig};
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::paper_cluster;
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+fn main() {
+    // A 24-machine cluster (EC2 C5n-class capacities) and 12 jobs drawn
+    // from the paper's synthetic distribution, over a 20-slot horizon.
+    let horizon = 20;
+    let cluster = paper_cluster(24);
+    let mut rng = Rng::new(21);
+    let jobs = synthetic_jobs(&SynthConfig::paper(12, horizon, MIX_DEFAULT), &mut rng);
+
+    // PD-ORS estimates its price constants from the job population.
+    let mut sched = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, horizon);
+    let mut ledger = AllocLedger::new(&cluster, horizon);
+
+    println!("== PD-ORS quickstart: 24 machines, 12 jobs, T = 20 ==\n");
+    println!(
+        "pricing: L = {:.3e}, epsilon = {:.2}",
+        sched.pricing().l,
+        sched.pricing().epsilon()
+    );
+
+    for job in &jobs {
+        println!(
+            "\njob {:2}  arrives t={:2}  E*K = {:.1e} samples  F = {:3}  gamma = {}",
+            job.id,
+            job.arrival,
+            job.total_workload(),
+            job.batch,
+            job.gamma
+        );
+        println!(
+            "        rate/worker: internal {:.0} vs external {:.0} samples/slot",
+            per_worker_rate(job, Locality::Internal),
+            per_worker_rate(job, Locality::External)
+        );
+        match sched.on_arrival(job, &mut ledger) {
+            Some(s) => {
+                let done = s.completion_time().unwrap();
+                println!(
+                    "  ADMITTED: {} slots, completes t={done}, utility {:.2}",
+                    s.slots.len(),
+                    job.utility_at(done)
+                );
+                for slot in s.slots.iter().take(3) {
+                    println!("    t={:2} placements {:?}", slot.t, slot.placements);
+                }
+                if s.slots.len() > 3 {
+                    println!("    ... {} more slots", s.slots.len() - 3);
+                }
+            }
+            None => println!("  rejected (infeasible within horizon or payoff <= 0)"),
+        }
+    }
+
+    let admitted = sched.log.iter().filter(|a| a.admitted).count();
+    println!(
+        "\n== total: {}/{} admitted, utility {:.2} ==",
+        admitted,
+        jobs.len(),
+        sched.total_utility()
+    );
+    assert!(ledger.within_capacity(1e-6), "capacity invariant violated");
+}

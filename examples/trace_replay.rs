@@ -1,0 +1,54 @@
+//! Trace replay: the Google-trace-style workload through the full
+//! scheduler zoo (the Fig. 12/13 scenario as a single run).
+//!
+//! ```bash
+//! cargo run --release --example trace_replay -- [jobs] [machines] [horizon]
+//! ```
+
+use dmlrs::experiments::SchedulerKind;
+use dmlrs::sim::metrics::median_training_time;
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::paper_cluster;
+use dmlrs::workload::{google_trace_jobs, MIX_TRACE};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let jobs_n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60);
+    let machines: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30);
+    let horizon: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(60);
+
+    let mut rng = Rng::new(2024);
+    let jobs = google_trace_jobs(jobs_n, horizon, MIX_TRACE, &mut rng);
+    let cluster = paper_cluster(machines);
+
+    println!(
+        "== trace replay: {jobs_n} jobs (mix 30/69/1), {machines} machines, T = {horizon} =="
+    );
+    println!(
+        "\narrivals: {:?} ...",
+        jobs.iter().take(16).map(|j| j.arrival).collect::<Vec<_>>()
+    );
+
+    println!(
+        "\n{:<8} {:>14} {:>9} {:>10} {:>13}",
+        "sched", "total_utility", "admitted", "completed", "median_time"
+    );
+    let mut best = ("", f64::NEG_INFINITY);
+    let mut results = Vec::new();
+    for kind in SchedulerKind::ALL {
+        let res = kind.run(&jobs, &cluster, horizon, 0);
+        println!(
+            "{:<8} {:>14.2} {:>9} {:>10} {:>13.1}",
+            res.scheduler,
+            res.total_utility,
+            res.admitted,
+            res.completed,
+            median_training_time(&res)
+        );
+        if res.total_utility > best.1 {
+            best = (kind.name(), res.total_utility);
+        }
+        results.push(res);
+    }
+    println!("\nwinner: {} ({:.2})", best.0, best.1);
+}

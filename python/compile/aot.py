@@ -1,0 +1,112 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate binds)
+rejects (``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts \
+                         [--sizes tiny,small,base]
+
+Per size this writes
+  lm_<size>_init.hlo.txt        (seed u32[])                  -> (params,)
+  lm_<size>_grad.hlo.txt        (params, tokens)              -> (grads, loss)
+  lm_<size>_apply.hlo.txt       (params, gradsum, scale f32[1]) -> (params,)
+  lm_<size>_train_step.hlo.txt  (params, tokens)              -> (params, loss)
+  lm_<size>_eval.hlo.txt        (params, tokens)              -> (loss,)
+and lm_<size>.meta.json describing shapes for the Rust loader.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, *args):
+    return jax.jit(fn).lower(*args)
+
+
+def build_size(cfg: model.ModelConfig, out_dir: str) -> dict:
+    n = model.num_params(cfg)
+    params = jax.ShapeDtypeStruct((n,), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+    scale = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    # Every exported fn returns a tuple (return_tuple=True on the XLA side
+    # anyway); keep the python-level outputs tuples too for clarity.
+    exports = {
+        "init": (lambda s: (model.init(cfg, s),), (seed,)),
+        "grad": (lambda p, t: model.grad(cfg, p, t), (params, tokens)),
+        "apply": (lambda p, g, sc: (model.apply_update(cfg, p, g, sc),),
+                  (params, params, scale)),
+        "train_step": (lambda p, t: model.train_step(cfg, p, t),
+                       (params, tokens)),
+        "eval": (lambda p, t: (model.eval_loss(cfg, p, t),),
+                 (params, tokens)),
+    }
+
+    files = {}
+    for name, (fn, args) in exports.items():
+        text = to_hlo_text(_lower(fn, *args))
+        fname = f"lm_{cfg.name}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[name] = fname
+        print(f"  {fname}: {len(text)} chars", file=sys.stderr)
+
+    meta = {
+        "name": cfg.name,
+        "num_params": n,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "lr": cfg.lr,
+        "files": files,
+    }
+    with open(os.path.join(out_dir, f"lm_{cfg.name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small,base")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for size in args.sizes.split(","):
+        size = size.strip()
+        if size not in model.CONFIGS:
+            raise SystemExit(f"unknown size {size!r}; have {list(model.CONFIGS)}")
+        cfg = model.CONFIGS[size]
+        print(f"[aot] lowering {size} ({model.num_params(cfg)} params)",
+              file=sys.stderr)
+        build_size(cfg, args.out_dir)
+    # stamp for make
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

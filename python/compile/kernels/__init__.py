@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for the PD-ORS training payload.
+
+All kernels are authored TPU-style (BlockSpec tiling sized for VMEM, MXU
+128x128 tiles) but executed with ``interpret=True`` on this CPU image —
+real-TPU lowering emits Mosaic custom-calls the CPU PJRT plugin cannot run.
+
+Public API (see each module for details):
+
+* :func:`matmul`            — tiled GEMM, the building block of every vjp
+* :func:`fused_linear`      — x @ W + b (+ optional GELU), custom_vjp
+* :func:`flash_attention`   — causal flash attention, custom_vjp
+* :func:`sgd_apply`         — PS-side gradient aggregation + SGD update
+"""
+
+from .matmul import matmul
+from .fused_linear import fused_linear
+from .attention import flash_attention
+from .sgd import sgd_apply
+
+__all__ = ["matmul", "fused_linear", "flash_attention", "sgd_apply"]

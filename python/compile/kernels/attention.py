@@ -1,0 +1,125 @@
+"""Causal flash attention as a Pallas kernel.
+
+Inputs are packed as (BH, L, D) — batch and heads flattened into the leading
+grid axis — so the kernel never needs a vmap batching rule. The grid is
+(BH, L/bq): each program owns one query block and streams all key/value
+blocks through VMEM with the classic running-max / running-denominator
+(online softmax) recurrence, i.e. the memory schedule FlashAttention
+expresses with CUDA threadblocks is expressed here with BlockSpec + an
+in-kernel fori_loop.
+
+Backward (custom_vjp) uses the standard recompute strategy in plain jnp
+(XLA-fused), keeping only (q, k, v, o, lse) as residuals.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bq, bk, kv_len, scale):
+    qi = pl.program_id(1)
+    q = q_ref[0]  # (bq, d)
+    d = q.shape[-1]
+    row = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    m0 = jnp.full((bq, 1), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(j * bk, bk), :]  # (bk, d)
+        v = v_ref[0, pl.ds(j * bk, bk), :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        col = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(col <= row, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    n_kv = kv_len // bk
+    # Causality: query block qi only attends to kv blocks j with
+    # j*bk <= qi*bq + bq - 1; iterating further is wasted work.
+    n_needed = jnp.minimum(n_kv, (qi * bq + bq + bk - 1) // bk)
+    m, l, acc = jax.lax.fori_loop(0, n_needed, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+    lse_ref[0] = (m + jnp.log(l))[:, 0]
+
+
+def _flash_raw(q, k, v, scale, bq, bk):
+    bh, lq, d = q.shape
+    _, lk, _ = k.shape
+    bq = pick_block(lq, bq)
+    bk = pick_block(lk, bk)
+    grid = (bh, lq // bq)
+    kernel = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, kv_len=lk, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, lk, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, lk, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, lq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, lq), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def flash_attention(q, k, v):
+    """Causal attention; q, k, v: (BH, L, D) -> (BH, L, D)."""
+    o, _ = _flash_raw(q, k, v, 1.0 / (q.shape[-1] ** 0.5), 128, 128)
+    return o
+
+
+def _flash_fwd(q, k, v):
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    o, lse = _flash_raw(q, k, v, scale, 128, 128)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(res, do):
+    q, k, v, o, lse = res
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    lq, lk = q.shape[1], k.shape[1]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 1)
+    )
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    s = jnp.where(mask[None], s, _NEG_INF)
+    p = jnp.exp(s - lse[:, :, None])  # softmax via stored logsumexp
+    dv = jnp.einsum("bqk,bqd->bkd", p, do)
+    dp = jnp.einsum("bqd,bkd->bqk", do, v)
+    delta = jnp.sum(do * o, axis=-1, keepdims=True)  # (BH, L, 1)
+    ds = p * (dp - delta)
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k) * scale
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q) * scale
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

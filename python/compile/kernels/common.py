@@ -1,0 +1,59 @@
+"""Shared helpers for the Pallas kernels."""
+
+import jax.numpy as jnp
+
+# All pallas_call sites go through interpret mode on this CPU-only image.
+# Real-TPU builds flip this to False (Mosaic lowering) without touching the
+# kernel bodies.
+INTERPRET = True
+
+#: MXU-friendly preferred tile edge. 128 matches the TPU systolic array;
+#: on shapes that are not multiples we fall back to the largest divisor so
+#: that no masking is needed (exactness > padding for the CPU oracle path).
+PREFERRED_BLOCK = 128
+
+_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def pick_block(dim: int, preferred: int = PREFERRED_BLOCK) -> int:
+    """Largest candidate block size <= ``preferred`` that divides ``dim``.
+
+    Guarantees grid * block == dim exactly, so kernels never need bounds
+    masks. Falls back to ``dim`` itself for small or prime dimensions.
+    """
+    if dim <= preferred:
+        return dim
+    for c in _CANDIDATES:
+        if c <= preferred and dim % c == 0:
+            return c
+    return dim
+
+
+def gelu(x):
+    """tanh-approximated GELU (matches the reference oracle exactly)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def gelu_grad(x):
+    """d/dx of :func:`gelu` — used by the fused_linear backward pass."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    u = c * (x + 0.044715 * x * x * x)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3.0 * 0.044715 * x * x)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+
+
+def vmem_bytes(*block_shapes, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of a kernel instance (sum of live blocks).
+
+    Used by the §Perf notes in DESIGN.md / EXPERIMENTS.md: on a real TPU
+    the sum over in/out/scratch blocks must stay well under ~16 MiB.
+    """
+    total = 0
+    for shape in block_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * dtype_bytes
+    return total

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis
+and asserts allclose(kernel, ref). These functions intentionally use the
+most direct jnp formulation — no tiling, no tricks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import gelu as _gelu
+
+
+def matmul(x, w):
+    return jnp.matmul(x, w)
+
+
+def fused_linear(x, w, b, activation: str = "gelu"):
+    y = jnp.matmul(x, w) + b.reshape(1, -1)
+    if activation == "gelu":
+        y = _gelu(y)
+    return y
+
+
+def flash_attention(q, k, v):
+    """Causal softmax(q k^T / sqrt(d)) v over (BH, L, D)."""
+    d = q.shape[-1]
+    lq, lk = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 1)
+    )
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def sgd_apply(params, grad_sum, scale):
+    return params - scale[0] * grad_sum
+
+
+def gelu(x):
+    return _gelu(x)

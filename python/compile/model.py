@@ -1,0 +1,216 @@
+"""L2 — decoder-only transformer LM (fwd/bwd/update) calling the L1 kernels.
+
+The model is written over a **flat f32[n] parameter vector** rather than a
+pytree. That choice is deliberate: the Rust coordinator then moves exactly
+one parameter literal and one gradient literal per worker push/pull, which
+mirrors the paper's PS model (parameters evenly sharded across PSs as flat
+ranges) and keeps the PJRT call signatures stable across model sizes.
+
+Exported computations (AOT-lowered by aot.py):
+
+* ``init(seed)                     -> params``            f32[n]
+* ``grad(params, tokens)           -> (grads, loss)``     worker-side
+* ``apply(params, gradsum, scale)  -> params``            PS-side (Pallas sgd)
+* ``train_step(params, tokens)     -> (params, loss)``    single-node fused
+* ``eval_loss(params, tokens)      -> loss``
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+    lr: float = 0.05
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: Size ladder. `tiny` is the pytest size; `small` is the e2e default
+#: (CPU-feasible for a few hundred BSP steps under interpret-mode Pallas);
+#: `base`/`medium`/`gpt100m` scale up to the paper-style ~100M config.
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=64, d_model=32, n_layers=1, n_heads=2,
+                        seq_len=16, batch=2),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layers=2,
+                         n_heads=4, seq_len=64, batch=4),
+    "base": ModelConfig("base", vocab=2048, d_model=256, n_layers=4,
+                        n_heads=8, seq_len=128, batch=8),
+    "medium": ModelConfig("medium", vocab=8192, d_model=512, n_layers=6,
+                          n_heads=8, seq_len=128, batch=4),
+    "gpt100m": ModelConfig("gpt100m", vocab=32768, d_model=768, n_layers=12,
+                           n_heads=12, seq_len=256, batch=8),
+}
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape, init_std) spec of the flat parameter vector."""
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    std = 0.02
+    # residual-branch projections get the GPT-2 1/sqrt(2*n_layers) shrink
+    rstd = std / (2.0 * cfg.n_layers) ** 0.5
+    specs = [("embed", (v, d), std), ("pos", (s, d), std)]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.g", (d,), -1.0),   # init_std<0 => constant 1.0
+            (p + "ln1.b", (d,), 0.0),    # init_std==0 => constant 0.0
+            (p + "qkv.w", (d, 3 * d), std),
+            (p + "qkv.b", (3 * d,), 0.0),
+            (p + "proj.w", (d, d), rstd),
+            (p + "proj.b", (d,), 0.0),
+            (p + "ln2.g", (d,), -1.0),
+            (p + "ln2.b", (d,), 0.0),
+            (p + "mlp1.w", (d, ff), std),
+            (p + "mlp1.b", (ff,), 0.0),
+            (p + "mlp2.w", (ff, d), rstd),
+            (p + "mlp2.b", (d,), 0.0),
+        ]
+    specs += [("lnf.g", (d,), -1.0), ("lnf.b", (d,), 0.0)]
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    n = 0
+    for _, shape, _ in param_specs(cfg):
+        size = 1
+        for dim in shape:
+            size *= dim
+        n += size
+    return n
+
+
+def _views(cfg: ModelConfig, flat):
+    """Slice the flat vector into named weight views (static offsets)."""
+    out, off = {}, 0
+    for name, shape, _ in param_specs(cfg):
+        size = 1
+        for dim in shape:
+            size *= dim
+        out[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return out
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def init(cfg: ModelConfig, seed):
+    """Build the flat parameter vector from a scalar uint32 seed."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape, std in param_specs(cfg):
+        size = 1
+        for dim in shape:
+            size *= dim
+        if std == 0.0:
+            chunks.append(jnp.zeros((size,), jnp.float32))
+        elif std < 0.0:
+            chunks.append(jnp.ones((size,), jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            chunks.append(jax.random.normal(sub, (size,), jnp.float32) * std)
+    return jnp.concatenate(chunks)
+
+
+def forward(cfg: ModelConfig, flat, tokens):
+    """Next-token cross-entropy loss of the LM on tokens i32[B, S]."""
+    w = _views(cfg, flat)
+    b, s = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+
+    x = jnp.take(w["embed"], tokens, axis=0) + w["pos"][None, :s, :]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        # --- attention block ---
+        xn = _layer_norm(x, w[p + "ln1.g"], w[p + "ln1.b"])
+        qkv = kernels.fused_linear(
+            xn.reshape(b * s, d), w[p + "qkv.w"], w[p + "qkv.b"], "none"
+        ).reshape(b, s, 3, h, dh)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+        att = kernels.flash_attention(q, k, v)
+        att = att.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b * s, d)
+        x = x + kernels.fused_linear(
+            att, w[p + "proj.w"], w[p + "proj.b"], "none"
+        ).reshape(b, s, d)
+        # --- MLP block ---
+        xn = _layer_norm(x, w[p + "ln2.g"], w[p + "ln2.b"])
+        hdn = kernels.fused_linear(
+            xn.reshape(b * s, d), w[p + "mlp1.w"], w[p + "mlp1.b"], "gelu"
+        )
+        x = x + kernels.fused_linear(
+            hdn, w[p + "mlp2.w"], w[p + "mlp2.b"], "none"
+        ).reshape(b, s, d)
+
+    x = _layer_norm(x, w["lnf.g"], w["lnf.b"])
+    # Weight-tied readout through the Pallas GEMM.
+    logits = kernels.matmul(x.reshape(b * s, d), w["embed"].T)
+    logits = logits.reshape(b, s, cfg.vocab)
+
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def grad(cfg: ModelConfig, flat, tokens):
+    """Worker-side computation: (flat grads, loss)."""
+    loss, g = jax.value_and_grad(lambda p: forward(cfg, p, tokens))(flat)
+    return g, loss
+
+
+def apply_update(cfg: ModelConfig, flat, grad_sum, scale):
+    """PS-side update through the Pallas sgd kernel.
+
+    scale is an f32[1] carrying lr / num_workers so one artifact serves any
+    worker count chosen by the scheduler.
+    """
+    del cfg
+    return kernels.sgd_apply(flat, grad_sum, scale)
+
+
+def train_step(cfg: ModelConfig, flat, tokens):
+    """Single-node fused step: grad + sgd at the config learning rate."""
+    g, loss = grad(cfg, flat, tokens)
+    scale = jnp.asarray([cfg.lr], jnp.float32)
+    return kernels.sgd_apply(flat, g, scale), loss
+
+
+def eval_loss(cfg: ModelConfig, flat, tokens):
+    return forward(cfg, flat, tokens)
+
+
+def jitted(cfg: ModelConfig):
+    """Convenience bundle of jitted callables (used by tests)."""
+    return {
+        "init": jax.jit(functools.partial(init, cfg)),
+        "grad": jax.jit(functools.partial(grad, cfg)),
+        "apply": jax.jit(functools.partial(apply_update, cfg)),
+        "train_step": jax.jit(functools.partial(train_step, cfg)),
+        "eval_loss": jax.jit(functools.partial(eval_loss, cfg)),
+    }

@@ -1,0 +1,109 @@
+"""Static performance report for the L1/L2 layers (§Perf).
+
+interpret-mode wallclock is CPU-numpy time, NOT a TPU proxy, so this tool
+reports the *structural* quantities that determine real-TPU performance:
+
+* per-kernel VMEM working set vs the ~16 MiB budget;
+* MXU tile occupancy (how much of each 128x128 systolic pass is useful);
+* arithmetic intensity (FLOPs / HBM byte) vs the TPU roofline knee;
+* L2 graph statistics from the lowered HLO (op histogram, fusion count,
+  and the estimated fraction of FLOPs inside the Pallas GEMM paths).
+
+Usage: python -m compile.perf_report [--sizes tiny,small,base]
+"""
+
+import argparse
+import re
+import sys
+
+from . import model
+from .kernels.common import pick_block, vmem_bytes
+
+VMEM_BUDGET = 16 * 2**20
+#: TPUv4-class roofline knee (bf16 MXU ~275 TFLOP/s / 1.2 TB/s HBM);
+#: intensities above this are compute-bound.
+ROOFLINE_KNEE = 230.0
+
+
+def gemm_report(name, m, k, n):
+    bm, bn, bk = pick_block(m, 128), pick_block(n, 128), pick_block(k, 128)
+    vmem = vmem_bytes((bm, bk), (bk, bn), (bm, bn))
+    occupancy = (bm / 128) * (bn / 128) * (bk / 128) if min(bm, bn, bk) < 128 else 1.0
+    flops = 2.0 * m * k * n
+    bytes_moved = 4.0 * (m * k + k * n + m * n)
+    intensity = flops / bytes_moved
+    bound = "compute" if intensity >= ROOFLINE_KNEE else "memory"
+    print(
+        f"  {name:<28} {m:>5}x{k:<5}@{k:>5}x{n:<5} tiles ({bm:>3},{bn:>3},{bk:>3})"
+        f"  vmem {vmem/2**20:5.2f} MiB  mxu_occ {occupancy:4.2f}"
+        f"  intensity {intensity:7.1f} ({bound}-bound)"
+    )
+    assert vmem <= VMEM_BUDGET, f"{name} exceeds VMEM budget"
+    return flops
+
+
+def attention_report(name, bh, length, d):
+    bq = pick_block(length, 128)
+    vmem = vmem_bytes((bq, d), (length, d), (length, d), (bq, d))
+    flops = 2.0 * bh * length * length * d * 2  # qk^T and pv
+    print(
+        f"  {name:<28} (BH={bh:<3} L={length:<4} D={d:<3})      "
+        f"  vmem {vmem/2**20:5.2f} MiB  (flash: K/V streamed per q-block)"
+    )
+    assert vmem <= VMEM_BUDGET, f"{name} exceeds VMEM budget"
+    return flops
+
+
+def hlo_stats(cfg):
+    import jax
+    import jax.numpy as jnp
+    from . import aot
+
+    n = model.num_params(cfg)
+    params = jax.ShapeDtypeStruct((n,), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    lowered = jax.jit(lambda p, t: model.train_step(cfg, p, t)).lower(params, tokens)
+    text = aot.to_hlo_text(lowered)
+    ops = re.findall(r"= \w+\[?[^\s]* (\w+)\(", text)
+    hist = {}
+    for op in ops:
+        hist[op] = hist.get(op, 0) + 1
+    dots = hist.get("dot", 0)
+    fusions = hist.get("fusion", 0)
+    total = len(ops)
+    print(
+        f"  train_step HLO: {total} ops, {dots} dot(s), {fusions} fusion(s), "
+        f"{hist.get('while', 0)} while loop(s) [pallas grids]"
+    )
+    return hist
+
+
+def report_size(size):
+    cfg = model.CONFIGS[size]
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    ms = cfg.batch * cfg.seq_len
+    print(f"\n== {size}: {model.num_params(cfg):,} params, tokens/step {ms} ==")
+    total = 0.0
+    total += gemm_report("qkv (fused_linear)", ms, d, 3 * d) * cfg.n_layers
+    total += gemm_report("attn proj", ms, d, d) * cfg.n_layers
+    total += gemm_report("mlp1 (gelu epilogue)", ms, d, ff) * cfg.n_layers
+    total += gemm_report("mlp2", ms, ff, d) * cfg.n_layers
+    total += gemm_report("lm head (tied)", ms, d, v)
+    total += attention_report(
+        "flash attention", cfg.batch * cfg.n_heads, cfg.seq_len, cfg.d_head
+    ) * cfg.n_layers
+    print(f"  forward GEMM+attn FLOPs/step: {total:.3e} (bwd ~2x)")
+    hlo_stats(cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="tiny,small,base")
+    args = ap.parse_args()
+    print("L1/L2 static perf report (TPU-structural; see DESIGN.md §Perf)")
+    for s in args.sizes.split(","):
+        report_size(s.strip())
+
+
+if __name__ == "__main__":
+    main()

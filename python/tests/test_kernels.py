@@ -1,0 +1,220 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and the couple of dtypes the artifacts use);
+assert_allclose against ref.py is the core correctness signal of the
+compile path.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.common import pick_block, vmem_bytes
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    w = rand(rng, k, n)
+    np.testing.assert_allclose(
+        kernels.matmul(x, w), ref.matmul(x, w), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([32, 64]),
+    k=st.sampled_from([16, 48]),
+    n=st.sampled_from([32, 80]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_grad_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    w = rand(rng, k, n)
+
+    g1 = jax.grad(lambda a, b: jnp.sum(kernels.matmul(a, b) ** 2), (0, 1))(x, w)
+    g2 = jax.grad(lambda a, b: jnp.sum(ref.matmul(a, b) ** 2), (0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_large_tiled_exact_grid():
+    # shapes that exercise real multi-step K accumulation (grid k > 1)
+    rng = np.random.default_rng(0)
+    x = rand(rng, 256, 384)
+    w = rand(rng, 384, 256)
+    np.testing.assert_allclose(
+        kernels.matmul(x, w), ref.matmul(x, w), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 3))
+    with pytest.raises(ValueError):
+        kernels.matmul(x, w)
+
+
+# ----------------------------------------------------------- fused linear
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 64),
+    n=st.integers(1, 80),
+    act=st.sampled_from(["gelu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    w = rand(rng, k, n)
+    b = rand(rng, n)
+    np.testing.assert_allclose(
+        kernels.fused_linear(x, w, b, act),
+        ref.fused_linear(x, w, b, act),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(act=st.sampled_from(["gelu", "none"]), seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_grads(act, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 48, 32)
+    w = rand(rng, 32, 64)
+    b = rand(rng, 64)
+
+    def f(fn):
+        return lambda *args: jnp.sum(jnp.tanh(fn(*args, act)))
+
+    g1 = jax.grad(f(kernels.fused_linear), (0, 1, 2))(x, w, b)
+    g2 = jax.grad(f(ref.fused_linear), (0, 1, 2))(x, w, b)
+    for a, b2 in zip(g1, g2):
+        np.testing.assert_allclose(a, b2, rtol=2e-3, atol=2e-3)
+
+
+# -------------------------------------------------------------- attention
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.integers(1, 6),
+    length=st.sampled_from([8, 16, 32, 48, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, length, d, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, bh, length, d)
+    k = rand(rng, bh, length, d)
+    v = rand(rng, bh, length, d)
+    np.testing.assert_allclose(
+        kernels.flash_attention(q, k, v),
+        ref.flash_attention(q, k, v),
+        rtol=5e-4,
+        atol=5e-4,
+    )
+
+
+def test_attention_is_causal():
+    # output at position i must not depend on inputs at positions > i
+    rng = np.random.default_rng(1)
+    q = rand(rng, 1, 16, 8)
+    k = rand(rng, 1, 16, 8)
+    v = rand(rng, 1, 16, 8)
+    base = kernels.flash_attention(q, k, v)
+    k2 = k.at[0, 10:].set(99.0)
+    v2 = v.at[0, 10:].set(-99.0)
+    pert = kernels.flash_attention(q, k2, v2)
+    np.testing.assert_allclose(base[0, :10], pert[0, :10], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[0, 10:], pert[0, 10:])
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_attention_grads(seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, 2, 24, 16)
+    k = rand(rng, 2, 24, 16)
+    v = rand(rng, 2, 24, 16)
+
+    def loss(fn):
+        return lambda a, b, c: jnp.sum(fn(a, b, c) ** 2)
+
+    g1 = jax.grad(loss(kernels.flash_attention), (0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss(ref.flash_attention), (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=3e-3, atol=3e-3)
+
+
+# ------------------------------------------------------------------- sgd
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    # fixed shape ladder: each distinct n triggers a fresh interpret-mode
+    # pallas trace (~20s for 300k elements), so sweep values, not sizes
+    n=st.sampled_from([1, 17, 1024, 65_536, 131_073, 470_528]),
+    scale=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_apply_matches_ref(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    p = rand(rng, n)
+    g = rand(rng, n)
+    s = jnp.asarray([scale], dtype=jnp.float32)
+    np.testing.assert_allclose(
+        kernels.sgd_apply(p, g, s), ref.sgd_apply(p, g, s), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_sgd_zero_scale_is_identity():
+    rng = np.random.default_rng(0)
+    p = rand(rng, 1024)
+    g = rand(rng, 1024)
+    s = jnp.asarray([0.0], dtype=jnp.float32)
+    np.testing.assert_allclose(kernels.sgd_apply(p, g, s), p)
+
+
+# ------------------------------------------------------------- tiling api
+
+
+@settings(max_examples=30, deadline=None)
+@given(dim=st.integers(1, 4096), pref=st.sampled_from([32, 128, 256]))
+def test_pick_block_divides(dim, pref):
+    b = pick_block(dim, pref)
+    assert 1 <= b
+    assert dim % b == 0
+    if dim <= pref:
+        assert b == dim
+
+
+def test_vmem_budget_of_default_tiles():
+    # the default 128x128 f32 GEMM working set must sit well under 16 MiB
+    used = vmem_bytes((128, 128), (128, 128), (128, 128))
+    assert used <= 16 * 2**20 * 0.25

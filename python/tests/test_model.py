@@ -1,0 +1,103 @@
+"""L2 model tests: shapes, determinism, training dynamics, PS semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+CFG = model.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def fns():
+    return model.jitted(CFG)
+
+
+@pytest.fixture(scope="module")
+def params(fns):
+    return fns["init"](jnp.uint32(0))
+
+
+def toks(seed=0, cfg=CFG):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)).astype(np.int32)
+    )
+
+
+def test_param_count_matches_specs(params):
+    assert params.shape == (model.num_params(CFG),)
+    total = sum(int(np.prod(s)) for _, s, _ in model.param_specs(CFG))
+    assert total == model.num_params(CFG)
+
+
+def test_init_deterministic(fns):
+    a = fns["init"](jnp.uint32(5))
+    b = fns["init"](jnp.uint32(5))
+    np.testing.assert_array_equal(a, b)
+    c = fns["init"](jnp.uint32(6))
+    assert not np.allclose(a, c)
+
+
+def test_layernorm_params_initialized(params):
+    views = model._views(CFG, params)
+    np.testing.assert_array_equal(views["lnf.g"], jnp.ones(CFG.d_model))
+    np.testing.assert_array_equal(views["lnf.b"], jnp.zeros(CFG.d_model))
+
+
+def test_initial_loss_near_uniform(fns, params):
+    loss = fns["eval_loss"](params, toks())
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.3
+
+
+def test_grad_shapes_and_finite(fns, params):
+    g, loss = fns["grad"](params, toks())
+    assert g.shape == params.shape
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.linalg.norm(g)) > 0.0
+
+
+def test_train_step_composes_grad_and_apply(fns, params):
+    """train_step must equal grad + apply at lr (the PS decomposition)."""
+    t = toks(3)
+    g, loss_g = fns["grad"](params, t)
+    scale = jnp.asarray([CFG.lr], jnp.float32)
+    manual = fns["apply"](params, g, scale)
+    fused, loss_f = fns["train_step"](params, t)
+    np.testing.assert_allclose(manual, fused, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(loss_g), float(loss_f), rtol=1e-6)
+
+
+def test_loss_decreases_over_steps(fns, params):
+    p = params
+    t = toks(1)
+    first = None
+    for _ in range(25):
+        p, loss = fns["train_step"](p, t)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first - 0.2, f"{first} -> {float(loss)}"
+
+
+def test_multi_worker_aggregation_matches_large_batch(fns, params):
+    """Summing two workers' grads and applying lr/2 equals averaging."""
+    t1, t2 = toks(10), toks(11)
+    g1, _ = fns["grad"](params, t1)
+    g2, _ = fns["grad"](params, t2)
+    agg = fns["apply"](params, g1 + g2, jnp.asarray([CFG.lr / 2], jnp.float32))
+    mean_g = (g1 + g2) / 2
+    direct = fns["apply"](params, mean_g, jnp.asarray([CFG.lr], jnp.float32))
+    np.testing.assert_allclose(agg, direct, rtol=1e-5, atol=1e-7)
+
+
+def test_all_config_sizes_are_consistent():
+    for name, cfg in model.CONFIGS.items():
+        assert cfg.name == name
+        assert cfg.d_model % cfg.n_heads == 0
+        n = model.num_params(cfg)
+        assert n > 0
+    # the ~100M config really is ~100M
+    assert model.num_params(model.CONFIGS["gpt100m"]) > 80_000_000

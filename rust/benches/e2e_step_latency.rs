@@ -1,0 +1,73 @@
+//! End-to-end runtime latency: artifact compile time, worker gradient
+//! step, PS apply step, fused train step — the request-path numbers the
+//! coordinator budgets against (§Perf).
+
+use dmlrs::exec::TokenGen;
+use dmlrs::runtime::{ModelBundle, XlaRuntime};
+use dmlrs::util::stats::Summary;
+use dmlrs::util::timer::{bench, fmt_duration, Timer};
+
+fn report(name: &str, samples: &[f64]) {
+    let s = Summary::of(samples);
+    println!(
+        "{name:<40} p50 {:>10}  mean {:>10}  p95 {:>10}  (n={})",
+        fmt_duration(s.p50),
+        fmt_duration(s.mean),
+        fmt_duration(s.p95),
+        s.n
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let size = std::env::var("DMLRS_SIZE").unwrap_or_else(|_| "tiny".into());
+    println!("# PJRT runtime latency, model = {size}\n");
+    let rt = XlaRuntime::cpu()?;
+
+    let t = Timer::start();
+    let bundle = ModelBundle::load(&rt, "artifacts", &size)?;
+    println!(
+        "compile 5 artifacts ({} params): {:.2}s\n",
+        bundle.meta.num_params,
+        t.elapsed_secs()
+    );
+
+    let mut gen = TokenGen::new(0, bundle.meta.vocab);
+    let tokens = gen.batch(bundle.meta.batch, bundle.meta.seq_len);
+    let params0 = bundle.init_params(0)?;
+
+    // worker gradient
+    {
+        let xs = bench(3, 24, || {
+            let _ = bundle.grad(&params0, &tokens).unwrap();
+        });
+        report("worker grad (params, tokens)->(g, loss)", &xs);
+    }
+    // PS apply
+    {
+        let (g, _) = bundle.grad(&params0, &tokens)?;
+        let xs = bench(3, 24, || {
+            let p = bundle
+                .apply(params0.clone(), &g, 0.01)
+                .unwrap();
+            std::hint::black_box(&p);
+        });
+        report("PS apply (pallas sgd kernel)", &xs);
+    }
+    // fused train step
+    {
+        let mut params = bundle.init_params(0)?;
+        let xs = bench(3, 24, || {
+            let (p, _loss) = bundle.train_step(params.clone(), &tokens).unwrap();
+            params = p;
+        });
+        report("fused train_step", &xs);
+    }
+    // eval
+    {
+        let xs = bench(3, 24, || {
+            let _ = bundle.eval_loss(&params0, &tokens).unwrap();
+        });
+        report("eval loss", &xs);
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Regenerate every evaluation figure of the paper (Figs. 5–17) and print
+//! the series as TSV, with per-figure wall time.
+//!
+//! `cargo bench --bench figures` runs the standard sizing;
+//! `DMLRS_QUICK=1` shrinks sweeps for smoke runs;
+//! `DMLRS_FIGS=6,7` restricts to a subset;
+//! `DMLRS_SEEDS=n` overrides the seed count.
+//!
+//! Tables are also written to `results/figNN.tsv`.
+
+use dmlrs::experiments::figures::{run_figure, ExpParams};
+use dmlrs::util::Timer;
+
+fn main() {
+    let quick = std::env::var("DMLRS_QUICK").is_ok();
+    let seeds: usize = std::env::var("DMLRS_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if quick { 1 } else { 2 });
+    let figs: Vec<usize> = std::env::var("DMLRS_FIGS")
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| (5..=17).collect());
+
+    let p = ExpParams { seeds, quick };
+    println!("# PD-ORS paper figures (seeds={seeds}, quick={quick})");
+    let total = Timer::start();
+    for fig in figs {
+        let t = Timer::start();
+        let Some(table) = run_figure(fig, &p) else {
+            eprintln!("skipping unknown figure {fig}");
+            continue;
+        };
+        println!("\n{table}");
+        println!("# fig{fig:02} elapsed: {:.1}s", t.elapsed_secs());
+        let path = format!("results/fig{fig:02}.tsv");
+        if let Err(e) = table.save_tsv(&path) {
+            eprintln!("could not write {path}: {e}");
+        }
+    }
+    println!("\n# total: {:.1}s", total.elapsed_secs());
+}

@@ -1,0 +1,163 @@
+//! Micro-benchmarks of the scheduler hot paths (the §Perf inputs):
+//! simplex LP solves at scheduler-shaped sizes, θ-solves (internal +
+//! external + rounding), full per-job DP planning, and end-to-end
+//! admission throughput.
+
+use dmlrs::cluster::AllocLedger;
+use dmlrs::jobs::test_support::test_job;
+use dmlrs::lp::{solve, Cmp, LpProblem};
+use dmlrs::sched::dp::{plan_job, slot_prices, DpConfig, Masks};
+use dmlrs::sched::pricing::PricingParams;
+use dmlrs::sched::theta::{solve_theta, SlotView, ThetaConfig};
+use dmlrs::sched::{PdOrs, PdOrsConfig};
+use dmlrs::util::stats::Summary;
+use dmlrs::util::timer::{bench, fmt_duration};
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::paper_cluster;
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+fn report(name: &str, samples: &[f64]) {
+    let s = Summary::of(samples);
+    println!(
+        "{name:<40} p50 {:>10}  mean {:>10}  p95 {:>10}  (n={})",
+        fmt_duration(s.p50),
+        fmt_duration(s.mean),
+        fmt_duration(s.p95),
+        s.n
+    );
+}
+
+/// A scheduler-shaped LP: `groups` machine groups, cover + packing + ratio.
+fn scheduler_lp(groups: usize, rng: &mut Rng) -> LpProblem {
+    let nv = 2 * groups;
+    let mut p = LpProblem::new(nv);
+    let mut obj = vec![0.0; nv];
+    for g in 0..groups {
+        obj[2 * g] = rng.range_f64(0.5, 2.0);
+        obj[2 * g + 1] = rng.range_f64(0.5, 2.0);
+    }
+    p.set_objective(obj);
+    for g in 0..groups {
+        for _r in 0..4 {
+            // rhs generous enough that the cover row (Σw >= 20) stays
+            // feasible even with a single group
+            p.add_row_sparse(
+                &[(2 * g, rng.range_f64(1.0, 4.0)), (2 * g + 1, rng.range_f64(1.0, 4.0))],
+                Cmp::Le,
+                rng.range_f64(200.0, 800.0),
+            );
+        }
+    }
+    let w: Vec<(usize, f64)> = (0..groups).map(|g| (2 * g, 1.0)).collect();
+    p.add_row_sparse(&w, Cmp::Ge, 20.0);
+    p.add_row_sparse(&w, Cmp::Le, 120.0);
+    let mut ratio: Vec<(usize, f64)> = Vec::new();
+    for g in 0..groups {
+        ratio.push((2 * g, -0.5));
+        ratio.push((2 * g + 1, 1.0));
+    }
+    p.add_row_sparse(&ratio, Cmp::Ge, 0.0);
+    p
+}
+
+fn main() {
+    println!("# scheduler hot-path micro benches\n");
+
+    // --- LP solves at various group counts ---
+    for groups in [1usize, 4, 16, 64] {
+        let mut rng = Rng::new(1);
+        let problems: Vec<LpProblem> = (0..16).map(|_| scheduler_lp(groups, &mut rng)).collect();
+        let mut k = 0;
+        let xs = bench(4, 48, || {
+            let out = solve(&problems[k % problems.len()]);
+            assert!(out.optimal().is_some());
+            k += 1;
+        });
+        report(&format!("simplex {groups} machine-groups ({} vars)", 2 * groups), &xs);
+    }
+
+    // --- θ solve (Algorithm 4) on a fresh 100-machine cluster ---
+    {
+        let cluster = paper_cluster(100);
+        let ledger = AllocLedger::new(&cluster, 20);
+        let job = test_job(0);
+        let pricing = PricingParams::from_jobs(&[job.clone()], &cluster, 20);
+        let prices = slot_prices(&ledger, &pricing, 0);
+        let residual: Vec<_> = (0..100).map(|h| ledger.residual(0, h)).collect();
+        let masks = Masks::all(100);
+        let view = SlotView {
+            prices: &prices,
+            residual: &residual,
+            allow_worker: &masks.allow_worker,
+            allow_ps: &masks.allow_ps,
+        };
+        let mut rng = Rng::new(2);
+        let cfg = ThetaConfig::default();
+        let xs = bench(4, 64, || {
+            let s = solve_theta(&job, &view, 800.0, &cfg, &mut rng);
+            assert!(s.is_some());
+        });
+        report("theta solve (H=100, v=800 samples)", &xs);
+    }
+
+    // --- grouping ablation: the §Perf lever for the external-case LP ---
+    for grouped in [true, false] {
+        let cluster = paper_cluster(100);
+        let ledger = AllocLedger::new(&cluster, 20);
+        let job = test_job(0);
+        let pricing = PricingParams::from_jobs(&[job.clone()], &cluster, 20);
+        let prices = slot_prices(&ledger, &pricing, 0);
+        let residual: Vec<_> = (0..100).map(|h| ledger.residual(0, h)).collect();
+        let masks = Masks::all(100);
+        let view = SlotView {
+            prices: &prices,
+            residual: &residual,
+            allow_worker: &masks.allow_worker,
+            allow_ps: &masks.allow_ps,
+        };
+        let mut rng = Rng::new(2);
+        let cfg = ThetaConfig { group_machines: grouped, ..Default::default() };
+        let xs = bench(2, 24, || {
+            let s = solve_theta(&job, &view, 800.0, &cfg, &mut rng);
+            assert!(s.is_some());
+        });
+        report(
+            &format!("theta H=100 grouping={}", if grouped { "on " } else { "off" }),
+            &xs,
+        );
+    }
+
+    // --- full per-job DP plan (Algorithms 2-4) ---
+    for h in [20usize, 100] {
+        let cluster = paper_cluster(h);
+        let ledger = AllocLedger::new(&cluster, 20);
+        let mut rng = Rng::new(3);
+        let jobs = synthetic_jobs(&SynthConfig::paper(8, 20, MIX_DEFAULT), &mut rng);
+        let pricing = PricingParams::from_jobs(&jobs, &cluster, 20);
+        let masks = Masks::all(h);
+        let cfg = DpConfig::default();
+        let mut prng = Rng::new(4);
+        let mut k = 0;
+        let xs = bench(2, 16, || {
+            let _ = plan_job(&jobs[k % jobs.len()], &ledger, &pricing, &masks, &cfg, &mut prng);
+            k += 1;
+        });
+        report(&format!("plan_job DP (H={h}, T=20)"), &xs);
+    }
+
+    // --- end-to-end admission throughput (the Thm-7 polynomial claim) ---
+    for h in [20usize, 50, 100] {
+        let cluster = paper_cluster(h);
+        let mut rng = Rng::new(5);
+        let jobs = synthetic_jobs(&SynthConfig::paper(50, 20, MIX_DEFAULT), &mut rng);
+        let xs = bench(0, 3, || {
+            let mut sched = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, 20);
+            let mut ledger = AllocLedger::new(&cluster, 20);
+            for job in &jobs {
+                sched.on_arrival(job, &mut ledger);
+            }
+        });
+        let per_job: Vec<f64> = xs.iter().map(|s| s / 50.0).collect();
+        report(&format!("PD-ORS admission per job (H={h}, I=50)"), &per_job);
+    }
+}

@@ -1,0 +1,180 @@
+//! Dorm baseline ([36], §5 baseline (3)): per-slot resource-utilization
+//! maximization with fairness and adjustment-overhead constraints.
+//!
+//! Dorm solves an MILP each reconfiguration; we reproduce its behaviour
+//! with the same structure greedily (documented substitution, DESIGN.md):
+//!
+//! * **utilization objective** — among grantable bundles, prefer the one
+//!   consuming the most total resources (packs the cluster);
+//! * **fairness** — a job may not exceed `1/n_active` of the dominant
+//!   resource unless no other job can use the remainder;
+//! * **adjustment overhead** — a job's worker count may change by at most
+//!   `MAX_ADJUST` between consecutive slots (Dorm penalizes
+//!   re-partitioning; we cap it).
+
+use std::collections::HashMap;
+
+use crate::cluster::{AllocLedger, ResVec, NUM_RESOURCES};
+use crate::sim::{ActiveJob, SlotScheduler};
+
+use super::placement::{place_round_robin, SlotCapacity};
+
+const MAX_ADJUST: u64 = 8;
+
+pub struct Dorm {
+    cursor: usize,
+    /// workers granted in the previous slot, per job id
+    prev_workers: HashMap<usize, u64>,
+}
+
+impl Dorm {
+    pub fn new() -> Dorm {
+        Dorm { cursor: 0, prev_workers: HashMap::new() }
+    }
+}
+
+impl Default for Dorm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SlotScheduler for Dorm {
+    fn name(&self) -> String {
+        "Dorm".into()
+    }
+
+    fn allocate(
+        &mut self,
+        t: usize,
+        active: &[ActiveJob],
+        ledger: &AllocLedger,
+    ) -> Vec<(usize, Vec<(usize, u64, u64)>)> {
+        let mut cap = SlotCapacity::snapshot(ledger, t);
+        let n_active = active.len().max(1) as f64;
+        let mut total_cap = ResVec::zero();
+        for h in 0..ledger.num_machines() {
+            total_cap.add_assign(ledger.capacity(h));
+        }
+
+        let mut granted: Vec<(u64, u64)> = vec![(0, 0); active.len()];
+        let mut blocked = vec![false; active.len()];
+        let mut acc: Vec<Vec<(usize, u64, u64)>> = vec![Vec::new(); active.len()];
+        // two passes: first respecting the fair cap, then spend leftovers
+        for fair_pass in [true, false] {
+            for b in blocked.iter_mut() {
+                *b = false;
+            }
+            loop {
+                // candidate = bundle with the largest resource consumption
+                let mut pick: Option<(usize, f64)> = None;
+                for (i, aj) in active.iter().enumerate() {
+                    if blocked[i] {
+                        continue;
+                    }
+                    let (w, s) = granted[i];
+                    let add_w = (aj.job.gamma.round() as u64).max(1);
+                    if w + add_w > aj.job.batch {
+                        blocked[i] = true;
+                        continue;
+                    }
+                    // adjustment-overhead cap vs previous slot
+                    let prev = *self.prev_workers.get(&aj.job.id).unwrap_or(&0);
+                    if w + add_w > prev + MAX_ADJUST {
+                        blocked[i] = true;
+                        continue;
+                    }
+                    if fair_pass {
+                        // dominant-share fairness cap
+                        let used = aj.job.demand(w + add_w, s + 1);
+                        let mut share: f64 = 0.0;
+                        for r in 0..NUM_RESOURCES {
+                            if total_cap.0[r] > 0.0 {
+                                share = share.max(used.0[r] / total_cap.0[r]);
+                            }
+                        }
+                        if share > 1.0 / n_active {
+                            blocked[i] = true;
+                            continue;
+                        }
+                    }
+                    let bundle_res = aj.job.demand(add_w, 1).sum();
+                    if pick.map_or(true, |(_, best)| bundle_res > best) {
+                        pick = Some((i, bundle_res));
+                    }
+                }
+                let Some((i, _)) = pick else { break };
+                let aj = &active[i];
+                let (w, s) = granted[i];
+                let add_w = (aj.job.gamma.round() as u64).max(1);
+                let need_s =
+                    (((w + add_w) as f64 / aj.job.gamma).ceil() as u64).max(1);
+                let add_s = need_s.saturating_sub(s);
+                match place_round_robin(&aj.job, add_w, add_s, &mut cap, &mut self.cursor) {
+                    Some(p) => {
+                        granted[i] = (w + add_w, s + add_s);
+                        acc[i].extend(p);
+                    }
+                    None => blocked[i] = true,
+                }
+            }
+        }
+
+        for (i, aj) in active.iter().enumerate() {
+            self.prev_workers.insert(aj.job.id, granted[i].0);
+        }
+
+        acc.into_iter()
+            .enumerate()
+            .filter(|(_, p)| !p.is_empty())
+            .map(|(i, p)| {
+                let mut merged: std::collections::BTreeMap<usize, (u64, u64)> =
+                    std::collections::BTreeMap::new();
+                for (h, w, s) in p {
+                    let e = merged.entry(h).or_insert((0, 0));
+                    e.0 += w;
+                    e.1 += s;
+                }
+                (i, merged.into_iter().map(|(h, (w, s))| (h, w, s)).collect())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::run_slot_sim;
+    use crate::util::Rng;
+    use crate::workload::synthetic::paper_cluster;
+    use crate::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+    #[test]
+    fn ramps_up_slowly() {
+        // with MAX_ADJUST = 8, a fresh job can get at most 8 workers in
+        // its first slot regardless of capacity
+        let cluster = paper_cluster(20);
+        let mut rng = Rng::new(5);
+        let mut jobs = synthetic_jobs(&SynthConfig::paper(1, 10, MIX_DEFAULT), &mut rng);
+        jobs[0].arrival = 0;
+        jobs[0].gamma = 1.0;
+        let mut dorm = Dorm::new();
+        let ledger = AllocLedger::new(&cluster, 10);
+        let active = vec![ActiveJob { job: jobs[0].clone(), remaining: 1e9 }];
+        let grants = dorm.allocate(0, &active, &ledger);
+        let w: u64 = grants
+            .iter()
+            .flat_map(|(_, p)| p.iter().map(|&(_, w, _)| w))
+            .sum();
+        assert!(w <= MAX_ADJUST, "first-slot workers {w} > {MAX_ADJUST}");
+    }
+
+    #[test]
+    fn completes_jobs_in_sim(){
+        let cluster = paper_cluster(15);
+        let mut rng = Rng::new(6);
+        let jobs = synthetic_jobs(&SynthConfig::paper(12, 20, MIX_DEFAULT), &mut rng);
+        let res = run_slot_sim(&jobs, &cluster, 20, &mut Dorm::new());
+        assert!(res.admitted > 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Baseline schedulers compared against PD-ORS in §5:
+//!
+//! * [`fifo`]    — FIFO order with fixed per-job worker/PS counts
+//!   (Hadoop/Spark style), round-robin placement.
+//! * [`drf`]     — Dominant-Resource-Fairness water-filling (YARN/Mesos).
+//! * [`dorm`]    — Dorm-style utilization maximization with fairness and
+//!   adjustment-overhead constraints (MILP heuristic).
+//! * `OASiS`     — the primal-dual scheduler of [6] with workers and PSs
+//!   on strictly separated machine halves; instantiated as
+//!   [`crate::sched::PdOrs`] with [`crate::sched::Placement::Separated`].
+//! * [`offline`] — the offline optimum upper bound (Fig. 10), via
+//!   candidate-schedule enumeration + branch-and-bound.
+
+pub mod dorm;
+pub mod drf;
+pub mod fifo;
+pub mod offline;
+pub mod placement;
+
+pub use dorm::Dorm;
+pub use drf::Drf;
+pub use fifo::Fifo;
+pub use offline::offline_optimum;

@@ -1,0 +1,166 @@
+//! Round-robin placement helper shared by the FIFO/DRF/Dorm baselines
+//! (the paper: "workers and parameter servers are placed in a round-robin
+//! fashion on available machines in Baselines (1) and (2)").
+
+use crate::cluster::{AllocLedger, ResVec};
+use crate::jobs::Job;
+
+/// Tracks what has been handed out *within the current slot* on top of the
+/// committed ledger (slot schedulers place several jobs per slot).
+pub struct SlotCapacity {
+    residual: Vec<ResVec>,
+}
+
+impl SlotCapacity {
+    pub fn snapshot(ledger: &AllocLedger, t: usize) -> SlotCapacity {
+        SlotCapacity {
+            residual: (0..ledger.num_machines()).map(|h| ledger.residual(t, h)).collect(),
+        }
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.residual.len()
+    }
+
+    pub fn residual(&self, h: usize) -> &ResVec {
+        &self.residual[h]
+    }
+
+    pub fn try_take(&mut self, h: usize, demand: &ResVec) -> bool {
+        if demand.fits_within(&self.residual[h], 1e-9) {
+            self.residual[h].sub_assign(demand);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Place `w` workers and `s` PSs for `job` round-robin starting from
+/// `*cursor`, taking capacity from `cap`. Returns the placements or `None`
+/// (capacity untouched on failure is NOT guaranteed — callers that need
+/// atomicity should check [`can_place`] first; the slot schedulers place
+/// greedily and accept partial slots being rolled into later slots).
+pub fn place_round_robin(
+    job: &Job,
+    w: u64,
+    s: u64,
+    cap: &mut SlotCapacity,
+    cursor: &mut usize,
+) -> Option<Vec<(usize, u64, u64)>> {
+    let n = cap.num_machines();
+    if n == 0 {
+        return None;
+    }
+    let mut per_machine: Vec<(u64, u64)> = vec![(0, 0); n];
+    // interleave worker/PS placement one unit at a time, round-robin
+    let mut left_w = w;
+    let mut left_s = s;
+    let mut failures = 0usize;
+    while left_w + left_s > 0 {
+        let h = *cursor % n;
+        *cursor += 1;
+        let mut placed = false;
+        if left_w >= left_s && left_w > 0 {
+            if cap.try_take(h, &job.worker_demand) {
+                per_machine[h].0 += 1;
+                left_w -= 1;
+                placed = true;
+            } else if left_s > 0 && cap.try_take(h, &job.ps_demand) {
+                per_machine[h].1 += 1;
+                left_s -= 1;
+                placed = true;
+            }
+        } else if left_s > 0 {
+            if cap.try_take(h, &job.ps_demand) {
+                per_machine[h].1 += 1;
+                left_s -= 1;
+                placed = true;
+            } else if left_w > 0 && cap.try_take(h, &job.worker_demand) {
+                per_machine[h].0 += 1;
+                left_w -= 1;
+                placed = true;
+            }
+        }
+        if placed {
+            failures = 0;
+        } else {
+            failures += 1;
+            if failures >= n {
+                return None; // nothing fits anywhere
+            }
+        }
+    }
+    let placements: Vec<(usize, u64, u64)> = per_machine
+        .into_iter()
+        .enumerate()
+        .filter(|&(_, (pw, ps))| pw > 0 || ps > 0)
+        .map(|(h, (pw, ps))| (h, pw, ps))
+        .collect();
+    Some(placements)
+}
+
+/// Whole-slot feasibility probe (non-destructive).
+pub fn can_place(job: &Job, w: u64, s: u64, cap: &SlotCapacity) -> bool {
+    // cheap conservative test: total demand vs total residual, and at
+    // least one machine fits a single worker and a single PS.
+    let total_demand = job.demand(w, s);
+    let mut total = ResVec::zero();
+    let mut one_w = false;
+    let mut one_s = false;
+    for h in 0..cap.num_machines() {
+        total.add_assign(cap.residual(h));
+        if job.worker_demand.fits_within(cap.residual(h), 1e-9) {
+            one_w = true;
+        }
+        if job.ps_demand.fits_within(cap.residual(h), 1e-9) {
+            one_s = true;
+        }
+    }
+    total_demand.fits_within(&total, 1e-9) && (w == 0 || one_w) && (s == 0 || one_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::jobs::test_support::test_job;
+
+    fn cap(n: usize, per: f64, horizon: usize) -> (AllocLedger, Cluster) {
+        let c = Cluster::homogeneous(n, ResVec::new([per; 4]));
+        (AllocLedger::new(&c, horizon), c)
+    }
+
+    #[test]
+    fn spreads_over_machines() {
+        let (ledger, _) = cap(4, 100.0, 4);
+        let job = test_job(0);
+        let mut slot = SlotCapacity::snapshot(&ledger, 0);
+        let mut cursor = 0;
+        let placements =
+            place_round_robin(&job, 4, 2, &mut slot, &mut cursor).expect("fits");
+        let machines: Vec<usize> = placements.iter().map(|&(h, _, _)| h).collect();
+        assert!(machines.len() >= 2, "round robin should spread: {placements:?}");
+        let w: u64 = placements.iter().map(|&(_, w, _)| w).sum();
+        let s: u64 = placements.iter().map(|&(_, _, s)| s).sum();
+        assert_eq!((w, s), (4, 2));
+    }
+
+    #[test]
+    fn fails_when_full() {
+        let (ledger, _) = cap(1, 5.0, 2);
+        let job = test_job(0); // worker cpu=2 => at most 2 workers fit
+        let mut slot = SlotCapacity::snapshot(&ledger, 0);
+        let mut cursor = 0;
+        assert!(place_round_robin(&job, 10, 5, &mut slot, &mut cursor).is_none());
+    }
+
+    #[test]
+    fn take_respects_capacity() {
+        let (ledger, _) = cap(1, 4.0, 1);
+        let job = test_job(0);
+        let mut slot = SlotCapacity::snapshot(&ledger, 0);
+        assert!(slot.try_take(0, &job.worker_demand)); // uses cpu 2, mem 4 => mem now 0
+        assert!(!slot.try_take(0, &job.worker_demand));
+    }
+}

@@ -1,0 +1,207 @@
+//! Subcommand implementations.
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::AllocLedger;
+use crate::config::Config;
+use crate::exec::{execute_schedule, ExecConfig};
+use crate::experiments::figures::{run_figure, ExpParams};
+use crate::experiments::SchedulerKind;
+use crate::jobs::Job;
+use crate::runtime::{ModelBundle, XlaRuntime};
+use crate::sched::{PdOrs, PdOrsConfig};
+use crate::sim::metrics::median_training_time;
+use crate::util::Rng;
+use crate::workload::synthetic::paper_cluster;
+use crate::workload::{google_trace_jobs, synthetic_jobs, SynthConfig, MIX_DEFAULT, MIX_TRACE};
+
+use super::args::Args;
+
+/// Merge an optional `--config file` under the explicit flags.
+fn effective(args: &Args, key: &str, default: &str) -> String {
+    if let Some(v) = args.get(key) {
+        return v.to_string();
+    }
+    if let Some(path) = args.get("config") {
+        if let Ok(cfg) = Config::load(path) {
+            if let Some(v) = cfg.get(key) {
+                return v.to_string();
+            }
+        }
+    }
+    default.to_string()
+}
+
+fn usize_of(args: &Args, key: &str, default: usize) -> usize {
+    effective(args, key, &default.to_string()).parse().unwrap_or(default)
+}
+
+fn workload(args: &Args) -> (Vec<Job>, usize, usize, u64) {
+    let machines = usize_of(args, "machines", 20);
+    let num_jobs = usize_of(args, "jobs", 30);
+    let horizon = usize_of(args, "horizon", 20);
+    let seed = args.u64_or("seed", 1);
+    let mix = if args.bool("trace-mix") { MIX_TRACE } else { MIX_DEFAULT };
+    let mut rng = Rng::new(seed);
+    let jobs = if args.bool("trace") {
+        google_trace_jobs(num_jobs, horizon, mix, &mut rng)
+    } else {
+        synthetic_jobs(&SynthConfig::paper(num_jobs, horizon, mix), &mut rng)
+    };
+    (jobs, machines, horizon, seed)
+}
+
+fn scheduler_kind(name: &str) -> Result<SchedulerKind> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "pd-ors" | "pdors" => SchedulerKind::PdOrs,
+        "oasis" => SchedulerKind::Oasis,
+        "fifo" => SchedulerKind::Fifo,
+        "drf" => SchedulerKind::Drf,
+        "dorm" => SchedulerKind::Dorm,
+        other => return Err(anyhow!("unknown scheduler {other:?}")),
+    })
+}
+
+pub fn cmd_schedule(args: &Args) -> Result<()> {
+    let (jobs, machines, horizon, seed) = workload(args);
+    let kind = scheduler_kind(&effective(args, "scheduler", "pd-ors"))?;
+    let cluster = paper_cluster(machines);
+    let res = kind.run(&jobs, &cluster, horizon, seed);
+    println!("scheduler={} machines={machines} jobs={} horizon={horizon}", res.scheduler, jobs.len());
+    for o in &res.outcomes {
+        println!(
+            "  job {:3}  admitted={} completed={} completion={:?} utility={:.2}",
+            o.job_id, o.admitted as u8, o.completed as u8, o.completion, o.utility
+        );
+    }
+    println!(
+        "total_utility={:.2} admitted={} completed={} median_training_time={:.1}",
+        res.total_utility,
+        res.admitted,
+        res.completed,
+        median_training_time(&res)
+    );
+    Ok(())
+}
+
+pub fn cmd_compare(args: &Args) -> Result<()> {
+    let (jobs, machines, horizon, seed) = workload(args);
+    let cluster = paper_cluster(machines);
+    println!("machines={machines} jobs={} horizon={horizon} seed={seed}", jobs.len());
+    println!("{:<8} {:>14} {:>9} {:>10} {:>12}", "sched", "total_utility", "admitted", "completed", "median_time");
+    for kind in SchedulerKind::ALL {
+        let res = kind.run(&jobs, &cluster, horizon, seed);
+        println!(
+            "{:<8} {:>14.2} {:>9} {:>10} {:>12.1}",
+            res.scheduler,
+            res.total_utility,
+            res.admitted,
+            res.completed,
+            median_training_time(&res)
+        );
+    }
+    Ok(())
+}
+
+pub fn cmd_experiment(args: &Args) -> Result<()> {
+    let fig = args.usize_or("fig", 0);
+    let p = ExpParams {
+        seeds: args.usize_or("seeds", if args.bool("quick") { 1 } else { 3 }),
+        quick: args.bool("quick"),
+    };
+    let table = run_figure(fig, &p).ok_or_else(|| anyhow!("unknown figure {fig} (valid: 5..=17)"))?;
+    print!("{table}");
+    if let Some(out) = args.get("out") {
+        table.save_tsv(out)?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let size = args.str_or("size", "small");
+    let dir = args.str_or("artifacts", "artifacts");
+    let steps = args.usize_or("steps", 50);
+    let machines = args.usize_or("machines", 8);
+    let seed = args.u64_or("seed", 1);
+
+    let rt = XlaRuntime::cpu()?;
+    eprintln!("PJRT platform: {}", rt.platform());
+    let bundle = ModelBundle::load(&rt, &dir, &size)?;
+    eprintln!(
+        "model {}: {} params, vocab {}, batch {} x seq {}",
+        bundle.meta.name, bundle.meta.num_params, bundle.meta.vocab,
+        bundle.meta.batch, bundle.meta.seq_len
+    );
+
+    // Build a job whose analytical parameters reflect the real model, let
+    // PD-ORS schedule it, then execute the schedule for real. The workload
+    // is sized to fit the horizon so admission is about prices, not
+    // feasibility.
+    let horizon = 20;
+    let cluster = paper_cluster(machines);
+    let mut rng = Rng::new(seed);
+    let mut jobs = synthetic_jobs(&SynthConfig::paper(1, horizon, MIX_DEFAULT), &mut rng);
+    {
+        let job = &mut jobs[0];
+        job.arrival = 0;
+        job.grad_size_mb = bundle.meta.num_params as f64 * 4.0 / 1e6;
+        job.batch = 64.max(bundle.meta.batch as u64);
+        job.gamma = 2.0;
+        job.tau = 5e-5;
+        job.epochs = 10;
+        // ~10 slots of work at half the worker cap
+        job.samples = (job.batch as f64 / job.tau) * 5.0 / job.epochs as f64;
+        job.worker_demand = crate::cluster::ResVec::new([1.0, 2.0, 4.0, 2.0]);
+        job.ps_demand = crate::cluster::ResVec::new([0.0, 2.0, 4.0, 2.0]);
+        job.utility = crate::jobs::Sigmoid { theta1: 80.0, theta2: 0.3, theta3: 12.0 };
+    }
+    let mut pdors = PdOrs::new(PdOrsConfig { seed, ..Default::default() }, &jobs, &cluster, horizon);
+    let mut ledger = AllocLedger::new(&cluster, horizon);
+    let schedule = pdors
+        .on_arrival(&jobs[0], &mut ledger)
+        .ok_or_else(|| anyhow!("PD-ORS rejected the training job"))?;
+    eprintln!(
+        "scheduled over {} slots, completion t={}",
+        schedule.slots.len(),
+        schedule.completion_time().unwrap()
+    );
+
+    let max_iters = steps.div_ceil(schedule.slots.len().max(1)).max(1);
+    let cfg = ExecConfig { max_iters_per_slot: max_iters, eval_each_slot: true, seed };
+    let report = execute_schedule(&bundle, &jobs[0], &schedule, &cfg)?;
+    for s in &report.slots {
+        println!(
+            "slot t={:2} workers={:3} ps={:2} loc={:?} iters={:3} loss={:.4} wall={:.2}s",
+            s.t, s.workers, s.ps, s.locality, s.iterations, s.mean_loss, s.wall_secs
+        );
+    }
+    println!(
+        "steps={} first_loss={:.4} last_loss={:.4} total_samples={} wall={:.1}s",
+        report.losses.len(),
+        report.losses.first().copied().unwrap_or(f32::NAN),
+        report.losses.last().copied().unwrap_or(f32::NAN),
+        report.total_samples,
+        report.total_wall_secs
+    );
+    Ok(())
+}
+
+pub fn cmd_bounds(args: &Args) -> Result<()> {
+    let (jobs, machines, horizon, _) = workload(args);
+    let cluster = paper_cluster(machines);
+    let pricing = crate::sched::PricingParams::from_jobs(&jobs, &cluster, horizon);
+    println!("mu      = {:.4e}", pricing.mu);
+    println!("L       = {:.4e}", pricing.l);
+    for (r, u) in pricing.u.iter().enumerate() {
+        println!("U^{r}     = {u:.4e}   ln(U/L) = {:.2}", pricing.ln_ratio[r]);
+    }
+    println!("epsilon = {:.2}", pricing.epsilon());
+    let delta = args.f64_or("delta", 0.25);
+    let g = 1.0;
+    println!(
+        "competitive ratio bound (Thm 5, G_delta={g}, delta={delta}): {:.1}",
+        6.0 * g / delta * pricing.epsilon()
+    );
+    Ok(())
+}

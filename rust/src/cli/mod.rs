@@ -1,0 +1,104 @@
+//! Command-line launcher (clap is unavailable offline; [`args`] is the
+//! from-scratch parser).
+//!
+//! Subcommands:
+//! * `schedule`   — run a scheduler over a generated workload, print the
+//!   admission log and totals.
+//! * `compare`    — run the full scheduler zoo on one workload.
+//! * `experiment` — regenerate a paper figure (`--fig N`).
+//! * `train`      — end-to-end: schedule a job and execute its BSP
+//!   training through the PJRT artifacts.
+//! * `bounds`     — print the pricing constants and competitive-ratio
+//!   bound for a workload.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main`.
+pub fn run() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = dispatch(&argv);
+    if code != 0 {
+        std::process::exit(code);
+    }
+}
+
+fn dispatch(argv: &[String]) -> i32 {
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return 2;
+    };
+    let args = match Args::parse(rest) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let result = match cmd.as_str() {
+        "schedule" => commands::cmd_schedule(&args),
+        "compare" => commands::cmd_compare(&args),
+        "experiment" => commands::cmd_experiment(&args),
+        "train" => commands::cmd_train(&args),
+        "bounds" => commands::cmd_bounds(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            print_usage();
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "dmlrs — PD-ORS online scheduling for distributed ML (paper reproduction)
+
+USAGE: dmlrs <command> [flags]
+
+COMMANDS:
+  schedule    run one scheduler   --scheduler pd-ors|oasis|fifo|drf|dorm
+              --machines N --jobs N --horizon N --seed N [--trace]
+  compare     run the full zoo    (same flags)
+  experiment  regenerate a figure --fig 5..17 [--quick] [--seeds N]
+              [--out results/figNN.tsv]
+  train       end-to-end training --size tiny|small|base --steps N
+              [--artifacts DIR] [--machines N] [--seed N]
+  bounds      pricing constants   --machines N --jobs N --horizon N
+  help        this text
+
+Config file: --config path.conf (keys mirror the flags, see config/mod.rs)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(dispatch(&["bogus".into()]), 2);
+    }
+
+    #[test]
+    fn help_succeeds() {
+        assert_eq!(dispatch(&["help".into()]), 0);
+    }
+
+    #[test]
+    fn empty_fails() {
+        assert_eq!(dispatch(&[]), 2);
+    }
+}

@@ -1,0 +1,64 @@
+//! Cluster model: machines with multi-type resource capacities (paper §3.3).
+
+pub mod resource;
+pub mod state;
+
+pub use resource::{ResVec, Resource, NUM_RESOURCES};
+pub use state::AllocLedger;
+
+/// A physical machine `h ∈ H` with capacity `C_h^r` per resource type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Machine {
+    pub id: usize,
+    pub capacity: ResVec,
+}
+
+/// The set of physical machines `H`.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub machines: Vec<Machine>,
+}
+
+impl Cluster {
+    pub fn new(machines: Vec<Machine>) -> Cluster {
+        Cluster { machines }
+    }
+
+    /// Homogeneous cluster of `n` machines with the given capacity.
+    pub fn homogeneous(n: usize, capacity: ResVec) -> Cluster {
+        Cluster {
+            machines: (0..n).map(|id| Machine { id, capacity }).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.machines.is_empty()
+    }
+
+    /// Σ_h C_h^r over all machines (used by the μ bound of Eq. (14)).
+    pub fn total_capacity(&self) -> ResVec {
+        let mut total = ResVec::zero();
+        for m in &self.machines {
+            total.add_assign(&m.capacity);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_cluster() {
+        let cap = ResVec::new([4.0, 10.0, 32.0, 10.0]);
+        let c = Cluster::homogeneous(3, cap);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.machines[2].id, 2);
+        assert_eq!(c.total_capacity().get(Resource::Cpu), 30.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Resource vectors over the paper's four resource types
+//! (GPU, vCPU, memory, storage) — the set `R` of §3.3.
+
+/// Number of resource types `|R|` (the paper's evaluation uses 4).
+pub const NUM_RESOURCES: usize = 4;
+
+/// Resource type indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Resource {
+    Gpu = 0,
+    Cpu = 1,
+    Mem = 2,
+    Storage = 3,
+}
+
+impl Resource {
+    pub const ALL: [Resource; NUM_RESOURCES] =
+        [Resource::Gpu, Resource::Cpu, Resource::Mem, Resource::Storage];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Resource::Gpu => "gpu",
+            Resource::Cpu => "cpu",
+            Resource::Mem => "mem",
+            Resource::Storage => "storage",
+        }
+    }
+}
+
+/// A fixed-length vector of per-resource amounts.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResVec(pub [f64; NUM_RESOURCES]);
+
+impl ResVec {
+    pub fn new(v: [f64; NUM_RESOURCES]) -> ResVec {
+        ResVec(v)
+    }
+
+    pub fn zero() -> ResVec {
+        ResVec([0.0; NUM_RESOURCES])
+    }
+
+    pub fn get(&self, r: Resource) -> f64 {
+        self.0[r as usize]
+    }
+
+    pub fn set(&mut self, r: Resource, v: f64) {
+        self.0[r as usize] = v;
+    }
+
+    pub fn add_assign(&mut self, other: &ResVec) {
+        for i in 0..NUM_RESOURCES {
+            self.0[i] += other.0[i];
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &ResVec) {
+        for i in 0..NUM_RESOURCES {
+            self.0[i] -= other.0[i];
+        }
+    }
+
+    pub fn scaled(&self, k: f64) -> ResVec {
+        let mut out = *self;
+        for i in 0..NUM_RESOURCES {
+            out.0[i] *= k;
+        }
+        out
+    }
+
+    /// Component-wise `self + k * other`.
+    pub fn axpy(&self, k: f64, other: &ResVec) -> ResVec {
+        let mut out = *self;
+        for i in 0..NUM_RESOURCES {
+            out.0[i] += k * other.0[i];
+        }
+        out
+    }
+
+    /// True iff `self[r] <= other[r] + eps` for all r.
+    pub fn fits_within(&self, other: &ResVec, eps: f64) -> bool {
+        (0..NUM_RESOURCES).all(|i| self.0[i] <= other.0[i] + eps)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.0.iter().sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Resource, f64)> + '_ {
+        Resource::ALL.iter().map(move |&r| (r, self.get(r)))
+    }
+}
+
+impl std::ops::Index<usize> for ResVec {
+    type Output = f64;
+    fn index(&self, i: usize) -> &f64 {
+        &self.0[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for ResVec {
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        &mut self.0[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let mut a = ResVec::new([1.0, 2.0, 3.0, 4.0]);
+        let b = ResVec::new([0.5, 0.5, 0.5, 0.5]);
+        a.add_assign(&b);
+        assert_eq!(a.get(Resource::Gpu), 1.5);
+        a.sub_assign(&b);
+        assert_eq!(a.get(Resource::Storage), 4.0);
+        assert_eq!(a.scaled(2.0).get(Resource::Cpu), 4.0);
+        assert_eq!(a.axpy(2.0, &b).get(Resource::Mem), 4.0);
+    }
+
+    #[test]
+    fn fits() {
+        let small = ResVec::new([1.0, 1.0, 1.0, 1.0]);
+        let big = ResVec::new([2.0, 2.0, 2.0, 2.0]);
+        assert!(small.fits_within(&big, 0.0));
+        assert!(!big.fits_within(&small, 0.0));
+        assert!(big.fits_within(&big, 1e-9));
+    }
+}

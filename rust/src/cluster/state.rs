@@ -1,0 +1,172 @@
+//! Per-(t, h, r) allocation ledger `ρ_h^r[t]` — the committed resource
+//! amounts the primal-dual scheduler prices against (Algorithm 1 step 3).
+
+use super::resource::{ResVec, NUM_RESOURCES};
+use super::Cluster;
+use crate::jobs::{Job, Schedule};
+
+/// Tracks allocated resources for every future time slot.
+#[derive(Debug, Clone)]
+pub struct AllocLedger {
+    /// `alloc[t][h]` = ρ_h[t] (vector over r).
+    alloc: Vec<Vec<ResVec>>,
+    capacity: Vec<ResVec>,
+    horizon: usize,
+}
+
+impl AllocLedger {
+    pub fn new(cluster: &Cluster, horizon: usize) -> AllocLedger {
+        AllocLedger {
+            alloc: vec![vec![ResVec::zero(); cluster.len()]; horizon],
+            capacity: cluster.machines.iter().map(|m| m.capacity).collect(),
+            horizon,
+        }
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.horizon
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.capacity.len()
+    }
+
+    pub fn used(&self, t: usize, h: usize) -> &ResVec {
+        &self.alloc[t][h]
+    }
+
+    pub fn capacity(&self, h: usize) -> &ResVec {
+        &self.capacity[h]
+    }
+
+    /// Remaining capacity `Ĉ_h^r[t] = C_h^r − ρ_h^r[t]` (clamped at 0).
+    pub fn residual(&self, t: usize, h: usize) -> ResVec {
+        let mut out = self.capacity[h];
+        out.sub_assign(&self.alloc[t][h]);
+        for i in 0..NUM_RESOURCES {
+            if out.0[i] < 0.0 {
+                out.0[i] = 0.0;
+            }
+        }
+        out
+    }
+
+    /// Commit a job's schedule: ρ += α·w + β·s at every (t, h) it touches.
+    pub fn commit(&mut self, job: &Job, sched: &Schedule) {
+        for slot in &sched.slots {
+            for &(h, w, s) in &slot.placements {
+                let add = job
+                    .worker_demand
+                    .scaled(w as f64)
+                    .axpy(s as f64, &job.ps_demand);
+                self.alloc[slot.t][h].add_assign(&add);
+            }
+        }
+    }
+
+    /// Reverse of [`commit`] (used by look-ahead searches).
+    pub fn release(&mut self, job: &Job, sched: &Schedule) {
+        for slot in &sched.slots {
+            for &(h, w, s) in &slot.placements {
+                let sub = job
+                    .worker_demand
+                    .scaled(w as f64)
+                    .axpy(s as f64, &job.ps_demand);
+                self.alloc[slot.t][h].sub_assign(&sub);
+            }
+        }
+    }
+
+    /// Check that a schedule fits in the *current* residual capacity.
+    pub fn fits(&self, job: &Job, sched: &Schedule, eps: f64) -> bool {
+        for slot in &sched.slots {
+            for &(h, w, s) in &slot.placements {
+                let need = job
+                    .worker_demand
+                    .scaled(w as f64)
+                    .axpy(s as f64, &job.ps_demand);
+                if !need.fits_within(&self.residual(slot.t, h), eps) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// True iff no (t, h, r) exceeds capacity — the invariant the property
+    /// tests assert after every admission.
+    pub fn within_capacity(&self, eps: f64) -> bool {
+        for t in 0..self.horizon {
+            for h in 0..self.capacity.len() {
+                if !self.alloc[t][h].fits_within(&self.capacity[h], eps) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Overall utilization of resource `r` in `[0, horizon)`: used / capacity.
+    pub fn utilization(&self, r: usize) -> f64 {
+        let mut used = 0.0;
+        let mut cap = 0.0;
+        for t in 0..self.horizon {
+            for h in 0..self.capacity.len() {
+                used += self.alloc[t][h].0[r];
+                cap += self.capacity[h].0[r];
+            }
+        }
+        if cap == 0.0 {
+            0.0
+        } else {
+            used / cap
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Resource;
+    use crate::jobs::test_support::test_job;
+    use crate::jobs::{Schedule, SlotPlacement};
+
+    fn ledger() -> AllocLedger {
+        let c = Cluster::homogeneous(2, ResVec::new([8.0, 16.0, 64.0, 20.0]));
+        AllocLedger::new(&c, 4)
+    }
+
+    #[test]
+    fn commit_release_round_trip() {
+        let mut l = ledger();
+        let job = test_job(0);
+        let sched = Schedule {
+            job_id: 0,
+            slots: vec![SlotPlacement { t: 1, placements: vec![(0, 2, 1)] }],
+        };
+        assert!(l.fits(&job, &sched, 1e-9));
+        l.commit(&job, &sched);
+        let used = *l.used(1, 0);
+        let expect = job.worker_demand.scaled(2.0).axpy(1.0, &job.ps_demand);
+        assert_eq!(used, expect);
+        l.release(&job, &sched);
+        assert_eq!(l.used(1, 0).get(Resource::Cpu), 0.0);
+        assert!(l.within_capacity(0.0));
+    }
+
+    #[test]
+    fn residual_clamps() {
+        let mut l = ledger();
+        let job = test_job(0);
+        let sched = Schedule {
+            job_id: 0,
+            slots: vec![SlotPlacement { t: 0, placements: vec![(0, 100, 0)] }],
+        };
+        l.commit(&job, &sched); // deliberately overcommit
+        assert!(!l.within_capacity(0.0));
+        let res = l.residual(0, 0);
+        for i in 0..NUM_RESOURCES {
+            assert!(res.0[i] >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Experiment/system configuration: a simple `key = value` file format
+//! (INI-style sections; serde/toml are unavailable offline) feeding the
+//! CLI launcher.
+//!
+//! ```text
+//! # experiment.conf
+//! [cluster]
+//! machines = 100
+//! horizon = 20
+//!
+//! [scheduler]
+//! name = pd-ors
+//! dp_units = 120
+//! delta = 0.25
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed configuration: `section.key -> value` (top-level keys live in
+/// the "" section).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: unclosed section", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected key = value", lineno + 1));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(
+            "top = 1\n# comment\n[cluster]\nmachines = 100 # trailing\nhorizon=20\n\n[x]\ny = z\n",
+        )
+        .unwrap();
+        assert_eq!(c.usize("top", 0), 1);
+        assert_eq!(c.usize("cluster.machines", 0), 100);
+        assert_eq!(c.usize("cluster.horizon", 0), 20);
+        assert_eq!(c.get("x.y"), Some("z"));
+    }
+
+    #[test]
+    fn typed_getters_fall_back() {
+        let c = Config::parse("a = notanumber\n").unwrap();
+        assert_eq!(c.usize("a", 7), 7);
+        assert_eq!(c.f64("missing", 1.5), 1.5);
+        assert!(!c.bool("a", false));
+        assert!(c.bool("missing", true));
+    }
+
+    #[test]
+    fn bool_values() {
+        let c = Config::parse("a = true\nb = 0\nc = yes\n").unwrap();
+        assert!(c.bool("a", false));
+        assert!(!c.bool("b", true));
+        assert!(c.bool("c", false));
+    }
+
+    #[test]
+    fn errors_on_bad_lines() {
+        assert!(Config::parse("[unclosed\n").is_err());
+        assert!(Config::parse("no equals here\n").is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! BSP parameter-server execution of a scheduled job (paper §3.1 workflow).
+//!
+//! For every slot of the schedule:
+//!
+//! 1. the placement fixes `W` workers, `S` parameter servers, and the
+//!    locality (Fact 1) → the per-iteration simulated time
+//!    `(F/W)·τ + (2g/S)/b` of Eq. (1);
+//! 2. each BSP iteration: every worker computes gradients on its own
+//!    token batch via the `grad` artifact (the L2/L1 JAX+Pallas graph),
+//!    the PS sums the pushes and applies the Pallas `sgd_apply` kernel
+//!    via the `apply` artifact (`w ← w − (lr/W)·Σ g`);
+//! 3. the slot ends when its simulated time budget (1 slot) or the
+//!    configured iteration cap is exhausted.
+//!
+//! Workers execute sequentially on the single CPU PJRT device (a thread
+//! pool would serialize on the device anyway); parallelism across workers
+//! is captured by the simulated-time model, wall-clock is reported
+//! separately.
+
+use anyhow::Result;
+
+use crate::jobs::{Job, Locality, Schedule};
+use crate::runtime::ModelBundle;
+use crate::util::Timer;
+
+use super::data::TokenGen;
+
+/// Executor limits.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecConfig {
+    /// Hard cap on BSP iterations per slot (keeps CPU demos bounded).
+    pub max_iters_per_slot: usize,
+    /// Evaluate held-out loss after every slot.
+    pub eval_each_slot: bool,
+    pub seed: u64,
+}
+
+impl Default for ExecConfig {
+    fn default() -> ExecConfig {
+        ExecConfig { max_iters_per_slot: 20, eval_each_slot: false, seed: 0 }
+    }
+}
+
+/// Per-slot execution record.
+#[derive(Debug, Clone)]
+pub struct SlotReport {
+    pub t: usize,
+    pub workers: u64,
+    pub ps: u64,
+    pub locality: Locality,
+    pub iterations: usize,
+    pub samples_trained: f64,
+    /// Simulated in-cluster time consumed (slots; ≤ 1 unless capped).
+    pub sim_time: f64,
+    pub mean_loss: f32,
+    pub wall_secs: f64,
+}
+
+/// Whole-schedule execution record.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    pub job_id: usize,
+    pub slots: Vec<SlotReport>,
+    /// Loss after each BSP iteration (the loss curve).
+    pub losses: Vec<f32>,
+    pub eval_losses: Vec<f32>,
+    pub total_samples: f64,
+    pub total_wall_secs: f64,
+}
+
+/// Per-BSP-iteration simulated time (Eq. (1) rearranged): each worker
+/// computes `F/W` samples at τ each, then pushes/pulls `2g/S` MB over the
+/// locality-determined link.
+pub fn iteration_time(job: &Job, workers: u64, ps: u64, loc: Locality, g_mb: f64) -> f64 {
+    let b = match loc {
+        Locality::Internal => job.b_int,
+        Locality::External => job.b_ext,
+    };
+    let f = job.batch as f64;
+    (f / workers as f64) * job.tau + (2.0 * g_mb / ps as f64) / b
+}
+
+/// Execute `schedule` for `job` against the model artifacts. The `job`'s
+/// analytical parameters (τ, γ, F, b) drive the simulated-time model; the
+/// gradient/update math is the real compiled computation.
+pub fn execute_schedule(
+    bundle: &ModelBundle,
+    job: &Job,
+    schedule: &Schedule,
+    cfg: &ExecConfig,
+) -> Result<ExecReport> {
+    let mut params = bundle.init_params(cfg.seed as u32)?;
+    let mut gen = TokenGen::new(cfg.seed ^ 0xD5, bundle.meta.vocab);
+    let mut eval_gen = TokenGen::new(cfg.seed ^ 0x5D, bundle.meta.vocab);
+    let meta_batch = bundle.meta.batch;
+    let seq = bundle.meta.seq_len;
+    // gradient/parameter size from the *actual* model (MB)
+    let g_mb = bundle.meta.num_params as f64 * 4.0 / 1e6;
+
+    let total_timer = Timer::start();
+    let mut slots = Vec::new();
+    let mut losses: Vec<f32> = Vec::new();
+    let mut eval_losses: Vec<f32> = Vec::new();
+    let mut total_samples = 0.0;
+
+    for slot in &schedule.slots {
+        let workers: u64 = slot.placements.iter().map(|&(_, w, _)| w).sum();
+        let ps: u64 = slot.placements.iter().map(|&(_, _, s)| s).sum();
+        if workers == 0 || ps == 0 {
+            continue;
+        }
+        let locality = Locality::of_placement(&slot.placements);
+        let f = job.batch as f64;
+        let iter_time = iteration_time(job, workers, ps, locality, g_mb);
+        let budget_iters = if iter_time > 0.0 {
+            (1.0 / iter_time).floor() as usize
+        } else {
+            usize::MAX
+        };
+        let iters = budget_iters.clamp(1, cfg.max_iters_per_slot);
+
+        let wall = Timer::start();
+        let mut slot_loss_sum = 0.0f32;
+        for _ in 0..iters {
+            // --- workers push gradients (BSP barrier = full sum) ---
+            let mut grad_sum: Vec<f32> = vec![0.0; bundle.meta.num_params];
+            let mut loss_sum = 0.0f32;
+            for _w in 0..workers {
+                let tokens = gen.batch(meta_batch, seq);
+                let (g, loss) = bundle.grad(&params, &tokens)?;
+                for (acc, gi) in grad_sum.iter_mut().zip(&g) {
+                    *acc += gi;
+                }
+                loss_sum += loss;
+            }
+            // --- PS applies the aggregated update (Pallas sgd kernel) ---
+            let scale = (bundle.meta.lr as f32) / workers as f32;
+            params = bundle.apply(params, &grad_sum, scale)?;
+            let mean_loss = loss_sum / workers as f32;
+            losses.push(mean_loss);
+            slot_loss_sum += mean_loss;
+        }
+        total_samples += iters as f64 * f;
+        if cfg.eval_each_slot {
+            let tokens = eval_gen.batch(meta_batch, seq);
+            eval_losses.push(bundle.eval_loss(&params, &tokens)?);
+        }
+        slots.push(SlotReport {
+            t: slot.t,
+            workers,
+            ps,
+            locality,
+            iterations: iters,
+            samples_trained: iters as f64 * f,
+            sim_time: iters as f64 * iter_time,
+            mean_loss: slot_loss_sum / iters as f32,
+            wall_secs: wall.elapsed_secs(),
+        });
+    }
+
+    Ok(ExecReport {
+        job_id: job.id,
+        slots,
+        losses,
+        eval_losses,
+        total_samples,
+        total_wall_secs: total_timer.elapsed_secs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::{speed, test_support::test_job};
+
+    /// The executor's per-iteration time model and the scheduler's
+    /// per-sample speed model (Eq. (1)) must agree: at the γ-consistent
+    /// PS count (S = W/γ) and with g_mb = g_i, samples/slot from Eq. (1)
+    /// equals F · (iterations that fit in one slot).
+    #[test]
+    fn executor_time_model_matches_scheduler_eq1() {
+        let job = test_job(0); // gamma = 2
+        for loc in [Locality::Internal, Locality::External] {
+            for w in [2u64, 8, 16] {
+                let s = ((w as f64 / job.gamma).ceil()) as u64;
+                let iter = iteration_time(&job, w, s, loc, job.grad_size_mb);
+                let iters_per_slot = 1.0 / iter;
+                let exec_samples = job.batch as f64 * iters_per_slot;
+                // Eq. (1): w workers at per-worker rate (with exact S=W/γ)
+                let sched_samples =
+                    w as f64 * speed::per_worker_rate(&job, loc);
+                let rel = (exec_samples - sched_samples).abs() / sched_samples;
+                assert!(
+                    rel < 1e-9,
+                    "{loc:?} w={w}: exec {exec_samples} vs eq1 {sched_samples}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn internal_iterations_are_faster() {
+        let job = test_job(0);
+        let a = iteration_time(&job, 4, 2, Locality::Internal, job.grad_size_mb);
+        let b = iteration_time(&job, 4, 2, Locality::External, job.grad_size_mb);
+        assert!(a < b);
+    }
+
+    #[test]
+    fn more_ps_reduces_comm_time() {
+        let job = test_job(0);
+        let a = iteration_time(&job, 8, 1, Locality::External, job.grad_size_mb);
+        let b = iteration_time(&job, 8, 8, Locality::External, job.grad_size_mb);
+        assert!(b < a);
+    }
+}

@@ -1,0 +1,9 @@
+//! The training executor: runs a scheduled job's *actual* training through
+//! the PJRT artifacts, BSP-style, with the paper's locality-dependent
+//! communication model attached to every iteration.
+
+pub mod bsp;
+pub mod data;
+
+pub use bsp::{execute_schedule, ExecConfig, ExecReport, SlotReport};
+pub use data::TokenGen;

@@ -1,0 +1,186 @@
+//! Shared experiment plumbing: scheduler zoo, result tables.
+
+use crate::baselines::{Dorm, Drf, Fifo};
+use crate::cluster::Cluster;
+use crate::jobs::Job;
+use crate::sched::{PdOrs, PdOrsConfig, Placement};
+use crate::sim::{run_arrival_sim, run_slot_sim, SimResult};
+use crate::util::json::{self, Json};
+
+/// The scheduler zoo of §5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    PdOrs,
+    Oasis,
+    Fifo,
+    Drf,
+    Dorm,
+}
+
+impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 5] = [
+        SchedulerKind::PdOrs,
+        SchedulerKind::Oasis,
+        SchedulerKind::Fifo,
+        SchedulerKind::Drf,
+        SchedulerKind::Dorm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::PdOrs => "PD-ORS",
+            SchedulerKind::Oasis => "OASiS",
+            SchedulerKind::Fifo => "FIFO",
+            SchedulerKind::Drf => "DRF",
+            SchedulerKind::Dorm => "Dorm",
+        }
+    }
+
+    /// Run this scheduler over a job set.
+    pub fn run(
+        &self,
+        jobs: &[Job],
+        cluster: &Cluster,
+        horizon: usize,
+        seed: u64,
+    ) -> SimResult {
+        match self {
+            SchedulerKind::PdOrs => {
+                let cfg = PdOrsConfig { seed, ..Default::default() };
+                let mut s = PdOrs::new(cfg, jobs, cluster, horizon);
+                run_arrival_sim(jobs, cluster, horizon, &mut s)
+            }
+            SchedulerKind::Oasis => {
+                let cfg = PdOrsConfig {
+                    placement: Placement::Separated,
+                    seed,
+                    ..Default::default()
+                };
+                let mut s = PdOrs::new(cfg, jobs, cluster, horizon);
+                run_arrival_sim(jobs, cluster, horizon, &mut s)
+            }
+            SchedulerKind::Fifo => {
+                run_slot_sim(jobs, cluster, horizon, &mut Fifo::new(seed))
+            }
+            SchedulerKind::Drf => run_slot_sim(jobs, cluster, horizon, &mut Drf::new()),
+            SchedulerKind::Dorm => {
+                run_slot_sim(jobs, cluster, horizon, &mut Dorm::new())
+            }
+        }
+    }
+}
+
+/// A figure's data: one x column and one y column per series.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub x_label: String,
+    pub series: Vec<String>,
+    pub rows: Vec<(f64, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, x_label: &str, series: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            series: series.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.series.len());
+        self.rows.push((x, ys));
+    }
+
+    /// Column values of one series.
+    pub fn column(&self, series: &str) -> Vec<f64> {
+        let idx = self
+            .series
+            .iter()
+            .position(|s| s == series)
+            .unwrap_or_else(|| panic!("unknown series {series}"));
+        self.rows.iter().map(|(_, ys)| ys[idx]).collect()
+    }
+
+    /// TSV rendering (header + rows) — what the benches print.
+    pub fn to_tsv(&self) -> String {
+        let mut out = format!("# {}\n{}", self.title, self.x_label);
+        for s in &self.series {
+            out.push('\t');
+            out.push_str(s);
+        }
+        out.push('\n');
+        for (x, ys) in &self.rows {
+            out.push_str(&format!("{x}"));
+            for y in ys {
+                out.push_str(&format!("\t{y:.4}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            ("x_label", json::s(&self.x_label)),
+            (
+                "series",
+                Json::Arr(self.series.iter().map(|s| json::s(s)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(x, ys)| {
+                            let mut row = vec![*x];
+                            row.extend_from_slice(ys);
+                            json::arr_f64(&row)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write TSV to `path` (creating parent dirs).
+    pub fn save_tsv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_tsv())
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_tsv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_round_trip() {
+        let mut t = Table::new("Fig X", "jobs", &["A", "B"]);
+        t.push(10.0, vec![1.0, 2.0]);
+        t.push(20.0, vec![3.0, 4.0]);
+        assert_eq!(t.column("B"), vec![2.0, 4.0]);
+        let tsv = t.to_tsv();
+        assert!(tsv.contains("jobs\tA\tB"));
+        assert!(tsv.contains("20\t3.0000\t4.0000"));
+        let j = t.to_json();
+        assert!(j.get("rows").unwrap().as_arr().unwrap().len() == 2);
+    }
+
+    #[test]
+    fn scheduler_names() {
+        assert_eq!(SchedulerKind::PdOrs.name(), "PD-ORS");
+        assert_eq!(SchedulerKind::ALL.len(), 5);
+    }
+}

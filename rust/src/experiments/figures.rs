@@ -1,0 +1,435 @@
+//! The figure drivers (paper §5, Figs. 5–17).
+//!
+//! Each `figNN` function reproduces the corresponding figure's series.
+//! `ExpParams::quick()` scales the sweeps down for smoke tests; the
+//! defaults follow the paper's stated settings.
+
+use crate::baselines::offline_optimum;
+use crate::cluster::AllocLedger;
+use crate::jobs::{Job, Schedule};
+use crate::sched::rounding::{feasibility_rhs, gdelta_packing};
+use crate::sched::theta::GdeltaMode;
+use crate::sched::{PdOrs, PdOrsConfig};
+use crate::sim::metrics::{median_training_time, utility_gain};
+use crate::util::stats;
+use crate::util::Rng;
+use crate::workload::synthetic::paper_cluster;
+use crate::workload::{google_trace_jobs, synthetic_jobs, ClassMix, SynthConfig, MIX_DEFAULT, MIX_TRACE};
+
+use super::common::{SchedulerKind, Table};
+
+/// Sweep sizing knobs (paper defaults; `quick` for smoke tests).
+#[derive(Debug, Clone, Copy)]
+pub struct ExpParams {
+    pub seeds: usize,
+    pub quick: bool,
+}
+
+impl Default for ExpParams {
+    fn default() -> Self {
+        ExpParams { seeds: 3, quick: false }
+    }
+}
+
+impl ExpParams {
+    pub fn quick() -> Self {
+        ExpParams { seeds: 1, quick: true }
+    }
+}
+
+fn jobs_for(
+    trace: bool,
+    num_jobs: usize,
+    horizon: usize,
+    mix: ClassMix,
+    seed: u64,
+) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    if trace {
+        google_trace_jobs(num_jobs, horizon, mix, &mut rng)
+    } else {
+        synthetic_jobs(&SynthConfig::paper(num_jobs, horizon, mix), &mut rng)
+    }
+}
+
+/// Average total utility per scheduler over seeds.
+fn utility_sweep(
+    title: &str,
+    x_label: &str,
+    xs: &[usize],
+    schedulers: &[SchedulerKind],
+    p: &ExpParams,
+    make: impl Fn(usize, u64) -> (Vec<Job>, usize, usize), // (jobs, H, T)
+) -> Table {
+    let names: Vec<&str> = schedulers.iter().map(|s| s.name()).collect();
+    let mut table = Table::new(title, x_label, &names);
+    for &x in xs {
+        let mut sums = vec![0.0; schedulers.len()];
+        for seed in 0..p.seeds as u64 {
+            let (jobs, h, t) = make(x, seed);
+            let cluster = paper_cluster(h);
+            for (k, s) in schedulers.iter().enumerate() {
+                sums[k] += s.run(&jobs, &cluster, t, seed).total_utility;
+            }
+        }
+        table.push(x as f64, sums.iter().map(|v| v / p.seeds as f64).collect());
+    }
+    table
+}
+
+/// Fig. 5 — feasibility study: δ (LHS) vs RHS = 3m·e^{−G_δ W_a/2} for
+/// W_a ∈ {5, 10, 15, 20}, with W_b = 15 and r = RH + 1 = 401.
+pub fn fig05(_p: &ExpParams) -> Table {
+    let was = [5.0, 10.0, 15.0, 20.0];
+    let mut table = Table::new(
+        "Fig 5: feasibility condition (delta vs RHS)",
+        "delta",
+        &["LHS(delta)", "Wa=5", "Wa=10", "Wa=15", "Wa=20"],
+    );
+    let w_b = 15.0;
+    let r_rows = 401; // R=4, H=100 => RH+1
+    let m = 1;
+    let mut delta = 0.02;
+    while delta <= 0.1 + 1e-12 {
+        let mut ys = vec![delta];
+        for &wa in &was {
+            let g = gdelta_packing(delta, w_b, r_rows);
+            ys.push(feasibility_rhs(m, g, wa));
+        }
+        table.push(delta, ys);
+        delta += 0.01;
+    }
+    table
+}
+
+const BASELINES4: [SchedulerKind; 4] = [
+    SchedulerKind::PdOrs,
+    SchedulerKind::Fifo,
+    SchedulerKind::Drf,
+    SchedulerKind::Dorm,
+];
+
+/// Fig. 6 — total utility vs #machines (synthetic; I = 50, T = 20).
+pub fn fig06(p: &ExpParams) -> Table {
+    let xs: Vec<usize> =
+        if p.quick { vec![10, 40, 80] } else { vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100] };
+    utility_sweep(
+        "Fig 6: total utility vs machines (synthetic)",
+        "machines",
+        &xs,
+        &BASELINES4,
+        p,
+        |h, seed| (jobs_for(false, 50, 20, MIX_DEFAULT, 1000 + seed), h, 20),
+    )
+}
+
+/// Fig. 7 — total utility vs #jobs (synthetic; H = 100, T = 20).
+pub fn fig07(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![10, 30, 50] } else { vec![10, 20, 30, 40, 50] };
+    utility_sweep(
+        "Fig 7: total utility vs jobs (synthetic)",
+        "jobs",
+        &xs,
+        &BASELINES4,
+        p,
+        |i, seed| (jobs_for(false, i, 20, MIX_DEFAULT, 2000 + seed), 100, 20),
+    )
+}
+
+/// Fig. 8 — PD-ORS vs OASiS, utility vs #jobs (H = 100, T = 20).
+pub fn fig08(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![10, 30, 50] } else { vec![10, 20, 30, 40, 50] };
+    utility_sweep(
+        "Fig 8: PD-ORS vs OASiS (synthetic)",
+        "jobs",
+        &xs,
+        &[SchedulerKind::PdOrs, SchedulerKind::Oasis],
+        p,
+        |i, seed| (jobs_for(false, i, 20, MIX_DEFAULT, 3000 + seed), 100, 20),
+    )
+}
+
+/// Fig. 9 — median actual training time (T = 80, H = 30, I = 100).
+pub fn fig09(p: &ExpParams) -> Table {
+    let (i, h, t) = if p.quick { (30, 15, 40) } else { (100, 30, 80) };
+    let names: Vec<&str> = SchedulerKind::ALL.iter().map(|s| s.name()).collect();
+    let mut table =
+        Table::new("Fig 9: median actual training time", "scheduler_idx", &names);
+    let mut ys = vec![0.0; SchedulerKind::ALL.len()];
+    for seed in 0..p.seeds as u64 {
+        let jobs = jobs_for(false, i, t, MIX_DEFAULT, 4000 + seed);
+        let cluster = paper_cluster(h);
+        for (k, s) in SchedulerKind::ALL.iter().enumerate() {
+            ys[k] += median_training_time(&s.run(&jobs, &cluster, t, seed));
+        }
+    }
+    table.push(0.0, ys.iter().map(|v| v / p.seeds as f64).collect());
+    table
+}
+
+/// Small-instance job distribution for Fig. 10: the paper's ranges scaled
+/// so jobs are completable on a 4-machine cluster in T = 10 slots (the
+/// paper limits I ≤ 10, T = 10 for the same tractability reason; DESIGN.md
+/// documents the scaling).
+fn small_instance_jobs(num_jobs: usize, horizon: usize, seed: u64) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    let mut cfg = SynthConfig::paper(num_jobs, horizon, MIX_DEFAULT);
+    cfg.samples = (2_000.0, 30_000.0);
+    cfg.epochs = (10, 40);
+    cfg.batch = (10, 60);
+    synthetic_jobs(&cfg, &mut rng)
+}
+
+/// Fig. 10 — competitive ratio OPT / PD-ORS on small instances
+/// (I ≤ 10, T = 10; H = 4 machines).
+pub fn fig10(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![4, 8] } else { vec![2, 4, 6, 8, 10] };
+    let mut table =
+        Table::new("Fig 10: competitive ratio (OPT / PD-ORS)", "jobs", &["ratio"]);
+    for &i in &xs {
+        let mut ratios = Vec::new();
+        for seed in 0..p.seeds as u64 {
+            let t = 10;
+            let cluster = paper_cluster(4);
+            let jobs = small_instance_jobs(i, t, 5000 + seed);
+            let mut pdors =
+                PdOrs::new(PdOrsConfig { seed, ..Default::default() }, &jobs, &cluster, t);
+            let mut ledger = AllocLedger::new(&cluster, t);
+            let mut choices: Vec<(usize, f64, Schedule)> = Vec::new();
+            let mut pdors_u = 0.0;
+            for (k, job) in jobs.iter().enumerate() {
+                if let Some(s) = pdors.on_arrival(job, &mut ledger) {
+                    let u = job.utility_at(s.completion_time().unwrap());
+                    pdors_u += u;
+                    choices.push((k, u, s));
+                }
+            }
+            if pdors_u <= 0.0 {
+                continue; // no admissions on this draw; ratio undefined
+            }
+            let opt = offline_optimum(&jobs, &cluster, t, &choices, seed);
+            ratios.push((opt / pdors_u).max(1.0));
+        }
+        let avg = if ratios.is_empty() { 1.0 } else { stats::mean(&ratios) };
+        table.push(i as f64, vec![avg]);
+    }
+    table
+}
+
+/// Fig. 11 — performance ratio vs the pre-rounding gain factor G_δ
+/// (optimal utility / PD-ORS(G_δ) utility).
+pub fn fig11(p: &ExpParams) -> Table {
+    let gs = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2];
+    // Small-instance jobs (W1 of a few workers per slot): with larger W1
+    // the probability that rounding covers W1 at G_δ < 1 vanishes and the
+    // sweep degenerates; the paper's 5000-attempt budget only makes sense
+    // in this regime. Moderately contended so G_δ > 1 packing violations
+    // bind.
+    let (i, h, t) = if p.quick { (8, 4, 10) } else { (12, 6, 12) };
+    let mut table = Table::new(
+        "Fig 11: impact of pre-rounding gain factor G_delta",
+        "g_delta",
+        &["perf_ratio", "avg_rounding_attempts"],
+    );
+    // per (g, seed): (total utility, avg attempts, choices)
+    let mut totals = vec![vec![0.0f64; p.seeds]; gs.len()];
+    let mut attempts = vec![vec![0.0f64; p.seeds]; gs.len()];
+    let mut opts = vec![0.0f64; p.seeds];
+    for seed in 0..p.seeds as u64 {
+        let cluster = paper_cluster(h);
+        let jobs = small_instance_jobs(i, t, 6000 + seed);
+        // the offline optimum is G-independent: compute it once per seed,
+        // injecting every variant's chosen schedules so it dominates all
+        let mut all_choices: Vec<(usize, f64, Schedule)> = Vec::new();
+        for (gi, &g) in gs.iter().enumerate() {
+            let cfg = PdOrsConfig {
+                gdelta: GdeltaMode::Fixed(g),
+                // the paper's budget: 5000 rounding attempts before a
+                // (θ-solve, hence possibly the job) is discarded
+                attempts: 5000,
+                seed,
+                ..Default::default()
+            };
+            let mut pdors = PdOrs::new(cfg, &jobs, &cluster, t);
+            let mut ledger = AllocLedger::new(&cluster, t);
+            for (k, job) in jobs.iter().enumerate() {
+                if let Some(s) = pdors.on_arrival(job, &mut ledger) {
+                    let u = job.utility_at(s.completion_time().unwrap());
+                    totals[gi][seed as usize] += u;
+                    all_choices.push((k, u, s));
+                }
+            }
+            attempts[gi][seed as usize] = pdors
+                .log
+                .iter()
+                .map(|a| a.rounding_attempts as f64)
+                .sum::<f64>()
+                / pdors.log.len().max(1) as f64;
+        }
+        opts[seed as usize] = offline_optimum(&jobs, &cluster, t, &all_choices, seed);
+    }
+    for (gi, &g) in gs.iter().enumerate() {
+        let mut ratios = Vec::new();
+        for s in 0..p.seeds {
+            if totals[gi][s] > 0.0 {
+                ratios.push((opts[s] / totals[gi][s]).max(1.0));
+            }
+        }
+        let ratio = if ratios.is_empty() { f64::NAN } else { stats::mean(&ratios) };
+        table.push(g, vec![ratio, stats::mean(&attempts[gi])]);
+    }
+    table
+}
+
+/// Fig. 12 — total utility vs #machines (Google trace; I = 100, T = 80).
+pub fn fig12(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![10, 30] } else { vec![10, 20, 30, 40, 50] };
+    let (i, t) = if p.quick { (30, 40) } else { (100, 80) };
+    let mut scheds = vec![SchedulerKind::PdOrs, SchedulerKind::Oasis];
+    scheds.extend([SchedulerKind::Fifo, SchedulerKind::Drf, SchedulerKind::Dorm]);
+    utility_sweep(
+        "Fig 12: total utility vs machines (Google trace)",
+        "machines",
+        &xs,
+        &scheds,
+        p,
+        move |h, seed| (jobs_for(true, i, t, MIX_DEFAULT, 7000 + seed), h, t),
+    )
+}
+
+/// Fig. 13 — total utility vs #jobs (Google trace; H = 30, T = 80).
+pub fn fig13(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![20, 60] } else { vec![20, 40, 60, 80, 100] };
+    let t = if p.quick { 40 } else { 80 };
+    let mut scheds = vec![SchedulerKind::PdOrs, SchedulerKind::Oasis];
+    scheds.extend([SchedulerKind::Fifo, SchedulerKind::Drf, SchedulerKind::Dorm]);
+    utility_sweep(
+        "Fig 13: total utility vs jobs (Google trace)",
+        "jobs",
+        &xs,
+        &scheds,
+        p,
+        move |i, seed| (jobs_for(true, i, t, MIX_DEFAULT, 8000 + seed), 30, t),
+    )
+}
+
+/// Figs. 14–17 — normalized utility gain of PD-ORS over OASiS under two
+/// job-class mixes, vs machines (14, 15) or jobs (16, 17).
+fn gain_sweep(
+    title: &str,
+    x_label: &str,
+    xs: &[usize],
+    vary_machines: bool,
+    mix: ClassMix,
+    base_seed: u64,
+    p: &ExpParams,
+) -> Table {
+    let mut table = Table::new(title, x_label, &["gain_vs_oasis"]);
+    let t = if p.quick { 40 } else { 80 };
+    let fixed_i = if p.quick { 30 } else { 100 };
+    for &x in xs {
+        let mut gains = Vec::new();
+        for seed in 0..p.seeds as u64 {
+            let (i, h) = if vary_machines { (fixed_i, x) } else { (x, 30) };
+            let jobs = jobs_for(true, i, t, mix, base_seed + seed);
+            let cluster = paper_cluster(h);
+            let a = SchedulerKind::PdOrs.run(&jobs, &cluster, t, seed);
+            let b = SchedulerKind::Oasis.run(&jobs, &cluster, t, seed);
+            gains.push(utility_gain(&a, &b));
+        }
+        table.push(x as f64, vec![stats::mean(&gains)]);
+    }
+    table
+}
+
+pub fn fig14(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![10, 30] } else { vec![10, 20, 30, 40, 50] };
+    gain_sweep(
+        "Fig 14: utility gain vs machines, mix (10,55,35)",
+        "machines",
+        &xs,
+        true,
+        MIX_DEFAULT,
+        9000,
+        p,
+    )
+}
+
+pub fn fig15(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![10, 30] } else { vec![10, 20, 30, 40, 50] };
+    gain_sweep(
+        "Fig 15: utility gain vs machines, mix (30,69,1)",
+        "machines",
+        &xs,
+        true,
+        MIX_TRACE,
+        9000, // same seeds as fig14 => isolate the mix effect
+        p,
+    )
+}
+
+pub fn fig16(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![20, 60] } else { vec![20, 40, 60, 80, 100] };
+    gain_sweep(
+        "Fig 16: utility gain vs jobs, mix (10,55,35)",
+        "jobs",
+        &xs,
+        false,
+        MIX_DEFAULT,
+        9500,
+        p,
+    )
+}
+
+pub fn fig17(p: &ExpParams) -> Table {
+    let xs: Vec<usize> = if p.quick { vec![20, 60] } else { vec![20, 40, 60, 80, 100] };
+    gain_sweep(
+        "Fig 17: utility gain vs jobs, mix (30,69,1)",
+        "jobs",
+        &xs,
+        false,
+        MIX_TRACE,
+        9500,
+        p,
+    )
+}
+
+/// Dispatch by figure number.
+pub fn run_figure(fig: usize, p: &ExpParams) -> Option<Table> {
+    Some(match fig {
+        5 => fig05(p),
+        6 => fig06(p),
+        7 => fig07(p),
+        8 => fig08(p),
+        9 => fig09(p),
+        10 => fig10(p),
+        11 => fig11(p),
+        12 => fig12(p),
+        13 => fig13(p),
+        14 => fig14(p),
+        15 => fig15(p),
+        16 => fig16(p),
+        17 => fig17(p),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig05_is_cheap_and_shaped() {
+        let t = fig05(&ExpParams::quick());
+        assert_eq!(t.rows.len(), 9);
+        // RHS decreases with Wa at fixed delta
+        let (_, ys) = &t.rows[0];
+        assert!(ys[1] > ys[4], "RHS should fall with Wa: {ys:?}");
+    }
+
+    #[test]
+    fn run_figure_dispatch() {
+        assert!(run_figure(5, &ExpParams::quick()).is_some());
+        assert!(run_figure(99, &ExpParams::quick()).is_none());
+    }
+}

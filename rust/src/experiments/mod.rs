@@ -1,0 +1,12 @@
+//! Experiment drivers — one per evaluation figure of the paper (Figs 5–17).
+//!
+//! Every driver returns a [`Table`] whose columns mirror the paper's
+//! series so `EXPERIMENTS.md` can compare shapes directly. Drivers are
+//! invoked from the CLI (`dmlrs experiment --fig N`) and from the bench
+//! harness (`cargo bench`).
+
+pub mod common;
+pub mod figures;
+
+pub use common::{SchedulerKind, Table};
+pub use figures::*;

@@ -1,0 +1,222 @@
+//! Branch-and-bound MILP solver (minimization).
+//!
+//! Depth-first search with best-incumbent pruning; branches on the most
+//! fractional integer variable; bounds are added as extra `x_j ≤ ⌊v⌋` /
+//! `x_j ≥ ⌈v⌉` rows on a copy of the relaxation. Exact on the small
+//! per-slot ILPs this repo needs (tens of variables); a node cap guards
+//! pathological instances.
+
+use crate::lp::{solve, Cmp, LpOutcome, LpProblem};
+
+/// Integer solution (values rounded to the nearest integer).
+#[derive(Debug, Clone)]
+pub struct IlpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub nodes_explored: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum IlpOutcome {
+    Optimal(IlpSolution),
+    Infeasible,
+    /// Node cap hit; the incumbent (if any) is returned as a bound.
+    NodeLimit(Option<IlpSolution>),
+}
+
+const INT_EPS: f64 = 1e-6;
+
+fn most_fractional(x: &[f64], integer: &[bool]) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for (j, &xi) in x.iter().enumerate() {
+        if !integer[j] {
+            continue;
+        }
+        let frac = xi - xi.floor();
+        let dist = (frac - 0.5).abs();
+        if frac > INT_EPS && frac < 1.0 - INT_EPS {
+            if best.map_or(true, |(_, d)| dist < d) {
+                best = Some((j, dist));
+            }
+        }
+    }
+    best
+}
+
+/// Minimize `p` with `integer[j]` marking integral variables.
+pub fn solve_ilp(p: &LpProblem, integer: &[bool], node_limit: usize) -> IlpOutcome {
+    solve_ilp_budgeted(p, integer, node_limit, f64::INFINITY)
+}
+
+/// [`solve_ilp`] with an additional wall-clock budget (seconds); on
+/// exhaustion the best incumbent is returned as `NodeLimit`.
+pub fn solve_ilp_budgeted(
+    p: &LpProblem,
+    integer: &[bool],
+    node_limit: usize,
+    max_secs: f64,
+) -> IlpOutcome {
+    assert_eq!(integer.len(), p.num_vars);
+    let start = std::time::Instant::now();
+    let mut incumbent: Option<IlpSolution> = None;
+    let mut nodes = 0usize;
+    // stack of subproblems
+    let mut stack: Vec<LpProblem> = vec![p.clone()];
+
+    while let Some(sub) = stack.pop() {
+        nodes += 1;
+        if nodes > node_limit
+            || (nodes % 16 == 0 && start.elapsed().as_secs_f64() > max_secs)
+        {
+            return IlpOutcome::NodeLimit(incumbent);
+        }
+        let relaxed = match solve(&sub) {
+            LpOutcome::Optimal(s) => s,
+            LpOutcome::Infeasible => continue,
+            LpOutcome::Unbounded => continue, // integral restriction may
+                                              // still be bounded, but our
+                                              // problems never hit this
+        };
+        if let Some(inc) = &incumbent {
+            if relaxed.objective >= inc.objective - 1e-9 {
+                continue; // bound prune
+            }
+        }
+        match most_fractional(&relaxed.x, integer) {
+            None => {
+                // integral solution: snap integer vars, keep continuous ones
+                let x: Vec<f64> = relaxed
+                    .x
+                    .iter()
+                    .zip(integer)
+                    .map(|(v, &is_int)| if is_int { v.round().max(0.0) } else { v.max(0.0) })
+                    .collect();
+                let obj = p.objective_value(&x);
+                if incumbent.as_ref().map_or(true, |inc| obj < inc.objective) {
+                    incumbent = Some(IlpSolution { x, objective: obj, nodes_explored: nodes });
+                }
+            }
+            Some((j, _)) => {
+                let v = relaxed.x[j];
+                let mut down = sub.clone();
+                let mut row = vec![0.0; p.num_vars];
+                row[j] = 1.0;
+                down.add_row(row.clone(), Cmp::Le, v.floor());
+                let mut up = sub;
+                up.add_row(row, Cmp::Ge, v.ceil());
+                // DFS, exploring the "down" branch first (tends to find
+                // feasible incumbents quickly on cover problems).
+                stack.push(up);
+                stack.push(down);
+            }
+        }
+    }
+
+    match incumbent {
+        Some(mut s) => {
+            s.nodes_explored = nodes;
+            IlpOutcome::Optimal(s)
+        }
+        None => IlpOutcome::Infeasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_knapsack_cover() {
+        // min 3x + 4y s.t. 2x + 3y >= 7, integer => candidates:
+        // x=0,y=3 (12); x=2,y=1 (10); x=4,y=0 (12); x=1,y=2(11) => 10
+        let mut p = LpProblem::new(2);
+        p.set_objective(vec![3.0, 4.0]);
+        p.add_row(vec![2.0, 3.0], Cmp::Ge, 7.0);
+        match solve_ilp(&p, &[true, true], 10_000) {
+            IlpOutcome::Optimal(s) => {
+                assert!((s.objective - 10.0).abs() < 1e-6, "obj {}", s.objective);
+                assert_eq!(s.x, vec![2.0, 1.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn respects_packing() {
+        // max 5x + 4y (=> min -) s.t. 6x + 4y <= 24, x + 2y <= 6, ints
+        let mut p = LpProblem::new(2);
+        p.set_objective(vec![-5.0, -4.0]);
+        p.add_row(vec![6.0, 4.0], Cmp::Le, 24.0);
+        p.add_row(vec![1.0, 2.0], Cmp::Le, 6.0);
+        match solve_ilp(&p, &[true, true], 10_000) {
+            IlpOutcome::Optimal(s) => {
+                // LP opt is (3, 1.5) = 21; best integer point is (4, 0) = 20
+                assert!((s.objective - (-20.0)).abs() < 1e-6, "obj {}", s.objective);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_integer() {
+        // 2x = 3 has no integer solution
+        let mut p = LpProblem::new(1);
+        p.set_objective(vec![1.0]);
+        p.add_row(vec![2.0], Cmp::Eq, 3.0);
+        assert!(matches!(solve_ilp(&p, &[true], 1000), IlpOutcome::Infeasible));
+    }
+
+    #[test]
+    fn mixed_integer() {
+        // y continuous: min x + y s.t. x + y >= 2.5, x integer
+        let mut p = LpProblem::new(2);
+        p.set_objective(vec![1.0, 1.0]);
+        p.add_row(vec![1.0, 1.0], Cmp::Ge, 2.5);
+        match solve_ilp(&p, &[true, false], 1000) {
+            IlpOutcome::Optimal(s) => {
+                assert!((s.objective - 2.5).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn matches_enumeration_on_random_covers() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(42);
+        for case in 0..20 {
+            let n = 3;
+            let mut p = LpProblem::new(n);
+            let c: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 5.0)).collect();
+            p.set_objective(c.clone());
+            let a: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect();
+            let b = rng.range_f64(3.0, 8.0);
+            p.add_row(a.clone(), Cmp::Ge, b);
+            for j in 0..n {
+                let mut cap = vec![0.0; n];
+                cap[j] = 1.0;
+                p.add_row(cap, Cmp::Le, 6.0);
+            }
+            let got = match solve_ilp(&p, &[true; 3], 100_000) {
+                IlpOutcome::Optimal(s) => s.objective,
+                other => panic!("case {case}: {other:?}"),
+            };
+            // brute force over 0..=6 per var
+            let mut best = f64::INFINITY;
+            for x0 in 0..=6 {
+                for x1 in 0..=6 {
+                    for x2 in 0..=6 {
+                        let x = [x0 as f64, x1 as f64, x2 as f64];
+                        let lhs: f64 = a.iter().zip(&x).map(|(ai, xi)| ai * xi).sum();
+                        if lhs >= b - 1e-9 {
+                            let obj: f64 =
+                                c.iter().zip(&x).map(|(ci, xi)| ci * xi).sum();
+                            best = best.min(obj);
+                        }
+                    }
+                }
+            }
+            assert!((got - best).abs() < 1e-6, "case {case}: got {got} want {best}");
+        }
+    }
+}

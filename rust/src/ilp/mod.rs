@@ -1,0 +1,7 @@
+//! Integer programming substrate: branch-and-bound over the [`crate::lp`]
+//! simplex. This is the offline-oracle / Gurobi substitute used by the
+//! Fig. 10 offline optimum and the Fig. 11 rounding-vs-optimal comparison.
+
+pub mod branch_bound;
+
+pub use branch_bound::{solve_ilp, solve_ilp_budgeted, IlpOutcome, IlpSolution};

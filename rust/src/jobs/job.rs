@@ -1,0 +1,103 @@
+//! The training-job record (Table 1 of the paper).
+
+use super::utility::Sigmoid;
+use crate::cluster::ResVec;
+
+/// An ML training job `i ∈ I`.
+///
+/// All quantities use the paper's notation and units:
+/// * time is measured in scheduling slots,
+/// * data sizes (`g_i`) in MB, bandwidths in MB/slot,
+/// * `tau` (τ_i) is the compute time to train one sample, in slots.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: usize,
+    /// Arrival slot `a_i`.
+    pub arrival: usize,
+    /// Required epochs `E_i`.
+    pub epochs: u64,
+    /// Samples per epoch `K_i` (kept in f64 — up to 5·10^5 per the paper).
+    pub samples: f64,
+    /// Gradient/parameter size `g_i` (MB).
+    pub grad_size_mb: f64,
+    /// Per-sample training time `τ_i` (slots).
+    pub tau: f64,
+    /// Worker:PS ratio `γ_i` (Eq. (2)).
+    pub gamma: f64,
+    /// Global batch size `F_i` — also the max concurrent workers (Eq. (4)).
+    pub batch: u64,
+    /// Worker resource demand `α_i^r`.
+    pub worker_demand: ResVec,
+    /// Parameter-server resource demand `β_i^r`.
+    pub ps_demand: ResVec,
+    /// Internal (same-machine) link rate `b_i^{(i)}` (MB/slot).
+    pub b_int: f64,
+    /// External (cross-machine) link rate `b_i^{(e)}` (MB/slot).
+    pub b_ext: f64,
+    /// Utility `u_i(·)` of the completion delay.
+    pub utility: Sigmoid,
+}
+
+impl Job {
+    /// Total training workload `V_i = E_i · K_i` (samples; Eq. (3) RHS).
+    pub fn total_workload(&self) -> f64 {
+        self.epochs as f64 * self.samples
+    }
+
+    /// Utility of completing at slot `t` (`u_i(t − a_i)`); clamped to the
+    /// smallest value if `t < a_i` never happens by construction.
+    pub fn utility_at(&self, t: usize) -> f64 {
+        self.utility.eval((t as f64) - (self.arrival as f64))
+    }
+
+    /// Earliest possible completion delay (slots), all-internal
+    /// communication at full batch — the numerator of `U^r` in Eq. (13).
+    pub fn min_completion_slots(&self) -> f64 {
+        let per_sample = self.tau
+            + 2.0 * self.grad_size_mb * self.gamma / (self.b_int * self.batch as f64);
+        (self.total_workload() / self.batch as f64 * per_sample).ceil().max(1.0)
+    }
+
+    /// Worst-case resource-time product (denominator of `L` in Eq. (14)):
+    /// `⌈E_i K_i (τ_i + 2 g_i γ_i / (b_e F_i))⌉ Σ_r (α_i^r + β_i^r)`.
+    pub fn max_resource_time(&self) -> f64 {
+        let per_sample = self.tau
+            + 2.0 * self.grad_size_mb * self.gamma / (self.b_ext * self.batch as f64);
+        let slots = (self.total_workload() * per_sample).ceil().max(1.0);
+        let mut demand_sum = 0.0;
+        for r in 0..crate::cluster::NUM_RESOURCES {
+            demand_sum += self.worker_demand[r] + self.ps_demand[r];
+        }
+        slots * demand_sum
+    }
+
+    /// Resource demand of `w` workers + `s` parameter servers.
+    pub fn demand(&self, w: u64, s: u64) -> ResVec {
+        self.worker_demand
+            .scaled(w as f64)
+            .axpy(s as f64, &self.ps_demand)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::test_job;
+
+    #[test]
+    fn workload_and_bounds() {
+        let j = test_job(0);
+        assert_eq!(j.total_workload(), 4_000.0);
+        assert!(j.min_completion_slots() >= 1.0);
+        // internal comm is faster than external => earliest completion
+        // uses fewer slot-resources than the worst case bound
+        assert!(j.max_resource_time() > j.min_completion_slots());
+    }
+
+    #[test]
+    fn demand_combines_worker_and_ps() {
+        let j = test_job(0);
+        let d = j.demand(3, 2);
+        assert_eq!(d.0[0], 3.0); // GPU: workers only
+        assert_eq!(d.0[1], 3.0 * 2.0 + 2.0 * 2.0);
+    }
+}

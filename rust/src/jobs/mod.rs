@@ -1,0 +1,36 @@
+//! ML training jobs: the analytical model of paper §3.2.
+
+pub mod job;
+pub mod schedule;
+pub mod speed;
+pub mod utility;
+
+pub use job::Job;
+pub use schedule::{Schedule, SlotPlacement};
+pub use speed::{per_worker_rate, samples_in_slot, Locality};
+pub use utility::Sigmoid;
+
+/// Helpers shared by unit tests across modules.
+pub mod test_support {
+    use super::*;
+    use crate::cluster::ResVec;
+
+    /// A small deterministic job used by many unit tests.
+    pub fn test_job(id: usize) -> Job {
+        Job {
+            id,
+            arrival: 0,
+            epochs: 2,
+            samples: 2_000.0,
+            grad_size_mb: 100.0,
+            tau: 1e-4,
+            gamma: 2.0,
+            batch: 16,
+            worker_demand: ResVec::new([1.0, 2.0, 4.0, 1.0]),
+            ps_demand: ResVec::new([0.0, 2.0, 4.0, 1.0]),
+            b_int: 1.0e6,
+            b_ext: 1.0e5,
+            utility: Sigmoid { theta1: 50.0, theta2: 0.5, theta3: 5.0 },
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! A concrete schedule π_i: per-slot worker/PS placements (§4.1).
+
+use super::job::Job;
+use super::speed::samples_in_slot;
+
+/// Placement for one time slot: sparse list of `(machine, workers, ps)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotPlacement {
+    pub t: usize,
+    /// `(h, w_ih[t], s_ih[t])`, entries with w = s = 0 are omitted.
+    pub placements: Vec<(usize, u64, u64)>,
+}
+
+impl SlotPlacement {
+    pub fn total_workers(&self) -> u64 {
+        self.placements.iter().map(|&(_, w, _)| w).sum()
+    }
+
+    pub fn total_ps(&self) -> u64 {
+        self.placements.iter().map(|&(_, _, s)| s).sum()
+    }
+}
+
+/// A full schedule π for one job.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Schedule {
+    pub job_id: usize,
+    /// Non-empty slots, sorted by `t`.
+    pub slots: Vec<SlotPlacement>,
+}
+
+impl Schedule {
+    pub fn empty(job_id: usize) -> Schedule {
+        Schedule { job_id, slots: Vec::new() }
+    }
+
+    /// Completion slot `t̃_i` (Eq. (6)): the last slot with active workers.
+    pub fn completion_time(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .filter(|s| s.total_workers() > 0)
+            .map(|s| s.t)
+            .max()
+    }
+
+    /// Total samples trained over the schedule (LHS of Eq. (3)).
+    pub fn total_samples(&self, job: &Job) -> f64 {
+        self.slots
+            .iter()
+            .map(|s| samples_in_slot(job, &s.placements))
+            .sum()
+    }
+
+    /// True iff the schedule covers the job's full workload `E_i K_i`
+    /// (`frac` < 1 allows the paper's cover-violation tolerance; see the
+    /// Fig. 11 discussion — rounding may undershoot by a bounded factor).
+    pub fn covers_workload(&self, job: &Job, frac: f64) -> bool {
+        self.total_samples(job) + 1e-9 >= frac * job.total_workload()
+    }
+
+    /// Worker cap check, Eq. (4): `Σ_h w_ih[t] ≤ F_i` in every slot.
+    pub fn respects_worker_cap(&self, job: &Job) -> bool {
+        self.slots.iter().all(|s| s.total_workers() <= job.batch)
+    }
+
+    /// No placement precedes the arrival slot (Eq. (7)).
+    pub fn respects_arrival(&self, job: &Job) -> bool {
+        self.slots.iter().all(|s| s.t >= job.arrival)
+    }
+
+    /// The worker:PS ratio is maintained within integer rounding each slot
+    /// (Eq. (2)): `s = ⌈w/γ⌉` up to slack 1 (the paper keeps γ_i fixed;
+    /// integer counts force ceil).
+    pub fn respects_gamma(&self, job: &Job) -> bool {
+        self.slots.iter().all(|s| {
+            let w = s.total_workers();
+            let ps = s.total_ps();
+            if w == 0 {
+                return true;
+            }
+            let need = (w as f64 / job.gamma).ceil() as u64;
+            ps >= need.max(1)
+        })
+    }
+
+    /// Drop empty slots and sort by t — normal form used by tests.
+    pub fn normalize(&mut self) {
+        self.slots.retain(|s| {
+            s.placements.iter().any(|&(_, w, ps)| w > 0 || ps > 0)
+        });
+        self.slots.sort_by_key(|s| s.t);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::test_job;
+    use super::*;
+
+    #[test]
+    fn completion_ignores_ps_only_slots() {
+        let s = Schedule {
+            job_id: 0,
+            slots: vec![
+                SlotPlacement { t: 2, placements: vec![(0, 2, 1)] },
+                SlotPlacement { t: 5, placements: vec![(0, 0, 1)] },
+            ],
+        };
+        assert_eq!(s.completion_time(), Some(2));
+    }
+
+    #[test]
+    fn constraint_checks() {
+        let j = test_job(0);
+        let good = Schedule {
+            job_id: 0,
+            slots: vec![SlotPlacement { t: 0, placements: vec![(0, 4, 2)] }],
+        };
+        assert!(good.respects_worker_cap(&j));
+        assert!(good.respects_arrival(&j));
+        assert!(good.respects_gamma(&j));
+
+        let too_many = Schedule {
+            job_id: 0,
+            slots: vec![SlotPlacement { t: 0, placements: vec![(0, 100, 50)] }],
+        };
+        assert!(!too_many.respects_worker_cap(&j));
+
+        let no_ps = Schedule {
+            job_id: 0,
+            slots: vec![SlotPlacement { t: 0, placements: vec![(0, 4, 1)] }],
+        };
+        assert!(!no_ps.respects_gamma(&j)); // needs ceil(4/2)=2
+    }
+
+    #[test]
+    fn normalize_sorts_and_prunes() {
+        let mut s = Schedule {
+            job_id: 0,
+            slots: vec![
+                SlotPlacement { t: 3, placements: vec![(0, 1, 1)] },
+                SlotPlacement { t: 1, placements: vec![(0, 0, 0)] },
+                SlotPlacement { t: 0, placements: vec![(1, 2, 1)] },
+            ],
+        };
+        s.normalize();
+        assert_eq!(s.slots.len(), 2);
+        assert_eq!(s.slots[0].t, 0);
+    }
+}

@@ -1,0 +1,142 @@
+//! The paper's training-speed model — Eq. (1), Fact 1, and the per-slot
+//! trained-sample count used by both the scheduler and the executor.
+
+use super::job::Job;
+
+/// Locality of a slot's placement (Fact 1 of the paper): the *internal*
+/// rate applies iff exactly one machine hosts all workers **and** all
+/// parameter servers (`|P| = |W| = 1 ∧ P = W`); any other configuration is
+/// bottlenecked by the external link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Locality {
+    Internal,
+    External,
+}
+
+impl Locality {
+    /// Classify a placement given the per-machine (worker, ps) counts.
+    pub fn of_placement(placements: &[(usize, u64, u64)]) -> Locality {
+        let mut worker_machines = 0usize;
+        let mut ps_machines = 0usize;
+        let mut w_host = usize::MAX;
+        let mut s_host = usize::MAX;
+        for &(h, w, s) in placements {
+            if w > 0 {
+                worker_machines += 1;
+                w_host = h;
+            }
+            if s > 0 {
+                ps_machines += 1;
+                s_host = h;
+            }
+        }
+        if worker_machines == 1 && ps_machines == 1 && w_host == s_host {
+            Locality::Internal
+        } else {
+            Locality::External
+        }
+    }
+}
+
+/// Per-sample wall time (slots) for one worker of `job` under `loc`:
+/// `τ_i + (γ_i / F_i) · 2 g_i / b` — the denominator of Eq. (1) after the
+/// γ substitution of Eq. (2).
+pub fn per_sample_time(job: &Job, loc: Locality) -> f64 {
+    let b = match loc {
+        Locality::Internal => job.b_int,
+        Locality::External => job.b_ext,
+    };
+    job.tau + (job.gamma / job.batch as f64) * (2.0 * job.grad_size_mb / b)
+}
+
+/// Samples per slot contributed by a single worker (Eq. (1) numerator=1).
+pub fn per_worker_rate(job: &Job, loc: Locality) -> f64 {
+    1.0 / per_sample_time(job, loc)
+}
+
+/// Total samples trained in one slot by a placement (Eq. (1) summed over
+/// machines; BSP makes every worker run at the slowest-link rate).
+pub fn samples_in_slot(job: &Job, placements: &[(usize, u64, u64)]) -> f64 {
+    let total_workers: u64 = placements.iter().map(|&(_, w, _)| w).sum();
+    if total_workers == 0 {
+        return 0.0;
+    }
+    let loc = Locality::of_placement(placements);
+    total_workers as f64 * per_worker_rate(job, loc)
+}
+
+/// Workers needed (at the given locality) to train `v` samples in one slot.
+pub fn workers_needed(job: &Job, v: f64, loc: Locality) -> u64 {
+    if v <= 0.0 {
+        return 0;
+    }
+    (v * per_sample_time(job, loc)).ceil() as u64
+}
+
+/// Maximum samples trainable in one slot at the given locality, subject to
+/// the Eq.-(4) worker cap `Σ_h w ≤ F_i`.
+pub fn max_samples_per_slot(job: &Job, loc: Locality) -> f64 {
+    job.batch as f64 * per_worker_rate(job, loc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::test_job;
+    use super::*;
+
+    #[test]
+    fn fact1_locality() {
+        // single machine, both workers and PS => internal
+        assert_eq!(Locality::of_placement(&[(3, 2, 1)]), Locality::Internal);
+        // worker and PS on different machines => external
+        assert_eq!(
+            Locality::of_placement(&[(0, 2, 0), (1, 0, 1)]),
+            Locality::External
+        );
+        // multiple worker machines => external even if one has the PS
+        assert_eq!(
+            Locality::of_placement(&[(0, 2, 1), (1, 1, 0)]),
+            Locality::External
+        );
+        // multiple PS machines => external
+        assert_eq!(
+            Locality::of_placement(&[(0, 2, 1), (1, 0, 1)]),
+            Locality::External
+        );
+    }
+
+    #[test]
+    fn internal_is_faster() {
+        let j = test_job(0);
+        assert!(per_worker_rate(&j, Locality::Internal) > per_worker_rate(&j, Locality::External));
+    }
+
+    #[test]
+    fn samples_scale_with_workers() {
+        let j = test_job(0);
+        let one = samples_in_slot(&j, &[(0, 1, 1)]);
+        let four = samples_in_slot(&j, &[(0, 4, 1)]);
+        assert!((four / one - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workers_needed_round_trip() {
+        let j = test_job(0);
+        let v = 123.0;
+        let w = workers_needed(&j, v, Locality::External);
+        let placements = vec![(0, w, 0), (1, 0, 1)];
+        assert!(samples_in_slot(&j, &placements) >= v);
+        // and w−1 workers would not be enough
+        if w > 1 {
+            let fewer = vec![(0, w - 1, 0), (1, 0, 1)];
+            assert!(samples_in_slot(&j, &fewer) < v);
+        }
+    }
+
+    #[test]
+    fn empty_placement_trains_nothing() {
+        let j = test_job(0);
+        assert_eq!(samples_in_slot(&j, &[]), 0.0);
+        assert_eq!(samples_in_slot(&j, &[(0, 0, 1)]), 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! The sigmoid job-utility function of the paper's §5:
+//! `u_i(x) = θ1 / (1 + exp(θ2 · (x − θ3)))`,
+//! where x = completion delay (slots), θ1 = priority, θ2 = time
+//! criticality, θ3 = target completion time.
+
+/// Sigmoid utility parameters (one per job).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sigmoid {
+    pub theta1: f64,
+    pub theta2: f64,
+    pub theta3: f64,
+}
+
+/// The three time-sensitivity classes used throughout §5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeClass {
+    /// θ2 = 0: utility is flat in time.
+    Insensitive,
+    /// θ2 ∈ [0.01, 1].
+    Sensitive,
+    /// θ2 ∈ [4, 6].
+    Critical,
+}
+
+impl Sigmoid {
+    pub fn eval(&self, delay_slots: f64) -> f64 {
+        let e = (self.theta2 * (delay_slots - self.theta3)).exp();
+        self.theta1 / (1.0 + e)
+    }
+
+    /// Largest attainable utility (delay → 0⁺ is bounded by eval(1)); we
+    /// use eval at one slot since completion takes at least one slot.
+    pub fn max_value(&self) -> f64 {
+        self.eval(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let u = Sigmoid { theta1: 80.0, theta2: 0.7, theta3: 6.0 };
+        let mut prev = f64::INFINITY;
+        for d in 0..30 {
+            let v = u.eval(d as f64);
+            assert!(v <= prev + 1e-12, "not non-increasing at {d}");
+            assert!(v > 0.0 && v <= 80.0);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn insensitive_is_flat() {
+        let u = Sigmoid { theta1: 10.0, theta2: 0.0, theta3: 5.0 };
+        assert_eq!(u.eval(0.0), u.eval(100.0));
+        assert_eq!(u.eval(3.0), 5.0);
+    }
+
+    #[test]
+    fn critical_decays_fast() {
+        let u = Sigmoid { theta1: 100.0, theta2: 5.0, theta3: 4.0 };
+        assert!(u.eval(2.0) > 99.0);
+        assert!(u.eval(8.0) < 1.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! # dmlrs — online scheduling for distributed ML systems (PD-ORS)
+//!
+//! Reproduction of *"Toward Efficient Online Scheduling for Distributed
+//! Machine Learning Systems"* (Yu, Liu, Wu, Ji, Bentley; cs.DC 2021).
+//!
+//! The crate is the L3 coordinator of a three-layer rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`sched`] — the paper's contribution: the PD-ORS primal-dual online
+//!   scheduler (Algorithms 1–4), including the exponential price function,
+//!   the per-job dynamic program, and the randomized-rounding
+//!   approximation for the per-slot mixed cover/packing integer program.
+//! * [`cluster`], [`jobs`], [`workload`] — the analytical model of §3:
+//!   machines with multi-type resource capacities, PS-architecture
+//!   training jobs with locality-dependent communication (Eq. (1)), and
+//!   the paper's synthetic / Google-trace workload generators.
+//! * [`lp`], [`ilp`] — from-scratch two-phase simplex and branch-and-bound
+//!   solvers (the offline-oracle / Gurobi substitute).
+//! * [`baselines`] — FIFO, DRF, Dorm, OASiS and the offline optimum.
+//! * [`sim`] — the time-slotted cluster simulator driving every figure.
+//! * [`runtime`], [`exec`] — PJRT runtime loading the AOT-compiled JAX/
+//!   Pallas artifacts and a BSP parameter-server executor that *actually
+//!   trains* the scheduled jobs' transformer payloads.
+//! * [`experiments`] — one driver per paper figure (5–17).
+//! * [`util`], [`testkit`], [`cli`], [`config`] — substrates built from
+//!   scratch (RNG, stats, JSON, arg parsing, property testing) because the
+//!   build environment is offline.
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod exec;
+pub mod experiments;
+pub mod ilp;
+pub mod jobs;
+pub mod lp;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+pub mod workload;

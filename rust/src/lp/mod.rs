@@ -1,0 +1,14 @@
+//! Linear programming substrate (no external solver is available in the
+//! offline build environment, so this is a from-scratch implementation).
+//!
+//! [`simplex`] implements a dense two-phase primal simplex with Dantzig
+//! pricing and a Bland anti-cycling fallback. It is exact (up to fp
+//! tolerance) and deliberately simple; the scheduler-side performance work
+//! happens above it (machine-group aggregation in `sched::theta` shrinks
+//! the LPs by orders of magnitude — see DESIGN.md §Perf).
+
+pub mod problem;
+pub mod simplex;
+
+pub use problem::{Cmp, LpOutcome, LpProblem, LpSolution};
+pub use simplex::solve;

@@ -1,0 +1,91 @@
+//! LP problem / solution types.
+
+/// Row comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// `minimize c·x  s.t.  rows, x ≥ 0`.
+#[derive(Debug, Clone)]
+pub struct LpProblem {
+    pub num_vars: usize,
+    /// Objective coefficients `c` (minimization).
+    pub objective: Vec<f64>,
+    /// Constraint rows `(a, cmp, b)` meaning `a·x cmp b`.
+    pub rows: Vec<(Vec<f64>, Cmp, f64)>,
+}
+
+impl LpProblem {
+    pub fn new(num_vars: usize) -> LpProblem {
+        LpProblem { num_vars, objective: vec![0.0; num_vars], rows: Vec::new() }
+    }
+
+    pub fn set_objective(&mut self, c: Vec<f64>) {
+        assert_eq!(c.len(), self.num_vars);
+        self.objective = c;
+    }
+
+    pub fn add_row(&mut self, a: Vec<f64>, cmp: Cmp, b: f64) {
+        assert_eq!(a.len(), self.num_vars);
+        self.rows.push((a, cmp, b));
+    }
+
+    /// Sparse convenience: coefficients given as (index, value) pairs.
+    pub fn add_row_sparse(&mut self, terms: &[(usize, f64)], cmp: Cmp, b: f64) {
+        let mut a = vec![0.0; self.num_vars];
+        for &(j, v) in terms {
+            a[j] += v;
+        }
+        self.rows.push((a, cmp, b));
+    }
+
+    /// Evaluate feasibility of a point against all rows within `eps`.
+    pub fn is_feasible(&self, x: &[f64], eps: f64) -> bool {
+        if x.len() != self.num_vars || x.iter().any(|&v| v < -eps) {
+            return false;
+        }
+        self.rows.iter().all(|(a, cmp, b)| {
+            let lhs: f64 = a.iter().zip(x).map(|(ai, xi)| ai * xi).sum();
+            match cmp {
+                Cmp::Le => lhs <= b + eps,
+                Cmp::Ge => lhs >= b - eps,
+                Cmp::Eq => (lhs - b).abs() <= eps,
+            }
+        })
+    }
+
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.objective.iter().zip(x).map(|(c, v)| c * v).sum()
+    }
+}
+
+/// An optimal solution.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone)]
+pub enum LpOutcome {
+    Optimal(LpSolution),
+    Infeasible,
+    Unbounded,
+}
+
+impl LpOutcome {
+    pub fn optimal(&self) -> Option<&LpSolution> {
+        match self {
+            LpOutcome::Optimal(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_infeasible(&self) -> bool {
+        matches!(self, LpOutcome::Infeasible)
+    }
+}

@@ -1,0 +1,397 @@
+//! Dense two-phase primal simplex.
+//!
+//! Standard textbook construction: rows are normalized to `a·x = b` with
+//! `b ≥ 0` using slack/surplus variables; artificial variables seed the
+//! initial basis; phase 1 minimizes the artificial sum (infeasible if it
+//! stays positive); phase 2 minimizes the real objective. Dantzig pricing
+//! with a Bland fallback after a stall threshold guards against cycling.
+
+use super::problem::{Cmp, LpOutcome, LpProblem, LpSolution};
+
+const EPS: f64 = 1e-9;
+
+struct Tableau {
+    /// `m x n` coefficient matrix (row-major), plus rhs column `b`.
+    a: Vec<f64>,
+    b: Vec<f64>,
+    m: usize,
+    n: usize,
+    /// basis[i] = column index basic in row i.
+    basis: Vec<usize>,
+}
+
+impl Tableau {
+    #[inline]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.a[i * self.n + j]
+    }
+
+    fn pivot(&mut self, row: usize, col: usize) {
+        let n = self.n;
+        let piv = self.at(row, col);
+        debug_assert!(piv.abs() > EPS);
+        let inv = 1.0 / piv;
+        for j in 0..n {
+            self.a[row * n + j] *= inv;
+        }
+        self.b[row] *= inv;
+        for i in 0..self.m {
+            if i == row {
+                continue;
+            }
+            let f = self.at(i, col);
+            if f.abs() <= EPS {
+                continue;
+            }
+            for j in 0..n {
+                let v = self.a[row * n + j];
+                self.a[i * n + j] -= f * v;
+            }
+            self.b[i] -= f * self.b[row];
+        }
+        self.basis[row] = col;
+    }
+
+    /// Minimize `c·x` over the current basis; `allowed` masks columns that
+    /// may enter (used to keep artificials out in phase 2).
+    ///
+    /// The reduced-cost row is computed once (O(n·m)) and then updated
+    /// incrementally on every pivot (O(n)) — the full-tableau method.
+    fn optimize(&mut self, c: &[f64], allowed: &[bool], max_iters: usize) -> Result<(), LpOutcome> {
+        // r_j = c_j - c_B · B^{-1} A_j
+        let mut r: Vec<f64> = c.to_vec();
+        for i in 0..self.m {
+            let cb = c[self.basis[i]];
+            if cb != 0.0 {
+                for j in 0..self.n {
+                    r[j] -= cb * self.at(i, j);
+                }
+            }
+        }
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            if iters > max_iters {
+                // Numerical stall: treat as optimal-at-tolerance rather
+                // than looping forever (observed objective is valid).
+                return Ok(());
+            }
+            let bland = iters > 4 * (self.n + self.m);
+            let mut enter: Option<usize> = None;
+            let mut best = -EPS;
+            for j in 0..self.n {
+                if !allowed[j] {
+                    continue;
+                }
+                let rj = r[j];
+                if rj < -1e-7 {
+                    if bland {
+                        enter = Some(j);
+                        break;
+                    }
+                    if rj < best {
+                        best = rj;
+                        enter = Some(j);
+                    }
+                }
+            }
+            let Some(col) = enter else { return Ok(()) };
+            // ratio test
+            let mut leave: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for i in 0..self.m {
+                let aij = self.at(i, col);
+                if aij > EPS {
+                    let ratio = self.b[i] / aij;
+                    if ratio < best_ratio - EPS
+                        || (bland
+                            && (ratio - best_ratio).abs() <= EPS
+                            && leave.map_or(true, |l| self.basis[i] < self.basis[l]))
+                    {
+                        best_ratio = ratio;
+                        leave = Some(i);
+                    }
+                }
+            }
+            let Some(row) = leave else {
+                return Err(LpOutcome::Unbounded);
+            };
+            self.pivot(row, col);
+            // Incremental reduced-cost update with the normalized pivot row.
+            let rc = r[col];
+            if rc != 0.0 {
+                for j in 0..self.n {
+                    r[j] -= rc * self.at(row, j);
+                }
+            }
+        }
+    }
+}
+
+/// Solve the LP. See module docs.
+pub fn solve(p: &LpProblem) -> LpOutcome {
+    let nv = p.num_vars;
+    let m = p.rows.len();
+    if m == 0 {
+        // unconstrained (x >= 0): minimum at x = 0 unless some c_j < 0.
+        if p.objective.iter().any(|&c| c < -EPS) {
+            return LpOutcome::Unbounded;
+        }
+        return LpOutcome::Optimal(LpSolution { x: vec![0.0; nv], objective: 0.0 });
+    }
+
+    // Count extra columns: one slack/surplus per inequality, artificials as
+    // needed (Ge and Eq rows, and Le rows with negative rhs after flip).
+    let mut n = nv;
+    let mut slack_col = vec![usize::MAX; m];
+    let mut art_col = vec![usize::MAX; m];
+    // Normalize rows to b >= 0 first.
+    let mut rows: Vec<(Vec<f64>, Cmp, f64)> = p.rows.clone();
+    for (a, cmp, b) in rows.iter_mut() {
+        if *b < 0.0 {
+            for v in a.iter_mut() {
+                *v = -*v;
+            }
+            *b = -*b;
+            *cmp = match *cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            };
+        }
+    }
+    for (i, (_, cmp, _)) in rows.iter().enumerate() {
+        match cmp {
+            Cmp::Le => {
+                slack_col[i] = n;
+                n += 1;
+            }
+            Cmp::Ge => {
+                slack_col[i] = n; // surplus (coefficient -1)
+                n += 1;
+                art_col[i] = n;
+                n += 1;
+            }
+            Cmp::Eq => {
+                art_col[i] = n;
+                n += 1;
+            }
+        }
+    }
+
+    let mut t = Tableau {
+        a: vec![0.0; m * n],
+        b: vec![0.0; m],
+        m,
+        n,
+        basis: vec![usize::MAX; m],
+    };
+    for (i, (a, cmp, b)) in rows.iter().enumerate() {
+        for j in 0..nv {
+            *t.at_mut(i, j) = a[j];
+        }
+        t.b[i] = *b;
+        match cmp {
+            Cmp::Le => {
+                *t.at_mut(i, slack_col[i]) = 1.0;
+                t.basis[i] = slack_col[i];
+            }
+            Cmp::Ge => {
+                *t.at_mut(i, slack_col[i]) = -1.0;
+                *t.at_mut(i, art_col[i]) = 1.0;
+                t.basis[i] = art_col[i];
+            }
+            Cmp::Eq => {
+                *t.at_mut(i, art_col[i]) = 1.0;
+                t.basis[i] = art_col[i];
+            }
+        }
+    }
+
+    let has_artificials = art_col.iter().any(|&c| c != usize::MAX);
+    let max_iters = 50 * (n + m) + 1000;
+
+    if has_artificials {
+        // Phase 1: minimize sum of artificials.
+        let mut c1 = vec![0.0; n];
+        for &c in art_col.iter() {
+            if c != usize::MAX {
+                c1[c] = 1.0;
+            }
+        }
+        let allowed = vec![true; n];
+        if let Err(out) = t.optimize(&c1, &allowed, max_iters) {
+            return out; // unbounded phase 1 cannot happen, but propagate
+        }
+        let phase1: f64 = t
+            .basis
+            .iter()
+            .enumerate()
+            .filter(|(_, &bj)| c1[bj] > 0.0)
+            .map(|(i, _)| t.b[i])
+            .sum();
+        if phase1 > 1e-6 {
+            return LpOutcome::Infeasible;
+        }
+        // Drive remaining artificials out of the basis where possible.
+        for i in 0..m {
+            if c1[t.basis[i]] > 0.0 {
+                // find a non-artificial column with nonzero coefficient
+                let col = (0..n).find(|&j| c1[j] == 0.0 && t.at(i, j).abs() > 1e-7);
+                if let Some(j) = col {
+                    t.pivot(i, j);
+                }
+                // else: redundant row; harmless to leave (b[i] ~ 0).
+            }
+        }
+    }
+
+    // Phase 2.
+    let mut c2 = vec![0.0; n];
+    c2[..nv].copy_from_slice(&p.objective);
+    let mut allowed = vec![true; n];
+    for &c in art_col.iter() {
+        if c != usize::MAX {
+            allowed[c] = false;
+        }
+    }
+    if let Err(out) = t.optimize(&c2, &allowed, max_iters) {
+        return out;
+    }
+
+    let mut x = vec![0.0; nv];
+    for i in 0..m {
+        if t.basis[i] < nv {
+            x[t.basis[i]] = t.b[i].max(0.0);
+        }
+    }
+    let objective = p.objective_value(&x);
+    LpOutcome::Optimal(LpSolution { x, objective })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(out: &LpOutcome, expect_obj: f64, tol: f64) -> Vec<f64> {
+        let s = out.optimal().unwrap_or_else(|| panic!("not optimal: {out:?}"));
+        assert!(
+            (s.objective - expect_obj).abs() < tol,
+            "objective {} != {expect_obj}",
+            s.objective
+        );
+        s.x.clone()
+    }
+
+    #[test]
+    fn simple_le() {
+        // max x + y s.t. x + 2y <= 4, 3x + y <= 6  => min -(x+y)
+        let mut p = LpProblem::new(2);
+        p.set_objective(vec![-1.0, -1.0]);
+        p.add_row(vec![1.0, 2.0], Cmp::Le, 4.0);
+        p.add_row(vec![3.0, 1.0], Cmp::Le, 6.0);
+        // optimum x=1.6, y=1.2, value 2.8
+        let x = assert_opt(&solve(&p), -2.8, 1e-7);
+        assert!((x[0] - 1.6).abs() < 1e-7 && (x[1] - 1.2).abs() < 1e-7);
+    }
+
+    #[test]
+    fn cover_with_ge() {
+        // min 2x + 3y s.t. x + y >= 10, x <= 6
+        let mut p = LpProblem::new(2);
+        p.set_objective(vec![2.0, 3.0]);
+        p.add_row(vec![1.0, 1.0], Cmp::Ge, 10.0);
+        p.add_row(vec![1.0, 0.0], Cmp::Le, 6.0);
+        let x = assert_opt(&solve(&p), 2.0 * 6.0 + 3.0 * 4.0, 1e-7);
+        assert!((x[0] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn equality_rows() {
+        // min x + y s.t. x + 2y = 6, x - y = 0 => x = y = 2
+        let mut p = LpProblem::new(2);
+        p.set_objective(vec![1.0, 1.0]);
+        p.add_row(vec![1.0, 2.0], Cmp::Eq, 6.0);
+        p.add_row(vec![1.0, -1.0], Cmp::Eq, 0.0);
+        let x = assert_opt(&solve(&p), 4.0, 1e-7);
+        assert!((x[0] - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = LpProblem::new(1);
+        p.set_objective(vec![1.0]);
+        p.add_row(vec![1.0], Cmp::Ge, 5.0);
+        p.add_row(vec![1.0], Cmp::Le, 3.0);
+        assert!(solve(&p).is_infeasible());
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x s.t. x >= 1 (x can grow forever)
+        let mut p = LpProblem::new(1);
+        p.set_objective(vec![-1.0]);
+        p.add_row(vec![1.0], Cmp::Ge, 1.0);
+        assert!(matches!(solve(&p), LpOutcome::Unbounded));
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // x - y <= -2 with min x + y => y >= x + 2, best x=0,y=2
+        let mut p = LpProblem::new(2);
+        p.set_objective(vec![1.0, 1.0]);
+        p.add_row(vec![1.0, -1.0], Cmp::Le, -2.0);
+        let x = assert_opt(&solve(&p), 2.0, 1e-7);
+        assert!(x[0].abs() < 1e-7 && (x[1] - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // classic degenerate example (Beale-like); just ensure termination
+        let mut p = LpProblem::new(4);
+        p.set_objective(vec![-0.75, 150.0, -0.02, 6.0]);
+        p.add_row(vec![0.25, -60.0, -0.04, 9.0], Cmp::Le, 0.0);
+        p.add_row(vec![0.5, -90.0, -0.02, 3.0], Cmp::Le, 0.0);
+        p.add_row(vec![0.0, 0.0, 1.0, 0.0], Cmp::Le, 1.0);
+        let out = solve(&p);
+        let s = out.optimal().expect("should solve");
+        assert!((s.objective - (-0.05)).abs() < 1e-6, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn feasibility_checker_matches_solution() {
+        let mut p = LpProblem::new(3);
+        p.set_objective(vec![1.0, 2.0, 0.5]);
+        p.add_row(vec![1.0, 1.0, 1.0], Cmp::Ge, 4.0);
+        p.add_row(vec![2.0, 0.0, 1.0], Cmp::Le, 9.0);
+        p.add_row(vec![0.0, 1.0, 0.0], Cmp::Le, 2.0);
+        let out = solve(&p);
+        let s = out.optimal().unwrap();
+        assert!(p.is_feasible(&s.x, 1e-7));
+    }
+
+    #[test]
+    fn scheduling_shaped_lp() {
+        // A miniature of problem (23): 2 machines, workers w_h and ps s_h.
+        // min 1*w0 + 3*w1 + 2*s0 + 1*s1
+        // s.t. per-machine cap: 2w_h + 1s_h <= 10
+        //      w0 + w1 >= 4 (cover), w0 + w1 <= 6 (packing)
+        //      s0 + s1 >= 2 (gamma cover)
+        let mut p = LpProblem::new(4); // [w0, w1, s0, s1]
+        p.set_objective(vec![1.0, 3.0, 2.0, 1.0]);
+        p.add_row(vec![2.0, 0.0, 1.0, 0.0], Cmp::Le, 10.0);
+        p.add_row(vec![0.0, 2.0, 0.0, 1.0], Cmp::Le, 10.0);
+        p.add_row(vec![1.0, 1.0, 0.0, 0.0], Cmp::Ge, 4.0);
+        p.add_row(vec![1.0, 1.0, 0.0, 0.0], Cmp::Le, 6.0);
+        p.add_row(vec![0.0, 0.0, 1.0, 1.0], Cmp::Ge, 2.0);
+        // best: w0=4 (cost 4), s1=2 (cost 2) => 6; machine0 cap: 8+0<=10 ok
+        let x = assert_opt(&solve(&p), 6.0, 1e-7);
+        assert!((x[0] - 4.0).abs() < 1e-7);
+        assert!((x[3] - 2.0).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,179 @@
+//! Model artifacts: the compiled `init` / `grad` / `apply` / `train_step`
+//! / `eval` executables plus the metadata emitted by `python/compile/aot.py`.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::client::XlaRuntime;
+
+/// Parsed `lm_<size>.meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub num_params: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub files: std::collections::BTreeMap<String, String>,
+}
+
+impl ModelMeta {
+    pub fn load(path: &str) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path).with_context(|| path.to_string())?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("{path}: missing {k}"))
+        };
+        let mut files = std::collections::BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("files") {
+            for (k, f) in m {
+                if let Some(s) = f.as_str() {
+                    files.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(ModelMeta {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{path}: missing name"))?
+                .to_string(),
+            num_params: get_usize("num_params")?,
+            vocab: get_usize("vocab")?,
+            seq_len: get_usize("seq_len")?,
+            batch: get_usize("batch")?,
+            lr: v.get("lr").and_then(Json::as_f64).unwrap_or(0.05),
+            files,
+        })
+    }
+}
+
+/// One compiled computation.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    pub fn load(rt: &XlaRuntime, name: &str, path: &str) -> Result<Artifact> {
+        Ok(Artifact { name: name.to_string(), exe: rt.compile_hlo_text(path)? })
+    }
+
+    /// Execute with literal inputs; returns the flattened tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        out.to_tuple().map_err(|e| anyhow!("{}: {e:?}", self.name))
+    }
+
+    /// Execute with device-resident buffers (no host copies of params);
+    /// returns the raw output buffers (a tuple buffer).
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        Ok(result.swap_remove(0))
+    }
+}
+
+/// All executables for one model size.
+pub struct ModelBundle {
+    pub meta: ModelMeta,
+    pub init: Artifact,
+    pub grad: Artifact,
+    pub apply: Artifact,
+    pub train_step: Artifact,
+    pub eval: Artifact,
+}
+
+impl ModelBundle {
+    /// Load `lm_<size>` from the artifacts directory (compiles 5 HLOs).
+    pub fn load(rt: &XlaRuntime, artifacts_dir: &str, size: &str) -> Result<ModelBundle> {
+        let meta = ModelMeta::load(&format!("{artifacts_dir}/lm_{size}.meta.json"))?;
+        let file = |k: &str| -> Result<String> {
+            meta.files
+                .get(k)
+                .map(|f| format!("{artifacts_dir}/{f}"))
+                .ok_or_else(|| anyhow!("meta missing file entry {k}"))
+        };
+        Ok(ModelBundle {
+            init: Artifact::load(rt, "init", &file("init")?)?,
+            grad: Artifact::load(rt, "grad", &file("grad")?)?,
+            apply: Artifact::load(rt, "apply", &file("apply")?)?,
+            train_step: Artifact::load(rt, "train_step", &file("train_step")?)?,
+            eval: Artifact::load(rt, "eval", &file("eval")?)?,
+            meta,
+        })
+    }
+
+    /// Initialize parameters from a seed.
+    pub fn init_params(&self, seed: u32) -> Result<xla::Literal> {
+        let seed = xla::Literal::scalar(seed);
+        let mut out = self.init.run(&[seed])?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// One fused train step: (params, tokens) -> (params, loss).
+    pub fn train_step(
+        &self,
+        params: xla::Literal,
+        tokens: &[i32],
+    ) -> Result<(xla::Literal, f32)> {
+        let toks = self.tokens_literal(tokens)?;
+        let mut out = self.train_step.run(&[params, toks])?;
+        let loss = out.pop().ok_or_else(|| anyhow!("missing loss output"))?;
+        let params = out.pop().ok_or_else(|| anyhow!("missing params output"))?;
+        Ok((params, loss.to_vec::<f32>()?[0]))
+    }
+
+    /// Worker-side gradients: (params, tokens) -> (grads, loss).
+    pub fn grad(&self, params: &xla::Literal, tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let toks = self.tokens_literal(tokens)?;
+        let mut out = self.grad.run(&[params.clone(), toks])?;
+        let loss = out.pop().ok_or_else(|| anyhow!("missing loss output"))?;
+        let grads = out.pop().ok_or_else(|| anyhow!("missing grads output"))?;
+        Ok((grads.to_vec::<f32>()?, loss.to_vec::<f32>()?[0]))
+    }
+
+    /// PS-side update: params - scale * grad_sum, through the Pallas kernel.
+    pub fn apply(
+        &self,
+        params: xla::Literal,
+        grad_sum: &[f32],
+        scale: f32,
+    ) -> Result<xla::Literal> {
+        let g = xla::Literal::vec1(grad_sum);
+        let s = xla::Literal::vec1(&[scale]);
+        let mut out = self.apply.run(&[params, g, s])?;
+        Ok(out.swap_remove(0))
+    }
+
+    /// Eval loss on a batch.
+    pub fn eval_loss(&self, params: &xla::Literal, tokens: &[i32]) -> Result<f32> {
+        let toks = self.tokens_literal(tokens)?;
+        let out = self.eval.run(&[params.clone(), toks])?;
+        Ok(out[0].to_vec::<f32>()?[0])
+    }
+
+    fn tokens_literal(&self, tokens: &[i32]) -> Result<xla::Literal> {
+        let expect = self.meta.batch * self.meta.seq_len;
+        if tokens.len() != expect {
+            return Err(anyhow!(
+                "tokens len {} != batch*seq {}",
+                tokens.len(),
+                expect
+            ));
+        }
+        xla::Literal::vec1(tokens)
+            .reshape(&[self.meta.batch as i64, self.meta.seq_len as i64])
+            .map_err(|e| anyhow!("reshaping tokens: {e:?}"))
+    }
+}

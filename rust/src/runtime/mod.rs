@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire inference/training surface at run time. HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax ≥ 0.5 protos with
+//! 64-bit instruction ids; the text parser reassigns ids).
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Artifact, ModelBundle, ModelMeta};
+pub use client::XlaRuntime;

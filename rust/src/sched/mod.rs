@@ -1,0 +1,21 @@
+//! The paper's scheduling algorithms (§4).
+//!
+//! * [`pricing`]   — Eq. (12)–(14): the exponential marginal price
+//!   `Q_h^r(ρ) = L (U^r/L)^{ρ/C_h^r}` and the `U^r`, `L`, `μ` constants.
+//! * [`rounding`]  — the randomized rounding scheme (27)–(28) and the
+//!   pre-rounding gain factor `G_δ` of Theorems 3/4.
+//! * [`theta`]     — Algorithm 4: the per-slot problem θ(t, v) with the
+//!   internal (co-located, closed form) and external (LP relaxation +
+//!   rounding) cases.
+//! * [`dp`]        — Algorithms 2–3: the dynamic program Θ(t̃, V) over
+//!   per-slot workloads and the completion-time search.
+//! * [`pdors`]     — Algorithm 1: the online primal-dual admission loop.
+
+pub mod dp;
+pub mod pdors;
+pub mod pricing;
+pub mod rounding;
+pub mod theta;
+
+pub use pdors::{PdOrs, PdOrsConfig, Placement};
+pub use pricing::PricingParams;

@@ -1,0 +1,251 @@
+//! Algorithm 1 — the PD-ORS online admission loop.
+//!
+//! On each arrival: plan the payoff-maximizing schedule (Algorithms 2–4),
+//! admit iff the payoff λ_i is positive (complementary slackness), commit
+//! the allocation ledger, and let the exponential prices (Eq. (12)) rise.
+
+use crate::cluster::{AllocLedger, Cluster};
+use crate::jobs::{Job, Schedule};
+use crate::util::Rng;
+
+use super::dp::{plan_job, DpConfig, Masks, PlanResult};
+use super::pricing::PricingParams;
+use super::theta::{GdeltaMode, ThetaConfig};
+
+/// Worker/PS machine-placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// PD-ORS: workers and PSs may share any machine (co-location).
+    Colocated,
+    /// OASiS: PSs on the first half of the machines, workers on the second
+    /// (the paper's instantiation of [6] for Figs. 8–17).
+    Separated,
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PdOrsConfig {
+    pub placement: Placement,
+    pub dp_units: usize,
+    pub delta: f64,
+    pub gdelta: GdeltaMode,
+    /// Rounding attempts S per θ-solve.
+    pub attempts: usize,
+    /// Accepted cover fraction (see [`ThetaConfig::cover_fraction`]).
+    pub cover_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for PdOrsConfig {
+    fn default() -> PdOrsConfig {
+        PdOrsConfig {
+            placement: Placement::Colocated,
+            dp_units: 120,
+            delta: 0.25,
+            gdelta: GdeltaMode::Fixed(1.0),
+            attempts: 50,
+            cover_fraction: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-job admission record.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    pub job_id: usize,
+    pub admitted: bool,
+    pub payoff: f64,
+    pub utility: f64,
+    pub completion: Option<usize>,
+    pub rounding_attempts: usize,
+}
+
+/// The PD-ORS scheduler state.
+pub struct PdOrs {
+    pub cfg: PdOrsConfig,
+    pricing: PricingParams,
+    masks: Masks,
+    rng: Rng,
+    /// Admission log (one entry per arrival, in order).
+    pub log: Vec<Admission>,
+}
+
+impl PdOrs {
+    /// `jobs` is the population used to estimate the pricing constants
+    /// (Eq. (13)/(14) — "estimated empirically based on historical data").
+    pub fn new(cfg: PdOrsConfig, jobs: &[Job], cluster: &Cluster, horizon: usize) -> PdOrs {
+        let pricing = PricingParams::from_jobs(jobs, cluster, horizon);
+        let masks = match cfg.placement {
+            Placement::Colocated => Masks::all(cluster.len()),
+            Placement::Separated => Masks::separated(cluster.len()),
+        };
+        PdOrs { cfg, pricing, masks, rng: Rng::new(cfg.seed), log: Vec::new() }
+    }
+
+    pub fn pricing(&self) -> &PricingParams {
+        &self.pricing
+    }
+
+    fn dp_config(&self) -> DpConfig {
+        DpConfig {
+            units: self.cfg.dp_units,
+            theta: ThetaConfig {
+                delta: self.cfg.delta,
+                gdelta: self.cfg.gdelta,
+                attempts: self.cfg.attempts,
+                cover_fraction: self.cfg.cover_fraction,
+                group_machines: true,
+            },
+        }
+    }
+
+    /// Plan without committing (used by analysis tooling).
+    pub fn plan(&mut self, job: &Job, ledger: &AllocLedger) -> Option<PlanResult> {
+        let cfg = self.dp_config();
+        plan_job(job, ledger, &self.pricing, &self.masks, &cfg, &mut self.rng)
+    }
+
+    /// Algorithm 1 steps 2–4: plan, admit iff λ > 0, commit the ledger.
+    pub fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> Option<Schedule> {
+        let plan = self.plan(job, ledger);
+        match plan {
+            Some(p) if p.payoff > 0.0 => {
+                ledger.commit(job, &p.schedule);
+                self.log.push(Admission {
+                    job_id: job.id,
+                    admitted: true,
+                    payoff: p.payoff,
+                    utility: p.utility,
+                    completion: Some(p.completion),
+                    rounding_attempts: p.rounding_attempts,
+                });
+                Some(p.schedule)
+            }
+            other => {
+                let attempts = other.as_ref().map_or(0, |p| p.rounding_attempts);
+                self.log.push(Admission {
+                    job_id: job.id,
+                    admitted: false,
+                    payoff: other.map_or(f64::NEG_INFINITY, |p| p.payoff),
+                    utility: 0.0,
+                    completion: None,
+                    rounding_attempts: attempts,
+                });
+                None
+            }
+        }
+    }
+
+    /// Total utility of admitted jobs (the paper's headline metric).
+    pub fn total_utility(&self) -> f64 {
+        self.log.iter().filter(|a| a.admitted).map(|a| a.utility).sum()
+    }
+}
+
+impl crate::sim::ArrivalScheduler for PdOrs {
+    fn name(&self) -> String {
+        match self.cfg.placement {
+            Placement::Colocated => "PD-ORS".into(),
+            Placement::Separated => "OASiS".into(),
+        }
+    }
+
+    fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> Option<Schedule> {
+        PdOrs::on_arrival(self, job, ledger)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::synthetic::paper_cluster;
+    use crate::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+    fn run(h: usize, i: usize, t: usize, seed: u64) -> (PdOrs, AllocLedger, Vec<Job>) {
+        let cluster = paper_cluster(h);
+        let mut rng = Rng::new(seed);
+        let jobs = synthetic_jobs(&SynthConfig::paper(i, t, MIX_DEFAULT), &mut rng);
+        let mut sched = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, t);
+        let mut ledger = AllocLedger::new(&cluster, t);
+        for job in &jobs {
+            sched.on_arrival(job, &mut ledger);
+        }
+        (sched, ledger, jobs)
+    }
+
+    #[test]
+    fn admits_some_jobs_and_respects_capacity() {
+        let (sched, ledger, _) = run(10, 20, 20, 1);
+        let admitted = sched.log.iter().filter(|a| a.admitted).count();
+        assert!(admitted > 0, "expected at least one admission");
+        assert!(ledger.within_capacity(1e-6));
+    }
+
+    #[test]
+    fn admitted_jobs_have_positive_payoff() {
+        let (sched, _, _) = run(8, 15, 20, 2);
+        for a in &sched.log {
+            if a.admitted {
+                assert!(a.payoff > 0.0);
+                assert!(a.utility > 0.0);
+                assert!(a.completion.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn admitted_schedules_cover_workload() {
+        let cluster = paper_cluster(10);
+        let mut rng = Rng::new(3);
+        let jobs = synthetic_jobs(&SynthConfig::paper(15, 20, MIX_DEFAULT), &mut rng);
+        let mut sched = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, 20);
+        let mut ledger = AllocLedger::new(&cluster, 20);
+        for job in &jobs {
+            if let Some(s) = sched.on_arrival(job, &mut ledger) {
+                assert!(s.covers_workload(job, 1.0), "job {} under-covered", job.id);
+                assert!(s.respects_worker_cap(job));
+                assert!(s.respects_gamma(job));
+                assert!(s.respects_arrival(job));
+            }
+        }
+    }
+
+    #[test]
+    fn more_machines_cannot_hurt_much() {
+        // Fig. 6 sanity: utility should (weakly) grow with machine count.
+        let (small, _, _) = run(4, 30, 20, 7);
+        let (big, _, _) = run(40, 30, 20, 7);
+        assert!(
+            big.total_utility() >= small.total_utility() * 0.9,
+            "big={} small={}",
+            big.total_utility(),
+            small.total_utility()
+        );
+    }
+
+    #[test]
+    fn separated_placement_never_colocates() {
+        let cluster = paper_cluster(8);
+        let mut rng = Rng::new(5);
+        let jobs = synthetic_jobs(&SynthConfig::paper(12, 20, MIX_DEFAULT), &mut rng);
+        let cfg = PdOrsConfig { placement: Placement::Separated, ..Default::default() };
+        let mut sched = PdOrs::new(cfg, &jobs, &cluster, 20);
+        let mut ledger = AllocLedger::new(&cluster, 20);
+        for job in &jobs {
+            if let Some(s) = sched.on_arrival(job, &mut ledger) {
+                for slot in &s.slots {
+                    for &(h, w, ps) in &slot.placements {
+                        if w > 0 {
+                            assert!(h >= 4, "worker on PS-side machine");
+                        }
+                        if ps > 0 {
+                            assert!(h < 4, "PS on worker-side machine");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Randomized rounding (Eqs. (27)–(28)) and the pre-rounding gain factor
+//! `G_δ` (Theorems 3 and 4 / Lemmas 1 and 2).
+//!
+//! Given the fractional optimum `x̄` of the LP relaxation, the scheme
+//! scales `x' = G_δ x̄` and rounds each coordinate up with probability
+//! `frac(x')`, down otherwise. `G_δ ∈ (0, 1]` favors the packing
+//! (capacity) constraints; `G_δ > 1` favors the cover (workload)
+//! constraint — the trade-off Fig. 11 sweeps.
+
+use crate::util::Rng;
+
+/// Round one scaled coordinate per Eq. (27)/(28).
+#[inline]
+pub fn round_coord(rng: &mut Rng, x: f64) -> u64 {
+    if x <= 0.0 {
+        return 0;
+    }
+    let floor = x.floor();
+    let frac = x - floor;
+    let up = rng.chance(frac);
+    floor as u64 + if up { 1 } else { 0 }
+}
+
+/// Round a scaled fractional vector.
+pub fn round_vec(rng: &mut Rng, xs: &[f64], g_delta: f64) -> Vec<u64> {
+    xs.iter().map(|&x| round_coord(rng, g_delta * x)).collect()
+}
+
+/// `G_δ` for the packing-favored regime, Eq. (29):
+/// `1 + 3 ln(3(RH+1)/δ) / (2 W2) − sqrt((3 ln/2W2)² + 3 ln/W2)` — always in
+/// (0, 1].
+pub fn gdelta_packing(delta: f64, w2: f64, num_packing_rows: usize) -> f64 {
+    assert!(delta > 0.0 && delta <= 1.0, "δ ∈ (0,1]");
+    let w2 = w2.max(1e-9);
+    let ln_term = (3.0 * num_packing_rows as f64 / delta).ln().max(0.0);
+    let a = 3.0 * ln_term / (2.0 * w2);
+    let g = 1.0 + a - (a * a + 2.0 * a).sqrt();
+    g.clamp(1e-6, 1.0)
+}
+
+/// `G_δ` for the cover-favored regime, Eq. (30):
+/// `1 + ln(3m/δ)/W1 + sqrt((ln/W1)² + 2 ln/W1)` — always ≥ 1. The paper's
+/// specialization (Theorem 4) has m = 1 cover row of interest.
+pub fn gdelta_cover(delta: f64, w1: f64, num_cover_rows: usize) -> f64 {
+    assert!(delta > 0.0 && delta <= 1.0, "δ ∈ (0,1]");
+    let w1 = w1.max(1e-9);
+    let ln_term = (3.0 * num_cover_rows as f64 / delta).ln().max(0.0);
+    let a = ln_term / w1;
+    1.0 + a + (a * a + 2.0 * a).sqrt()
+}
+
+/// The theoretical approximation ratio `3 G_δ / δ` quoted in the lemmas.
+pub fn approx_ratio(delta: f64, g_delta: f64) -> f64 {
+    3.0 * g_delta / delta
+}
+
+/// RHS of the Remark-1 feasibility condition (Fig. 5): `3m e^{−G_δ W_a/2}`.
+/// The condition `δ ≥ RHS` makes the cover-feasibility statement of
+/// Lemma 1 meaningful.
+pub fn feasibility_rhs(m: usize, g_delta: f64, w_a: f64) -> f64 {
+    3.0 * m as f64 * (-g_delta * w_a / 2.0).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_preserves_expectation() {
+        let mut rng = Rng::new(0);
+        let x = 2.37;
+        let n = 200_000;
+        let total: u64 = (0..n).map(|_| round_coord(&mut rng, x)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - x).abs() < 0.01, "E[round] = {mean}, want {x}");
+    }
+
+    #[test]
+    fn round_integer_is_exact() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(round_coord(&mut rng, 3.0), 3);
+            assert_eq!(round_coord(&mut rng, 0.0), 0);
+        }
+    }
+
+    #[test]
+    fn gdelta_packing_in_unit_interval() {
+        for &delta in &[0.02, 0.1, 0.5, 1.0] {
+            for &w2 in &[1.0, 5.0, 15.0, 100.0] {
+                let g = gdelta_packing(delta, w2, 401);
+                assert!(g > 0.0 && g <= 1.0, "g={g} for δ={delta}, W2={w2}");
+            }
+        }
+    }
+
+    #[test]
+    fn gdelta_packing_monotone_in_w2() {
+        // larger W2 (looser packing rows) => G_δ closer to 1
+        let g1 = gdelta_packing(0.1, 2.0, 401);
+        let g2 = gdelta_packing(0.1, 50.0, 401);
+        assert!(g2 > g1);
+    }
+
+    #[test]
+    fn gdelta_cover_at_least_one() {
+        for &delta in &[0.02, 0.5, 1.0] {
+            for &w1 in &[1.0, 10.0, 1000.0] {
+                let g = gdelta_cover(delta, w1, 1);
+                assert!(g >= 1.0);
+            }
+        }
+        // large W1 => barely above 1
+        assert!(gdelta_cover(0.5, 1e6, 1) < 1.01);
+    }
+
+    #[test]
+    fn feasibility_rhs_decreases_in_wa() {
+        // the Fig. 5 shape: RHS falls below the 45° line sooner for larger Wa
+        let m = 1;
+        let g = 0.8;
+        assert!(feasibility_rhs(m, g, 20.0) < feasibility_rhs(m, g, 10.0));
+        assert!(feasibility_rhs(m, g, 50.0) < 0.02);
+    }
+
+    #[test]
+    fn vector_rounding_scales() {
+        let mut rng = Rng::new(3);
+        let xs = [1.4, 0.0, 2.0];
+        let r = round_vec(&mut rng, &xs, 1.0);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[1], 0);
+        assert!(r[0] == 1 || r[0] == 2);
+        assert_eq!(r[2], 2);
+    }
+}

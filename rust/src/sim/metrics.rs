@@ -1,0 +1,67 @@
+//! Derived metrics over [`super::SimResult`]s.
+
+use crate::util::stats;
+
+use super::engine::SimResult;
+
+/// Fig. 9's metric: the median of per-job training times, with unfinished
+/// jobs pinned to the horizon T (already encoded in `training_time`).
+pub fn median_training_time(res: &SimResult) -> f64 {
+    stats::median(&res.training_times())
+}
+
+/// Utility gain of `a` over `b`, normalized by `b` (Figs. 14–17 plot this
+/// against OASiS).
+pub fn utility_gain(a: &SimResult, b: &SimResult) -> f64 {
+    if b.total_utility <= 0.0 {
+        if a.total_utility > 0.0 {
+            return 1.0;
+        }
+        return 0.0;
+    }
+    (a.total_utility - b.total_utility) / b.total_utility
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::JobOutcome;
+
+    fn res(utility: f64, times: &[f64]) -> SimResult {
+        let outcomes: Vec<JobOutcome> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| JobOutcome {
+                job_id: i,
+                admitted: true,
+                completed: true,
+                completion: Some(t as usize),
+                utility: utility / times.len() as f64,
+                training_time: t,
+            })
+            .collect();
+        SimResult {
+            scheduler: "x".into(),
+            total_utility: utility,
+            admitted: times.len(),
+            completed: times.len(),
+            outcomes,
+        }
+    }
+
+    #[test]
+    fn median_time() {
+        let r = res(10.0, &[1.0, 5.0, 9.0]);
+        assert_eq!(median_training_time(&r), 5.0);
+    }
+
+    #[test]
+    fn gain() {
+        let a = res(15.0, &[1.0]);
+        let b = res(10.0, &[1.0]);
+        assert!((utility_gain(&a, &b) - 0.5).abs() < 1e-12);
+        let z = res(0.0, &[1.0]);
+        assert_eq!(utility_gain(&a, &z), 1.0);
+        assert_eq!(utility_gain(&z, &z), 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Time-slotted cluster simulator — drives every figure of §5.
+
+pub mod engine;
+pub mod metrics;
+
+pub use engine::{
+    run_arrival_sim, run_slot_sim, ActiveJob, ArrivalScheduler, JobOutcome, SimResult,
+    SlotScheduler,
+};
+pub use metrics::median_training_time;

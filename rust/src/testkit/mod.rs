@@ -1,0 +1,71 @@
+//! Property-based testing substrate (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! reports the case seed so the exact input reproduces with
+//! `Rng::new(seed)`. No shrinking — cases are kept small instead.
+
+use crate::util::Rng;
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+/// Run `prop` over `cases` seeded RNGs derived from `base_seed`.
+/// The property returns `Err(msg)` to signal failure.
+pub fn check<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut meta = Rng::new(base_seed);
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        if let Err(message) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {message}"
+            );
+        }
+    }
+}
+
+/// Assert-like helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        check("count", 1, 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failure() {
+        check("fails", 2, 10, |rng| {
+            let x = rng.f64();
+            if x > 0.0 {
+                Err(format!("x = {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

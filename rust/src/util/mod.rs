@@ -1,0 +1,10 @@
+//! Cross-cutting substrates: RNG, statistics, JSON, timing, logging.
+
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,94 @@
+//! Google-cluster-trace-style workload (Figs 12–17).
+//!
+//! **Substitution note (DESIGN.md):** the 2011 Google trace file is not
+//! available in this offline environment; the paper only consumes two of
+//! its properties — (i) the *arrival timestamps* of a scaled-down snippet
+//! and (ii) the *scheduling-class mix* (class 0 → time-insensitive,
+//! classes 1–2 → time-sensitive, class 3 → time-critical, ≈ 30/69/1).
+//! We regenerate those marginals: a non-homogeneous Poisson arrival
+//! process with the diurnal + bursty shape reported in the trace analyses
+//! ([38], [44]), and the class mix passed by the caller.
+
+use crate::jobs::Job;
+use crate::util::Rng;
+
+use super::mix::ClassMix;
+use super::synthetic::{synthetic_jobs, SynthConfig};
+
+/// Per-slot arrival intensity profile of the regenerated snippet:
+/// diurnal sinusoid + random bursts (occasional crowded slots), matching
+/// the "heterogeneity and dynamicity" character of the trace.
+pub fn trace_intensity(horizon: usize, rng: &mut Rng) -> Vec<f64> {
+    let period = (horizon as f64 / 3.0).max(4.0);
+    (0..horizon)
+        .map(|t| {
+            let diurnal =
+                1.0 + 0.6 * (2.0 * std::f64::consts::PI * t as f64 / period).sin();
+            let burst = if rng.chance(0.15) { rng.range_f64(1.5, 3.0) } else { 1.0 };
+            (diurnal * burst).max(0.05)
+        })
+        .collect()
+}
+
+/// Generate `num_jobs` jobs whose arrival slots follow the regenerated
+/// trace intensity and whose parameters follow the §5 synthetic ranges
+/// (the paper does the same: trace for arrivals/classes, synthetic for
+/// job internals).
+pub fn google_trace_jobs(
+    num_jobs: usize,
+    horizon: usize,
+    mix: ClassMix,
+    rng: &mut Rng,
+) -> Vec<Job> {
+    let cfg = SynthConfig::paper(num_jobs, horizon, mix);
+    let mut jobs = synthetic_jobs(&cfg, rng);
+    // Overwrite arrivals with the trace process (keep job ids arrival-sorted).
+    let latest = (horizon * 3 / 4).max(1);
+    let intensity = trace_intensity(latest, rng);
+    for j in jobs.iter_mut() {
+        j.arrival = rng.weighted(&intensity);
+    }
+    jobs.sort_by_key(|j| j.arrival);
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.id = i;
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::mix::MIX_TRACE;
+
+    #[test]
+    fn arrivals_within_window_and_sorted() {
+        let mut rng = Rng::new(1);
+        let jobs = google_trace_jobs(100, 80, MIX_TRACE, &mut rng);
+        assert_eq!(jobs.len(), 100);
+        for j in &jobs {
+            assert!(j.arrival < 60); // 3/4 of 80
+        }
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn intensity_positive_and_bursty() {
+        let mut rng = Rng::new(2);
+        let i = trace_intensity(80, &mut rng);
+        assert_eq!(i.len(), 80);
+        assert!(i.iter().all(|&x| x > 0.0));
+        let max = i.iter().cloned().fold(0.0, f64::max);
+        let min = i.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 2.0, "profile should vary");
+    }
+
+    #[test]
+    fn trace_mix_is_mostly_non_critical() {
+        let mut rng = Rng::new(3);
+        let jobs = google_trace_jobs(2_000, 80, MIX_TRACE, &mut rng);
+        let critical = jobs.iter().filter(|j| j.utility.theta2 >= 4.0).count();
+        assert!((critical as f64 / jobs.len() as f64) < 0.03);
+    }
+}

@@ -1,0 +1,84 @@
+//! Job time-sensitivity class mixes (§5).
+//!
+//! The paper runs two mixes: the OASiS default (10% insensitive, 55%
+//! sensitive, 35% critical; Figs 6–14, 16) and the Google-trace-derived
+//! mix (30%, 69%, 1%; Figs 15, 17) obtained by mapping trace scheduling
+//! class 0 → insensitive, classes 1–2 → sensitive, class 3 → critical.
+
+use crate::jobs::utility::Sigmoid;
+use crate::util::Rng;
+
+/// Fractions of (insensitive, sensitive, critical) jobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassMix {
+    pub insensitive: f64,
+    pub sensitive: f64,
+    pub critical: f64,
+}
+
+/// The OASiS-default mix used in most figures: (10%, 55%, 35%).
+pub const MIX_DEFAULT: ClassMix =
+    ClassMix { insensitive: 0.10, sensitive: 0.55, critical: 0.35 };
+
+/// The Google-trace mix: (30%, 69%, 1%).
+pub const MIX_TRACE: ClassMix =
+    ClassMix { insensitive: 0.30, sensitive: 0.69, critical: 0.01 };
+
+impl ClassMix {
+    /// Draw a sigmoid utility according to the mix. θ1 ∈ [1,100] is the
+    /// priority, θ3 ∈ [1,15] the target completion time; θ2 per class.
+    pub fn sample_utility(&self, rng: &mut Rng) -> Sigmoid {
+        let theta1 = rng.range_f64(1.0, 100.0);
+        let theta3 = rng.range_f64(1.0, 15.0);
+        let x = rng.f64();
+        let theta2 = if x < self.insensitive {
+            0.0
+        } else if x < self.insensitive + self.sensitive {
+            rng.range_f64(0.01, 1.0)
+        } else {
+            rng.range_f64(4.0, 6.0)
+        };
+        Sigmoid { theta1, theta2, theta3 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixes_sum_to_one() {
+        for m in [MIX_DEFAULT, MIX_TRACE] {
+            assert!((m.insensitive + m.sensitive + m.critical - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn class_frequencies_follow_mix() {
+        let mut rng = Rng::new(0);
+        let mut flat = 0;
+        let mut crit = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            let u = MIX_DEFAULT.sample_utility(&mut rng);
+            if u.theta2 == 0.0 {
+                flat += 1;
+            } else if u.theta2 >= 4.0 {
+                crit += 1;
+            }
+        }
+        assert!((flat as f64 / n as f64 - 0.10).abs() < 0.02);
+        assert!((crit as f64 / n as f64 - 0.35).abs() < 0.02);
+    }
+
+    #[test]
+    fn theta_ranges() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let u = MIX_TRACE.sample_utility(&mut rng);
+            assert!((1.0..=100.0).contains(&u.theta1));
+            assert!((1.0..=15.0).contains(&u.theta3));
+            assert!(u.theta2 == 0.0 || (0.01..=6.0).contains(&u.theta2));
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generation: the paper's §5 synthetic distribution and a
+//! statistical regeneration of the Google cluster trace arrivals.
+
+pub mod google_trace;
+pub mod mix;
+pub mod synthetic;
+
+pub use google_trace::google_trace_jobs;
+pub use mix::{ClassMix, MIX_DEFAULT, MIX_TRACE};
+pub use synthetic::{synthetic_jobs, SynthConfig};

@@ -1,0 +1,122 @@
+//! Integration: the rust PJRT runtime against the AOT artifacts.
+//!
+//! Requires `make artifacts` (tiny size). Tests skip gracefully when the
+//! artifacts directory is absent so `cargo test` works pre-build.
+
+use dmlrs::exec::{execute_schedule, ExecConfig, TokenGen};
+use dmlrs::jobs::{Schedule, SlotPlacement};
+use dmlrs::runtime::{ModelBundle, XlaRuntime};
+
+fn bundle() -> Option<(XlaRuntime, ModelBundle)> {
+    if !std::path::Path::new("artifacts/lm_tiny.meta.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let b = ModelBundle::load(&rt, "artifacts", "tiny").expect("load tiny bundle");
+    Some((rt, b))
+}
+
+#[test]
+fn init_params_shape_and_determinism() {
+    let Some((_rt, b)) = bundle() else { return };
+    let p1 = b.init_params(0).unwrap();
+    let p2 = b.init_params(0).unwrap();
+    let v1 = p1.to_vec::<f32>().unwrap();
+    let v2 = p2.to_vec::<f32>().unwrap();
+    assert_eq!(v1.len(), b.meta.num_params);
+    assert_eq!(v1, v2, "same seed, same params");
+    let p3 = b.init_params(1).unwrap();
+    assert_ne!(v1, p3.to_vec::<f32>().unwrap(), "different seed differs");
+}
+
+#[test]
+fn initial_loss_is_near_uniform() {
+    let Some((_rt, b)) = bundle() else { return };
+    let params = b.init_params(0).unwrap();
+    let mut gen = TokenGen::new(0, b.meta.vocab);
+    let tokens = gen.batch(b.meta.batch, b.meta.seq_len);
+    let loss = b.eval_loss(&params, &tokens).unwrap();
+    let uniform = (b.meta.vocab as f32).ln();
+    assert!(
+        (loss - uniform).abs() < 0.5,
+        "init loss {loss} should be near ln(V) = {uniform}"
+    );
+}
+
+#[test]
+fn grad_plus_apply_equals_train_step() {
+    // The PS decomposition (grad artifact + apply artifact) must reproduce
+    // the fused train_step artifact bit-for-bit-ish.
+    let Some((_rt, b)) = bundle() else { return };
+    let params = b.init_params(7).unwrap();
+    let mut gen = TokenGen::new(1, b.meta.vocab);
+    let tokens = gen.batch(b.meta.batch, b.meta.seq_len);
+
+    let (g, loss_g) = b.grad(&params, &tokens).unwrap();
+    let manual = b
+        .apply(params.clone(), &g, b.meta.lr as f32)
+        .unwrap()
+        .to_vec::<f32>()
+        .unwrap();
+    let (fused, loss_f) = b.train_step(params, &tokens).unwrap();
+    let fused = fused.to_vec::<f32>().unwrap();
+
+    assert!((loss_g - loss_f).abs() < 1e-6);
+    let max_diff = manual
+        .iter()
+        .zip(&fused)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-5, "PS decomposition diverges: {max_diff}");
+}
+
+#[test]
+fn fused_steps_reduce_loss() {
+    let Some((_rt, b)) = bundle() else { return };
+    let mut params = b.init_params(0).unwrap();
+    let mut gen = TokenGen::new(2, b.meta.vocab);
+    let tokens = gen.batch(b.meta.batch, b.meta.seq_len);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..20 {
+        let (p, loss) = b.train_step(params, &tokens).unwrap();
+        params = p;
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    assert!(
+        last < first.unwrap() - 0.1,
+        "loss did not fall: {} -> {last}",
+        first.unwrap()
+    );
+}
+
+#[test]
+fn executor_runs_a_multi_slot_schedule() {
+    let Some((_rt, b)) = bundle() else { return };
+    let mut job = dmlrs::jobs::test_support::test_job(0);
+    job.grad_size_mb = b.meta.num_params as f64 * 4.0 / 1e6;
+    let schedule = Schedule {
+        job_id: 0,
+        slots: vec![
+            // slot 0: co-located on machine 0 (internal locality)
+            SlotPlacement { t: 0, placements: vec![(0, 3, 2)] },
+            // slot 1: spread (external locality)
+            SlotPlacement { t: 1, placements: vec![(0, 2, 0), (1, 0, 1), (2, 1, 1)] },
+        ],
+    };
+    let cfg = ExecConfig { max_iters_per_slot: 3, eval_each_slot: true, seed: 5 };
+    let report = execute_schedule(&b, &job, &schedule, &cfg).unwrap();
+    assert_eq!(report.slots.len(), 2);
+    assert_eq!(report.slots[0].locality, dmlrs::jobs::Locality::Internal);
+    assert_eq!(report.slots[1].locality, dmlrs::jobs::Locality::External);
+    assert_eq!(report.losses.len(), 6);
+    assert_eq!(report.eval_losses.len(), 2);
+    // BSP with more workers trains more samples per iteration
+    assert!(report.total_samples > 0.0);
+    // internal slot should simulate faster per-iteration time than external
+    let t_int = report.slots[0].sim_time / report.slots[0].iterations as f64;
+    let t_ext = report.slots[1].sim_time / report.slots[1].iterations as f64;
+    assert!(t_int < t_ext, "internal {t_int} !< external {t_ext}");
+}

@@ -1,0 +1,217 @@
+//! Property tests over the scheduler stack (testkit substrate; proptest is
+//! unavailable offline). Each property runs dozens of seeded random cases
+//! and reports the failing seed on violation.
+
+use dmlrs::cluster::{AllocLedger, NUM_RESOURCES};
+use dmlrs::lp::{solve, Cmp, LpProblem};
+use dmlrs::prop_assert;
+use dmlrs::sched::pricing::PricingParams;
+use dmlrs::sched::rounding::round_coord;
+use dmlrs::sched::{PdOrs, PdOrsConfig, Placement};
+use dmlrs::testkit::check;
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::paper_cluster;
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT, MIX_TRACE};
+
+/// (i) No admitted schedule ever exceeds any (t, h, r) capacity.
+#[test]
+fn prop_capacity_never_exceeded() {
+    check("capacity", 0xC0FFEE, 12, |rng| {
+        let h = rng.range_usize(2, 20);
+        let i = rng.range_usize(2, 20);
+        let t = rng.range_usize(6, 24);
+        let cluster = paper_cluster(h);
+        let jobs = synthetic_jobs(&SynthConfig::paper(i, t, MIX_DEFAULT), rng);
+        let placement =
+            if rng.chance(0.5) { Placement::Colocated } else { Placement::Separated };
+        let cfg = PdOrsConfig { placement, seed: rng.next_u64(), ..Default::default() };
+        let mut sched = PdOrs::new(cfg, &jobs, &cluster, t);
+        let mut ledger = AllocLedger::new(&cluster, t);
+        for job in &jobs {
+            sched.on_arrival(job, &mut ledger);
+        }
+        prop_assert!(ledger.within_capacity(1e-6), "capacity exceeded (H={h} I={i} T={t})");
+        Ok(())
+    });
+}
+
+/// (ii) Admitted schedules cover E_i K_i and satisfy Eqs. (2), (4), (7).
+#[test]
+fn prop_admitted_schedules_valid() {
+    check("valid-schedules", 0xBEEF, 10, |rng| {
+        let h = rng.range_usize(3, 16);
+        let t = rng.range_usize(8, 20);
+        let cluster = paper_cluster(h);
+        let jobs = synthetic_jobs(&SynthConfig::paper(12, t, MIX_DEFAULT), rng);
+        let cfg = PdOrsConfig { seed: rng.next_u64(), ..Default::default() };
+        let mut sched = PdOrs::new(cfg, &jobs, &cluster, t);
+        let mut ledger = AllocLedger::new(&cluster, t);
+        for job in &jobs {
+            if let Some(s) = sched.on_arrival(job, &mut ledger) {
+                prop_assert!(s.covers_workload(job, 1.0), "job {} under-covered", job.id);
+                prop_assert!(s.respects_worker_cap(job), "job {} Eq.(4)", job.id);
+                prop_assert!(s.respects_gamma(job), "job {} Eq.(2)", job.id);
+                prop_assert!(s.respects_arrival(job), "job {} Eq.(7)", job.id);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (iii) Prices stay within [L, U^r] and are monotone in ρ.
+#[test]
+fn prop_prices_bounded_monotone() {
+    check("prices", 0xFEED, 20, |rng| {
+        let h = rng.range_usize(2, 30);
+        let t = rng.range_usize(5, 40);
+        let cluster = paper_cluster(h);
+        let jobs = synthetic_jobs(&SynthConfig::paper(10, t, MIX_TRACE), rng);
+        let p = PricingParams::from_jobs(&jobs, &cluster, t);
+        for r in 0..NUM_RESOURCES {
+            let cap = 32.0;
+            let mut prev = 0.0;
+            for k in 0..=16 {
+                let rho = cap * k as f64 / 16.0;
+                let price = p.price(r, rho, cap);
+                prop_assert!(price >= p.l * (1.0 - 1e-12), "price below L");
+                prop_assert!(price <= p.u[r] * (1.0 + 1e-12), "price above U^r");
+                prop_assert!(price >= prev, "price not monotone");
+                prev = price;
+            }
+        }
+        prop_assert!(p.epsilon() >= 1.0, "epsilon < 1");
+        Ok(())
+    });
+}
+
+/// (iv) Randomized rounding preserves expectation to within CLT noise.
+#[test]
+fn prop_rounding_unbiased() {
+    check("rounding", 0xABCD, 10, |rng| {
+        let x = rng.range_f64(0.0, 20.0);
+        let n = 40_000;
+        let mut sum = 0u64;
+        for _ in 0..n {
+            sum += round_coord(rng, x);
+        }
+        let mean = sum as f64 / n as f64;
+        // sd of the fractional Bernoulli is <= 0.5 => 5 sigma ~ 0.0125
+        prop_assert!((mean - x).abs() < 0.02, "E[round {x}] = {mean}");
+        Ok(())
+    });
+}
+
+/// (v) Simplex optimality: on random 2-var LPs the simplex matches a fine
+/// grid search over the feasible region.
+#[test]
+fn prop_simplex_matches_grid() {
+    check("simplex-grid", 0x5EED, 25, |rng| {
+        let c = [rng.range_f64(0.1, 3.0), rng.range_f64(0.1, 3.0)];
+        let a = [rng.range_f64(0.2, 2.0), rng.range_f64(0.2, 2.0)];
+        let bnd = rng.range_f64(2.0, 12.0);
+        let cap0 = rng.range_f64(4.0, 20.0);
+        let cap1 = rng.range_f64(4.0, 20.0);
+        let mut p = LpProblem::new(2);
+        p.set_objective(c.to_vec());
+        p.add_row(a.to_vec(), Cmp::Ge, bnd); // cover
+        p.add_row(vec![1.0, 0.0], Cmp::Le, cap0);
+        p.add_row(vec![0.0, 1.0], Cmp::Le, cap1);
+        let outcome = solve(&p);
+        // grid search
+        let mut best = f64::INFINITY;
+        let steps = 400;
+        for i in 0..=steps {
+            for j in 0..=steps {
+                let x = cap0 * i as f64 / steps as f64;
+                let y = cap1 * j as f64 / steps as f64;
+                if a[0] * x + a[1] * y >= bnd - 1e-9 {
+                    best = best.min(c[0] * x + c[1] * y);
+                }
+            }
+        }
+        match outcome.optimal() {
+            Some(s) => {
+                prop_assert!(
+                    s.objective <= best + 1e-6,
+                    "simplex {} worse than grid {best}",
+                    s.objective
+                );
+                prop_assert!(p.is_feasible(&s.x, 1e-7), "simplex solution infeasible");
+            }
+            None => {
+                prop_assert!(best.is_infinite(), "simplex said infeasible, grid found {best}");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (vi) OASiS (separated) does not outperform PD-ORS *in aggregate* over
+/// many workloads (the co-location advantage, Figs. 8/12–17). Individual
+/// instances can go either way — admission is online and randomized — so
+/// the property sums utilities across all cases.
+#[test]
+fn prop_colocated_at_least_separated_aggregate() {
+    let mut co_total = 0.0;
+    let mut sep_total = 0.0;
+    check("coloc-dominates", 0xDADA, 8, |rng| {
+        let h = rng.range_usize(6, 20) & !1; // even
+        let t = 20;
+        let cluster = paper_cluster(h);
+        let jobs = synthetic_jobs(&SynthConfig::paper(15, t, MIX_DEFAULT), rng);
+        let seed = rng.next_u64();
+        let mut co = PdOrs::new(PdOrsConfig { seed, ..Default::default() }, &jobs, &cluster, t);
+        let mut sep = PdOrs::new(
+            PdOrsConfig { placement: Placement::Separated, seed, ..Default::default() },
+            &jobs,
+            &cluster,
+            t,
+        );
+        let mut l1 = AllocLedger::new(&cluster, t);
+        let mut l2 = AllocLedger::new(&cluster, t);
+        for job in &jobs {
+            co.on_arrival(job, &mut l1);
+            sep.on_arrival(job, &mut l2);
+        }
+        co_total += co.total_utility();
+        sep_total += sep.total_utility();
+        Ok(())
+    });
+    assert!(
+        co_total >= sep_total * 0.9,
+        "co-location lost in aggregate: {co_total:.2} vs {sep_total:.2}"
+    );
+}
+
+/// (vii) The allocation ledger's commit/release are exact inverses.
+#[test]
+fn prop_ledger_commit_release_inverse() {
+    check("ledger-inverse", 0xF00D, 15, |rng| {
+        let h = rng.range_usize(2, 10);
+        let t = rng.range_usize(5, 15);
+        let cluster = paper_cluster(h);
+        let jobs = synthetic_jobs(&SynthConfig::paper(5, t, MIX_DEFAULT), rng);
+        let cfg = PdOrsConfig { seed: rng.next_u64(), ..Default::default() };
+        let mut sched = PdOrs::new(cfg, &jobs, &cluster, t);
+        let mut ledger = AllocLedger::new(&cluster, t);
+        let baseline: Vec<Vec<f64>> = (0..t)
+            .map(|tt| (0..h).map(|hh| ledger.used(tt, hh).sum()).collect())
+            .collect();
+        for job in &jobs {
+            if let Some(s) = sched.plan(job, &ledger) {
+                ledger.commit(job, &s.schedule);
+                ledger.release(job, &s.schedule);
+            }
+        }
+        for tt in 0..t {
+            for hh in 0..h {
+                let now = ledger.used(tt, hh).sum();
+                prop_assert!(
+                    (now - baseline[tt][hh]).abs() < 1e-9,
+                    "ledger drift at t={tt} h={hh}: {now}"
+                );
+            }
+        }
+        Ok(())
+    });
+}

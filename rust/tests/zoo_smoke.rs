@@ -1,0 +1,115 @@
+//! Integration: the full scheduler zoo on shared workloads — the
+//! comparative claims behind Figs. 6–9 at smoke scale.
+
+use dmlrs::cluster::AllocLedger;
+use dmlrs::experiments::SchedulerKind;
+use dmlrs::jobs::Schedule;
+use dmlrs::baselines::offline_optimum;
+use dmlrs::sched::{PdOrs, PdOrsConfig};
+use dmlrs::sim::metrics::median_training_time;
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::paper_cluster;
+use dmlrs::workload::{google_trace_jobs, synthetic_jobs, SynthConfig, MIX_DEFAULT, MIX_TRACE};
+
+#[test]
+fn all_schedulers_produce_valid_results() {
+    let cluster = paper_cluster(20);
+    let mut rng = Rng::new(1);
+    let jobs = synthetic_jobs(&SynthConfig::paper(25, 20, MIX_DEFAULT), &mut rng);
+    for kind in SchedulerKind::ALL {
+        let res = kind.run(&jobs, &cluster, 20, 7);
+        assert_eq!(res.outcomes.len(), jobs.len(), "{}", res.scheduler);
+        assert!(res.total_utility >= 0.0, "{}", res.scheduler);
+        assert!(res.completed <= res.admitted, "{}", res.scheduler);
+        for o in &res.outcomes {
+            assert!(o.training_time <= 20.0);
+            if o.completed {
+                assert!(o.admitted);
+                assert!(o.completion.is_some());
+            } else {
+                assert_eq!(o.utility, 0.0, "{} uncompleted job got utility", res.scheduler);
+            }
+        }
+    }
+}
+
+#[test]
+fn pdors_wins_on_average() {
+    // Fig. 6/7 headline: PD-ORS beats every baseline in total utility,
+    // averaged over a few seeds.
+    let mut totals = std::collections::HashMap::new();
+    for seed in 0..3u64 {
+        let cluster = paper_cluster(30);
+        let mut rng = Rng::new(100 + seed);
+        let jobs = synthetic_jobs(&SynthConfig::paper(30, 20, MIX_DEFAULT), &mut rng);
+        for kind in SchedulerKind::ALL {
+            let res = kind.run(&jobs, &cluster, 20, seed);
+            *totals.entry(kind.name()).or_insert(0.0) += res.total_utility;
+        }
+    }
+    let pdors = totals["PD-ORS"];
+    for (name, total) in &totals {
+        if *name != "PD-ORS" {
+            assert!(
+                pdors >= *total,
+                "PD-ORS ({pdors:.1}) lost to {name} ({total:.1}): {totals:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pdors_median_training_time_not_worst() {
+    // Fig. 9: PD-ORS should have the (near-)smallest median training time.
+    let cluster = paper_cluster(20);
+    let mut rng = Rng::new(9);
+    let jobs = google_trace_jobs(40, 40, MIX_TRACE, &mut rng);
+    let mut medians = Vec::new();
+    for kind in SchedulerKind::ALL {
+        let res = kind.run(&jobs, &cluster, 40, 3);
+        medians.push((kind.name(), median_training_time(&res)));
+    }
+    let pdors = medians.iter().find(|(n, _)| *n == "PD-ORS").unwrap().1;
+    let worst = medians.iter().map(|(_, m)| *m).fold(0.0, f64::max);
+    assert!(
+        pdors <= worst,
+        "PD-ORS median {pdors} is the worst: {medians:?}"
+    );
+}
+
+#[test]
+fn offline_optimum_dominates_online() {
+    let t = 10;
+    let cluster = paper_cluster(4);
+    // small instances (the Fig. 10 regime)
+    let mut rng = Rng::new(77);
+    let mut cfg = SynthConfig::paper(6, t, MIX_DEFAULT);
+    cfg.samples = (2_000.0, 30_000.0);
+    cfg.epochs = (10, 40);
+    cfg.batch = (10, 60);
+    let jobs = synthetic_jobs(&cfg, &mut rng);
+    let mut pdors = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, t);
+    let mut ledger = AllocLedger::new(&cluster, t);
+    let mut choices: Vec<(usize, f64, Schedule)> = Vec::new();
+    let mut total = 0.0;
+    for (i, job) in jobs.iter().enumerate() {
+        if let Some(s) = pdors.on_arrival(job, &mut ledger) {
+            let u = job.utility_at(s.completion_time().unwrap());
+            total += u;
+            choices.push((i, u, s));
+        }
+    }
+    let opt = offline_optimum(&jobs, &cluster, t, &choices, 0);
+    assert!(opt + 1e-6 >= total, "OPT {opt} < PD-ORS {total}");
+}
+
+#[test]
+fn trace_workload_runs_all_schedulers() {
+    let cluster = paper_cluster(15);
+    let mut rng = Rng::new(4);
+    let jobs = google_trace_jobs(30, 40, MIX_TRACE, &mut rng);
+    for kind in SchedulerKind::ALL {
+        let res = kind.run(&jobs, &cluster, 40, 0);
+        assert_eq!(res.outcomes.len(), 30, "{}", res.scheduler);
+    }
+}
