@@ -21,7 +21,7 @@ use dmlrs::util::{Rng, Timer};
 use dmlrs::workload::synthetic::paper_cluster;
 use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dmlrs::util::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let size = args.first().map(|s| s.as_str()).unwrap_or("small").to_string();
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);

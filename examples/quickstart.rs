@@ -1,13 +1,13 @@
-//! Quickstart: schedule a small workload with PD-ORS and inspect the
-//! decisions.
+//! Quickstart: resolve a scheduler from the registry, run it through the
+//! event-driven engine, and inspect the decisions via observers.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use dmlrs::cluster::AllocLedger;
 use dmlrs::jobs::speed::{per_worker_rate, Locality};
-use dmlrs::sched::{PdOrs, PdOrsConfig};
+use dmlrs::sched::registry::{SchedulerRegistry, SchedulerSpec};
+use dmlrs::sim::{SimEngine, StreamingMetrics, TraceObserver};
 use dmlrs::util::Rng;
 use dmlrs::workload::synthetic::paper_cluster;
 use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
@@ -20,56 +20,70 @@ fn main() {
     let mut rng = Rng::new(21);
     let jobs = synthetic_jobs(&SynthConfig::paper(12, horizon, MIX_DEFAULT), &mut rng);
 
-    // PD-ORS estimates its price constants from the job population.
-    let mut sched = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, horizon);
-    let mut ledger = AllocLedger::new(&cluster, horizon);
+    // Schedulers are registry entries resolved by name — swap "pd-ors"
+    // for "oasis" / "fifo" / "drf" / "dorm" (or anything you register).
+    let registry = SchedulerRegistry::builtin();
+    let spec = SchedulerSpec::new("pd-ors").with_seed(0);
+    let mut sched = registry
+        .build(&spec, &jobs, &cluster, horizon)
+        .expect("pd-ors is a built-in scheduler");
 
-    println!("== PD-ORS quickstart: 24 machines, 12 jobs, T = 20 ==\n");
+    println!("== quickstart: 24 machines, 12 jobs, T = 20 ==");
     println!(
-        "pricing: L = {:.3e}, epsilon = {:.2}",
-        sched.pricing().l,
-        sched.pricing().epsilon()
+        "scheduler: {} ({})\n",
+        sched.name(),
+        registry.description("pd-ors").unwrap()
     );
-
     for job in &jobs {
         println!(
-            "\njob {:2}  arrives t={:2}  E*K = {:.1e} samples  F = {:3}  gamma = {}",
+            "job {:2}  arrives t={:2}  E*K = {:.1e} samples  F = {:3}  gamma = {}  \
+             rate/worker int {:.0} / ext {:.0}",
             job.id,
             job.arrival,
             job.total_workload(),
             job.batch,
-            job.gamma
-        );
-        println!(
-            "        rate/worker: internal {:.0} vs external {:.0} samples/slot",
+            job.gamma,
             per_worker_rate(job, Locality::Internal),
             per_worker_rate(job, Locality::External)
         );
-        match sched.on_arrival(job, &mut ledger) {
-            Some(s) => {
-                let done = s.completion_time().unwrap();
-                println!(
-                    "  ADMITTED: {} slots, completes t={done}, utility {:.2}",
-                    s.slots.len(),
-                    job.utility_at(done)
-                );
-                for slot in s.slots.iter().take(3) {
-                    println!("    t={:2} placements {:?}", slot.t, slot.placements);
-                }
-                if s.slots.len() > 3 {
-                    println!("    ... {} more slots", s.slots.len() - 3);
-                }
-            }
-            None => println!("  rejected (infeasible within horizon or payoff <= 0)"),
+    }
+
+    // The engine emits typed events (Arrival, Admitted/Rejected, Granted,
+    // Completed, ...) to any observer; result aggregation itself is one.
+    let mut trace = TraceObserver::new();
+    let mut metrics = StreamingMetrics::new();
+    let result = SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(&cluster)
+        .horizon(horizon)
+        .observer(&mut trace)
+        .observer(&mut metrics)
+        .run(sched.as_mut());
+
+    println!("\n-- event trace --");
+    for line in trace.lines() {
+        // slot-start lines are noisy; show the decisions
+        if !line.contains("slot start") {
+            println!("{line}");
         }
     }
 
-    let admitted = sched.log.iter().filter(|a| a.admitted).count();
+    println!("\n-- outcomes --");
+    for o in &result.outcomes {
+        println!(
+            "job {:2}  admitted={} completed={} completion={:?} utility={:.2}",
+            o.job_id, o.admitted as u8, o.completed as u8, o.completion, o.utility
+        );
+    }
     println!(
-        "\n== total: {}/{} admitted, utility {:.2} ==",
-        admitted,
+        "\n== total: {}/{} admitted, {} completed, utility {:.2} \
+         (streamed: {} arrivals, {} grants) ==",
+        result.admitted,
         jobs.len(),
-        sched.total_utility()
+        result.completed,
+        result.total_utility,
+        metrics.arrivals,
+        metrics.grants
     );
-    assert!(ledger.within_capacity(1e-6), "capacity invariant violated");
+    assert_eq!(metrics.admitted, result.admitted, "observer/aggregate agreement");
 }

@@ -1,12 +1,14 @@
 //! Trace replay: the Google-trace-style workload through the full
-//! scheduler zoo (the Fig. 12/13 scenario as a single run).
+//! scheduler zoo (the Fig. 12/13 scenario as a single run), with every
+//! policy resolved by name from the registry.
 //!
 //! ```bash
 //! cargo run --release --example trace_replay -- [jobs] [machines] [horizon]
 //! ```
 
-use dmlrs::experiments::SchedulerKind;
+use dmlrs::sched::registry::{SchedulerRegistry, ZOO};
 use dmlrs::sim::metrics::median_training_time;
+use dmlrs::sim::SimEngine;
 use dmlrs::util::Rng;
 use dmlrs::workload::synthetic::paper_cluster;
 use dmlrs::workload::{google_trace_jobs, MIX_TRACE};
@@ -33,10 +35,17 @@ fn main() {
         "\n{:<8} {:>14} {:>9} {:>10} {:>13}",
         "sched", "total_utility", "admitted", "completed", "median_time"
     );
-    let mut best = ("", f64::NEG_INFINITY);
-    let mut results = Vec::new();
-    for kind in SchedulerKind::ALL {
-        let res = kind.run(&jobs, &cluster, horizon, 0);
+    let registry = SchedulerRegistry::builtin();
+    let mut best = (String::new(), f64::NEG_INFINITY);
+    for key in ZOO {
+        let mut sched = registry
+            .build_named(key, 0, &jobs, &cluster, horizon)
+            .expect("built-in scheduler");
+        let res = SimEngine::builder()
+            .jobs(&jobs)
+            .cluster(&cluster)
+            .horizon(horizon)
+            .run(sched.as_mut());
         println!(
             "{:<8} {:>14.2} {:>9} {:>10} {:>13.1}",
             res.scheduler,
@@ -46,9 +55,8 @@ fn main() {
             median_training_time(&res)
         );
         if res.total_utility > best.1 {
-            best = (kind.name(), res.total_utility);
+            best = (res.scheduler.clone(), res.total_utility);
         }
-        results.push(res);
     }
     println!("\nwinner: {} ({:.2})", best.0, best.1);
 }

@@ -18,7 +18,7 @@ fn report(name: &str, samples: &[f64]) {
     );
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dmlrs::util::error::Result<()> {
     let size = std::env::var("DMLRS_SIZE").unwrap_or_else(|_| "tiny".into());
     println!("# PJRT runtime latency, model = {size}\n");
     let rt = XlaRuntime::cpu()?;

@@ -15,7 +15,8 @@
 use std::collections::HashMap;
 
 use crate::cluster::{AllocLedger, ResVec, NUM_RESOURCES};
-use crate::sim::{ActiveJob, SlotScheduler};
+use crate::jobs::Job;
+use crate::sim::{ActiveJob, ArrivalDecision, PlacementPolicy, Scheduler, SlotGrant};
 
 use super::placement::{place_round_robin, SlotCapacity};
 
@@ -39,17 +40,26 @@ impl Default for Dorm {
     }
 }
 
-impl SlotScheduler for Dorm {
+impl Scheduler for Dorm {
     fn name(&self) -> String {
         "Dorm".into()
     }
 
-    fn allocate(
+    fn placement_policy(&self) -> PlacementPolicy {
+        PlacementPolicy::RoundRobin
+    }
+
+    /// Slot-driven: every job joins the active queue at arrival.
+    fn on_arrival(&mut self, _job: &Job, _ledger: &mut AllocLedger) -> ArrivalDecision {
+        ArrivalDecision::Defer
+    }
+
+    fn on_slot(
         &mut self,
         t: usize,
         active: &[ActiveJob],
         ledger: &AllocLedger,
-    ) -> Vec<(usize, Vec<(usize, u64, u64)>)> {
+    ) -> Vec<SlotGrant> {
         let mut cap = SlotCapacity::snapshot(ledger, t);
         let n_active = active.len().max(1) as f64;
         let mut total_cap = ResVec::zero();
@@ -144,7 +154,7 @@ impl SlotScheduler for Dorm {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run_slot_sim;
+    use crate::sim::simulate;
     use crate::util::Rng;
     use crate::workload::synthetic::paper_cluster;
     use crate::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
@@ -161,7 +171,7 @@ mod tests {
         let mut dorm = Dorm::new();
         let ledger = AllocLedger::new(&cluster, 10);
         let active = vec![ActiveJob { job: jobs[0].clone(), remaining: 1e9 }];
-        let grants = dorm.allocate(0, &active, &ledger);
+        let grants = dorm.on_slot(0, &active, &ledger);
         let w: u64 = grants
             .iter()
             .flat_map(|(_, p)| p.iter().map(|&(_, w, _)| w))
@@ -174,7 +184,7 @@ mod tests {
         let cluster = paper_cluster(15);
         let mut rng = Rng::new(6);
         let jobs = synthetic_jobs(&SynthConfig::paper(12, 20, MIX_DEFAULT), &mut rng);
-        let res = run_slot_sim(&jobs, &cluster, 20, &mut Dorm::new());
+        let res = simulate(&jobs, &cluster, 20, &mut Dorm::new());
         assert!(res.admitted > 0);
     }
 }

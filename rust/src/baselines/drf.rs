@@ -7,7 +7,7 @@
 
 use crate::cluster::{AllocLedger, ResVec, NUM_RESOURCES};
 use crate::jobs::Job;
-use crate::sim::{ActiveJob, SlotScheduler};
+use crate::sim::{ActiveJob, ArrivalDecision, PlacementPolicy, Scheduler, SlotGrant};
 
 use super::placement::{place_round_robin, SlotCapacity};
 
@@ -39,17 +39,26 @@ fn dominant_share(job: &Job, w: u64, s: u64, total_cap: &ResVec) -> f64 {
     share
 }
 
-impl SlotScheduler for Drf {
+impl Scheduler for Drf {
     fn name(&self) -> String {
         "DRF".into()
     }
 
-    fn allocate(
+    fn placement_policy(&self) -> PlacementPolicy {
+        PlacementPolicy::RoundRobin
+    }
+
+    /// Slot-driven: every job joins the active queue at arrival.
+    fn on_arrival(&mut self, _job: &Job, _ledger: &mut AllocLedger) -> ArrivalDecision {
+        ArrivalDecision::Defer
+    }
+
+    fn on_slot(
         &mut self,
         t: usize,
         active: &[ActiveJob],
         ledger: &AllocLedger,
-    ) -> Vec<(usize, Vec<(usize, u64, u64)>)> {
+    ) -> Vec<SlotGrant> {
         let mut cap = SlotCapacity::snapshot(ledger, t);
         let mut total_cap = ResVec::zero();
         for h in 0..ledger.num_machines() {
@@ -116,7 +125,7 @@ impl SlotScheduler for Drf {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run_slot_sim;
+    use crate::sim::simulate;
     use crate::util::Rng;
     use crate::workload::synthetic::paper_cluster;
     use crate::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
@@ -135,7 +144,7 @@ mod tests {
         let cluster = paper_cluster(10);
         let mut rng = Rng::new(3);
         let jobs = synthetic_jobs(&SynthConfig::paper(15, 20, MIX_DEFAULT), &mut rng);
-        let res = run_slot_sim(&jobs, &cluster, 20, &mut Drf::new());
+        let res = simulate(&jobs, &cluster, 20, &mut Drf::new());
         assert!(res.admitted >= 2, "DRF should start several jobs");
     }
 
@@ -146,6 +155,6 @@ mod tests {
         let cluster = paper_cluster(4);
         let mut rng = Rng::new(4);
         let jobs = synthetic_jobs(&SynthConfig::paper(6, 10, MIX_DEFAULT), &mut rng);
-        let _ = run_slot_sim(&jobs, &cluster, 10, &mut Drf::new());
+        let _ = simulate(&jobs, &cluster, 10, &mut Drf::new());
     }
 }

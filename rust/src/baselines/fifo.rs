@@ -9,7 +9,8 @@
 use std::collections::HashMap;
 
 use crate::cluster::AllocLedger;
-use crate::sim::{ActiveJob, SlotScheduler};
+use crate::jobs::Job;
+use crate::sim::{ActiveJob, ArrivalDecision, PlacementPolicy, Scheduler, SlotGrant};
 use crate::util::Rng;
 
 use super::placement::{place_round_robin, SlotCapacity};
@@ -34,17 +35,26 @@ impl Fifo {
     }
 }
 
-impl SlotScheduler for Fifo {
+impl Scheduler for Fifo {
     fn name(&self) -> String {
         "FIFO".into()
     }
 
-    fn allocate(
+    fn placement_policy(&self) -> PlacementPolicy {
+        PlacementPolicy::RoundRobin
+    }
+
+    /// Slot-driven: every job joins the active queue at arrival.
+    fn on_arrival(&mut self, _job: &Job, _ledger: &mut AllocLedger) -> ArrivalDecision {
+        ArrivalDecision::Defer
+    }
+
+    fn on_slot(
         &mut self,
         t: usize,
         active: &[ActiveJob],
         ledger: &AllocLedger,
-    ) -> Vec<(usize, Vec<(usize, u64, u64)>)> {
+    ) -> Vec<SlotGrant> {
         let mut cap = SlotCapacity::snapshot(ledger, t);
         // strict arrival order
         let mut order: Vec<usize> = (0..active.len()).collect();
@@ -68,7 +78,7 @@ impl SlotScheduler for Fifo {
 mod tests {
     use super::*;
     use crate::cluster::Cluster;
-    use crate::sim::run_slot_sim;
+    use crate::sim::simulate;
     use crate::workload::synthetic::{paper_cluster, paper_machine_capacity};
     use crate::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
 
@@ -95,7 +105,7 @@ mod tests {
         let cluster = paper_cluster(20);
         let mut rng = Rng::new(2);
         let jobs = synthetic_jobs(&SynthConfig::paper(20, 20, MIX_DEFAULT), &mut rng);
-        let res = run_slot_sim(&jobs, &cluster, 20, &mut Fifo::new(0));
+        let res = simulate(&jobs, &cluster, 20, &mut Fifo::new(0));
         assert!(res.admitted > 0, "FIFO should start some jobs");
         // capacity safety is asserted inside the engine (debug)
         let _ = Cluster::homogeneous(1, paper_machine_capacity());

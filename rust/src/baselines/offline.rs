@@ -139,7 +139,6 @@ pub fn offline_optimum(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::run_arrival_sim;
     use crate::sched::{PdOrs, PdOrsConfig};
     use crate::workload::synthetic::paper_cluster;
     use crate::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};

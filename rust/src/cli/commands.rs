@@ -1,45 +1,51 @@
 //! Subcommand implementations.
 
-use anyhow::{anyhow, Result};
-
 use crate::cluster::AllocLedger;
 use crate::config::Config;
+use crate::err;
 use crate::exec::{execute_schedule, ExecConfig};
 use crate::experiments::figures::{run_figure, ExpParams};
-use crate::experiments::SchedulerKind;
 use crate::jobs::Job;
 use crate::runtime::{ModelBundle, XlaRuntime};
+use crate::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
 use crate::sched::{PdOrs, PdOrsConfig};
 use crate::sim::metrics::median_training_time;
+use crate::sim::{simulate, SimEngine, TraceObserver};
+use crate::util::error::{Error, Result};
 use crate::util::Rng;
 use crate::workload::synthetic::paper_cluster;
 use crate::workload::{google_trace_jobs, synthetic_jobs, SynthConfig, MIX_DEFAULT, MIX_TRACE};
 
 use super::args::Args;
 
-/// Merge an optional `--config file` under the explicit flags.
-fn effective(args: &Args, key: &str, default: &str) -> String {
+/// Load the optional `--config file` once per command; an unreadable
+/// file is a hard error (not a silent fallback to defaults).
+fn load_config(args: &Args) -> Result<Option<Config>> {
+    match args.get("config") {
+        Some(path) => Ok(Some(Config::load(path).map_err(Error::from)?)),
+        None => Ok(None),
+    }
+}
+
+/// Merge the parsed config (if any) under the explicit flags.
+fn effective(args: &Args, cfg: Option<&Config>, key: &str, default: &str) -> String {
     if let Some(v) = args.get(key) {
         return v.to_string();
     }
-    if let Some(path) = args.get("config") {
-        if let Ok(cfg) = Config::load(path) {
-            if let Some(v) = cfg.get(key) {
-                return v.to_string();
-            }
-        }
+    if let Some(v) = cfg.and_then(|c| c.get(key)) {
+        return v.to_string();
     }
     default.to_string()
 }
 
-fn usize_of(args: &Args, key: &str, default: usize) -> usize {
-    effective(args, key, &default.to_string()).parse().unwrap_or(default)
+fn usize_of(args: &Args, cfg: Option<&Config>, key: &str, default: usize) -> usize {
+    effective(args, cfg, key, &default.to_string()).parse().unwrap_or(default)
 }
 
-fn workload(args: &Args) -> (Vec<Job>, usize, usize, u64) {
-    let machines = usize_of(args, "machines", 20);
-    let num_jobs = usize_of(args, "jobs", 30);
-    let horizon = usize_of(args, "horizon", 20);
+fn workload(args: &Args, cfg: Option<&Config>) -> (Vec<Job>, usize, usize, u64) {
+    let machines = usize_of(args, cfg, "machines", 20);
+    let num_jobs = usize_of(args, cfg, "jobs", 30);
+    let horizon = usize_of(args, cfg, "horizon", 20);
     let seed = args.u64_or("seed", 1);
     let mix = if args.bool("trace-mix") { MIX_TRACE } else { MIX_DEFAULT };
     let mut rng = Rng::new(seed);
@@ -51,23 +57,57 @@ fn workload(args: &Args) -> (Vec<Job>, usize, usize, u64) {
     (jobs, machines, horizon, seed)
 }
 
-fn scheduler_kind(name: &str) -> Result<SchedulerKind> {
-    Ok(match name.to_ascii_lowercase().as_str() {
-        "pd-ors" | "pdors" => SchedulerKind::PdOrs,
-        "oasis" => SchedulerKind::Oasis,
-        "fifo" => SchedulerKind::Fifo,
-        "drf" => SchedulerKind::Drf,
-        "dorm" => SchedulerKind::Dorm,
-        other => return Err(anyhow!("unknown scheduler {other:?}")),
-    })
+/// Resolve the scheduler spec: `[scheduler]` config section overridden
+/// by the `--scheduler` flag. Seed precedence: explicit `--seed` flag >
+/// `scheduler.seed` config key > the workload default.
+fn scheduler_spec(args: &Args, cfg: Option<&Config>, seed: u64) -> SchedulerSpec {
+    let mut spec = SchedulerSpec::new("pd-ors");
+    let mut config_has_seed = false;
+    if let Some(c) = cfg {
+        config_has_seed = c.get("scheduler.seed").is_some();
+        spec = SchedulerSpec::from_config(c);
+        // legacy flat key (`scheduler = fifo`, pre-[scheduler]-section)
+        if c.get("scheduler.name").is_none() {
+            if let Some(name) = c.get("scheduler") {
+                spec.name = name.trim().to_ascii_lowercase();
+            }
+        }
+    }
+    if let Some(name) = args.get("scheduler") {
+        spec.name = name.trim().to_ascii_lowercase();
+    }
+    if args.get("seed").is_some() || !config_has_seed {
+        spec = spec.with_seed(seed);
+    }
+    spec
 }
 
 pub fn cmd_schedule(args: &Args) -> Result<()> {
-    let (jobs, machines, horizon, seed) = workload(args);
-    let kind = scheduler_kind(&effective(args, "scheduler", "pd-ors"))?;
+    let cfg = load_config(args)?;
+    let (jobs, machines, horizon, seed) = workload(args, cfg.as_ref());
     let cluster = paper_cluster(machines);
-    let res = kind.run(&jobs, &cluster, horizon, seed);
-    println!("scheduler={} machines={machines} jobs={} horizon={horizon}", res.scheduler, jobs.len());
+    let reg = SchedulerRegistry::builtin();
+    let spec = scheduler_spec(args, cfg.as_ref(), seed);
+    let mut sched = reg.build(&spec, &jobs, &cluster, horizon)?;
+
+    let mut trace = TraceObserver::new();
+    let want_events = args.bool("events");
+    let mut builder =
+        SimEngine::builder().jobs(&jobs).cluster(&cluster).horizon(horizon);
+    if want_events {
+        builder = builder.observer(&mut trace);
+    }
+    let res = builder.run(sched.as_mut());
+    for line in trace.lines() {
+        println!("{line}");
+    }
+
+    println!(
+        "scheduler={} placement={:?} machines={machines} jobs={} horizon={horizon}",
+        res.scheduler,
+        sched.placement_policy(),
+        jobs.len()
+    );
     for o in &res.outcomes {
         println!(
             "  job {:3}  admitted={} completed={} completion={:?} utility={:.2}",
@@ -85,12 +125,18 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
 }
 
 pub fn cmd_compare(args: &Args) -> Result<()> {
-    let (jobs, machines, horizon, seed) = workload(args);
+    let cfg = load_config(args)?;
+    let (jobs, machines, horizon, seed) = workload(args, cfg.as_ref());
     let cluster = paper_cluster(machines);
+    let reg = SchedulerRegistry::builtin();
     println!("machines={machines} jobs={} horizon={horizon} seed={seed}", jobs.len());
-    println!("{:<8} {:>14} {:>9} {:>10} {:>12}", "sched", "total_utility", "admitted", "completed", "median_time");
-    for kind in SchedulerKind::ALL {
-        let res = kind.run(&jobs, &cluster, horizon, seed);
+    println!(
+        "{:<8} {:>14} {:>9} {:>10} {:>12}",
+        "sched", "total_utility", "admitted", "completed", "median_time"
+    );
+    for key in ZOO {
+        let mut sched = reg.build_named(key, seed, &jobs, &cluster, horizon)?;
+        let res = simulate(&jobs, &cluster, horizon, sched.as_mut());
         println!(
             "{:<8} {:>14.2} {:>9} {:>10} {:>12.1}",
             res.scheduler,
@@ -109,7 +155,8 @@ pub fn cmd_experiment(args: &Args) -> Result<()> {
         seeds: args.usize_or("seeds", if args.bool("quick") { 1 } else { 3 }),
         quick: args.bool("quick"),
     };
-    let table = run_figure(fig, &p).ok_or_else(|| anyhow!("unknown figure {fig} (valid: 5..=17)"))?;
+    let table =
+        run_figure(fig, &p).ok_or_else(|| err!("unknown figure {fig} (valid: 5..=17)"))?;
     print!("{table}");
     if let Some(out) = args.get("out") {
         table.save_tsv(out)?;
@@ -160,7 +207,7 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     let mut ledger = AllocLedger::new(&cluster, horizon);
     let schedule = pdors
         .on_arrival(&jobs[0], &mut ledger)
-        .ok_or_else(|| anyhow!("PD-ORS rejected the training job"))?;
+        .ok_or_else(|| err!("PD-ORS rejected the training job"))?;
     eprintln!(
         "scheduled over {} slots, completion t={}",
         schedule.slots.len(),
@@ -188,7 +235,8 @@ pub fn cmd_train(args: &Args) -> Result<()> {
 }
 
 pub fn cmd_bounds(args: &Args) -> Result<()> {
-    let (jobs, machines, horizon, _) = workload(args);
+    let cfg = load_config(args)?;
+    let (jobs, machines, horizon, _) = workload(args, cfg.as_ref());
     let cluster = paper_cluster(machines);
     let pricing = crate::sched::PricingParams::from_jobs(&jobs, &cluster, horizon);
     println!("mu      = {:.4e}", pricing.mu);

@@ -69,8 +69,10 @@ fn print_usage() {
 USAGE: dmlrs <command> [flags]
 
 COMMANDS:
-  schedule    run one scheduler   --scheduler pd-ors|oasis|fifo|drf|dorm
+  schedule    run one scheduler   --scheduler <name>  (any registry name:
+              pd-ors|oasis|fifo|drf|dorm; see sched/registry.rs)
               --machines N --jobs N --horizon N --seed N [--trace]
+              [--events]  print the engine's event trace
   compare     run the full zoo    (same flags)
   experiment  regenerate a figure --fig 5..17 [--quick] [--seeds N]
               [--out results/figNN.tsv]
@@ -79,7 +81,9 @@ COMMANDS:
   bounds      pricing constants   --machines N --jobs N --horizon N
   help        this text
 
-Config file: --config path.conf (keys mirror the flags, see config/mod.rs)"
+Config file: --config path.conf (keys mirror the flags; a [scheduler]
+section feeds the typed SchedulerSpec — see config/mod.rs and
+sched/registry.rs)"
     );
 }
 

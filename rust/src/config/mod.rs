@@ -13,6 +13,10 @@
 //! dp_units = 120
 //! delta = 0.25
 //! ```
+//!
+//! Inline comments require a space before `#` (so values like `exp#1`
+//! survive); quoted values (`"a # b"`) may contain `#` and preserve
+//! surrounding spaces.
 
 use std::collections::BTreeMap;
 
@@ -23,20 +27,74 @@ pub struct Config {
     values: BTreeMap<String, String>,
 }
 
+/// Strip a trailing comment: `#` starts a comment only at the beginning
+/// of the line or after whitespace, and never inside a quoted string —
+/// so values like `tag = exp#1` or `note = "a # inside"` survive intact.
+/// A quote opens only at a word boundary (after whitespace or `=`), so
+/// apostrophes inside words (`don't`) stay literal.
+fn strip_comment(raw: &str) -> &str {
+    let mut in_quote: Option<char> = None;
+    let mut prev: Option<char> = None;
+    for (i, c) in raw.char_indices() {
+        match in_quote {
+            Some(q) => {
+                if c == q {
+                    in_quote = None;
+                }
+            }
+            None => match c {
+                '"' | '\''
+                    if prev.map_or(true, |p| p.is_whitespace() || p == '=') =>
+                {
+                    in_quote = Some(c)
+                }
+                '#' if prev.map_or(true, |p| p.is_whitespace()) => return &raw[..i],
+                _ => {}
+            },
+        }
+        prev = Some(c);
+    }
+    raw
+}
+
+/// Remove one level of matching single or double quotes around a value
+/// (quoting preserves leading/trailing spaces and `#`). Only a single
+/// quoted span covering the whole value is stripped — `"a" "b"` stays
+/// literal rather than losing its outer quotes.
+fn unquote(v: &str) -> &str {
+    let v = v.trim();
+    let b = v.as_bytes();
+    if v.len() >= 2 && (b[0] == b'"' || b[0] == b'\'') && b[v.len() - 1] == b[0] {
+        let inner = &v[1..v.len() - 1];
+        if !inner.contains(b[0] as char) {
+            return inner;
+        }
+    }
+    v
+}
+
 impl Config {
     pub fn parse(text: &str) -> Result<Config, String> {
         let mut values = BTreeMap::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
             if line.starts_with('[') {
-                if !line.ends_with(']') {
+                // section headers tolerate glued comments: `[x]# note`
+                let Some(end) = line.find(']') else {
                     return Err(format!("line {}: unclosed section", lineno + 1));
+                };
+                let rest = line[end + 1..].trim_start();
+                if !(rest.is_empty() || rest.starts_with('#')) {
+                    return Err(format!(
+                        "line {}: unexpected text after section header",
+                        lineno + 1
+                    ));
                 }
-                section = line[1..line.len() - 1].trim().to_string();
+                section = line[1..end].trim().to_string();
                 continue;
             }
             let Some((k, v)) = line.split_once('=') else {
@@ -47,7 +105,7 @@ impl Config {
             } else {
                 format!("{section}.{}", k.trim())
             };
-            values.insert(key, v.trim().to_string());
+            values.insert(key, unquote(v).to_string());
         }
         Ok(Config { values })
     }
@@ -129,5 +187,58 @@ mod tests {
     fn errors_on_bad_lines() {
         assert!(Config::parse("[unclosed\n").is_err());
         assert!(Config::parse("no equals here\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_value_is_not_a_comment() {
+        // the old parser truncated at the first `#` anywhere in the line
+        let c = Config::parse("tag = exp#1\nrun = a#b#c # real comment\n").unwrap();
+        assert_eq!(c.get("tag"), Some("exp#1"));
+        assert_eq!(c.get("run"), Some("a#b#c"));
+    }
+
+    #[test]
+    fn quoted_values_preserve_hashes_and_spaces() {
+        let c = Config::parse(
+            "a = \"x # not a comment\" # trailing\nb = ' padded '\nc = \"\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("a"), Some("x # not a comment"));
+        assert_eq!(c.get("b"), Some(" padded "));
+        assert_eq!(c.get("c"), Some(""));
+    }
+
+    #[test]
+    fn full_line_and_indented_comments_still_work() {
+        let c = Config::parse("# top\n  # indented\nk = v # tail\n").unwrap();
+        assert_eq!(c.get("k"), Some("v"));
+        assert_eq!(c.keys().count(), 1);
+    }
+
+    #[test]
+    fn mismatched_or_single_quote_is_literal() {
+        let c = Config::parse("a = \"open\nb = 'x\"\n").unwrap();
+        assert_eq!(c.get("a"), Some("\"open"));
+        assert_eq!(c.get("b"), Some("'x\""));
+    }
+
+    #[test]
+    fn apostrophe_inside_word_does_not_open_a_quote() {
+        let c = Config::parse("note = don't panic # tune later\n").unwrap();
+        assert_eq!(c.get("note"), Some("don't panic"));
+    }
+
+    #[test]
+    fn multiple_quoted_spans_stay_literal() {
+        let c = Config::parse("args = \"a\" \"b\" # c\npair = 'x' and 'y'\n").unwrap();
+        assert_eq!(c.get("args"), Some("\"a\" \"b\""));
+        assert_eq!(c.get("pair"), Some("'x' and 'y'"));
+    }
+
+    #[test]
+    fn section_header_tolerates_glued_comment() {
+        let c = Config::parse("[scheduler]# pick policy\nname = fifo\n").unwrap();
+        assert_eq!(c.get("scheduler.name"), Some("fifo"));
+        assert!(Config::parse("[x] junk\n").is_err());
     }
 }

@@ -17,9 +17,8 @@
 //! is captured by the simulated-time model, wall-clock is reported
 //! separately.
 
-use anyhow::Result;
-
 use crate::jobs::{Job, Locality, Schedule};
+use crate::util::error::Result;
 use crate::runtime::ModelBundle;
 use crate::util::Timer;
 

@@ -1,74 +1,10 @@
-//! Shared experiment plumbing: scheduler zoo, result tables.
+//! Shared experiment plumbing: result tables.
+//!
+//! (The scheduler zoo lives in [`crate::sched::registry`]; figure drivers
+//! resolve policies by name there — the former `SchedulerKind` enum is
+//! retired.)
 
-use crate::baselines::{Dorm, Drf, Fifo};
-use crate::cluster::Cluster;
-use crate::jobs::Job;
-use crate::sched::{PdOrs, PdOrsConfig, Placement};
-use crate::sim::{run_arrival_sim, run_slot_sim, SimResult};
 use crate::util::json::{self, Json};
-
-/// The scheduler zoo of §5.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SchedulerKind {
-    PdOrs,
-    Oasis,
-    Fifo,
-    Drf,
-    Dorm,
-}
-
-impl SchedulerKind {
-    pub const ALL: [SchedulerKind; 5] = [
-        SchedulerKind::PdOrs,
-        SchedulerKind::Oasis,
-        SchedulerKind::Fifo,
-        SchedulerKind::Drf,
-        SchedulerKind::Dorm,
-    ];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            SchedulerKind::PdOrs => "PD-ORS",
-            SchedulerKind::Oasis => "OASiS",
-            SchedulerKind::Fifo => "FIFO",
-            SchedulerKind::Drf => "DRF",
-            SchedulerKind::Dorm => "Dorm",
-        }
-    }
-
-    /// Run this scheduler over a job set.
-    pub fn run(
-        &self,
-        jobs: &[Job],
-        cluster: &Cluster,
-        horizon: usize,
-        seed: u64,
-    ) -> SimResult {
-        match self {
-            SchedulerKind::PdOrs => {
-                let cfg = PdOrsConfig { seed, ..Default::default() };
-                let mut s = PdOrs::new(cfg, jobs, cluster, horizon);
-                run_arrival_sim(jobs, cluster, horizon, &mut s)
-            }
-            SchedulerKind::Oasis => {
-                let cfg = PdOrsConfig {
-                    placement: Placement::Separated,
-                    seed,
-                    ..Default::default()
-                };
-                let mut s = PdOrs::new(cfg, jobs, cluster, horizon);
-                run_arrival_sim(jobs, cluster, horizon, &mut s)
-            }
-            SchedulerKind::Fifo => {
-                run_slot_sim(jobs, cluster, horizon, &mut Fifo::new(seed))
-            }
-            SchedulerKind::Drf => run_slot_sim(jobs, cluster, horizon, &mut Drf::new()),
-            SchedulerKind::Dorm => {
-                run_slot_sim(jobs, cluster, horizon, &mut Dorm::new())
-            }
-        }
-    }
-}
 
 /// A figure's data: one x column and one y column per series.
 #[derive(Debug, Clone)]
@@ -176,11 +112,5 @@ mod tests {
         assert!(tsv.contains("20\t3.0000\t4.0000"));
         let j = t.to_json();
         assert!(j.get("rows").unwrap().as_arr().unwrap().len() == 2);
-    }
-
-    #[test]
-    fn scheduler_names() {
-        assert_eq!(SchedulerKind::PdOrs.name(), "PD-ORS");
-        assert_eq!(SchedulerKind::ALL.len(), 5);
     }
 }

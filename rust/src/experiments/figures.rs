@@ -7,16 +7,18 @@
 use crate::baselines::offline_optimum;
 use crate::cluster::AllocLedger;
 use crate::jobs::{Job, Schedule};
+use crate::sched::registry::{SchedulerRegistry, ZOO};
 use crate::sched::rounding::{feasibility_rhs, gdelta_packing};
 use crate::sched::theta::GdeltaMode;
 use crate::sched::{PdOrs, PdOrsConfig};
 use crate::sim::metrics::{median_training_time, utility_gain};
+use crate::sim::simulate;
 use crate::util::stats;
 use crate::util::Rng;
 use crate::workload::synthetic::paper_cluster;
 use crate::workload::{google_trace_jobs, synthetic_jobs, ClassMix, SynthConfig, MIX_DEFAULT, MIX_TRACE};
 
-use super::common::{SchedulerKind, Table};
+use super::common::Table;
 
 /// Sweep sizing knobs (paper defaults; `quick` for smoke tests).
 #[derive(Debug, Clone, Copy)]
@@ -52,16 +54,18 @@ fn jobs_for(
     }
 }
 
-/// Average total utility per scheduler over seeds.
+/// Average total utility per scheduler (registry keys) over seeds.
 fn utility_sweep(
     title: &str,
     x_label: &str,
     xs: &[usize],
-    schedulers: &[SchedulerKind],
+    schedulers: &[&str],
     p: &ExpParams,
     make: impl Fn(usize, u64) -> (Vec<Job>, usize, usize), // (jobs, H, T)
 ) -> Table {
-    let names: Vec<&str> = schedulers.iter().map(|s| s.name()).collect();
+    let reg = SchedulerRegistry::builtin();
+    let names: Vec<&str> =
+        schedulers.iter().map(|k| reg.display(k).expect("registered scheduler")).collect();
     let mut table = Table::new(title, x_label, &names);
     for &x in xs {
         let mut sums = vec![0.0; schedulers.len()];
@@ -69,7 +73,10 @@ fn utility_sweep(
             let (jobs, h, t) = make(x, seed);
             let cluster = paper_cluster(h);
             for (k, s) in schedulers.iter().enumerate() {
-                sums[k] += s.run(&jobs, &cluster, t, seed).total_utility;
+                let mut sched = reg
+                    .build_named(s, seed, &jobs, &cluster, t)
+                    .expect("registered scheduler");
+                sums[k] += simulate(&jobs, &cluster, t, sched.as_mut()).total_utility;
             }
         }
         table.push(x as f64, sums.iter().map(|v| v / p.seeds as f64).collect());
@@ -102,12 +109,7 @@ pub fn fig05(_p: &ExpParams) -> Table {
     table
 }
 
-const BASELINES4: [SchedulerKind; 4] = [
-    SchedulerKind::PdOrs,
-    SchedulerKind::Fifo,
-    SchedulerKind::Drf,
-    SchedulerKind::Dorm,
-];
+const BASELINES4: [&str; 4] = ["pd-ors", "fifo", "drf", "dorm"];
 
 /// Fig. 6 — total utility vs #machines (synthetic; I = 50, T = 20).
 pub fn fig06(p: &ExpParams) -> Table {
@@ -143,7 +145,7 @@ pub fn fig08(p: &ExpParams) -> Table {
         "Fig 8: PD-ORS vs OASiS (synthetic)",
         "jobs",
         &xs,
-        &[SchedulerKind::PdOrs, SchedulerKind::Oasis],
+        &["pd-ors", "oasis"],
         p,
         |i, seed| (jobs_for(false, i, 20, MIX_DEFAULT, 3000 + seed), 100, 20),
     )
@@ -152,15 +154,20 @@ pub fn fig08(p: &ExpParams) -> Table {
 /// Fig. 9 — median actual training time (T = 80, H = 30, I = 100).
 pub fn fig09(p: &ExpParams) -> Table {
     let (i, h, t) = if p.quick { (30, 15, 40) } else { (100, 30, 80) };
-    let names: Vec<&str> = SchedulerKind::ALL.iter().map(|s| s.name()).collect();
+    let reg = SchedulerRegistry::builtin();
+    let names: Vec<&str> =
+        ZOO.iter().map(|k| reg.display(k).expect("registered scheduler")).collect();
     let mut table =
         Table::new("Fig 9: median actual training time", "scheduler_idx", &names);
-    let mut ys = vec![0.0; SchedulerKind::ALL.len()];
+    let mut ys = vec![0.0; ZOO.len()];
     for seed in 0..p.seeds as u64 {
         let jobs = jobs_for(false, i, t, MIX_DEFAULT, 4000 + seed);
         let cluster = paper_cluster(h);
-        for (k, s) in SchedulerKind::ALL.iter().enumerate() {
-            ys[k] += median_training_time(&s.run(&jobs, &cluster, t, seed));
+        for (k, s) in ZOO.iter().enumerate() {
+            let mut sched = reg
+                .build_named(s, seed, &jobs, &cluster, t)
+                .expect("registered scheduler");
+            ys[k] += median_training_time(&simulate(&jobs, &cluster, t, sched.as_mut()));
         }
     }
     table.push(0.0, ys.iter().map(|v| v / p.seeds as f64).collect());
@@ -285,13 +292,11 @@ pub fn fig11(p: &ExpParams) -> Table {
 pub fn fig12(p: &ExpParams) -> Table {
     let xs: Vec<usize> = if p.quick { vec![10, 30] } else { vec![10, 20, 30, 40, 50] };
     let (i, t) = if p.quick { (30, 40) } else { (100, 80) };
-    let mut scheds = vec![SchedulerKind::PdOrs, SchedulerKind::Oasis];
-    scheds.extend([SchedulerKind::Fifo, SchedulerKind::Drf, SchedulerKind::Dorm]);
     utility_sweep(
         "Fig 12: total utility vs machines (Google trace)",
         "machines",
         &xs,
-        &scheds,
+        &ZOO,
         p,
         move |h, seed| (jobs_for(true, i, t, MIX_DEFAULT, 7000 + seed), h, t),
     )
@@ -301,13 +306,11 @@ pub fn fig12(p: &ExpParams) -> Table {
 pub fn fig13(p: &ExpParams) -> Table {
     let xs: Vec<usize> = if p.quick { vec![20, 60] } else { vec![20, 40, 60, 80, 100] };
     let t = if p.quick { 40 } else { 80 };
-    let mut scheds = vec![SchedulerKind::PdOrs, SchedulerKind::Oasis];
-    scheds.extend([SchedulerKind::Fifo, SchedulerKind::Drf, SchedulerKind::Dorm]);
     utility_sweep(
         "Fig 13: total utility vs jobs (Google trace)",
         "jobs",
         &xs,
-        &scheds,
+        &ZOO,
         p,
         move |i, seed| (jobs_for(true, i, t, MIX_DEFAULT, 8000 + seed), 30, t),
     )
@@ -324,6 +327,7 @@ fn gain_sweep(
     base_seed: u64,
     p: &ExpParams,
 ) -> Table {
+    let reg = SchedulerRegistry::builtin();
     let mut table = Table::new(title, x_label, &["gain_vs_oasis"]);
     let t = if p.quick { 40 } else { 80 };
     let fixed_i = if p.quick { 30 } else { 100 };
@@ -333,8 +337,12 @@ fn gain_sweep(
             let (i, h) = if vary_machines { (fixed_i, x) } else { (x, 30) };
             let jobs = jobs_for(true, i, t, mix, base_seed + seed);
             let cluster = paper_cluster(h);
-            let a = SchedulerKind::PdOrs.run(&jobs, &cluster, t, seed);
-            let b = SchedulerKind::Oasis.run(&jobs, &cluster, t, seed);
+            let mut pdors =
+                reg.build_named("pd-ors", seed, &jobs, &cluster, t).expect("registered");
+            let mut oasis =
+                reg.build_named("oasis", seed, &jobs, &cluster, t).expect("registered");
+            let a = simulate(&jobs, &cluster, t, pdors.as_mut());
+            let b = simulate(&jobs, &cluster, t, oasis.as_mut());
             gains.push(utility_gain(&a, &b));
         }
         table.push(x as f64, vec![stats::mean(&gains)]);

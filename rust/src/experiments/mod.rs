@@ -1,12 +1,13 @@
 //! Experiment drivers — one per evaluation figure of the paper (Figs 5–17).
 //!
 //! Every driver returns a [`Table`] whose columns mirror the paper's
-//! series so `EXPERIMENTS.md` can compare shapes directly. Drivers are
+//! series so `EXPERIMENTS.md` can compare shapes directly. Drivers
+//! resolve schedulers by name via [`crate::sched::registry`] and are
 //! invoked from the CLI (`dmlrs experiment --fig N`) and from the bench
 //! harness (`cargo bench`).
 
 pub mod common;
 pub mod figures;
 
-pub use common::{SchedulerKind, Table};
+pub use common::Table;
 pub use figures::*;

@@ -10,6 +10,8 @@
 //!   scheduler (Algorithms 1–4), including the exponential price function,
 //!   the per-job dynamic program, and the randomized-rounding
 //!   approximation for the per-slot mixed cover/packing integer program.
+//!   `sched::registry` maps scheduler names to constructors — the single
+//!   place a new policy is registered.
 //! * [`cluster`], [`jobs`], [`workload`] — the analytical model of §3:
 //!   machines with multi-type resource capacities, PS-architecture
 //!   training jobs with locality-dependent communication (Eq. (1)), and
@@ -17,7 +19,9 @@
 //! * [`lp`], [`ilp`] — from-scratch two-phase simplex and branch-and-bound
 //!   solvers (the offline-oracle / Gurobi substitute).
 //! * [`baselines`] — FIFO, DRF, Dorm, OASiS and the offline optimum.
-//! * [`sim`] — the time-slotted cluster simulator driving every figure.
+//! * [`sim`] — the event-driven cluster simulator driving every figure:
+//!   one `SimEngine` + the unified object-safe `Scheduler` trait, with
+//!   typed `SimEvent`s streamed to pluggable observers.
 //! * [`runtime`], [`exec`] — PJRT runtime loading the AOT-compiled JAX/
 //!   Pallas artifacts and a BSP parameter-server executor that *actually
 //!   trains* the scheduled jobs' transformer payloads.

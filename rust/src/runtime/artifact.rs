@@ -1,54 +1,11 @@
 //! Model artifacts: the compiled `init` / `grad` / `apply` / `train_step`
-//! / `eval` executables plus the metadata emitted by `python/compile/aot.py`.
+//! / `eval` executables (real PJRT path, `xla` feature).
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::util::json::Json;
+use crate::err;
+use crate::util::error::Result;
 
 use super::client::XlaRuntime;
-
-/// Parsed `lm_<size>.meta.json`.
-#[derive(Debug, Clone)]
-pub struct ModelMeta {
-    pub name: String,
-    pub num_params: usize,
-    pub vocab: usize,
-    pub seq_len: usize,
-    pub batch: usize,
-    pub lr: f64,
-    pub files: std::collections::BTreeMap<String, String>,
-}
-
-impl ModelMeta {
-    pub fn load(path: &str) -> Result<ModelMeta> {
-        let text = std::fs::read_to_string(path).with_context(|| path.to_string())?;
-        let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
-        let get_usize = |k: &str| -> Result<usize> {
-            v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("{path}: missing {k}"))
-        };
-        let mut files = std::collections::BTreeMap::new();
-        if let Some(Json::Obj(m)) = v.get("files") {
-            for (k, f) in m {
-                if let Some(s) = f.as_str() {
-                    files.insert(k.clone(), s.to_string());
-                }
-            }
-        }
-        Ok(ModelMeta {
-            name: v
-                .get("name")
-                .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("{path}: missing name"))?
-                .to_string(),
-            num_params: get_usize("num_params")?,
-            vocab: get_usize("vocab")?,
-            seq_len: get_usize("seq_len")?,
-            batch: get_usize("batch")?,
-            lr: v.get("lr").and_then(Json::as_f64).unwrap_or(0.05),
-            files,
-        })
-    }
-}
+use super::meta::ModelMeta;
 
 /// One compiled computation.
 pub struct Artifact {
@@ -66,11 +23,11 @@ impl Artifact {
         let result = self
             .exe
             .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
+            .map_err(|e| err!("executing {}: {e:?}", self.name))?;
         let out = result[0][0]
             .to_literal_sync()
-            .with_context(|| format!("fetching {} output", self.name))?;
-        out.to_tuple().map_err(|e| anyhow!("{}: {e:?}", self.name))
+            .map_err(|e| err!("fetching {} output: {e:?}", self.name))?;
+        out.to_tuple().map_err(|e| err!("{}: {e:?}", self.name))
     }
 
     /// Execute with device-resident buffers (no host copies of params);
@@ -79,7 +36,7 @@ impl Artifact {
         let mut result = self
             .exe
             .execute_b::<xla::PjRtBuffer>(inputs)
-            .with_context(|| format!("executing {} (buffers)", self.name))?;
+            .map_err(|e| err!("executing {} (buffers): {e:?}", self.name))?;
         Ok(result.swap_remove(0))
     }
 }
@@ -102,7 +59,7 @@ impl ModelBundle {
             meta.files
                 .get(k)
                 .map(|f| format!("{artifacts_dir}/{f}"))
-                .ok_or_else(|| anyhow!("meta missing file entry {k}"))
+                .ok_or_else(|| err!("meta missing file entry {k}"))
         };
         Ok(ModelBundle {
             init: Artifact::load(rt, "init", &file("init")?)?,
@@ -129,18 +86,21 @@ impl ModelBundle {
     ) -> Result<(xla::Literal, f32)> {
         let toks = self.tokens_literal(tokens)?;
         let mut out = self.train_step.run(&[params, toks])?;
-        let loss = out.pop().ok_or_else(|| anyhow!("missing loss output"))?;
-        let params = out.pop().ok_or_else(|| anyhow!("missing params output"))?;
-        Ok((params, loss.to_vec::<f32>()?[0]))
+        let loss = out.pop().ok_or_else(|| err!("missing loss output"))?;
+        let params = out.pop().ok_or_else(|| err!("missing params output"))?;
+        let loss = loss.to_vec::<f32>().map_err(|e| err!("loss fetch: {e:?}"))?[0];
+        Ok((params, loss))
     }
 
     /// Worker-side gradients: (params, tokens) -> (grads, loss).
     pub fn grad(&self, params: &xla::Literal, tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
         let toks = self.tokens_literal(tokens)?;
         let mut out = self.grad.run(&[params.clone(), toks])?;
-        let loss = out.pop().ok_or_else(|| anyhow!("missing loss output"))?;
-        let grads = out.pop().ok_or_else(|| anyhow!("missing grads output"))?;
-        Ok((grads.to_vec::<f32>()?, loss.to_vec::<f32>()?[0]))
+        let loss = out.pop().ok_or_else(|| err!("missing loss output"))?;
+        let grads = out.pop().ok_or_else(|| err!("missing grads output"))?;
+        let grads = grads.to_vec::<f32>().map_err(|e| err!("grad fetch: {e:?}"))?;
+        let loss = loss.to_vec::<f32>().map_err(|e| err!("loss fetch: {e:?}"))?[0];
+        Ok((grads, loss))
     }
 
     /// PS-side update: params - scale * grad_sum, through the Pallas kernel.
@@ -160,20 +120,16 @@ impl ModelBundle {
     pub fn eval_loss(&self, params: &xla::Literal, tokens: &[i32]) -> Result<f32> {
         let toks = self.tokens_literal(tokens)?;
         let out = self.eval.run(&[params.clone(), toks])?;
-        Ok(out[0].to_vec::<f32>()?[0])
+        out[0].to_vec::<f32>().map(|v| v[0]).map_err(|e| err!("eval fetch: {e:?}"))
     }
 
     fn tokens_literal(&self, tokens: &[i32]) -> Result<xla::Literal> {
         let expect = self.meta.batch * self.meta.seq_len;
         if tokens.len() != expect {
-            return Err(anyhow!(
-                "tokens len {} != batch*seq {}",
-                tokens.len(),
-                expect
-            ));
+            return Err(err!("tokens len {} != batch*seq {}", tokens.len(), expect));
         }
         xla::Literal::vec1(tokens)
             .reshape(&[self.meta.batch as i64, self.meta.seq_len as i64])
-            .map_err(|e| anyhow!("reshaping tokens: {e:?}"))
+            .map_err(|e| err!("reshaping tokens: {e:?}"))
     }
 }

@@ -1,6 +1,7 @@
-//! PJRT client wrapper.
+//! PJRT client wrapper (real path, `xla` feature).
 
-use anyhow::{Context, Result};
+use crate::err;
+use crate::util::error::Result;
 
 /// A process-wide PJRT CPU client. Compilation happens once per artifact;
 /// executions reuse device-resident buffers (`execute_b`).
@@ -10,7 +11,8 @@ pub struct XlaRuntime {
 
 impl XlaRuntime {
     pub fn cpu() -> Result<XlaRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| err!("creating PJRT CPU client: {e:?}"))?;
         Ok(XlaRuntime { client })
     }
 
@@ -25,10 +27,8 @@ impl XlaRuntime {
     /// Load + compile an HLO text file into an executable.
     pub fn compile_hlo_text(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
         let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
+            .map_err(|e| err!("parsing HLO text {path}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path}"))
+        self.client.compile(&comp).map_err(|e| err!("compiling {path}: {e:?}"))
     }
 }

@@ -1,0 +1,51 @@
+//! Model metadata emitted by `python/compile/aot.py` (`lm_<size>.meta.json`).
+//!
+//! Kept independent of the PJRT bindings so it is available with and
+//! without the `xla` feature.
+
+use crate::err;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Parsed `lm_<size>.meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub num_params: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub files: std::collections::BTreeMap<String, String>,
+}
+
+impl ModelMeta {
+    pub fn load(path: &str) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path).map_err(|e| err!("{path}: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| err!("{path}: {e}"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| err!("{path}: missing {k}"))
+        };
+        let mut files = std::collections::BTreeMap::new();
+        if let Some(Json::Obj(m)) = v.get("files") {
+            for (k, f) in m {
+                if let Some(s) = f.as_str() {
+                    files.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(ModelMeta {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err!("{path}: missing name"))?
+                .to_string(),
+            num_params: get_usize("num_params")?,
+            vocab: get_usize("vocab")?,
+            seq_len: get_usize("seq_len")?,
+            batch: get_usize("batch")?,
+            lr: v.get("lr").and_then(Json::as_f64).unwrap_or(0.05),
+            files,
+        })
+    }
+}

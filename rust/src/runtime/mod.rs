@@ -5,9 +5,27 @@
 //! entire inference/training surface at run time. HLO *text* is the
 //! interchange format (xla_extension 0.5.1 rejects jax ≥ 0.5 protos with
 //! 64-bit instruction ids; the text parser reassigns ids).
+//!
+//! The `xla` cargo feature selects the real PJRT bindings; without it
+//! (the offline default) [`stub`] provides the same API surface and fails
+//! fast at run time. [`meta`] (the artifact metadata parser) is shared by
+//! both paths.
 
+pub mod meta;
+
+#[cfg(feature = "xla")]
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(not(feature = "xla"))]
+pub mod stub;
 
-pub use artifact::{Artifact, ModelBundle, ModelMeta};
+pub use meta::ModelMeta;
+
+#[cfg(feature = "xla")]
+pub use artifact::{Artifact, ModelBundle};
+#[cfg(feature = "xla")]
 pub use client::XlaRuntime;
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{Literal, ModelBundle, XlaRuntime};

@@ -1,0 +1,79 @@
+//! Dependency-free stand-in for the PJRT runtime, used when the crate is
+//! built without the `xla` feature (the default in the offline build
+//! environment). The API surface mirrors `runtime::client` /
+//! `runtime::artifact` exactly so the executor, CLI, benches, and tests
+//! compile unchanged; every entry point fails fast with a clear message.
+
+use crate::err;
+use crate::util::error::Result;
+
+use super::meta::ModelMeta;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: dmlrs was built without the `xla` feature \
+     (see rust/Cargo.toml)";
+
+/// Placeholder for `xla::Literal` (host tensor).
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+}
+
+/// Placeholder for the process-wide PJRT CPU client.
+pub struct XlaRuntime(());
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<XlaRuntime> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Placeholder for the compiled-artifact bundle of one model size.
+pub struct ModelBundle {
+    pub meta: ModelMeta,
+}
+
+impl ModelBundle {
+    pub fn load(_rt: &XlaRuntime, _artifacts_dir: &str, _size: &str) -> Result<ModelBundle> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn init_params(&self, _seed: u32) -> Result<Literal> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn train_step(&self, _params: Literal, _tokens: &[i32]) -> Result<(Literal, f32)> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn grad(&self, _params: &Literal, _tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn apply(&self, _params: Literal, _grad_sum: &[f32], _scale: f32) -> Result<Literal> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn eval_loss(&self, _params: &Literal, _tokens: &[i32]) -> Result<f32> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_clear_message() {
+        let e = XlaRuntime::cpu().err().unwrap();
+        assert!(e.to_string().contains("xla"), "{e}");
+    }
+}

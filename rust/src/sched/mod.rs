@@ -1,4 +1,4 @@
-//! The paper's scheduling algorithms (§4).
+//! The paper's scheduling algorithms (§4) and the scheduler registry.
 //!
 //! * [`pricing`]   — Eq. (12)–(14): the exponential marginal price
 //!   `Q_h^r(ρ) = L (U^r/L)^{ρ/C_h^r}` and the `U^r`, `L`, `μ` constants.
@@ -9,13 +9,19 @@
 //!   rounding) cases.
 //! * [`dp`]        — Algorithms 2–3: the dynamic program Θ(t̃, V) over
 //!   per-slot workloads and the completion-time search.
-//! * [`pdors`]     — Algorithm 1: the online primal-dual admission loop.
+//! * [`pdors`]     — Algorithm 1: the online primal-dual admission loop,
+//!   exposed to the simulator through the unified
+//!   [`crate::sim::Scheduler`] trait.
+//! * [`registry`]  — the open name → constructor map every CLI command,
+//!   figure driver, and example resolves schedulers through.
 
 pub mod dp;
 pub mod pdors;
 pub mod pricing;
+pub mod registry;
 pub mod rounding;
 pub mod theta;
 
 pub use pdors::{PdOrs, PdOrsConfig, Placement};
 pub use pricing::PricingParams;
+pub use registry::{run_named, SchedulerRegistry, SchedulerSpec, ZOO};

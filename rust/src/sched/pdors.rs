@@ -143,7 +143,10 @@ impl PdOrs {
     }
 }
 
-impl crate::sim::ArrivalScheduler for PdOrs {
+/// Unified-trait adapter: PD-ORS is arrival-driven — it answers every
+/// arrival with `Admit` (schedule already committed) or `Reject`, and
+/// never defers to the per-slot path.
+impl crate::sim::Scheduler for PdOrs {
     fn name(&self) -> String {
         match self.cfg.placement {
             Placement::Colocated => "PD-ORS".into(),
@@ -151,8 +154,22 @@ impl crate::sim::ArrivalScheduler for PdOrs {
         }
     }
 
-    fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> Option<Schedule> {
-        PdOrs::on_arrival(self, job, ledger)
+    fn placement_policy(&self) -> crate::sim::PlacementPolicy {
+        match self.cfg.placement {
+            Placement::Colocated => crate::sim::PlacementPolicy::Colocated,
+            Placement::Separated => crate::sim::PlacementPolicy::Separated,
+        }
+    }
+
+    fn on_arrival(
+        &mut self,
+        job: &Job,
+        ledger: &mut AllocLedger,
+    ) -> crate::sim::ArrivalDecision {
+        match PdOrs::on_arrival(self, job, ledger) {
+            Some(s) => crate::sim::ArrivalDecision::Admit(s),
+            None => crate::sim::ArrivalDecision::Reject,
+        }
     }
 }
 

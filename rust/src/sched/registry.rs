@@ -1,0 +1,438 @@
+//! Scheduler registry: name → constructor.
+//!
+//! Every scheduling policy is one [`SchedulerRegistry`] entry. The CLI
+//! (`schedule --scheduler <name>`, `compare`, `experiment`), the figure
+//! drivers, and the examples all resolve schedulers by name here instead
+//! of matching on an enum — adding a policy is a single
+//! [`SchedulerRegistry::register`] call (or an entry in
+//! [`SchedulerRegistry::builtin`] for in-tree ones).
+//!
+//! [`SchedulerSpec`] is the typed construction parameter block. It can be
+//! parsed from a `[scheduler]` config section
+//! ([`SchedulerSpec::from_config`]); PD-ORS knobs default to
+//! [`PdOrsConfig::default`].
+
+use crate::baselines::{Dorm, Drf, Fifo};
+use crate::cluster::Cluster;
+use crate::config::Config;
+use crate::err;
+use crate::jobs::Job;
+use crate::sim::{simulate, Scheduler, SimResult};
+use crate::util::error::{Error, Result};
+
+use super::theta::GdeltaMode;
+use super::{PdOrs, PdOrsConfig, Placement};
+
+/// The built-in zoo of §5, in the paper's comparison order (registry
+/// keys; resolve display labels via [`SchedulerRegistry::display`]).
+pub const ZOO: [&str; 5] = ["pd-ors", "oasis", "fifo", "drf", "dorm"];
+
+/// Typed construction parameters for one scheduler instance.
+#[derive(Debug, Clone)]
+pub struct SchedulerSpec {
+    /// Registry key (lower-case, e.g. `"pd-ors"`).
+    pub name: String,
+    /// Seed for randomized policies (PD-ORS rounding, FIFO worker draws).
+    pub seed: u64,
+    /// Knobs for the primal-dual schedulers (PD-ORS / OASiS); ignored by
+    /// policies that take no parameters.
+    pub pdors: PdOrsConfig,
+}
+
+impl SchedulerSpec {
+    pub fn new(name: &str) -> SchedulerSpec {
+        SchedulerSpec {
+            name: normalize(name),
+            seed: 0,
+            pdors: PdOrsConfig::default(),
+        }
+    }
+
+    /// Set the seed (mirrored into the PD-ORS config).
+    pub fn with_seed(mut self, seed: u64) -> SchedulerSpec {
+        self.seed = seed;
+        self.pdors.seed = seed;
+        self
+    }
+
+    /// Build a spec from a parsed config's `[scheduler]` section:
+    ///
+    /// ```text
+    /// [scheduler]
+    /// name = pd-ors
+    /// seed = 7
+    /// dp_units = 120
+    /// delta = 0.25
+    /// gdelta = 1.0        # or "packing" / "cover"
+    /// attempts = 50
+    /// cover_fraction = 1.0
+    /// ```
+    pub fn from_config(cfg: &Config) -> SchedulerSpec {
+        let mut spec = SchedulerSpec::new(&cfg.get_or("scheduler.name", "pd-ors"));
+        spec = spec.with_seed(cfg.u64("scheduler.seed", spec.seed));
+        spec.pdors.dp_units = cfg.usize("scheduler.dp_units", spec.pdors.dp_units);
+        spec.pdors.delta = cfg.f64("scheduler.delta", spec.pdors.delta);
+        spec.pdors.attempts = cfg.usize("scheduler.attempts", spec.pdors.attempts);
+        spec.pdors.cover_fraction =
+            cfg.f64("scheduler.cover_fraction", spec.pdors.cover_fraction);
+        if let Some(v) = cfg.get("scheduler.gdelta") {
+            match v.to_ascii_lowercase().as_str() {
+                "packing" => spec.pdors.gdelta = GdeltaMode::Packing,
+                "cover" => spec.pdors.gdelta = GdeltaMode::Cover,
+                other => match other.parse::<f64>() {
+                    Ok(g) => spec.pdors.gdelta = GdeltaMode::Fixed(g),
+                    Err(_) => eprintln!(
+                        "warning: ignoring invalid scheduler.gdelta value {v:?} \
+                         (expected \"packing\", \"cover\", or a number)"
+                    ),
+                },
+            }
+        }
+        spec
+    }
+}
+
+/// Normalize a user-supplied scheduler name to a registry key.
+fn normalize(name: &str) -> String {
+    name.trim().to_ascii_lowercase()
+}
+
+/// A scheduler constructor. Receives the spec plus the simulation context
+/// (PD-ORS estimates its pricing constants from the job population).
+pub type SchedulerCtor =
+    Box<dyn Fn(&SchedulerSpec, &[Job], &Cluster, usize) -> Box<dyn Scheduler>>;
+
+struct Entry {
+    key: String,
+    display: String,
+    aliases: Vec<String>,
+    description: String,
+    ctor: SchedulerCtor,
+}
+
+/// Open name → constructor mapping (see module docs).
+pub struct SchedulerRegistry {
+    entries: Vec<Entry>,
+}
+
+impl SchedulerRegistry {
+    /// An empty registry (for fully custom zoos).
+    pub fn new() -> SchedulerRegistry {
+        SchedulerRegistry { entries: Vec::new() }
+    }
+
+    /// The in-tree zoo: PD-ORS, OASiS, FIFO, DRF, Dorm.
+    pub fn builtin() -> SchedulerRegistry {
+        let mut reg = SchedulerRegistry::new();
+        reg.register(
+            "pd-ors",
+            "PD-ORS",
+            &["pdors"],
+            "online primal-dual scheduler, co-located placement (the paper)",
+            Box::new(|spec, jobs, cluster, horizon| {
+                let cfg = PdOrsConfig {
+                    placement: Placement::Colocated,
+                    ..spec.pdors
+                };
+                Box::new(PdOrs::new(cfg, jobs, cluster, horizon))
+            }),
+        );
+        reg.register(
+            "oasis",
+            "OASiS",
+            &[],
+            "primal-dual scheduler with separated worker/PS machines [6]",
+            Box::new(|spec, jobs, cluster, horizon| {
+                let cfg = PdOrsConfig {
+                    placement: Placement::Separated,
+                    ..spec.pdors
+                };
+                Box::new(PdOrs::new(cfg, jobs, cluster, horizon))
+            }),
+        );
+        reg.register(
+            "fifo",
+            "FIFO",
+            &[],
+            "arrival order, fixed per-job worker count (Hadoop/Spark style)",
+            Box::new(|spec, _jobs, _cluster, _horizon| Box::new(Fifo::new(spec.seed))),
+        );
+        reg.register(
+            "drf",
+            "DRF",
+            &[],
+            "dominant-resource-fairness water-filling (YARN/Mesos)",
+            Box::new(|_spec, _jobs, _cluster, _horizon| Box::new(Drf::new())),
+        );
+        reg.register(
+            "dorm",
+            "Dorm",
+            &[],
+            "utilization maximization with fairness/adjustment constraints [36]",
+            Box::new(|_spec, _jobs, _cluster, _horizon| Box::new(Dorm::new())),
+        );
+        reg
+    }
+
+    /// Register a policy. `key` is the canonical lower-case name,
+    /// `display` the figure/table label, `aliases` extra accepted names.
+    /// Re-registering an existing key replaces the earlier entry (the new
+    /// entry moves to the end of the registration order), so `names()`
+    /// never lists duplicates.
+    pub fn register(
+        &mut self,
+        key: &str,
+        display: &str,
+        aliases: &[&str],
+        description: &str,
+        ctor: SchedulerCtor,
+    ) {
+        let key = normalize(key);
+        self.entries.retain(|e| e.key != key);
+        self.entries.push(Entry {
+            key,
+            display: display.to_string(),
+            aliases: aliases.iter().map(|a| normalize(a)).collect(),
+            description: description.to_string(),
+            ctor,
+        });
+    }
+
+    /// Resolution order: exact key match first (latest registration wins,
+    /// so re-registering a key shadows the earlier entry), then aliases.
+    /// A user-registered key therefore always beats a built-in alias.
+    fn find(&self, name: &str) -> Option<&Entry> {
+        let key = normalize(name);
+        self.entries
+            .iter()
+            .rev()
+            .find(|e| e.key == key)
+            .or_else(|| {
+                self.entries
+                    .iter()
+                    .rev()
+                    .find(|e| e.aliases.iter().any(|a| *a == key))
+            })
+    }
+
+    /// Registered canonical keys, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.key.as_str()).collect()
+    }
+
+    /// Display label of a registered scheduler.
+    pub fn display(&self, name: &str) -> Option<&str> {
+        self.find(name).map(|e| e.display.as_str())
+    }
+
+    /// One-line description of a registered scheduler.
+    pub fn description(&self, name: &str) -> Option<&str> {
+        self.find(name).map(|e| e.description.as_str())
+    }
+
+    /// Construct the scheduler named by `spec` for a simulation context.
+    pub fn build(
+        &self,
+        spec: &SchedulerSpec,
+        jobs: &[Job],
+        cluster: &Cluster,
+        horizon: usize,
+    ) -> Result<Box<dyn Scheduler>> {
+        match self.find(&spec.name) {
+            Some(e) => Ok((e.ctor)(spec, jobs, cluster, horizon)),
+            None => Err(self.unknown(&spec.name)),
+        }
+    }
+
+    /// Build by name with defaults + seed (the common case).
+    pub fn build_named(
+        &self,
+        name: &str,
+        seed: u64,
+        jobs: &[Job],
+        cluster: &Cluster,
+        horizon: usize,
+    ) -> Result<Box<dyn Scheduler>> {
+        self.build(&SchedulerSpec::new(name).with_seed(seed), jobs, cluster, horizon)
+    }
+
+    fn unknown(&self, name: &str) -> Error {
+        err!(
+            "unknown scheduler {name:?} (registered: {})",
+            self.names().join(", ")
+        )
+    }
+}
+
+impl Default for SchedulerRegistry {
+    /// Same as [`SchedulerRegistry::new`]: empty. Use
+    /// [`SchedulerRegistry::builtin`] for the in-tree zoo.
+    fn default() -> Self {
+        SchedulerRegistry::new()
+    }
+}
+
+/// Resolve `name` in the built-in registry, run it over the workload, and
+/// return the aggregated result.
+pub fn run_named(
+    name: &str,
+    jobs: &[Job],
+    cluster: &Cluster,
+    horizon: usize,
+    seed: u64,
+) -> Result<SimResult> {
+    let reg = SchedulerRegistry::builtin();
+    let mut s = reg.build_named(name, seed, jobs, cluster, horizon)?;
+    Ok(simulate(jobs, cluster, horizon, s.as_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::AllocLedger;
+    use crate::sim::ArrivalDecision;
+    use crate::util::Rng;
+    use crate::workload::synthetic::paper_cluster;
+    use crate::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+    #[test]
+    fn builtin_covers_the_zoo_with_display_names() {
+        let reg = SchedulerRegistry::builtin();
+        assert_eq!(reg.names(), ZOO.to_vec());
+        assert_eq!(reg.display("pd-ors"), Some("PD-ORS"));
+        assert_eq!(reg.display("PDORS"), Some("PD-ORS"), "alias + case folding");
+        assert_eq!(reg.display("oasis"), Some("OASiS"));
+        assert_eq!(reg.display("dorm"), Some("Dorm"));
+        assert!(reg.description("drf").unwrap().contains("fairness"));
+    }
+
+    #[test]
+    fn unknown_name_lists_the_registry() {
+        let reg = SchedulerRegistry::builtin();
+        let jobs: Vec<Job> = Vec::new();
+        let cluster = paper_cluster(2);
+        let e = reg
+            .build(&SchedulerSpec::new("slurm"), &jobs, &cluster, 10)
+            .err()
+            .unwrap();
+        assert!(e.to_string().contains("slurm"));
+        assert!(e.to_string().contains("pd-ors"));
+    }
+
+    #[test]
+    fn built_scheduler_matches_display_name() {
+        let reg = SchedulerRegistry::builtin();
+        let cluster = paper_cluster(4);
+        let mut rng = Rng::new(1);
+        let jobs = synthetic_jobs(&SynthConfig::paper(3, 10, MIX_DEFAULT), &mut rng);
+        for key in ZOO {
+            let s = reg.build_named(key, 0, &jobs, &cluster, 10).unwrap();
+            assert_eq!(s.name(), reg.display(key).unwrap(), "{key}");
+        }
+    }
+
+    #[test]
+    fn custom_registration_is_resolvable() {
+        struct RejectAll;
+        impl Scheduler for RejectAll {
+            fn name(&self) -> String {
+                "reject-all".into()
+            }
+            fn on_arrival(
+                &mut self,
+                _job: &Job,
+                _ledger: &mut AllocLedger,
+            ) -> ArrivalDecision {
+                ArrivalDecision::Reject
+            }
+        }
+        let mut reg = SchedulerRegistry::builtin();
+        reg.register(
+            "reject-all",
+            "RejectAll",
+            &["noop"],
+            "admits nothing (test)",
+            Box::new(|_s, _j, _c, _h| Box::new(RejectAll)),
+        );
+        let cluster = paper_cluster(2);
+        let mut rng = Rng::new(2);
+        let jobs = synthetic_jobs(&SynthConfig::paper(4, 8, MIX_DEFAULT), &mut rng);
+        let mut s = reg.build_named("noop", 0, &jobs, &cluster, 8).unwrap();
+        let res = simulate(&jobs, &cluster, 8, s.as_mut());
+        assert_eq!(res.admitted, 0);
+        assert_eq!(res.outcomes.len(), 4);
+    }
+
+    #[test]
+    fn user_key_shadows_builtin_alias() {
+        struct Noop;
+        impl Scheduler for Noop {
+            fn name(&self) -> String {
+                "Noop".into()
+            }
+            fn on_arrival(
+                &mut self,
+                _job: &Job,
+                _ledger: &mut AllocLedger,
+            ) -> ArrivalDecision {
+                ArrivalDecision::Reject
+            }
+        }
+        let mut reg = SchedulerRegistry::builtin();
+        // "pdors" is a builtin *alias*; registering it as a *key* must win
+        reg.register("pdors", "Noop", &[], "shadow test", Box::new(|_s, _j, _c, _h| Box::new(Noop)));
+        assert_eq!(reg.display("pdors"), Some("Noop"));
+        // the canonical builtin key is untouched
+        assert_eq!(reg.display("pd-ors"), Some("PD-ORS"));
+        // re-registering an existing key shadows the earlier entry
+        reg.register("drf", "Noop", &[], "shadow test", Box::new(|_s, _j, _c, _h| Box::new(Noop)));
+        assert_eq!(reg.display("drf"), Some("Noop"));
+    }
+
+    #[test]
+    fn default_registry_is_empty_like_new() {
+        assert!(SchedulerRegistry::default().names().is_empty());
+    }
+
+    #[test]
+    fn spec_from_config_reads_scheduler_section() {
+        let cfg = Config::parse(
+            "[scheduler]\nname = OASIS\nseed = 9\ndp_units = 64\ndelta = 0.5\n\
+             gdelta = 0.8\nattempts = 123\ncover_fraction = 0.9\n",
+        )
+        .unwrap();
+        let spec = SchedulerSpec::from_config(&cfg);
+        assert_eq!(spec.name, "oasis");
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.pdors.seed, 9);
+        assert_eq!(spec.pdors.dp_units, 64);
+        assert_eq!(spec.pdors.delta, 0.5);
+        assert_eq!(spec.pdors.attempts, 123);
+        assert!(matches!(spec.pdors.gdelta, GdeltaMode::Fixed(g) if g == 0.8));
+        assert_eq!(spec.pdors.cover_fraction, 0.9);
+    }
+
+    #[test]
+    fn spec_defaults_without_config_keys() {
+        let cfg = Config::parse("").unwrap();
+        let spec = SchedulerSpec::from_config(&cfg);
+        assert_eq!(spec.name, "pd-ors");
+        assert_eq!(spec.pdors.dp_units, PdOrsConfig::default().dp_units);
+    }
+
+    #[test]
+    fn gdelta_modes_parse_case_insensitively() {
+        let cfg = Config::parse("[scheduler]\ngdelta = Packing\n").unwrap();
+        let spec = SchedulerSpec::from_config(&cfg);
+        assert!(matches!(spec.pdors.gdelta, GdeltaMode::Packing));
+
+        let cfg = Config::parse("[scheduler]\ngdelta = COVER\n").unwrap();
+        let spec = SchedulerSpec::from_config(&cfg);
+        assert!(matches!(spec.pdors.gdelta, GdeltaMode::Cover));
+
+        // invalid values warn and keep the default (Fixed(1.0))
+        let cfg = Config::parse("[scheduler]\ngdelta = bogus\n").unwrap();
+        let spec = SchedulerSpec::from_config(&cfg);
+        assert!(matches!(spec.pdors.gdelta, GdeltaMode::Fixed(g) if g == 1.0));
+    }
+}

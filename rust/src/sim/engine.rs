@@ -1,199 +1,351 @@
-//! The simulation engine.
+//! The event-driven simulation engine and the unified [`Scheduler`] trait.
 //!
-//! Two scheduler families share it:
+//! Every scheduling policy — arrival-driven (PD-ORS, OASiS: a job's
+//! *entire* future schedule is fixed at its arrival, the paper's online
+//! model) and slot-driven (FIFO / DRF / Dorm: placements decided slot by
+//! slot over the active jobs) — implements the same object-safe
+//! [`Scheduler`] trait:
 //!
-//! * **Arrival-driven** ([`ArrivalScheduler`]): PD-ORS and OASiS decide a
-//!   job's *entire* future schedule at its arrival (the paper's online
-//!   model) and commit it to the allocation ledger.
-//! * **Slot-driven** ([`SlotScheduler`]): FIFO / DRF / Dorm decide
-//!   placements slot by slot over the currently active jobs, which is how
-//!   those systems actually operate.
+//! * [`Scheduler::on_arrival`] returns an [`ArrivalDecision`]: `Admit` a
+//!   committed full [`Schedule`], `Reject` permanently, or `Defer` the job
+//!   into the engine's active set for per-slot allocation;
+//! * [`Scheduler::on_slot`] (only meaningful for deferring schedulers)
+//!   grants this slot's placements over the active jobs.
 //!
-//! Both paths produce the same [`SimResult`] so the figure drivers can
-//! compare them directly. Utility is credited only when a job's full
-//! workload `E_i K_i` completes within the horizon (an unfinished job
-//! earns 0 and reports training time `T`, as in Fig. 9).
+//! [`SimEngine`] drives one pass over the horizon, emits typed
+//! [`SimEvent`]s (Begin, SlotStart, Arrival, Admitted/Rejected/Deferred,
+//! Granted, Completed, HorizonEnd) to pluggable [`SimObserver`]s, and
+//! aggregates a [`SimResult`] through the built-in
+//! [`ResultCollector`](super::events::ResultCollector) observer. Utility
+//! is credited only when a job's full workload `E_i K_i` completes within
+//! the horizon (an unfinished job earns 0 and reports training time `T`,
+//! as in Fig. 9).
+//!
+//! Schedulers are constructed by name through
+//! [`crate::sched::registry`]; [`simulate`] is the one-call convenience
+//! wrapper, [`SimEngine::builder`] the full API:
+//!
+//! ```text
+//! let result = SimEngine::builder()
+//!     .jobs(&jobs)
+//!     .cluster(&cluster)
+//!     .horizon(t)
+//!     .observer(&mut trace)
+//!     .build()
+//!     .run(scheduler.as_mut());
+//! ```
 
 use crate::cluster::{AllocLedger, Cluster};
 use crate::jobs::{speed, Job, Schedule, SlotPlacement};
 
-/// Per-job outcome record.
+use super::events::{ResultCollector, SimEvent, SimObserver, SimResult};
+
+/// The scheduler's verdict on one arriving job.
 #[derive(Debug, Clone)]
-pub struct JobOutcome {
-    pub job_id: usize,
-    pub admitted: bool,
-    pub completed: bool,
-    pub completion: Option<usize>,
-    pub utility: f64,
-    /// Completion − arrival; horizon T when unfinished (Fig. 9 convention).
-    pub training_time: f64,
+pub enum ArrivalDecision {
+    /// Admit with a full schedule the implementation has already
+    /// committed to the ledger (arrival-driven policies).
+    Admit(Schedule),
+    /// Reject permanently.
+    Reject,
+    /// Defer into the engine's active set; the engine will offer the job
+    /// to [`Scheduler::on_slot`] every slot until it completes
+    /// (slot-driven policies).
+    Defer,
 }
 
-/// Aggregate simulation result.
-#[derive(Debug, Clone)]
-pub struct SimResult {
-    pub scheduler: String,
-    pub outcomes: Vec<JobOutcome>,
-    pub total_utility: f64,
-    pub admitted: usize,
-    pub completed: usize,
+/// Worker/PS machine-placement style of a policy (diagnostic; the
+/// registry and CLI report it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Workers and PSs may share any machine (PD-ORS co-location).
+    Colocated,
+    /// PSs and workers on disjoint machine halves (OASiS).
+    Separated,
+    /// Placement chosen round-robin over machines (the slot-driven
+    /// baselines).
+    RoundRobin,
 }
 
-impl SimResult {
-    fn from_outcomes(scheduler: String, outcomes: Vec<JobOutcome>) -> SimResult {
-        let total_utility = outcomes.iter().map(|o| o.utility).sum();
-        let admitted = outcomes.iter().filter(|o| o.admitted).count();
-        let completed = outcomes.iter().filter(|o| o.completed).count();
-        SimResult { scheduler, outcomes, total_utility, admitted, completed }
-    }
+/// One slot grant: `(index into the active set, [(machine, workers, ps)])`.
+pub type SlotGrant = (usize, Vec<(usize, u64, u64)>);
 
-    pub fn training_times(&self) -> Vec<f64> {
-        self.outcomes.iter().map(|o| o.training_time).collect()
-    }
-}
-
-/// A scheduler that fixes a job's entire schedule at arrival (PD-ORS,
-/// OASiS). The implementation commits to the ledger itself when admitting.
-pub trait ArrivalScheduler {
-    fn name(&self) -> String;
-    fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> Option<Schedule>;
-}
-
-/// A job that has arrived and still has workload left (slot-driven path).
+/// A deferred job that has arrived and still has workload left.
 #[derive(Debug, Clone)]
 pub struct ActiveJob {
     pub job: Job,
     pub remaining: f64,
 }
 
-/// A scheduler that assigns placements slot by slot (FIFO, DRF, Dorm).
-pub trait SlotScheduler {
+/// The unified, object-safe scheduler interface. See the module docs for
+/// the lifecycle; register implementations in [`crate::sched::registry`].
+pub trait Scheduler {
+    /// Display name (the series label in figures and tables).
     fn name(&self) -> String;
-    /// Decide this slot's placements for the active jobs. The returned
-    /// entries are `(index into active, placements)`. Resources are only
-    /// held for the current slot.
-    fn allocate(
+
+    /// Placement style, for diagnostics.
+    fn placement_policy(&self) -> PlacementPolicy {
+        PlacementPolicy::Colocated
+    }
+
+    /// Called exactly once per job, at its arrival slot. An `Admit`
+    /// schedule must already be committed to `ledger` and satisfy
+    /// Eqs. (2), (4), (7).
+    fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> ArrivalDecision;
+
+    /// Called each slot with the deferred active jobs (skipped while the
+    /// active set is empty). Grants hold resources for this slot only;
+    /// the engine commits them. Default: no grants.
+    fn on_slot(
         &mut self,
-        t: usize,
-        active: &[ActiveJob],
-        ledger: &AllocLedger,
-    ) -> Vec<(usize, Vec<(usize, u64, u64)>)>;
+        _t: usize,
+        _active: &[ActiveJob],
+        _ledger: &AllocLedger,
+    ) -> Vec<SlotGrant> {
+        Vec::new()
+    }
 }
 
-/// Run an arrival-driven scheduler over the (arrival-sorted) job list.
-pub fn run_arrival_sim(
-    jobs: &[Job],
-    cluster: &Cluster,
+/// Builder for [`SimEngine`]; `jobs`, `cluster`, and `horizon` are
+/// required. `jobs` must be sorted by arrival slot (the workload
+/// generators guarantee this).
+#[derive(Default)]
+pub struct SimEngineBuilder<'a> {
+    jobs: Option<&'a [Job]>,
+    cluster: Option<&'a Cluster>,
+    horizon: Option<usize>,
+    observers: Vec<&'a mut dyn SimObserver>,
+}
+
+impl<'a> SimEngineBuilder<'a> {
+    pub fn jobs(mut self, jobs: &'a [Job]) -> Self {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    pub fn cluster(mut self, cluster: &'a Cluster) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    pub fn horizon(mut self, horizon: usize) -> Self {
+        self.horizon = Some(horizon);
+        self
+    }
+
+    /// Subscribe an observer to the engine's event stream. May be called
+    /// repeatedly; observers are notified in subscription order.
+    pub fn observer(mut self, obs: &'a mut dyn SimObserver) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Panics if a required field is missing.
+    pub fn build(self) -> SimEngine<'a> {
+        SimEngine {
+            jobs: self.jobs.expect("SimEngine::builder(): jobs(..) is required"),
+            cluster: self.cluster.expect("SimEngine::builder(): cluster(..) is required"),
+            horizon: self.horizon.expect("SimEngine::builder(): horizon(..) is required"),
+            observers: self.observers,
+        }
+    }
+
+    /// Build and run in one call.
+    pub fn run(self, sched: &mut dyn Scheduler) -> SimResult {
+        let mut engine = self.build();
+        engine.run(sched)
+    }
+}
+
+/// The time-slotted cluster simulator (see module docs).
+pub struct SimEngine<'a> {
+    jobs: &'a [Job],
+    cluster: &'a Cluster,
     horizon: usize,
-    sched: &mut dyn ArrivalScheduler,
-) -> SimResult {
-    let mut ledger = AllocLedger::new(cluster, horizon);
-    let mut outcomes = Vec::with_capacity(jobs.len());
-    for job in jobs {
-        match sched.on_arrival(job, &mut ledger) {
-            Some(s) => {
+    observers: Vec<&'a mut dyn SimObserver>,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn builder() -> SimEngineBuilder<'a> {
+        SimEngineBuilder::default()
+    }
+
+    fn emit(&mut self, collector: &mut ResultCollector, ev: SimEvent) {
+        collector.on_event(&ev);
+        for obs in self.observers.iter_mut() {
+            obs.on_event(&ev);
+        }
+    }
+
+    /// Handle one arrival; returns a `(completion, utility, training_time)`
+    /// entry when an admitted schedule covers the workload.
+    fn arrive(
+        &mut self,
+        collector: &mut ResultCollector,
+        sched: &mut dyn Scheduler,
+        ledger: &mut AllocLedger,
+        active: &mut Vec<ActiveJob>,
+        t: usize,
+        job: &Job,
+    ) -> Option<(usize, f64, f64)> {
+        self.emit(collector, SimEvent::Arrival { t, job_id: job.id });
+        match sched.on_arrival(job, ledger) {
+            ArrivalDecision::Admit(s) => {
                 debug_assert!(s.respects_worker_cap(job));
                 debug_assert!(s.respects_arrival(job));
                 let completed = s.covers_workload(job, 1.0);
                 let completion = s.completion_time();
-                let utility = match (completed, completion) {
-                    (true, Some(t)) => job.utility_at(t),
-                    _ => 0.0,
-                };
-                let training_time = match (completed, completion) {
-                    (true, Some(t)) => (t - job.arrival + 1) as f64,
-                    _ => horizon as f64,
-                };
-                outcomes.push(JobOutcome {
-                    job_id: job.id,
-                    admitted: true,
-                    completed,
-                    completion,
-                    utility,
-                    training_time,
-                });
+                self.emit(collector, SimEvent::Admitted { t, job_id: job.id, completion });
+                match (completed, completion) {
+                    (true, Some(ct)) => {
+                        let utility = job.utility_at(ct);
+                        let training_time = (ct - job.arrival + 1) as f64;
+                        Some((ct, utility, training_time))
+                    }
+                    _ => None,
+                }
             }
-            None => outcomes.push(JobOutcome {
-                job_id: job.id,
-                admitted: false,
-                completed: false,
-                completion: None,
-                utility: 0.0,
-                training_time: horizon as f64,
-            }),
+            ArrivalDecision::Reject => {
+                self.emit(collector, SimEvent::Rejected { t, job_id: job.id });
+                None
+            }
+            ArrivalDecision::Defer => {
+                active.push(ActiveJob { job: job.clone(), remaining: job.total_workload() });
+                self.emit(collector, SimEvent::Deferred { t, job_id: job.id });
+                None
+            }
         }
     }
-    debug_assert!(ledger.within_capacity(1e-6));
-    SimResult::from_outcomes(sched.name(), outcomes)
+
+    /// Run the scheduler over the job list and return the aggregated
+    /// result (the attached observers see every event along the way).
+    pub fn run(&mut self, sched: &mut dyn Scheduler) -> SimResult {
+        let jobs = self.jobs;
+        let horizon = self.horizon;
+        let mut ledger = AllocLedger::new(self.cluster, horizon);
+        let mut collector = ResultCollector::new();
+        let mut active: Vec<ActiveJob> = Vec::new();
+        let mut next_arrival = 0usize;
+        // arrival-driven completions, keyed by completion slot
+        let mut pending: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new(); horizon];
+
+        self.emit(&mut collector, SimEvent::Begin { jobs: jobs.len(), horizon });
+
+        for t in 0..horizon {
+            self.emit(&mut collector, SimEvent::SlotStart { t, active: active.len() });
+
+            while next_arrival < jobs.len() && jobs[next_arrival].arrival <= t {
+                let job = &jobs[next_arrival];
+                next_arrival += 1;
+                if let Some((ct, utility, training_time)) =
+                    self.arrive(&mut collector, sched, &mut ledger, &mut active, t, job)
+                {
+                    debug_assert!(ct < horizon, "committed schedule beyond horizon");
+                    if ct < horizon {
+                        pending[ct].push((job.id, utility, training_time));
+                    }
+                }
+            }
+
+            if !active.is_empty() {
+                let grants = sched.on_slot(t, &active, &ledger);
+                let mut finished: Vec<usize> = Vec::new();
+                for (idx, placements) in grants {
+                    if placements.is_empty() {
+                        continue;
+                    }
+                    // the trait is open to third-party implementations:
+                    // never trust grant indices blindly
+                    debug_assert!(idx < active.len(), "on_slot grant index out of range");
+                    if idx >= active.len() || finished.contains(&idx) {
+                        continue;
+                    }
+                    let slot = SlotPlacement { t, placements };
+                    let (job_id, workers, ps, arrival, done) = {
+                        let aj = &mut active[idx];
+                        debug_assert!(
+                            slot.total_workers() <= aj.job.batch,
+                            "Eq. (4) violated"
+                        );
+                        let sched_one =
+                            Schedule { job_id: aj.job.id, slots: vec![slot.clone()] };
+                        debug_assert!(
+                            ledger.fits(&aj.job, &sched_one, 1e-9),
+                            "slot scheduler exceeded capacity"
+                        );
+                        ledger.commit(&aj.job, &sched_one);
+                        aj.remaining -= speed::samples_in_slot(&aj.job, &slot.placements);
+                        (
+                            aj.job.id,
+                            slot.total_workers(),
+                            slot.total_ps(),
+                            aj.job.arrival,
+                            aj.remaining <= 1e-9,
+                        )
+                    };
+                    self.emit(&mut collector, SimEvent::Granted { t, job_id, workers, ps });
+                    if done {
+                        let utility = active[idx].job.utility_at(t);
+                        self.emit(
+                            &mut collector,
+                            SimEvent::Completed {
+                                t,
+                                job_id,
+                                utility,
+                                training_time: (t - arrival + 1) as f64,
+                            },
+                        );
+                        finished.push(idx);
+                    }
+                }
+                finished.sort_unstable_by(|a, b| b.cmp(a));
+                for idx in finished {
+                    active.swap_remove(idx);
+                }
+            }
+
+            for (job_id, utility, training_time) in std::mem::take(&mut pending[t]) {
+                self.emit(
+                    &mut collector,
+                    SimEvent::Completed { t, job_id, utility, training_time },
+                );
+            }
+        }
+
+        // Jobs arriving at or beyond the horizon still see their arrival
+        // hook (parity with the retired arrival-driven runner: every job
+        // gets exactly one on_arrival call).
+        while next_arrival < jobs.len() {
+            let job = &jobs[next_arrival];
+            next_arrival += 1;
+            let t = job.arrival;
+            if let Some((ct, utility, training_time)) =
+                self.arrive(&mut collector, sched, &mut ledger, &mut active, t, job)
+            {
+                self.emit(
+                    &mut collector,
+                    SimEvent::Completed { t: ct, job_id: job.id, utility, training_time },
+                );
+            }
+        }
+
+        self.emit(&mut collector, SimEvent::HorizonEnd { horizon });
+        debug_assert!(ledger.within_capacity(1e-6));
+        collector.into_result(sched.name())
+    }
 }
 
-/// Run a slot-driven scheduler: jobs arrive into the active set, the
-/// scheduler places them each slot, workload drains per Eq. (1).
-pub fn run_slot_sim(
+/// One-call convenience: run `sched` over `jobs` on `cluster` for
+/// `horizon` slots with no extra observers.
+pub fn simulate(
     jobs: &[Job],
     cluster: &Cluster,
     horizon: usize,
-    sched: &mut dyn SlotScheduler,
+    sched: &mut dyn Scheduler,
 ) -> SimResult {
-    let mut ledger = AllocLedger::new(cluster, horizon);
-    let mut active: Vec<ActiveJob> = Vec::new();
-    let mut outcomes: Vec<JobOutcome> = jobs
-        .iter()
-        .map(|job| JobOutcome {
-            job_id: job.id,
-            admitted: false,
-            completed: false,
-            completion: None,
-            utility: 0.0,
-            training_time: horizon as f64,
-        })
-        .collect();
-    let mut next_arrival = 0usize;
-
-    for t in 0..horizon {
-        while next_arrival < jobs.len() && jobs[next_arrival].arrival <= t {
-            active.push(ActiveJob {
-                job: jobs[next_arrival].clone(),
-                remaining: jobs[next_arrival].total_workload(),
-            });
-            next_arrival += 1;
-        }
-        if active.is_empty() {
-            continue;
-        }
-        let grants = sched.allocate(t, &active, &ledger);
-        let mut finished: Vec<usize> = Vec::new();
-        for (idx, placements) in grants {
-            let aj = &mut active[idx];
-            if placements.is_empty() {
-                continue;
-            }
-            let slot = SlotPlacement { t, placements };
-            debug_assert!(slot.total_workers() <= aj.job.batch, "Eq. (4) violated");
-            let sched_one = Schedule { job_id: aj.job.id, slots: vec![slot.clone()] };
-            debug_assert!(
-                ledger.fits(&aj.job, &sched_one, 1e-9),
-                "slot scheduler exceeded capacity"
-            );
-            ledger.commit(&aj.job, &sched_one);
-            outcomes[aj.job.id].admitted = true;
-            aj.remaining -= speed::samples_in_slot(&aj.job, &slot.placements);
-            if aj.remaining <= 1e-9 {
-                let o = &mut outcomes[aj.job.id];
-                o.completed = true;
-                o.completion = Some(t);
-                o.utility = aj.job.utility_at(t);
-                o.training_time = (t - aj.job.arrival + 1) as f64;
-                finished.push(idx);
-            }
-        }
-        finished.sort_unstable_by(|a, b| b.cmp(a));
-        for idx in finished {
-            active.swap_remove(idx);
-        }
-    }
-    debug_assert!(ledger.within_capacity(1e-6));
-    SimResult::from_outcomes(sched.name(), outcomes)
+    let mut engine =
+        SimEngine::builder().jobs(jobs).cluster(cluster).horizon(horizon).build();
+    engine.run(sched)
 }
 
 #[cfg(test)]
@@ -201,22 +353,31 @@ mod tests {
     use super::*;
     use crate::cluster::ResVec;
     use crate::jobs::test_support::test_job;
+    use crate::sim::events::TraceObserver;
 
-    /// Trivial slot scheduler: gives the first active job 2 workers + 1 PS
-    /// on machine 0 whenever they fit.
+    /// Trivial slot-driven scheduler: gives the first active job 2 workers
+    /// + 1 PS on machine 0 whenever they fit.
     struct Greedy1;
 
-    impl SlotScheduler for Greedy1 {
+    impl Scheduler for Greedy1 {
         fn name(&self) -> String {
             "greedy1".into()
         }
 
-        fn allocate(
+        fn placement_policy(&self) -> PlacementPolicy {
+            PlacementPolicy::RoundRobin
+        }
+
+        fn on_arrival(&mut self, _job: &Job, _ledger: &mut AllocLedger) -> ArrivalDecision {
+            ArrivalDecision::Defer
+        }
+
+        fn on_slot(
             &mut self,
             t: usize,
             active: &[ActiveJob],
             ledger: &AllocLedger,
-        ) -> Vec<(usize, Vec<(usize, u64, u64)>)> {
+        ) -> Vec<SlotGrant> {
             let mut out = Vec::new();
             if let Some(aj) = active.first() {
                 let need = aj.job.demand(2, 1);
@@ -228,13 +389,36 @@ mod tests {
         }
     }
 
+    /// Arrival-driven scheduler that admits everything with a one-slot
+    /// schedule (covers nothing — admission bookkeeping only).
+    struct AdmitAll;
+
+    impl Scheduler for AdmitAll {
+        fn name(&self) -> String {
+            "admit-all".into()
+        }
+
+        fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> ArrivalDecision {
+            let s = Schedule {
+                job_id: job.id,
+                slots: vec![SlotPlacement {
+                    t: job.arrival,
+                    placements: vec![(0, 1, 1)],
+                }],
+            };
+            ledger.commit(job, &s);
+            ArrivalDecision::Admit(s)
+        }
+    }
+
     #[test]
     fn slot_sim_completes_small_job() {
         let cluster = Cluster::homogeneous(1, ResVec::new([16.0, 32.0, 64.0, 32.0]));
         let mut job = test_job(0);
         job.epochs = 1;
         job.samples = 1000.0; // 2 workers train ~2000/slot at internal rate
-        let res = run_slot_sim(&[job.clone()], &cluster, 10, &mut Greedy1);
+        let res = simulate(&[job.clone()], &cluster, 10, &mut Greedy1);
+        assert_eq!(res.scheduler, "greedy1");
         assert_eq!(res.admitted, 1);
         assert_eq!(res.completed, 1);
         let o = &res.outcomes[0];
@@ -248,9 +432,59 @@ mod tests {
         let mut job = test_job(0);
         job.epochs = 100;
         job.samples = 500_000.0; // far too much for 2 workers in 5 slots
-        let res = run_slot_sim(&[job.clone()], &cluster, 5, &mut Greedy1);
+        let res = simulate(&[job.clone()], &cluster, 5, &mut Greedy1);
         assert_eq!(res.completed, 0);
         assert_eq!(res.outcomes[0].utility, 0.0);
         assert_eq!(res.outcomes[0].training_time, 5.0);
+    }
+
+    #[test]
+    fn observers_see_the_event_stream_in_order() {
+        let cluster = Cluster::homogeneous(1, ResVec::new([16.0, 32.0, 64.0, 32.0]));
+        let mut job = test_job(0);
+        job.epochs = 1;
+        job.samples = 1000.0;
+        let jobs = [job];
+        let mut trace = TraceObserver::new();
+        let res = SimEngine::builder()
+            .jobs(&jobs)
+            .cluster(&cluster)
+            .horizon(10)
+            .observer(&mut trace)
+            .run(&mut Greedy1);
+        assert_eq!(res.completed, 1);
+        let lines = trace.lines();
+        assert!(lines[0].starts_with("begin"), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("arrives")));
+        assert!(lines.iter().any(|l| l.contains("granted")));
+        assert!(lines.iter().any(|l| l.contains("completed")));
+        assert!(lines.last().unwrap().contains("horizon end"));
+        // arrival precedes grant precedes completion
+        let pos = |pat: &str| lines.iter().position(|l| l.contains(pat)).unwrap();
+        assert!(pos("arrives") < pos("granted"));
+        assert!(pos("granted") <= pos("completed"));
+    }
+
+    #[test]
+    fn arrival_driven_admission_is_recorded() {
+        let cluster = Cluster::homogeneous(2, ResVec::new([16.0, 32.0, 64.0, 32.0]));
+        let mut a = test_job(0);
+        a.arrival = 1;
+        a.samples = 1e9; // a one-slot, one-worker schedule cannot cover this
+        let mut b = test_job(1);
+        b.arrival = 3;
+        b.samples = 1e9;
+        let res = simulate(&[a, b], &cluster, 6, &mut AdmitAll);
+        assert_eq!(res.admitted, 2);
+        assert_eq!(res.completed, 0, "one-slot schedules cover nothing");
+        assert_eq!(res.outcomes[0].completion, Some(1));
+        assert_eq!(res.outcomes[1].completion, Some(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "cluster(..) is required")]
+    fn builder_requires_cluster() {
+        let jobs: Vec<Job> = Vec::new();
+        let _ = SimEngine::builder().jobs(&jobs).horizon(5).build();
     }
 }

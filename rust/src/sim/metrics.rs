@@ -1,8 +1,10 @@
-//! Derived metrics over [`super::SimResult`]s.
+//! Metrics over simulation outcomes: derived statistics on a finished
+//! [`SimResult`] plus [`StreamingMetrics`], an observer that keeps running
+//! aggregates *while* the engine runs (no second pass over the outcomes).
 
 use crate::util::stats;
 
-use super::engine::SimResult;
+use super::events::{SimEvent, SimObserver, SimResult};
 
 /// Fig. 9's metric: the median of per-job training times, with unfinished
 /// jobs pinned to the horizon T (already encoded in `training_time`).
@@ -22,10 +24,58 @@ pub fn utility_gain(a: &SimResult, b: &SimResult) -> f64 {
     (a.total_utility - b.total_utility) / b.total_utility
 }
 
+/// Streaming aggregates folded from the live event stream. Attach with
+/// [`SimEngineBuilder::observer`](super::SimEngineBuilder::observer); the
+/// counters are valid at any point mid-run (e.g. for progress output)
+/// and match the final [`SimResult`] at `HorizonEnd`.
+#[derive(Debug, Default, Clone)]
+pub struct StreamingMetrics {
+    pub arrivals: usize,
+    pub rejected: usize,
+    /// Jobs admitted so far (arrival-driven admissions plus deferred jobs
+    /// that received their first grant).
+    pub admitted: usize,
+    pub completed: usize,
+    pub total_utility: f64,
+    /// Per-slot grant events (a job granted in k slots counts k times).
+    pub grants: usize,
+    granted_jobs: std::collections::BTreeSet<usize>,
+}
+
+impl StreamingMetrics {
+    pub fn new() -> StreamingMetrics {
+        StreamingMetrics::default()
+    }
+}
+
+impl SimObserver for StreamingMetrics {
+    fn on_event(&mut self, ev: &SimEvent) {
+        match *ev {
+            SimEvent::Arrival { .. } => self.arrivals += 1,
+            SimEvent::Rejected { .. } => self.rejected += 1,
+            SimEvent::Admitted { .. } => self.admitted += 1,
+            SimEvent::Granted { job_id, .. } => {
+                self.grants += 1;
+                if self.granted_jobs.insert(job_id) {
+                    self.admitted += 1;
+                }
+            }
+            SimEvent::Completed { utility, .. } => {
+                self.completed += 1;
+                self.total_utility += utility;
+            }
+            SimEvent::Begin { .. }
+            | SimEvent::SlotStart { .. }
+            | SimEvent::Deferred { .. }
+            | SimEvent::HorizonEnd { .. } => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::engine::JobOutcome;
+    use crate::sim::events::JobOutcome;
 
     fn res(utility: f64, times: &[f64]) -> SimResult {
         let outcomes: Vec<JobOutcome> = times
@@ -63,5 +113,27 @@ mod tests {
         let z = res(0.0, &[1.0]);
         assert_eq!(utility_gain(&a, &z), 1.0);
         assert_eq!(utility_gain(&z, &z), 0.0);
+    }
+
+    #[test]
+    fn streaming_counters_fold_grants_once_per_job() {
+        let mut m = StreamingMetrics::new();
+        for ev in [
+            SimEvent::Arrival { t: 0, job_id: 0 },
+            SimEvent::Deferred { t: 0, job_id: 0 },
+            SimEvent::Granted { t: 0, job_id: 0, workers: 2, ps: 1 },
+            SimEvent::Granted { t: 1, job_id: 0, workers: 2, ps: 1 },
+            SimEvent::Completed { t: 1, job_id: 0, utility: 3.0, training_time: 2.0 },
+            SimEvent::Arrival { t: 1, job_id: 1 },
+            SimEvent::Rejected { t: 1, job_id: 1 },
+        ] {
+            m.on_event(&ev);
+        }
+        assert_eq!(m.arrivals, 2);
+        assert_eq!(m.admitted, 1);
+        assert_eq!(m.grants, 2);
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.total_utility, 3.0);
     }
 }

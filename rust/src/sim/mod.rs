@@ -1,10 +1,24 @@
 //! Time-slotted cluster simulator — drives every figure of §5.
+//!
+//! One event-driven [`SimEngine`] serves every policy through the unified
+//! [`Scheduler`] trait (the former `ArrivalScheduler` / `SlotScheduler`
+//! split is retired): arrival-driven implementations answer
+//! [`Scheduler::on_arrival`] with a committed schedule, slot-driven ones
+//! defer and answer [`Scheduler::on_slot`] per slot. The engine emits
+//! typed [`SimEvent`]s to pluggable [`SimObserver`]s — result aggregation
+//! ([`ResultCollector`]), streaming counters
+//! ([`metrics::StreamingMetrics`]), and trace output ([`TraceObserver`])
+//! are all observers over the same single pass.
 
 pub mod engine;
+pub mod events;
 pub mod metrics;
 
 pub use engine::{
-    run_arrival_sim, run_slot_sim, ActiveJob, ArrivalScheduler, JobOutcome, SimResult,
-    SlotScheduler,
+    simulate, ActiveJob, ArrivalDecision, PlacementPolicy, Scheduler, SimEngine,
+    SimEngineBuilder, SlotGrant,
 };
-pub use metrics::median_training_time;
+pub use events::{
+    JobOutcome, ResultCollector, SimEvent, SimObserver, SimResult, TraceObserver,
+};
+pub use metrics::{median_training_time, StreamingMetrics};

@@ -1,10 +1,12 @@
-//! Cross-cutting substrates: RNG, statistics, JSON, timing, logging.
+//! Cross-cutting substrates: RNG, statistics, JSON, timing, logging, errors.
 
+pub mod error;
 pub mod json;
 pub mod logger;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use error::{Error, Result};
 pub use rng::Rng;
 pub use timer::Timer;

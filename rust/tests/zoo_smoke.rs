@@ -1,10 +1,11 @@
 //! Integration: the full scheduler zoo on shared workloads — the
-//! comparative claims behind Figs. 6–9 at smoke scale.
+//! comparative claims behind Figs. 6–9 at smoke scale, resolved through
+//! the scheduler registry.
 
-use dmlrs::cluster::AllocLedger;
-use dmlrs::experiments::SchedulerKind;
-use dmlrs::jobs::Schedule;
 use dmlrs::baselines::offline_optimum;
+use dmlrs::cluster::AllocLedger;
+use dmlrs::jobs::Schedule;
+use dmlrs::sched::registry::{run_named, SchedulerRegistry, ZOO};
 use dmlrs::sched::{PdOrs, PdOrsConfig};
 use dmlrs::sim::metrics::median_training_time;
 use dmlrs::util::Rng;
@@ -16,8 +17,8 @@ fn all_schedulers_produce_valid_results() {
     let cluster = paper_cluster(20);
     let mut rng = Rng::new(1);
     let jobs = synthetic_jobs(&SynthConfig::paper(25, 20, MIX_DEFAULT), &mut rng);
-    for kind in SchedulerKind::ALL {
-        let res = kind.run(&jobs, &cluster, 20, 7);
+    for key in ZOO {
+        let res = run_named(key, &jobs, &cluster, 20, 7).unwrap();
         assert_eq!(res.outcomes.len(), jobs.len(), "{}", res.scheduler);
         assert!(res.total_utility >= 0.0, "{}", res.scheduler);
         assert!(res.completed <= res.admitted, "{}", res.scheduler);
@@ -37,14 +38,15 @@ fn all_schedulers_produce_valid_results() {
 fn pdors_wins_on_average() {
     // Fig. 6/7 headline: PD-ORS beats every baseline in total utility,
     // averaged over a few seeds.
+    let reg = SchedulerRegistry::builtin();
     let mut totals = std::collections::HashMap::new();
     for seed in 0..3u64 {
         let cluster = paper_cluster(30);
         let mut rng = Rng::new(100 + seed);
         let jobs = synthetic_jobs(&SynthConfig::paper(30, 20, MIX_DEFAULT), &mut rng);
-        for kind in SchedulerKind::ALL {
-            let res = kind.run(&jobs, &cluster, 20, seed);
-            *totals.entry(kind.name()).or_insert(0.0) += res.total_utility;
+        for key in ZOO {
+            let res = run_named(key, &jobs, &cluster, 20, seed).unwrap();
+            *totals.entry(reg.display(key).unwrap()).or_insert(0.0) += res.total_utility;
         }
     }
     let pdors = totals["PD-ORS"];
@@ -61,15 +63,16 @@ fn pdors_wins_on_average() {
 #[test]
 fn pdors_median_training_time_not_worst() {
     // Fig. 9: PD-ORS should have the (near-)smallest median training time.
+    let reg = SchedulerRegistry::builtin();
     let cluster = paper_cluster(20);
     let mut rng = Rng::new(9);
     let jobs = google_trace_jobs(40, 40, MIX_TRACE, &mut rng);
     let mut medians = Vec::new();
-    for kind in SchedulerKind::ALL {
-        let res = kind.run(&jobs, &cluster, 40, 3);
-        medians.push((kind.name(), median_training_time(&res)));
+    for key in ZOO {
+        let res = run_named(key, &jobs, &cluster, 40, 3).unwrap();
+        medians.push((reg.display(key).unwrap().to_string(), median_training_time(&res)));
     }
-    let pdors = medians.iter().find(|(n, _)| *n == "PD-ORS").unwrap().1;
+    let pdors = medians.iter().find(|(n, _)| n == "PD-ORS").unwrap().1;
     let worst = medians.iter().map(|(_, m)| *m).fold(0.0, f64::max);
     assert!(
         pdors <= worst,
@@ -108,8 +111,8 @@ fn trace_workload_runs_all_schedulers() {
     let cluster = paper_cluster(15);
     let mut rng = Rng::new(4);
     let jobs = google_trace_jobs(30, 40, MIX_TRACE, &mut rng);
-    for kind in SchedulerKind::ALL {
-        let res = kind.run(&jobs, &cluster, 40, 0);
+    for key in ZOO {
+        let res = run_named(key, &jobs, &cluster, 40, 0).unwrap();
         assert_eq!(res.outcomes.len(), 30, "{}", res.scheduler);
     }
 }

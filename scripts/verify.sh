@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 verification: release build + test suite (+ a formatting check).
+#
+#   scripts/verify.sh
+#
+# Run from anywhere; operates on the rust/ crate. The fmt check is
+# advisory (the offline toolchain image may lack the rustfmt component);
+# build + test failures are fatal.
+
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check (advisory) =="
+if command -v cargo-fmt >/dev/null 2>&1 || cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check || echo "warning: rustfmt differences (non-fatal)"
+else
+    echo "rustfmt unavailable; skipping"
+fi
+
+echo "verify: OK"
