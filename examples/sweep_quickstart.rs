@@ -1,0 +1,68 @@
+//! Sweep quickstart: declare a 3-scheduler × 2-cluster × 3-seed scenario
+//! matrix, run it on all cores through the work-stealing sweep runner,
+//! persist per-cell JSONL results, and aggregate them.
+//!
+//! ```bash
+//! cargo run --release --example sweep_quickstart
+//! ```
+//!
+//! Run it twice: the second run finds every cell already in the store and
+//! skips straight to the summary (resumable sweeps).
+
+use dmlrs::sweep::{run_matrix, ClusterSpec, ResultStore, ScenarioMatrix, SweepSpec, WorkloadSpec};
+use dmlrs::util::Timer;
+
+fn main() {
+    // The matrix: schedulers × (workload, cluster) columns × seeds.
+    // Each cell is self-contained — its own deterministic RNG stream —
+    // so cells run on any thread in any order with identical metrics.
+    let matrix = ScenarioMatrix::new()
+        .schedulers(&["pd-ors", "fifo", "drf"])
+        .workload(WorkloadSpec::synthetic(20, 15, 100))
+        .cluster(ClusterSpec::homogeneous(10)) // paper-style homogeneous
+        .cluster(ClusterSpec::skewed(10, 2.0)) // quarter big 2x, quarter small 0.5x
+        .seeds(3);
+    println!(
+        "== sweep quickstart: {} cells on {} workers ==",
+        matrix.len(),
+        SweepSpec::available_parallelism()
+    );
+
+    // One JSON line per completed cell; cells already on disk are skipped.
+    let mut store =
+        ResultStore::open("results/sweep_quickstart.jsonl").expect("open result store");
+
+    let timer = Timer::start();
+    let outcomes =
+        run_matrix(&matrix, 0 /* auto */, Some(&mut store)).expect("run the matrix");
+    let ran = outcomes.iter().filter(|o| !o.cached).count();
+
+    for o in &outcomes {
+        println!(
+            "{:<8} {:<24} seed {}  utility {:>9.2}  completed {:>2}/{:<2} {:>7.1} ms{}",
+            o.record.scheduler,
+            o.record.cluster,
+            o.record.seed,
+            o.record.total_utility,
+            o.record.completed,
+            o.record.jobs,
+            o.record.wall_secs * 1e3,
+            if o.cached { "  (cached)" } else { "" }
+        );
+    }
+
+    println!("\n-- mean over seeds, per scheduler x cluster --");
+    for row in store.summary() {
+        println!(
+            "{:<8} {:<24} seeds {}  mean utility {:>9.2}  mean completed {:>4.1}",
+            row.scheduler, row.cluster, row.seeds, row.mean_utility, row.mean_completed
+        );
+    }
+    println!(
+        "\n== {} cells ({ran} ran, {} cached) in {:.3}s; results in {} ==",
+        outcomes.len(),
+        outcomes.len() - ran,
+        timer.elapsed_secs(),
+        store.path().display()
+    );
+}

@@ -22,7 +22,7 @@ fn main() {
         .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
         .unwrap_or_else(|| (5..=17).collect());
 
-    let p = ExpParams { seeds, quick };
+    let p = ExpParams { seeds, quick, ..ExpParams::default() };
     println!("# PD-ORS paper figures (seeds={seeds}, quick={quick})");
     let total = Timer::start();
     for fig in figs {

@@ -10,8 +10,12 @@ use crate::runtime::{ModelBundle, XlaRuntime};
 use crate::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
 use crate::sched::{PdOrs, PdOrsConfig};
 use crate::sim::metrics::median_training_time;
-use crate::sim::{simulate, SimEngine, TraceObserver};
+use crate::sim::{SimEngine, TraceObserver};
+use crate::sweep::{
+    run_matrix, ClusterSpec, ResultStore, ScenarioMatrix, SweepSpec, WorkloadSpec,
+};
 use crate::util::error::{Error, Result};
+use crate::util::timer::Timer;
 use crate::util::Rng;
 use crate::workload::synthetic::paper_cluster;
 use crate::workload::{google_trace_jobs, synthetic_jobs, SynthConfig, MIX_DEFAULT, MIX_TRACE};
@@ -126,26 +130,190 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
 
 pub fn cmd_compare(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let (jobs, machines, horizon, seed) = workload(args, cfg.as_ref());
-    let cluster = paper_cluster(machines);
+    let machines = usize_of(args, cfg.as_ref(), "machines", 20);
+    let num_jobs = usize_of(args, cfg.as_ref(), "jobs", 30);
+    let horizon = usize_of(args, cfg.as_ref(), "horizon", 20);
+    let seed = args.u64_or("seed", 1);
+    let mix = if args.bool("trace-mix") { MIX_TRACE } else { MIX_DEFAULT };
+
+    // The whole zoo as one sweep matrix: a single (workload, cluster)
+    // column, one seed, every registered scheduler — executed in parallel
+    // through the sweep runner. base_seed 0 + cell seed reproduces the
+    // former serial path's Rng::new(seed) workload exactly.
+    let workload = if args.bool("trace") {
+        WorkloadSpec::trace(num_jobs, horizon, 0)
+    } else {
+        WorkloadSpec::synthetic(num_jobs, horizon, 0)
+    }
+    .with_mix(mix);
+    // Flag-over-config precedence: an explicit --machines flag overrides
+    // a `cluster.machines` config key (like every other flag here).
+    let mut cluster_cfg = cfg.clone().unwrap_or_default();
+    if let Some(v) = args.get("machines") {
+        cluster_cfg.set("cluster.machines", v);
+    }
+    let cluster = ClusterSpec::from_config(&cluster_cfg, machines);
+    let matrix = ScenarioMatrix::new()
+        .schedulers(&ZOO)
+        .case(workload, cluster.clone())
+        .seed_list(&[seed]);
+
+    let mut store = match args.get("out") {
+        Some(path) => Some(ResultStore::open(path).map_err(Error::from)?),
+        None => None,
+    };
+    let outcomes = run_matrix(&matrix, args.usize_or("par", 0), store.as_mut())?;
+
     let reg = SchedulerRegistry::builtin();
-    println!("machines={machines} jobs={} horizon={horizon} seed={seed}", jobs.len());
+    println!(
+        "machines={} jobs={num_jobs} horizon={horizon} seed={seed} cluster={}",
+        cluster.machines(),
+        cluster.key()
+    );
     println!(
         "{:<8} {:>14} {:>9} {:>10} {:>12}",
         "sched", "total_utility", "admitted", "completed", "median_time"
     );
-    for key in ZOO {
-        let mut sched = reg.build_named(key, seed, &jobs, &cluster, horizon)?;
-        let res = simulate(&jobs, &cluster, horizon, sched.as_mut());
+    for o in &outcomes {
+        let name = match &o.result {
+            Some(r) => r.scheduler.clone(),
+            None => reg
+                .display(&o.record.scheduler)
+                .unwrap_or(&o.record.scheduler)
+                .to_string(),
+        };
         println!(
             "{:<8} {:>14.2} {:>9} {:>10} {:>12.1}",
-            res.scheduler,
-            res.total_utility,
-            res.admitted,
-            res.completed,
-            median_training_time(&res)
+            name,
+            o.record.total_utility,
+            o.record.admitted,
+            o.record.completed,
+            o.record.median_training_time
         );
     }
+    if let Some(st) = &store {
+        eprintln!("results appended to {}", st.path().display());
+    }
+    Ok(())
+}
+
+/// The built-in sweep grids. Quick: one synthetic workload over a
+/// homogeneous and a skewed 8-machine cluster. Full: synthetic + trace
+/// workloads over homogeneous and skewed 20-machine clusters. A
+/// `[cluster]` config section replaces the cluster axis.
+fn sweep_matrix(spec: &SweepSpec, cluster_override: Option<ClusterSpec>) -> ScenarioMatrix {
+    let schedulers = spec.scheduler_keys();
+    let keys: Vec<&str> = schedulers.iter().map(|s| s.as_str()).collect();
+    let mut m = ScenarioMatrix::new().schedulers(&keys).seeds(spec.seeds);
+    if spec.quick {
+        m = m.workload(WorkloadSpec::synthetic(12, 12, 100));
+    } else {
+        m = m
+            .workload(WorkloadSpec::synthetic(40, 20, 100))
+            .workload(WorkloadSpec::trace(40, 20, 200));
+    }
+    let machines = if spec.quick { 8 } else { 20 };
+    match cluster_override {
+        Some(c) => m = m.cluster(c),
+        None => {
+            m = m
+                .cluster(ClusterSpec::homogeneous(machines))
+                .cluster(ClusterSpec::skewed(machines, 2.0));
+        }
+    }
+    m
+}
+
+pub fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut spec = match cfg.as_ref() {
+        Some(c) => SweepSpec::from_config(c),
+        None => SweepSpec::default(),
+    };
+    // flags override the [sweep] config section
+    if let Some(v) = args.get("jobs") {
+        spec.threads = v.parse().unwrap_or(spec.threads);
+    }
+    if args.bool("quick") {
+        spec.quick = true;
+    }
+    if let Some(v) = args.get("out") {
+        spec.out = v.to_string();
+    }
+    if let Some(v) = args.get("seeds") {
+        spec.seeds = v.parse::<usize>().unwrap_or(spec.seeds).max(1);
+    }
+    // Quick sweeps default to 2 seeds unless seeds were given explicitly
+    // (flag or config key) — the quick matrix has the same cell count
+    // however quick mode was requested.
+    let seeds_explicit = args.get("seeds").is_some()
+        || cfg.as_ref().map_or(false, |c| c.get("sweep.seeds").is_some());
+    if spec.quick && !seeds_explicit {
+        spec.seeds = 2;
+    }
+    if let Some(list) = args.get("schedulers") {
+        spec.schedulers = SweepSpec::parse_scheduler_list(list);
+    }
+    if args.bool("fresh") {
+        let _ = std::fs::remove_file(&spec.out);
+    }
+
+    let cluster_override = cfg.as_ref().and_then(|c| {
+        if c.keys().any(|k| k.starts_with("cluster.")) {
+            Some(ClusterSpec::from_config(c, if spec.quick { 8 } else { 20 }))
+        } else {
+            None
+        }
+    });
+    let matrix = sweep_matrix(&spec, cluster_override);
+
+    let timer = Timer::start();
+    let mut store = ResultStore::open(&spec.out).map_err(Error::from)?;
+    let threads = spec.effective_threads();
+    let outcomes = run_matrix(&matrix, threads, Some(&mut store))?;
+    let ran = outcomes.iter().filter(|o| !o.cached).count();
+    let cached = outcomes.len() - ran;
+
+    println!(
+        "{:<8} {:<26} {:<22} {:>4} {:>12} {:>9} {:>9}",
+        "sched", "workload", "cluster", "seed", "utility", "completed", "wall_ms"
+    );
+    for o in &outcomes {
+        println!(
+            "{:<8} {:<26} {:<22} {:>4} {:>12.2} {:>9} {:>9.1}{}",
+            o.record.scheduler,
+            o.record.workload,
+            o.record.cluster,
+            o.record.seed,
+            o.record.total_utility,
+            o.record.completed,
+            o.record.wall_secs * 1e3,
+            if o.cached { "  (cached)" } else { "" }
+        );
+    }
+    println!();
+    println!(
+        "{:<8} {:<26} {:<22} {:>5} {:>12} {:>10} {:>12}",
+        "sched", "workload", "cluster", "seeds", "mean_util", "mean_done", "median_time"
+    );
+    for row in store.summary() {
+        println!(
+            "{:<8} {:<26} {:<22} {:>5} {:>12.2} {:>10.1} {:>12.1}",
+            row.scheduler,
+            row.workload,
+            row.cluster,
+            row.seeds,
+            row.mean_utility,
+            row.mean_completed,
+            row.mean_median_training_time
+        );
+    }
+    println!(
+        "sweep: cells={} ran={ran} cached={cached} jobs={threads} elapsed={:.3}s out={}",
+        outcomes.len(),
+        timer.elapsed_secs(),
+        spec.out
+    );
     Ok(())
 }
 
@@ -154,6 +322,7 @@ pub fn cmd_experiment(args: &Args) -> Result<()> {
     let p = ExpParams {
         seeds: args.usize_or("seeds", if args.bool("quick") { 1 } else { 3 }),
         quick: args.bool("quick"),
+        threads: args.usize_or("jobs", 0),
     };
     let table =
         run_figure(fig, &p).ok_or_else(|| err!("unknown figure {fig} (valid: 5..=17)"))?;

@@ -4,7 +4,10 @@
 //! Subcommands:
 //! * `schedule`   — run a scheduler over a generated workload, print the
 //!   admission log and totals.
-//! * `compare`    — run the full scheduler zoo on one workload.
+//! * `compare`    — run the full scheduler zoo on one workload (through
+//!   the parallel sweep runner).
+//! * `sweep`      — run a scheduler × workload × cluster × seed scenario
+//!   matrix in parallel, appending per-cell JSONL results.
 //! * `experiment` — regenerate a paper figure (`--fig N`).
 //! * `train`      — end-to-end: schedule a job and execute its BSP
 //!   training through the PJRT artifacts.
@@ -40,6 +43,7 @@ fn dispatch(argv: &[String]) -> i32 {
     let result = match cmd.as_str() {
         "schedule" => commands::cmd_schedule(&args),
         "compare" => commands::cmd_compare(&args),
+        "sweep" => commands::cmd_sweep(&args),
         "experiment" => commands::cmd_experiment(&args),
         "train" => commands::cmd_train(&args),
         "bounds" => commands::cmd_bounds(&args),
@@ -73,17 +77,24 @@ COMMANDS:
               pd-ors|oasis|fifo|drf|dorm; see sched/registry.rs)
               --machines N --jobs N --horizon N --seed N [--trace]
               [--events]  print the engine's event trace
-  compare     run the full zoo    (same flags)
+  compare     run the full zoo    (same flags; runs through the parallel
+              sweep runner) [--par N] [--out results/compare.jsonl]
+  sweep       run a scenario matrix (schedulers x workloads x clusters x
+              seeds) in parallel  [--jobs N] (worker threads; default =
+              available parallelism) [--quick] [--seeds N]
+              [--schedulers a,b,c] [--out results/sweep.jsonl] [--fresh]
+              cells already in the JSONL store are skipped (resumable)
   experiment  regenerate a figure --fig 5..17 [--quick] [--seeds N]
-              [--out results/figNN.tsv]
+              [--jobs N] [--out results/figNN.tsv]
   train       end-to-end training --size tiny|small|base --steps N
               [--artifacts DIR] [--machines N] [--seed N]
   bounds      pricing constants   --machines N --jobs N --horizon N
   help        this text
 
 Config file: --config path.conf (keys mirror the flags; a [scheduler]
-section feeds the typed SchedulerSpec — see config/mod.rs and
-sched/registry.rs)"
+section feeds the typed SchedulerSpec, a [sweep] section the typed
+SweepSpec, and a [cluster] section — machines / skew / classes — the
+ClusterSpec; see config/mod.rs, sched/registry.rs, sweep/)"
     );
 }
 

@@ -13,6 +13,22 @@ pub struct Machine {
     pub capacity: ResVec,
 }
 
+/// One machine class of a heterogeneous cluster: `count` machines sharing
+/// one capacity vector. The paper's evaluation uses a homogeneous EC2
+/// C5n-class fleet; real clusters mix generations, which is exactly the
+/// scenario axis [`Cluster::heterogeneous`] opens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineClass {
+    pub count: usize,
+    pub capacity: ResVec,
+}
+
+impl MachineClass {
+    pub fn new(count: usize, capacity: ResVec) -> MachineClass {
+        MachineClass { count, capacity }
+    }
+}
+
 /// The set of physical machines `H`.
 #[derive(Debug, Clone)]
 pub struct Cluster {
@@ -29,6 +45,20 @@ impl Cluster {
         Cluster {
             machines: (0..n).map(|id| Machine { id, capacity }).collect(),
         }
+    }
+
+    /// Heterogeneous cluster built from machine classes; machine ids are
+    /// assigned sequentially in class order (all schedulers address
+    /// machines through the per-machine capacities in the
+    /// [`AllocLedger`], so mixed capacities need no policy changes).
+    pub fn heterogeneous(classes: &[MachineClass]) -> Cluster {
+        let mut machines = Vec::new();
+        for class in classes {
+            for _ in 0..class.count {
+                machines.push(Machine { id: machines.len(), capacity: class.capacity });
+            }
+        }
+        Cluster { machines }
     }
 
     pub fn len(&self) -> usize {
@@ -60,5 +90,30 @@ mod tests {
         assert_eq!(c.len(), 3);
         assert_eq!(c.machines[2].id, 2);
         assert_eq!(c.total_capacity().get(Resource::Cpu), 30.0);
+    }
+
+    #[test]
+    fn heterogeneous_cluster_ids_and_capacity() {
+        let big = ResVec::new([8.0, 20.0, 64.0, 20.0]);
+        let small = ResVec::new([2.0, 5.0, 16.0, 5.0]);
+        let c = Cluster::heterogeneous(&[
+            MachineClass::new(2, big),
+            MachineClass::new(3, small),
+        ]);
+        assert_eq!(c.len(), 5);
+        for (i, m) in c.machines.iter().enumerate() {
+            assert_eq!(m.id, i);
+        }
+        assert_eq!(c.machines[1].capacity, big);
+        assert_eq!(c.machines[2].capacity, small);
+        assert_eq!(c.total_capacity().get(Resource::Gpu), 2.0 * 8.0 + 3.0 * 2.0);
+    }
+
+    #[test]
+    fn heterogeneous_with_one_class_matches_homogeneous() {
+        let cap = ResVec::new([4.0, 10.0, 32.0, 10.0]);
+        let a = Cluster::homogeneous(4, cap);
+        let b = Cluster::heterogeneous(&[MachineClass::new(4, cap)]);
+        assert_eq!(a.machines, b.machines);
     }
 }

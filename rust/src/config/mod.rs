@@ -7,12 +7,24 @@
 //! [cluster]
 //! machines = 100
 //! horizon = 20
+//! skew = 2.0                    # heterogeneous: quarter big / quarter small
+//! # classes = 4x2.0,12x1.0,4x0.5  # or explicit COUNTxSCALE machine classes
 //!
 //! [scheduler]
 //! name = pd-ors
 //! dp_units = 120
 //! delta = 0.25
+//!
+//! [sweep]
+//! jobs = 4                      # worker threads (0 = available parallelism)
+//! out = results/sweep.jsonl
+//! seeds = 3
+//! schedulers = pd-ors, fifo, drf
 //! ```
+//!
+//! `[scheduler]` feeds [`crate::sched::registry::SchedulerSpec`],
+//! `[sweep]` feeds [`crate::sweep::SweepSpec`], and `[cluster]` feeds
+//! [`crate::sweep::ClusterSpec`].
 //!
 //! Inline comments require a space before `#` (so values like `exp#1`
 //! survive); quoted values (`"a # b"`) may contain `#` and preserve

@@ -3,6 +3,13 @@
 //! Each `figNN` function reproduces the corresponding figure's series.
 //! `ExpParams::quick()` scales the sweeps down for smoke tests; the
 //! defaults follow the paper's stated settings.
+//!
+//! The grid-shaped figures (6–9, 12–17) build their
+//! x × scheduler × seed grids as a [`ScenarioMatrix`] and execute through
+//! the parallel sweep runner ([`crate::sweep::run_matrix`]) — same
+//! fixed-seed outputs as the retired hand-rolled seed loops, now
+//! multi-core. Figs 5, 10, 11 stay bespoke (closed-form / offline-oracle
+//! studies that drive `PdOrs::on_arrival` directly).
 
 use crate::baselines::offline_optimum;
 use crate::cluster::AllocLedger;
@@ -11,12 +18,12 @@ use crate::sched::registry::{SchedulerRegistry, ZOO};
 use crate::sched::rounding::{feasibility_rhs, gdelta_packing};
 use crate::sched::theta::GdeltaMode;
 use crate::sched::{PdOrs, PdOrsConfig};
-use crate::sim::metrics::{median_training_time, utility_gain};
-use crate::sim::simulate;
+use crate::sim::metrics::utility_gain;
+use crate::sweep::{run_matrix, ClusterSpec, ScenarioMatrix, WorkloadSpec};
 use crate::util::stats;
 use crate::util::Rng;
 use crate::workload::synthetic::paper_cluster;
-use crate::workload::{google_trace_jobs, synthetic_jobs, ClassMix, SynthConfig, MIX_DEFAULT, MIX_TRACE};
+use crate::workload::{synthetic_jobs, ClassMix, SynthConfig, MIX_DEFAULT, MIX_TRACE};
 
 use super::common::Table;
 
@@ -25,61 +32,57 @@ use super::common::Table;
 pub struct ExpParams {
     pub seeds: usize,
     pub quick: bool,
+    /// Sweep worker threads (0 = available parallelism).
+    pub threads: usize,
 }
 
 impl Default for ExpParams {
     fn default() -> Self {
-        ExpParams { seeds: 3, quick: false }
+        ExpParams { seeds: 3, quick: false, threads: 0 }
     }
 }
 
 impl ExpParams {
     pub fn quick() -> Self {
-        ExpParams { seeds: 1, quick: true }
+        ExpParams { seeds: 1, quick: true, threads: 0 }
     }
 }
 
-fn jobs_for(
-    trace: bool,
-    num_jobs: usize,
-    horizon: usize,
-    mix: ClassMix,
-    seed: u64,
-) -> Vec<Job> {
-    let mut rng = Rng::new(seed);
-    if trace {
-        google_trace_jobs(num_jobs, horizon, mix, &mut rng)
-    } else {
-        synthetic_jobs(&SynthConfig::paper(num_jobs, horizon, mix), &mut rng)
-    }
-}
-
-/// Average total utility per scheduler (registry keys) over seeds.
+/// Average total utility per scheduler (registry keys) over seeds. `make`
+/// maps each x-value to its (workload, cluster) column; the whole grid
+/// runs through the parallel sweep runner.
 fn utility_sweep(
     title: &str,
     x_label: &str,
     xs: &[usize],
     schedulers: &[&str],
     p: &ExpParams,
-    make: impl Fn(usize, u64) -> (Vec<Job>, usize, usize), // (jobs, H, T)
+    make: impl Fn(usize) -> (WorkloadSpec, ClusterSpec),
 ) -> Table {
     let reg = SchedulerRegistry::builtin();
     let names: Vec<&str> =
         schedulers.iter().map(|k| reg.display(k).expect("registered scheduler")).collect();
     let mut table = Table::new(title, x_label, &names);
+    let mut matrix = ScenarioMatrix::new().schedulers(schedulers).seeds(p.seeds);
     for &x in xs {
-        let mut sums = vec![0.0; schedulers.len()];
-        for seed in 0..p.seeds as u64 {
-            let (jobs, h, t) = make(x, seed);
-            let cluster = paper_cluster(h);
-            for (k, s) in schedulers.iter().enumerate() {
-                let mut sched = reg
-                    .build_named(s, seed, &jobs, &cluster, t)
-                    .expect("registered scheduler");
-                sums[k] += simulate(&jobs, &cluster, t, sched.as_mut()).total_utility;
-            }
-        }
-        table.push(x as f64, sums.iter().map(|v| v / p.seeds as f64).collect());
+        let (w, c) = make(x);
+        matrix = matrix.case(w, c);
+    }
+    let outcomes = run_matrix(&matrix, p.threads, None).expect("registered scheduler");
+    // cells() ordering contract: columns outer, then schedulers, then seeds
+    let per_x = schedulers.len() * p.seeds;
+    for (ci, &x) in xs.iter().enumerate() {
+        let chunk = &outcomes[ci * per_x..(ci + 1) * per_x];
+        let ys: Vec<f64> = (0..schedulers.len())
+            .map(|k| {
+                chunk[k * p.seeds..(k + 1) * p.seeds]
+                    .iter()
+                    .map(|o| o.record.total_utility)
+                    .sum::<f64>()
+                    / p.seeds as f64
+            })
+            .collect();
+        table.push(x as f64, ys);
     }
     table
 }
@@ -121,7 +124,7 @@ pub fn fig06(p: &ExpParams) -> Table {
         &xs,
         &BASELINES4,
         p,
-        |h, seed| (jobs_for(false, 50, 20, MIX_DEFAULT, 1000 + seed), h, 20),
+        |h| (WorkloadSpec::synthetic(50, 20, 1000), ClusterSpec::homogeneous(h)),
     )
 }
 
@@ -134,7 +137,7 @@ pub fn fig07(p: &ExpParams) -> Table {
         &xs,
         &BASELINES4,
         p,
-        |i, seed| (jobs_for(false, i, 20, MIX_DEFAULT, 2000 + seed), 100, 20),
+        |i| (WorkloadSpec::synthetic(i, 20, 2000), ClusterSpec::homogeneous(100)),
     )
 }
 
@@ -147,7 +150,7 @@ pub fn fig08(p: &ExpParams) -> Table {
         &xs,
         &["pd-ors", "oasis"],
         p,
-        |i, seed| (jobs_for(false, i, 20, MIX_DEFAULT, 3000 + seed), 100, 20),
+        |i| (WorkloadSpec::synthetic(i, 20, 3000), ClusterSpec::homogeneous(100)),
     )
 }
 
@@ -159,18 +162,21 @@ pub fn fig09(p: &ExpParams) -> Table {
         ZOO.iter().map(|k| reg.display(k).expect("registered scheduler")).collect();
     let mut table =
         Table::new("Fig 9: median actual training time", "scheduler_idx", &names);
-    let mut ys = vec![0.0; ZOO.len()];
-    for seed in 0..p.seeds as u64 {
-        let jobs = jobs_for(false, i, t, MIX_DEFAULT, 4000 + seed);
-        let cluster = paper_cluster(h);
-        for (k, s) in ZOO.iter().enumerate() {
-            let mut sched = reg
-                .build_named(s, seed, &jobs, &cluster, t)
-                .expect("registered scheduler");
-            ys[k] += median_training_time(&simulate(&jobs, &cluster, t, sched.as_mut()));
-        }
-    }
-    table.push(0.0, ys.iter().map(|v| v / p.seeds as f64).collect());
+    let matrix = ScenarioMatrix::new()
+        .schedulers(&ZOO)
+        .case(WorkloadSpec::synthetic(i, t, 4000), ClusterSpec::homogeneous(h))
+        .seeds(p.seeds);
+    let outcomes = run_matrix(&matrix, p.threads, None).expect("registered scheduler");
+    let ys: Vec<f64> = (0..ZOO.len())
+        .map(|k| {
+            outcomes[k * p.seeds..(k + 1) * p.seeds]
+                .iter()
+                .map(|o| o.record.median_training_time)
+                .sum::<f64>()
+                / p.seeds as f64
+        })
+        .collect();
+    table.push(0.0, ys);
     table
 }
 
@@ -298,7 +304,7 @@ pub fn fig12(p: &ExpParams) -> Table {
         &xs,
         &ZOO,
         p,
-        move |h, seed| (jobs_for(true, i, t, MIX_DEFAULT, 7000 + seed), h, t),
+        move |h| (WorkloadSpec::trace(i, t, 7000), ClusterSpec::homogeneous(h)),
     )
 }
 
@@ -312,7 +318,7 @@ pub fn fig13(p: &ExpParams) -> Table {
         &xs,
         &ZOO,
         p,
-        move |i, seed| (jobs_for(true, i, t, MIX_DEFAULT, 8000 + seed), 30, t),
+        move |i| (WorkloadSpec::trace(i, t, 8000), ClusterSpec::homogeneous(30)),
     )
 }
 
@@ -327,23 +333,31 @@ fn gain_sweep(
     base_seed: u64,
     p: &ExpParams,
 ) -> Table {
-    let reg = SchedulerRegistry::builtin();
     let mut table = Table::new(title, x_label, &["gain_vs_oasis"]);
     let t = if p.quick { 40 } else { 80 };
     let fixed_i = if p.quick { 30 } else { 100 };
+    let mut matrix =
+        ScenarioMatrix::new().schedulers(&["pd-ors", "oasis"]).seeds(p.seeds);
     for &x in xs {
+        let (i, h) = if vary_machines { (fixed_i, x) } else { (x, 30) };
+        matrix = matrix.case(
+            WorkloadSpec::trace(i, t, base_seed).with_mix(mix),
+            ClusterSpec::homogeneous(h),
+        );
+    }
+    let outcomes = run_matrix(&matrix, p.threads, None).expect("registered scheduler");
+    // per column: p.seeds PD-ORS cells, then p.seeds OASiS cells
+    let per_x = 2 * p.seeds;
+    for (ci, &x) in xs.iter().enumerate() {
+        let chunk = &outcomes[ci * per_x..(ci + 1) * per_x];
         let mut gains = Vec::new();
-        for seed in 0..p.seeds as u64 {
-            let (i, h) = if vary_machines { (fixed_i, x) } else { (x, 30) };
-            let jobs = jobs_for(true, i, t, mix, base_seed + seed);
-            let cluster = paper_cluster(h);
-            let mut pdors =
-                reg.build_named("pd-ors", seed, &jobs, &cluster, t).expect("registered");
-            let mut oasis =
-                reg.build_named("oasis", seed, &jobs, &cluster, t).expect("registered");
-            let a = simulate(&jobs, &cluster, t, pdors.as_mut());
-            let b = simulate(&jobs, &cluster, t, oasis.as_mut());
-            gains.push(utility_gain(&a, &b));
+        for s in 0..p.seeds {
+            let a = chunk[s].result.as_ref().expect("fresh sweep cell has a result");
+            let b = chunk[p.seeds + s]
+                .result
+                .as_ref()
+                .expect("fresh sweep cell has a result");
+            gains.push(utility_gain(a, b));
         }
         table.push(x as f64, vec![stats::mean(&gains)]);
     }
@@ -439,5 +453,37 @@ mod tests {
     fn run_figure_dispatch() {
         assert!(run_figure(5, &ExpParams::quick()).is_some());
         assert!(run_figure(99, &ExpParams::quick()).is_none());
+    }
+
+    /// The sweep-runner path must reproduce the retired hand-rolled
+    /// serial seed loop bit-for-bit (fixed-seed figure outputs unchanged).
+    #[test]
+    fn utility_sweep_matches_hand_rolled_serial_loop() {
+        let p = ExpParams { seeds: 2, quick: true, threads: 2 };
+        let xs = [2usize, 4];
+        let schedulers = ["fifo", "drf"];
+        let make =
+            |h: usize| (WorkloadSpec::synthetic(6, 10, 500), ClusterSpec::homogeneous(h));
+        let table = utility_sweep("t", "machines", &xs, &schedulers, &p, make);
+        assert_eq!(table.rows.len(), xs.len());
+
+        let reg = SchedulerRegistry::builtin();
+        for (ri, &x) in xs.iter().enumerate() {
+            let (w, c) = make(x);
+            for (k, s) in schedulers.iter().enumerate() {
+                let mut sum = 0.0;
+                for seed in 0..p.seeds as u64 {
+                    let jobs = w.jobs(seed);
+                    let cluster = c.build();
+                    let mut sched =
+                        reg.build_named(s, seed, &jobs, &cluster, w.horizon).unwrap();
+                    sum += crate::sim::simulate(&jobs, &cluster, w.horizon, sched.as_mut())
+                        .total_utility;
+                }
+                let expect = sum / p.seeds as f64;
+                let got = table.rows[ri].1[k];
+                assert_eq!(got, expect, "x={x} scheduler={s}");
+            }
+        }
     }
 }

@@ -25,7 +25,12 @@
 //! * [`runtime`], [`exec`] — PJRT runtime loading the AOT-compiled JAX/
 //!   Pallas artifacts and a BSP parameter-server executor that *actually
 //!   trains* the scheduled jobs' transformer payloads.
-//! * [`experiments`] — one driver per paper figure (5–17).
+//! * [`sweep`] — parallel scenario sweeps: a declarative
+//!   scheduler × workload × cluster × seed `ScenarioMatrix`, a
+//!   work-stealing executor on `std::thread::scope`, and a resumable
+//!   JSONL `ResultStore` (`dmlrs sweep`).
+//! * [`experiments`] — one driver per paper figure (5–17), executed
+//!   through the sweep runner.
 //! * [`util`], [`testkit`], [`cli`], [`config`] — substrates built from
 //!   scratch (RNG, stats, JSON, arg parsing, property testing) because the
 //!   build environment is offline.
@@ -42,6 +47,7 @@ pub mod lp;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod sweep;
 pub mod testkit;
 pub mod util;
 pub mod workload;

@@ -1,0 +1,46 @@
+//! Parallel scenario sweeps: declarative grids of
+//! scheduler × workload × cluster × seed, executed on a zero-dependency
+//! work-stealing thread pool with a resumable JSONL result store.
+//!
+//! The paper's evaluation (§5) — and the broader scenario matrices of
+//! OASiS (arXiv:1801.00936) and DL2 (arXiv:1909.06040) — is exactly such
+//! a grid; this subsystem makes it first-class instead of per-figure
+//! copy-paste:
+//!
+//! * [`scenario`] — [`ScenarioMatrix`] expands into self-contained
+//!   [`Scenario`] cells (own deterministic RNG stream per cell);
+//!   [`ClusterSpec`] spans homogeneous and heterogeneous (skewed machine
+//!   class) clusters, [`WorkloadSpec`] the synthetic / Google-trace
+//!   generators.
+//! * [`runner`] — [`run_matrix`] executes cells in parallel
+//!   (`std::thread::scope` + per-worker deques with stealing) and streams
+//!   each cell through the [`SimObserver`](crate::sim::SimObserver)
+//!   machinery; `--jobs 1` and `--jobs N` produce byte-identical per-cell
+//!   metrics.
+//! * [`store`] — [`ResultStore`] appends one JSON line per completed cell
+//!   to `results/*.jsonl`, skips cells already on disk (resumable
+//!   sweeps), and aggregates order-insensitively.
+//!
+//! The figure drivers ([`crate::experiments::figures`]) and the CLI
+//! `compare`/`sweep` commands build their grids as matrices and run
+//! through [`run_matrix`] — multi-core speedup and persisted results come
+//! for free. Typical use:
+//!
+//! ```text
+//! let matrix = ScenarioMatrix::new()
+//!     .schedulers(&["pd-ors", "fifo", "drf"])
+//!     .workload(WorkloadSpec::synthetic(40, 20, 100))
+//!     .cluster(ClusterSpec::homogeneous(20))
+//!     .cluster(ClusterSpec::skewed(20, 2.0))
+//!     .seeds(3);
+//! let mut store = ResultStore::open("results/sweep.jsonl")?;
+//! let outcomes = run_matrix(&matrix, 0 /* auto */, Some(&mut store))?;
+//! ```
+
+pub mod runner;
+pub mod scenario;
+pub mod store;
+
+pub use runner::{run_cell, run_matrix, run_matrix_with, CellOutcome, SweepSpec};
+pub use scenario::{ClusterSpec, Scenario, ScenarioMatrix, WorkloadSource, WorkloadSpec};
+pub use store::{CellRecord, ResultStore, SummaryRow};

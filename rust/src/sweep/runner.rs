@@ -1,0 +1,451 @@
+//! The parallel sweep executor: a zero-dependency work-stealing pool on
+//! `std::thread::scope`.
+//!
+//! Cells are dealt round-robin into per-worker deques; a worker pops its
+//! own queue from the front and, when empty, steals from the back of its
+//! siblings' queues — so long cells (big clusters, PD-ORS dynamic
+//! programs) do not serialize the sweep behind one unlucky worker. Every
+//! cell is self-contained (own jobs, cluster, scheduler, and `Rng`
+//! stream), which is what makes `--jobs 1` and `--jobs N` produce
+//! byte-identical per-cell metrics; outcomes are re-sorted into matrix
+//! cell order before they are returned or appended to the
+//! [`ResultStore`], so the JSONL output is order-stable too.
+//!
+//! Each cell streams through the existing
+//! [`SimObserver`](crate::sim::SimObserver) machinery: a
+//! [`StreamingMetrics`] observer rides along with the engine's internal
+//! `ResultCollector`, and its live counters are cross-checked against the
+//! aggregated [`SimResult`].
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::config::Config;
+use crate::sched::registry::{SchedulerRegistry, ZOO};
+use crate::sim::metrics::median_training_time;
+use crate::sim::{SimEngine, SimResult, StreamingMetrics};
+use crate::util::error::{Error, Result};
+use crate::util::timer::Timer;
+
+use super::scenario::{Scenario, ScenarioMatrix};
+use super::store::{CellRecord, ResultStore};
+
+/// Typed `[sweep]` configuration (config keys mirror the CLI flags):
+///
+/// ```text
+/// [sweep]
+/// jobs = 4                  # worker threads; 0 = available parallelism
+/// out = results/sweep.jsonl
+/// quick = false
+/// seeds = 3
+/// schedulers = pd-ors, oasis, fifo
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    /// Worker threads; 0 means "use available parallelism".
+    pub threads: usize,
+    pub quick: bool,
+    pub out: String,
+    pub seeds: usize,
+    /// Registry keys to sweep; empty means the built-in zoo.
+    pub schedulers: Vec<String>,
+}
+
+impl Default for SweepSpec {
+    fn default() -> SweepSpec {
+        SweepSpec {
+            threads: 0,
+            quick: false,
+            out: "results/sweep.jsonl".to_string(),
+            seeds: 3,
+            schedulers: Vec::new(),
+        }
+    }
+}
+
+impl SweepSpec {
+    /// The machine's available parallelism (≥ 1).
+    pub fn available_parallelism() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Worker-thread count with the 0 = auto rule applied.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            SweepSpec::available_parallelism()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Scheduler keys with the empty = zoo rule applied, deduplicated
+    /// (first occurrence wins) so a repeated name cannot produce
+    /// duplicate matrix cells.
+    pub fn scheduler_keys(&self) -> Vec<String> {
+        let list: Vec<String> = if self.schedulers.is_empty() {
+            ZOO.iter().map(|s| s.to_string()).collect()
+        } else {
+            self.schedulers.clone()
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        list.into_iter().filter(|s| seen.insert(s.clone())).collect()
+    }
+
+    /// Parse a comma-separated scheduler list (shared by the
+    /// `--schedulers` flag and the `sweep.schedulers` config key).
+    pub fn parse_scheduler_list(list: &str) -> Vec<String> {
+        list.split(',')
+            .map(|s| s.trim().to_ascii_lowercase())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
+    /// Parse the `[sweep]` config section over the defaults.
+    pub fn from_config(cfg: &Config) -> SweepSpec {
+        let mut spec = SweepSpec::default();
+        spec.threads = cfg.usize("sweep.jobs", spec.threads);
+        spec.quick = cfg.bool("sweep.quick", spec.quick);
+        spec.out = cfg.get_or("sweep.out", &spec.out);
+        spec.seeds = cfg.usize("sweep.seeds", spec.seeds).max(1);
+        if let Some(list) = cfg.get("sweep.schedulers") {
+            spec.schedulers = SweepSpec::parse_scheduler_list(list);
+        }
+        spec
+    }
+}
+
+/// One executed (or store-resumed) cell.
+#[derive(Debug, Clone)]
+pub struct CellOutcome {
+    /// Position in [`ScenarioMatrix::cells`] order.
+    pub index: usize,
+    pub scenario: Scenario,
+    /// The full simulation result — `None` when the cell was skipped
+    /// because its record was already in the store.
+    pub result: Option<SimResult>,
+    pub record: CellRecord,
+    /// True when the record came from disk instead of a fresh run.
+    pub cached: bool,
+}
+
+/// Run one cell: generate its workload, build its cluster and scheduler,
+/// simulate with a streaming observer attached, and fold the metrics into
+/// a [`CellRecord`].
+pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, CellRecord)> {
+    let timer = Timer::start();
+    let jobs = sc.workload.jobs(sc.seed);
+    let cluster = sc.cluster.build();
+    let horizon = sc.workload.horizon;
+    let mut sched = reg.build_named(&sc.scheduler, sc.seed, &jobs, &cluster, horizon)?;
+    let mut streaming = StreamingMetrics::new();
+    let result = SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(&cluster)
+        .horizon(horizon)
+        .observer(&mut streaming)
+        .run(sched.as_mut());
+    debug_assert_eq!(streaming.admitted, result.admitted, "observer drift");
+    debug_assert_eq!(streaming.completed, result.completed, "observer drift");
+    let record = CellRecord {
+        key: sc.key(),
+        scheduler: sc.scheduler.clone(),
+        workload: sc.workload.key(),
+        cluster: sc.cluster.key(),
+        seed: sc.seed,
+        jobs: jobs.len(),
+        admitted: result.admitted,
+        completed: result.completed,
+        total_utility: result.total_utility,
+        median_training_time: median_training_time(&result),
+        wall_secs: timer.elapsed_secs(),
+    };
+    Ok((result, record))
+}
+
+/// Pop the next cell index: own queue front first, then steal from the
+/// back of sibling queues.
+fn next_cell(queues: &[Mutex<VecDeque<usize>>], w: usize) -> Option<usize> {
+    if let Some(i) = queues[w].lock().unwrap().pop_front() {
+        return Some(i);
+    }
+    let n = queues.len();
+    for off in 1..n {
+        if let Some(i) = queues[(w + off) % n].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Run every cell of `matrix` on up to `threads` workers (0 = available
+/// parallelism), constructing each worker's scheduler registry through
+/// `registry` (registries hold non-`Sync` constructors, so they cannot be
+/// shared). Cells whose key is already in `store` are skipped and
+/// returned as cached outcomes; freshly run cells are appended to the
+/// store in matrix order. Outcomes come back in matrix order regardless
+/// of thread count.
+pub fn run_matrix_with(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    registry: &(dyn Fn() -> SchedulerRegistry + Sync),
+    mut store: Option<&mut ResultStore>,
+) -> Result<Vec<CellOutcome>> {
+    let cells = matrix.cells();
+    let mut outcomes: Vec<Option<CellOutcome>> = Vec::with_capacity(cells.len());
+    outcomes.resize_with(cells.len(), || None);
+
+    // Resume: cells already on disk never hit the pool.
+    let mut pending: Vec<usize> = Vec::new();
+    for (i, sc) in cells.iter().enumerate() {
+        let key = sc.key();
+        let cached = store.as_ref().and_then(|st| st.get(&key).cloned());
+        match cached {
+            Some(record) => {
+                outcomes[i] = Some(CellOutcome {
+                    index: i,
+                    scenario: sc.clone(),
+                    result: None,
+                    record,
+                    cached: true,
+                });
+            }
+            None => pending.push(i),
+        }
+    }
+
+    let threads = if threads == 0 {
+        SweepSpec::available_parallelism()
+    } else {
+        threads
+    };
+    let threads = threads.min(pending.len().max(1)).max(1);
+
+    // Deal pending cells round-robin into per-worker deques.
+    let mut queues: Vec<Mutex<VecDeque<usize>>> = Vec::new();
+    for _ in 0..threads {
+        queues.push(Mutex::new(VecDeque::new()));
+    }
+    for (k, &idx) in pending.iter().enumerate() {
+        queues[k % threads].lock().unwrap().push_back(idx);
+    }
+
+    let done: Mutex<Vec<(usize, SimResult, CellRecord)>> =
+        Mutex::new(Vec::with_capacity(pending.len()));
+    let failure: Mutex<Option<Error>> = Mutex::new(None);
+    {
+        let queues = &queues;
+        let done = &done;
+        let failure = &failure;
+        let cells = &cells;
+        std::thread::scope(|scope| {
+            for w in 0..threads {
+                scope.spawn(move || {
+                    let reg = registry();
+                    loop {
+                        if failure.lock().unwrap().is_some() {
+                            break;
+                        }
+                        let Some(idx) = next_cell(queues, w) else { break };
+                        match run_cell(&reg, &cells[idx]) {
+                            Ok((result, record)) => {
+                                done.lock().unwrap().push((idx, result, record));
+                            }
+                            Err(e) => {
+                                let mut slot = failure.lock().unwrap();
+                                if slot.is_none() {
+                                    *slot = Some(e);
+                                }
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+    for (idx, result, record) in done.into_inner().unwrap() {
+        outcomes[idx] = Some(CellOutcome {
+            index: idx,
+            scenario: cells[idx].clone(),
+            result: Some(result),
+            record,
+            cached: false,
+        });
+    }
+
+    // Persist fresh records in matrix order (deterministic JSONL layout)
+    // BEFORE propagating any cell failure: completed work stays on disk,
+    // so a re-run after fixing the bad cell resumes instead of redoing
+    // everything. The contains() guard makes duplicate matrix cells
+    // (same key twice) append once instead of erroring.
+    if let Some(st) = store.as_mut() {
+        for o in outcomes.iter().flatten() {
+            if !o.cached && !st.contains(&o.record.key) {
+                st.append(o.record.clone()).map_err(Error::from)?;
+            }
+        }
+    }
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    let outcomes: Vec<CellOutcome> = outcomes
+        .into_iter()
+        .map(|o| o.expect("every cell is either cached or executed"))
+        .collect();
+    Ok(outcomes)
+}
+
+/// [`run_matrix_with`] over the built-in scheduler registry.
+pub fn run_matrix(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    store: Option<&mut ResultStore>,
+) -> Result<Vec<CellOutcome>> {
+    run_matrix_with(matrix, threads, &SchedulerRegistry::builtin, store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::simulate;
+    use crate::sweep::scenario::{ClusterSpec, WorkloadSpec};
+
+    fn small_matrix() -> ScenarioMatrix {
+        ScenarioMatrix::new()
+            .schedulers(&["fifo", "drf"])
+            .workload(WorkloadSpec::synthetic(6, 8, 50))
+            .cluster(ClusterSpec::homogeneous(3))
+            .cluster(ClusterSpec::skewed(4, 2.0))
+            .seeds(2)
+    }
+
+    #[test]
+    fn parallel_matches_serial_metrics() {
+        let m = small_matrix();
+        let serial = run_matrix(&m, 1, None).unwrap();
+        let parallel = run_matrix(&m, 4, None).unwrap();
+        assert_eq!(serial.len(), m.len());
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.record.metrics_line(), b.record.metrics_line());
+            assert_eq!(a.result, b.result);
+        }
+    }
+
+    #[test]
+    fn cell_matches_direct_simulation() {
+        let sc = Scenario {
+            scheduler: "fifo".into(),
+            workload: WorkloadSpec::synthetic(5, 8, 90),
+            cluster: ClusterSpec::homogeneous(3),
+            seed: 1,
+        };
+        let reg = SchedulerRegistry::builtin();
+        let (result, record) = run_cell(&reg, &sc).unwrap();
+        let jobs = sc.workload.jobs(sc.seed);
+        let cluster = sc.cluster.build();
+        let mut direct = reg.build_named("fifo", 1, &jobs, &cluster, 8).unwrap();
+        let expect = simulate(&jobs, &cluster, 8, direct.as_mut());
+        assert_eq!(result, expect);
+        assert_eq!(record.total_utility, expect.total_utility);
+        assert_eq!(record.jobs, jobs.len());
+        assert!(record.wall_secs >= 0.0);
+    }
+
+    #[test]
+    fn unknown_scheduler_fails_the_sweep() {
+        let m = ScenarioMatrix::new()
+            .scheduler("no-such-policy")
+            .workload(WorkloadSpec::synthetic(3, 6, 1))
+            .cluster(ClusterSpec::homogeneous(2))
+            .seeds(1);
+        let e = run_matrix(&m, 2, None).unwrap_err();
+        assert!(e.to_string().contains("no-such-policy"));
+    }
+
+    #[test]
+    fn completed_cells_persist_even_when_a_later_cell_fails() {
+        let path = std::env::temp_dir()
+            .join(format!("dmlrs_runner_partial_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let _ = std::fs::remove_file(&path);
+        // single worker, deterministic order: the fifo cell completes
+        // before the unknown scheduler aborts the sweep
+        let m = ScenarioMatrix::new()
+            .schedulers(&["fifo", "no-such-policy"])
+            .workload(WorkloadSpec::synthetic(4, 6, 10))
+            .cluster(ClusterSpec::homogeneous(2))
+            .seeds(1);
+        {
+            let mut st = ResultStore::open(&path).unwrap();
+            assert!(run_matrix(&m, 1, Some(&mut st)).is_err());
+            assert_eq!(st.len(), 1, "the completed fifo cell must be on disk");
+            assert_eq!(st.records()[0].scheduler, "fifo");
+        }
+        // resuming after the failure reuses the persisted cell
+        let good = ScenarioMatrix::new()
+            .scheduler("fifo")
+            .workload(WorkloadSpec::synthetic(4, 6, 10))
+            .cluster(ClusterSpec::homogeneous(2))
+            .seeds(1);
+        let mut st = ResultStore::open(&path).unwrap();
+        let outcomes = run_matrix(&good, 1, Some(&mut st)).unwrap();
+        assert!(outcomes[0].cached);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn duplicate_matrix_cells_append_once() {
+        let path = std::env::temp_dir()
+            .join(format!("dmlrs_runner_dup_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let _ = std::fs::remove_file(&path);
+        let m = ScenarioMatrix::new()
+            .schedulers(&["fifo", "fifo"])
+            .workload(WorkloadSpec::synthetic(4, 6, 10))
+            .cluster(ClusterSpec::homogeneous(2))
+            .seeds(1);
+        let mut st = ResultStore::open(&path).unwrap();
+        let outcomes = run_matrix(&m, 2, Some(&mut st)).unwrap();
+        assert_eq!(outcomes.len(), 2);
+        assert_eq!(st.len(), 1, "identical keys collapse to one JSONL line");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sweep_spec_scheduler_keys_dedup() {
+        let mut spec = SweepSpec::default();
+        assert_eq!(spec.scheduler_keys().len(), ZOO.len());
+        spec.schedulers =
+            vec!["fifo".into(), "drf".into(), "fifo".into(), "drf".into()];
+        assert_eq!(spec.scheduler_keys(), vec!["fifo".to_string(), "drf".to_string()]);
+    }
+
+    #[test]
+    fn store_makes_reruns_cached() {
+        let path = std::env::temp_dir()
+            .join(format!("dmlrs_runner_resume_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let _ = std::fs::remove_file(&path);
+        let m = small_matrix();
+        {
+            let mut st = ResultStore::open(&path).unwrap();
+            let first = run_matrix(&m, 2, Some(&mut st)).unwrap();
+            assert!(first.iter().all(|o| !o.cached));
+            assert_eq!(st.len(), m.len());
+        }
+        {
+            let mut st = ResultStore::open(&path).unwrap();
+            let second = run_matrix(&m, 2, Some(&mut st)).unwrap();
+            assert!(second.iter().all(|o| o.cached));
+            assert!(second.iter().all(|o| o.result.is_none()));
+            // no duplicate lines appended
+            assert_eq!(st.len(), m.len());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

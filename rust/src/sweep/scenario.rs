@@ -1,0 +1,470 @@
+//! Declarative scenario grids: `ScenarioMatrix` expands registered
+//! scheduler names × workload specs × cluster specs × seeds into
+//! self-contained [`Scenario`] cells.
+//!
+//! A cell owns everything needed to run it — workload generator inputs,
+//! cluster shape, scheduler name, and the seed of its deterministic
+//! [`Rng`](crate::util::Rng) stream — so cells can execute in any order,
+//! on any thread, and still produce byte-identical metrics. The stable
+//! [`Scenario::key`] is what the [`ResultStore`](super::store::ResultStore)
+//! uses to skip cells already on disk (resumable sweeps).
+
+use crate::cluster::Cluster;
+use crate::config::Config;
+use crate::jobs::Job;
+use crate::util::Rng;
+use crate::workload::synthetic::{paper_cluster, paper_cluster_classes, skewed_classes};
+use crate::workload::{
+    google_trace_jobs, synthetic_jobs, ClassMix, SynthConfig, MIX_DEFAULT, MIX_TRACE,
+};
+
+/// Which workload generator a cell draws its jobs from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadSource {
+    /// The paper's §5 synthetic distribution.
+    Synthetic,
+    /// The regenerated Google-trace arrival process.
+    GoogleTrace,
+}
+
+/// One workload axis value: generator inputs plus a base seed. The cell's
+/// job list is drawn from `Rng::new(base_seed + scenario.seed)`, matching
+/// the `base + seed` convention the figure drivers always used — so a
+/// figure rewired through the sweep reproduces its fixed-seed output
+/// exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadSpec {
+    pub source: WorkloadSource,
+    pub num_jobs: usize,
+    /// Simulation horizon T (also bounds the arrival slots).
+    pub horizon: usize,
+    pub mix: ClassMix,
+    pub base_seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn synthetic(num_jobs: usize, horizon: usize, base_seed: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            source: WorkloadSource::Synthetic,
+            num_jobs,
+            horizon,
+            mix: MIX_DEFAULT,
+            base_seed,
+        }
+    }
+
+    pub fn trace(num_jobs: usize, horizon: usize, base_seed: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            source: WorkloadSource::GoogleTrace,
+            num_jobs,
+            horizon,
+            mix: MIX_DEFAULT,
+            base_seed,
+        }
+    }
+
+    pub fn with_mix(mut self, mix: ClassMix) -> WorkloadSpec {
+        self.mix = mix;
+        self
+    }
+
+    fn mix_label(&self) -> String {
+        if self.mix == MIX_DEFAULT {
+            "mixD".to_string()
+        } else if self.mix == MIX_TRACE {
+            "mixT".to_string()
+        } else {
+            format!(
+                "mix{:.0}-{:.0}-{:.0}",
+                self.mix.insensitive * 100.0,
+                self.mix.sensitive * 100.0,
+                self.mix.critical * 100.0
+            )
+        }
+    }
+
+    /// Stable identity string (part of [`Scenario::key`]).
+    pub fn key(&self) -> String {
+        let src = match self.source {
+            WorkloadSource::Synthetic => "synth",
+            WorkloadSource::GoogleTrace => "trace",
+        };
+        format!(
+            "{src}-i{}-t{}-{}-b{}",
+            self.num_jobs,
+            self.horizon,
+            self.mix_label(),
+            self.base_seed
+        )
+    }
+
+    /// Draw this workload's job list for one cell (deterministic in
+    /// `base_seed + cell_seed`).
+    pub fn jobs(&self, cell_seed: u64) -> Vec<Job> {
+        let mut rng = Rng::new(self.base_seed.wrapping_add(cell_seed));
+        match self.source {
+            WorkloadSource::Synthetic => {
+                synthetic_jobs(&SynthConfig::paper(self.num_jobs, self.horizon, self.mix), &mut rng)
+            }
+            WorkloadSource::GoogleTrace => {
+                google_trace_jobs(self.num_jobs, self.horizon, self.mix, &mut rng)
+            }
+        }
+    }
+}
+
+/// One cluster axis value. Capacities are multiples of the paper's EC2
+/// C5n-class machine (`paper_machine_capacity`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterSpec {
+    /// `machines` identical paper-capacity machines.
+    Homogeneous { machines: usize },
+    /// Machine classes as `(count, capacity scale)` pairs; scale 1.0 is
+    /// the paper capacity.
+    Heterogeneous { classes: Vec<(usize, f64)> },
+}
+
+impl ClusterSpec {
+    pub fn homogeneous(machines: usize) -> ClusterSpec {
+        ClusterSpec::Homogeneous { machines }
+    }
+
+    /// The standard skewed shape: `machines` total, a quarter big
+    /// (`skew ×`), a quarter small (`1/skew ×`), the rest standard — the
+    /// shape is defined once in
+    /// [`crate::workload::synthetic::skewed_classes`].
+    pub fn skewed(machines: usize, skew: f64) -> ClusterSpec {
+        ClusterSpec::Heterogeneous {
+            classes: skewed_classes(machines, skew).to_vec(),
+        }
+    }
+
+    /// Total machine count.
+    pub fn machines(&self) -> usize {
+        match self {
+            ClusterSpec::Homogeneous { machines } => *machines,
+            ClusterSpec::Heterogeneous { classes } => {
+                classes.iter().map(|(n, _)| n).sum()
+            }
+        }
+    }
+
+    /// Stable identity string (part of [`Scenario::key`]).
+    pub fn key(&self) -> String {
+        match self {
+            ClusterSpec::Homogeneous { machines } => format!("homog-h{machines}"),
+            ClusterSpec::Heterogeneous { classes } => {
+                let parts: Vec<String> =
+                    classes.iter().map(|(n, s)| format!("{n}x{s}")).collect();
+                format!("hetero-{}", parts.join("+"))
+            }
+        }
+    }
+
+    /// Materialize the cluster.
+    pub fn build(&self) -> Cluster {
+        match self {
+            ClusterSpec::Homogeneous { machines } => paper_cluster(*machines),
+            ClusterSpec::Heterogeneous { classes } => paper_cluster_classes(classes),
+        }
+    }
+
+    /// Parse a `[cluster]` config section:
+    ///
+    /// ```text
+    /// [cluster]
+    /// machines = 20          # total machine count
+    /// skew = 2.0             # optional: quarter big / quarter small shape
+    /// classes = 4x2.0,12x1.0,4x0.5   # optional: explicit count x scale list
+    /// ```
+    ///
+    /// `classes` wins over `skew`; with neither, the cluster is
+    /// homogeneous with `default_machines` (overridden by
+    /// `cluster.machines`).
+    pub fn from_config(cfg: &Config, default_machines: usize) -> ClusterSpec {
+        let machines = cfg.usize("cluster.machines", default_machines);
+        if let Some(spec) = cfg.get("cluster.classes") {
+            let mut classes = Vec::new();
+            for part in spec.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                match part.split_once('x') {
+                    Some((n, s)) => {
+                        match (n.trim().parse::<usize>(), s.trim().parse::<f64>()) {
+                            (Ok(n), Ok(s)) if s > 0.0 => classes.push((n, s)),
+                            _ => eprintln!(
+                                "warning: ignoring invalid cluster.classes entry {part:?} \
+                                 (expected COUNTxSCALE, e.g. 4x2.0)"
+                            ),
+                        }
+                    }
+                    None => eprintln!(
+                        "warning: ignoring invalid cluster.classes entry {part:?} \
+                         (expected COUNTxSCALE, e.g. 4x2.0)"
+                    ),
+                }
+            }
+            if !classes.is_empty() {
+                return ClusterSpec::Heterogeneous { classes };
+            }
+        }
+        let skew = cfg.f64("cluster.skew", 1.0);
+        if skew != 1.0 {
+            return ClusterSpec::skewed(machines, skew);
+        }
+        ClusterSpec::homogeneous(machines)
+    }
+}
+
+/// One self-contained grid cell: everything needed to reproduce a single
+/// simulation run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Registry key (see [`crate::sched::registry`]).
+    pub scheduler: String,
+    pub workload: WorkloadSpec,
+    pub cluster: ClusterSpec,
+    /// Cell seed: the scheduler's seed, and the offset added to the
+    /// workload's base seed.
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Stable cell identity — the [`ResultStore`](super::store::ResultStore)
+    /// dedup key.
+    pub fn key(&self) -> String {
+        format!(
+            "{}|{}|{}|seed{}",
+            self.scheduler,
+            self.workload.key(),
+            self.cluster.key(),
+            self.seed
+        )
+    }
+}
+
+/// A declarative scenario grid. Either give the matrix independent
+/// workload/cluster axes (crossed cartesian-product style) or paired
+/// `case(workload, cluster)` columns (the figure drivers vary one of the
+/// two per x-value); schedulers and seeds always cross everything.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioMatrix {
+    schedulers: Vec<String>,
+    workloads: Vec<WorkloadSpec>,
+    clusters: Vec<ClusterSpec>,
+    seeds: Vec<u64>,
+    cases: Vec<(WorkloadSpec, ClusterSpec)>,
+}
+
+impl ScenarioMatrix {
+    pub fn new() -> ScenarioMatrix {
+        ScenarioMatrix::default()
+    }
+
+    pub fn scheduler(mut self, name: &str) -> ScenarioMatrix {
+        self.schedulers.push(name.to_string());
+        self
+    }
+
+    pub fn schedulers(mut self, names: &[&str]) -> ScenarioMatrix {
+        self.schedulers.extend(names.iter().map(|n| n.to_string()));
+        self
+    }
+
+    pub fn workload(mut self, w: WorkloadSpec) -> ScenarioMatrix {
+        self.workloads.push(w);
+        self
+    }
+
+    pub fn cluster(mut self, c: ClusterSpec) -> ScenarioMatrix {
+        self.clusters.push(c);
+        self
+    }
+
+    /// Add one paired (workload, cluster) column (not crossed with the
+    /// independent axes).
+    pub fn case(mut self, w: WorkloadSpec, c: ClusterSpec) -> ScenarioMatrix {
+        self.cases.push((w, c));
+        self
+    }
+
+    /// Use seeds `0..n`.
+    pub fn seeds(mut self, n: usize) -> ScenarioMatrix {
+        self.seeds = (0..n as u64).collect();
+        self
+    }
+
+    /// Use an explicit seed list.
+    pub fn seed_list(mut self, seeds: &[u64]) -> ScenarioMatrix {
+        self.seeds = seeds.to_vec();
+        self
+    }
+
+    /// The effective (workload, cluster) columns: explicit cases first,
+    /// then the cartesian product of the independent axes.
+    pub fn columns(&self) -> Vec<(WorkloadSpec, ClusterSpec)> {
+        let mut out = self.cases.clone();
+        for w in &self.workloads {
+            for c in &self.clusters {
+                out.push((*w, c.clone()));
+            }
+        }
+        out
+    }
+
+    fn seed_values(&self) -> Vec<u64> {
+        if self.seeds.is_empty() {
+            vec![0]
+        } else {
+            self.seeds.clone()
+        }
+    }
+
+    /// Number of cells the matrix expands to.
+    pub fn len(&self) -> usize {
+        self.columns().len() * self.schedulers.len() * self.seed_values().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into cells. Ordering contract (callers aggregate by index
+    /// arithmetic): columns outermost, then schedulers, then seeds — i.e.
+    /// cell `(ci, si, ki)` lives at index
+    /// `ci * (num_schedulers * num_seeds) + si * num_seeds + ki`.
+    pub fn cells(&self) -> Vec<Scenario> {
+        let seeds = self.seed_values();
+        let mut out = Vec::with_capacity(self.len());
+        for (w, c) in self.columns() {
+            for s in &self.schedulers {
+                for &seed in &seeds {
+                    out.push(Scenario {
+                        scheduler: s.clone(),
+                        workload: w,
+                        cluster: c.clone(),
+                        seed,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::synthetic::paper_cluster_skewed;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn matrix_expands_cartesian_product() {
+        let m = ScenarioMatrix::new()
+            .schedulers(&["pd-ors", "fifo"])
+            .workload(WorkloadSpec::synthetic(10, 10, 100))
+            .workload(WorkloadSpec::trace(20, 15, 200))
+            .cluster(ClusterSpec::homogeneous(8))
+            .cluster(ClusterSpec::skewed(8, 2.0))
+            .seeds(3);
+        assert_eq!(m.len(), 2 * 2 * 2 * 3);
+        let cells = m.cells();
+        assert_eq!(cells.len(), 24);
+        let keys: BTreeSet<String> = cells.iter().map(|c| c.key()).collect();
+        assert_eq!(keys.len(), 24, "cell keys must be unique");
+    }
+
+    #[test]
+    fn paired_cases_are_not_crossed() {
+        let m = ScenarioMatrix::new()
+            .scheduler("fifo")
+            .case(WorkloadSpec::synthetic(5, 10, 0), ClusterSpec::homogeneous(4))
+            .case(WorkloadSpec::synthetic(9, 10, 0), ClusterSpec::homogeneous(8))
+            .seeds(2);
+        assert_eq!(m.len(), 2 * 1 * 2);
+        let cells = m.cells();
+        // ordering contract: columns outer, schedulers, then seeds
+        assert_eq!(cells[0].workload.num_jobs, 5);
+        assert_eq!(cells[0].seed, 0);
+        assert_eq!(cells[1].seed, 1);
+        assert_eq!(cells[2].workload.num_jobs, 9);
+        assert_eq!(cells[2].cluster.machines(), 8);
+    }
+
+    #[test]
+    fn workload_jobs_match_direct_generation() {
+        let w = WorkloadSpec::synthetic(8, 12, 1000);
+        let jobs = w.jobs(3);
+        let direct = synthetic_jobs(
+            &SynthConfig::paper(8, 12, MIX_DEFAULT),
+            &mut Rng::new(1003),
+        );
+        assert_eq!(jobs.len(), direct.len());
+        for (a, b) in jobs.iter().zip(&direct) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.epochs, b.epochs);
+            assert_eq!(a.utility, b.utility);
+        }
+    }
+
+    #[test]
+    fn cluster_spec_builds_expected_shapes() {
+        assert_eq!(ClusterSpec::homogeneous(6).build().len(), 6);
+        let skewed = ClusterSpec::skewed(8, 2.0);
+        assert_eq!(skewed.machines(), 8);
+        let built = skewed.build();
+        assert_eq!(built.len(), 8);
+        assert_eq!(built.machines, paper_cluster_skewed(8, 2.0).machines);
+    }
+
+    #[test]
+    fn keys_are_stable_and_distinguish_axes() {
+        let s = Scenario {
+            scheduler: "pd-ors".into(),
+            workload: WorkloadSpec::synthetic(50, 20, 1000),
+            cluster: ClusterSpec::homogeneous(20),
+            seed: 2,
+        };
+        assert_eq!(s.key(), "pd-ors|synth-i50-t20-mixD-b1000|homog-h20|seed2");
+        let t = Scenario { cluster: ClusterSpec::skewed(20, 2.0), ..s.clone() };
+        assert_ne!(s.key(), t.key());
+        let u = Scenario {
+            workload: s.workload.with_mix(MIX_TRACE),
+            ..s.clone()
+        };
+        assert_ne!(s.key(), u.key());
+    }
+
+    #[test]
+    fn cluster_spec_from_config() {
+        let cfg = Config::parse("[cluster]\nmachines = 30\n").unwrap();
+        assert_eq!(
+            ClusterSpec::from_config(&cfg, 20),
+            ClusterSpec::homogeneous(30)
+        );
+
+        let cfg = Config::parse("[cluster]\nmachines = 16\nskew = 2.0\n").unwrap();
+        assert_eq!(
+            ClusterSpec::from_config(&cfg, 20),
+            ClusterSpec::skewed(16, 2.0)
+        );
+
+        let cfg =
+            Config::parse("[cluster]\nclasses = 4x2.0, 12x1.0, 4x0.5\n").unwrap();
+        assert_eq!(
+            ClusterSpec::from_config(&cfg, 20),
+            ClusterSpec::Heterogeneous {
+                classes: vec![(4, 2.0), (12, 1.0), (4, 0.5)]
+            }
+        );
+
+        // no [cluster] section at all: homogeneous default
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(
+            ClusterSpec::from_config(&cfg, 20),
+            ClusterSpec::homogeneous(20)
+        );
+    }
+}

@@ -1,0 +1,334 @@
+//! JSONL result store: one line per completed sweep cell.
+//!
+//! [`ResultStore::open`] loads any lines already on disk (that is what
+//! makes sweeps resumable — the runner skips cells whose key is present)
+//! and [`ResultStore::append`] writes each new [`CellRecord`] as a single
+//! compact JSON line, flushed per cell so a killed sweep loses at most
+//! the in-flight cell. Aggregation ([`ResultStore::summary`]) groups by
+//! (scheduler, workload, cluster) and is insensitive to record order, so
+//! serial and parallel sweeps summarize identically.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+
+use crate::util::json::{self, Json};
+
+/// One completed cell: the scenario identity plus its metrics and wall
+/// time. `wall_secs` is the only non-deterministic field —
+/// [`CellRecord::metrics_line`] excludes it for determinism comparisons.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellRecord {
+    /// Stable scenario key (`Scenario::key`).
+    pub key: String,
+    pub scheduler: String,
+    pub workload: String,
+    pub cluster: String,
+    pub seed: u64,
+    pub jobs: usize,
+    pub admitted: usize,
+    pub completed: usize,
+    pub total_utility: f64,
+    pub median_training_time: f64,
+    pub wall_secs: f64,
+}
+
+impl CellRecord {
+    fn metric_fields(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("key", json::s(&self.key)),
+            ("scheduler", json::s(&self.scheduler)),
+            ("workload", json::s(&self.workload)),
+            ("cluster", json::s(&self.cluster)),
+            ("seed", json::num(self.seed as f64)),
+            ("jobs", json::num(self.jobs as f64)),
+            ("admitted", json::num(self.admitted as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("total_utility", json::num(self.total_utility)),
+            ("median_training_time", json::num(self.median_training_time)),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = self.metric_fields();
+        fields.push(("wall_secs", json::num(self.wall_secs)));
+        json::obj(fields)
+    }
+
+    /// One compact JSONL line (what [`ResultStore::append`] writes).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// The record serialized *without* `wall_secs`: byte-identical across
+    /// `--jobs 1` and `--jobs N` runs of the same matrix (the determinism
+    /// contract).
+    pub fn metrics_line(&self) -> String {
+        json::obj(self.metric_fields()).to_string()
+    }
+
+    pub fn from_json(v: &Json) -> Result<CellRecord, String> {
+        let str_field = |k: &str| -> Result<String, String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("missing string field {k:?}"))
+        };
+        let num_field = |k: &str| -> Result<f64, String> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("missing numeric field {k:?}"))
+        };
+        Ok(CellRecord {
+            key: str_field("key")?,
+            scheduler: str_field("scheduler")?,
+            workload: str_field("workload")?,
+            cluster: str_field("cluster")?,
+            seed: num_field("seed")? as u64,
+            jobs: num_field("jobs")? as usize,
+            admitted: num_field("admitted")? as usize,
+            completed: num_field("completed")? as usize,
+            total_utility: num_field("total_utility")?,
+            median_training_time: num_field("median_training_time")?,
+            // tolerate older/foreign lines without a wall time
+            wall_secs: v.get("wall_secs").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    pub fn from_line(line: &str) -> Result<CellRecord, String> {
+        CellRecord::from_json(&Json::parse(line)?)
+    }
+}
+
+/// One aggregated row of [`ResultStore::summary`]: all seeds of one
+/// (scheduler, workload, cluster) scenario group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SummaryRow {
+    pub scheduler: String,
+    pub workload: String,
+    pub cluster: String,
+    pub seeds: usize,
+    pub mean_utility: f64,
+    pub mean_completed: f64,
+    pub mean_median_training_time: f64,
+    pub total_wall_secs: f64,
+}
+
+/// Append-only JSONL store over `results/*.jsonl` (see module docs).
+#[derive(Debug)]
+pub struct ResultStore {
+    path: std::path::PathBuf,
+    records: Vec<CellRecord>,
+    /// Scenario key → position in `records` (resume lookups are O(log n),
+    /// not a scan — matrices can have thousands of cells).
+    index: BTreeMap<String, usize>,
+}
+
+impl ResultStore {
+    /// Open (or create) the store at `path`, loading existing records.
+    /// Parent directories are created; a malformed line is a hard error
+    /// (a sweep must not silently resume over a corrupt store).
+    pub fn open(path: &str) -> Result<ResultStore, String> {
+        let pb = std::path::PathBuf::from(path);
+        if let Some(dir) = pb.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("{path}: {e}"))?;
+            }
+        }
+        let mut records = Vec::new();
+        let mut index = BTreeMap::new();
+        if pb.exists() {
+            let text =
+                std::fs::read_to_string(&pb).map_err(|e| format!("{path}: {e}"))?;
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rec = CellRecord::from_line(line)
+                    .map_err(|e| format!("{path}:{}: {e}", lineno + 1))?;
+                index.insert(rec.key.clone(), records.len());
+                records.push(rec);
+            }
+        }
+        Ok(ResultStore { path: pb, records, index })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Is this scenario key already on disk? (The runner skips such cells.)
+    pub fn contains(&self, key: &str) -> bool {
+        self.index.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[CellRecord] {
+        &self.records
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CellRecord> {
+        self.index.get(key).map(|&i| &self.records[i])
+    }
+
+    /// Append one record (one JSON line, flushed immediately). A key
+    /// already in the store is an error — the runner's skip logic should
+    /// have filtered it.
+    pub fn append(&mut self, rec: CellRecord) -> Result<(), String> {
+        if self.index.contains_key(&rec.key) {
+            return Err(format!("duplicate cell key {:?}", rec.key));
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| format!("{}: {e}", self.path.display()))?;
+        let mut line = rec.to_line();
+        line.push('\n');
+        f.write_all(line.as_bytes())
+            .and_then(|_| f.flush())
+            .map_err(|e| format!("{}: {e}", self.path.display()))?;
+        self.index.insert(rec.key.clone(), self.records.len());
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// Aggregate over seeds per (scheduler, workload, cluster) group,
+    /// sorted by group key — the result does not depend on the order in
+    /// which records were appended.
+    pub fn summary(&self) -> Vec<SummaryRow> {
+        let mut groups: BTreeMap<(String, String, String), Vec<&CellRecord>> =
+            BTreeMap::new();
+        for r in &self.records {
+            groups
+                .entry((r.scheduler.clone(), r.workload.clone(), r.cluster.clone()))
+                .or_default()
+                .push(r);
+        }
+        groups
+            .into_iter()
+            .map(|((scheduler, workload, cluster), rs)| {
+                let n = rs.len() as f64;
+                SummaryRow {
+                    scheduler,
+                    workload,
+                    cluster,
+                    seeds: rs.len(),
+                    mean_utility: rs.iter().map(|r| r.total_utility).sum::<f64>() / n,
+                    mean_completed: rs.iter().map(|r| r.completed as f64).sum::<f64>()
+                        / n,
+                    mean_median_training_time: rs
+                        .iter()
+                        .map(|r| r.median_training_time)
+                        .sum::<f64>()
+                        / n,
+                    total_wall_secs: rs.iter().map(|r| r.wall_secs).sum(),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(key: &str, seed: u64, utility: f64) -> CellRecord {
+        CellRecord {
+            key: key.to_string(),
+            scheduler: "pd-ors".into(),
+            workload: "synth-i10-t10-mixD-b100".into(),
+            cluster: "homog-h8".into(),
+            seed,
+            jobs: 10,
+            admitted: 7,
+            completed: 6,
+            total_utility: utility,
+            median_training_time: 4.5,
+            wall_secs: 0.012,
+        }
+    }
+
+    fn tmp_path(tag: &str) -> String {
+        let dir = std::env::temp_dir();
+        dir.join(format!("dmlrs_store_{tag}_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn record_json_round_trip() {
+        let r = sample("k1", 3, 123.456);
+        let back = CellRecord::from_line(&r.to_line()).unwrap();
+        assert_eq!(r, back);
+        // metrics_line drops only the wall time
+        assert!(r.to_line().contains("wall_secs"));
+        assert!(!r.metrics_line().contains("wall_secs"));
+        assert!(r.metrics_line().contains("total_utility"));
+    }
+
+    #[test]
+    fn store_appends_and_reopens() {
+        let path = tmp_path("reopen");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut st = ResultStore::open(&path).unwrap();
+            assert!(st.is_empty());
+            st.append(sample("a", 0, 1.0)).unwrap();
+            st.append(sample("b", 1, 2.0)).unwrap();
+            assert!(st.contains("a"));
+            assert!(!st.contains("c"));
+            // duplicate keys are rejected
+            assert!(st.append(sample("a", 0, 1.0)).is_err());
+        }
+        let st = ResultStore::open(&path).unwrap();
+        assert_eq!(st.len(), 2);
+        assert_eq!(st.get("b").unwrap().total_utility, 2.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn summary_is_order_insensitive() {
+        let mut fwd = Vec::new();
+        for seed in 0..4u64 {
+            let mut r = sample(&format!("k{seed}"), seed, seed as f64 * 10.0);
+            r.wall_secs = 0.5;
+            fwd.push(r);
+        }
+        let path_a = tmp_path("sum_a");
+        let path_b = tmp_path("sum_b");
+        let _ = std::fs::remove_file(&path_a);
+        let _ = std::fs::remove_file(&path_b);
+        let mut a = ResultStore::open(&path_a).unwrap();
+        let mut b = ResultStore::open(&path_b).unwrap();
+        for r in &fwd {
+            a.append(r.clone()).unwrap();
+        }
+        for r in fwd.iter().rev() {
+            b.append(r.clone()).unwrap();
+        }
+        assert_eq!(a.summary(), b.summary());
+        let rows = a.summary();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].seeds, 4);
+        assert!((rows[0].mean_utility - 15.0).abs() < 1e-12);
+        assert!((rows[0].total_wall_secs - 2.0).abs() < 1e-12);
+        let _ = std::fs::remove_file(&path_a);
+        let _ = std::fs::remove_file(&path_b);
+    }
+
+    #[test]
+    fn malformed_line_is_an_error() {
+        let path = tmp_path("bad");
+        std::fs::write(&path, "{\"not\": \"a record\"}\n").unwrap();
+        let e = ResultStore::open(&path).unwrap_err();
+        assert!(e.contains("missing"), "{e}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

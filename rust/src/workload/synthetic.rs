@@ -15,7 +15,7 @@
 //! free — exactly the locality trade-off the paper studies (co-location
 //! speeds a job up ~1.5–3×, while spread placements remain viable).
 
-use crate::cluster::{Cluster, ResVec};
+use crate::cluster::{Cluster, MachineClass, ResVec};
 use crate::jobs::Job;
 use crate::util::Rng;
 
@@ -64,6 +64,39 @@ pub fn paper_machine_capacity() -> ResVec {
 /// Homogeneous paper-style cluster of `h` machines.
 pub fn paper_cluster(h: usize) -> Cluster {
     Cluster::homogeneous(h, paper_machine_capacity())
+}
+
+/// The `(count, capacity scale)` machine classes of the standard skewed
+/// cluster shape: a quarter of the `h` machines are "big" (`skew ×`), a
+/// quarter "small" (`1/skew ×`), the rest standard. The single source of
+/// the shape — [`paper_cluster_skewed`] and the sweep subsystem's
+/// `ClusterSpec::skewed` both derive from it.
+pub fn skewed_classes(h: usize, skew: f64) -> [(usize, f64); 3] {
+    let big = h / 4;
+    let small = h / 4;
+    [(big, skew), (h - big - small, 1.0), (small, 1.0 / skew.max(1e-9))]
+}
+
+/// Heterogeneous paper-style cluster from `(count, capacity scale)`
+/// machine classes, scale 1.0 being the paper capacity — the one place
+/// class lists become machines (the sweep subsystem's `ClusterSpec`
+/// builds through here too).
+pub fn paper_cluster_classes(classes: &[(usize, f64)]) -> Cluster {
+    let cap = paper_machine_capacity();
+    let classes: Vec<MachineClass> = classes
+        .iter()
+        .map(|&(count, scale)| MachineClass::new(count, cap.scaled(scale)))
+        .collect();
+    Cluster::heterogeneous(&classes)
+}
+
+/// Heterogeneous paper-style cluster of `h` machines with the
+/// [`skewed_classes`] shape — same machine count as [`paper_cluster`]
+/// but skewed per-machine capacities (the sweep subsystem's
+/// homogeneous-vs-skewed scenario axis). `skew = 1` recovers the
+/// homogeneous cluster.
+pub fn paper_cluster_skewed(h: usize, skew: f64) -> Cluster {
+    paper_cluster_classes(&skewed_classes(h, skew))
 }
 
 /// Draw the arrival slot with the alternating 1/3 (odd) / 2/3 (even) rates.
@@ -151,6 +184,22 @@ mod tests {
             assert!(w[0].arrival <= w[1].arrival);
             assert!(w[0].id < w[1].id);
         }
+    }
+
+    #[test]
+    fn skewed_cluster_preserves_machine_count_and_skews_capacity() {
+        let c = paper_cluster_skewed(10, 2.0);
+        assert_eq!(c.len(), 10);
+        let cap = paper_machine_capacity();
+        // 2 big, 6 standard, 2 small; ids sequential
+        assert_eq!(c.machines[0].capacity, cap.scaled(2.0));
+        assert_eq!(c.machines[3].capacity, cap);
+        assert_eq!(c.machines[9].capacity, cap.scaled(0.5));
+        for (i, m) in c.machines.iter().enumerate() {
+            assert_eq!(m.id, i);
+        }
+        // skew = 1 recovers the homogeneous cluster
+        assert_eq!(paper_cluster_skewed(7, 1.0).machines, paper_cluster(7).machines);
     }
 
     #[test]

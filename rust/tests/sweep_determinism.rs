@@ -1,0 +1,124 @@
+//! Sweep determinism contract: a scenario matrix must produce
+//! byte-identical per-cell metrics whether it runs on 1 worker or 8, and
+//! the JSONL store's aggregation must not depend on record order.
+
+use dmlrs::sweep::{
+    run_matrix, CellRecord, ClusterSpec, ResultStore, ScenarioMatrix, WorkloadSpec,
+};
+
+fn quick_matrix() -> ScenarioMatrix {
+    ScenarioMatrix::new()
+        .schedulers(&["pd-ors", "fifo", "drf"])
+        .workload(WorkloadSpec::synthetic(8, 10, 100))
+        .cluster(ClusterSpec::homogeneous(4))
+        .cluster(ClusterSpec::skewed(4, 2.0))
+        .seeds(2)
+}
+
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("dmlrs_sweep_det_{tag}_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn jobs_1_and_jobs_8_produce_byte_identical_metrics() {
+    let m = quick_matrix();
+    let serial = run_matrix(&m, 1, None).expect("serial sweep");
+    let parallel = run_matrix(&m, 8, None).expect("parallel sweep");
+    assert_eq!(serial.len(), m.len());
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.scenario, b.scenario, "matrix order must be stable");
+        // byte-identical metrics (wall time is the only field allowed to
+        // differ between runs)
+        assert_eq!(a.record.metrics_line(), b.record.metrics_line());
+        // and the full simulation outcomes agree job by job
+        assert_eq!(a.result, b.result);
+    }
+}
+
+#[test]
+fn persisted_jsonl_metrics_are_identical_across_thread_counts() {
+    let path_a = tmp_path("serial");
+    let path_b = tmp_path("parallel");
+    let _ = std::fs::remove_file(&path_a);
+    let _ = std::fs::remove_file(&path_b);
+    let m = quick_matrix();
+    {
+        let mut st = ResultStore::open(&path_a).expect("open serial store");
+        run_matrix(&m, 1, Some(&mut st)).expect("serial sweep");
+    }
+    {
+        let mut st = ResultStore::open(&path_b).expect("open parallel store");
+        run_matrix(&m, 8, Some(&mut st)).expect("parallel sweep");
+    }
+    let lines = |p: &str| -> Vec<String> {
+        std::fs::read_to_string(p)
+            .unwrap()
+            .lines()
+            .map(|l| CellRecord::from_line(l).unwrap().metrics_line())
+            .collect()
+    };
+    assert_eq!(lines(&path_a), lines(&path_b));
+    let _ = std::fs::remove_file(&path_a);
+    let _ = std::fs::remove_file(&path_b);
+}
+
+#[test]
+fn store_aggregation_is_order_insensitive() {
+    let m = quick_matrix();
+    let outcomes = run_matrix(&m, 4, None).expect("sweep");
+    let path_f = tmp_path("fwd");
+    let path_r = tmp_path("rev");
+    let _ = std::fs::remove_file(&path_f);
+    let _ = std::fs::remove_file(&path_r);
+    let mut fwd = ResultStore::open(&path_f).expect("open");
+    let mut rev = ResultStore::open(&path_r).expect("open");
+    for o in &outcomes {
+        fwd.append(o.record.clone()).expect("append");
+    }
+    for o in outcomes.iter().rev() {
+        rev.append(o.record.clone()).expect("append");
+    }
+    assert_eq!(fwd.summary(), rev.summary());
+    assert!(!fwd.summary().is_empty());
+    let _ = std::fs::remove_file(&path_f);
+    let _ = std::fs::remove_file(&path_r);
+}
+
+#[test]
+fn resume_skips_only_cells_already_on_disk() {
+    let path = tmp_path("resume");
+    let _ = std::fs::remove_file(&path);
+    // first run: only a sub-matrix (one cluster)
+    let small = ScenarioMatrix::new()
+        .schedulers(&["fifo", "drf"])
+        .workload(WorkloadSpec::synthetic(8, 10, 100))
+        .cluster(ClusterSpec::homogeneous(4))
+        .seeds(2);
+    {
+        let mut st = ResultStore::open(&path).expect("open");
+        let first = run_matrix(&small, 2, Some(&mut st)).expect("sweep");
+        assert!(first.iter().all(|o| !o.cached));
+    }
+    // second run: a superset matrix — old cells cached, new cells run,
+    // and cached metrics equal what a fresh run would produce
+    let bigger = ScenarioMatrix::new()
+        .schedulers(&["fifo", "drf"])
+        .workload(WorkloadSpec::synthetic(8, 10, 100))
+        .cluster(ClusterSpec::homogeneous(4))
+        .cluster(ClusterSpec::skewed(4, 2.0))
+        .seeds(2);
+    let mut st = ResultStore::open(&path).expect("open");
+    let second = run_matrix(&bigger, 2, Some(&mut st)).expect("sweep");
+    let cached = second.iter().filter(|o| o.cached).count();
+    assert_eq!(cached, small.len());
+    assert_eq!(second.len(), bigger.len());
+    let fresh = run_matrix(&bigger, 2, None).expect("sweep");
+    for (a, b) in second.iter().zip(&fresh) {
+        assert_eq!(a.record.metrics_line(), b.record.metrics_line());
+    }
+    let _ = std::fs::remove_file(&path);
+}

@@ -24,4 +24,25 @@ else
     echo "rustfmt unavailable; skipping"
 fi
 
+echo "== sweep bench (quick matrix, serial vs parallel) =="
+# Wall-time the quick scenario matrix at --jobs 1 vs all cores and emit
+# BENCH_sweep.json at the repo root (the bench trajectory data point).
+BIN=target/release/dmlrs
+PAR=$( (command -v nproc >/dev/null 2>&1 && nproc) || echo 2 )
+SERIAL_OUT=target/bench_sweep_serial.jsonl
+PAR_OUT=target/bench_sweep_parallel.jsonl
+rm -f "$SERIAL_OUT" "$PAR_OUT"
+# The sweep command prints "sweep: ... elapsed=<secs>s ..." itself —
+# parse that (portable; GNU date's sub-second %N is not).
+elapsed_of() { awk '/^sweep: /{sub(/.*elapsed=/,""); sub(/s .*/,""); print}'; }
+SERIAL_SECS=$("$BIN" sweep --quick --jobs 1 --out "$SERIAL_OUT" | elapsed_of)
+PAR_SECS=$("$BIN" sweep --quick --jobs "$PAR" --out "$PAR_OUT" | elapsed_of)
+CELLS=$(wc -l < "$SERIAL_OUT" | tr -d ' ')
+awk -v serial="$SERIAL_SECS" -v parallel="$PAR_SECS" -v par="$PAR" -v cells="$CELLS" 'BEGIN {
+    speedup = (parallel > 0) ? serial / parallel : 0;
+    printf "{\"bench\": \"sweep_quick_matrix\", \"cells\": %d, \"serial_secs\": %.3f, \"parallel_secs\": %.3f, \"parallel_jobs\": %d, \"speedup\": %.2f}\n", cells, serial, parallel, par, speedup;
+}' > ../BENCH_sweep.json
+cat ../BENCH_sweep.json
+rm -f "$SERIAL_OUT" "$PAR_OUT"
+
 echo "verify: OK"
