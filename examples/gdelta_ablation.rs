@@ -6,8 +6,8 @@
 //! ```
 
 use dmlrs::cluster::AllocLedger;
-use dmlrs::sched::theta::GdeltaMode;
-use dmlrs::sched::{PdOrs, PdOrsConfig};
+use dmlrs::sched::solver::GdeltaMode;
+use dmlrs::sched::{PdOrs, PdOrsConfig, PricingParams};
 use dmlrs::util::Rng;
 use dmlrs::workload::synthetic::paper_cluster;
 use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
@@ -18,6 +18,9 @@ fn main() {
     let cluster = paper_cluster(12);
     let mut rng = Rng::new(99);
     let jobs = synthetic_jobs(&SynthConfig::paper(25, horizon, MIX_DEFAULT), &mut rng);
+    // pricing depends only on (jobs, cluster, horizon): one estimate
+    // serves every G_δ variant below
+    let pricing = PricingParams::from_jobs(&jobs, &cluster, horizon);
 
     println!("== G_delta ablation: 12 machines, 25 jobs, T = 20 ==\n");
     println!(
@@ -31,7 +34,7 @@ fn main() {
             attempts: 5000,
             ..Default::default()
         };
-        let mut sched = PdOrs::new(cfg, &jobs, &cluster, horizon);
+        let mut sched = PdOrs::with_pricing(cfg, pricing.clone(), &cluster);
         let mut ledger = AllocLedger::new(&cluster, horizon);
         for job in &jobs {
             sched.on_arrival(job, &mut ledger);

@@ -3,12 +3,12 @@
 //! external + rounding), full per-job DP planning, and end-to-end
 //! admission throughput.
 
-use dmlrs::cluster::AllocLedger;
+use dmlrs::cluster::{AllocLedger, SlotSnapshot};
 use dmlrs::jobs::test_support::test_job;
-use dmlrs::lp::{solve, Cmp, LpProblem};
+use dmlrs::lp::{solve, solve_with, Cmp, LpProblem, LpWorkspace};
 use dmlrs::sched::dp::{plan_job, slot_prices, DpConfig, Masks};
 use dmlrs::sched::pricing::PricingParams;
-use dmlrs::sched::theta::{solve_theta, SlotView, ThetaConfig};
+use dmlrs::sched::solver::{solve_theta, ThetaConfig};
 use dmlrs::sched::{PdOrs, PdOrsConfig};
 use dmlrs::util::stats::Summary;
 use dmlrs::util::timer::{bench, fmt_duration};
@@ -63,7 +63,7 @@ fn scheduler_lp(groups: usize, rng: &mut Rng) -> LpProblem {
 fn main() {
     println!("# scheduler hot-path micro benches\n");
 
-    // --- LP solves at various group counts ---
+    // --- LP solves at various group counts: fresh tableaux vs workspace ---
     for groups in [1usize, 4, 16, 64] {
         let mut rng = Rng::new(1);
         let problems: Vec<LpProblem> = (0..16).map(|_| scheduler_lp(groups, &mut rng)).collect();
@@ -74,6 +74,15 @@ fn main() {
             k += 1;
         });
         report(&format!("simplex {groups} machine-groups ({} vars)", 2 * groups), &xs);
+
+        let mut ws = LpWorkspace::new();
+        let mut k = 0;
+        let xs = bench(4, 48, || {
+            let out = solve_with(&problems[k % problems.len()], &mut ws);
+            assert!(out.optimal().is_some());
+            k += 1;
+        });
+        report(&format!("simplex {groups} groups, reused workspace"), &xs);
     }
 
     // --- θ solve (Algorithm 4) on a fresh 100-machine cluster ---
@@ -85,16 +94,12 @@ fn main() {
         let prices = slot_prices(&ledger, &pricing, 0);
         let residual: Vec<_> = (0..100).map(|h| ledger.residual(0, h)).collect();
         let masks = Masks::all(100);
-        let view = SlotView {
-            prices: &prices,
-            residual: &residual,
-            allow_worker: &masks.allow_worker,
-            allow_ps: &masks.allow_ps,
-        };
+        let snap =
+            SlotSnapshot::new(prices, residual, masks.allow_worker, masks.allow_ps, true);
         let mut rng = Rng::new(2);
         let cfg = ThetaConfig::default();
         let xs = bench(4, 64, || {
-            let s = solve_theta(&job, &view, 800.0, &cfg, &mut rng);
+            let s = solve_theta(&job, &snap, 800.0, &cfg, &mut rng);
             assert!(s.is_some());
         });
         report("theta solve (H=100, v=800 samples)", &xs);
@@ -109,16 +114,17 @@ fn main() {
         let prices = slot_prices(&ledger, &pricing, 0);
         let residual: Vec<_> = (0..100).map(|h| ledger.residual(0, h)).collect();
         let masks = Masks::all(100);
-        let view = SlotView {
-            prices: &prices,
-            residual: &residual,
-            allow_worker: &masks.allow_worker,
-            allow_ps: &masks.allow_ps,
-        };
+        let snap = SlotSnapshot::new(
+            prices,
+            residual,
+            masks.allow_worker,
+            masks.allow_ps,
+            grouped,
+        );
         let mut rng = Rng::new(2);
         let cfg = ThetaConfig { group_machines: grouped, ..Default::default() };
         let xs = bench(2, 24, || {
-            let s = solve_theta(&job, &view, 800.0, &cfg, &mut rng);
+            let s = solve_theta(&job, &snap, 800.0, &cfg, &mut rng);
             assert!(s.is_some());
         });
         report(
@@ -127,22 +133,31 @@ fn main() {
         );
     }
 
-    // --- full per-job DP plan (Algorithms 2-4) ---
+    // --- full per-job DP plan (Algorithms 2-4), memoized vs oracle ---
     for h in [20usize, 100] {
-        let cluster = paper_cluster(h);
-        let ledger = AllocLedger::new(&cluster, 20);
-        let mut rng = Rng::new(3);
-        let jobs = synthetic_jobs(&SynthConfig::paper(8, 20, MIX_DEFAULT), &mut rng);
-        let pricing = PricingParams::from_jobs(&jobs, &cluster, 20);
-        let masks = Masks::all(h);
-        let cfg = DpConfig::default();
-        let mut prng = Rng::new(4);
-        let mut k = 0;
-        let xs = bench(2, 16, || {
-            let _ = plan_job(&jobs[k % jobs.len()], &ledger, &pricing, &masks, &cfg, &mut prng);
-            k += 1;
-        });
-        report(&format!("plan_job DP (H={h}, T=20)"), &xs);
+        for cache in [true, false] {
+            let cluster = paper_cluster(h);
+            let ledger = AllocLedger::new(&cluster, 20);
+            let mut rng = Rng::new(3);
+            let jobs = synthetic_jobs(&SynthConfig::paper(8, 20, MIX_DEFAULT), &mut rng);
+            let pricing = PricingParams::from_jobs(&jobs, &cluster, 20);
+            let masks = Masks::all(h);
+            let cfg = DpConfig { theta_cache: cache, ..Default::default() };
+            let mut prng = Rng::new(4);
+            let mut k = 0;
+            let xs = bench(2, 16, || {
+                let _ =
+                    plan_job(&jobs[k % jobs.len()], &ledger, &pricing, &masks, &cfg, &mut prng);
+                k += 1;
+            });
+            report(
+                &format!(
+                    "plan_job DP (H={h}, T=20, {})",
+                    if cache { "theta-cache" } else { "oracle   " }
+                ),
+                &xs,
+            );
+        }
     }
 
     // --- end-to-end admission throughput (the Thm-7 polynomial claim) ---

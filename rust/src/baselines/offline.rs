@@ -14,8 +14,9 @@ use crate::cluster::{AllocLedger, Cluster, NUM_RESOURCES};
 use crate::ilp::{solve_ilp_budgeted, IlpOutcome};
 use crate::jobs::{Job, Schedule};
 use crate::lp::{Cmp, LpProblem};
-use crate::sched::dp::{plan_job, DpConfig, Masks};
+use crate::sched::dp::{plan_job_with, DpConfig, Masks};
 use crate::sched::pricing::PricingParams;
+use crate::sched::solver::PlannerScratch;
 use crate::util::Rng;
 
 /// One candidate schedule with its utility.
@@ -34,6 +35,7 @@ fn candidates_for(
     cluster: &Cluster,
     horizon: usize,
     rng: &mut Rng,
+    scratch: &mut PlannerScratch,
 ) -> Vec<(f64, Schedule)> {
     let mut out: Vec<(f64, Schedule)> = Vec::new();
     // Uniform pricing: reuse the DP against truncated horizons, so each
@@ -48,7 +50,7 @@ fn candidates_for(
         let mut cfg = DpConfig::default();
         cfg.units = 24;
         cfg.theta.attempts = 20;
-        if let Some(plan) = plan_job(job, &ledger, &pricing, &masks, &cfg, rng) {
+        if let Some(plan) = plan_job_with(job, &ledger, &pricing, &masks, &cfg, rng, scratch) {
             let u = job.utility_at(plan.completion);
             if u > 0.0 {
                 out.push((u, plan.schedule));
@@ -72,9 +74,12 @@ pub fn offline_optimum(
     seed: u64,
 ) -> f64 {
     let mut rng = Rng::new(seed);
+    // one planner scratch across every job and truncation (the memo still
+    // resets per plan; only the buffers persist)
+    let mut scratch = PlannerScratch::new();
     let mut cands: Vec<Candidate> = Vec::new();
     for (i, job) in jobs.iter().enumerate() {
-        for (u, s) in candidates_for(job, cluster, horizon, &mut rng) {
+        for (u, s) in candidates_for(job, cluster, horizon, &mut rng, &mut scratch) {
             cands.push(Candidate { job_idx: i, utility: u, schedule: s });
         }
     }

@@ -12,7 +12,7 @@ use crate::sched::{PdOrs, PdOrsConfig};
 use crate::sim::metrics::median_training_time;
 use crate::sim::{SimEngine, TraceObserver};
 use crate::sweep::{
-    run_matrix, ClusterSpec, ResultStore, ScenarioMatrix, SweepSpec, WorkloadSpec,
+    run_matrix_with, ClusterSpec, ResultStore, ScenarioMatrix, SweepSpec, WorkloadSpec,
 };
 use crate::util::error::{Error, Result};
 use crate::util::timer::Timer;
@@ -63,7 +63,8 @@ fn workload(args: &Args, cfg: Option<&Config>) -> (Vec<Job>, usize, usize, u64) 
 
 /// Resolve the scheduler spec: `[scheduler]` config section overridden
 /// by the `--scheduler` flag. Seed precedence: explicit `--seed` flag >
-/// `scheduler.seed` config key > the workload default.
+/// `scheduler.seed` config key > the workload default. Solver knobs:
+/// `--dp-units N` and `--no-theta-cache` override their config keys.
 fn scheduler_spec(args: &Args, cfg: Option<&Config>, seed: u64) -> SchedulerSpec {
     let mut spec = SchedulerSpec::new("pd-ors");
     let mut config_has_seed = false;
@@ -82,6 +83,12 @@ fn scheduler_spec(args: &Args, cfg: Option<&Config>, seed: u64) -> SchedulerSpec
     }
     if args.get("seed").is_some() || !config_has_seed {
         spec = spec.with_seed(seed);
+    }
+    if let Some(units) = args.get("dp-units").and_then(|v| v.parse().ok()) {
+        spec.pdors.dp_units = units;
+    }
+    if args.bool("no-theta-cache") {
+        spec.pdors.theta_cache = false;
     }
     spec
 }
@@ -125,6 +132,11 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
         res.completed,
         median_training_time(&res)
     );
+    let sv = res.solver;
+    println!(
+        "solver: theta_solves={} memo_hits={} lp_solves={} lp_pivots={} rounding_attempts={}",
+        sv.theta_solves, sv.memo_hits, sv.lp_solves, sv.lp_pivots, sv.rounding_attempts
+    );
     Ok(())
 }
 
@@ -162,7 +174,13 @@ pub fn cmd_compare(args: &Args) -> Result<()> {
         Some(path) => Some(ResultStore::open(path).map_err(Error::from)?),
         None => None,
     };
-    let outcomes = run_matrix(&matrix, args.usize_or("par", 0), store.as_mut())?;
+    let theta_cache = !args.bool("no-theta-cache");
+    let outcomes = run_matrix_with(
+        &matrix,
+        args.usize_or("par", 0),
+        &move || SchedulerRegistry::builtin_with_theta_cache(theta_cache),
+        store.as_mut(),
+    )?;
 
     let reg = SchedulerRegistry::builtin();
     println!(
@@ -270,7 +288,13 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     let timer = Timer::start();
     let mut store = ResultStore::open(&spec.out).map_err(Error::from)?;
     let threads = spec.effective_threads();
-    let outcomes = run_matrix(&matrix, threads, Some(&mut store))?;
+    let theta_cache = !args.bool("no-theta-cache");
+    let outcomes = run_matrix_with(
+        &matrix,
+        threads,
+        &move || SchedulerRegistry::builtin_with_theta_cache(theta_cache),
+        Some(&mut store),
+    )?;
     let ran = outcomes.iter().filter(|o| !o.cached).count();
     let cached = outcomes.len() - ran;
 
@@ -323,10 +347,14 @@ pub fn cmd_experiment(args: &Args) -> Result<()> {
         seeds: args.usize_or("seeds", if args.bool("quick") { 1 } else { 3 }),
         quick: args.bool("quick"),
         threads: args.usize_or("jobs", 0),
+        theta_cache: !args.bool("no-theta-cache"),
     };
+    let timer = Timer::start();
     let table =
         run_figure(fig, &p).ok_or_else(|| err!("unknown figure {fig} (valid: 5..=17)"))?;
     print!("{table}");
+    // a '# ' comment so piped/saved output stays valid TSV
+    println!("# experiment: fig={fig} elapsed={:.3}s", timer.elapsed_secs());
     if let Some(out) = args.get("out") {
         table.save_tsv(out)?;
         eprintln!("wrote {out}");

@@ -77,15 +77,19 @@ COMMANDS:
               pd-ors|oasis|fifo|drf|dorm; see sched/registry.rs)
               --machines N --jobs N --horizon N --seed N [--trace]
               [--events]  print the engine's event trace
+              [--dp-units N] [--no-theta-cache]  solver knobs (the cache
+              is semantically invisible; disabling it is the parity oracle)
   compare     run the full zoo    (same flags; runs through the parallel
               sweep runner) [--par N] [--out results/compare.jsonl]
+              [--no-theta-cache]
   sweep       run a scenario matrix (schedulers x workloads x clusters x
               seeds) in parallel  [--jobs N] (worker threads; default =
               available parallelism) [--quick] [--seeds N]
               [--schedulers a,b,c] [--out results/sweep.jsonl] [--fresh]
+              [--no-theta-cache]
               cells already in the JSONL store are skipped (resumable)
   experiment  regenerate a figure --fig 5..17 [--quick] [--seeds N]
-              [--jobs N] [--out results/figNN.tsv]
+              [--jobs N] [--out results/figNN.tsv] [--no-theta-cache]
   train       end-to-end training --size tiny|small|base --steps N
               [--artifacts DIR] [--machines N] [--seed N]
   bounds      pricing constants   --machines N --jobs N --horizon N

@@ -1,9 +1,11 @@
 //! Cluster model: machines with multi-type resource capacities (paper §3.3).
 
 pub mod resource;
+pub mod snapshot;
 pub mod state;
 
 pub use resource::{ResVec, Resource, NUM_RESOURCES};
+pub use snapshot::{MachineGroup, PriceView, SignatureInterner, SlotSnapshot};
 pub use state::AllocLedger;
 
 /// A physical machine `h ∈ H` with capacity `C_h^r` per resource type.

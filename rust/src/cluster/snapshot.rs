@@ -1,0 +1,325 @@
+//! Immutable per-slot pricing snapshots — the first stage of the layered
+//! solver pipeline (snapshot → memo → LP workspace → rounding).
+//!
+//! [`SlotSnapshot`] captures everything the θ-solver prices against in one
+//! slot: per-machine prices, residual capacities, and the worker/PS
+//! eligibility masks — plus the *machine groups* (machines with identical
+//! `(price, residual, eligibility)` signatures collapsed into one LP
+//! variable pair, DESIGN.md §Perf). The planner builds each slot's
+//! snapshot **once per arrival**, so grouping is no longer re-derived
+//! inside every θ-solve of the DP's forward pass.
+//!
+//! [`SignatureInterner`] maps a snapshot's full group structure to a dense
+//! id. Interning is *exact* (the key is the complete structural data, not
+//! a hash), so two slots share an id iff their θ-subproblems are
+//! bit-identical for every workload — which is what makes the id safe as
+//! a memoization key in `sched::solver::memo`.
+
+use std::collections::HashMap;
+
+use super::resource::{ResVec, NUM_RESOURCES};
+
+/// Machines sharing one `(price, residual, eligibility)` signature.
+/// `members` lists machine indices in ascending order (machines are
+/// scanned in index order when grouping).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineGroup {
+    pub members: Vec<usize>,
+    pub price: [f64; NUM_RESOURCES],
+    pub residual: ResVec,
+    pub allow_worker: bool,
+    pub allow_ps: bool,
+}
+
+/// Per-machine structural key: price bits, residual bits, the two
+/// eligibility flags.
+type GroupKey = [u64; 2 * NUM_RESOURCES + 2];
+
+fn group_key(
+    price: &[f64; NUM_RESOURCES],
+    resid: &ResVec,
+    allow_worker: bool,
+    allow_ps: bool,
+) -> GroupKey {
+    let mut key = [0u64; 2 * NUM_RESOURCES + 2];
+    for r in 0..NUM_RESOURCES {
+        key[r] = price[r].to_bits();
+        key[NUM_RESOURCES + r] = resid.0[r].to_bits();
+    }
+    key[2 * NUM_RESOURCES] = allow_worker as u64;
+    key[2 * NUM_RESOURCES + 1] = allow_ps as u64;
+    key
+}
+
+/// The immutable per-slot view of the cluster the solver prices against
+/// (`p_h^r[t]`, `Ĉ_h[t]`, eligibility, machine groups). See module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotSnapshot {
+    /// `p_h^r[t]` per machine.
+    pub prices: Vec<[f64; NUM_RESOURCES]>,
+    /// Residual capacity `Ĉ_h[t]`.
+    pub residual: Vec<ResVec>,
+    /// Machines allowed to host workers (OASiS separates these sets;
+    /// PD-ORS allows everything everywhere).
+    pub allow_worker: Vec<bool>,
+    /// Machines allowed to host parameter servers.
+    pub allow_ps: Vec<bool>,
+    /// Machine groups in first-seen (machine-index) order. With grouping
+    /// disabled this is one group per eligible machine — the paper's
+    /// literal per-machine formulation, kept as the grouping oracle.
+    pub groups: Vec<MachineGroup>,
+}
+
+impl SlotSnapshot {
+    /// Build a snapshot, deduplicating identical machines into groups
+    /// when `group_machines` is set. Machines with neither eligibility
+    /// flag are excluded from the groups entirely (they can host nothing).
+    pub fn new(
+        prices: Vec<[f64; NUM_RESOURCES]>,
+        residual: Vec<ResVec>,
+        allow_worker: Vec<bool>,
+        allow_ps: Vec<bool>,
+        group_machines: bool,
+    ) -> SlotSnapshot {
+        let n = residual.len();
+        assert_eq!(prices.len(), n, "prices/residual length mismatch");
+        assert_eq!(allow_worker.len(), n, "allow_worker length mismatch");
+        assert_eq!(allow_ps.len(), n, "allow_ps length mismatch");
+        let mut groups: Vec<MachineGroup> = Vec::new();
+        let mut index: HashMap<GroupKey, usize> = HashMap::new();
+        for h in 0..n {
+            let aw = allow_worker[h];
+            let ap = allow_ps[h];
+            if !aw && !ap {
+                continue;
+            }
+            if !group_machines {
+                groups.push(MachineGroup {
+                    members: vec![h],
+                    price: prices[h],
+                    residual: residual[h],
+                    allow_worker: aw,
+                    allow_ps: ap,
+                });
+                continue;
+            }
+            let key = group_key(&prices[h], &residual[h], aw, ap);
+            match index.get(&key) {
+                Some(&g) => groups[g].members.push(h),
+                None => {
+                    index.insert(key, groups.len());
+                    groups.push(MachineGroup {
+                        members: vec![h],
+                        price: prices[h],
+                        residual: residual[h],
+                        allow_worker: aw,
+                        allow_ps: ap,
+                    });
+                }
+            }
+        }
+        SlotSnapshot { prices, residual, allow_worker, allow_ps, groups }
+    }
+
+    pub fn num_machines(&self) -> usize {
+        self.residual.len()
+    }
+
+    /// Borrowed facade over the snapshot (what solver internals take when
+    /// they do not need ownership).
+    pub fn view(&self) -> PriceView<'_> {
+        PriceView {
+            prices: &self.prices,
+            residual: &self.residual,
+            allow_worker: &self.allow_worker,
+            allow_ps: &self.allow_ps,
+            groups: &self.groups,
+        }
+    }
+}
+
+/// Borrowed view of a [`SlotSnapshot`].
+#[derive(Debug, Clone, Copy)]
+pub struct PriceView<'a> {
+    pub prices: &'a [[f64; NUM_RESOURCES]],
+    pub residual: &'a [ResVec],
+    pub allow_worker: &'a [bool],
+    pub allow_ps: &'a [bool],
+    pub groups: &'a [MachineGroup],
+}
+
+/// Exact structure → dense-id interner for snapshot signatures.
+///
+/// The key is the ordered list of group signatures *including member
+/// counts* — everything the θ LP relaxation and the internal closed form
+/// are built from. Two snapshots with equal ids therefore pose
+/// bit-identical subproblems (group *membership* may differ between them;
+/// per-slot disaggregation always uses the slot's own member lists).
+#[derive(Debug, Default)]
+pub struct SignatureInterner {
+    ids: HashMap<Vec<u64>, u32>,
+}
+
+impl SignatureInterner {
+    pub fn new() -> SignatureInterner {
+        SignatureInterner::default()
+    }
+
+    /// Drop all interned signatures (ids restart from 0). The planner
+    /// clears the interner together with its θ-memo before each arrival:
+    /// prices move between arrivals (Eq. (12)), so ids must not leak
+    /// across planning episodes.
+    pub fn clear(&mut self) {
+        self.ids.clear();
+    }
+
+    /// Number of distinct signatures seen since the last [`clear`].
+    ///
+    /// [`clear`]: SignatureInterner::clear
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Intern the snapshot's group structure, returning its dense id.
+    pub fn intern(&mut self, snap: &SlotSnapshot) -> u32 {
+        let mut key: Vec<u64> =
+            Vec::with_capacity(snap.groups.len() * (2 * NUM_RESOURCES + 3));
+        for g in &snap.groups {
+            let gk = group_key(&g.price, &g.residual, g.allow_worker, g.allow_ps);
+            key.extend_from_slice(&gk);
+            key.push(g.members.len() as u64);
+        }
+        let next = self.ids.len() as u32;
+        *self.ids.entry(key).or_insert(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(n: usize, price: f64, cap: f64) -> SlotSnapshot {
+        SlotSnapshot::new(
+            vec![[price; NUM_RESOURCES]; n],
+            vec![ResVec::new([cap; NUM_RESOURCES]); n],
+            vec![true; n],
+            vec![true; n],
+            true,
+        )
+    }
+
+    #[test]
+    fn homogeneous_cluster_collapses_to_one_group() {
+        let s = flat(16, 1.0, 60.0);
+        assert_eq!(s.groups.len(), 1);
+        assert_eq!(s.groups[0].members, (0..16).collect::<Vec<_>>());
+        assert_eq!(s.num_machines(), 16);
+    }
+
+    #[test]
+    fn grouping_disabled_keeps_one_group_per_machine() {
+        let s = SlotSnapshot::new(
+            vec![[1.0; NUM_RESOURCES]; 4],
+            vec![ResVec::new([8.0; NUM_RESOURCES]); 4],
+            vec![true; 4],
+            vec![true; 4],
+            false,
+        );
+        assert_eq!(s.groups.len(), 4);
+        for (g, grp) in s.groups.iter().enumerate() {
+            assert_eq!(grp.members, vec![g]);
+        }
+    }
+
+    #[test]
+    fn distinct_prices_split_groups_in_first_seen_order() {
+        let mut prices = vec![[1.0; NUM_RESOURCES]; 5];
+        prices[1] = [2.0; NUM_RESOURCES];
+        prices[3] = [2.0; NUM_RESOURCES];
+        let s = SlotSnapshot::new(
+            prices,
+            vec![ResVec::new([8.0; NUM_RESOURCES]); 5],
+            vec![true; 5],
+            vec![true; 5],
+            true,
+        );
+        assert_eq!(s.groups.len(), 2);
+        assert_eq!(s.groups[0].members, vec![0, 2, 4]);
+        assert_eq!(s.groups[1].members, vec![1, 3]);
+    }
+
+    #[test]
+    fn ineligible_machines_are_excluded() {
+        let s = SlotSnapshot::new(
+            vec![[1.0; NUM_RESOURCES]; 3],
+            vec![ResVec::new([8.0; NUM_RESOURCES]); 3],
+            vec![true, false, false],
+            vec![true, false, true],
+            true,
+        );
+        // machine 1 can host nothing; machine 2 differs in eligibility
+        assert_eq!(s.groups.len(), 2);
+        assert_eq!(s.groups[0].members, vec![0]);
+        assert_eq!(s.groups[1].members, vec![2]);
+    }
+
+    #[test]
+    fn interner_ids_are_structural() {
+        let mut interner = SignatureInterner::new();
+        let a = flat(8, 1.0, 60.0);
+        let b = flat(8, 1.0, 60.0);
+        let c = flat(8, 2.0, 60.0); // different price
+        let d = flat(9, 1.0, 60.0); // different member count
+        let ia = interner.intern(&a);
+        let ib = interner.intern(&b);
+        let ic = interner.intern(&c);
+        let id = interner.intern(&d);
+        assert_eq!(ia, ib);
+        assert_ne!(ia, ic);
+        assert_ne!(ia, id);
+        assert_eq!(interner.len(), 3);
+        interner.clear();
+        assert!(interner.is_empty());
+        assert_eq!(interner.intern(&c), 0, "ids restart after clear");
+    }
+
+    #[test]
+    fn equal_structure_different_membership_shares_an_id() {
+        // [0,1]×cheap + [2]×dear vs [0,2]×cheap + [1]×dear: same ordered
+        // group structure, different member lists — the id must match
+        // (the memo stores group-level data; members are per-slot).
+        let cheap = [1.0; NUM_RESOURCES];
+        let dear = [3.0; NUM_RESOURCES];
+        let r = ResVec::new([8.0; NUM_RESOURCES]);
+        let a = SlotSnapshot::new(
+            vec![cheap, cheap, dear],
+            vec![r; 3],
+            vec![true; 3],
+            vec![true; 3],
+            true,
+        );
+        let b = SlotSnapshot::new(
+            vec![cheap, dear, cheap],
+            vec![r; 3],
+            vec![true; 3],
+            vec![true; 3],
+            true,
+        );
+        let mut interner = SignatureInterner::new();
+        assert_eq!(interner.intern(&a), interner.intern(&b));
+        assert_ne!(a.groups[0].members, b.groups[0].members);
+    }
+
+    #[test]
+    fn view_borrows_everything() {
+        let s = flat(4, 1.0, 10.0);
+        let v = s.view();
+        assert_eq!(v.prices.len(), 4);
+        assert_eq!(v.groups.len(), 1);
+        assert!(v.allow_worker.iter().all(|&x| x));
+    }
+}

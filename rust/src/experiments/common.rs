@@ -6,13 +6,16 @@
 
 use crate::util::json::{self, Json};
 
-/// A figure's data: one x column and one y column per series.
+/// A figure's data: one x column and one y column per series, plus
+/// free-form annotation lines (rendered as `# ...` comments in the TSV —
+/// the solver-counter summaries the bench scripts parse live here).
 #[derive(Debug, Clone)]
 pub struct Table {
     pub title: String,
     pub x_label: String,
     pub series: Vec<String>,
     pub rows: Vec<(f64, Vec<f64>)>,
+    pub notes: Vec<String>,
 }
 
 impl Table {
@@ -22,12 +25,18 @@ impl Table {
             x_label: x_label.to_string(),
             series: series.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            notes: Vec::new(),
         }
     }
 
     pub fn push(&mut self, x: f64, ys: Vec<f64>) {
         assert_eq!(ys.len(), self.series.len());
         self.rows.push((x, ys));
+    }
+
+    /// Attach an annotation line (shown as a `# ...` TSV comment).
+    pub fn note(&mut self, line: impl Into<String>) {
+        self.notes.push(line.into());
     }
 
     /// Column values of one series.
@@ -42,7 +51,11 @@ impl Table {
 
     /// TSV rendering (header + rows) — what the benches print.
     pub fn to_tsv(&self) -> String {
-        let mut out = format!("# {}\n{}", self.title, self.x_label);
+        let mut out = format!("# {}\n", self.title);
+        for n in &self.notes {
+            out.push_str(&format!("# {n}\n"));
+        }
+        out.push_str(&self.x_label);
         for s in &self.series {
             out.push('\t');
             out.push_str(s);
@@ -106,10 +119,12 @@ mod tests {
         let mut t = Table::new("Fig X", "jobs", &["A", "B"]);
         t.push(10.0, vec![1.0, 2.0]);
         t.push(20.0, vec![3.0, 4.0]);
+        t.note("solver: theta_solves=5 memo_hits=2");
         assert_eq!(t.column("B"), vec![2.0, 4.0]);
         let tsv = t.to_tsv();
         assert!(tsv.contains("jobs\tA\tB"));
         assert!(tsv.contains("20\t3.0000\t4.0000"));
+        assert!(tsv.contains("# solver: theta_solves=5 memo_hits=2\n"));
         let j = t.to_json();
         assert!(j.get("rows").unwrap().as_arr().unwrap().len() == 2);
     }

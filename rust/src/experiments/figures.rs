@@ -16,10 +16,12 @@ use crate::cluster::AllocLedger;
 use crate::jobs::{Job, Schedule};
 use crate::sched::registry::{SchedulerRegistry, ZOO};
 use crate::sched::rounding::{feasibility_rhs, gdelta_packing};
-use crate::sched::theta::GdeltaMode;
-use crate::sched::{PdOrs, PdOrsConfig};
+use crate::sched::solver::{GdeltaMode, SolverStats};
+use crate::sched::{PdOrs, PdOrsConfig, PricingParams};
 use crate::sim::metrics::utility_gain;
-use crate::sweep::{run_matrix, ClusterSpec, ScenarioMatrix, WorkloadSpec};
+use crate::sweep::{
+    run_matrix_with, CellOutcome, ClusterSpec, ScenarioMatrix, WorkloadSpec,
+};
 use crate::util::stats;
 use crate::util::Rng;
 use crate::workload::synthetic::paper_cluster;
@@ -34,18 +36,50 @@ pub struct ExpParams {
     pub quick: bool,
     /// Sweep worker threads (0 = available parallelism).
     pub threads: usize,
+    /// θ-memoization for the primal-dual schedulers (`--no-theta-cache`
+    /// flips it off — the parity oracle the solver bench times against).
+    pub theta_cache: bool,
 }
 
 impl Default for ExpParams {
     fn default() -> Self {
-        ExpParams { seeds: 3, quick: false, threads: 0 }
+        ExpParams { seeds: 3, quick: false, threads: 0, theta_cache: true }
     }
 }
 
 impl ExpParams {
     pub fn quick() -> Self {
-        ExpParams { seeds: 1, quick: true, threads: 0 }
+        ExpParams { seeds: 1, quick: true, ..Default::default() }
     }
+}
+
+/// Run a figure matrix through the sweep runner with this figure run's
+/// θ-cache setting applied to the whole zoo.
+fn run_figure_matrix(matrix: &ScenarioMatrix, p: &ExpParams) -> Vec<CellOutcome> {
+    let cache = p.theta_cache;
+    run_matrix_with(
+        matrix,
+        p.threads,
+        &move || SchedulerRegistry::builtin_with_theta_cache(cache),
+        None,
+    )
+    .expect("registered scheduler")
+}
+
+/// Summarize the run's solver counters as a `# solver: ...` table note
+/// (what `scripts/verify.sh` parses into `BENCH_solver.json`).
+fn solver_note(table: &mut Table, outcomes: &[CellOutcome]) {
+    let mut agg = SolverStats::default();
+    for o in outcomes {
+        agg.theta_solves += o.record.theta_solves;
+        agg.memo_hits += o.record.memo_hits;
+        agg.lp_pivots += o.record.lp_pivots;
+        agg.rounding_attempts += o.record.rounding_attempts;
+    }
+    table.note(format!(
+        "solver: theta_solves={} memo_hits={} lp_pivots={} rounding_attempts={}",
+        agg.theta_solves, agg.memo_hits, agg.lp_pivots, agg.rounding_attempts
+    ));
 }
 
 /// Average total utility per scheduler (registry keys) over seeds. `make`
@@ -68,7 +102,8 @@ fn utility_sweep(
         let (w, c) = make(x);
         matrix = matrix.case(w, c);
     }
-    let outcomes = run_matrix(&matrix, p.threads, None).expect("registered scheduler");
+    let outcomes = run_figure_matrix(&matrix, p);
+    solver_note(&mut table, &outcomes);
     // cells() ordering contract: columns outer, then schedulers, then seeds
     let per_x = schedulers.len() * p.seeds;
     for (ci, &x) in xs.iter().enumerate() {
@@ -166,7 +201,8 @@ pub fn fig09(p: &ExpParams) -> Table {
         .schedulers(&ZOO)
         .case(WorkloadSpec::synthetic(i, t, 4000), ClusterSpec::homogeneous(h))
         .seeds(p.seeds);
-    let outcomes = run_matrix(&matrix, p.threads, None).expect("registered scheduler");
+    let outcomes = run_figure_matrix(&matrix, p);
+    solver_note(&mut table, &outcomes);
     let ys: Vec<f64> = (0..ZOO.len())
         .map(|k| {
             outcomes[k * p.seeds..(k + 1) * p.seeds]
@@ -251,6 +287,10 @@ pub fn fig11(p: &ExpParams) -> Table {
     for seed in 0..p.seeds as u64 {
         let cluster = paper_cluster(h);
         let jobs = small_instance_jobs(i, t, 6000 + seed);
+        // Pricing depends only on (jobs, cluster, horizon) — identical
+        // for every G_δ variant of this seed, so it is computed once here
+        // instead of inside each variant's constructor.
+        let pricing = PricingParams::from_jobs(&jobs, &cluster, t);
         // the offline optimum is G-independent: compute it once per seed,
         // injecting every variant's chosen schedules so it dominates all
         let mut all_choices: Vec<(usize, f64, Schedule)> = Vec::new();
@@ -263,7 +303,7 @@ pub fn fig11(p: &ExpParams) -> Table {
                 seed,
                 ..Default::default()
             };
-            let mut pdors = PdOrs::new(cfg, &jobs, &cluster, t);
+            let mut pdors = PdOrs::with_pricing(cfg, pricing.clone(), &cluster);
             let mut ledger = AllocLedger::new(&cluster, t);
             for (k, job) in jobs.iter().enumerate() {
                 if let Some(s) = pdors.on_arrival(job, &mut ledger) {
@@ -345,7 +385,8 @@ fn gain_sweep(
             ClusterSpec::homogeneous(h),
         );
     }
-    let outcomes = run_matrix(&matrix, p.threads, None).expect("registered scheduler");
+    let outcomes = run_figure_matrix(&matrix, p);
+    solver_note(&mut table, &outcomes);
     // per column: p.seeds PD-ORS cells, then p.seeds OASiS cells
     let per_x = 2 * p.seeds;
     for (ci, &x) in xs.iter().enumerate() {
@@ -455,11 +496,28 @@ mod tests {
         assert!(run_figure(99, &ExpParams::quick()).is_none());
     }
 
+    /// Figure outputs must be independent of the θ-cache toggle, and the
+    /// cached run must actually exercise the memo.
+    #[test]
+    fn theta_cache_toggle_preserves_figure_outputs() {
+        let cached = ExpParams { seeds: 1, quick: true, threads: 1, ..Default::default() };
+        let oracle = ExpParams { theta_cache: false, ..cached };
+        let xs = [4usize];
+        let make =
+            |h: usize| (WorkloadSpec::synthetic(8, 10, 700), ClusterSpec::homogeneous(h));
+        let a = utility_sweep("t", "machines", &xs, &["pd-ors"], &cached, make);
+        let b = utility_sweep("t", "machines", &xs, &["pd-ors"], &oracle, make);
+        assert_eq!(a.rows, b.rows, "figure data must not depend on the θ-cache");
+        assert!(a.notes[0].contains("solver:"), "{:?}", a.notes);
+        assert!(!a.notes[0].contains("memo_hits=0 "), "cached run must hit: {:?}", a.notes);
+        assert!(b.notes[0].contains("memo_hits=0 "), "oracle must not hit: {:?}", b.notes);
+    }
+
     /// The sweep-runner path must reproduce the retired hand-rolled
     /// serial seed loop bit-for-bit (fixed-seed figure outputs unchanged).
     #[test]
     fn utility_sweep_matches_hand_rolled_serial_loop() {
-        let p = ExpParams { seeds: 2, quick: true, threads: 2 };
+        let p = ExpParams { seeds: 2, quick: true, threads: 2, ..Default::default() };
         let xs = [2usize, 4];
         let schedulers = ["fifo", "drf"];
         let make =

@@ -3,12 +3,18 @@
 //!
 //! [`simplex`] implements a dense two-phase primal simplex with Dantzig
 //! pricing and a Bland anti-cycling fallback. It is exact (up to fp
-//! tolerance) and deliberately simple; the scheduler-side performance work
-//! happens above it (machine-group aggregation in `sched::theta` shrinks
-//! the LPs by orders of magnitude — see DESIGN.md §Perf).
+//! tolerance) and deliberately simple. Two layers of performance work sit
+//! around it:
+//!
+//! * **above** — machine-group aggregation in `sched::solver` shrinks the
+//!   LPs by orders of magnitude (see DESIGN.md §Perf and the snapshot
+//!   layer in `cluster::snapshot`);
+//! * **inside** — [`LpWorkspace`] makes repeated solves allocation-free:
+//!   the caller owns the tableau/basis buffers and reuses them across the
+//!   thousands of θ-relaxations one admission plans through.
 
 pub mod problem;
 pub mod simplex;
 
 pub use problem::{Cmp, LpOutcome, LpProblem, LpSolution};
-pub use simplex::solve;
+pub use simplex::{solve, solve_with, LpStatus, LpWorkspace};

@@ -9,18 +9,39 @@ pub enum Cmp {
 }
 
 /// `minimize c·x  s.t.  rows, x ≥ 0`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct LpProblem {
     pub num_vars: usize,
     /// Objective coefficients `c` (minimization).
     pub objective: Vec<f64>,
     /// Constraint rows `(a, cmp, b)` meaning `a·x cmp b`.
     pub rows: Vec<(Vec<f64>, Cmp, f64)>,
+    /// Recycled row buffers ([`reset`](LpProblem::reset) parks dropped
+    /// rows here; [`add_row_sparse`](LpProblem::add_row_sparse) reuses
+    /// them) — keeps repeated problem builds allocation-free.
+    pool: Vec<Vec<f64>>,
 }
 
 impl LpProblem {
     pub fn new(num_vars: usize) -> LpProblem {
-        LpProblem { num_vars, objective: vec![0.0; num_vars], rows: Vec::new() }
+        LpProblem {
+            num_vars,
+            objective: vec![0.0; num_vars],
+            rows: Vec::new(),
+            pool: Vec::new(),
+        }
+    }
+
+    /// Clear the problem for reuse at a (possibly different) variable
+    /// count: the objective is zeroed, rows are dropped, and their
+    /// buffers are recycled for subsequent `add_row_sparse` calls.
+    pub fn reset(&mut self, num_vars: usize) {
+        self.num_vars = num_vars;
+        self.objective.clear();
+        self.objective.resize(num_vars, 0.0);
+        for (a, _, _) in self.rows.drain(..) {
+            self.pool.push(a);
+        }
     }
 
     pub fn set_objective(&mut self, c: Vec<f64>) {
@@ -35,7 +56,9 @@ impl LpProblem {
 
     /// Sparse convenience: coefficients given as (index, value) pairs.
     pub fn add_row_sparse(&mut self, terms: &[(usize, f64)], cmp: Cmp, b: f64) {
-        let mut a = vec![0.0; self.num_vars];
+        let mut a = self.pool.pop().unwrap_or_default();
+        a.clear();
+        a.resize(self.num_vars, 0.0);
         for &(j, v) in terms {
             a[j] += v;
         }

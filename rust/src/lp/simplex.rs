@@ -5,11 +5,34 @@
 //! initial basis; phase 1 minimizes the artificial sum (infeasible if it
 //! stays positive); phase 2 minimizes the real objective. Dantzig pricing
 //! with a Bland fallback after a stall threshold guards against cycling.
+//!
+//! **Workspaces.** The scheduler hot path solves thousands of
+//! similarly-sized LPs per arrival; allocating a fresh tableau each time
+//! dominated the solve cost. [`LpWorkspace`] owns every buffer the solver
+//! needs (tableau, rhs, basis, reduced costs, phase objectives, the
+//! solution vector) and is reused across solves —
+//! [`LpWorkspace::solve`] performs **zero heap allocations** once the
+//! buffers have grown to the problem size. [`solve`] remains the one-shot
+//! convenience (it builds a throwaway workspace); [`solve_with`] threads a
+//! caller-owned one.
 
 use super::problem::{Cmp, LpOutcome, LpProblem, LpSolution};
 
 const EPS: f64 = 1e-9;
 
+/// Solver verdict of a workspace solve; on `Optimal` the solution lives
+/// in the workspace ([`LpWorkspace::x`] / [`LpWorkspace::objective`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+}
+
+/// The dense tableau plus basis bookkeeping. Buffers persist across
+/// solves; [`Tableau::reset`] re-shapes them without reallocating once
+/// capacity has grown to the largest problem seen.
+#[derive(Debug, Default)]
 struct Tableau {
     /// `m x n` coefficient matrix (row-major), plus rhs column `b`.
     a: Vec<f64>,
@@ -18,9 +41,22 @@ struct Tableau {
     n: usize,
     /// basis[i] = column index basic in row i.
     basis: Vec<usize>,
+    /// Cumulative pivot count across every solve on this tableau.
+    pivots: u64,
 }
 
 impl Tableau {
+    fn reset(&mut self, m: usize, n: usize) {
+        self.m = m;
+        self.n = n;
+        self.a.clear();
+        self.a.resize(m * n, 0.0);
+        self.b.clear();
+        self.b.resize(m, 0.0);
+        self.basis.clear();
+        self.basis.resize(m, usize::MAX);
+    }
+
     #[inline]
     fn at(&self, i: usize, j: usize) -> f64 {
         self.a[i * self.n + j]
@@ -32,6 +68,7 @@ impl Tableau {
     }
 
     fn pivot(&mut self, row: usize, col: usize) {
+        self.pivots += 1;
         let n = self.n;
         let piv = self.at(row, col);
         debug_assert!(piv.abs() > EPS);
@@ -58,13 +95,22 @@ impl Tableau {
     }
 
     /// Minimize `c·x` over the current basis; `allowed` masks columns that
-    /// may enter (used to keep artificials out in phase 2).
+    /// may enter (used to keep artificials out in phase 2). `r` is the
+    /// caller-provided reduced-cost buffer.
     ///
     /// The reduced-cost row is computed once (O(n·m)) and then updated
     /// incrementally on every pivot (O(n)) — the full-tableau method.
-    fn optimize(&mut self, c: &[f64], allowed: &[bool], max_iters: usize) -> Result<(), LpOutcome> {
+    /// `Err(())` means unbounded.
+    fn optimize(
+        &mut self,
+        c: &[f64],
+        allowed: &[bool],
+        r: &mut Vec<f64>,
+        max_iters: usize,
+    ) -> Result<(), ()> {
         // r_j = c_j - c_B · B^{-1} A_j
-        let mut r: Vec<f64> = c.to_vec();
+        r.clear();
+        r.extend_from_slice(c);
         for i in 0..self.m {
             let cb = c[self.basis[i]];
             if cb != 0.0 {
@@ -119,7 +165,7 @@ impl Tableau {
                 }
             }
             let Some(row) = leave else {
-                return Err(LpOutcome::Unbounded);
+                return Err(());
             };
             self.pivot(row, col);
             // Incremental reduced-cost update with the normalized pivot row.
@@ -133,145 +179,231 @@ impl Tableau {
     }
 }
 
-/// Solve the LP. See module docs.
-pub fn solve(p: &LpProblem) -> LpOutcome {
-    let nv = p.num_vars;
-    let m = p.rows.len();
-    if m == 0 {
-        // unconstrained (x >= 0): minimum at x = 0 unless some c_j < 0.
-        if p.objective.iter().any(|&c| c < -EPS) {
-            return LpOutcome::Unbounded;
-        }
-        return LpOutcome::Optimal(LpSolution { x: vec![0.0; nv], objective: 0.0 });
+/// Caller-owned solver buffers (see module docs). Construct once, pass to
+/// [`LpWorkspace::solve`] / [`solve_with`] for every LP; the tableau and
+/// all side vectors are recycled in place.
+#[derive(Debug, Default)]
+pub struct LpWorkspace {
+    t: Tableau,
+    /// Per-row normalization flags (`b < 0` rows are sign-flipped).
+    flip: Vec<bool>,
+    eff_cmp: Vec<Cmp>,
+    slack_col: Vec<usize>,
+    art_col: Vec<usize>,
+    /// Phase objective buffer.
+    c: Vec<f64>,
+    /// Reduced-cost buffer.
+    r: Vec<f64>,
+    allowed: Vec<bool>,
+    x: Vec<f64>,
+    objective: f64,
+}
+
+impl LpWorkspace {
+    pub fn new() -> LpWorkspace {
+        LpWorkspace::default()
     }
 
-    // Count extra columns: one slack/surplus per inequality, artificials as
-    // needed (Ge and Eq rows, and Le rows with negative rhs after flip).
-    let mut n = nv;
-    let mut slack_col = vec![usize::MAX; m];
-    let mut art_col = vec![usize::MAX; m];
-    // Normalize rows to b >= 0 first.
-    let mut rows: Vec<(Vec<f64>, Cmp, f64)> = p.rows.clone();
-    for (a, cmp, b) in rows.iter_mut() {
-        if *b < 0.0 {
-            for v in a.iter_mut() {
-                *v = -*v;
-            }
-            *b = -*b;
-            *cmp = match *cmp {
-                Cmp::Le => Cmp::Ge,
-                Cmp::Ge => Cmp::Le,
-                Cmp::Eq => Cmp::Eq,
-            };
-        }
-    }
-    for (i, (_, cmp, _)) in rows.iter().enumerate() {
-        match cmp {
-            Cmp::Le => {
-                slack_col[i] = n;
-                n += 1;
-            }
-            Cmp::Ge => {
-                slack_col[i] = n; // surplus (coefficient -1)
-                n += 1;
-                art_col[i] = n;
-                n += 1;
-            }
-            Cmp::Eq => {
-                art_col[i] = n;
-                n += 1;
-            }
-        }
+    /// The optimal point of the most recent [`solve`](LpWorkspace::solve)
+    /// (valid only when it returned [`LpStatus::Optimal`]).
+    pub fn x(&self) -> &[f64] {
+        &self.x
     }
 
-    let mut t = Tableau {
-        a: vec![0.0; m * n],
-        b: vec![0.0; m],
-        m,
-        n,
-        basis: vec![usize::MAX; m],
-    };
-    for (i, (a, cmp, b)) in rows.iter().enumerate() {
-        for j in 0..nv {
-            *t.at_mut(i, j) = a[j];
-        }
-        t.b[i] = *b;
-        match cmp {
-            Cmp::Le => {
-                *t.at_mut(i, slack_col[i]) = 1.0;
-                t.basis[i] = slack_col[i];
-            }
-            Cmp::Ge => {
-                *t.at_mut(i, slack_col[i]) = -1.0;
-                *t.at_mut(i, art_col[i]) = 1.0;
-                t.basis[i] = art_col[i];
-            }
-            Cmp::Eq => {
-                *t.at_mut(i, art_col[i]) = 1.0;
-                t.basis[i] = art_col[i];
-            }
-        }
+    /// Objective value of the most recent optimal solve.
+    pub fn objective(&self) -> f64 {
+        self.objective
     }
 
-    let has_artificials = art_col.iter().any(|&c| c != usize::MAX);
-    let max_iters = 50 * (n + m) + 1000;
+    /// Cumulative simplex pivots across every solve on this workspace
+    /// (the `SolverStats` LP-pivot counter reads deltas of this).
+    pub fn total_pivots(&self) -> u64 {
+        self.t.pivots
+    }
 
-    if has_artificials {
-        // Phase 1: minimize sum of artificials.
-        let mut c1 = vec![0.0; n];
-        for &c in art_col.iter() {
-            if c != usize::MAX {
-                c1[c] = 1.0;
+    /// Solve `p` in place. Allocation-free once the buffers have grown to
+    /// the problem size; the solution stays in the workspace.
+    pub fn solve(&mut self, p: &LpProblem) -> LpStatus {
+        let nv = p.num_vars;
+        let m = p.rows.len();
+        self.x.clear();
+        self.x.resize(nv, 0.0);
+        self.objective = 0.0;
+        if m == 0 {
+            // unconstrained (x >= 0): minimum at x = 0 unless some c_j < 0.
+            if p.objective.iter().any(|&c| c < -EPS) {
+                return LpStatus::Unbounded;
             }
+            return LpStatus::Optimal;
         }
-        let allowed = vec![true; n];
-        if let Err(out) = t.optimize(&c1, &allowed, max_iters) {
-            return out; // unbounded phase 1 cannot happen, but propagate
-        }
-        let phase1: f64 = t
-            .basis
-            .iter()
-            .enumerate()
-            .filter(|(_, &bj)| c1[bj] > 0.0)
-            .map(|(i, _)| t.b[i])
-            .sum();
-        if phase1 > 1e-6 {
-            return LpOutcome::Infeasible;
-        }
-        // Drive remaining artificials out of the basis where possible.
-        for i in 0..m {
-            if c1[t.basis[i]] > 0.0 {
-                // find a non-artificial column with nonzero coefficient
-                let col = (0..n).find(|&j| c1[j] == 0.0 && t.at(i, j).abs() > 1e-7);
-                if let Some(j) = col {
-                    t.pivot(i, j);
+
+        // Count extra columns: one slack/surplus per inequality,
+        // artificials as needed (Ge and Eq rows, and Le rows with negative
+        // rhs after the sign flip). Rows are normalized to b >= 0 on the
+        // fly while filling the tableau — no row copies.
+        let LpWorkspace {
+            t,
+            flip,
+            eff_cmp,
+            slack_col,
+            art_col,
+            c,
+            r,
+            allowed,
+            x,
+            objective,
+        } = self;
+        flip.clear();
+        eff_cmp.clear();
+        slack_col.clear();
+        slack_col.resize(m, usize::MAX);
+        art_col.clear();
+        art_col.resize(m, usize::MAX);
+        let mut n = nv;
+        for (i, (_, cmp, b)) in p.rows.iter().enumerate() {
+            let fl = *b < 0.0;
+            let cmp = if fl {
+                match cmp {
+                    Cmp::Le => Cmp::Ge,
+                    Cmp::Ge => Cmp::Le,
+                    Cmp::Eq => Cmp::Eq,
                 }
-                // else: redundant row; harmless to leave (b[i] ~ 0).
+            } else {
+                *cmp
+            };
+            flip.push(fl);
+            eff_cmp.push(cmp);
+            match cmp {
+                Cmp::Le => {
+                    slack_col[i] = n;
+                    n += 1;
+                }
+                Cmp::Ge => {
+                    slack_col[i] = n; // surplus (coefficient -1)
+                    n += 1;
+                    art_col[i] = n;
+                    n += 1;
+                }
+                Cmp::Eq => {
+                    art_col[i] = n;
+                    n += 1;
+                }
             }
         }
-    }
 
-    // Phase 2.
-    let mut c2 = vec![0.0; n];
-    c2[..nv].copy_from_slice(&p.objective);
-    let mut allowed = vec![true; n];
-    for &c in art_col.iter() {
-        if c != usize::MAX {
-            allowed[c] = false;
+        t.reset(m, n);
+        for (i, (a, _, b)) in p.rows.iter().enumerate() {
+            if flip[i] {
+                for j in 0..nv {
+                    *t.at_mut(i, j) = -a[j];
+                }
+                t.b[i] = -*b;
+            } else {
+                for j in 0..nv {
+                    *t.at_mut(i, j) = a[j];
+                }
+                t.b[i] = *b;
+            }
+            match eff_cmp[i] {
+                Cmp::Le => {
+                    *t.at_mut(i, slack_col[i]) = 1.0;
+                    t.basis[i] = slack_col[i];
+                }
+                Cmp::Ge => {
+                    *t.at_mut(i, slack_col[i]) = -1.0;
+                    *t.at_mut(i, art_col[i]) = 1.0;
+                    t.basis[i] = art_col[i];
+                }
+                Cmp::Eq => {
+                    *t.at_mut(i, art_col[i]) = 1.0;
+                    t.basis[i] = art_col[i];
+                }
+            }
         }
-    }
-    if let Err(out) = t.optimize(&c2, &allowed, max_iters) {
-        return out;
-    }
 
-    let mut x = vec![0.0; nv];
-    for i in 0..m {
-        if t.basis[i] < nv {
-            x[t.basis[i]] = t.b[i].max(0.0);
+        let has_artificials = art_col.iter().any(|&col| col != usize::MAX);
+        let max_iters = 50 * (n + m) + 1000;
+
+        if has_artificials {
+            // Phase 1: minimize sum of artificials.
+            c.clear();
+            c.resize(n, 0.0);
+            for &col in art_col.iter() {
+                if col != usize::MAX {
+                    c[col] = 1.0;
+                }
+            }
+            allowed.clear();
+            allowed.resize(n, true);
+            if t.optimize(c, allowed, r, max_iters).is_err() {
+                // unbounded phase 1 cannot happen, but propagate
+                return LpStatus::Unbounded;
+            }
+            let phase1: f64 = t
+                .basis
+                .iter()
+                .enumerate()
+                .filter(|(_, &bj)| c[bj] > 0.0)
+                .map(|(i, _)| t.b[i])
+                .sum();
+            if phase1 > 1e-6 {
+                return LpStatus::Infeasible;
+            }
+            // Drive remaining artificials out of the basis where possible.
+            for i in 0..m {
+                if c[t.basis[i]] > 0.0 {
+                    // find a non-artificial column with nonzero coefficient
+                    let col = (0..n).find(|&j| c[j] == 0.0 && t.at(i, j).abs() > 1e-7);
+                    if let Some(j) = col {
+                        t.pivot(i, j);
+                    }
+                    // else: redundant row; harmless to leave (b[i] ~ 0).
+                }
+            }
         }
+
+        // Phase 2.
+        c.clear();
+        c.resize(n, 0.0);
+        c[..nv].copy_from_slice(&p.objective);
+        allowed.clear();
+        allowed.resize(n, true);
+        for &col in art_col.iter() {
+            if col != usize::MAX {
+                allowed[col] = false;
+            }
+        }
+        if t.optimize(c, allowed, r, max_iters).is_err() {
+            return LpStatus::Unbounded;
+        }
+
+        for i in 0..m {
+            if t.basis[i] < nv {
+                x[t.basis[i]] = t.b[i].max(0.0);
+            }
+        }
+        *objective = p.objective_value(x);
+        LpStatus::Optimal
     }
-    let objective = p.objective_value(&x);
-    LpOutcome::Optimal(LpSolution { x, objective })
+}
+
+/// Solve using a caller-owned workspace; the returned [`LpOutcome`] owns a
+/// copy of the solution vector (use [`LpWorkspace::solve`] directly to
+/// avoid even that copy).
+pub fn solve_with(p: &LpProblem, ws: &mut LpWorkspace) -> LpOutcome {
+    match ws.solve(p) {
+        LpStatus::Optimal => LpOutcome::Optimal(LpSolution {
+            x: ws.x().to_vec(),
+            objective: ws.objective(),
+        }),
+        LpStatus::Infeasible => LpOutcome::Infeasible,
+        LpStatus::Unbounded => LpOutcome::Unbounded,
+    }
+}
+
+/// One-shot solve with a throwaway workspace. See module docs.
+pub fn solve(p: &LpProblem) -> LpOutcome {
+    solve_with(p, &mut LpWorkspace::new())
 }
 
 #[cfg(test)]
@@ -393,5 +525,91 @@ mod tests {
         let x = assert_opt(&solve(&p), 6.0, 1e-7);
         assert!((x[0] - 4.0).abs() < 1e-7);
         assert!((x[3] - 2.0).abs() < 1e-7);
+    }
+
+    /// A dirty workspace must behave exactly like a fresh one — the
+    /// LpWorkspace-reuse contract the θ-solver hot path relies on.
+    #[test]
+    fn dirty_workspace_matches_fresh_solve() {
+        let mut big = LpProblem::new(4);
+        big.set_objective(vec![-0.75, 150.0, -0.02, 6.0]);
+        big.add_row(vec![0.25, -60.0, -0.04, 9.0], Cmp::Le, 0.0);
+        big.add_row(vec![0.5, -90.0, -0.02, 3.0], Cmp::Le, 0.0);
+        big.add_row(vec![0.0, 0.0, 1.0, 0.0], Cmp::Le, 1.0);
+        let mut small = LpProblem::new(2);
+        small.set_objective(vec![2.0, 3.0]);
+        small.add_row(vec![1.0, 1.0], Cmp::Ge, 10.0);
+        small.add_row(vec![1.0, 0.0], Cmp::Le, 6.0);
+
+        let mut ws = LpWorkspace::new();
+        // dirty the workspace with the bigger problem first, then solve
+        // the smaller one on the same buffers (shrinking reuse)
+        assert_eq!(ws.solve(&big), LpStatus::Optimal);
+        let pivots_after_big = ws.total_pivots();
+        assert!(pivots_after_big > 0);
+        assert_eq!(ws.solve(&small), LpStatus::Optimal);
+        let fresh = solve(&small);
+        let f = fresh.optimal().unwrap();
+        assert_eq!(ws.x(), &f.x[..], "reused workspace must match fresh solve");
+        assert_eq!(ws.objective(), f.objective);
+        assert!(ws.total_pivots() > pivots_after_big, "pivots accumulate");
+
+        // and growing reuse: back to the big problem, still identical
+        assert_eq!(ws.solve(&big), LpStatus::Optimal);
+        let fb = solve(&big);
+        assert_eq!(ws.x(), &fb.optimal().unwrap().x[..]);
+    }
+
+    /// Infeasible/unbounded outcomes must not leave stale state behind.
+    #[test]
+    fn workspace_survives_bad_outcomes() {
+        let mut infeasible = LpProblem::new(1);
+        infeasible.set_objective(vec![1.0]);
+        infeasible.add_row(vec![1.0], Cmp::Ge, 5.0);
+        infeasible.add_row(vec![1.0], Cmp::Le, 3.0);
+        let mut unbounded = LpProblem::new(1);
+        unbounded.set_objective(vec![-1.0]);
+        unbounded.add_row(vec![1.0], Cmp::Ge, 1.0);
+        let mut good = LpProblem::new(2);
+        good.set_objective(vec![2.0, 3.0]);
+        good.add_row(vec![1.0, 1.0], Cmp::Ge, 10.0);
+        good.add_row(vec![1.0, 0.0], Cmp::Le, 6.0);
+
+        let mut ws = LpWorkspace::new();
+        assert_eq!(ws.solve(&infeasible), LpStatus::Infeasible);
+        assert_eq!(ws.solve(&unbounded), LpStatus::Unbounded);
+        assert_eq!(ws.solve(&good), LpStatus::Optimal);
+        let f = solve(&good);
+        assert_eq!(ws.x(), &f.optimal().unwrap().x[..]);
+    }
+
+    /// `LpProblem::reset` recycles row buffers without changing semantics.
+    #[test]
+    fn problem_reset_reuses_rows() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(vec![2.0, 3.0]);
+        p.add_row_sparse(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 10.0);
+        p.add_row_sparse(&[(0, 1.0)], Cmp::Le, 6.0);
+        let first = solve(&p);
+        let first = first.optimal().unwrap().clone();
+
+        // rebuild the same problem through reset + pooled rows
+        p.reset(2);
+        assert!(p.rows.is_empty());
+        assert!(p.objective.iter().all(|&c| c == 0.0));
+        p.objective[0] = 2.0;
+        p.objective[1] = 3.0;
+        p.add_row_sparse(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 10.0);
+        p.add_row_sparse(&[(0, 1.0)], Cmp::Le, 6.0);
+        let second = solve(&p);
+        let second = second.optimal().unwrap().clone();
+        assert_eq!(first.x, second.x);
+        assert_eq!(first.objective, second.objective);
+
+        // reset to a different width works too
+        p.reset(3);
+        assert_eq!(p.num_vars, 3);
+        p.add_row_sparse(&[(2, 1.0)], Cmp::Le, 1.0);
+        assert_eq!(p.rows[0].0.len(), 3);
     }
 }

@@ -16,25 +16,38 @@
 //!    Θ(t̃, ·) for *every* candidate t̃ at once, instead of re-running the
 //!    recursion per t̃ (the paper's Algorithm 2 loop); this is exact and
 //!    saves a factor of T.
+//!
+//! The forward pass runs on the layered solver core: each slot's
+//! [`SlotSnapshot`] is built **once per arrival** (groups deduplicated at
+//! the source), its signature interned, and every θ-solve goes through
+//! [`solve_theta_ctx`] with the planner's [`PlannerScratch`] — memoized
+//! per `(signature, v)` unless the caller disabled the cache
+//! (`DpConfig::theta_cache = false`, the `--no-theta-cache` parity
+//! oracle).
 
-use crate::cluster::{AllocLedger, NUM_RESOURCES};
+use crate::cluster::{AllocLedger, SlotSnapshot, NUM_RESOURCES};
 use crate::jobs::{speed, Job, Locality, Schedule, SlotPlacement};
 use crate::util::Rng;
 
 use super::pricing::PricingParams;
-use super::theta::{solve_theta, SlotView, ThetaConfig, ThetaSolution};
+use super::solver::{
+    solve_theta_ctx, PlannerScratch, SolverCtx, SolverStats, ThetaConfig, ThetaSolution,
+};
 
 /// Search configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct DpConfig {
     /// Workload discretization granularity (units per job).
     pub units: usize,
+    /// Memoize θ-solutions per (snapshot signature, v) during the forward
+    /// pass. `false` = the parity oracle: every θ-solve hits the LP.
+    pub theta_cache: bool,
     pub theta: ThetaConfig,
 }
 
 impl Default for DpConfig {
     fn default() -> DpConfig {
-        DpConfig { units: 120, theta: ThetaConfig::default() }
+        DpConfig { units: 120, theta_cache: true, theta: ThetaConfig::default() }
     }
 }
 
@@ -47,8 +60,11 @@ pub struct PlanResult {
     pub cost: f64,
     pub utility: f64,
     pub completion: usize,
-    /// Total rounding attempts spent in θ-solves (Fig. 11 statistic).
+    /// Total rounding attempts spent in accepted θ-solves (Fig. 11
+    /// statistic; matches the pre-refactor bookkeeping).
     pub rounding_attempts: usize,
+    /// Solver counters for this planning episode.
+    pub solver: SolverStats,
 }
 
 /// Machine-eligibility masks (PD-ORS: all true; OASiS: disjoint sets).
@@ -92,10 +108,31 @@ pub fn slot_prices(
         .collect()
 }
 
-/// Algorithms 2 + 3: find the best schedule for `job` given the current
-/// ledger and prices. Returns `None` only if no feasible schedule exists
-/// within the horizon (the payoff may still be ≤ 0 — admission is the
-/// caller's call, per Algorithm 1 steps 3–4).
+/// Capture slot `t` of the ledger into an immutable snapshot: prices,
+/// residuals, the caller's eligibility masks, and the deduplicated
+/// machine groups.
+pub fn slot_snapshot(
+    ledger: &AllocLedger,
+    pricing: &PricingParams,
+    masks: &Masks,
+    t: usize,
+    group_machines: bool,
+) -> SlotSnapshot {
+    let prices = slot_prices(ledger, pricing, t);
+    let residual: Vec<_> =
+        (0..ledger.num_machines()).map(|h| ledger.residual(t, h)).collect();
+    SlotSnapshot::new(
+        prices,
+        residual,
+        masks.allow_worker.clone(),
+        masks.allow_ps.clone(),
+        group_machines,
+    )
+}
+
+/// [`plan_job_with`] over a throwaway [`PlannerScratch`] (tests, one-shot
+/// callers like the offline bound). Long-lived planners (`PdOrs`) keep a
+/// scratch across arrivals so buffers and memo capacity are recycled.
 pub fn plan_job(
     job: &Job,
     ledger: &AllocLedger,
@@ -103,6 +140,27 @@ pub fn plan_job(
     masks: &Masks,
     cfg: &DpConfig,
     rng: &mut Rng,
+) -> Option<PlanResult> {
+    let mut scratch = PlannerScratch::new();
+    plan_job_with(job, ledger, pricing, masks, cfg, rng, &mut scratch)
+}
+
+/// Algorithms 2 + 3: find the best schedule for `job` given the current
+/// ledger and prices. Returns `None` only if no feasible schedule exists
+/// within the horizon (the payoff may still be ≤ 0 — admission is the
+/// caller's call, per Algorithm 1 steps 3–4).
+///
+/// `scratch` carries the interner/memo/workspace across calls; its memo
+/// and interner are cleared here (prices move between arrivals), its
+/// buffers and cumulative [`SolverStats`] are not.
+pub fn plan_job_with(
+    job: &Job,
+    ledger: &AllocLedger,
+    pricing: &PricingParams,
+    masks: &Masks,
+    cfg: &DpConfig,
+    rng: &mut Rng,
+    scratch: &mut PlannerScratch,
 ) -> Option<PlanResult> {
     let horizon = ledger.horizon();
     if job.arrival >= horizon {
@@ -119,10 +177,17 @@ pub fn plan_job(
         return None; // even one unit cannot be trained in a slot
     }
 
+    // A memo is only valid within one planning episode — prices are a
+    // pure function of the (immutable, for the duration of this call)
+    // ledger, and they move as soon as an admission commits.
+    scratch.interner.clear();
+    scratch.memo.clear();
+    let stats_before = scratch.stats;
+
     const INF: f64 = f64::INFINITY;
-    // theta_cache[t - a][dv - 1] = θ(t, dv units)
+    // theta_table[t - a][dv - 1] = θ(t, dv units)
     let window = horizon - job.arrival;
-    let mut theta_cache: Vec<Vec<Option<ThetaSolution>>> =
+    let mut theta_table: Vec<Vec<Option<ThetaSolution>>> =
         vec![vec![None; cap_units]; window];
     let mut rounding_attempts = 0usize;
 
@@ -136,29 +201,29 @@ pub fn plan_job(
 
     for ti in 0..window {
         let t = job.arrival + ti;
-        let prices = slot_prices(ledger, pricing, t);
-        let residual: Vec<_> =
-            (0..ledger.num_machines()).map(|h| ledger.residual(t, h)).collect();
-        let view = SlotView {
-            prices: &prices,
-            residual: &residual,
-            allow_worker: &masks.allow_worker,
-            allow_ps: &masks.allow_ps,
-        };
+        let snap = slot_snapshot(ledger, pricing, masks, t, cfg.theta.group_machines);
+        let sig = if cfg.theta_cache { scratch.interner.intern(&snap) } else { 0 };
         // θ(t, dv) for dv = 1..=cap_units
         for dv in 1..=cap_units {
-            let sol = solve_theta(job, &view, dv as f64 * unit, &cfg.theta, rng);
+            let mut ctx = SolverCtx {
+                rng: &mut *rng,
+                ws: &mut scratch.ws,
+                memo: if cfg.theta_cache { Some(&mut scratch.memo) } else { None },
+                sig,
+                stats: &mut scratch.stats,
+            };
+            let sol = solve_theta_ctx(job, &snap, dv as f64 * unit, &cfg.theta, &mut ctx);
             if let Some(s) = &sol {
                 rounding_attempts += s.rounding_attempts;
             }
-            theta_cache[ti][dv - 1] = sol;
+            theta_table[ti][dv - 1] = sol;
         }
         // relax: new[v] = min(old[v], θ(t,dv) + old[v-dv])
         let mut new_cost = best_cost.clone();
         let mut slot_choice = vec![0u16; units + 1];
         for v in 1..=units {
             for dv in 1..=cap_units.min(v) {
-                if let Some(th) = &theta_cache[ti][dv - 1] {
+                if let Some(th) = &theta_table[ti][dv - 1] {
                     let prev = best_cost[v - dv];
                     if prev < INF {
                         let cand = prev + th.cost;
@@ -183,6 +248,7 @@ pub fn plan_job(
         }
     }
 
+    let solver = scratch.stats.since(&stats_before);
     let (best_ti, _lambda, cost, _u_at_t) = best?;
 
     // Reconstruct: walk the choice table backwards from (best_ti, units).
@@ -195,7 +261,7 @@ pub fn plan_job(
     while v > 0 && ti >= 0 {
         let dv = choice[ti as usize][v] as usize;
         if dv > 0 {
-            let th = theta_cache[ti as usize][dv - 1]
+            let th = theta_table[ti as usize][dv - 1]
                 .as_ref()
                 .expect("choice points at a computed θ");
             slots.push(SlotPlacement {
@@ -217,7 +283,15 @@ pub fn plan_job(
     let utility = job.utility_at(completion);
     let payoff = utility - cost;
 
-    Some(PlanResult { schedule, payoff, cost, utility, completion, rounding_attempts })
+    Some(PlanResult {
+        schedule,
+        payoff,
+        cost,
+        utility,
+        completion,
+        rounding_attempts,
+        solver,
+    })
 }
 
 #[cfg(test)]
@@ -252,6 +326,7 @@ mod tests {
         assert_eq!(plan.completion, plan.schedule.completion_time().unwrap());
         assert!((plan.utility - job.utility_at(plan.completion)).abs() < 1e-9);
         assert!((plan.payoff - (plan.utility - plan.cost)).abs() < 1e-9);
+        assert!(plan.solver.theta_solves > 0, "DP must account its θ-solves");
     }
 
     #[test]
@@ -314,5 +389,72 @@ mod tests {
         .unwrap();
         // finer discretization can only help (allow small fp slack)
         assert!(fine.cost <= coarse.cost * 1.05 + 1e-9);
+    }
+
+    /// The tentpole parity contract at the DP level: with and without the
+    /// θ-memo, the planned schedule, its cost, and the RNG stream are
+    /// byte-identical — on an empty ledger every slot shares one
+    /// signature, so the cached run must also show memo hits and fewer
+    /// LP solves.
+    #[test]
+    fn theta_cache_is_semantically_invisible() {
+        let (ledger, pricing) = setup(6, 12);
+        let job = test_job(0);
+        let masks = Masks::all(6);
+        let cached_cfg = DpConfig::default();
+        let oracle_cfg = DpConfig { theta_cache: false, ..Default::default() };
+
+        let mut rng_a = Rng::new(3);
+        let a = plan_job(&job, &ledger, &pricing, &masks, &cached_cfg, &mut rng_a)
+            .expect("feasible");
+        let mut rng_b = Rng::new(3);
+        let b = plan_job(&job, &ledger, &pricing, &masks, &oracle_cfg, &mut rng_b)
+            .expect("feasible");
+
+        assert_eq!(a.schedule.slots, b.schedule.slots);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.payoff, b.payoff);
+        assert_eq!(a.completion, b.completion);
+        assert_eq!(a.rounding_attempts, b.rounding_attempts);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG lockstep");
+
+        assert_eq!(a.solver.theta_solves, b.solver.theta_solves);
+        assert!(a.solver.memo_hits > 0, "quiet slots must hit the memo");
+        assert_eq!(b.solver.memo_hits, 0, "oracle never consults a memo");
+        assert!(
+            a.solver.lp_solves < b.solver.lp_solves,
+            "memo must absorb repeat LP solves ({} vs {})",
+            a.solver.lp_solves,
+            b.solver.lp_solves
+        );
+    }
+
+    /// A reused scratch must not leak memo state across planning episodes.
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        let (ledger, pricing) = setup(4, 10);
+        let job_a = test_job(0);
+        let job_b = test_job(1);
+        let masks = Masks::all(4);
+        let cfg = DpConfig::default();
+
+        let mut scratch = PlannerScratch::new();
+        let mut rng1 = Rng::new(5);
+        let _ = plan_job_with(&job_a, &ledger, &pricing, &masks, &cfg, &mut rng1, &mut scratch);
+        let reused =
+            plan_job_with(&job_b, &ledger, &pricing, &masks, &cfg, &mut rng1, &mut scratch)
+                .expect("feasible");
+
+        // fresh scratch + identical RNG history for job_b
+        let mut rng2 = Rng::new(5);
+        let mut warmup = PlannerScratch::new();
+        let _ = plan_job_with(&job_a, &ledger, &pricing, &masks, &cfg, &mut rng2, &mut warmup);
+        let fresh = plan_job(&job_b, &ledger, &pricing, &masks, &cfg, &mut rng2)
+            .expect("feasible");
+
+        assert_eq!(reused.schedule.slots, fresh.schedule.slots);
+        assert_eq!(reused.cost, fresh.cost);
+        // cumulative counters accumulate across both plans
+        assert!(scratch.stats.theta_solves >= reused.solver.theta_solves);
     }
 }

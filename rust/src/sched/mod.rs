@@ -4,9 +4,8 @@
 //!   `Q_h^r(ρ) = L (U^r/L)^{ρ/C_h^r}` and the `U^r`, `L`, `μ` constants.
 //! * [`rounding`]  — the randomized rounding scheme (27)–(28) and the
 //!   pre-rounding gain factor `G_δ` of Theorems 3/4.
-//! * [`theta`]     — Algorithm 4: the per-slot problem θ(t, v) with the
-//!   internal (co-located, closed form) and external (LP relaxation +
-//!   rounding) cases.
+//! * [`solver`]    — the layered θ-solver core (Algorithm 4): snapshot →
+//!   memo → LP workspace → rounding, with [`SolverStats`] counters.
 //! * [`dp`]        — Algorithms 2–3: the dynamic program Θ(t̃, V) over
 //!   per-slot workloads and the completion-time search.
 //! * [`pdors`]     — Algorithm 1: the online primal-dual admission loop,
@@ -20,8 +19,9 @@ pub mod pdors;
 pub mod pricing;
 pub mod registry;
 pub mod rounding;
-pub mod theta;
+pub mod solver;
 
 pub use pdors::{PdOrs, PdOrsConfig, Placement};
 pub use pricing::PricingParams;
 pub use registry::{run_named, SchedulerRegistry, SchedulerSpec, ZOO};
+pub use solver::SolverStats;

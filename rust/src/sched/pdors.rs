@@ -8,9 +8,9 @@ use crate::cluster::{AllocLedger, Cluster};
 use crate::jobs::{Job, Schedule};
 use crate::util::Rng;
 
-use super::dp::{plan_job, DpConfig, Masks, PlanResult};
+use super::dp::{plan_job_with, DpConfig, Masks, PlanResult};
 use super::pricing::PricingParams;
-use super::theta::{GdeltaMode, ThetaConfig};
+use super::solver::{GdeltaMode, PlannerScratch, SolverStats, ThetaConfig};
 
 /// Worker/PS machine-placement policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,6 +33,9 @@ pub struct PdOrsConfig {
     pub attempts: usize,
     /// Accepted cover fraction (see [`ThetaConfig::cover_fraction`]).
     pub cover_fraction: f64,
+    /// Memoize θ-solutions within each arrival's planning episode
+    /// (`--no-theta-cache` disables it — the parity oracle).
+    pub theta_cache: bool,
     pub seed: u64,
 }
 
@@ -45,7 +48,33 @@ impl Default for PdOrsConfig {
             gdelta: GdeltaMode::Fixed(1.0),
             attempts: 50,
             cover_fraction: 1.0,
+            theta_cache: true,
             seed: 0,
+        }
+    }
+}
+
+/// The single construction site for the solver-layer configs: every
+/// θ/DP knob is derived from [`PdOrsConfig`] here, so a new solver knob
+/// cannot silently diverge between the admission loop and the registry.
+impl From<&PdOrsConfig> for ThetaConfig {
+    fn from(cfg: &PdOrsConfig) -> ThetaConfig {
+        ThetaConfig {
+            delta: cfg.delta,
+            gdelta: cfg.gdelta,
+            attempts: cfg.attempts,
+            cover_fraction: cfg.cover_fraction,
+            group_machines: true,
+        }
+    }
+}
+
+impl From<&PdOrsConfig> for DpConfig {
+    fn from(cfg: &PdOrsConfig) -> DpConfig {
+        DpConfig {
+            units: cfg.dp_units,
+            theta_cache: cfg.theta_cache,
+            theta: ThetaConfig::from(cfg),
         }
     }
 }
@@ -67,6 +96,9 @@ pub struct PdOrs {
     pricing: PricingParams,
     masks: Masks,
     rng: Rng,
+    /// Long-lived solver scratch: interner + θ-memo (cleared per arrival)
+    /// plus the LP/rounding buffers and cumulative [`SolverStats`].
+    scratch: PlannerScratch,
     /// Admission log (one entry per arrival, in order).
     pub log: Vec<Admission>,
 }
@@ -75,35 +107,50 @@ impl PdOrs {
     /// `jobs` is the population used to estimate the pricing constants
     /// (Eq. (13)/(14) — "estimated empirically based on historical data").
     pub fn new(cfg: PdOrsConfig, jobs: &[Job], cluster: &Cluster, horizon: usize) -> PdOrs {
-        let pricing = PricingParams::from_jobs(jobs, cluster, horizon);
+        PdOrs::with_pricing(cfg, PricingParams::from_jobs(jobs, cluster, horizon), cluster)
+    }
+
+    /// Construct with precomputed pricing constants. Pricing depends only
+    /// on `(jobs, cluster, horizon)`, so callers building several
+    /// scheduler variants over one population (the Fig. 11 G_δ sweep,
+    /// ablation loops) compute it once and share it instead of re-running
+    /// `PricingParams::from_jobs` per variant.
+    pub fn with_pricing(cfg: PdOrsConfig, pricing: PricingParams, cluster: &Cluster) -> PdOrs {
         let masks = match cfg.placement {
             Placement::Colocated => Masks::all(cluster.len()),
             Placement::Separated => Masks::separated(cluster.len()),
         };
-        PdOrs { cfg, pricing, masks, rng: Rng::new(cfg.seed), log: Vec::new() }
+        PdOrs {
+            cfg,
+            pricing,
+            masks,
+            rng: Rng::new(cfg.seed),
+            scratch: PlannerScratch::new(),
+            log: Vec::new(),
+        }
     }
 
     pub fn pricing(&self) -> &PricingParams {
         &self.pricing
     }
 
-    fn dp_config(&self) -> DpConfig {
-        DpConfig {
-            units: self.cfg.dp_units,
-            theta: ThetaConfig {
-                delta: self.cfg.delta,
-                gdelta: self.cfg.gdelta,
-                attempts: self.cfg.attempts,
-                cover_fraction: self.cfg.cover_fraction,
-                group_machines: true,
-            },
-        }
+    /// Cumulative solver counters over every arrival seen so far.
+    pub fn solver_stats(&self) -> SolverStats {
+        self.scratch.stats
     }
 
     /// Plan without committing (used by analysis tooling).
     pub fn plan(&mut self, job: &Job, ledger: &AllocLedger) -> Option<PlanResult> {
-        let cfg = self.dp_config();
-        plan_job(job, ledger, &self.pricing, &self.masks, &cfg, &mut self.rng)
+        let cfg = DpConfig::from(&self.cfg);
+        plan_job_with(
+            job,
+            ledger,
+            &self.pricing,
+            &self.masks,
+            &cfg,
+            &mut self.rng,
+            &mut self.scratch,
+        )
     }
 
     /// Algorithm 1 steps 2–4: plan, admit iff λ > 0, commit the ledger.
@@ -171,6 +218,10 @@ impl crate::sim::Scheduler for PdOrs {
             None => crate::sim::ArrivalDecision::Reject,
         }
     }
+
+    fn solver_stats(&self) -> SolverStats {
+        PdOrs::solver_stats(self)
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +249,9 @@ mod tests {
         let admitted = sched.log.iter().filter(|a| a.admitted).count();
         assert!(admitted > 0, "expected at least one admission");
         assert!(ledger.within_capacity(1e-6));
+        let sv = sched.solver_stats();
+        assert!(sv.theta_solves > 0);
+        assert!(sv.memo_hits > 0, "arrivals on quiet slots must hit the memo");
     }
 
     #[test]
@@ -264,5 +318,49 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn with_pricing_matches_new() {
+        // The hoisted-pricing constructor is just `new` with the
+        // `from_jobs` call factored out.
+        let cluster = paper_cluster(6);
+        let mut rng = Rng::new(11);
+        let jobs = synthetic_jobs(&SynthConfig::paper(10, 15, MIX_DEFAULT), &mut rng);
+        let pricing = PricingParams::from_jobs(&jobs, &cluster, 15);
+
+        let mut a = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, 15);
+        let mut b = PdOrs::with_pricing(PdOrsConfig::default(), pricing, &cluster);
+        let mut la = AllocLedger::new(&cluster, 15);
+        let mut lb = AllocLedger::new(&cluster, 15);
+        for job in &jobs {
+            let sa = a.on_arrival(job, &mut la);
+            let sb = b.on_arrival(job, &mut lb);
+            assert_eq!(sa, sb, "job {}", job.id);
+        }
+        assert_eq!(a.total_utility(), b.total_utility());
+    }
+
+    #[test]
+    fn config_conversions_are_the_single_source() {
+        let cfg = PdOrsConfig {
+            dp_units: 64,
+            delta: 0.5,
+            attempts: 123,
+            cover_fraction: 0.9,
+            theta_cache: false,
+            gdelta: GdeltaMode::Cover,
+            ..Default::default()
+        };
+        let theta = ThetaConfig::from(&cfg);
+        assert_eq!(theta.delta, 0.5);
+        assert_eq!(theta.attempts, 123);
+        assert_eq!(theta.cover_fraction, 0.9);
+        assert!(matches!(theta.gdelta, GdeltaMode::Cover));
+        assert!(theta.group_machines);
+        let dp = DpConfig::from(&cfg);
+        assert_eq!(dp.units, 64);
+        assert!(!dp.theta_cache);
+        assert_eq!(dp.theta.attempts, 123);
     }
 }

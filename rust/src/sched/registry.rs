@@ -20,7 +20,7 @@ use crate::jobs::Job;
 use crate::sim::{simulate, Scheduler, SimResult};
 use crate::util::error::{Error, Result};
 
-use super::theta::GdeltaMode;
+use super::solver::GdeltaMode;
 use super::{PdOrs, PdOrsConfig, Placement};
 
 /// The built-in zoo of §5, in the paper's comparison order (registry
@@ -66,6 +66,7 @@ impl SchedulerSpec {
     /// gdelta = 1.0        # or "packing" / "cover"
     /// attempts = 50
     /// cover_fraction = 1.0
+    /// theta_cache = true  # false = the --no-theta-cache parity oracle
     /// ```
     pub fn from_config(cfg: &Config) -> SchedulerSpec {
         let mut spec = SchedulerSpec::new(&cfg.get_or("scheduler.name", "pd-ors"));
@@ -75,6 +76,8 @@ impl SchedulerSpec {
         spec.pdors.attempts = cfg.usize("scheduler.attempts", spec.pdors.attempts);
         spec.pdors.cover_fraction =
             cfg.f64("scheduler.cover_fraction", spec.pdors.cover_fraction);
+        spec.pdors.theta_cache =
+            cfg.bool("scheduler.theta_cache", spec.pdors.theta_cache);
         if let Some(v) = cfg.get("scheduler.gdelta") {
             match v.to_ascii_lowercase().as_str() {
                 "packing" => spec.pdors.gdelta = GdeltaMode::Packing,
@@ -123,15 +126,24 @@ impl SchedulerRegistry {
 
     /// The in-tree zoo: PD-ORS, OASiS, FIFO, DRF, Dorm.
     pub fn builtin() -> SchedulerRegistry {
+        SchedulerRegistry::builtin_with_theta_cache(true)
+    }
+
+    /// The in-tree zoo with the θ-memoization switch forced for every
+    /// primal-dual scheduler: `false` routes PD-ORS/OASiS through the
+    /// parity-oracle path (what `--no-theta-cache` and the solver bench
+    /// use); `true` leaves the per-spec setting in charge.
+    pub fn builtin_with_theta_cache(theta_cache: bool) -> SchedulerRegistry {
         let mut reg = SchedulerRegistry::new();
         reg.register(
             "pd-ors",
             "PD-ORS",
             &["pdors"],
             "online primal-dual scheduler, co-located placement (the paper)",
-            Box::new(|spec, jobs, cluster, horizon| {
+            Box::new(move |spec, jobs, cluster, horizon| {
                 let cfg = PdOrsConfig {
                     placement: Placement::Colocated,
+                    theta_cache: spec.pdors.theta_cache && theta_cache,
                     ..spec.pdors
                 };
                 Box::new(PdOrs::new(cfg, jobs, cluster, horizon))
@@ -142,9 +154,10 @@ impl SchedulerRegistry {
             "OASiS",
             &[],
             "primal-dual scheduler with separated worker/PS machines [6]",
-            Box::new(|spec, jobs, cluster, horizon| {
+            Box::new(move |spec, jobs, cluster, horizon| {
                 let cfg = PdOrsConfig {
                     placement: Placement::Separated,
+                    theta_cache: spec.pdors.theta_cache && theta_cache,
                     ..spec.pdors
                 };
                 Box::new(PdOrs::new(cfg, jobs, cluster, horizon))
@@ -398,7 +411,7 @@ mod tests {
     fn spec_from_config_reads_scheduler_section() {
         let cfg = Config::parse(
             "[scheduler]\nname = OASIS\nseed = 9\ndp_units = 64\ndelta = 0.5\n\
-             gdelta = 0.8\nattempts = 123\ncover_fraction = 0.9\n",
+             gdelta = 0.8\nattempts = 123\ncover_fraction = 0.9\ntheta_cache = false\n",
         )
         .unwrap();
         let spec = SchedulerSpec::from_config(&cfg);
@@ -410,6 +423,7 @@ mod tests {
         assert_eq!(spec.pdors.attempts, 123);
         assert!(matches!(spec.pdors.gdelta, GdeltaMode::Fixed(g) if g == 0.8));
         assert_eq!(spec.pdors.cover_fraction, 0.9);
+        assert!(!spec.pdors.theta_cache);
     }
 
     #[test]
@@ -418,6 +432,7 @@ mod tests {
         let spec = SchedulerSpec::from_config(&cfg);
         assert_eq!(spec.name, "pd-ors");
         assert_eq!(spec.pdors.dp_units, PdOrsConfig::default().dp_units);
+        assert!(spec.pdors.theta_cache, "the memo is on by default");
     }
 
     #[test]

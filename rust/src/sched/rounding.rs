@@ -23,7 +23,16 @@ pub fn round_coord(rng: &mut Rng, x: f64) -> u64 {
 
 /// Round a scaled fractional vector.
 pub fn round_vec(rng: &mut Rng, xs: &[f64], g_delta: f64) -> Vec<u64> {
-    xs.iter().map(|&x| round_coord(rng, g_delta * x)).collect()
+    let mut out = Vec::with_capacity(xs.len());
+    round_vec_into(rng, xs, g_delta, &mut out);
+    out
+}
+
+/// [`round_vec`] into a caller-owned scratch vector (cleared first) —
+/// the allocation-free form the solver hot path uses for repeated draws.
+pub fn round_vec_into(rng: &mut Rng, xs: &[f64], g_delta: f64, out: &mut Vec<u64>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| round_coord(rng, g_delta * x)));
 }
 
 /// `G_δ` for the packing-favored regime, Eq. (29):
@@ -132,5 +141,16 @@ mod tests {
         assert_eq!(r[1], 0);
         assert!(r[0] == 1 || r[0] == 2);
         assert_eq!(r[2], 2);
+    }
+
+    #[test]
+    fn round_into_reused_scratch_matches_fresh() {
+        let xs = [1.4, 0.7, 2.0, 0.0];
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let fresh = round_vec(&mut a, &xs, 1.0);
+        let mut scratch = vec![99u64; 16]; // deliberately dirty + oversized
+        round_vec_into(&mut b, &xs, 1.0, &mut scratch);
+        assert_eq!(scratch, fresh);
     }
 }

@@ -1,0 +1,93 @@
+//! θ-solution memoization — the middle stage of the solver pipeline
+//! (snapshot → **memo** → LP workspace → rounding).
+//!
+//! The DP of Eq. (21) re-queries θ(t, v) for every `(slot, workload-unit)`
+//! pair, and on quiet stretches of the horizon consecutive slots carry
+//! bit-identical price/residual snapshots. [`ThetaMemo`] caches the
+//! **deterministic** sub-results per `(interned snapshot signature,
+//! v-bits, locality-case)`:
+//!
+//! * *internal case* — the closed-form group scan's winner (group index,
+//!   worker/PS counts, cost);
+//! * *external case* — the fractional optimum of the LP relaxation
+//!   (23)–(26) at group granularity (or its infeasibility).
+//!
+//! The **randomized rounding is never cached**: it replays on every
+//! θ-solve, drawing from the scheduler's RNG in exactly the order the
+//! unmemoized solver would — which is what keeps fixed-seed schedules
+//! byte-identical between cached and `--no-theta-cache` runs (memoization
+//! is semantically invisible; the parity oracle and
+//! `tests/solver_parity.rs` enforce it).
+//!
+//! A memo is valid only *within one arrival's planning episode*: admitting
+//! a job moves the prices (Eq. (12)), so the planner clears the memo (and
+//! its signature interner) before each arrival. Within one episode the
+//! ledger — and therefore every per-slot price — is immutable, so a
+//! signature hit is an exact replay.
+
+use std::collections::HashMap;
+
+/// Memoized winner of the internal (co-located) closed form.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InternalSol {
+    /// Winning group index in the snapshot's group list. The concrete
+    /// machine is resolved per slot as `groups[group].members[0]` — the
+    /// lowest-index machine carrying the winning signature, which is
+    /// exactly what the unmemoized scan picks.
+    pub group: u32,
+    pub w: u64,
+    pub s: u64,
+    pub cost: f64,
+}
+
+/// Memo key: (interned snapshot signature, `v.to_bits()`); the job is
+/// fixed within a planning episode, so it is not part of the key.
+pub type MemoKey = (u32, u64);
+
+/// Per-arrival θ-memo (see module docs). Cleared, not dropped, between
+/// arrivals so its hash-map capacity is recycled.
+#[derive(Debug, Default)]
+pub struct ThetaMemo {
+    /// `None` = the internal case is infeasible at this (signature, v).
+    pub(super) internal: HashMap<MemoKey, Option<InternalSol>>,
+    /// Fractional group solution of the external LP relaxation
+    /// (`x[2g]` workers / `x[2g+1]` PSs per group); `None` = LP infeasible.
+    pub(super) external: HashMap<MemoKey, Option<Vec<f64>>>,
+}
+
+impl ThetaMemo {
+    pub fn new() -> ThetaMemo {
+        ThetaMemo::default()
+    }
+
+    /// Forget everything (start of a new planning episode).
+    pub fn clear(&mut self) {
+        self.internal.clear();
+        self.external.clear();
+    }
+
+    /// Number of memoized entries across both cases.
+    pub fn len(&self) -> usize {
+        self.internal.len() + self.external.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.internal.is_empty() && self.external.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clear_empties_both_cases() {
+        let mut m = ThetaMemo::new();
+        m.internal.insert((0, 1), None);
+        m.external.insert((0, 1), Some(vec![1.0, 0.5]));
+        assert_eq!(m.len(), 2);
+        assert!(!m.is_empty());
+        m.clear();
+        assert!(m.is_empty());
+    }
+}

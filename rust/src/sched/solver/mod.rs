@@ -1,0 +1,34 @@
+//! The layered θ-solver core: **snapshot → memo → LP workspace →
+//! rounding**.
+//!
+//! One admission (Algorithm 1) plans through `horizon × dp_units`
+//! θ-solves, each of which used to build a fresh LP, allocate new
+//! tableaux, and re-derive machine groups from the ledger. This layer
+//! splits the solve into explicit stages so each cost is paid once:
+//!
+//! * [`crate::cluster::snapshot`] — immutable per-slot
+//!   [`SlotSnapshot`](crate::cluster::SlotSnapshot)s with machine groups
+//!   deduplicated at the source, plus the exact
+//!   [`SignatureInterner`](crate::cluster::SignatureInterner);
+//! * [`memo`] — per-arrival memoization of the *deterministic*
+//!   sub-results keyed by `(interned signature, v)`; the randomized
+//!   rounding always replays, keeping fixed-seed schedules byte-identical
+//!   with the `--no-theta-cache` parity oracle;
+//! * [`workspace`] — reusable LP/rounding buffers
+//!   ([`SolverWorkspace`], [`PlannerScratch`]) over
+//!   [`crate::lp::LpWorkspace`];
+//! * [`theta`] — Algorithm 4 itself, internal + external cases;
+//! * [`stats`] — [`SolverStats`] counters surfaced through
+//!   [`SimResult`](crate::sim::SimResult) and the sweep JSONL rows.
+
+pub mod memo;
+pub mod stats;
+pub mod theta;
+pub mod workspace;
+
+pub use memo::{InternalSol, ThetaMemo};
+pub use stats::SolverStats;
+pub use theta::{
+    solve_theta, solve_theta_ctx, GdeltaMode, SolverCtx, ThetaConfig, ThetaSolution,
+};
+pub use workspace::{PlannerScratch, SolverWorkspace};

@@ -1,0 +1,76 @@
+//! Solver hot-path counters, surfaced per run as
+//! [`SimEvent::Solver`](crate::sim::SimEvent) and folded into
+//! [`SimResult`](crate::sim::SimResult) and the sweep JSONL rows.
+
+/// Counters over the layered solver pipeline. All counters are cumulative
+/// and monotone; per-episode deltas are taken with
+/// [`since`](SolverStats::since).
+///
+/// Diagnostic by design: two runs that produce byte-identical schedules
+/// (e.g. cached vs `--no-theta-cache`) legitimately differ here, so these
+/// counters are excluded from every determinism/parity comparison (like
+/// wall time).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SolverStats {
+    /// θ(t, v) solves with positive workload (Algorithm 4 invocations).
+    pub theta_solves: u64,
+    /// Memo hits across the internal and external sub-solvers.
+    pub memo_hits: u64,
+    /// LP relaxations actually solved (misses of the external memo).
+    pub lp_solves: u64,
+    /// Simplex pivots spent in those solves.
+    pub lp_pivots: u64,
+    /// Randomized-rounding attempts consumed (Eqs. (27)–(28)).
+    pub rounding_attempts: u64,
+}
+
+impl SolverStats {
+    /// Accumulate `other` into `self`.
+    pub fn merge(&mut self, other: &SolverStats) {
+        self.theta_solves += other.theta_solves;
+        self.memo_hits += other.memo_hits;
+        self.lp_solves += other.lp_solves;
+        self.lp_pivots += other.lp_pivots;
+        self.rounding_attempts += other.rounding_attempts;
+    }
+
+    /// The delta accumulated since `earlier` (counters are monotone).
+    pub fn since(&self, earlier: &SolverStats) -> SolverStats {
+        SolverStats {
+            theta_solves: self.theta_solves - earlier.theta_solves,
+            memo_hits: self.memo_hits - earlier.memo_hits,
+            lp_solves: self.lp_solves - earlier.lp_solves,
+            lp_pivots: self.lp_pivots - earlier.lp_pivots,
+            rounding_attempts: self.rounding_attempts - earlier.rounding_attempts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_since_round_trip() {
+        let mut a = SolverStats {
+            theta_solves: 10,
+            memo_hits: 4,
+            lp_solves: 6,
+            lp_pivots: 120,
+            rounding_attempts: 30,
+        };
+        let before = a;
+        let b = SolverStats {
+            theta_solves: 3,
+            memo_hits: 1,
+            lp_solves: 2,
+            lp_pivots: 15,
+            rounding_attempts: 5,
+        };
+        a.merge(&b);
+        assert_eq!(a.theta_solves, 13);
+        assert_eq!(a.lp_pivots, 135);
+        assert_eq!(a.since(&before), b);
+        assert_eq!(SolverStats::default().theta_solves, 0);
+    }
+}

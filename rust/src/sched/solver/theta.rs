@@ -1,0 +1,714 @@
+//! Algorithm 4 — the per-slot problem θ(t, v): minimum-price worker/PS
+//! placement that trains `v` samples of job `i` in one slot.
+//!
+//! Two cases per Fact 1:
+//!
+//! * **Internal** (`|P| = |W| = 1`, co-located): closed form — one machine
+//!   hosts `w = ⌈v · τ_int⌉` workers and `s = ⌈w/γ⌉` PSs; scan groups for
+//!   the cheapest feasible one (its lowest-index member hosts the job).
+//! * **External**: the mixed cover/packing integer program (23)–(26),
+//!   solved by LP relaxation + the randomized rounding of
+//!   [`crate::sched::rounding`], up to `S` attempts, keeping the cheapest
+//!   feasible rounding.
+//!
+//! The solver operates on an immutable [`SlotSnapshot`]
+//! (`cluster::snapshot`): machines with identical price and
+//! residual-capacity signatures arrive pre-aggregated into *groups*
+//! (DESIGN.md §Perf) — on a fresh homogeneous cluster the (2H)-variable LP
+//! collapses to two variables. The fractional group solution is split
+//! evenly across group members before rounding (identical machines ⇒ the
+//! split preserves per-machine feasibility of the relaxation).
+//!
+//! [`solve_theta_ctx`] threads a [`SolverCtx`] — RNG, reusable
+//! [`SolverWorkspace`] buffers, optional [`ThetaMemo`], and
+//! [`SolverStats`] counters. Memoization caches only the deterministic
+//! sub-results (see `memo` module docs); the randomized rounding replays
+//! on every call so cached and uncached runs consume the RNG identically.
+//! [`solve_theta`] is the memo-less convenience wrapper.
+
+use crate::cluster::{SlotSnapshot, NUM_RESOURCES};
+use crate::jobs::{speed, Job, Locality};
+use crate::lp::LpStatus;
+use crate::util::Rng;
+
+use super::super::rounding::{gdelta_cover, gdelta_packing, round_coord};
+use super::memo::{InternalSol, ThetaMemo};
+use super::stats::SolverStats;
+use super::workspace::SolverWorkspace;
+
+/// How to choose the pre-rounding gain factor `G_δ`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GdeltaMode {
+    /// Eq. (29) — favor packing (resource) feasibility.
+    Packing,
+    /// Eq. (30) — favor cover (workload) feasibility.
+    Cover,
+    /// A fixed value (Fig. 11 sweeps this).
+    Fixed(f64),
+}
+
+/// θ-solver parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ThetaConfig {
+    /// δ of Theorems 3/4.
+    pub delta: f64,
+    pub gdelta: GdeltaMode,
+    /// Rounding attempts `S`.
+    pub attempts: usize,
+    /// Accepted cover fraction: a rounding is feasible when it covers
+    /// `cover_fraction · W1` workers. 1.0 = strict (default). The Fig. 11
+    /// sweep sets this to `min(1, G_δ)` per the paper's observation that
+    /// "the violation of the cover constraint in one iteration may be
+    /// acceptable" (epochs are over-estimated in practice) — otherwise
+    /// G_δ < 1 admits nothing and the figure degenerates.
+    pub cover_fraction: f64,
+    /// Aggregate machines with identical (price, residual) signatures into
+    /// single LP variables (DESIGN.md §Perf). `false` = one variable pair
+    /// per machine (the paper's literal formulation; kept for the perf
+    /// ablation and as the correctness oracle for grouping). Consumed by
+    /// the [`SlotSnapshot`] builders — the solver itself always works on
+    /// whatever groups the snapshot carries.
+    pub group_machines: bool,
+}
+
+impl Default for ThetaConfig {
+    fn default() -> ThetaConfig {
+        // G_δ = 1 is the paper's empirically-best setting (Fig. 11): the
+        // theoretical G_δ of Eq. (29) is far below 1 at realistic W2 and
+        // makes the cover constraint fail w.h.p. (the lemmas only bound
+        // the *shortfall*, which a strict scheduler cannot accept).
+        ThetaConfig {
+            delta: 0.25,
+            gdelta: GdeltaMode::Fixed(1.0),
+            attempts: 50,
+            cover_fraction: 1.0,
+            group_machines: true,
+        }
+    }
+}
+
+/// A θ solution: total price-cost plus the integral placement.
+#[derive(Debug, Clone)]
+pub struct ThetaSolution {
+    pub cost: f64,
+    pub placements: Vec<(usize, u64, u64)>,
+    /// Which case won (true = co-located / internal).
+    pub internal: bool,
+    /// Rounding attempts consumed (0 for the internal case).
+    pub rounding_attempts: usize,
+}
+
+/// Per-solve context: the RNG, reusable buffers, the optional memo with
+/// the slot's interned signature, and the counters.
+pub struct SolverCtx<'a> {
+    pub rng: &'a mut Rng,
+    pub ws: &'a mut SolverWorkspace,
+    /// `None` runs the parity-oracle path (`--no-theta-cache`).
+    pub memo: Option<&'a mut ThetaMemo>,
+    /// Interned snapshot signature (meaningless when `memo` is `None`).
+    pub sig: u32,
+    pub stats: &'a mut SolverStats,
+}
+
+#[inline]
+fn placement_cost(
+    job: &Job,
+    prices: &[[f64; NUM_RESOURCES]],
+    placements: &[(usize, u64, u64)],
+) -> f64 {
+    let mut cost = 0.0;
+    for &(h, w, s) in placements {
+        for r in 0..NUM_RESOURCES {
+            cost += prices[h][r]
+                * (job.worker_demand[r] * w as f64 + job.ps_demand[r] * s as f64);
+        }
+    }
+    cost
+}
+
+/// Internal (co-located) case: cheapest single machine hosting everything.
+/// Scans the snapshot's groups (all members of a group share price,
+/// residual, and eligibility, so the first member of the winning group is
+/// exactly the lowest-index machine the per-machine scan would pick).
+fn solve_internal(
+    job: &Job,
+    snap: &SlotSnapshot,
+    v: f64,
+    ctx: &mut SolverCtx<'_>,
+) -> Option<ThetaSolution> {
+    let per_sample = speed::per_sample_time(job, Locality::Internal);
+    let w = (v * per_sample).ceil().max(1.0) as u64;
+    if w > job.batch {
+        return None; // Eq. (4)
+    }
+    let s = ((w as f64 / job.gamma).ceil() as u64).max(1);
+
+    let key = (ctx.sig, v.to_bits());
+    if let Some(memo) = ctx.memo.as_deref_mut() {
+        if let Some(hit) = memo.internal.get(&key) {
+            ctx.stats.memo_hits += 1;
+            return hit.map(|m| ThetaSolution {
+                cost: m.cost,
+                placements: vec![(snap.groups[m.group as usize].members[0], m.w, m.s)],
+                internal: true,
+                rounding_attempts: 0,
+            });
+        }
+    }
+
+    let demand = job.demand(w, s);
+    let mut best: Option<(usize, f64)> = None; // (group, cost)
+    for (g, grp) in snap.groups.iter().enumerate() {
+        if !grp.allow_worker || !grp.allow_ps {
+            continue;
+        }
+        if !demand.fits_within(&grp.residual, 1e-9) {
+            continue;
+        }
+        let mut cost = 0.0;
+        for r in 0..NUM_RESOURCES {
+            cost += grp.price[r]
+                * (job.worker_demand[r] * w as f64 + job.ps_demand[r] * s as f64);
+        }
+        if best.map_or(true, |(_, c)| cost < c) {
+            best = Some((g, cost));
+        }
+    }
+    let entry = best.map(|(g, cost)| InternalSol { group: g as u32, w, s, cost });
+    if let Some(memo) = ctx.memo.as_deref_mut() {
+        memo.internal.insert(key, entry);
+    }
+    entry.map(|m| ThetaSolution {
+        cost: m.cost,
+        placements: vec![(snap.groups[m.group as usize].members[0], m.w, m.s)],
+        internal: true,
+        rounding_attempts: 0,
+    })
+}
+
+/// Build the grouped LP relaxation of (23)–(26) into `ws.problem`.
+fn build_group_lp(job: &Job, snap: &SlotSnapshot, w1: f64, ws: &mut SolverWorkspace) {
+    let groups = &snap.groups;
+    let nv = 2 * groups.len();
+    let problem = &mut ws.problem;
+    problem.reset(nv);
+    // Variables: for group g, w_g at 2g, s_g at 2g+1 (absent ones pinned 0).
+    for (g, grp) in groups.iter().enumerate() {
+        for r in 0..NUM_RESOURCES {
+            problem.objective[2 * g] += grp.price[r] * job.worker_demand[r];
+            problem.objective[2 * g + 1] += grp.price[r] * job.ps_demand[r];
+        }
+    }
+    for (g, grp) in groups.iter().enumerate() {
+        let m = grp.members.len() as f64;
+        // per-resource packing rows, aggregated over the group
+        for r in 0..NUM_RESOURCES {
+            let a = job.worker_demand[r];
+            let b = job.ps_demand[r];
+            if a > 0.0 || b > 0.0 {
+                problem.add_row_sparse(
+                    &[(2 * g, a), (2 * g + 1, b)],
+                    crate::lp::Cmp::Le,
+                    m * grp.residual.0[r],
+                );
+            }
+        }
+        if !grp.allow_worker {
+            problem.add_row_sparse(&[(2 * g, 1.0)], crate::lp::Cmp::Le, 0.0);
+        }
+        if !grp.allow_ps {
+            problem.add_row_sparse(&[(2 * g + 1, 1.0)], crate::lp::Cmp::Le, 0.0);
+        }
+    }
+    // cover: Σ w ≥ ⌈W1⌉; packing: Σ w ≤ F; PS cover: Σ s ≥ Σ w / γ.
+    let terms = &mut ws.terms;
+    terms.clear();
+    terms.extend((0..groups.len()).map(|g| (2 * g, 1.0)));
+    problem.add_row_sparse(terms, crate::lp::Cmp::Ge, w1);
+    // at least one PS must exist whenever any worker runs
+    terms.clear();
+    terms.extend((0..groups.len()).map(|g| (2 * g + 1, 1.0)));
+    problem.add_row_sparse(terms, crate::lp::Cmp::Ge, 1.0);
+    terms.clear();
+    terms.extend((0..groups.len()).map(|g| (2 * g, 1.0)));
+    problem.add_row_sparse(terms, crate::lp::Cmp::Le, job.batch as f64);
+    terms.clear();
+    for g in 0..groups.len() {
+        terms.push((2 * g, -1.0 / job.gamma));
+        terms.push((2 * g + 1, 1.0));
+    }
+    problem.add_row_sparse(terms, crate::lp::Cmp::Ge, 0.0);
+}
+
+/// Split the fractional group solution evenly over each group's members.
+fn disaggregate(snap: &SlotSnapshot, x: &[f64], frac_w: &mut Vec<f64>, frac_s: &mut Vec<f64>) {
+    let n = snap.num_machines();
+    frac_w.clear();
+    frac_w.resize(n, 0.0);
+    frac_s.clear();
+    frac_s.resize(n, 0.0);
+    for (g, grp) in snap.groups.iter().enumerate() {
+        let m = grp.members.len() as f64;
+        for &h in &grp.members {
+            frac_w[h] = x[2 * g] / m;
+            frac_s[h] = x[2 * g + 1] / m;
+        }
+    }
+}
+
+/// External case: grouped LP relaxation of (23)–(26) + randomized rounding.
+fn solve_external(
+    job: &Job,
+    snap: &SlotSnapshot,
+    v: f64,
+    cfg: &ThetaConfig,
+    ctx: &mut SolverCtx<'_>,
+) -> Option<ThetaSolution> {
+    // Workers needed; integer-strengthened cover: w ≥ W1 ⟺ w ≥ ⌈W1⌉ for
+    // integral w (tightens the relaxation so rounding can actually cover
+    // tiny workloads).
+    let w1 = (v * speed::per_sample_time(job, Locality::External)).ceil().max(1.0);
+    if w1 > job.batch as f64 + 1e-9 {
+        return None; // cover cannot meet Eq. (4) at the external rate
+    }
+    if snap.groups.is_empty() {
+        return None;
+    }
+    let num_machines = snap.num_machines();
+
+    // Resolve the fractional solution: memo hit or a fresh LP solve. Only
+    // this deterministic stage is cached — the rounding below always runs.
+    let key = (ctx.sig, v.to_bits());
+    let mut resolved = false;
+    if let Some(memo) = ctx.memo.as_deref_mut() {
+        if let Some(cached) = memo.external.get(&key) {
+            ctx.stats.memo_hits += 1;
+            match cached {
+                None => return None, // LP infeasible at this signature
+                Some(x) => {
+                    disaggregate(snap, x, &mut ctx.ws.frac_w, &mut ctx.ws.frac_s);
+                    resolved = true;
+                }
+            }
+        }
+    }
+    if !resolved {
+        build_group_lp(job, snap, w1, ctx.ws);
+        ctx.stats.lp_solves += 1;
+        let pivots_before = ctx.ws.lp.total_pivots();
+        let status = ctx.ws.lp.solve(&ctx.ws.problem);
+        ctx.stats.lp_pivots += ctx.ws.lp.total_pivots() - pivots_before;
+        let solved: Option<Vec<f64>> = match status {
+            LpStatus::Optimal => Some(ctx.ws.lp.x().to_vec()),
+            _ => None,
+        };
+        if let Some(memo) = ctx.memo.as_deref_mut() {
+            memo.external.insert(key, solved.clone());
+        }
+        match solved {
+            None => return None,
+            Some(x) => disaggregate(snap, &x, &mut ctx.ws.frac_w, &mut ctx.ws.frac_s),
+        }
+    }
+
+    // G_δ per the configured mode.
+    let g_delta = match cfg.gdelta {
+        GdeltaMode::Fixed(g) => g,
+        GdeltaMode::Packing => {
+            // W2 = min over binding packing rows of (bound / coefficient)
+            let mut w2 = job.batch as f64;
+            for grp in &snap.groups {
+                for r in 0..NUM_RESOURCES {
+                    if job.worker_demand[r] > 0.0 {
+                        w2 = w2.min(grp.residual.0[r] / job.worker_demand[r]);
+                    }
+                    if job.ps_demand[r] > 0.0 {
+                        w2 = w2.min(grp.residual.0[r] / job.ps_demand[r]);
+                    }
+                }
+            }
+            gdelta_packing(cfg.delta, w2.max(1.0), NUM_RESOURCES * num_machines + 1)
+        }
+        GdeltaMode::Cover => gdelta_cover(cfg.delta, w1.max(1.0), 1),
+    };
+
+    // Hopelessness cutoffs (Chernoff, the same machinery as Lemmas 1/2):
+    // if the scaled fractional solution cannot plausibly round into a
+    // feasible integer point, skip the attempt loop instead of burning the
+    // full S budget. A case is "hopeless" when the shortfall/overshoot
+    // exceeds 6σ of the rounding distribution (P < 1e-9 ≪ 1/S).
+    {
+        let ws = &mut *ctx.ws;
+        let mut mean_w = 0.0;
+        let mut var_w = 0.0;
+        for h in 0..num_machines {
+            let x = g_delta * ws.frac_w[h];
+            mean_w += x;
+            let fr = x - x.floor();
+            var_w += fr * (1.0 - fr);
+        }
+        let need = cfg.cover_fraction.min(1.0) * w1;
+        if mean_w + 6.0 * var_w.sqrt() + 1e-9 < need {
+            return None; // cover unreachable
+        }
+        // packing: the floor component alone already violates a machine
+        for h in 0..num_machines {
+            let wf = (g_delta * ws.frac_w[h]).floor() as u64;
+            let sf = (g_delta * ws.frac_s[h]).floor() as u64;
+            if (wf > 0 || sf > 0)
+                && !job.demand(wf, sf).fits_within(&snap.residual[h], 1e-9)
+            {
+                return None; // every rounding ≥ floor ⇒ always infeasible
+            }
+        }
+    }
+
+    // Randomized rounding, up to S attempts; keep the cheapest feasible.
+    // Early-stop at the first feasible candidate: costs across roundings
+    // of the same fractional point differ by O(1) units, while at extreme
+    // G_δ the success probability per attempt is tiny and the paper's
+    // S = 5000 budget exists precisely to brute-force that tail.
+    const EARLY_STOP_FEASIBLE: usize = 1;
+    let mut feasible_found = 0usize;
+    let mut best: Option<ThetaSolution> = None;
+    let mut attempts_used = 0;
+    for attempt in 1..=cfg.attempts.max(1) {
+        attempts_used = attempt;
+        let ws = &mut *ctx.ws;
+        ws.attempt.clear();
+        let mut total_w = 0u64;
+        let mut total_s = 0u64;
+        let mut feasible = true;
+        for h in 0..num_machines {
+            let w = round_coord(ctx.rng, g_delta * ws.frac_w[h]);
+            let s = round_coord(ctx.rng, g_delta * ws.frac_s[h]);
+            if w == 0 && s == 0 {
+                continue;
+            }
+            // packing (24): per-machine residual capacity
+            if !job.demand(w, s).fits_within(&snap.residual[h], 1e-9) {
+                feasible = false;
+                break;
+            }
+            total_w += w;
+            total_s += s;
+            ws.attempt.push((h, w, s));
+        }
+        if !feasible {
+            continue;
+        }
+        // packing (25) and cover (26)
+        if total_w > job.batch {
+            continue;
+        }
+        if (total_w as f64) < cfg.cover_fraction.min(1.0) * w1 - 1e-9 {
+            continue;
+        }
+        // Eq. (2): enough PSs for the ratio (at least one PS overall).
+        let s_needed = ((total_w as f64 / job.gamma).ceil() as u64).max(1);
+        if total_s < s_needed {
+            continue;
+        }
+        let cost = placement_cost(job, &snap.prices, &ws.attempt);
+        if best.as_ref().map_or(true, |b| cost < b.cost) {
+            best = Some(ThetaSolution {
+                cost,
+                placements: ws.attempt.clone(),
+                internal: false,
+                rounding_attempts: attempt,
+            });
+        }
+        feasible_found += 1;
+        if feasible_found >= EARLY_STOP_FEASIBLE {
+            break;
+        }
+    }
+    ctx.stats.rounding_attempts += attempts_used as u64;
+    best.map(|mut b| {
+        b.rounding_attempts = attempts_used;
+        b
+    })
+}
+
+/// Solve θ(t, v) (Algorithm 4) with an explicit solver context: cheapest
+/// placement training `v` samples in this slot, comparing the internal
+/// and external cases.
+pub fn solve_theta_ctx(
+    job: &Job,
+    snap: &SlotSnapshot,
+    v: f64,
+    cfg: &ThetaConfig,
+    ctx: &mut SolverCtx<'_>,
+) -> Option<ThetaSolution> {
+    if v <= 0.0 {
+        return Some(ThetaSolution {
+            cost: 0.0,
+            placements: Vec::new(),
+            internal: true,
+            rounding_attempts: 0,
+        });
+    }
+    ctx.stats.theta_solves += 1;
+    let internal = solve_internal(job, snap, v, ctx);
+    let external = solve_external(job, snap, v, cfg, ctx);
+    match (internal, external) {
+        (Some(a), Some(b)) => Some(if a.cost <= b.cost { a } else { b }),
+        (Some(a), None) => Some(a),
+        (None, Some(b)) => Some(b),
+        (None, None) => None,
+    }
+}
+
+/// Memo-less convenience wrapper over [`solve_theta_ctx`] (throwaway
+/// workspace; no caching — every call is an oracle solve).
+pub fn solve_theta(
+    job: &Job,
+    snap: &SlotSnapshot,
+    v: f64,
+    cfg: &ThetaConfig,
+    rng: &mut Rng,
+) -> Option<ThetaSolution> {
+    let mut ws = SolverWorkspace::new();
+    let mut stats = SolverStats::default();
+    let mut ctx = SolverCtx { rng, ws: &mut ws, memo: None, sig: 0, stats: &mut stats };
+    solve_theta_ctx(job, snap, v, cfg, &mut ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ResVec;
+    use crate::jobs::test_support::test_job;
+
+    fn flat_snap(n: usize, price: f64, cap: f64) -> SlotSnapshot {
+        SlotSnapshot::new(
+            vec![[price; NUM_RESOURCES]; n],
+            vec![ResVec::new([cap; NUM_RESOURCES]); n],
+            vec![true; n],
+            vec![true; n],
+            true,
+        )
+    }
+
+    #[test]
+    fn zero_workload_is_free() {
+        let job = test_job(0);
+        let snap = flat_snap(3, 1.0, 100.0);
+        let mut rng = Rng::new(0);
+        let sol = solve_theta(&job, &snap, 0.0, &ThetaConfig::default(), &mut rng).unwrap();
+        assert_eq!(sol.cost, 0.0);
+        assert!(sol.placements.is_empty());
+    }
+
+    #[test]
+    fn small_workload_prefers_internal() {
+        let job = test_job(0);
+        let snap = flat_snap(3, 1.0, 100.0);
+        let mut rng = Rng::new(0);
+        // a workload fitting comfortably on one machine
+        let sol =
+            solve_theta(&job, &snap, 100.0, &ThetaConfig::default(), &mut rng).unwrap();
+        assert!(sol.internal, "co-location should win on uniform prices");
+        assert_eq!(sol.placements.len(), 1);
+        let (_, w, s) = sol.placements[0];
+        assert!(w >= 1 && s >= 1);
+        assert!(w <= job.batch);
+    }
+
+    #[test]
+    fn trains_enough_samples() {
+        let job = test_job(0);
+        let snap = flat_snap(4, 0.5, 200.0);
+        let mut rng = Rng::new(1);
+        let v = 400.0;
+        let sol = solve_theta(&job, &snap, v, &ThetaConfig::default(), &mut rng).unwrap();
+        let trained = speed::samples_in_slot(&job, &sol.placements);
+        assert!(trained >= v - 1e-6, "trained {trained} of {v}");
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let job = test_job(0);
+        // capacity so tight only a couple of workers fit anywhere
+        let snap = flat_snap(2, 1.0, 6.0);
+        let mut rng = Rng::new(2);
+        let cfg = ThetaConfig::default();
+        for v in [10.0, 100.0, 1000.0] {
+            if let Some(sol) = solve_theta(&job, &snap, v, &cfg, &mut rng) {
+                for &(h, w, s) in &sol.placements {
+                    assert!(job.demand(w, s).fits_within(&snap.residual[h], 1e-9));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_when_cluster_too_small() {
+        let job = test_job(0);
+        let snap = flat_snap(1, 1.0, 3.9); // < 1 worker + 1 ps
+        let mut rng = Rng::new(3);
+        let sol = solve_theta(&job, &snap, 50.0, &ThetaConfig::default(), &mut rng);
+        assert!(sol.is_none());
+    }
+
+    #[test]
+    fn separated_masks_force_external() {
+        let job = test_job(0);
+        // machines 0–1 host only PSs, 2–3 only workers (OASiS style)
+        let aw = vec![false, false, true, true];
+        let ap = vec![true, true, false, false];
+        let snap = SlotSnapshot::new(
+            vec![[1.0; NUM_RESOURCES]; 4],
+            vec![ResVec::new([100.0; NUM_RESOURCES]); 4],
+            aw.clone(),
+            ap.clone(),
+            true,
+        );
+        let mut rng = Rng::new(4);
+        let sol = solve_theta(&job, &snap, 100.0, &ThetaConfig::default(), &mut rng)
+            .expect("external case should be feasible");
+        assert!(!sol.internal);
+        for &(h, w, s) in &sol.placements {
+            if w > 0 {
+                assert!(aw[h], "worker on non-worker machine {h}");
+            }
+            if s > 0 {
+                assert!(ap[h], "ps on non-ps machine {h}");
+            }
+        }
+    }
+
+    #[test]
+    fn cheaper_machine_wins_internal() {
+        let job = test_job(0);
+        let mut p = vec![[2.0; NUM_RESOURCES]; 3];
+        p[1] = [0.5; NUM_RESOURCES];
+        let snap = SlotSnapshot::new(
+            p,
+            vec![ResVec::new([100.0; NUM_RESOURCES]); 3],
+            vec![true; 3],
+            vec![true; 3],
+            true,
+        );
+        let mut rng = Rng::new(5);
+        let sol =
+            solve_theta(&job, &snap, 50.0, &ThetaConfig::default(), &mut rng).unwrap();
+        assert!(sol.internal);
+        assert_eq!(sol.placements[0].0, 1, "should pick the cheap machine");
+    }
+
+    #[test]
+    fn grouping_matches_ungrouped_cost() {
+        // The grouped LP is a reformulation, not an approximation: on a
+        // homogeneous cluster the achieved cost must match the per-machine
+        // formulation up to rounding noise.
+        let job = test_job(0);
+        let prices = vec![[1.0; NUM_RESOURCES]; 16];
+        let resid = vec![ResVec::new([60.0; NUM_RESOURCES]); 16];
+        let grouped = SlotSnapshot::new(
+            prices.clone(),
+            resid.clone(),
+            vec![true; 16],
+            vec![true; 16],
+            true,
+        );
+        let ungrouped =
+            SlotSnapshot::new(prices, resid, vec![true; 16], vec![true; 16], false);
+        assert_eq!(grouped.groups.len(), 1);
+        assert_eq!(ungrouped.groups.len(), 16);
+        let cfg = ThetaConfig::default();
+        for v in [50.0, 400.0, 1500.0] {
+            let mut r1 = Rng::new(9);
+            let mut r2 = Rng::new(9);
+            let a = solve_theta(&job, &grouped, v, &cfg, &mut r1);
+            let b = solve_theta(&job, &ungrouped, v, &cfg, &mut r2);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    let tol = 0.25 * a.cost.max(b.cost) + 1e-9;
+                    assert!(
+                        (a.cost - b.cost).abs() <= tol,
+                        "v={v}: grouped {} vs ungrouped {}",
+                        a.cost,
+                        b.cost
+                    );
+                }
+                (a, b) => panic!("feasibility mismatch at v={v}: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn worker_cap_blocks_oversized_slots() {
+        let mut job = test_job(0);
+        job.batch = 4; // at most 4 workers
+        let snap = flat_snap(8, 1.0, 1e6);
+        let mut rng = Rng::new(6);
+        // v so large that > 4 workers would be needed even internally
+        let per = speed::per_sample_time(&job, Locality::Internal);
+        let v = 6.0 / per;
+        let sol = solve_theta(&job, &snap, v, &ThetaConfig::default(), &mut rng);
+        assert!(sol.is_none());
+    }
+
+    /// Memoization must be semantically invisible: replaying the same
+    /// sequence of θ-solves with and without the memo produces identical
+    /// solutions AND identical RNG consumption.
+    #[test]
+    fn memoized_replay_matches_oracle() {
+        let job = test_job(0);
+        // two distinct signatures, queried repeatedly (what the DP does
+        // across quiet slots)
+        let snaps = [flat_snap(6, 1.0, 80.0), flat_snap(6, 2.0, 40.0)];
+        let cfg = ThetaConfig::default();
+        let vs = [60.0, 300.0, 900.0, 60.0, 300.0, 900.0];
+
+        let run = |use_memo: bool| -> (Vec<Option<ThetaSolution>>, u64, SolverStats) {
+            let mut interner = crate::cluster::SignatureInterner::new();
+            let mut memo = ThetaMemo::new();
+            let mut ws = SolverWorkspace::new();
+            let mut stats = SolverStats::default();
+            let mut rng = Rng::new(77);
+            let mut out = Vec::new();
+            for round in 0..3 {
+                let snap = &snaps[round % 2];
+                let sig = interner.intern(snap);
+                for &v in &vs {
+                    let mut ctx = SolverCtx {
+                        rng: &mut rng,
+                        ws: &mut ws,
+                        memo: if use_memo { Some(&mut memo) } else { None },
+                        sig,
+                        stats: &mut stats,
+                    };
+                    out.push(solve_theta_ctx(&job, snap, v, &cfg, &mut ctx));
+                }
+            }
+            (out, rng.next_u64(), stats)
+        };
+
+        let (cached, rng_cached, stats_cached) = run(true);
+        let (oracle, rng_oracle, stats_oracle) = run(false);
+        assert_eq!(cached.len(), oracle.len());
+        for (a, b) in cached.iter().zip(&oracle) {
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.cost, b.cost);
+                    assert_eq!(a.placements, b.placements);
+                    assert_eq!(a.internal, b.internal);
+                }
+                (None, None) => {}
+                other => panic!("feasibility mismatch: {other:?}"),
+            }
+        }
+        assert_eq!(rng_cached, rng_oracle, "RNG streams must stay in lockstep");
+        assert_eq!(stats_cached.theta_solves, stats_oracle.theta_solves);
+        assert!(stats_cached.memo_hits > 0, "repeat queries must hit the memo");
+        assert_eq!(stats_oracle.memo_hits, 0);
+        assert!(
+            stats_cached.lp_solves < stats_oracle.lp_solves,
+            "the memo must absorb repeat LP solves ({} vs {})",
+            stats_cached.lp_solves,
+            stats_oracle.lp_solves
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Reusable solver scratch — the allocation-free substrate of the θ hot
+//! path (snapshot → memo → **LP workspace** → rounding).
+
+use crate::cluster::SignatureInterner;
+use crate::lp::{LpProblem, LpWorkspace};
+
+use super::memo::ThetaMemo;
+use super::stats::SolverStats;
+
+/// Scratch buffers one θ-solve draws on. Everything here is recycled
+/// across solves: the LP tableau ([`LpWorkspace`]), the problem rows
+/// ([`LpProblem::reset`] pooling), the per-machine fractional solution,
+/// the rounding draw buffer, and the sparse-row term list.
+#[derive(Debug)]
+pub struct SolverWorkspace {
+    pub lp: LpWorkspace,
+    /// Rebuilt (via [`LpProblem::reset`]) for every external-case LP.
+    pub problem: LpProblem,
+    /// Disaggregated fractional workers per machine.
+    pub frac_w: Vec<f64>,
+    /// Disaggregated fractional parameter servers per machine.
+    pub frac_s: Vec<f64>,
+    /// Rounding scratch: the placements one attempt draws into (reused
+    /// across attempts and solves; cloned only into a winning solution).
+    pub attempt: Vec<(usize, u64, u64)>,
+    /// Sparse-row construction scratch.
+    pub terms: Vec<(usize, f64)>,
+}
+
+impl SolverWorkspace {
+    pub fn new() -> SolverWorkspace {
+        SolverWorkspace {
+            lp: LpWorkspace::new(),
+            problem: LpProblem::new(0),
+            frac_w: Vec::new(),
+            frac_s: Vec::new(),
+            attempt: Vec::new(),
+            terms: Vec::new(),
+        }
+    }
+}
+
+impl Default for SolverWorkspace {
+    fn default() -> SolverWorkspace {
+        SolverWorkspace::new()
+    }
+}
+
+/// Everything a planner (one `plan_job` caller) owns across arrivals:
+/// the signature interner, the per-arrival θ-memo, the LP/rounding
+/// scratch, and the cumulative solver counters. `PdOrs` keeps one of
+/// these for its whole lifetime; `plan_job_with` clears the
+/// interner/memo (never the buffers or counters) at the start of each
+/// planning episode.
+#[derive(Debug, Default)]
+pub struct PlannerScratch {
+    pub interner: SignatureInterner,
+    pub memo: ThetaMemo,
+    pub ws: SolverWorkspace,
+    /// Cumulative counters across every plan on this scratch.
+    pub stats: SolverStats,
+}
+
+impl PlannerScratch {
+    pub fn new() -> PlannerScratch {
+        PlannerScratch::default()
+    }
+}

@@ -37,6 +37,7 @@
 
 use crate::cluster::{AllocLedger, Cluster};
 use crate::jobs::{speed, Job, Schedule, SlotPlacement};
+use crate::sched::solver::SolverStats;
 
 use super::events::{ResultCollector, SimEvent, SimObserver, SimResult};
 
@@ -103,6 +104,15 @@ pub trait Scheduler {
         _ledger: &AllocLedger,
     ) -> Vec<SlotGrant> {
         Vec::new()
+    }
+
+    /// Cumulative solver counters (θ-solves, memo hits, LP pivots,
+    /// rounding attempts). The engine polls this once at the end of a run
+    /// and emits it as [`SimEvent::Solver`] so observers and the
+    /// [`SimResult`] can surface it. Default: all zeros (policies that do
+    /// not run the θ-solver pipeline).
+    fn solver_stats(&self) -> SolverStats {
+        SolverStats::default()
     }
 }
 
@@ -329,6 +339,7 @@ impl<'a> SimEngine<'a> {
             }
         }
 
+        self.emit(&mut collector, SimEvent::Solver { stats: sched.solver_stats() });
         self.emit(&mut collector, SimEvent::HorizonEnd { horizon });
         debug_assert!(ledger.within_capacity(1e-6));
         collector.into_result(sched.name())

@@ -10,6 +10,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::sched::solver::SolverStats;
+
 /// One typed simulation event. `t` is the slot index; `job_id` refers to
 /// [`crate::jobs::Job::id`].
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +34,9 @@ pub enum SimEvent {
     Granted { t: usize, job_id: usize, workers: u64, ps: u64 },
     /// A job finished its full workload `E_i K_i` at slot `t`.
     Completed { t: usize, job_id: usize, utility: f64, training_time: f64 },
+    /// Cumulative solver counters, polled from the scheduler and emitted
+    /// once at the end of the run (right before [`SimEvent::HorizonEnd`]).
+    Solver { stats: SolverStats },
     /// Emitted once after the last slot (and the late-arrival flush).
     HorizonEnd { horizon: usize },
 }
@@ -62,6 +67,11 @@ pub struct SimResult {
     pub total_utility: f64,
     pub admitted: usize,
     pub completed: usize,
+    /// Solver counters polled at the end of the run (all zeros for
+    /// policies outside the θ-solver pipeline). Diagnostic only: runs
+    /// that differ solely in caching legitimately differ here, so parity
+    /// comparisons go through [`SimResult::parity_eq`].
+    pub solver: SolverStats,
 }
 
 impl SimResult {
@@ -69,7 +79,25 @@ impl SimResult {
         let total_utility = outcomes.iter().map(|o| o.utility).sum();
         let admitted = outcomes.iter().filter(|o| o.admitted).count();
         let completed = outcomes.iter().filter(|o| o.completed).count();
-        SimResult { scheduler, outcomes, total_utility, admitted, completed }
+        SimResult {
+            scheduler,
+            outcomes,
+            total_utility,
+            admitted,
+            completed,
+            solver: SolverStats::default(),
+        }
+    }
+
+    /// Semantic equality: everything except the diagnostic solver
+    /// counters. This is what "byte-identical schedules" means for the
+    /// cached vs `--no-theta-cache` parity contract.
+    pub fn parity_eq(&self, other: &SimResult) -> bool {
+        self.scheduler == other.scheduler
+            && self.outcomes == other.outcomes
+            && self.total_utility == other.total_utility
+            && self.admitted == other.admitted
+            && self.completed == other.completed
     }
 
     pub fn training_times(&self) -> Vec<f64> {
@@ -84,6 +112,7 @@ impl SimResult {
 pub struct ResultCollector {
     horizon: usize,
     outcomes: BTreeMap<usize, JobOutcome>,
+    solver: SolverStats,
 }
 
 impl ResultCollector {
@@ -93,7 +122,10 @@ impl ResultCollector {
 
     /// Finish aggregation (outcomes ordered by job id).
     pub fn into_result(self, scheduler: String) -> SimResult {
-        SimResult::from_outcomes(scheduler, self.outcomes.into_values().collect())
+        let mut res =
+            SimResult::from_outcomes(scheduler, self.outcomes.into_values().collect());
+        res.solver = self.solver;
+        res
     }
 }
 
@@ -133,6 +165,7 @@ impl SimObserver for ResultCollector {
                     o.training_time = training_time;
                 }
             }
+            SimEvent::Solver { stats } => self.solver = stats,
             SimEvent::SlotStart { .. }
             | SimEvent::Rejected { .. }
             | SimEvent::Deferred { .. }
@@ -180,6 +213,14 @@ impl SimObserver for TraceObserver {
             SimEvent::Completed { t, job_id, utility, .. } => {
                 format!("t={t:3} job {job_id} completed, utility {utility:.2}")
             }
+            SimEvent::Solver { stats } => format!(
+                "solver: {} theta-solves, {} memo hits, {} lp solves, {} pivots, {} roundings",
+                stats.theta_solves,
+                stats.memo_hits,
+                stats.lp_solves,
+                stats.lp_pivots,
+                stats.rounding_attempts
+            ),
             SimEvent::HorizonEnd { horizon } => format!("horizon end (T={horizon})"),
         };
         self.lines.push(line);
@@ -236,6 +277,32 @@ mod tests {
         assert_eq!(o.completion, Some(6));
         assert_eq!(o.utility, 0.0);
         assert_eq!(o.training_time, 8.0);
+    }
+
+    #[test]
+    fn collector_folds_solver_stats() {
+        let mut c = ResultCollector::new();
+        let stats = SolverStats {
+            theta_solves: 42,
+            memo_hits: 17,
+            lp_solves: 25,
+            lp_pivots: 300,
+            rounding_attempts: 80,
+        };
+        for ev in [
+            SimEvent::Begin { jobs: 0, horizon: 4 },
+            SimEvent::Solver { stats },
+            SimEvent::HorizonEnd { horizon: 4 },
+        ] {
+            c.on_event(&ev);
+        }
+        let res = c.into_result("test".into());
+        assert_eq!(res.solver, stats);
+        // parity_eq ignores the diagnostic counters
+        let mut other = res.clone();
+        other.solver = SolverStats::default();
+        assert!(res.parity_eq(&other));
+        assert_ne!(res, other);
     }
 
     #[test]

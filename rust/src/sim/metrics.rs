@@ -2,6 +2,7 @@
 //! [`SimResult`] plus [`StreamingMetrics`], an observer that keeps running
 //! aggregates *while* the engine runs (no second pass over the outcomes).
 
+use crate::sched::solver::SolverStats;
 use crate::util::stats;
 
 use super::events::{SimEvent, SimObserver, SimResult};
@@ -39,6 +40,8 @@ pub struct StreamingMetrics {
     pub total_utility: f64,
     /// Per-slot grant events (a job granted in k slots counts k times).
     pub grants: usize,
+    /// Solver counters (arrives once, at the end of the run).
+    pub solver: SolverStats,
     granted_jobs: std::collections::BTreeSet<usize>,
 }
 
@@ -64,6 +67,7 @@ impl SimObserver for StreamingMetrics {
                 self.completed += 1;
                 self.total_utility += utility;
             }
+            SimEvent::Solver { stats } => self.solver = stats,
             SimEvent::Begin { .. }
             | SimEvent::SlotStart { .. }
             | SimEvent::Deferred { .. }
@@ -96,6 +100,7 @@ mod tests {
             admitted: times.len(),
             completed: times.len(),
             outcomes,
+            solver: SolverStats::default(),
         }
     }
 

@@ -146,6 +146,7 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         .run(sched.as_mut());
     debug_assert_eq!(streaming.admitted, result.admitted, "observer drift");
     debug_assert_eq!(streaming.completed, result.completed, "observer drift");
+    debug_assert_eq!(streaming.solver, result.solver, "observer drift");
     let record = CellRecord {
         key: sc.key(),
         scheduler: sc.scheduler.clone(),
@@ -157,6 +158,10 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         completed: result.completed,
         total_utility: result.total_utility,
         median_training_time: median_training_time(&result),
+        theta_solves: result.solver.theta_solves,
+        memo_hits: result.solver.memo_hits,
+        lp_pivots: result.solver.lp_pivots,
+        rounding_attempts: result.solver.rounding_attempts,
         wall_secs: timer.elapsed_secs(),
     };
     Ok((result, record))

@@ -13,9 +13,12 @@ use std::io::Write as _;
 
 use crate::util::json::{self, Json};
 
-/// One completed cell: the scenario identity plus its metrics and wall
-/// time. `wall_secs` is the only non-deterministic field —
-/// [`CellRecord::metrics_line`] excludes it for determinism comparisons.
+/// One completed cell: the scenario identity plus its metrics, solver
+/// diagnostics, and wall time. `wall_secs` and the solver counters are
+/// the diagnostic fields — [`CellRecord::metrics_line`] excludes them for
+/// determinism/parity comparisons (wall time is non-deterministic; the
+/// counters legitimately differ between cached and `--no-theta-cache`
+/// runs of byte-identical schedules).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellRecord {
     /// Stable scenario key (`Scenario::key`).
@@ -29,6 +32,12 @@ pub struct CellRecord {
     pub completed: usize,
     pub total_utility: f64,
     pub median_training_time: f64,
+    /// Solver diagnostics (zeros for non-θ policies; see
+    /// [`crate::sched::SolverStats`]).
+    pub theta_solves: u64,
+    pub memo_hits: u64,
+    pub lp_pivots: u64,
+    pub rounding_attempts: u64,
     pub wall_secs: f64,
 }
 
@@ -50,6 +59,10 @@ impl CellRecord {
 
     pub fn to_json(&self) -> Json {
         let mut fields = self.metric_fields();
+        fields.push(("theta_solves", json::num(self.theta_solves as f64)));
+        fields.push(("memo_hits", json::num(self.memo_hits as f64)));
+        fields.push(("lp_pivots", json::num(self.lp_pivots as f64)));
+        fields.push(("rounding_attempts", json::num(self.rounding_attempts as f64)));
         fields.push(("wall_secs", json::num(self.wall_secs)));
         json::obj(fields)
     }
@@ -59,9 +72,10 @@ impl CellRecord {
         self.to_json().to_string()
     }
 
-    /// The record serialized *without* `wall_secs`: byte-identical across
-    /// `--jobs 1` and `--jobs N` runs of the same matrix (the determinism
-    /// contract).
+    /// The record serialized *without* the diagnostic fields (wall time
+    /// and solver counters): byte-identical across `--jobs 1` and
+    /// `--jobs N` runs of the same matrix, and across cached and
+    /// `--no-theta-cache` runs (the determinism/parity contracts).
     pub fn metrics_line(&self) -> String {
         json::obj(self.metric_fields()).to_string()
     }
@@ -89,7 +103,11 @@ impl CellRecord {
             completed: num_field("completed")? as usize,
             total_utility: num_field("total_utility")?,
             median_training_time: num_field("median_training_time")?,
-            // tolerate older/foreign lines without a wall time
+            // tolerate older/foreign lines without the diagnostic fields
+            theta_solves: opt_u64(v, "theta_solves"),
+            memo_hits: opt_u64(v, "memo_hits"),
+            lp_pivots: opt_u64(v, "lp_pivots"),
+            rounding_attempts: opt_u64(v, "rounding_attempts"),
             wall_secs: v.get("wall_secs").and_then(Json::as_f64).unwrap_or(0.0),
         })
     }
@@ -97,6 +115,12 @@ impl CellRecord {
     pub fn from_line(line: &str) -> Result<CellRecord, String> {
         CellRecord::from_json(&Json::parse(line)?)
     }
+}
+
+/// Optional non-negative integer field (0 when absent — older lines
+/// predate the solver diagnostics).
+fn opt_u64(v: &Json, key: &str) -> u64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
 }
 
 /// One aggregated row of [`ResultStore::summary`]: all seeds of one
@@ -251,6 +275,10 @@ mod tests {
             completed: 6,
             total_utility: utility,
             median_training_time: 4.5,
+            theta_solves: 200,
+            memo_hits: 150,
+            lp_pivots: 900,
+            rounding_attempts: 40,
             wall_secs: 0.012,
         }
     }
@@ -267,10 +295,25 @@ mod tests {
         let r = sample("k1", 3, 123.456);
         let back = CellRecord::from_line(&r.to_line()).unwrap();
         assert_eq!(r, back);
-        // metrics_line drops only the wall time
+        // metrics_line drops the diagnostic fields, keeps the metrics
         assert!(r.to_line().contains("wall_secs"));
+        assert!(r.to_line().contains("memo_hits"));
         assert!(!r.metrics_line().contains("wall_secs"));
+        assert!(!r.metrics_line().contains("memo_hits"));
+        assert!(!r.metrics_line().contains("theta_solves"));
         assert!(r.metrics_line().contains("total_utility"));
+    }
+
+    #[test]
+    fn lines_without_solver_fields_parse_as_zero() {
+        let r = sample("k1", 3, 1.0);
+        let mut line = r.metrics_line();
+        line.push('\n');
+        let back = CellRecord::from_line(line.trim()).unwrap();
+        assert_eq!(back.theta_solves, 0);
+        assert_eq!(back.memo_hits, 0);
+        assert_eq!(back.wall_secs, 0.0);
+        assert_eq!(back.total_utility, 1.0);
     }
 
     #[test]

@@ -1,0 +1,122 @@
+//! The tentpole parity contract of the layered solver core: θ-memoization
+//! must be semantically invisible. For every scheduler in the registry
+//! ZOO, on both homogeneous and skewed (heterogeneous) clusters, a cached
+//! run and a `--no-theta-cache` (parity oracle) run must produce
+//! byte-identical schedules and metrics — only the diagnostic solver
+//! counters may differ, and for the primal-dual schedulers they must
+//! differ in the expected direction (memo hits > 0, fewer LP solves).
+
+use dmlrs::cluster::Cluster;
+use dmlrs::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
+use dmlrs::sim::{simulate, SimResult};
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::{paper_cluster, paper_cluster_skewed};
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+const JOBS: usize = 12;
+const HORIZON: usize = 14;
+const WORKLOAD_SEED: u64 = 21;
+const SCHED_SEED: u64 = 4;
+
+fn workload() -> Vec<dmlrs::jobs::Job> {
+    let mut rng = Rng::new(WORKLOAD_SEED);
+    synthetic_jobs(&SynthConfig::paper(JOBS, HORIZON, MIX_DEFAULT), &mut rng)
+}
+
+fn clusters() -> Vec<(&'static str, Cluster)> {
+    vec![
+        ("homogeneous", paper_cluster(8)),
+        ("skewed", paper_cluster_skewed(8, 2.0)),
+    ]
+}
+
+fn run(key: &str, cluster: &Cluster, theta_cache: bool) -> SimResult {
+    let reg = SchedulerRegistry::builtin();
+    let jobs = workload();
+    let mut spec = SchedulerSpec::new(key).with_seed(SCHED_SEED);
+    spec.pdors.theta_cache = theta_cache;
+    let mut sched = reg.build(&spec, &jobs, cluster, HORIZON).unwrap();
+    simulate(&jobs, cluster, HORIZON, sched.as_mut())
+}
+
+#[test]
+fn cached_and_oracle_runs_are_byte_identical_across_the_zoo() {
+    for (shape, cluster) in clusters() {
+        for key in ZOO {
+            let cached = run(key, &cluster, true);
+            let oracle = run(key, &cluster, false);
+            assert!(
+                cached.parity_eq(&oracle),
+                "{key} on {shape}: cached vs --no-theta-cache diverged\n\
+                 cached:  u={} admitted={} completed={}\n\
+                 oracle:  u={} admitted={} completed={}",
+                cached.total_utility,
+                cached.admitted,
+                cached.completed,
+                oracle.total_utility,
+                oracle.admitted,
+                oracle.completed,
+            );
+            // per-job outcomes (completions, utilities, training times)
+            // are part of parity_eq, but spell the intent out:
+            assert_eq!(cached.outcomes, oracle.outcomes, "{key} on {shape}");
+        }
+    }
+}
+
+#[test]
+fn primal_dual_schedulers_actually_use_the_memo() {
+    for (shape, cluster) in clusters() {
+        for key in ["pd-ors", "oasis"] {
+            let cached = run(key, &cluster, true);
+            let oracle = run(key, &cluster, false);
+            assert!(
+                cached.solver.theta_solves > 0,
+                "{key} on {shape}: no θ-solves recorded"
+            );
+            assert_eq!(
+                cached.solver.theta_solves, oracle.solver.theta_solves,
+                "{key} on {shape}: solve counts must match"
+            );
+            assert!(
+                cached.solver.memo_hits > 0,
+                "{key} on {shape}: cached run never hit the memo"
+            );
+            assert_eq!(
+                oracle.solver.memo_hits, 0,
+                "{key} on {shape}: the oracle must not consult a memo"
+            );
+            assert!(
+                cached.solver.lp_solves < oracle.solver.lp_solves,
+                "{key} on {shape}: memo should absorb LP solves ({} vs {})",
+                cached.solver.lp_solves,
+                oracle.solver.lp_solves
+            );
+        }
+    }
+}
+
+#[test]
+fn baselines_report_zero_solver_work() {
+    let cluster = paper_cluster(8);
+    for key in ["fifo", "drf", "dorm"] {
+        let res = run(key, &cluster, true);
+        assert_eq!(res.solver, Default::default(), "{key}");
+    }
+}
+
+#[test]
+fn registry_theta_cache_override_forces_the_oracle() {
+    // builtin_with_theta_cache(false) must behave exactly like a spec
+    // with theta_cache = false — same schedules, no memo hits.
+    let jobs = workload();
+    let cluster = paper_cluster(8);
+    let reg = SchedulerRegistry::builtin_with_theta_cache(false);
+    let mut sched = reg
+        .build(&SchedulerSpec::new("pd-ors").with_seed(SCHED_SEED), &jobs, &cluster, HORIZON)
+        .unwrap();
+    let forced = simulate(&jobs, &cluster, HORIZON, sched.as_mut());
+    let oracle = run("pd-ors", &cluster, false);
+    assert_eq!(forced, oracle);
+    assert_eq!(forced.solver.memo_hits, 0);
+}

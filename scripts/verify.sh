@@ -24,6 +24,13 @@ else
     echo "rustfmt unavailable; skipping"
 fi
 
+echo "== cargo clippy (advisory here; CI runs it with -D warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings || echo "warning: clippy findings (fatal in CI)"
+else
+    echo "clippy unavailable; skipping"
+fi
+
 echo "== sweep bench (quick matrix, serial vs parallel) =="
 # Wall-time the quick scenario matrix at --jobs 1 vs all cores and emit
 # BENCH_sweep.json at the repo root (the bench trajectory data point).
@@ -44,5 +51,34 @@ awk -v serial="$SERIAL_SECS" -v parallel="$PAR_SECS" -v par="$PAR" -v cells="$CE
 }' > ../BENCH_sweep.json
 cat ../BENCH_sweep.json
 rm -f "$SERIAL_OUT" "$PAR_OUT"
+
+echo "== solver bench (Fig. 6 quick, theta-cache vs parity oracle) =="
+# Time the quick Fig. 6 run cached vs --no-theta-cache and emit
+# BENCH_solver.json (wall time + the θ-solve / memo-hit counters the
+# figure prints as its '# solver: ...' note). The experiment command
+# prints 'experiment: fig=6 elapsed=<secs>s' itself.
+CACHED_LOG=$("$BIN" experiment --fig 6 --quick)
+UNCACHED_LOG=$("$BIN" experiment --fig 6 --quick --no-theta-cache)
+secs_of() { awk '/^# experiment: /{sub(/.*elapsed=/,""); sub(/s$/,""); print}'; }
+field_of() { awk -v f="$1" '/^# solver:/{n=split($0,a," "); for(i=1;i<=n;i++){if(index(a[i],f"=")==1){sub(f"=","",a[i]); print a[i]; exit}}}'; }
+CACHED_SECS=$(printf '%s\n' "$CACHED_LOG" | secs_of)
+UNCACHED_SECS=$(printf '%s\n' "$UNCACHED_LOG" | secs_of)
+THETA_SOLVES=$(printf '%s\n' "$CACHED_LOG" | field_of theta_solves)
+MEMO_HITS=$(printf '%s\n' "$CACHED_LOG" | field_of memo_hits)
+UNCACHED_HITS=$(printf '%s\n' "$UNCACHED_LOG" | field_of memo_hits)
+awk -v cached="$CACHED_SECS" -v uncached="$UNCACHED_SECS" \
+    -v theta="$THETA_SOLVES" -v hits="$MEMO_HITS" -v uhits="$UNCACHED_HITS" 'BEGIN {
+    speedup = (cached > 0) ? uncached / cached : 0;
+    printf "{\"bench\": \"fig6_quick_solver\", \"cached_secs\": %.3f, \"uncached_secs\": %.3f, \"speedup\": %.2f, \"theta_solves\": %d, \"memo_hits\": %d, \"uncached_memo_hits\": %d}\n", cached, uncached, speedup, theta, hits, uhits;
+}' > ../BENCH_solver.json
+cat ../BENCH_solver.json
+if [ "${MEMO_HITS:-0}" -eq 0 ]; then
+    echo "error: cached Fig. 6 run recorded zero memo hits" >&2
+    exit 1
+fi
+if [ "${UNCACHED_HITS:-0}" -ne 0 ]; then
+    echo "error: --no-theta-cache run recorded memo hits" >&2
+    exit 1
+fi
 
 echo "verify: OK"
