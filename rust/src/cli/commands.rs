@@ -9,6 +9,9 @@ use crate::jobs::Job;
 use crate::runtime::{ModelBundle, XlaRuntime};
 use crate::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
 use crate::sched::{PdOrs, PdOrsConfig};
+use crate::service::{
+    run_load, DaemonConfig, LoadConfig, ServiceConfig,
+};
 use crate::sim::metrics::median_training_time;
 use crate::sim::{SimEngine, TraceObserver};
 use crate::sweep::{
@@ -18,7 +21,10 @@ use crate::util::error::{Error, Result};
 use crate::util::timer::Timer;
 use crate::util::Rng;
 use crate::workload::synthetic::paper_cluster;
-use crate::workload::{google_trace_jobs, synthetic_jobs, SynthConfig, MIX_DEFAULT, MIX_TRACE};
+use crate::workload::{
+    google_trace_jobs, google_trace_jobs_from_events, load_trace_csv, synthetic_jobs,
+    ArrivalProcess, SynthConfig, MIX_DEFAULT, MIX_TRACE,
+};
 
 use super::args::Args;
 
@@ -46,19 +52,53 @@ fn usize_of(args: &Args, cfg: Option<&Config>, key: &str, default: usize) -> usi
     effective(args, cfg, key, &default.to_string()).parse().unwrap_or(default)
 }
 
-fn workload(args: &Args, cfg: Option<&Config>) -> (Vec<Job>, usize, usize, u64) {
+/// Parse the `--arrivals` flag / `workload.arrivals` config key.
+fn arrival_process(args: &Args, cfg: Option<&Config>) -> Result<ArrivalProcess> {
+    let spec = args
+        .get("arrivals")
+        .map(str::to_string)
+        .or_else(|| cfg.and_then(|c| c.get("workload.arrivals")).map(str::to_string));
+    match spec {
+        Some(s) => ArrivalProcess::parse(&s).map_err(Error::from),
+        None => Ok(ArrivalProcess::Alternating),
+    }
+}
+
+fn workload(args: &Args, cfg: Option<&Config>) -> Result<(Vec<Job>, usize, usize, u64)> {
     let machines = usize_of(args, cfg, "machines", 20);
     let num_jobs = usize_of(args, cfg, "jobs", 30);
     let horizon = usize_of(args, cfg, "horizon", 20);
     let seed = args.u64_or("seed", 1);
     let mix = if args.bool("trace-mix") { MIX_TRACE } else { MIX_DEFAULT };
+    let arrivals = arrival_process(args, cfg)?;
     let mut rng = Rng::new(seed);
-    let jobs = if args.bool("trace") {
+    let jobs = if let Some(path) = args.get("trace-file") {
+        let events = load_trace_csv(path).map_err(Error::from)?;
+        google_trace_jobs_from_events(&events, num_jobs, horizon, &mut rng)
+    } else if args.bool("trace") {
         google_trace_jobs(num_jobs, horizon, mix, &mut rng)
     } else {
-        synthetic_jobs(&SynthConfig::paper(num_jobs, horizon, mix), &mut rng)
+        synthetic_jobs(
+            &SynthConfig::paper(num_jobs, horizon, mix).with_arrivals(arrivals),
+            &mut rng,
+        )
     };
-    (jobs, machines, horizon, seed)
+    Ok((jobs, machines, horizon, seed))
+}
+
+/// The shared `WorkloadSpec` of the service commands (`serve` builds its
+/// pricing population from it, `load` replays it): `base_seed` 0 + the
+/// `--seed` cell seed, matching the `compare`/sweep convention.
+fn workload_spec(args: &Args, cfg: Option<&Config>) -> Result<WorkloadSpec> {
+    let num_jobs = usize_of(args, cfg, "jobs", 30);
+    let horizon = usize_of(args, cfg, "horizon", 20);
+    let mix = if args.bool("trace-mix") { MIX_TRACE } else { MIX_DEFAULT };
+    let w = if args.bool("trace") {
+        WorkloadSpec::trace(num_jobs, horizon, 0)
+    } else {
+        WorkloadSpec::synthetic(num_jobs, horizon, 0)
+    };
+    Ok(w.with_mix(mix).with_arrivals(arrival_process(args, cfg)?))
 }
 
 /// Resolve the scheduler spec: `[scheduler]` config section overridden
@@ -95,7 +135,7 @@ fn scheduler_spec(args: &Args, cfg: Option<&Config>, seed: u64) -> SchedulerSpec
 
 pub fn cmd_schedule(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let (jobs, machines, horizon, seed) = workload(args, cfg.as_ref());
+    let (jobs, machines, horizon, seed) = workload(args, cfg.as_ref())?;
     let cluster = paper_cluster(machines);
     let reg = SchedulerRegistry::builtin();
     let spec = scheduler_spec(args, cfg.as_ref(), seed);
@@ -157,7 +197,8 @@ pub fn cmd_compare(args: &Args) -> Result<()> {
     } else {
         WorkloadSpec::synthetic(num_jobs, horizon, 0)
     }
-    .with_mix(mix);
+    .with_mix(mix)
+    .with_arrivals(arrival_process(args, cfg.as_ref())?);
     // Flag-over-config precedence: an explicit --machines flag overrides
     // a `cluster.machines` config key (like every other flag here).
     let mut cluster_cfg = cfg.clone().unwrap_or_default();
@@ -223,11 +264,13 @@ fn sweep_matrix(spec: &SweepSpec, cluster_override: Option<ClusterSpec>) -> Scen
     let schedulers = spec.scheduler_keys();
     let keys: Vec<&str> = schedulers.iter().map(|s| s.as_str()).collect();
     let mut m = ScenarioMatrix::new().schedulers(&keys).seeds(spec.seeds);
+    // the arrival process applies to the synthetic workloads (the trace
+    // source has its own regenerated arrival process)
     if spec.quick {
-        m = m.workload(WorkloadSpec::synthetic(12, 12, 100));
+        m = m.workload(WorkloadSpec::synthetic(12, 12, 100).with_arrivals(spec.arrivals));
     } else {
         m = m
-            .workload(WorkloadSpec::synthetic(40, 20, 100))
+            .workload(WorkloadSpec::synthetic(40, 20, 100).with_arrivals(spec.arrivals))
             .workload(WorkloadSpec::trace(40, 20, 200));
     }
     let machines = if spec.quick { 8 } else { 20 };
@@ -271,6 +314,9 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(list) = args.get("schedulers") {
         spec.schedulers = SweepSpec::parse_scheduler_list(list);
+    }
+    if let Some(a) = args.get("arrivals") {
+        spec.arrivals = ArrivalProcess::parse(a).map_err(Error::from)?;
     }
     if args.bool("fresh") {
         let _ = std::fs::remove_file(&spec.out);
@@ -431,9 +477,114 @@ pub fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let machines = usize_of(args, cfg.as_ref(), "machines", 20);
+    let seed = args.u64_or("seed", 1);
+    // the scheduler seed doubles as the workload cell seed, exactly like
+    // a sweep cell
+    let spec = scheduler_spec(args, cfg.as_ref(), seed);
+    let workload = workload_spec(args, cfg.as_ref())?;
+    let mut cluster_cfg = cfg.clone().unwrap_or_default();
+    if let Some(v) = args.get("machines") {
+        cluster_cfg.set("cluster.machines", v);
+    }
+    let cluster = ClusterSpec::from_config(&cluster_cfg, machines);
+
+    let mut dcfg = DaemonConfig::new(ServiceConfig { scheduler: spec, cluster, workload });
+    dcfg.addr = args.str_or("addr", "127.0.0.1:7171");
+    dcfg.slot_ms = args.u64_or("slot-ms", 0);
+    dcfg.queue_cap = args.usize_or("queue", 64);
+    dcfg.oplog = args.get("oplog").map(str::to_string);
+    dcfg.recover = args.get("recover").map(str::to_string);
+
+    crate::service::install_term_handler();
+    let svc = &dcfg.service;
+    let banner = format!(
+        "scheduler={} cluster={} workload={} slot_ms={} queue={}",
+        svc.scheduler.name,
+        svc.cluster.key(),
+        svc.workload.key(),
+        dcfg.slot_ms,
+        dcfg.queue_cap
+    );
+    let handle = crate::service::start_daemon(dcfg)?;
+    println!("dmlrs serve: listening on {}", handle.addr);
+    println!("  {banner}");
+    // the banner must reach a piped log immediately (scripts poll it for
+    // the bound address)
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+
+    while !handle.is_shutting_down() {
+        if crate::service::termination_requested() {
+            eprintln!("dmlrs serve: termination signal, draining");
+            handle.shutdown();
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let report = handle.join()?;
+    println!(
+        "serve: drained at slot {} submitted={} admitted={} rejected={} deferred={} \
+         completed={} total_utility={:.2}",
+        report.slot,
+        report.submitted,
+        report.admitted,
+        report.rejected,
+        report.deferred,
+        report.completed,
+        report.total_utility
+    );
+    Ok(())
+}
+
+pub fn cmd_load(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let Some(addr) = args.get("addr") else {
+        return Err(err!("--addr is required (e.g. --addr 127.0.0.1:7171)"));
+    };
+    let lcfg = LoadConfig {
+        addr: addr.to_string(),
+        connections: args.usize_or("connections", 4),
+        rate: args.f64_or("rate", 200.0),
+        workload: workload_spec(args, cfg.as_ref())?,
+        seed: args.u64_or("seed", 1),
+        ticks: args.bool("ticks"),
+        shutdown: args.bool("shutdown"),
+    };
+    let report = run_load(&lcfg)?;
+    println!(
+        "load: {} requests over {} connections in {:.3}s (target {:.0}/s, achieved {:.1}/s)",
+        report.requests,
+        report.connections,
+        report.elapsed_secs,
+        report.target_rate,
+        report.achieved_rate
+    );
+    println!(
+        "  decisions: admitted={} rejected={} deferred={} errors={}",
+        report.admitted, report.rejected, report.deferred, report.errors
+    );
+    println!(
+        "  admission latency ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3} max={:.3}",
+        report.p50_ms, report.p95_ms, report.p99_ms, report.mean_ms, report.max_ms
+    );
+    // write the artifact before failing on errors — the numbers that
+    // explain a bad run are exactly the ones worth keeping
+    if let Some(out) = args.get("bench-out") {
+        report.write_bench(out)?;
+        eprintln!("wrote {out}");
+    }
+    if report.errors > 0 {
+        return Err(err!("{} of {} requests errored", report.errors, report.requests));
+    }
+    Ok(())
+}
+
 pub fn cmd_bounds(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let (jobs, machines, horizon, _) = workload(args, cfg.as_ref());
+    let (jobs, machines, horizon, _) = workload(args, cfg.as_ref())?;
     let cluster = paper_cluster(machines);
     let pricing = crate::sched::PricingParams::from_jobs(&jobs, &cluster, horizon);
     println!("mu      = {:.4e}", pricing.mu);

@@ -11,6 +11,10 @@
 //! * `experiment` — regenerate a paper figure (`--fig N`).
 //! * `train`      — end-to-end: schedule a job and execute its BSP
 //!   training through the PJRT artifacts.
+//! * `serve`      — the online admission daemon: any registry scheduler
+//!   behind the NDJSON-over-TCP wire protocol.
+//! * `load`       — open-loop load generator + latency benchmark against
+//!   a running daemon.
 //! * `bounds`     — print the pricing constants and competitive-ratio
 //!   bound for a workload.
 
@@ -46,6 +50,8 @@ fn dispatch(argv: &[String]) -> i32 {
         "sweep" => commands::cmd_sweep(&args),
         "experiment" => commands::cmd_experiment(&args),
         "train" => commands::cmd_train(&args),
+        "serve" => commands::cmd_serve(&args),
+        "load" => commands::cmd_load(&args),
         "bounds" => commands::cmd_bounds(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -76,6 +82,9 @@ COMMANDS:
   schedule    run one scheduler   --scheduler <name>  (any registry name:
               pd-ors|oasis|fifo|drf|dorm; see sched/registry.rs)
               --machines N --jobs N --horizon N --seed N [--trace]
+              [--trace-file PATH]  arrivals + class mix from a real trace
+              CSV (timestamp,job_id,scheduling_class; dirty rows skipped)
+              [--arrivals diurnal:R]  time-varying synthetic arrival rate
               [--events]  print the engine's event trace
               [--dp-units N] [--no-theta-cache]  solver knobs (the cache
               is semantically invisible; disabling it is the parity oracle)
@@ -85,13 +94,29 @@ COMMANDS:
   sweep       run a scenario matrix (schedulers x workloads x clusters x
               seeds) in parallel  [--jobs N] (worker threads; default =
               available parallelism) [--quick] [--seeds N]
-              [--schedulers a,b,c] [--out results/sweep.jsonl] [--fresh]
-              [--no-theta-cache]
+              [--schedulers a,b,c] [--arrivals diurnal:R]
+              [--out results/sweep.jsonl] [--fresh] [--no-theta-cache]
               cells already in the JSONL store are skipped (resumable)
   experiment  regenerate a figure --fig 5..17 [--quick] [--seeds N]
               [--jobs N] [--out results/figNN.tsv] [--no-theta-cache]
   train       end-to-end training --size tiny|small|base --steps N
               [--artifacts DIR] [--machines N] [--seed N]
+  serve       online admission daemon  [--addr 127.0.0.1:7171] (port 0 =
+              ephemeral; the bound address is printed) --scheduler NAME
+              --machines N --jobs N --horizon N --seed N [--trace]
+              [--arrivals diurnal:R] [--slot-ms N] (0 = virtual clock,
+              advanced by tick requests) [--queue N] (request-queue bound)
+              [--oplog PATH] (crash-recovery journal) [--recover PATH]
+              (replay a journal, then resume appending to it)
+              protocol: one JSON request per line — submit/tick/status/
+              cluster/metrics/shutdown (see rust/src/service/protocol.rs)
+  load        load generator      --addr HOST:PORT [--connections N]
+              [--rate R] (target submissions/sec, open loop) --jobs N
+              --horizon N --seed N [--trace] [--arrivals diurnal:R]
+              [--ticks] (replay slot boundaries; needs --connections 1)
+              [--shutdown] (drain the daemon afterwards)
+              [--bench-out BENCH_service.json]  reports throughput and
+              p50/p95/p99 admission latency
   bounds      pricing constants   --machines N --jobs N --horizon N
   help        this text
 

@@ -29,6 +29,11 @@
 //!   scheduler × workload × cluster × seed `ScenarioMatrix`, a
 //!   work-stealing executor on `std::thread::scope`, and a resumable
 //!   JSONL `ResultStore` (`dmlrs sweep`).
+//! * [`service`] — the online admission service: a long-running scheduler
+//!   daemon behind an NDJSON-over-TCP wire protocol (`dmlrs serve`), with
+//!   an op-log for crash recovery and an open-loop load generator with
+//!   latency benchmarks (`dmlrs load`). Shares the simulator's
+//!   `AdmissionCore`, so daemon and `SimEngine` decide identically.
 //! * [`experiments`] — one driver per paper figure (5–17), executed
 //!   through the sweep runner.
 //! * [`util`], [`testkit`], [`cli`], [`config`] — substrates built from
@@ -62,6 +67,7 @@ pub mod jobs;
 pub mod lp;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod sim;
 pub mod sweep;
 pub mod testkit;

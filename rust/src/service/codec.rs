@@ -1,0 +1,181 @@
+//! Wire codec: [`Job`] and [`Schedule`] ⇄ JSON.
+//!
+//! Everything the admission service exchanges — submit requests, decision
+//! responses, and op-log entries — round-trips through these encoders.
+//! Numbers are serialized with Rust's shortest-round-trip `f64`
+//! formatting, so a decode(encode(x)) is *bit-identical*: replaying an
+//! op-log reproduces the exact ledger state (the `--recover` contract).
+
+use crate::cluster::{ResVec, NUM_RESOURCES};
+use crate::jobs::{Job, Schedule, Sigmoid, SlotPlacement};
+use crate::util::json::{self, Json};
+
+pub fn resvec_to_json(v: &ResVec) -> Json {
+    json::arr_f64(&v.0)
+}
+
+pub fn resvec_from_json(v: &Json) -> Result<ResVec, String> {
+    let arr = v.as_arr().ok_or("resource vector must be an array")?;
+    if arr.len() != NUM_RESOURCES {
+        return Err(format!("resource vector needs {NUM_RESOURCES} entries"));
+    }
+    let mut out = ResVec::zero();
+    for (i, x) in arr.iter().enumerate() {
+        out.0[i] = x.as_f64().ok_or("resource vector entries must be numbers")?;
+    }
+    Ok(out)
+}
+
+pub fn job_to_json(job: &Job) -> Json {
+    json::obj(vec![
+        ("id", json::num(job.id as f64)),
+        ("arrival", json::num(job.arrival as f64)),
+        ("epochs", json::num(job.epochs as f64)),
+        ("samples", json::num(job.samples)),
+        ("grad_size_mb", json::num(job.grad_size_mb)),
+        ("tau", json::num(job.tau)),
+        ("gamma", json::num(job.gamma)),
+        ("batch", json::num(job.batch as f64)),
+        ("worker_demand", resvec_to_json(&job.worker_demand)),
+        ("ps_demand", resvec_to_json(&job.ps_demand)),
+        ("b_int", json::num(job.b_int)),
+        ("b_ext", json::num(job.b_ext)),
+        ("theta1", json::num(job.utility.theta1)),
+        ("theta2", json::num(job.utility.theta2)),
+        ("theta3", json::num(job.utility.theta3)),
+    ])
+}
+
+pub fn job_from_json(v: &Json) -> Result<Job, String> {
+    let num = |k: &str| -> Result<f64, String> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("job: missing numeric field {k:?}"))
+    };
+    let res = |k: &str| -> Result<ResVec, String> {
+        resvec_from_json(v.get(k).ok_or_else(|| format!("job: missing field {k:?}"))?)
+            .map_err(|e| format!("job.{k}: {e}"))
+    };
+    Ok(Job {
+        id: num("id")? as usize,
+        arrival: num("arrival")? as usize,
+        epochs: num("epochs")? as u64,
+        samples: num("samples")?,
+        grad_size_mb: num("grad_size_mb")?,
+        tau: num("tau")?,
+        gamma: num("gamma")?,
+        batch: num("batch")? as u64,
+        worker_demand: res("worker_demand")?,
+        ps_demand: res("ps_demand")?,
+        b_int: num("b_int")?,
+        b_ext: num("b_ext")?,
+        utility: Sigmoid {
+            theta1: num("theta1")?,
+            theta2: num("theta2")?,
+            theta3: num("theta3")?,
+        },
+    })
+}
+
+pub fn schedule_to_json(s: &Schedule) -> Json {
+    let slots: Vec<Json> = s
+        .slots
+        .iter()
+        .map(|slot| {
+            let placements: Vec<Json> = slot
+                .placements
+                .iter()
+                .map(|&(h, w, ps)| {
+                    Json::Arr(vec![
+                        json::num(h as f64),
+                        json::num(w as f64),
+                        json::num(ps as f64),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
+                ("t", json::num(slot.t as f64)),
+                ("placements", Json::Arr(placements)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("job_id", json::num(s.job_id as f64)),
+        ("slots", Json::Arr(slots)),
+    ])
+}
+
+pub fn schedule_from_json(v: &Json) -> Result<Schedule, String> {
+    let job_id = v
+        .get("job_id")
+        .and_then(Json::as_f64)
+        .ok_or("schedule: missing job_id")? as usize;
+    let mut slots = Vec::new();
+    for slot in v.get("slots").and_then(Json::as_arr).ok_or("schedule: missing slots")? {
+        let t = slot.get("t").and_then(Json::as_f64).ok_or("slot: missing t")? as usize;
+        let mut placements = Vec::new();
+        for p in slot
+            .get("placements")
+            .and_then(Json::as_arr)
+            .ok_or("slot: missing placements")?
+        {
+            let triple = p.as_arr().ok_or("placement must be [h, w, ps]")?;
+            if triple.len() != 3 {
+                return Err("placement must be [h, w, ps]".into());
+            }
+            let f = |i: usize| -> Result<f64, String> {
+                triple[i].as_f64().ok_or_else(|| "placement entries must be numbers".into())
+            };
+            placements.push((f(0)? as usize, f(1)? as u64, f(2)? as u64));
+        }
+        slots.push(SlotPlacement { t, placements });
+    }
+    Ok(Schedule { job_id, slots })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::test_support::test_job;
+
+    #[test]
+    fn job_round_trips_bit_identically() {
+        let mut job = test_job(7);
+        job.samples = 123456.789012345;
+        job.tau = 3.1e-5;
+        job.utility = Sigmoid { theta1: 99.25, theta2: 0.375, theta3: 11.5 };
+        let back = job_from_json(&job_to_json(&job)).unwrap();
+        assert_eq!(back.id, job.id);
+        assert_eq!(back.samples.to_bits(), job.samples.to_bits());
+        assert_eq!(back.tau.to_bits(), job.tau.to_bits());
+        assert_eq!(back.utility, job.utility);
+        assert_eq!(back.worker_demand, job.worker_demand);
+        // and through the serialized text, too
+        let line = job_to_json(&job).to_string();
+        let reparsed = job_from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(reparsed.samples.to_bits(), job.samples.to_bits());
+        assert_eq!(reparsed.b_ext.to_bits(), job.b_ext.to_bits());
+    }
+
+    #[test]
+    fn schedule_round_trips() {
+        let s = Schedule {
+            job_id: 3,
+            slots: vec![
+                SlotPlacement { t: 2, placements: vec![(0, 2, 1), (4, 1, 0)] },
+                SlotPlacement { t: 3, placements: vec![(1, 3, 2)] },
+            ],
+        };
+        let text = schedule_to_json(&s).to_string();
+        let back = schedule_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn missing_fields_are_reported() {
+        let e = job_from_json(&Json::parse("{\"id\": 1}").unwrap()).unwrap_err();
+        assert!(e.contains("missing"), "{e}");
+        let bad = Json::parse("{\"job_id\": 1, \"slots\": [{\"t\": 0}]}").unwrap();
+        assert!(schedule_from_json(&bad).is_err());
+    }
+}

@@ -1,0 +1,446 @@
+//! The admission daemon: std-only TCP frontend around a [`ServiceCore`].
+//!
+//! Architecture (one box per thread):
+//!
+//! ```text
+//!  client ──► connection handler ─┐
+//!  client ──► connection handler ─┼─► bounded MPSC queue ─► scheduler core
+//!  slot timer (optional) ─────────┘        (backpressure)     (owns the
+//!                                                              ledger +
+//!                                                              solver
+//!                                                              scratch)
+//! ```
+//!
+//! * One handler thread per accepted connection reads NDJSON requests and
+//!   forwards them through a *bounded* `sync_channel`; a full queue blocks
+//!   the handler — natural backpressure toward the client — while the
+//!   single core thread preserves PR 3's no-locks-in-the-solve-path
+//!   determinism contract.
+//! * Responses travel back on a per-request channel, so each connection
+//!   sees its own request/response ordering.
+//! * `--slot-ms N` starts a wall-clock timer thread that enqueues a
+//!   `tick` every N ms; with `N = 0` the clock is purely virtual (driven
+//!   by `tick` requests — what the parity tests and `dmlrs load --ticks`
+//!   use).
+//! * Graceful drain: a `shutdown` request (or SIGTERM/SIGINT in
+//!   `dmlrs serve`) sets the shared stop flag; the acceptor stops
+//!   accepting, handlers finish their in-flight request and close, and
+//!   the core exits once every sender is gone — no request is dropped
+//!   after it was accepted into the queue.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::err;
+use crate::util::error::{Error, Result};
+
+use super::core::{ServiceConfig, ServiceCore, ServiceReport};
+use super::protocol::{err_response, Request};
+
+/// Daemon configuration on top of the core's [`ServiceConfig`].
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Bind address; port 0 picks an ephemeral port (the bound address is
+    /// reported on the handle).
+    pub addr: String,
+    pub service: ServiceConfig,
+    /// Wall-clock slot length in ms; 0 = virtual clock (tick requests
+    /// only).
+    pub slot_ms: u64,
+    /// Bound of the request queue between the connection handlers and
+    /// the scheduler core.
+    pub queue_cap: usize,
+    /// Start a fresh op-log at this path.
+    pub oplog: Option<String>,
+    /// Replay this op-log at startup, then continue appending to it.
+    pub recover: Option<String>,
+}
+
+impl DaemonConfig {
+    pub fn new(service: ServiceConfig) -> DaemonConfig {
+        DaemonConfig {
+            addr: "127.0.0.1:0".to_string(),
+            service,
+            slot_ms: 0,
+            queue_cap: 64,
+            oplog: None,
+            recover: None,
+        }
+    }
+}
+
+struct CoreMsg {
+    req: Request,
+    /// Response channel; `None` for internally generated ticks.
+    resp: Option<Sender<String>>,
+}
+
+/// A running daemon. Dropping the handle does not stop the daemon; call
+/// [`DaemonHandle::shutdown`] (or send a `shutdown` request) and then
+/// [`DaemonHandle::join`].
+pub struct DaemonHandle {
+    /// The actually bound address (resolves port 0).
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    /// `None` only when startup failed (which `start` already reported).
+    core: JoinHandle<Option<ServiceReport>>,
+    accept: JoinHandle<()>,
+    timer: Option<JoinHandle<()>>,
+}
+
+impl DaemonHandle {
+    /// Request a graceful drain (idempotent).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Has a drain been requested (via this handle, a `shutdown` request,
+    /// or a termination signal forwarded by the CLI)?
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Wait for the daemon to finish draining and return the core's
+    /// final deterministic state snapshot. Blocks until a shutdown was
+    /// requested by someone.
+    pub fn join(self) -> Result<ServiceReport> {
+        self.accept.join().map_err(|_| err!("accept thread panicked"))?;
+        if let Some(t) = self.timer {
+            t.join().map_err(|_| err!("slot-timer thread panicked"))?;
+        }
+        self.core
+            .join()
+            .map_err(|_| err!("scheduler-core thread panicked"))?
+            .ok_or_else(|| err!("scheduler core never started"))
+    }
+}
+
+/// Build the core (fresh, fresh+log, or recovered) per the config.
+fn build_core(cfg: &DaemonConfig) -> Result<ServiceCore> {
+    if let (Some(o), Some(r)) = (&cfg.oplog, &cfg.recover) {
+        if o != r {
+            return Err(err!(
+                "--oplog {o} and --recover {r} must name the same file (recovery \
+                 resumes appending to the replayed log)"
+            ));
+        }
+    }
+    match &cfg.recover {
+        Some(path) => ServiceCore::recover(cfg.service.clone(), path),
+        None => {
+            let mut core = ServiceCore::new(cfg.service.clone())?;
+            if let Some(path) = &cfg.oplog {
+                core.attach_log(path)?;
+            }
+            Ok(core)
+        }
+    }
+}
+
+/// Start the daemon: bind, spawn the scheduler-core / acceptor / optional
+/// slot-timer threads, and return once the core is up.
+pub fn start(cfg: DaemonConfig) -> Result<DaemonHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| err!("bind {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr().map_err(Error::from)?;
+    listener.set_nonblocking(true).map_err(Error::from)?;
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = sync_channel::<CoreMsg>(cfg.queue_cap.max(1));
+
+    // The boxed scheduler is not Send by contract (the registry builds
+    // per-thread, like the sweep pool), so the core is CONSTRUCTED on
+    // the thread that will own it; startup errors come back over a
+    // ready-channel before any traffic is accepted.
+    let core_flag = shutdown.clone();
+    let core_cfg = cfg.clone();
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    let core_thread = std::thread::spawn(move || {
+        let core = match build_core(&core_cfg) {
+            Ok(core) => {
+                let _ = ready_tx.send(Ok(()));
+                core
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return None;
+            }
+        };
+        Some(core_loop(core, rx, core_flag))
+    });
+    match ready_rx.recv() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => {
+            let _ = core_thread.join();
+            return Err(e);
+        }
+        Err(_) => {
+            let _ = core_thread.join();
+            return Err(err!("scheduler-core thread died during startup"));
+        }
+    }
+
+    let accept_flag = shutdown.clone();
+    let accept_tx = tx.clone();
+    let accept_thread =
+        std::thread::spawn(move || accept_loop(listener, accept_tx, accept_flag));
+
+    let timer_thread = if cfg.slot_ms > 0 {
+        let timer_flag = shutdown.clone();
+        let timer_tx = tx;
+        let ms = cfg.slot_ms;
+        Some(std::thread::spawn(move || 'timer: loop {
+            // sleep the slot in small chunks so a drain request never
+            // waits out a long slot period
+            let mut remaining = ms;
+            while remaining > 0 {
+                let chunk = remaining.min(20);
+                std::thread::sleep(Duration::from_millis(chunk));
+                if timer_flag.load(Ordering::SeqCst) {
+                    break 'timer;
+                }
+                remaining -= chunk;
+            }
+            if timer_tx.send(CoreMsg { req: Request::Tick, resp: None }).is_err() {
+                break;
+            }
+        }))
+    } else {
+        None
+    };
+
+    Ok(DaemonHandle {
+        addr,
+        shutdown,
+        core: core_thread,
+        accept: accept_thread,
+        timer: timer_thread,
+    })
+}
+
+/// The single scheduler-core thread: applies requests in queue order and
+/// exits when every sender is gone (acceptor + handlers + timer have
+/// drained and closed). Requests accepted into the queue are always
+/// answered, shutdown or not.
+fn core_loop(
+    mut core: ServiceCore,
+    rx: Receiver<CoreMsg>,
+    shutdown: Arc<AtomicBool>,
+) -> ServiceReport {
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(msg) => {
+                let response = core.apply(&msg.req);
+                if matches!(msg.req, Request::Shutdown) {
+                    shutdown.store(true, Ordering::SeqCst);
+                }
+                if let Some(ch) = msg.resp {
+                    let _ = ch.send(response.to_string());
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {} // keep serving until senders drop
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    core.report()
+}
+
+/// Accept connections until shutdown, spawning one handler thread per
+/// connection; joins the handlers before exiting (so `DaemonHandle::join`
+/// observes a fully drained frontend).
+fn accept_loop(listener: TcpListener, tx: SyncSender<CoreMsg>, shutdown: Arc<AtomicBool>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let tx = tx.clone();
+                let flag = shutdown.clone();
+                handlers.push(std::thread::spawn(move || handle_connection(stream, tx, flag)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// One connection: read NDJSON request lines, forward each through the
+/// bounded queue (blocking on queue-full = backpressure), write the
+/// response line. Closes on EOF, I/O error, or shutdown.
+fn handle_connection(stream: TcpStream, tx: SyncSender<CoreMsg>, shutdown: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    let mut line = String::new();
+    'conn: loop {
+        // Accumulate one full line; a read timeout leaves partial data in
+        // `line` and is retried (checking the shutdown flag in between).
+        let at_eof = loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => break true,
+                Ok(_) => break !line.ends_with('\n'),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break 'conn;
+                    }
+                }
+                Err(_) => break 'conn,
+            }
+        };
+        let trimmed = line.trim();
+        if !trimmed.is_empty() {
+            let response = match Request::parse(trimmed) {
+                Err(e) => err_response(&e).to_string(),
+                Ok(req) => {
+                    let (rtx, rrx) = channel();
+                    if tx.send(CoreMsg { req, resp: Some(rtx) }).is_err() {
+                        break 'conn;
+                    }
+                    match rrx.recv() {
+                        Ok(s) => s,
+                        Err(_) => break 'conn,
+                    }
+                }
+            };
+            if stream
+                .write_all(response.as_bytes())
+                .and_then(|_| stream.write_all(b"\n"))
+                .and_then(|_| stream.flush())
+                .is_err()
+            {
+                break 'conn;
+            }
+        }
+        line.clear();
+        if at_eof || shutdown.load(Ordering::SeqCst) {
+            break 'conn;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Termination signals (SIGTERM/SIGINT → graceful drain), used by
+// `dmlrs serve`. Std-only: the `signal(2)` symbol is declared directly
+// against the always-linked platform libc; the handler only touches an
+// atomic flag (async-signal-safe).
+
+static TERM_FLAG: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::Ordering;
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_term(_signum: i32) {
+        super::TERM_FLAG.store(true, Ordering::SeqCst);
+    }
+
+    #[allow(clippy::fn_to_numeric_cast, clippy::fn_to_numeric_cast_with_truncation)]
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_term as extern "C" fn(i32) as usize);
+            signal(SIGINT, on_term as extern "C" fn(i32) as usize);
+        }
+    }
+}
+
+/// Install the SIGTERM/SIGINT → drain-flag handler (no-op off Unix).
+pub fn install_term_handler() {
+    #[cfg(unix)]
+    sig::install();
+}
+
+/// Has a termination signal been received since
+/// [`install_term_handler`]?
+pub fn termination_requested() -> bool {
+    TERM_FLAG.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::core::synthetic_service_config;
+    use super::*;
+
+    fn client(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        (reader, stream)
+    }
+
+    fn roundtrip(
+        reader: &mut BufReader<TcpStream>,
+        stream: &mut TcpStream,
+        line: &str,
+    ) -> String {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    }
+
+    #[test]
+    fn daemon_serves_status_and_drains_on_shutdown() {
+        let cfg = DaemonConfig::new(synthetic_service_config("fifo", 1, 4, 6, 8));
+        let handle = start(cfg).unwrap();
+        let (mut reader, mut stream) = client(handle.addr);
+        let status = roundtrip(&mut reader, &mut stream, "{\"op\":\"status\"}");
+        assert!(status.contains("\"ok\":true"), "{status}");
+        assert!(status.contains("\"slot\":0"), "{status}");
+        let bad = roundtrip(&mut reader, &mut stream, "{\"op\":\"warp\"}");
+        assert!(bad.contains("\"ok\":false"), "{bad}");
+        let tick = roundtrip(&mut reader, &mut stream, "{\"op\":\"tick\"}");
+        assert!(tick.contains("\"slot\":1"), "{tick}");
+        let down = roundtrip(&mut reader, &mut stream, "{\"op\":\"shutdown\"}");
+        assert!(down.contains("\"draining\":true"), "{down}");
+        let report = handle.join().unwrap();
+        assert_eq!(report.slot, 1);
+        assert_eq!(report.submitted, 0);
+    }
+
+    #[test]
+    fn wall_clock_timer_drives_the_slot_forward() {
+        let mut cfg = DaemonConfig::new(synthetic_service_config("fifo", 1, 4, 6, 8));
+        cfg.slot_ms = 20;
+        let handle = start(cfg).unwrap();
+        // wait for at least one auto-tick
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let (mut reader, mut stream) = client(handle.addr);
+        let mut advanced = false;
+        while std::time::Instant::now() < deadline {
+            let status = roundtrip(&mut reader, &mut stream, "{\"op\":\"status\"}");
+            if !status.contains("\"slot\":0") {
+                advanced = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(advanced, "the slot timer never ticked");
+        handle.shutdown();
+        let report = handle.join().unwrap();
+        assert!(report.slot > 0);
+    }
+}

@@ -1,0 +1,321 @@
+//! `dmlrs load` — a multi-connection open-loop load generator for the
+//! admission daemon.
+//!
+//! Replays any [`WorkloadSpec`] against a running daemon: job `k` has a
+//! *scheduled* send time of `start + k / rate` seconds, round-robin
+//! across `connections` parallel client connections. Each connection
+//! keeps one request in flight (size `--connections` for the target
+//! concurrency), and latency is measured from the **scheduled** send
+//! time, not the actual one — so when the daemon falls behind, the
+//! backlog a request spent waiting for its connection shows up in the
+//! reported percentiles instead of being silently omitted (the standard
+//! open-loop correction for coordinated omission). The report carries
+//! throughput plus p50/p95/p99 latency and serializes to
+//! `BENCH_service.json`.
+//!
+//! `--ticks` additionally replays the workload's slot boundaries as
+//! `tick` requests (virtual-clock mode) — every arrival slot and the
+//! remaining horizon, which makes the daemon traverse the exact arrival
+//! sequence and slot schedule a `SimEngine` run would see; it requires a
+//! single connection, since slot ordering across connections is
+//! unordered by design.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::err;
+use crate::sweep::WorkloadSpec;
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+use super::protocol::Request;
+
+/// Load-run parameters.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Daemon address, e.g. `127.0.0.1:7171`.
+    pub addr: String,
+    pub connections: usize,
+    /// Target aggregate submission rate (jobs/sec) across all
+    /// connections.
+    pub rate: f64,
+    /// The workload to replay (jobs drawn with `seed`).
+    pub workload: WorkloadSpec,
+    pub seed: u64,
+    /// Replay slot boundaries as `tick` requests (requires
+    /// `connections == 1`).
+    pub ticks: bool,
+    /// Send a `shutdown` request after the run (lets scripts drain the
+    /// daemon without a separate client).
+    pub shutdown: bool,
+}
+
+/// Aggregated load-run results (latencies in milliseconds).
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub deferred: usize,
+    pub errors: usize,
+    pub connections: usize,
+    pub target_rate: f64,
+    pub achieved_rate: f64,
+    pub elapsed_secs: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("bench", json::s("service_load")),
+            ("requests", json::num(self.requests as f64)),
+            ("admitted", json::num(self.admitted as f64)),
+            ("rejected", json::num(self.rejected as f64)),
+            ("deferred", json::num(self.deferred as f64)),
+            ("errors", json::num(self.errors as f64)),
+            ("connections", json::num(self.connections as f64)),
+            ("target_rate", json::num(self.target_rate)),
+            ("achieved_rate", json::num(self.achieved_rate)),
+            ("elapsed_secs", json::num(self.elapsed_secs)),
+            ("p50_ms", json::num(self.p50_ms)),
+            ("p95_ms", json::num(self.p95_ms)),
+            ("p99_ms", json::num(self.p99_ms)),
+            ("mean_ms", json::num(self.mean_ms)),
+            ("max_ms", json::num(self.max_ms)),
+        ])
+    }
+
+    /// Write the report as one JSON line (the `BENCH_service.json`
+    /// artifact).
+    pub fn write_bench(&self, path: &str) -> Result<()> {
+        let mut line = self.to_json().to_string();
+        line.push('\n');
+        std::fs::write(path, line).map_err(|e| err!("{path}: {e}"))
+    }
+}
+
+struct ConnStats {
+    latencies_ms: Vec<f64>,
+    admitted: usize,
+    rejected: usize,
+    deferred: usize,
+    errors: usize,
+}
+
+/// One client connection worker: submit its share of the jobs at their
+/// scheduled send times (`ticks` only ever true for the single-connection
+/// case; `horizon` bounds the post-arrival tick drain).
+fn run_connection(
+    addr: &str,
+    jobs: &[(usize, &crate::jobs::Job)],
+    start: Instant,
+    interval_secs: f64,
+    ticks: bool,
+    horizon: usize,
+) -> Result<ConnStats> {
+    let stream = TcpStream::connect(addr).map_err(|e| err!("connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().map_err(Error::from)?);
+    let mut stream = stream;
+    let mut st = ConnStats {
+        latencies_ms: Vec::with_capacity(jobs.len()),
+        admitted: 0,
+        rejected: 0,
+        deferred: 0,
+        errors: 0,
+    };
+    let roundtrip = |stream: &mut TcpStream,
+                     reader: &mut BufReader<TcpStream>,
+                     req: &Request|
+     -> Result<String> {
+        let mut line = req.to_line();
+        line.push('\n');
+        stream.write_all(line.as_bytes()).map_err(Error::from)?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp).map_err(Error::from)?;
+        if resp.is_empty() {
+            return Err(err!("daemon closed the connection"));
+        }
+        Ok(resp)
+    };
+    let mut slot = 0usize;
+    for &(k, job) in jobs {
+        if ticks {
+            while slot < job.arrival {
+                roundtrip(&mut stream, &mut reader, &Request::Tick)?;
+                slot += 1;
+            }
+        }
+        let target = start + Duration::from_secs_f64(k as f64 * interval_secs);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let resp = roundtrip(&mut stream, &mut reader, &Request::Submit { job: job.clone() })?;
+        // latency from the *scheduled* send time: a request that had to
+        // wait for its connection reports that wait (see module docs)
+        st.latencies_ms
+            .push(Instant::now().duration_since(target).as_secs_f64() * 1e3);
+        match Json::parse(resp.trim()) {
+            Ok(v) if v.get("ok") == Some(&Json::Bool(true)) => {
+                match v.get("decision").and_then(Json::as_str) {
+                    Some("admitted") => st.admitted += 1,
+                    Some("rejected") => st.rejected += 1,
+                    Some("deferred") => st.deferred += 1,
+                    _ => st.errors += 1,
+                }
+            }
+            _ => st.errors += 1,
+        }
+    }
+    if ticks {
+        // finalize the remaining slots so slot-driven schedulers run
+        // their whole horizon before any --shutdown drain
+        while slot < horizon {
+            roundtrip(&mut stream, &mut reader, &Request::Tick)?;
+            slot += 1;
+        }
+    }
+    Ok(st)
+}
+
+/// Run the load generator (see module docs).
+pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
+    let connections = cfg.connections.max(1);
+    if cfg.ticks && connections != 1 {
+        return Err(err!(
+            "--ticks replays slot boundaries in submission order and needs \
+             --connections 1 (got {connections})"
+        ));
+    }
+    if cfg.rate <= 0.0 || cfg.rate.is_nan() {
+        return Err(err!("--rate must be positive (got {})", cfg.rate));
+    }
+    let jobs = cfg.workload.jobs(cfg.seed);
+    if jobs.is_empty() {
+        return Err(err!("the workload generated no jobs"));
+    }
+    let interval_secs = 1.0 / cfg.rate;
+
+    // Round-robin job assignment, keeping each connection's share in
+    // global submission order.
+    let mut shares: Vec<Vec<(usize, &crate::jobs::Job)>> = vec![Vec::new(); connections];
+    for (k, job) in jobs.iter().enumerate() {
+        shares[k % connections].push((k, job));
+    }
+
+    let horizon = cfg.workload.horizon;
+    let start = Instant::now();
+    let results: Vec<Result<ConnStats>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shares
+            .iter()
+            .map(|share| {
+                scope.spawn(|| {
+                    run_connection(&cfg.addr, share, start, interval_secs, cfg.ticks, horizon)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(err!("load worker panicked"))))
+            .collect()
+    });
+    let elapsed_secs = start.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(jobs.len());
+    let mut admitted = 0;
+    let mut rejected = 0;
+    let mut deferred = 0;
+    let mut errors = 0;
+    for r in results {
+        let st = r?;
+        latencies.extend_from_slice(&st.latencies_ms);
+        admitted += st.admitted;
+        rejected += st.rejected;
+        deferred += st.deferred;
+        errors += st.errors;
+    }
+
+    if cfg.shutdown {
+        let stream =
+            TcpStream::connect(&cfg.addr).map_err(|e| err!("connect {}: {e}", cfg.addr))?;
+        let mut reader = BufReader::new(stream.try_clone().map_err(Error::from)?);
+        let mut stream = stream;
+        let mut line = Request::Shutdown.to_line();
+        line.push('\n');
+        stream.write_all(line.as_bytes()).map_err(Error::from)?;
+        let mut resp = String::new();
+        let _ = reader.read_line(&mut resp);
+    }
+
+    Ok(LoadReport {
+        requests: latencies.len(),
+        admitted,
+        rejected,
+        deferred,
+        errors,
+        connections,
+        target_rate: cfg.rate,
+        achieved_rate: if elapsed_secs > 0.0 {
+            latencies.len() as f64 / elapsed_secs
+        } else {
+            0.0
+        },
+        elapsed_secs,
+        p50_ms: stats::percentile(&latencies, 50.0),
+        p95_ms: stats::percentile(&latencies, 95.0),
+        p99_ms: stats::percentile(&latencies, 99.0),
+        mean_ms: stats::mean(&latencies),
+        max_ms: latencies.iter().cloned().fold(0.0, f64::max),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_has_the_acceptance_fields() {
+        let r = LoadReport {
+            requests: 100,
+            admitted: 60,
+            rejected: 30,
+            deferred: 10,
+            errors: 0,
+            connections: 4,
+            target_rate: 500.0,
+            achieved_rate: 480.5,
+            elapsed_secs: 0.21,
+            p50_ms: 1.5,
+            p95_ms: 4.0,
+            p99_ms: 9.75,
+            mean_ms: 2.0,
+            max_ms: 12.0,
+        };
+        let line = r.to_json().to_string();
+        for field in ["\"bench\":\"service_load\"", "\"p50_ms\":1.5", "\"p95_ms\":4", "\"p99_ms\":9.75", "\"achieved_rate\":480.5", "\"requests\":100"] {
+            assert!(line.contains(field), "{field} missing from {line}");
+        }
+    }
+
+    #[test]
+    fn ticks_require_one_connection() {
+        let cfg = LoadConfig {
+            addr: "127.0.0.1:1".into(),
+            connections: 4,
+            rate: 100.0,
+            workload: WorkloadSpec::synthetic(5, 8, 0),
+            seed: 1,
+            ticks: true,
+            shutdown: false,
+        };
+        assert!(run_load(&cfg).unwrap_err().to_string().contains("connections 1"));
+    }
+}

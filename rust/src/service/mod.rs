@@ -1,0 +1,43 @@
+//! The online admission service: PD-ORS (or any registry scheduler)
+//! served live, the way the paper means it — jobs arrive one by one over
+//! the wire and Algorithm 1 admits/rejects and places them on the spot.
+//!
+//! * [`core`]     — [`ServiceCore`]: the single-threaded scheduler core
+//!   (boxed scheduler + the shared
+//!   [`AdmissionCore`](crate::sim::AdmissionCore) + virtual slot clock +
+//!   metrics + op-log). Also the `--recover` replay engine.
+//! * [`daemon`]   — `dmlrs serve`: std-only TCP daemon; connection
+//!   handler threads feed a bounded MPSC queue into the one core thread
+//!   (backpressure on queue-full, graceful drain on shutdown/SIGTERM).
+//! * [`protocol`] — the NDJSON wire protocol (`submit`, `tick`, `status`,
+//!   `cluster`, `metrics`, `shutdown`).
+//! * [`codec`]    — `Job`/`Schedule` ⇄ JSON with bit-identical `f64`
+//!   round-trips (what makes op-log replay exact).
+//! * [`oplog`]    — the append-only JSONL crash-recovery journal
+//!   (truncated-tail tolerant, like the sweep `ResultStore`).
+//! * [`load`]     — `dmlrs load`: multi-connection open-loop load
+//!   generator reporting throughput + p50/p95/p99 admission latency into
+//!   `BENCH_service.json`.
+//!
+//! Because daemon and simulator share the `AdmissionCore` code path and
+//! schedulers are built from the same `(workload, cluster, horizon)`
+//! triple, feeding a workload's arrival sequence through the daemon in
+//! virtual-clock mode (`dmlrs load --ticks`) reproduces a `SimEngine`
+//! run's admit/reject decisions exactly
+//! (`rust/tests/service_roundtrip.rs`).
+
+pub mod codec;
+pub mod core;
+pub mod daemon;
+pub mod load;
+pub mod oplog;
+pub mod protocol;
+
+pub use self::core::{synthetic_service_config, ServiceConfig, ServiceCore, ServiceReport};
+pub use daemon::{
+    install_term_handler, start as start_daemon, termination_requested, DaemonConfig,
+    DaemonHandle,
+};
+pub use load::{run_load, LoadConfig, LoadReport};
+pub use oplog::{Op, OpLog};
+pub use protocol::Request;

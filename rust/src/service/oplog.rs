@@ -1,0 +1,240 @@
+//! Append-only JSONL op-log: the admission daemon's crash-recovery
+//! journal.
+//!
+//! The scheduler-core thread appends one flushed line per state-mutating
+//! operation (`submit`, `tick`) after applying it, preceded by one
+//! `open` header line recording the serving configuration. `--recover`
+//! replays the ops through a freshly built core — the scheduler is
+//! deterministic in the op sequence, so replay reproduces byte-identical
+//! ledger state and metrics. The header guards against replaying a log
+//! into a differently configured daemon.
+//!
+//! Reading reuses [`crate::util::jsonl::load_tolerant`] (the
+//! `ResultStore` resume idiom): a truncated final line from a crashed
+//! writer is dropped and the file truncated back, so at most the
+//! in-flight operation is lost and appending resumes cleanly.
+
+use std::io::Write as _;
+
+use crate::jobs::Job;
+use crate::util::json::{self, Json};
+
+use super::codec;
+
+/// One replayable operation.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Header: the serving configuration the log was recorded under.
+    Open { header: Json },
+    /// A job submission at virtual slot `slot`; `decision` is the
+    /// recorded outcome (`admitted`/`rejected`/`deferred`), re-checked on
+    /// replay to catch nondeterminism.
+    Submit { slot: usize, decision: String, job: Job },
+    /// A clock advance; `slot` is the slot *after* the tick.
+    Tick { slot: usize },
+}
+
+impl Op {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Op::Open { header } => {
+                let mut fields = vec![("op", json::s("open"))];
+                // splice the header object's fields in
+                if let Json::Obj(m) = header {
+                    let mut out = std::collections::BTreeMap::new();
+                    out.insert("op".to_string(), json::s("open"));
+                    for (k, v) in m {
+                        out.insert(k.clone(), v.clone());
+                    }
+                    return Json::Obj(out);
+                }
+                fields.push(("header", header.clone()));
+                json::obj(fields)
+            }
+            Op::Submit { slot, decision, job } => json::obj(vec![
+                ("op", json::s("submit")),
+                ("slot", json::num(*slot as f64)),
+                ("decision", json::s(decision)),
+                ("job", codec::job_to_json(job)),
+            ]),
+            Op::Tick { slot } => json::obj(vec![
+                ("op", json::s("tick")),
+                ("slot", json::num(*slot as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Op, String> {
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or("op-log line needs an \"op\" field")?;
+        match op {
+            "open" => Ok(Op::Open { header: v.clone() }),
+            "submit" => Ok(Op::Submit {
+                slot: v
+                    .get("slot")
+                    .and_then(Json::as_f64)
+                    .ok_or("submit op needs slot")? as usize,
+                decision: v
+                    .get("decision")
+                    .and_then(Json::as_str)
+                    .ok_or("submit op needs decision")?
+                    .to_string(),
+                job: codec::job_from_json(v.get("job").ok_or("submit op needs job")?)?,
+            }),
+            "tick" => Ok(Op::Tick {
+                slot: v
+                    .get("slot")
+                    .and_then(Json::as_f64)
+                    .ok_or("tick op needs slot")? as usize,
+            }),
+            other => Err(format!("unknown op-log entry {other:?}")),
+        }
+    }
+}
+
+/// The append side of the log.
+#[derive(Debug)]
+pub struct OpLog {
+    path: String,
+    file: std::fs::File,
+}
+
+impl OpLog {
+    /// Create a fresh log at `path`, writing the `open` header. Refuses
+    /// to overwrite an existing non-empty log (pass it to `--recover`
+    /// instead — silently appending to a foreign log would corrupt it).
+    pub fn create(path: &str, header: &Json) -> Result<OpLog, String> {
+        if let Ok(meta) = std::fs::metadata(path) {
+            if meta.len() > 0 {
+                return Err(format!(
+                    "op-log {path} already exists; use --recover {path} to resume it"
+                ));
+            }
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("{path}: {e}"))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)
+            .map_err(|e| format!("{path}: {e}"))?;
+        let mut log = OpLog { path: path.to_string(), file };
+        log.append(&Op::Open { header: header.clone() })?;
+        Ok(log)
+    }
+
+    /// Reopen an existing (already replayed and possibly repaired) log
+    /// for appending.
+    pub fn open_append(path: &str) -> Result<OpLog, String> {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("{path}: {e}"))?;
+        Ok(OpLog { path: path.to_string(), file })
+    }
+
+    /// Append one op as a flushed JSONL line.
+    pub fn append(&mut self, op: &Op) -> Result<(), String> {
+        let mut line = op.to_json().to_string();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|_| self.file.flush())
+            .map_err(|e| format!("{}: {e}", self.path))
+    }
+
+    /// Read a log for replay: tolerant of a truncated final line (which
+    /// is dropped and the file truncated back). Returns the ops plus
+    /// whether a repair happened.
+    pub fn read(path: &str) -> Result<(Vec<Op>, bool), String> {
+        let load = crate::util::jsonl::load_tolerant(path)?;
+        let mut ops = Vec::with_capacity(load.lines.len());
+        for (lineno, v) in load.lines {
+            ops.push(Op::from_json(&v).map_err(|e| format!("{path}:{lineno}: {e}"))?);
+        }
+        Ok((ops, load.repaired))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::test_support::test_job;
+
+    fn tmp(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("dmlrs_oplog_{tag}_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn header() -> Json {
+        json::obj(vec![("scheduler", json::s("pd-ors")), ("horizon", json::num(8.0))])
+    }
+
+    #[test]
+    fn write_then_read_round_trips() {
+        let p = tmp("rt");
+        let _ = std::fs::remove_file(&p);
+        {
+            let mut log = OpLog::create(&p, &header()).unwrap();
+            log.append(&Op::Submit {
+                slot: 0,
+                decision: "admitted".into(),
+                job: test_job(0),
+            })
+            .unwrap();
+            log.append(&Op::Tick { slot: 1 }).unwrap();
+        }
+        let (ops, repaired) = OpLog::read(&p).unwrap();
+        assert!(!repaired);
+        assert_eq!(ops.len(), 3);
+        assert!(matches!(&ops[0], Op::Open { header }
+            if header.get("scheduler").and_then(Json::as_str) == Some("pd-ors")));
+        assert!(matches!(&ops[1], Op::Submit { slot: 0, decision, job }
+            if decision == "admitted" && job.id == 0));
+        assert!(matches!(ops[2], Op::Tick { slot: 1 }));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn truncated_tail_is_repaired_then_appendable() {
+        let p = tmp("crash");
+        let _ = std::fs::remove_file(&p);
+        {
+            let mut log = OpLog::create(&p, &header()).unwrap();
+            log.append(&Op::Tick { slot: 1 }).unwrap();
+        }
+        {
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(b"{\"op\":\"submit\",\"slot\":1,\"jo").unwrap();
+        }
+        let (ops, repaired) = OpLog::read(&p).unwrap();
+        assert!(repaired);
+        assert_eq!(ops.len(), 2, "the in-flight op is dropped");
+        // appending after the repair keeps the file clean
+        let mut log = OpLog::open_append(&p).unwrap();
+        log.append(&Op::Tick { slot: 2 }).unwrap();
+        let (ops, repaired) = OpLog::read(&p).unwrap();
+        assert!(!repaired);
+        assert_eq!(ops.len(), 3);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn create_refuses_existing_nonempty_log() {
+        let p = tmp("exists");
+        std::fs::write(&p, "{\"op\":\"open\"}\n").unwrap();
+        let e = OpLog::create(&p, &header()).unwrap_err();
+        assert!(e.contains("--recover"), "{e}");
+        let _ = std::fs::remove_file(&p);
+    }
+}

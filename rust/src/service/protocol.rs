@@ -1,0 +1,130 @@
+//! The admission service's newline-delimited JSON wire protocol.
+//!
+//! One request per line, one response line per request, over a plain TCP
+//! stream. Requests are objects with an `"op"` field:
+//!
+//! | op         | request fields | response fields |
+//! |------------|----------------|-----------------|
+//! | `submit`   | `job` (see [`super::codec::job_to_json`]) | `job_id`, `decision` (`admitted`/`rejected`/`deferred`), `completion`, `schedule` |
+//! | `tick`     | —              | `slot` (the new current slot), `ended` |
+//! | `status`   | —              | `slot`, `submitted`, `admitted`, `rejected`, `deferred`, `completed`, `total_utility`, `ledger_sum`, … |
+//! | `cluster`  | —              | `machines`, `horizon`, `capacities` |
+//! | `metrics`  | —              | `decisions`, `solve_us` percentiles, `solver` counters, `uptime_secs` |
+//! | `shutdown` | —              | `draining: true` (the daemon then drains and exits) |
+//!
+//! Every response carries `"ok": true` or `"ok": false` + `"error"`. The
+//! submitted job's `id` and `arrival` fields are *assigned by the daemon*
+//! (sequential ids, the current virtual slot); client-supplied values are
+//! ignored.
+
+use crate::jobs::Job;
+use crate::util::json::{self, Json};
+
+use super::codec;
+
+/// A parsed request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Submit { job: Job },
+    Tick,
+    Status,
+    Cluster,
+    Metrics,
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let v = Json::parse(line.trim())?;
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or("request needs a string \"op\" field")?;
+        match op {
+            "submit" => {
+                let job = v.get("job").ok_or("submit needs a \"job\" field")?;
+                Ok(Request::Submit { job: codec::job_from_json(job)? })
+            }
+            "tick" => Ok(Request::Tick),
+            "status" => Ok(Request::Status),
+            "cluster" => Ok(Request::Cluster),
+            "metrics" => Ok(Request::Metrics),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!(
+                "unknown op {other:?} (expected submit|tick|status|cluster|metrics|shutdown)"
+            )),
+        }
+    }
+
+    /// Serialize back to a request line (what clients and the load
+    /// generator send).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit { job } => json::obj(vec![
+                ("op", json::s("submit")),
+                ("job", codec::job_to_json(job)),
+            ]),
+            Request::Tick => json::obj(vec![("op", json::s("tick"))]),
+            Request::Status => json::obj(vec![("op", json::s("status"))]),
+            Request::Cluster => json::obj(vec![("op", json::s("cluster"))]),
+            Request::Metrics => json::obj(vec![("op", json::s("metrics"))]),
+            Request::Shutdown => json::obj(vec![("op", json::s("shutdown"))]),
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// Build a success response from `fields` (prepends `"ok": true`).
+pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.append(&mut fields);
+    json::obj(all)
+}
+
+/// Build an error response.
+pub fn err_response(msg: &str) -> Json {
+    json::obj(vec![("ok", Json::Bool(false)), ("error", json::s(msg))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::test_support::test_job;
+
+    #[test]
+    fn ops_round_trip() {
+        for req in [Request::Tick, Request::Status, Request::Cluster, Request::Metrics, Request::Shutdown] {
+            let line = req.to_line();
+            let back = Request::parse(&line).unwrap();
+            assert_eq!(back.to_line(), line);
+        }
+        let req = Request::Submit { job: test_job(3) };
+        let back = Request::parse(&req.to_line()).unwrap();
+        match back {
+            Request::Submit { job } => assert_eq!(job.id, 3),
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_reported() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("{\"op\": \"fly\"}").unwrap_err().contains("fly"));
+        assert!(Request::parse("{\"op\": \"submit\"}").unwrap_err().contains("job"));
+        assert!(Request::parse("{}").is_err());
+    }
+
+    #[test]
+    fn responses_carry_ok() {
+        let ok = ok_response(vec![("slot", json::num(3.0))]).to_string();
+        assert!(ok.contains("\"ok\":true"));
+        assert!(ok.contains("\"slot\":3"));
+        let e = err_response("busy").to_string();
+        assert!(e.contains("\"ok\":false"));
+        assert!(e.contains("busy"));
+    }
+}

@@ -1,0 +1,268 @@
+//! [`AdmissionCore`] — the one admission/grant code path shared by the
+//! batch simulator ([`SimEngine`](super::SimEngine)) and the online
+//! service daemon ([`crate::service`]).
+//!
+//! The core owns the mutable scheduling state — the [`AllocLedger`] and
+//! the deferred-job active set — and exposes exactly two operations:
+//!
+//! * [`AdmissionCore::submit`] — hand one arriving job to the scheduler
+//!   and fold its [`ArrivalDecision`] into a typed [`AdmissionOutcome`]
+//!   (including the planned completion credit for covered arrival-driven
+//!   schedules);
+//! * [`AdmissionCore::run_slot`] — finalize one slot for slot-driven
+//!   policies: collect the scheduler's grants, validate and commit them,
+//!   decrement remaining workloads, and report completions.
+//!
+//! The engine wraps these in its event stream; the daemon wraps them in
+//! the wire protocol. Neither layer re-implements admission semantics, so
+//! the acceptance parity contract ("the same arrival sequence through the
+//! daemon and through `SimEngine` yields identical decisions") holds by
+//! construction.
+
+use crate::cluster::{AllocLedger, Cluster};
+use crate::jobs::{speed, Job, Schedule, SlotPlacement};
+
+use super::engine::{ActiveJob, ArrivalDecision, Scheduler};
+
+/// A planned or realized completion: the slot it lands on plus the
+/// utility/training-time credit the metrics track.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannedFinish {
+    pub slot: usize,
+    pub utility: f64,
+    pub training_time: f64,
+}
+
+/// The typed result of submitting one job.
+#[derive(Debug, Clone)]
+pub enum AdmissionOutcome {
+    /// Admitted with a committed schedule. `completion` is the planned
+    /// completion slot (if any worker slots exist); `finish` is the
+    /// completion credit when the schedule covers the full workload.
+    Admitted {
+        schedule: Schedule,
+        completion: Option<usize>,
+        finish: Option<PlannedFinish>,
+    },
+    /// Rejected permanently.
+    Rejected,
+    /// Deferred into the active set for per-slot allocation.
+    Deferred,
+}
+
+/// One committed slot grant, reported by [`AdmissionCore::run_slot`].
+#[derive(Debug, Clone)]
+pub struct GrantOutcome {
+    pub job_id: usize,
+    pub workers: u64,
+    pub ps: u64,
+    /// Set when this grant finished the job's workload.
+    pub finish: Option<PlannedFinish>,
+}
+
+/// Shared admission/grant state (see module docs).
+pub struct AdmissionCore {
+    ledger: AllocLedger,
+    active: Vec<ActiveJob>,
+    horizon: usize,
+}
+
+impl AdmissionCore {
+    pub fn new(cluster: &Cluster, horizon: usize) -> AdmissionCore {
+        AdmissionCore {
+            ledger: AllocLedger::new(cluster, horizon),
+            active: Vec::new(),
+            horizon,
+        }
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.horizon
+    }
+
+    pub fn ledger(&self) -> &AllocLedger {
+        &self.ledger
+    }
+
+    /// Deferred jobs still holding workload.
+    pub fn active(&self) -> &[ActiveJob] {
+        &self.active
+    }
+
+    /// Submit one job to the scheduler (its arrival slot is `job.arrival`).
+    pub fn submit(
+        &mut self,
+        sched: &mut dyn Scheduler,
+        job: &Job,
+    ) -> AdmissionOutcome {
+        match sched.on_arrival(job, &mut self.ledger) {
+            ArrivalDecision::Admit(s) => {
+                debug_assert!(s.respects_worker_cap(job));
+                debug_assert!(s.respects_arrival(job));
+                let completion = s.completion_time();
+                let finish = match (s.covers_workload(job, 1.0), completion) {
+                    (true, Some(ct)) => Some(PlannedFinish {
+                        slot: ct,
+                        utility: job.utility_at(ct),
+                        training_time: (ct - job.arrival + 1) as f64,
+                    }),
+                    _ => None,
+                };
+                AdmissionOutcome::Admitted { schedule: s, completion, finish }
+            }
+            ArrivalDecision::Reject => AdmissionOutcome::Rejected,
+            ArrivalDecision::Defer => {
+                self.active
+                    .push(ActiveJob { job: job.clone(), remaining: job.total_workload() });
+                AdmissionOutcome::Deferred
+            }
+        }
+    }
+
+    /// Finalize slot `t` for the deferred active set: ask the scheduler
+    /// for this slot's grants, validate and commit them, and report each
+    /// grant (with its completion, if the job finished). A no-op returning
+    /// no grants while the active set is empty — the scheduler is not
+    /// consulted, preserving its state/RNG stream exactly as the engine
+    /// always did.
+    pub fn run_slot(&mut self, sched: &mut dyn Scheduler, t: usize) -> Vec<GrantOutcome> {
+        if self.active.is_empty() {
+            return Vec::new();
+        }
+        let grants = sched.on_slot(t, &self.active, &self.ledger);
+        let mut out = Vec::new();
+        let mut finished: Vec<usize> = Vec::new();
+        for (idx, placements) in grants {
+            if placements.is_empty() {
+                continue;
+            }
+            // the trait is open to third-party implementations:
+            // never trust grant indices blindly
+            debug_assert!(idx < self.active.len(), "on_slot grant index out of range");
+            if idx >= self.active.len() || finished.contains(&idx) {
+                continue;
+            }
+            let slot = SlotPlacement { t, placements };
+            let (job_id, workers, ps, arrival, done) = {
+                let aj = &mut self.active[idx];
+                debug_assert!(slot.total_workers() <= aj.job.batch, "Eq. (4) violated");
+                let sched_one = Schedule { job_id: aj.job.id, slots: vec![slot.clone()] };
+                debug_assert!(
+                    self.ledger.fits(&aj.job, &sched_one, 1e-9),
+                    "slot scheduler exceeded capacity"
+                );
+                self.ledger.commit(&aj.job, &sched_one);
+                aj.remaining -= speed::samples_in_slot(&aj.job, &slot.placements);
+                (
+                    aj.job.id,
+                    slot.total_workers(),
+                    slot.total_ps(),
+                    aj.job.arrival,
+                    aj.remaining <= 1e-9,
+                )
+            };
+            let finish = if done {
+                finished.push(idx);
+                Some(PlannedFinish {
+                    slot: t,
+                    utility: self.active[idx].job.utility_at(t),
+                    training_time: (t - arrival + 1) as f64,
+                })
+            } else {
+                None
+            };
+            out.push(GrantOutcome { job_id, workers, ps, finish });
+        }
+        finished.sort_unstable_by(|a, b| b.cmp(a));
+        for idx in finished {
+            self.active.swap_remove(idx);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ResVec;
+    use crate::jobs::test_support::test_job;
+    use crate::sim::engine::SlotGrant;
+
+    /// Grants the first active job 2 workers + 1 PS on machine 0.
+    struct Greedy;
+
+    impl Scheduler for Greedy {
+        fn name(&self) -> String {
+            "greedy".into()
+        }
+
+        fn on_arrival(&mut self, _job: &Job, _ledger: &mut AllocLedger) -> ArrivalDecision {
+            ArrivalDecision::Defer
+        }
+
+        fn on_slot(
+            &mut self,
+            _t: usize,
+            active: &[ActiveJob],
+            _ledger: &AllocLedger,
+        ) -> Vec<SlotGrant> {
+            if active.is_empty() {
+                Vec::new()
+            } else {
+                vec![(0, vec![(0, 2, 1)])]
+            }
+        }
+    }
+
+    #[test]
+    fn submit_defers_and_slots_complete_the_job() {
+        let cluster = Cluster::homogeneous(1, ResVec::new([16.0, 32.0, 64.0, 32.0]));
+        let mut core = AdmissionCore::new(&cluster, 10);
+        let mut sched = Greedy;
+        let mut job = test_job(0);
+        job.epochs = 1;
+        job.samples = 1000.0;
+        assert!(matches!(core.submit(&mut sched, &job), AdmissionOutcome::Deferred));
+        assert_eq!(core.active().len(), 1);
+        let mut finish = None;
+        for t in 0..10 {
+            for g in core.run_slot(&mut sched, t) {
+                assert_eq!(g.workers, 2);
+                if let Some(f) = g.finish {
+                    finish = Some(f);
+                }
+            }
+            if finish.is_some() {
+                break;
+            }
+        }
+        let f = finish.expect("job should complete");
+        assert!(f.utility > 0.0);
+        assert!(core.active().is_empty());
+        assert!(core.ledger().within_capacity(1e-9));
+    }
+
+    #[test]
+    fn run_slot_skips_scheduler_when_idle() {
+        struct Panicky;
+        impl Scheduler for Panicky {
+            fn name(&self) -> String {
+                "panicky".into()
+            }
+            fn on_arrival(&mut self, _j: &Job, _l: &mut AllocLedger) -> ArrivalDecision {
+                ArrivalDecision::Reject
+            }
+            fn on_slot(
+                &mut self,
+                _t: usize,
+                _active: &[ActiveJob],
+                _ledger: &AllocLedger,
+            ) -> Vec<SlotGrant> {
+                panic!("must not be consulted while idle");
+            }
+        }
+        let cluster = Cluster::homogeneous(1, ResVec::new([16.0, 32.0, 64.0, 32.0]));
+        let mut core = AdmissionCore::new(&cluster, 4);
+        assert!(core.run_slot(&mut Panicky, 0).is_empty());
+    }
+}

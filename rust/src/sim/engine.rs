@@ -36,9 +36,10 @@
 //! ```
 
 use crate::cluster::{AllocLedger, Cluster};
-use crate::jobs::{speed, Job, Schedule, SlotPlacement};
+use crate::jobs::{Job, Schedule};
 use crate::sched::solver::SolverStats;
 
+use super::admission::{AdmissionCore, AdmissionOutcome};
 use super::events::{ResultCollector, SimEvent, SimObserver, SimResult};
 
 /// The scheduler's verdict on one arriving job.
@@ -187,40 +188,28 @@ impl<'a> SimEngine<'a> {
         }
     }
 
-    /// Handle one arrival; returns a `(completion, utility, training_time)`
-    /// entry when an admitted schedule covers the workload.
+    /// Handle one arrival through the shared [`AdmissionCore`]; returns
+    /// the planned completion entry when an admitted schedule covers the
+    /// workload.
     fn arrive(
         &mut self,
         collector: &mut ResultCollector,
         sched: &mut dyn Scheduler,
-        ledger: &mut AllocLedger,
-        active: &mut Vec<ActiveJob>,
+        core: &mut AdmissionCore,
         t: usize,
         job: &Job,
     ) -> Option<(usize, f64, f64)> {
         self.emit(collector, SimEvent::Arrival { t, job_id: job.id });
-        match sched.on_arrival(job, ledger) {
-            ArrivalDecision::Admit(s) => {
-                debug_assert!(s.respects_worker_cap(job));
-                debug_assert!(s.respects_arrival(job));
-                let completed = s.covers_workload(job, 1.0);
-                let completion = s.completion_time();
+        match core.submit(sched, job) {
+            AdmissionOutcome::Admitted { completion, finish, .. } => {
                 self.emit(collector, SimEvent::Admitted { t, job_id: job.id, completion });
-                match (completed, completion) {
-                    (true, Some(ct)) => {
-                        let utility = job.utility_at(ct);
-                        let training_time = (ct - job.arrival + 1) as f64;
-                        Some((ct, utility, training_time))
-                    }
-                    _ => None,
-                }
+                finish.map(|f| (f.slot, f.utility, f.training_time))
             }
-            ArrivalDecision::Reject => {
+            AdmissionOutcome::Rejected => {
                 self.emit(collector, SimEvent::Rejected { t, job_id: job.id });
                 None
             }
-            ArrivalDecision::Defer => {
-                active.push(ActiveJob { job: job.clone(), remaining: job.total_workload() });
+            AdmissionOutcome::Deferred => {
                 self.emit(collector, SimEvent::Deferred { t, job_id: job.id });
                 None
             }
@@ -232,9 +221,8 @@ impl<'a> SimEngine<'a> {
     pub fn run(&mut self, sched: &mut dyn Scheduler) -> SimResult {
         let jobs = self.jobs;
         let horizon = self.horizon;
-        let mut ledger = AllocLedger::new(self.cluster, horizon);
+        let mut core = AdmissionCore::new(self.cluster, horizon);
         let mut collector = ResultCollector::new();
-        let mut active: Vec<ActiveJob> = Vec::new();
         let mut next_arrival = 0usize;
         // arrival-driven completions, keyed by completion slot
         let mut pending: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new(); horizon];
@@ -242,13 +230,16 @@ impl<'a> SimEngine<'a> {
         self.emit(&mut collector, SimEvent::Begin { jobs: jobs.len(), horizon });
 
         for t in 0..horizon {
-            self.emit(&mut collector, SimEvent::SlotStart { t, active: active.len() });
+            self.emit(
+                &mut collector,
+                SimEvent::SlotStart { t, active: core.active().len() },
+            );
 
             while next_arrival < jobs.len() && jobs[next_arrival].arrival <= t {
                 let job = &jobs[next_arrival];
                 next_arrival += 1;
                 if let Some((ct, utility, training_time)) =
-                    self.arrive(&mut collector, sched, &mut ledger, &mut active, t, job)
+                    self.arrive(&mut collector, sched, &mut core, t, job)
                 {
                     debug_assert!(ct < horizon, "committed schedule beyond horizon");
                     if ct < horizon {
@@ -257,60 +248,21 @@ impl<'a> SimEngine<'a> {
                 }
             }
 
-            if !active.is_empty() {
-                let grants = sched.on_slot(t, &active, &ledger);
-                let mut finished: Vec<usize> = Vec::new();
-                for (idx, placements) in grants {
-                    if placements.is_empty() {
-                        continue;
-                    }
-                    // the trait is open to third-party implementations:
-                    // never trust grant indices blindly
-                    debug_assert!(idx < active.len(), "on_slot grant index out of range");
-                    if idx >= active.len() || finished.contains(&idx) {
-                        continue;
-                    }
-                    let slot = SlotPlacement { t, placements };
-                    let (job_id, workers, ps, arrival, done) = {
-                        let aj = &mut active[idx];
-                        debug_assert!(
-                            slot.total_workers() <= aj.job.batch,
-                            "Eq. (4) violated"
-                        );
-                        let sched_one =
-                            Schedule { job_id: aj.job.id, slots: vec![slot.clone()] };
-                        debug_assert!(
-                            ledger.fits(&aj.job, &sched_one, 1e-9),
-                            "slot scheduler exceeded capacity"
-                        );
-                        ledger.commit(&aj.job, &sched_one);
-                        aj.remaining -= speed::samples_in_slot(&aj.job, &slot.placements);
-                        (
-                            aj.job.id,
-                            slot.total_workers(),
-                            slot.total_ps(),
-                            aj.job.arrival,
-                            aj.remaining <= 1e-9,
-                        )
-                    };
-                    self.emit(&mut collector, SimEvent::Granted { t, job_id, workers, ps });
-                    if done {
-                        let utility = active[idx].job.utility_at(t);
-                        self.emit(
-                            &mut collector,
-                            SimEvent::Completed {
-                                t,
-                                job_id,
-                                utility,
-                                training_time: (t - arrival + 1) as f64,
-                            },
-                        );
-                        finished.push(idx);
-                    }
-                }
-                finished.sort_unstable_by(|a, b| b.cmp(a));
-                for idx in finished {
-                    active.swap_remove(idx);
+            for g in core.run_slot(sched, t) {
+                self.emit(
+                    &mut collector,
+                    SimEvent::Granted { t, job_id: g.job_id, workers: g.workers, ps: g.ps },
+                );
+                if let Some(f) = g.finish {
+                    self.emit(
+                        &mut collector,
+                        SimEvent::Completed {
+                            t,
+                            job_id: g.job_id,
+                            utility: f.utility,
+                            training_time: f.training_time,
+                        },
+                    );
                 }
             }
 
@@ -330,7 +282,7 @@ impl<'a> SimEngine<'a> {
             next_arrival += 1;
             let t = job.arrival;
             if let Some((ct, utility, training_time)) =
-                self.arrive(&mut collector, sched, &mut ledger, &mut active, t, job)
+                self.arrive(&mut collector, sched, &mut core, t, job)
             {
                 self.emit(
                     &mut collector,
@@ -341,7 +293,7 @@ impl<'a> SimEngine<'a> {
 
         self.emit(&mut collector, SimEvent::Solver { stats: sched.solver_stats() });
         self.emit(&mut collector, SimEvent::HorizonEnd { horizon });
-        debug_assert!(ledger.within_capacity(1e-6));
+        debug_assert!(core.ledger().within_capacity(1e-6));
         collector.into_result(sched.name())
     }
 }
@@ -364,6 +316,7 @@ mod tests {
     use super::*;
     use crate::cluster::ResVec;
     use crate::jobs::test_support::test_job;
+    use crate::jobs::SlotPlacement;
     use crate::sim::events::TraceObserver;
 
     /// Trivial slot-driven scheduler: gives the first active job 2 workers

@@ -10,10 +10,12 @@
 //! ([`metrics::StreamingMetrics`]), and trace output ([`TraceObserver`])
 //! are all observers over the same single pass.
 
+pub mod admission;
 pub mod engine;
 pub mod events;
 pub mod metrics;
 
+pub use admission::{AdmissionCore, AdmissionOutcome, GrantOutcome, PlannedFinish};
 pub use engine::{
     simulate, ActiveJob, ArrivalDecision, PlacementPolicy, Scheduler, SimEngine,
     SimEngineBuilder, SlotGrant,

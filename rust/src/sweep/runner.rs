@@ -39,6 +39,7 @@ use super::store::{CellRecord, ResultStore};
 /// quick = false
 /// seeds = 3
 /// schedulers = pd-ors, oasis, fifo
+/// arrivals = diurnal:3      # arrival process for the synthetic workloads
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
@@ -49,6 +50,8 @@ pub struct SweepSpec {
     pub seeds: usize,
     /// Registry keys to sweep; empty means the built-in zoo.
     pub schedulers: Vec<String>,
+    /// Arrival process applied to the matrix's synthetic workloads.
+    pub arrivals: crate::workload::ArrivalProcess,
 }
 
 impl Default for SweepSpec {
@@ -59,6 +62,7 @@ impl Default for SweepSpec {
             out: "results/sweep.jsonl".to_string(),
             seeds: 3,
             schedulers: Vec::new(),
+            arrivals: crate::workload::ArrivalProcess::Alternating,
         }
     }
 }
@@ -109,6 +113,12 @@ impl SweepSpec {
         spec.seeds = cfg.usize("sweep.seeds", spec.seeds).max(1);
         if let Some(list) = cfg.get("sweep.schedulers") {
             spec.schedulers = SweepSpec::parse_scheduler_list(list);
+        }
+        if let Some(a) = cfg.get("sweep.arrivals") {
+            match crate::workload::ArrivalProcess::parse(a) {
+                Ok(p) => spec.arrivals = p,
+                Err(e) => eprintln!("warning: ignoring sweep.arrivals: {e}"),
+            }
         }
         spec
     }

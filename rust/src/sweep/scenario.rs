@@ -15,7 +15,8 @@ use crate::jobs::Job;
 use crate::util::Rng;
 use crate::workload::synthetic::{paper_cluster, paper_cluster_classes, skewed_classes};
 use crate::workload::{
-    google_trace_jobs, synthetic_jobs, ClassMix, SynthConfig, MIX_DEFAULT, MIX_TRACE,
+    google_trace_jobs, synthetic_jobs, ArrivalProcess, ClassMix, SynthConfig,
+    MIX_DEFAULT, MIX_TRACE,
 };
 
 /// Which workload generator a cell draws its jobs from.
@@ -39,6 +40,9 @@ pub struct WorkloadSpec {
     /// Simulation horizon T (also bounds the arrival slots).
     pub horizon: usize,
     pub mix: ClassMix,
+    /// Arrival-slot process (synthetic source only; the trace source has
+    /// its own regenerated arrival process).
+    pub arrivals: ArrivalProcess,
     pub base_seed: u64,
 }
 
@@ -49,6 +53,7 @@ impl WorkloadSpec {
             num_jobs,
             horizon,
             mix: MIX_DEFAULT,
+            arrivals: ArrivalProcess::Alternating,
             base_seed,
         }
     }
@@ -59,12 +64,20 @@ impl WorkloadSpec {
             num_jobs,
             horizon,
             mix: MIX_DEFAULT,
+            arrivals: ArrivalProcess::Alternating,
             base_seed,
         }
     }
 
     pub fn with_mix(mut self, mix: ClassMix) -> WorkloadSpec {
         self.mix = mix;
+        self
+    }
+
+    /// Override the arrival process (e.g. `diurnal:3` — the
+    /// time-varying-rate scenario axis).
+    pub fn with_arrivals(mut self, arrivals: ArrivalProcess) -> WorkloadSpec {
+        self.arrivals = arrivals;
         self
     }
 
@@ -83,14 +96,21 @@ impl WorkloadSpec {
         }
     }
 
-    /// Stable identity string (part of [`Scenario::key`]).
+    /// Stable identity string (part of [`Scenario::key`]). The arrival
+    /// process contributes a token only when non-default, so pre-existing
+    /// store keys are unchanged.
     pub fn key(&self) -> String {
         let src = match self.source {
             WorkloadSource::Synthetic => "synth",
             WorkloadSource::GoogleTrace => "trace",
         };
+        let arr = self
+            .arrivals
+            .key_token()
+            .map(|t| format!("-{t}"))
+            .unwrap_or_default();
         format!(
-            "{src}-i{}-t{}-{}-b{}",
+            "{src}-i{}-t{}-{}{arr}-b{}",
             self.num_jobs,
             self.horizon,
             self.mix_label(),
@@ -103,9 +123,11 @@ impl WorkloadSpec {
     pub fn jobs(&self, cell_seed: u64) -> Vec<Job> {
         let mut rng = Rng::new(self.base_seed.wrapping_add(cell_seed));
         match self.source {
-            WorkloadSource::Synthetic => {
-                synthetic_jobs(&SynthConfig::paper(self.num_jobs, self.horizon, self.mix), &mut rng)
-            }
+            WorkloadSource::Synthetic => synthetic_jobs(
+                &SynthConfig::paper(self.num_jobs, self.horizon, self.mix)
+                    .with_arrivals(self.arrivals),
+                &mut rng,
+            ),
             WorkloadSource::GoogleTrace => {
                 google_trace_jobs(self.num_jobs, self.horizon, self.mix, &mut rng)
             }
@@ -435,6 +457,37 @@ mod tests {
             ..s.clone()
         };
         assert_ne!(s.key(), u.key());
+        // the diurnal arrival axis gets its own key token; the default
+        // alternating process leaves pre-existing keys untouched
+        let v = Scenario {
+            workload: s
+                .workload
+                .with_arrivals(ArrivalProcess::Diurnal { peak_ratio: 3.0 }),
+            ..s.clone()
+        };
+        assert_eq!(
+            v.key(),
+            "pd-ors|synth-i50-t20-mixD-adi3-b1000|homog-h20|seed2"
+        );
+    }
+
+    #[test]
+    fn diurnal_workload_differs_only_in_arrivals() {
+        let base = WorkloadSpec::synthetic(30, 20, 500);
+        let diurnal = base.with_arrivals(ArrivalProcess::Diurnal { peak_ratio: 3.0 });
+        let a = base.jobs(1);
+        let b = diurnal.jobs(1);
+        assert_eq!(a.len(), b.len());
+        // the arrival-slot draw count per job is identical, so the job
+        // populations match; only the arrival distribution moves
+        let arr_a: Vec<usize> = a.iter().map(|j| j.arrival).collect();
+        let arr_b: Vec<usize> = b.iter().map(|j| j.arrival).collect();
+        assert_ne!(arr_a, arr_b, "diurnal arrivals must actually differ");
+        let mut ep_a: Vec<u64> = a.iter().map(|j| j.epochs).collect();
+        let mut ep_b: Vec<u64> = b.iter().map(|j| j.epochs).collect();
+        ep_a.sort_unstable();
+        ep_b.sort_unstable();
+        assert_eq!(ep_a, ep_b, "non-arrival draws are unchanged");
     }
 
     #[test]

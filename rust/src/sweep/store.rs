@@ -149,8 +149,11 @@ pub struct ResultStore {
 
 impl ResultStore {
     /// Open (or create) the store at `path`, loading existing records.
-    /// Parent directories are created; a malformed line is a hard error
-    /// (a sweep must not silently resume over a corrupt store).
+    /// Parent directories are created. A malformed line is a hard error
+    /// (a sweep must not silently resume over a corrupt store) — except a
+    /// *truncated final line* from a crashed writer, which is dropped
+    /// with a warning and the file truncated back to the last complete
+    /// record (see [`crate::util::jsonl::load_tolerant`]).
     pub fn open(path: &str) -> Result<ResultStore, String> {
         let pb = std::path::PathBuf::from(path);
         if let Some(dir) = pb.parent() {
@@ -160,18 +163,11 @@ impl ResultStore {
         }
         let mut records = Vec::new();
         let mut index = BTreeMap::new();
-        if pb.exists() {
-            let text =
-                std::fs::read_to_string(&pb).map_err(|e| format!("{path}: {e}"))?;
-            for (lineno, line) in text.lines().enumerate() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let rec = CellRecord::from_line(line)
-                    .map_err(|e| format!("{path}:{}: {e}", lineno + 1))?;
-                index.insert(rec.key.clone(), records.len());
-                records.push(rec);
-            }
+        for (lineno, value) in crate::util::jsonl::load_tolerant(path)?.lines {
+            let rec = CellRecord::from_json(&value)
+                .map_err(|e| format!("{path}:{lineno}: {e}"))?;
+            index.insert(rec.key.clone(), records.len());
+            records.push(rec);
         }
         Ok(ResultStore { path: pb, records, index })
     }
@@ -368,10 +364,40 @@ mod tests {
 
     #[test]
     fn malformed_line_is_an_error() {
+        // valid JSON that is not a CellRecord is corruption, not crash
+        // damage — still a hard error even on the final line
         let path = tmp_path("bad");
         std::fs::write(&path, "{\"not\": \"a record\"}\n").unwrap();
         let e = ResultStore::open(&path).unwrap_err();
         assert!(e.contains("missing"), "{e}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_final_line_is_repaired_and_appendable() {
+        // a crashed writer leaves a partial last line; reopening must
+        // drop it, keep the complete records, and accept new appends
+        let path = tmp_path("trunc");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut st = ResultStore::open(&path).unwrap();
+            st.append(sample("a", 0, 1.0)).unwrap();
+            st.append(sample("b", 1, 2.0)).unwrap();
+        }
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"key\": \"c\", \"schedu").unwrap();
+        }
+        let mut st = ResultStore::open(&path).unwrap();
+        assert_eq!(st.len(), 2, "complete records survive");
+        assert!(st.contains("a") && st.contains("b") && !st.contains("c"));
+        st.append(sample("c", 2, 3.0)).unwrap();
+        drop(st);
+        // the rewritten file round-trips cleanly
+        let again = ResultStore::open(&path).unwrap();
+        assert_eq!(again.len(), 3);
+        assert_eq!(again.get("c").unwrap().total_utility, 3.0);
         let _ = std::fs::remove_file(&path);
     }
 }

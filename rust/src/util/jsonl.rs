@@ -1,0 +1,143 @@
+//! Tolerant JSONL file loading, shared by the sweep
+//! [`ResultStore`](crate::sweep::ResultStore) and the service op-log.
+//!
+//! Append-only JSONL files are written one flushed line at a time, so a
+//! crashed writer leaves at most one *truncated final line* (no trailing
+//! newline, or garbage after the last complete record). [`load_tolerant`]
+//! repairs exactly that case — the malformed tail line is dropped and the
+//! file is truncated back to the last complete record, so appending can
+//! resume cleanly. A malformed line anywhere *before* the tail is still a
+//! hard error: that is corruption, not crash damage, and resuming over it
+//! would silently lose data.
+
+use super::json::Json;
+
+/// Result of [`load_tolerant`]: parsed values (1-based line number +
+/// value) plus whether a truncated tail was dropped and the file rewritten.
+#[derive(Debug)]
+pub struct JsonlLoad {
+    pub lines: Vec<(usize, Json)>,
+    /// True when a malformed final line was discarded and the file
+    /// truncated back to the last complete record.
+    pub repaired: bool,
+}
+
+/// Load a JSONL file, repairing a truncated final line (see module docs).
+/// Blank lines are skipped. A missing file loads as empty.
+pub fn load_tolerant(path: &str) -> Result<JsonlLoad, String> {
+    let pb = std::path::Path::new(path);
+    if !pb.exists() {
+        return Ok(JsonlLoad { lines: Vec::new(), repaired: false });
+    }
+    let text = std::fs::read_to_string(pb).map_err(|e| format!("{path}: {e}"))?;
+    let mut lines = Vec::new();
+    let mut repaired = false;
+    let mut offset = 0usize; // byte offset of the current line start
+    let mut lineno = 0usize;
+    for line in text.split_inclusive('\n') {
+        lineno += 1;
+        let start = offset;
+        offset += line.len();
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match Json::parse(trimmed) {
+            Ok(v) => lines.push((lineno, v)),
+            Err(e) => {
+                // Only the final line (nothing but whitespace after it)
+                // gets the crashed-writer tolerance.
+                if text[offset..].trim().is_empty() {
+                    eprintln!(
+                        "warning: {path}:{lineno}: dropping truncated final \
+                         line ({e}); truncating file to last complete record"
+                    );
+                    truncate_to(path, start as u64)?;
+                    repaired = true;
+                    break;
+                }
+                return Err(format!("{path}:{lineno}: {e}"));
+            }
+        }
+    }
+    Ok(JsonlLoad { lines, repaired })
+}
+
+fn truncate_to(path: &str, len: u64) -> Result<(), String> {
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .map_err(|e| format!("{path}: {e}"))?;
+    f.set_len(len).map_err(|e| format!("{path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("dmlrs_jsonl_{tag}_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let l = load_tolerant(&tmp("missing_nonexistent")).unwrap();
+        assert!(l.lines.is_empty());
+        assert!(!l.repaired);
+    }
+
+    #[test]
+    fn loads_lines_with_numbers() {
+        let p = tmp("ok");
+        std::fs::write(&p, "{\"a\":1}\n\n{\"b\":2}\n").unwrap();
+        let l = load_tolerant(&p).unwrap();
+        assert_eq!(l.lines.len(), 2);
+        assert_eq!(l.lines[0].0, 1);
+        assert_eq!(l.lines[1].0, 3, "blank line counts toward numbering");
+        assert!(!l.repaired);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn truncated_tail_is_dropped_and_file_rewritten() {
+        let p = tmp("tail");
+        std::fs::write(&p, "{\"a\":1}\n{\"b\":2}\n{\"c\": 3, \"tru").unwrap();
+        let l = load_tolerant(&p).unwrap();
+        assert_eq!(l.lines.len(), 2);
+        assert!(l.repaired);
+        // the file itself was truncated back to the complete records
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"a\":1}\n{\"b\":2}\n");
+        // a second load is clean
+        let again = load_tolerant(&p).unwrap();
+        assert_eq!(again.lines.len(), 2);
+        assert!(!again.repaired);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn malformed_middle_line_is_a_hard_error() {
+        let p = tmp("mid");
+        std::fs::write(&p, "{\"a\":1}\nnot json at all\n{\"b\":2}\n").unwrap();
+        let e = load_tolerant(&p).unwrap_err();
+        assert!(e.contains(":2:"), "{e}");
+        // the file is untouched
+        assert!(std::fs::read_to_string(&p).unwrap().contains("not json"));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn garbage_final_line_with_newline_is_still_repaired() {
+        // a crash can also land mid-flush, leaving a complete-looking but
+        // unparsable last line
+        let p = tmp("nl");
+        std::fs::write(&p, "{\"a\":1}\n{bad}\n").unwrap();
+        let l = load_tolerant(&p).unwrap();
+        assert_eq!(l.lines.len(), 1);
+        assert!(l.repaired);
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"a\":1}\n");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod error;
 pub mod json;
+pub mod jsonl;
 pub mod logger;
 pub mod rng;
 pub mod stats;

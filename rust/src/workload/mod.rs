@@ -5,6 +5,9 @@ pub mod google_trace;
 pub mod mix;
 pub mod synthetic;
 
-pub use google_trace::google_trace_jobs;
+pub use google_trace::{
+    google_trace_jobs, google_trace_jobs_from_events, load_trace_csv, parse_trace_csv,
+    TraceEvents, TraceRow,
+};
 pub use mix::{ClassMix, MIX_DEFAULT, MIX_TRACE};
-pub use synthetic::{synthetic_jobs, SynthConfig};
+pub use synthetic::{synthetic_jobs, ArrivalProcess, SynthConfig};

@@ -21,12 +21,79 @@ use crate::util::Rng;
 
 use super::mix::ClassMix;
 
+/// The arrival-slot process jobs are drawn from.
+///
+/// `Alternating` is the paper's §5 pattern; `Diurnal` is a
+/// time-varying-rate profile (one sinusoidal day over the arrival
+/// window) whose peak:trough rate ratio is `peak_ratio` — the scenario
+/// axis the sweep matrix and the `dmlrs load` generator use to stress
+/// the online service with rush-hour traffic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Normalized rates alternating 2/3 (even slots) / 1/3 (odd slots).
+    Alternating,
+    /// Sinusoidal rate with peak/trough ratio `peak_ratio` (≥ 1; 1 is a
+    /// constant rate).
+    Diurnal { peak_ratio: f64 },
+}
+
+impl ArrivalProcess {
+    /// Parse the `arrivals` spec string used by config keys and CLI
+    /// flags: `alternating` or `diurnal:<peak_ratio>`.
+    pub fn parse(s: &str) -> Result<ArrivalProcess, String> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "alternating" || s.is_empty() {
+            return Ok(ArrivalProcess::Alternating);
+        }
+        if let Some(ratio) = s.strip_prefix("diurnal:") {
+            return match ratio.trim().parse::<f64>() {
+                Ok(r) if r >= 1.0 && r.is_finite() => {
+                    Ok(ArrivalProcess::Diurnal { peak_ratio: r })
+                }
+                _ => Err(format!("invalid diurnal peak ratio {ratio:?} (need >= 1)")),
+            };
+        }
+        Err(format!(
+            "invalid arrivals spec {s:?} (expected \"alternating\" or \"diurnal:<peak_ratio>\")"
+        ))
+    }
+
+    /// Stable identity token for scenario keys; `None` for the default
+    /// alternating process (so pre-existing keys are unchanged).
+    pub fn key_token(&self) -> Option<String> {
+        match self {
+            ArrivalProcess::Alternating => None,
+            ArrivalProcess::Diurnal { peak_ratio } => Some(format!("adi{peak_ratio}")),
+        }
+    }
+
+    /// Per-slot arrival weights over `[0, latest)`.
+    pub fn weights(&self, latest: usize) -> Vec<f64> {
+        match *self {
+            ArrivalProcess::Alternating => (0..latest)
+                .map(|t| if t % 2 == 0 { 2.0 / 3.0 } else { 1.0 / 3.0 })
+                .collect(),
+            ArrivalProcess::Diurnal { peak_ratio } => {
+                // amplitude a gives (1+a)/(1-a) = peak_ratio
+                let a = (peak_ratio - 1.0) / (peak_ratio + 1.0);
+                let period = latest.max(1) as f64;
+                (0..latest)
+                    .map(|t| {
+                        1.0 + a * (2.0 * std::f64::consts::PI * t as f64 / period).sin()
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
 /// Tunable generator parameters (defaults = the paper's §5 setting).
 #[derive(Debug, Clone)]
 pub struct SynthConfig {
     pub num_jobs: usize,
     pub horizon: usize,
     pub mix: ClassMix,
+    pub arrivals: ArrivalProcess,
     pub epochs: (u64, u64),
     pub samples: (f64, f64),
     pub grad_mb: (f64, f64),
@@ -43,6 +110,7 @@ impl SynthConfig {
             num_jobs,
             horizon,
             mix,
+            arrivals: ArrivalProcess::Alternating,
             epochs: (50, 200),
             samples: (20_000.0, 500_000.0),
             grad_mb: (30.0, 575.0),
@@ -52,6 +120,11 @@ impl SynthConfig {
             b_ext: (6e5, 2.4e6),
             b_int_factor: 10.0,
         }
+    }
+
+    pub fn with_arrivals(mut self, arrivals: ArrivalProcess) -> SynthConfig {
+        self.arrivals = arrivals;
+        self
     }
 }
 
@@ -99,16 +172,13 @@ pub fn paper_cluster_skewed(h: usize, skew: f64) -> Cluster {
     paper_cluster_classes(&skewed_classes(h, skew))
 }
 
-/// Draw the arrival slot with the alternating 1/3 (odd) / 2/3 (even) rates.
-fn sample_arrival(rng: &mut Rng, horizon: usize) -> usize {
+/// Draw the arrival slot from the configured [`ArrivalProcess`].
+fn sample_arrival(rng: &mut Rng, horizon: usize, arrivals: &ArrivalProcess) -> usize {
     // restrict arrivals to the first 3/4 of the horizon so late jobs have
     // at least a few slots to run (the paper's T=20 with target completion
     // times θ3 ≤ 15 implies the same).
     let latest = (horizon * 3 / 4).max(1);
-    let weights: Vec<f64> = (0..latest)
-        .map(|t| if t % 2 == 0 { 2.0 / 3.0 } else { 1.0 / 3.0 })
-        .collect();
-    rng.weighted(&weights)
+    rng.weighted(&arrivals.weights(latest))
 }
 
 /// Generate `cfg.num_jobs` jobs with ids `0..n` sorted by arrival slot.
@@ -124,7 +194,7 @@ pub fn synthetic_jobs(cfg: &SynthConfig, rng: &mut Rng) -> Vec<Job> {
             let batch = rng.range_u64(batch_lo, cfg.batch.1.max(batch_lo));
             Job {
                 id: 0, // assigned after the arrival sort
-                arrival: sample_arrival(rng, cfg.horizon),
+                arrival: sample_arrival(rng, cfg.horizon, &cfg.arrivals),
                 epochs: rng.range_u64(cfg.epochs.0, cfg.epochs.1),
                 samples: rng.range_f64(cfg.samples.0, cfg.samples.1),
                 grad_size_mb: rng.range_f64(cfg.grad_mb.0, cfg.grad_mb.1),
@@ -212,6 +282,59 @@ mod tests {
         // arrivals land in [0, 15): 8 even slots at weight 2/3, 7 odd at 1/3
         let expect = (8.0 * 2.0) / (8.0 * 2.0 + 7.0 * 1.0);
         assert!((ratio - expect).abs() < 0.02, "even-slot share {ratio} vs {expect}");
+    }
+
+    #[test]
+    fn diurnal_weights_hit_the_peak_ratio() {
+        let p = ArrivalProcess::Diurnal { peak_ratio: 3.0 };
+        let w = p.weights(64);
+        assert_eq!(w.len(), 64);
+        let max = w.iter().cloned().fold(f64::MIN, f64::max);
+        let min = w.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(w.iter().all(|&x| x > 0.0));
+        // sampled sinusoid: the realized ratio approaches peak_ratio
+        assert!(max / min > 2.5 && max / min <= 3.0 + 1e-9, "ratio {}", max / min);
+        // ratio 1 is a constant rate
+        let flat = ArrivalProcess::Diurnal { peak_ratio: 1.0 }.weights(16);
+        assert!(flat.iter().all(|&x| (x - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn diurnal_arrivals_concentrate_in_the_peak_half() {
+        let mut rng = Rng::new(9);
+        let cfg = SynthConfig::paper(20_000, 40, MIX_DEFAULT)
+            .with_arrivals(ArrivalProcess::Diurnal { peak_ratio: 4.0 });
+        let jobs = synthetic_jobs(&cfg, &mut rng);
+        // arrival window is [0, 30); sin > 0 on the first half
+        let first_half = jobs.iter().filter(|j| j.arrival < 15).count() as f64;
+        let share = first_half / jobs.len() as f64;
+        assert!(share > 0.6, "peak-half share {share}");
+        for j in &jobs {
+            assert!(j.arrival < 30);
+        }
+    }
+
+    #[test]
+    fn arrival_spec_parsing() {
+        assert_eq!(
+            ArrivalProcess::parse("alternating").unwrap(),
+            ArrivalProcess::Alternating
+        );
+        assert_eq!(
+            ArrivalProcess::parse("Diurnal:3.0").unwrap(),
+            ArrivalProcess::Diurnal { peak_ratio: 3.0 }
+        );
+        assert!(ArrivalProcess::parse("diurnal:0.5").is_err());
+        assert!(ArrivalProcess::parse("poisson").is_err());
+        assert_eq!(ArrivalProcess::Alternating.key_token(), None);
+        assert_eq!(
+            ArrivalProcess::Diurnal { peak_ratio: 3.0 }.key_token().unwrap(),
+            "adi3"
+        );
+        assert_eq!(
+            ArrivalProcess::Diurnal { peak_ratio: 2.5 }.key_token().unwrap(),
+            "adi2.5"
+        );
     }
 
     #[test]

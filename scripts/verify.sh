@@ -81,4 +81,37 @@ if [ "${UNCACHED_HITS:-0}" -ne 0 ]; then
     exit 1
 fi
 
+echo "== service bench (admission daemon + open-loop load) =="
+# Boot the daemon on an ephemeral port, fire a quick load burst at it,
+# and emit BENCH_service.json (throughput + p50/p95/p99 admission
+# latency). Fails if the daemon does not come up or the report lacks the
+# latency/throughput fields.
+SERVE_LOG=target/serve_bench.log
+rm -f ../BENCH_service.json "$SERVE_LOG"
+"$BIN" serve --addr 127.0.0.1:0 --machines 8 --jobs 24 --horizon 12 --seed 1 \
+    >"$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(awk '/listening on /{print $NF; exit}' "$SERVE_LOG" 2>/dev/null || true)
+    [ -n "$ADDR" ] && break
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "error: admission daemon did not come up" >&2
+    cat "$SERVE_LOG" >&2
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+fi
+"$BIN" load --addr "$ADDR" --connections 4 --rate 400 \
+    --jobs 24 --horizon 12 --seed 1 --shutdown --bench-out ../BENCH_service.json
+wait "$SERVE_PID"
+cat ../BENCH_service.json
+for field in p99_ms p50_ms p95_ms achieved_rate; do
+    if ! grep -q "\"$field\":" ../BENCH_service.json; then
+        echo "error: BENCH_service.json lacks $field" >&2
+        exit 1
+    fi
+done
+
 echo "verify: OK"
