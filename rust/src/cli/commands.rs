@@ -8,6 +8,7 @@ use crate::experiments::figures::{run_figure, ExpParams};
 use crate::jobs::Job;
 use crate::runtime::{ModelBundle, XlaRuntime};
 use crate::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
+use crate::sched::replan::ReplanPolicy;
 use crate::sched::{PdOrs, PdOrsConfig};
 use crate::service::{
     run_load, DaemonConfig, LoadConfig, ServiceConfig,
@@ -104,8 +105,13 @@ fn workload_spec(args: &Args, cfg: Option<&Config>) -> Result<WorkloadSpec> {
 /// Resolve the scheduler spec: `[scheduler]` config section overridden
 /// by the `--scheduler` flag. Seed precedence: explicit `--seed` flag >
 /// `scheduler.seed` config key > the workload default. Solver knobs:
-/// `--dp-units N` and `--no-theta-cache` override their config keys.
-fn scheduler_spec(args: &Args, cfg: Option<&Config>, seed: u64) -> SchedulerSpec {
+/// `--dp-units N` and `--no-theta-cache` override their config keys;
+/// `--replan every:<k>` overrides `scheduler.replan`.
+fn scheduler_spec(
+    args: &Args,
+    cfg: Option<&Config>,
+    seed: u64,
+) -> Result<SchedulerSpec> {
     let mut spec = SchedulerSpec::new("pd-ors");
     let mut config_has_seed = false;
     if let Some(c) = cfg {
@@ -130,7 +136,10 @@ fn scheduler_spec(args: &Args, cfg: Option<&Config>, seed: u64) -> SchedulerSpec
     if args.bool("no-theta-cache") {
         spec.pdors.theta_cache = false;
     }
-    spec
+    if let Some(r) = args.get("replan") {
+        spec.replan = ReplanPolicy::parse(r).map_err(Error::from)?;
+    }
+    Ok(spec)
 }
 
 pub fn cmd_schedule(args: &Args) -> Result<()> {
@@ -138,13 +147,17 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
     let (jobs, machines, horizon, seed) = workload(args, cfg.as_ref())?;
     let cluster = paper_cluster(machines);
     let reg = SchedulerRegistry::builtin();
-    let spec = scheduler_spec(args, cfg.as_ref(), seed);
+    let spec = scheduler_spec(args, cfg.as_ref(), seed)?;
+    let replan = spec.replan;
     let mut sched = reg.build(&spec, &jobs, &cluster, horizon)?;
 
     let mut trace = TraceObserver::new();
     let want_events = args.bool("events");
-    let mut builder =
-        SimEngine::builder().jobs(&jobs).cluster(&cluster).horizon(horizon);
+    let mut builder = SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(&cluster)
+        .horizon(horizon)
+        .replan(replan);
     if want_events {
         builder = builder.observer(&mut trace);
     }
@@ -172,6 +185,9 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
         res.completed,
         median_training_time(&res)
     );
+    if replan.is_enabled() {
+        println!("replan: policy={} changed={}", replan.label(), res.replanned);
+    }
     let sv = res.solver;
     println!(
         "solver: theta_solves={} memo_hits={} lp_solves={} lp_pivots={} rounding_attempts={}",
@@ -206,10 +222,13 @@ pub fn cmd_compare(args: &Args) -> Result<()> {
         cluster_cfg.set("cluster.machines", v);
     }
     let cluster = ClusterSpec::from_config(&cluster_cfg, machines);
-    let matrix = ScenarioMatrix::new()
+    let mut matrix = ScenarioMatrix::new()
         .schedulers(&ZOO)
         .case(workload, cluster.clone())
         .seed_list(&[seed]);
+    if let Some(r) = args.get("replan") {
+        matrix = matrix.replan(ReplanPolicy::parse(r).map_err(Error::from)?);
+    }
 
     let mut store = match args.get("out") {
         Some(path) => Some(ResultStore::open(path).map_err(Error::from)?),
@@ -263,7 +282,10 @@ pub fn cmd_compare(args: &Args) -> Result<()> {
 fn sweep_matrix(spec: &SweepSpec, cluster_override: Option<ClusterSpec>) -> ScenarioMatrix {
     let schedulers = spec.scheduler_keys();
     let keys: Vec<&str> = schedulers.iter().map(|s| s.as_str()).collect();
-    let mut m = ScenarioMatrix::new().schedulers(&keys).seeds(spec.seeds);
+    let mut m = ScenarioMatrix::new()
+        .schedulers(&keys)
+        .seeds(spec.seeds)
+        .replan(spec.replan);
     // the arrival process applies to the synthetic workloads (the trace
     // source has its own regenerated arrival process)
     if spec.quick {
@@ -317,6 +339,9 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     }
     if let Some(a) = args.get("arrivals") {
         spec.arrivals = ArrivalProcess::parse(a).map_err(Error::from)?;
+    }
+    if let Some(r) = args.get("replan") {
+        spec.replan = ReplanPolicy::parse(r).map_err(Error::from)?;
     }
     if args.bool("fresh") {
         let _ = std::fs::remove_file(&spec.out);
@@ -483,7 +508,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 1);
     // the scheduler seed doubles as the workload cell seed, exactly like
     // a sweep cell
-    let spec = scheduler_spec(args, cfg.as_ref(), seed);
+    let spec = scheduler_spec(args, cfg.as_ref(), seed)?;
     let workload = workload_spec(args, cfg.as_ref())?;
     let mut cluster_cfg = cfg.clone().unwrap_or_default();
     if let Some(v) = args.get("machines") {
@@ -501,12 +526,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     crate::service::install_term_handler();
     let svc = &dcfg.service;
     let banner = format!(
-        "scheduler={} cluster={} workload={} slot_ms={} queue={}",
+        "scheduler={} cluster={} workload={} slot_ms={} queue={} replan={}",
         svc.scheduler.name,
         svc.cluster.key(),
         svc.workload.key(),
         dcfg.slot_ms,
-        dcfg.queue_cap
+        dcfg.queue_cap,
+        svc.scheduler.replan.label()
     );
     let handle = crate::service::start_daemon(dcfg)?;
     println!("dmlrs serve: listening on {}", handle.addr);
@@ -527,13 +553,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let report = handle.join()?;
     println!(
         "serve: drained at slot {} submitted={} admitted={} rejected={} deferred={} \
-         completed={} total_utility={:.2}",
+         completed={} replanned={} total_utility={:.2}",
         report.slot,
         report.submitted,
         report.admitted,
         report.rejected,
         report.deferred,
         report.completed,
+        report.replanned,
         report.total_utility
     );
     Ok(())

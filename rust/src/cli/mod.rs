@@ -86,15 +86,20 @@ COMMANDS:
               CSV (timestamp,job_id,scheduling_class; dirty rows skipped)
               [--arrivals diurnal:R]  time-varying synthetic arrival rate
               [--events]  print the engine's event trace
+              [--replan every:K]  elastic re-planning: release + re-solve
+              not-yet-started commitments at every K-th slot boundary
+              (default none = the paper's fire-and-forget admission)
               [--dp-units N] [--no-theta-cache]  solver knobs (the cache
               is semantically invisible; disabling it is the parity oracle)
   compare     run the full zoo    (same flags; runs through the parallel
               sweep runner) [--par N] [--out results/compare.jsonl]
-              [--no-theta-cache]
+              [--no-theta-cache] [--replan every:K]
   sweep       run a scenario matrix (schedulers x workloads x clusters x
               seeds) in parallel  [--jobs N] (worker threads; default =
               available parallelism) [--quick] [--seeds N]
               [--schedulers a,b,c] [--arrivals diurnal:R]
+              [--replan every:K] (replan cadence; its cells get their own
+              store keys, so on/off runs coexist in one JSONL)
               [--out results/sweep.jsonl] [--fresh] [--no-theta-cache]
               cells already in the JSONL store are skipped (resumable)
   experiment  regenerate a figure --fig 5..17 [--quick] [--seeds N]
@@ -106,10 +111,13 @@ COMMANDS:
               --machines N --jobs N --horizon N --seed N [--trace]
               [--arrivals diurnal:R] [--slot-ms N] (0 = virtual clock,
               advanced by tick requests) [--queue N] (request-queue bound)
+              [--replan every:K] (elastic replan rounds at slot
+              boundaries; a replan request forces one immediately)
               [--oplog PATH] (crash-recovery journal) [--recover PATH]
               (replay a journal, then resume appending to it)
               protocol: one JSON request per line — submit/tick/status/
-              cluster/metrics/shutdown (see rust/src/service/protocol.rs)
+              cluster/metrics/replan/shutdown (see
+              rust/src/service/protocol.rs)
   load        load generator      --addr HOST:PORT [--connections N]
               [--rate R] (target submissions/sec, open loop) --jobs N
               --horizon N --seed N [--trace] [--arrivals diurnal:R]

@@ -106,6 +106,19 @@ impl AllocLedger {
         true
     }
 
+    /// Total committed resource-time over every (t, h, r) — the
+    /// conservation quantity the replan release/re-commit primitives and
+    /// the service's `ledger_sum` report track.
+    pub fn total_used(&self) -> f64 {
+        let mut sum = 0.0;
+        for t in 0..self.horizon {
+            for h in 0..self.capacity.len() {
+                sum += self.alloc[t][h].sum();
+            }
+        }
+        sum
+    }
+
     /// Overall utilization of resource `r` in `[0, horizon)`: used / capacity.
     pub fn utilization(&self, r: usize) -> f64 {
         let mut used = 0.0;

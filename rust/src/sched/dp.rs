@@ -162,8 +162,28 @@ pub fn plan_job_with(
     rng: &mut Rng,
     scratch: &mut PlannerScratch,
 ) -> Option<PlanResult> {
+    plan_job_from(job, job.arrival, ledger, pricing, masks, cfg, rng, scratch)
+}
+
+/// [`plan_job_with`] restricted to slots `≥ from` — the elastic replan
+/// entry point: a revisited job may only move its *future* allocation,
+/// while its utility stays anchored at the true arrival slot (`u_i(t̃ −
+/// a_i)` with the original `a_i`; a shadow arrival would silently inflate
+/// payoffs). With `from ≤ job.arrival` this is exactly `plan_job_with`.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_job_from(
+    job: &Job,
+    from: usize,
+    ledger: &AllocLedger,
+    pricing: &PricingParams,
+    masks: &Masks,
+    cfg: &DpConfig,
+    rng: &mut Rng,
+    scratch: &mut PlannerScratch,
+) -> Option<PlanResult> {
     let horizon = ledger.horizon();
-    if job.arrival >= horizon {
+    let start = job.arrival.max(from);
+    if start >= horizon {
         return None;
     }
     let v_total = job.total_workload();
@@ -185,8 +205,8 @@ pub fn plan_job_with(
     let stats_before = scratch.stats;
 
     const INF: f64 = f64::INFINITY;
-    // theta_table[t - a][dv - 1] = θ(t, dv units)
-    let window = horizon - job.arrival;
+    // theta_table[t - start][dv - 1] = θ(t, dv units)
+    let window = horizon - start;
     let mut theta_table: Vec<Vec<Option<ThetaSolution>>> =
         vec![vec![None; cap_units]; window];
     let mut rounding_attempts = 0usize;
@@ -194,13 +214,13 @@ pub fn plan_job_with(
     // DP forward over slots.
     let mut best_cost = vec![INF; units + 1];
     best_cost[0] = 0.0;
-    // choice[ti][v] = units trained in slot (a + ti) on the best path to v.
+    // choice[ti][v] = units trained in slot (start + ti) on the best path to v.
     let mut choice: Vec<Vec<u16>> = Vec::with_capacity(window);
 
     let mut best: Option<(usize, f64, f64, f64)> = None; // (t̃, λ, cost, u)
 
     for ti in 0..window {
-        let t = job.arrival + ti;
+        let t = start + ti;
         let snap = slot_snapshot(ledger, pricing, masks, t, cfg.theta.group_machines);
         let sig = if cfg.theta_cache { scratch.interner.intern(&snap) } else { 0 };
         // θ(t, dv) for dv = 1..=cap_units
@@ -265,7 +285,7 @@ pub fn plan_job_with(
                 .as_ref()
                 .expect("choice points at a computed θ");
             slots.push(SlotPlacement {
-                t: job.arrival + ti as usize,
+                t: start + ti as usize,
                 placements: th.placements.clone(),
             });
             v -= dv;
@@ -277,7 +297,7 @@ pub fn plan_job_with(
     }
     slots.sort_by_key(|s| s.t);
     let schedule = Schedule { job_id: job.id, slots };
-    let completion = schedule.completion_time().unwrap_or(job.arrival);
+    let completion = schedule.completion_time().unwrap_or(start);
     // The DP's λ used u(t̃); the reconstructed path may finish earlier
     // (utility can only improve since u is non-increasing).
     let utility = job.utility_at(completion);
@@ -427,6 +447,41 @@ mod tests {
             a.solver.lp_solves,
             b.solver.lp_solves
         );
+    }
+
+    /// The replan entry point: planning from a later slot keeps the
+    /// utility anchored at the true arrival and only uses future slots.
+    #[test]
+    fn plan_from_restricts_slots_and_keeps_utility_anchor() {
+        let (ledger, pricing) = setup(4, 12);
+        let job = test_job(0); // arrival 0
+        let masks = Masks::all(4);
+        let cfg = DpConfig::default();
+        let mut scratch = PlannerScratch::new();
+
+        let mut rng = Rng::new(9);
+        let plan = plan_job_from(
+            &job, 5, &ledger, &pricing, &masks, &cfg, &mut rng, &mut scratch,
+        )
+        .expect("feasible from slot 5");
+        assert!(plan.schedule.slots.iter().all(|s| s.t >= 5), "past slots used");
+        assert!(plan.schedule.covers_workload(&job, 1.0));
+        // utility is u(t̃ − a_i) with the ORIGINAL arrival, not slot 5
+        assert!((plan.utility - job.utility_at(plan.completion)).abs() < 1e-12);
+        assert!(plan.completion >= 5);
+
+        // from ≤ arrival is exactly plan_job_with (same RNG draws)
+        let mut rng_a = Rng::new(4);
+        let mut rng_b = Rng::new(4);
+        let a = plan_job(&job, &ledger, &pricing, &masks, &cfg, &mut rng_a).unwrap();
+        let b = plan_job_from(
+            &job, 0, &ledger, &pricing, &masks, &cfg, &mut rng_b,
+            &mut PlannerScratch::new(),
+        )
+        .unwrap();
+        assert_eq!(a.schedule.slots, b.schedule.slots);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG lockstep");
     }
 
     /// A reused scratch must not leak memo state across planning episodes.

@@ -13,15 +13,20 @@
 //!   [`crate::sim::Scheduler`] trait.
 //! * [`registry`]  — the open name → constructor map every CLI command,
 //!   figure driver, and example resolves schedulers through.
+//! * [`replan`]    — elastic re-planning (PR 5): release and re-solve
+//!   not-yet-started commitments at slot boundaries
+//!   (`--replan every:<k>`).
 
 pub mod dp;
 pub mod pdors;
 pub mod pricing;
 pub mod registry;
+pub mod replan;
 pub mod rounding;
 pub mod solver;
 
 pub use pdors::{PdOrs, PdOrsConfig, Placement};
 pub use pricing::PricingParams;
 pub use registry::{run_named, SchedulerRegistry, SchedulerSpec, ZOO};
+pub use replan::{run_replan_pass, ReplanPolicy, ReplanRecord, ReplanReport};
 pub use solver::SolverStats;

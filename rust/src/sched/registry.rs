@@ -20,6 +20,7 @@ use crate::jobs::Job;
 use crate::sim::{simulate, Scheduler, SimResult};
 use crate::util::error::{Error, Result};
 
+use super::replan::ReplanPolicy;
 use super::solver::GdeltaMode;
 use super::{PdOrs, PdOrsConfig, Placement};
 
@@ -34,6 +35,10 @@ pub struct SchedulerSpec {
     pub name: String,
     /// Seed for randomized policies (PD-ORS rounding, FIFO worker draws).
     pub seed: u64,
+    /// Elastic re-planning cadence (`--replan every:<k>` / the
+    /// `[scheduler] replan` config key). The engine and the service read
+    /// it from here; replan-incapable policies silently no-op.
+    pub replan: ReplanPolicy,
     /// Knobs for the primal-dual schedulers (PD-ORS / OASiS); ignored by
     /// policies that take no parameters.
     pub pdors: PdOrsConfig,
@@ -44,6 +49,7 @@ impl SchedulerSpec {
         SchedulerSpec {
             name: normalize(name),
             seed: 0,
+            replan: ReplanPolicy::None,
             pdors: PdOrsConfig::default(),
         }
     }
@@ -52,6 +58,12 @@ impl SchedulerSpec {
     pub fn with_seed(mut self, seed: u64) -> SchedulerSpec {
         self.seed = seed;
         self.pdors.seed = seed;
+        self
+    }
+
+    /// Set the replan cadence.
+    pub fn with_replan(mut self, replan: ReplanPolicy) -> SchedulerSpec {
+        self.replan = replan;
         self
     }
 
@@ -67,10 +79,17 @@ impl SchedulerSpec {
     /// attempts = 50
     /// cover_fraction = 1.0
     /// theta_cache = true  # false = the --no-theta-cache parity oracle
+    /// replan = every:4    # elastic re-planning cadence; default "none"
     /// ```
     pub fn from_config(cfg: &Config) -> SchedulerSpec {
         let mut spec = SchedulerSpec::new(&cfg.get_or("scheduler.name", "pd-ors"));
         spec = spec.with_seed(cfg.u64("scheduler.seed", spec.seed));
+        if let Some(v) = cfg.get("scheduler.replan") {
+            match ReplanPolicy::parse(v) {
+                Ok(p) => spec.replan = p,
+                Err(e) => eprintln!("warning: ignoring scheduler.replan: {e}"),
+            }
+        }
         spec.pdors.dp_units = cfg.usize("scheduler.dp_units", spec.pdors.dp_units);
         spec.pdors.delta = cfg.f64("scheduler.delta", spec.pdors.delta);
         spec.pdors.attempts = cfg.usize("scheduler.attempts", spec.pdors.attempts);
@@ -416,6 +435,7 @@ mod tests {
         .unwrap();
         let spec = SchedulerSpec::from_config(&cfg);
         assert_eq!(spec.name, "oasis");
+        assert_eq!(spec.replan, crate::sched::replan::ReplanPolicy::None);
         assert_eq!(spec.seed, 9);
         assert_eq!(spec.pdors.seed, 9);
         assert_eq!(spec.pdors.dp_units, 64);
@@ -424,6 +444,21 @@ mod tests {
         assert!(matches!(spec.pdors.gdelta, GdeltaMode::Fixed(g) if g == 0.8));
         assert_eq!(spec.pdors.cover_fraction, 0.9);
         assert!(!spec.pdors.theta_cache);
+    }
+
+    #[test]
+    fn spec_reads_replan_cadence() {
+        use crate::sched::replan::ReplanPolicy;
+        let cfg = Config::parse("[scheduler]\nreplan = every:4\n").unwrap();
+        assert_eq!(
+            SchedulerSpec::from_config(&cfg).replan,
+            ReplanPolicy::Every(4)
+        );
+        // invalid values warn and keep the default
+        let cfg = Config::parse("[scheduler]\nreplan = sometimes\n").unwrap();
+        assert_eq!(SchedulerSpec::from_config(&cfg).replan, ReplanPolicy::None);
+        let spec = SchedulerSpec::new("pd-ors").with_replan(ReplanPolicy::Every(2));
+        assert_eq!(spec.replan, ReplanPolicy::Every(2));
     }
 
     #[test]

@@ -1,0 +1,464 @@
+//! Elastic re-planning (PR 5): revisit *deferred and not-yet-started
+//! admitted* jobs at slot boundaries and re-solve their future-slot
+//! allocations against the current [`AllocLedger`](crate::cluster::AllocLedger).
+//!
+//! The paper's Algorithm 1 commits a job's entire worker/PS schedule at
+//! arrival time and never looks back. Its own related line of work —
+//! OASiS (arXiv:1801.00936) and DL2 (arXiv:1909.06040) — shows that
+//! elastically adjusting allocations as load changes is where online DML
+//! schedulers win on churny, diurnal workloads: an early admission planned
+//! against peak prices can strand capacity that a later, quieter slot
+//! would serve better.
+//!
+//! A replan round at slot `t` (the start of the slot, before its
+//! arrivals):
+//!
+//! 1. **Admitted, not yet started** — every tracked admission whose
+//!    schedule lies entirely in `[t, horizon)` is *released* from the
+//!    ledger, re-solved by the scheduler from slot `t` (PD-ORS runs the
+//!    full snapshot → memo → LP → rounding pipeline on its long-lived
+//!    [`PlannerScratch`](crate::sched::solver::PlannerScratch), so buffers
+//!    and counters are recycled across the round), and either the new
+//!    committed schedule is adopted or the old one is re-committed
+//!    byte-for-byte. Either way the ledger conserves: the release/commit
+//!    primitives on [`AdmissionCore`] check it.
+//! 2. **Deferred, not yet started** — active-set jobs that have received
+//!    no grants yet are offered a full admission (`old = None`); a
+//!    returned schedule promotes the job out of the per-slot path.
+//!
+//! Schedulers advertise the capability through
+//! [`Scheduler::replan_capable`]; for everything else the pass is a
+//! strict no-op — no RNG draws, no events, no ledger traffic — which is
+//! what makes `replan = none` byte-identical to the pre-replan system
+//! (`rust/tests/replan_parity.rs` enforces it).
+
+use crate::sim::{AdmissionCore, PlannedFinish, Scheduler};
+
+/// When replan rounds fire. Parsed from `--replan every:<k>` / the
+/// `[scheduler] replan` config key; [`ReplanPolicy::None`] is the default
+/// and keeps the whole stack on its pre-replan byte-identical path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanPolicy {
+    /// Never re-plan (the paper's fire-and-forget commitment).
+    None,
+    /// Run a replan round at the start of every k-th slot (t > 0,
+    /// t % k == 0).
+    Every(usize),
+}
+
+impl Default for ReplanPolicy {
+    fn default() -> ReplanPolicy {
+        ReplanPolicy::None
+    }
+}
+
+impl ReplanPolicy {
+    /// Parse `"none"` / `"off"` / `"every:<k>"` (k ≥ 1).
+    pub fn parse(s: &str) -> Result<ReplanPolicy, String> {
+        let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() || s == "none" || s == "off" {
+            return Ok(ReplanPolicy::None);
+        }
+        if let Some(k) = s.strip_prefix("every:") {
+            return match k.trim().parse::<usize>() {
+                Ok(k) if k >= 1 => Ok(ReplanPolicy::Every(k)),
+                _ => Err(format!("invalid replan period {k:?} (need an integer ≥ 1)")),
+            };
+        }
+        Err(format!(
+            "invalid replan policy {s:?} (expected \"none\" or \"every:<k>\")"
+        ))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        !matches!(self, ReplanPolicy::None)
+    }
+
+    /// Does a replan round run at the start of slot `t`? Slot 0 never
+    /// replans — nothing has been committed yet.
+    pub fn fires_at(&self, t: usize) -> bool {
+        match *self {
+            ReplanPolicy::None => false,
+            ReplanPolicy::Every(k) => t > 0 && t % k == 0,
+        }
+    }
+
+    /// Human-readable form (`"none"` / `"every:4"`), reparsed by
+    /// [`ReplanPolicy::parse`].
+    pub fn label(&self) -> String {
+        match *self {
+            ReplanPolicy::None => "none".to_string(),
+            ReplanPolicy::Every(k) => format!("every:{k}"),
+        }
+    }
+
+    /// Stable scenario-key token; `None` for the default policy so every
+    /// pre-existing sweep-store key is unchanged.
+    pub fn key_token(&self) -> Option<String> {
+        match *self {
+            ReplanPolicy::None => None,
+            ReplanPolicy::Every(k) => Some(format!("re{k}")),
+        }
+    }
+}
+
+/// One adopted plan change (jobs revisited but kept on their old plan do
+/// not produce a record).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplanRecord {
+    pub job_id: usize,
+    /// True when a deferred job was promoted to a full admission.
+    pub promoted: bool,
+    pub old_completion: Option<usize>,
+    pub new_completion: Option<usize>,
+    /// Planned completion credit before/after (`None` = the schedule does
+    /// not cover the workload, so it earns nothing unless finished).
+    pub old_finish: Option<PlannedFinish>,
+    pub new_finish: Option<PlannedFinish>,
+    pub old_utility: f64,
+    pub new_utility: f64,
+}
+
+/// Outcome of one replan round.
+#[derive(Debug, Clone, Default)]
+pub struct ReplanReport {
+    /// The slot the round ran at.
+    pub slot: usize,
+    /// Jobs revisited (released and re-solved, or offered promotion).
+    pub revisited: usize,
+    /// Adopted plan changes, in revisit order.
+    pub records: Vec<ReplanRecord>,
+}
+
+impl ReplanReport {
+    /// Jobs whose plan actually changed.
+    pub fn replanned(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Total planned-utility movement of this round.
+    pub fn utility_delta(&self) -> f64 {
+        self.records.iter().map(|r| r.new_utility - r.old_utility).sum()
+    }
+}
+
+/// Run one replan round at slot `t` over `core`'s tracked admissions and
+/// unstarted deferred jobs (see module docs). A strict no-op — no RNG
+/// draws, no events, no ledger traffic — unless the scheduler is
+/// [`replan_capable`](Scheduler::replan_capable) and the core tracks
+/// admissions.
+pub fn run_replan_pass(
+    core: &mut AdmissionCore,
+    sched: &mut dyn Scheduler,
+    t: usize,
+) -> ReplanReport {
+    let mut report = ReplanReport { slot: t, ..ReplanReport::default() };
+    if !sched.replan_capable() || !core.replan_tracking() {
+        return report;
+    }
+    // Jobs whose schedule has begun can no longer move; forget them.
+    core.prune_started_admissions(t);
+
+    // 1. Admitted, not yet started: release → re-solve → adopt or restore.
+    let mut i = 0;
+    while i < core.tracked_admissions().len() {
+        let entry = core.release_tracked(i);
+        report.revisited += 1;
+        let job_id = entry.job.id;
+        let old_completion = entry.schedule.completion_time();
+        let old_finish = entry.finish;
+        let old_utility = old_finish.map_or(0.0, |f| f.utility);
+        match sched.replan_job(&entry.job, Some(&entry.schedule), t, core.ledger_mut()) {
+            Some(new_schedule) => {
+                let changed = new_schedule != entry.schedule;
+                let new_completion = new_schedule.completion_time();
+                let new_finish = core.adopt_replanned(i, entry.job, new_schedule);
+                if changed {
+                    report.records.push(ReplanRecord {
+                        job_id,
+                        promoted: false,
+                        old_completion,
+                        new_completion,
+                        old_finish,
+                        new_finish,
+                        old_utility,
+                        new_utility: new_finish.map_or(0.0, |f| f.utility),
+                    });
+                }
+            }
+            None => core.recommit_tracked(i, entry),
+        }
+        i += 1;
+    }
+
+    // 2. Deferred, not yet started: offer a full admission.
+    let mut d = 0;
+    while d < core.active().len() {
+        let unstarted = {
+            let aj = &core.active()[d];
+            (aj.remaining - aj.job.total_workload()).abs() <= 1e-9
+        };
+        if !unstarted {
+            d += 1;
+            continue;
+        }
+        let job = core.active()[d].job.clone();
+        report.revisited += 1;
+        match sched.replan_job(&job, None, t, core.ledger_mut()) {
+            Some(schedule) => {
+                let new_completion = schedule.completion_time();
+                let new_finish = core.promote_deferred(d, schedule);
+                report.records.push(ReplanRecord {
+                    job_id: job.id,
+                    promoted: true,
+                    old_completion: None,
+                    new_completion,
+                    old_finish: None,
+                    new_finish,
+                    old_utility: 0.0,
+                    new_utility: new_finish.map_or(0.0, |f| f.utility),
+                });
+                // the promoted job left the active set; `d` now points at
+                // the next candidate
+            }
+            None => d += 1,
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{AllocLedger, Cluster, ResVec};
+    use crate::jobs::test_support::test_job;
+    use crate::jobs::{Job, Schedule, SlotPlacement};
+    use crate::sim::{ActiveJob, ArrivalDecision, SlotGrant};
+
+    /// Toy replan-capable scheduler: admits every arrival with a one-slot
+    /// plan at `arrival + lag`, and on replan moves it to slot `t`
+    /// (earlier = higher utility under a non-increasing sigmoid).
+    struct Shifter {
+        lag: usize,
+        /// When set, promote deferred jobs on replan instead of admitting
+        /// at arrival.
+        defer_first: bool,
+        capable: bool,
+    }
+
+    impl Shifter {
+        fn plan(job: &Job, t: usize) -> Schedule {
+            Schedule {
+                job_id: job.id,
+                slots: vec![SlotPlacement { t, placements: vec![(0, 2, 1)] }],
+            }
+        }
+    }
+
+    impl Scheduler for Shifter {
+        fn name(&self) -> String {
+            "shifter".into()
+        }
+
+        fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> ArrivalDecision {
+            if self.defer_first {
+                return ArrivalDecision::Defer;
+            }
+            let s = Shifter::plan(job, (job.arrival + self.lag).min(ledger.horizon() - 1));
+            ledger.commit(job, &s);
+            ArrivalDecision::Admit(s)
+        }
+
+        fn on_slot(
+            &mut self,
+            _t: usize,
+            _active: &[ActiveJob],
+            _ledger: &AllocLedger,
+        ) -> Vec<SlotGrant> {
+            Vec::new()
+        }
+
+        fn replan_capable(&self) -> bool {
+            self.capable
+        }
+
+        fn replan_job(
+            &mut self,
+            job: &Job,
+            _old: Option<&Schedule>,
+            t: usize,
+            ledger: &mut AllocLedger,
+        ) -> Option<Schedule> {
+            let s = Shifter::plan(job, t);
+            ledger.commit(job, &s);
+            Some(s)
+        }
+    }
+
+    fn small_cluster() -> Cluster {
+        Cluster::homogeneous(2, ResVec::new([16.0, 32.0, 64.0, 32.0]))
+    }
+
+    fn small_job(id: usize, arrival: usize) -> Job {
+        let mut j = test_job(id);
+        j.arrival = arrival;
+        j.epochs = 1;
+        j.samples = 100.0; // one slot of 2 workers covers it
+        j
+    }
+
+    #[test]
+    fn policy_parsing_and_firing() {
+        assert_eq!(ReplanPolicy::parse("none").unwrap(), ReplanPolicy::None);
+        assert_eq!(ReplanPolicy::parse("off").unwrap(), ReplanPolicy::None);
+        assert_eq!(ReplanPolicy::parse("").unwrap(), ReplanPolicy::None);
+        assert_eq!(
+            ReplanPolicy::parse("every:4").unwrap(),
+            ReplanPolicy::Every(4)
+        );
+        assert_eq!(
+            ReplanPolicy::parse(" EVERY:2 ").unwrap(),
+            ReplanPolicy::Every(2)
+        );
+        assert!(ReplanPolicy::parse("every:0").is_err());
+        assert!(ReplanPolicy::parse("hourly").is_err());
+
+        let p = ReplanPolicy::Every(3);
+        assert!(!p.fires_at(0), "slot 0 never replans");
+        assert!(p.fires_at(3));
+        assert!(!p.fires_at(4));
+        assert!(p.fires_at(6));
+        assert!(!ReplanPolicy::None.fires_at(4));
+
+        assert_eq!(ReplanPolicy::None.key_token(), None);
+        assert_eq!(p.key_token().unwrap(), "re3");
+        assert_eq!(ReplanPolicy::parse(&p.label()).unwrap(), p);
+        assert_eq!(
+            ReplanPolicy::parse(&ReplanPolicy::None.label()).unwrap(),
+            ReplanPolicy::None
+        );
+    }
+
+    #[test]
+    fn pass_is_a_noop_for_incapable_schedulers() {
+        let cluster = small_cluster();
+        let mut core = AdmissionCore::new(&cluster, 10);
+        core.set_replan_tracking(true);
+        let mut sched = Shifter { lag: 5, defer_first: false, capable: false };
+        core.submit(&mut sched, &small_job(0, 0));
+        let before = core.ledger().total_used();
+        let report = run_replan_pass(&mut core, &mut sched, 2);
+        assert_eq!(report.revisited, 0);
+        assert_eq!(report.replanned(), 0);
+        assert_eq!(core.ledger().total_used(), before, "ledger untouched");
+    }
+
+    #[test]
+    fn admitted_job_moves_and_ledger_conserves() {
+        let cluster = small_cluster();
+        let mut core = AdmissionCore::new(&cluster, 10);
+        core.set_replan_tracking(true);
+        let mut sched = Shifter { lag: 7, defer_first: false, capable: true };
+        let job = small_job(0, 0);
+        core.submit(&mut sched, &job);
+        assert_eq!(core.tracked_admissions().len(), 1);
+        let before = core.ledger().total_used();
+
+        let report = run_replan_pass(&mut core, &mut sched, 3);
+        assert_eq!(report.revisited, 1);
+        assert_eq!(report.replanned(), 1);
+        let r = &report.records[0];
+        assert_eq!(r.job_id, 0);
+        assert!(!r.promoted);
+        assert_eq!(r.old_completion, Some(7));
+        assert_eq!(r.new_completion, Some(3));
+        assert!(
+            r.new_utility >= r.old_utility,
+            "earlier completion cannot lose utility"
+        );
+        assert!(report.utility_delta() >= 0.0);
+        // same placement shape on a different slot: total usage conserved
+        assert!((core.ledger().total_used() - before).abs() < 1e-9);
+        assert!(core.ledger().within_capacity(1e-9));
+        assert_eq!(core.tracked_admissions()[0].schedule.slots[0].t, 3);
+    }
+
+    #[test]
+    fn started_jobs_are_pruned_not_replanned() {
+        let cluster = small_cluster();
+        let mut core = AdmissionCore::new(&cluster, 10);
+        core.set_replan_tracking(true);
+        let mut sched = Shifter { lag: 1, defer_first: false, capable: true };
+        core.submit(&mut sched, &small_job(0, 0)); // runs at slot 1
+        let report = run_replan_pass(&mut core, &mut sched, 4);
+        assert_eq!(report.revisited, 0, "a started schedule is immovable");
+        assert!(core.tracked_admissions().is_empty(), "pruned");
+    }
+
+    #[test]
+    fn deferred_unstarted_job_is_promoted() {
+        let cluster = small_cluster();
+        let mut core = AdmissionCore::new(&cluster, 10);
+        core.set_replan_tracking(true);
+        let mut sched = Shifter { lag: 0, defer_first: true, capable: true };
+        core.submit(&mut sched, &small_job(3, 0));
+        assert_eq!(core.active().len(), 1);
+
+        let report = run_replan_pass(&mut core, &mut sched, 2);
+        assert_eq!(report.replanned(), 1);
+        let r = &report.records[0];
+        assert!(r.promoted);
+        assert_eq!(r.job_id, 3);
+        assert_eq!(r.old_completion, None);
+        assert_eq!(r.new_completion, Some(2));
+        assert!(r.new_finish.is_some(), "the toy plan covers the workload");
+        assert!(core.active().is_empty(), "promoted out of the active set");
+        assert_eq!(core.tracked_admissions().len(), 1);
+        assert!(core.ledger().within_capacity(1e-9));
+    }
+
+    #[test]
+    fn keep_decision_restores_the_ledger() {
+        /// Capable scheduler that always declines to re-plan.
+        struct Keeper;
+        impl Scheduler for Keeper {
+            fn name(&self) -> String {
+                "keeper".into()
+            }
+            fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> ArrivalDecision {
+                let s = Shifter::plan(job, job.arrival + 5);
+                ledger.commit(job, &s);
+                ArrivalDecision::Admit(s)
+            }
+            fn replan_capable(&self) -> bool {
+                true
+            }
+            fn replan_job(
+                &mut self,
+                _job: &Job,
+                _old: Option<&Schedule>,
+                _t: usize,
+                _ledger: &mut AllocLedger,
+            ) -> Option<Schedule> {
+                None
+            }
+        }
+        let cluster = small_cluster();
+        let mut core = AdmissionCore::new(&cluster, 10);
+        core.set_replan_tracking(true);
+        let mut sched = Keeper;
+        core.submit(&mut sched, &small_job(0, 0));
+        let before: Vec<Vec<_>> = (0..10)
+            .map(|t| (0..2).map(|h| *core.ledger().used(t, h)).collect())
+            .collect();
+        let report = run_replan_pass(&mut core, &mut sched, 2);
+        assert_eq!(report.revisited, 1);
+        assert_eq!(report.replanned(), 0, "keeping the plan is not a change");
+        for (t, row) in before.iter().enumerate() {
+            for (h, used) in row.iter().enumerate() {
+                assert_eq!(core.ledger().used(t, h), used, "slot {t} machine {h}");
+            }
+        }
+        assert_eq!(core.tracked_admissions().len(), 1, "still tracked");
+    }
+}

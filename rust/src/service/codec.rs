@@ -7,7 +7,7 @@
 //! op-log reproduces the exact ledger state (the `--recover` contract).
 
 use crate::cluster::{ResVec, NUM_RESOURCES};
-use crate::jobs::{Job, Schedule, Sigmoid, SlotPlacement};
+use crate::jobs::{speed, Job, Locality, Schedule, Sigmoid, SlotPlacement};
 use crate::util::json::{self, Json};
 
 pub fn resvec_to_json(v: &ResVec) -> Json {
@@ -21,7 +21,13 @@ pub fn resvec_from_json(v: &Json) -> Result<ResVec, String> {
     }
     let mut out = ResVec::zero();
     for (i, x) in arr.iter().enumerate() {
-        out.0[i] = x.as_f64().ok_or("resource vector entries must be numbers")?;
+        let x = x.as_f64().ok_or("resource vector entries must be numbers")?;
+        if !x.is_finite() || x < 0.0 {
+            return Err(format!(
+                "resource vector entry {i} must be finite and ≥ 0, got {x}"
+            ));
+        }
+        out.0[i] = x;
     }
     Ok(out)
 }
@@ -46,35 +52,91 @@ pub fn job_to_json(job: &Job) -> Json {
     ])
 }
 
+/// Largest count accepted for integer-like fields (ids, slots, epochs,
+/// batch sizes): every f64 below it is exactly representable, so the
+/// `as` casts below are lossless — and a fuzzer's `1e999` or `-1` is an
+/// error response instead of a saturated cast silently entering the
+/// scheduler core.
+const MAX_COUNT: f64 = 9.0e15;
+
 pub fn job_from_json(v: &Json) -> Result<Job, String> {
     let num = |k: &str| -> Result<f64, String> {
         v.get(k)
             .and_then(Json::as_f64)
             .ok_or_else(|| format!("job: missing numeric field {k:?}"))
     };
+    // A malformed submit must be an `"ok":false` response, never a panic,
+    // an absurd allocation, or NaN poisoning the solver: every number is
+    // validated at the wire boundary.
+    let finite = |k: &str| -> Result<f64, String> {
+        let x = num(k)?;
+        if !x.is_finite() {
+            return Err(format!("job: field {k:?} must be finite, got {x}"));
+        }
+        Ok(x)
+    };
+    let nonneg = |k: &str| -> Result<f64, String> {
+        let x = finite(k)?;
+        if x < 0.0 {
+            return Err(format!("job: field {k:?} must be ≥ 0, got {x}"));
+        }
+        Ok(x)
+    };
+    let positive = |k: &str| -> Result<f64, String> {
+        let x = finite(k)?;
+        if x <= 0.0 {
+            return Err(format!("job: field {k:?} must be > 0, got {x}"));
+        }
+        Ok(x)
+    };
+    let count = |k: &str| -> Result<f64, String> {
+        let x = nonneg(k)?;
+        if x > MAX_COUNT {
+            return Err(format!("job: field {k:?} is out of range ({x})"));
+        }
+        Ok(x)
+    };
     let res = |k: &str| -> Result<ResVec, String> {
         resvec_from_json(v.get(k).ok_or_else(|| format!("job: missing field {k:?}"))?)
             .map_err(|e| format!("job.{k}: {e}"))
     };
-    Ok(Job {
-        id: num("id")? as usize,
-        arrival: num("arrival")? as usize,
-        epochs: num("epochs")? as u64,
-        samples: num("samples")?,
-        grad_size_mb: num("grad_size_mb")?,
-        tau: num("tau")?,
-        gamma: num("gamma")?,
-        batch: num("batch")? as u64,
+    let job = Job {
+        id: count("id")? as usize,
+        arrival: count("arrival")? as usize,
+        epochs: count("epochs")? as u64,
+        samples: nonneg("samples")?,
+        grad_size_mb: nonneg("grad_size_mb")?,
+        tau: nonneg("tau")?,
+        // gamma and the link rates are divisors in the speed model
+        gamma: positive("gamma")?,
+        batch: {
+            let b = count("batch")?;
+            if b < 1.0 {
+                return Err(format!("job: field \"batch\" must be ≥ 1, got {b}"));
+            }
+            b as u64
+        },
         worker_demand: res("worker_demand")?,
         ps_demand: res("ps_demand")?,
-        b_int: num("b_int")?,
-        b_ext: num("b_ext")?,
+        b_int: positive("b_int")?,
+        b_ext: positive("b_ext")?,
         utility: Sigmoid {
-            theta1: num("theta1")?,
-            theta2: num("theta2")?,
-            theta3: num("theta3")?,
+            theta1: finite("theta1")?,
+            theta2: finite("theta2")?,
+            theta3: finite("theta3")?,
         },
-    })
+    };
+    // tau and grad_size_mb are individually allowed to be 0, but a job
+    // with BOTH zero has a zero per-sample time — per_worker_rate would
+    // divide by it and feed infinity into the solver
+    let per_sample = speed::per_sample_time(&job, Locality::Internal);
+    if !(per_sample > 0.0 && per_sample.is_finite()) {
+        return Err(format!(
+            "job: per-sample time must be positive and finite, got {per_sample} \
+             (tau and grad_size_mb cannot both be 0)"
+        ));
+    }
+    Ok(job)
 }
 
 pub fn schedule_to_json(s: &Schedule) -> Json {
@@ -106,13 +168,18 @@ pub fn schedule_to_json(s: &Schedule) -> Json {
 }
 
 pub fn schedule_from_json(v: &Json) -> Result<Schedule, String> {
-    let job_id = v
-        .get("job_id")
-        .and_then(Json::as_f64)
-        .ok_or("schedule: missing job_id")? as usize;
+    let checked = |x: Option<f64>, what: &str| -> Result<f64, String> {
+        let x = x.ok_or_else(|| format!("{what} must be a number"))?;
+        if !x.is_finite() || !(0.0..=MAX_COUNT).contains(&x) {
+            return Err(format!("{what} is out of range ({x})"));
+        }
+        Ok(x)
+    };
+    let job_id =
+        checked(v.get("job_id").and_then(Json::as_f64), "schedule: job_id")? as usize;
     let mut slots = Vec::new();
     for slot in v.get("slots").and_then(Json::as_arr).ok_or("schedule: missing slots")? {
-        let t = slot.get("t").and_then(Json::as_f64).ok_or("slot: missing t")? as usize;
+        let t = checked(slot.get("t").and_then(Json::as_f64), "slot: t")? as usize;
         let mut placements = Vec::new();
         for p in slot
             .get("placements")
@@ -124,7 +191,7 @@ pub fn schedule_from_json(v: &Json) -> Result<Schedule, String> {
                 return Err("placement must be [h, w, ps]".into());
             }
             let f = |i: usize| -> Result<f64, String> {
-                triple[i].as_f64().ok_or_else(|| "placement entries must be numbers".into())
+                checked(triple[i].as_f64(), "placement entry")
             };
             placements.push((f(0)? as usize, f(1)? as u64, f(2)? as u64));
         }

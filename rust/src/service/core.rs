@@ -16,6 +16,7 @@
 use crate::err;
 use crate::jobs::Job;
 use crate::sched::registry::{SchedulerRegistry, SchedulerSpec};
+use crate::sched::replan::{run_replan_pass, ReplanReport};
 use crate::sched::solver::SolverStats;
 use crate::sim::{AdmissionCore, AdmissionOutcome, PlannedFinish, Scheduler};
 use crate::sweep::{ClusterSpec, WorkloadSpec};
@@ -26,7 +27,7 @@ use crate::util::timer::Timer;
 
 use super::codec;
 use super::oplog::{Op, OpLog};
-use super::protocol::{ok_response, Request};
+use super::protocol::{err_response, ok_response, Request};
 
 /// What the daemon serves: a registry scheduler over a cluster, with a
 /// pricing population drawn from `workload` (the same `(jobs, cluster,
@@ -45,15 +46,21 @@ impl ServiceConfig {
         self.workload.horizon
     }
 
-    /// The op-log header identifying this configuration.
+    /// The op-log header identifying this configuration. The `replan`
+    /// field appears only when the cadence is enabled, so logs written by
+    /// pre-replan daemons still replay under a `replan = none` config.
     pub fn header_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             ("scheduler", json::s(&self.scheduler.name)),
             ("seed", json::num(self.scheduler.seed as f64)),
             ("cluster", json::s(&self.cluster.key())),
             ("workload", json::s(&self.workload.key())),
             ("horizon", json::num(self.horizon() as f64)),
-        ])
+        ];
+        if self.scheduler.replan.is_enabled() {
+            fields.push(("replan", json::s(&self.scheduler.replan.label())));
+        }
+        json::obj(fields)
     }
 }
 
@@ -69,6 +76,9 @@ pub struct ServiceReport {
     pub rejected: usize,
     pub deferred: usize,
     pub completed: usize,
+    /// Plan changes adopted by elastic replan rounds (policy-driven and
+    /// wire-triggered).
+    pub replanned: usize,
     pub total_utility: f64,
     /// Full ledger dump: `alloc[t][h]` = the four committed resource
     /// amounts.
@@ -93,8 +103,13 @@ pub struct ServiceCore {
     total_utility: f64,
     /// Planned completions of covered arrival-driven admissions, keyed by
     /// completion slot (credited when the clock passes the slot, exactly
-    /// like the engine's pending table).
-    pending: Vec<Vec<PlannedFinish>>,
+    /// like the engine's pending table). Entries carry the job id so a
+    /// replan round can move them between slots.
+    pending: Vec<Vec<(usize, PlannedFinish)>>,
+    /// Elastic replan rounds run (policy ticks + wire ops).
+    replan_rounds: usize,
+    /// Plan changes adopted across all rounds.
+    replanned_total: usize,
     /// Core-side decision latency per submit, in microseconds.
     latencies_us: Vec<f64>,
     started: Timer,
@@ -113,7 +128,15 @@ impl ServiceCore {
         let cluster = cfg.cluster.build();
         let sched =
             SchedulerRegistry::builtin().build(&cfg.scheduler, &jobs, &cluster, horizon)?;
-        let core = AdmissionCore::new(&cluster, horizon);
+        let mut core = AdmissionCore::new(&cluster, horizon);
+        // Track admissions only when a replan cadence is configured AND
+        // the policy can re-plan (the engine's gating): tracking clones
+        // every admitted job+schedule, and without rounds nothing would
+        // ever prune the list — a daemon serving open-loop load must not
+        // grow it forever.
+        if cfg.scheduler.replan.is_enabled() && sched.replan_capable() {
+            core.set_replan_tracking(true);
+        }
         Ok(ServiceCore {
             cfg,
             cluster,
@@ -129,6 +152,8 @@ impl ServiceCore {
             completed: 0,
             total_utility: 0.0,
             pending: vec![Vec::new(); horizon],
+            replan_rounds: 0,
+            replanned_total: 0,
             latencies_us: Vec::new(),
             started: Timer::start(),
             log: None,
@@ -203,6 +228,24 @@ impl ServiceCore {
                         ));
                     }
                 }
+                Op::Replan { slot, replanned } => {
+                    if slot != core.slot {
+                        return Err(err!(
+                            "op-log {path}: replan recorded at slot {slot} but replay \
+                             is at slot {}",
+                            core.slot
+                        ));
+                    }
+                    let report = core.replan_now();
+                    if report.replanned() != replanned {
+                        return Err(err!(
+                            "op-log {path}: replan round recorded {replanned} plan \
+                             changes but replay produced {} — scheduler \
+                             nondeterminism or config drift",
+                            report.replanned()
+                        ));
+                    }
+                }
             }
         }
         if saw_header {
@@ -216,7 +259,7 @@ impl ServiceCore {
 
     fn check_header(&self, header: &Json, path: &str) -> Result<()> {
         let want = self.cfg.header_json();
-        for key in ["scheduler", "seed", "cluster", "workload", "horizon"] {
+        for key in ["scheduler", "seed", "cluster", "workload", "horizon", "replan"] {
             let got = header.get(key);
             let expect = want.get(key);
             if got != expect {
@@ -251,6 +294,7 @@ impl ServiceCore {
             Request::Status => self.status_json(),
             Request::Cluster => self.cluster_json(),
             Request::Metrics => self.metrics_json(),
+            Request::Replan => self.replan(),
             Request::Shutdown => ok_response(vec![("draining", Json::Bool(true))]),
         }
     }
@@ -293,7 +337,7 @@ impl ServiceCore {
                         self.completed += 1;
                         self.total_utility += f.utility;
                     } else if f.slot < self.horizon() {
-                        self.pending[f.slot].push(f);
+                        self.pending[f.slot].push((job.id, f));
                     }
                 }
                 let completion_json =
@@ -358,26 +402,90 @@ impl ServiceCore {
                 self.total_utility += f.utility;
             }
         }
-        for f in std::mem::take(&mut self.pending[t]) {
+        for (_, f) in std::mem::take(&mut self.pending[t]) {
             self.completed += 1;
             self.total_utility += f.utility;
         }
         if t + 1 < self.horizon() {
             self.slot = t + 1;
+            // the slot boundary the engine replans at: the start of the
+            // new slot, before any of its submissions. Gated on tracking
+            // so an incapable scheduler reports zero rounds, matching the
+            // wire op's "unavailable" answer.
+            if self.core.replan_tracking() && self.cfg.scheduler.replan.fires_at(self.slot)
+            {
+                self.replan_now();
+            }
         } else {
             self.ended = true;
         }
     }
 
-    fn ledger_sum(&self) -> f64 {
-        let ledger = self.core.ledger();
-        let mut sum = 0.0;
-        for t in 0..ledger.horizon() {
-            for h in 0..ledger.num_machines() {
-                sum += ledger.used(t, h).sum();
+    /// Run one elastic replan round at the current slot and fold the
+    /// moved completions into the pending table. Shared by the policy
+    /// ticks, the wire op, and op-log replay (which is why it does not
+    /// journal itself — see [`ServiceCore::replan`]).
+    fn replan_now(&mut self) -> ReplanReport {
+        let t = self.slot;
+        let report = run_replan_pass(&mut self.core, self.sched.as_mut(), t);
+        for r in &report.records {
+            if r.promoted {
+                // a deferred job became a full admission: move it between
+                // the decision counters, like the engine's event stream
+                self.admitted += 1;
+                self.deferred = self.deferred.saturating_sub(1);
+            }
+            if let Some(of) = r.old_finish {
+                if of.slot < self.horizon() {
+                    self.pending[of.slot].retain(|&(id, _)| id != r.job_id);
+                }
+            }
+            if let Some(nf) = r.new_finish {
+                if nf.slot < self.horizon() {
+                    self.pending[nf.slot].push((r.job_id, nf));
+                }
             }
         }
-        sum
+        self.replan_rounds += 1;
+        self.replanned_total += report.replanned();
+        report
+    }
+
+    /// The wire `replan` op: force one round now, journal it (so
+    /// `--recover` replays it at the same point in the op sequence), and
+    /// report what moved. An error when re-planning is unavailable — the
+    /// daemon was started without `--replan` or the scheduler cannot
+    /// re-plan — so clients are not silently told "0 jobs moved".
+    pub fn replan(&mut self) -> Json {
+        if !self.core.replan_tracking() {
+            return err_response(
+                "replan is unavailable (serve with --replan every:K and a \
+                 replan-capable scheduler, e.g. pd-ors)",
+            );
+        }
+        if self.ended {
+            // the final slot has executed and its completions are
+            // credited; releasing those allocations now would rewrite
+            // history that can never take effect
+            return err_response("the horizon has ended; nothing left to re-plan");
+        }
+        let report = self.replan_now();
+        if let Some(log) = self.log.as_mut() {
+            let op = Op::Replan { slot: report.slot, replanned: report.replanned() };
+            if let Err(e) = log.append(&op) {
+                eprintln!("warning: op-log append failed: {e}");
+            }
+        }
+        ok_response(vec![
+            ("slot", json::num(report.slot as f64)),
+            ("revisited", json::num(report.revisited as f64)),
+            ("replanned", json::num(report.replanned() as f64)),
+            ("utility_delta", json::num(report.utility_delta())),
+        ])
+    }
+
+    fn ledger_sum(&self) -> f64 {
+        self.core.ledger().total_used()
     }
 
     pub fn status_json(&self) -> Json {
@@ -392,6 +500,9 @@ impl ServiceCore {
             ("deferred", json::num(self.deferred as f64)),
             ("completed", json::num(self.completed as f64)),
             ("active", json::num(self.core.active().len() as f64)),
+            ("replan", json::s(&self.cfg.scheduler.replan.label())),
+            ("replan_rounds", json::num(self.replan_rounds as f64)),
+            ("replanned", json::num(self.replanned_total as f64)),
             ("total_utility", json::num(self.total_utility)),
             ("ledger_sum", json::num(self.ledger_sum())),
         ])
@@ -456,6 +567,7 @@ impl ServiceCore {
             rejected: self.rejected,
             deferred: self.deferred,
             completed: self.completed,
+            replanned: self.replanned_total,
             total_utility: self.total_utility,
             alloc,
             solver: self.sched.solver_stats(),
@@ -639,5 +751,53 @@ mod tests {
         }
         let status = core.apply(&Request::Status);
         assert_eq!(status.get("slot").unwrap().as_usize(), Some(1), "tick advanced");
+    }
+
+    #[test]
+    fn replan_op_requires_an_enabled_cadence() {
+        use crate::sched::replan::ReplanPolicy;
+        // default config (replan = none): the wire op is an honest error,
+        // not a silent "0 jobs moved", and nothing is tracked
+        let mut off = ServiceCore::new(cfg()).unwrap();
+        let resp = off.apply(&Request::Replan);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{}", resp.to_string());
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("--replan"));
+        let jobs = off.config().workload.jobs(1);
+        off.submit(jobs[0].clone());
+        assert!(
+            off.core.tracked_admissions().is_empty(),
+            "a replan-less daemon must not accumulate tracked admissions"
+        );
+
+        // cadence enabled: the op answers with the round's counters
+        let mut c = cfg();
+        c.scheduler = c.scheduler.with_replan(ReplanPolicy::Every(4));
+        let mut on = ServiceCore::new(c).unwrap();
+        let resp = on.apply(&Request::Replan);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+        assert!(resp.get("replanned").is_some());
+        assert!(resp.get("revisited").is_some());
+
+        // ...but not once the horizon has ended: the final slot already
+        // executed, so there is nothing left that could legally move
+        for _ in 0..40 {
+            on.tick();
+        }
+        let resp = on.apply(&Request::Replan);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{}", resp.to_string());
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("horizon"));
+
+        // a cadence on a replan-incapable scheduler runs zero rounds (the
+        // tick path is gated exactly like the wire op)
+        let mut f = cfg();
+        f.scheduler = SchedulerSpec::new("fifo").with_seed(1).with_replan(ReplanPolicy::Every(2));
+        let mut fifo = ServiceCore::new(f).unwrap();
+        for _ in 0..6 {
+            fifo.tick();
+        }
+        let status = fifo.status_json();
+        assert_eq!(status.get("replan_rounds").unwrap().as_usize(), Some(0));
+        let resp = fifo.apply(&Request::Replan);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{}", resp.to_string());
     }
 }

@@ -32,6 +32,11 @@ pub enum Op {
     Submit { slot: usize, decision: String, job: Job },
     /// A clock advance; `slot` is the slot *after* the tick.
     Tick { slot: usize },
+    /// A wire-triggered elastic replan round at `slot`; `replanned` is the
+    /// number of adopted plan changes, re-checked on replay. (Rounds the
+    /// `--replan every:k` policy runs inside a tick are *not* journaled —
+    /// replaying the tick re-runs them deterministically.)
+    Replan { slot: usize, replanned: usize },
 }
 
 impl Op {
@@ -61,6 +66,11 @@ impl Op {
                 ("op", json::s("tick")),
                 ("slot", json::num(*slot as f64)),
             ]),
+            Op::Replan { slot, replanned } => json::obj(vec![
+                ("op", json::s("replan")),
+                ("slot", json::num(*slot as f64)),
+                ("replanned", json::num(*replanned as f64)),
+            ]),
         }
     }
 
@@ -88,6 +98,16 @@ impl Op {
                     .get("slot")
                     .and_then(Json::as_f64)
                     .ok_or("tick op needs slot")? as usize,
+            }),
+            "replan" => Ok(Op::Replan {
+                slot: v
+                    .get("slot")
+                    .and_then(Json::as_f64)
+                    .ok_or("replan op needs slot")? as usize,
+                replanned: v
+                    .get("replanned")
+                    .and_then(Json::as_f64)
+                    .ok_or("replan op needs replanned")? as usize,
             }),
             other => Err(format!("unknown op-log entry {other:?}")),
         }
@@ -192,10 +212,12 @@ mod tests {
             })
             .unwrap();
             log.append(&Op::Tick { slot: 1 }).unwrap();
+            log.append(&Op::Replan { slot: 1, replanned: 2 }).unwrap();
         }
         let (ops, repaired) = OpLog::read(&p).unwrap();
         assert!(!repaired);
-        assert_eq!(ops.len(), 3);
+        assert_eq!(ops.len(), 4);
+        assert!(matches!(ops[3], Op::Replan { slot: 1, replanned: 2 }));
         assert!(matches!(&ops[0], Op::Open { header }
             if header.get("scheduler").and_then(Json::as_str) == Some("pd-ors")));
         assert!(matches!(&ops[1], Op::Submit { slot: 0, decision, job }

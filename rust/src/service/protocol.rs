@@ -10,6 +10,7 @@
 //! | `status`   | —              | `slot`, `submitted`, `admitted`, `rejected`, `deferred`, `completed`, `total_utility`, `ledger_sum`, … |
 //! | `cluster`  | —              | `machines`, `horizon`, `capacities` |
 //! | `metrics`  | —              | `decisions`, `solve_us` percentiles, `solver` counters, `uptime_secs` |
+//! | `replan`   | —              | `slot`, `revisited`, `replanned`, `utility_delta` — force one elastic replan round now (see [`crate::sched::replan`]; rounds also run automatically with `--replan every:k`, and the op is an `"ok":false` error on a daemon serving without that flag) |
 //! | `shutdown` | —              | `draining: true` (the daemon then drains and exits) |
 //!
 //! Every response carries `"ok": true` or `"ok": false` + `"error"`. The
@@ -30,6 +31,7 @@ pub enum Request {
     Status,
     Cluster,
     Metrics,
+    Replan,
     Shutdown,
 }
 
@@ -50,9 +52,11 @@ impl Request {
             "status" => Ok(Request::Status),
             "cluster" => Ok(Request::Cluster),
             "metrics" => Ok(Request::Metrics),
+            "replan" => Ok(Request::Replan),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!(
-                "unknown op {other:?} (expected submit|tick|status|cluster|metrics|shutdown)"
+                "unknown op {other:?} (expected \
+                 submit|tick|status|cluster|metrics|replan|shutdown)"
             )),
         }
     }
@@ -69,6 +73,7 @@ impl Request {
             Request::Status => json::obj(vec![("op", json::s("status"))]),
             Request::Cluster => json::obj(vec![("op", json::s("cluster"))]),
             Request::Metrics => json::obj(vec![("op", json::s("metrics"))]),
+            Request::Replan => json::obj(vec![("op", json::s("replan"))]),
             Request::Shutdown => json::obj(vec![("op", json::s("shutdown"))]),
         }
     }
@@ -97,7 +102,14 @@ mod tests {
 
     #[test]
     fn ops_round_trip() {
-        for req in [Request::Tick, Request::Status, Request::Cluster, Request::Metrics, Request::Shutdown] {
+        for req in [
+            Request::Tick,
+            Request::Status,
+            Request::Cluster,
+            Request::Metrics,
+            Request::Replan,
+            Request::Shutdown,
+        ] {
             let line = req.to_line();
             let back = Request::parse(&line).unwrap();
             assert_eq!(back.to_line(), line);

@@ -60,11 +60,53 @@ pub struct GrantOutcome {
     pub finish: Option<PlannedFinish>,
 }
 
+/// One admitted job the core tracks for elastic re-planning: the job, its
+/// currently committed schedule, and the planned completion credit.
+/// Recorded only while [`AdmissionCore::replan_tracking`] is on.
+#[derive(Debug, Clone)]
+pub struct TrackedAdmission {
+    pub job: Job,
+    pub schedule: Schedule,
+    pub finish: Option<PlannedFinish>,
+}
+
+/// Total resource-time a committed schedule holds in the ledger (summed
+/// over slots, machines, and resource kinds) — the conservation quantity
+/// the release/re-commit primitives check in debug builds (the property
+/// tests run unoptimized, so they exercise it; release daemons skip the
+/// ledger sweeps).
+#[cfg(debug_assertions)]
+fn schedule_demand(job: &Job, s: &Schedule) -> f64 {
+    s.slots
+        .iter()
+        .flat_map(|slot| slot.placements.iter())
+        .map(|&(_, w, ps)| job.demand(w, ps).sum())
+        .sum()
+}
+
+/// The planned completion credit of a committed schedule: set iff the
+/// schedule covers the full workload and has at least one worker slot.
+pub fn planned_finish(job: &Job, s: &Schedule) -> Option<PlannedFinish> {
+    match (s.covers_workload(job, 1.0), s.completion_time()) {
+        (true, Some(ct)) => Some(PlannedFinish {
+            slot: ct,
+            utility: job.utility_at(ct),
+            training_time: (ct - job.arrival + 1) as f64,
+        }),
+        _ => None,
+    }
+}
+
 /// Shared admission/grant state (see module docs).
 pub struct AdmissionCore {
     ledger: AllocLedger,
     active: Vec<ActiveJob>,
     horizon: usize,
+    /// Record admitted `(job, schedule)` pairs for the replan pass. Off by
+    /// default — with `replan = none` nothing is tracked and the core's
+    /// behavior is byte-identical to the pre-replan system.
+    track_replan: bool,
+    tracked: Vec<TrackedAdmission>,
 }
 
 impl AdmissionCore {
@@ -73,6 +115,8 @@ impl AdmissionCore {
             ledger: AllocLedger::new(cluster, horizon),
             active: Vec::new(),
             horizon,
+            track_replan: false,
+            tracked: Vec::new(),
         }
     }
 
@@ -84,9 +128,125 @@ impl AdmissionCore {
         &self.ledger
     }
 
+    /// Mutable ledger access for the replan primitives: the scheduler's
+    /// `replan_job` commits a re-solved schedule here, exactly as
+    /// `on_arrival` does through [`AdmissionCore::submit`]. Not for
+    /// general mutation.
+    pub fn ledger_mut(&mut self) -> &mut AllocLedger {
+        &mut self.ledger
+    }
+
     /// Deferred jobs still holding workload.
     pub fn active(&self) -> &[ActiveJob] {
         &self.active
+    }
+
+    /// Start (or stop) recording admitted schedules for re-planning.
+    pub fn set_replan_tracking(&mut self, on: bool) {
+        self.track_replan = on;
+    }
+
+    pub fn replan_tracking(&self) -> bool {
+        self.track_replan
+    }
+
+    /// Admitted jobs currently eligible for re-planning (tracked since
+    /// tracking was enabled, minus pruned/started ones).
+    pub fn tracked_admissions(&self) -> &[TrackedAdmission] {
+        &self.tracked
+    }
+
+    /// Drop tracked admissions whose schedule has already begun (first
+    /// slot before `t`) — their allocation can no longer move.
+    pub fn prune_started_admissions(&mut self, t: usize) {
+        self.tracked
+            .retain(|e| e.schedule.slots.first().map_or(false, |s| s.t >= t));
+    }
+
+    /// Release tracked admission `i` from the ledger and remove it from
+    /// the tracked set, returning it. Checks ledger conservation: the
+    /// total drops by exactly the schedule's committed demand.
+    pub fn release_tracked(&mut self, i: usize) -> TrackedAdmission {
+        let entry = self.tracked.remove(i);
+        #[cfg(debug_assertions)]
+        let before = self.ledger.total_used();
+        self.ledger.release(&entry.job, &entry.schedule);
+        #[cfg(debug_assertions)]
+        {
+            let released = schedule_demand(&entry.job, &entry.schedule);
+            let after = self.ledger.total_used();
+            debug_assert!(
+                (before - after - released).abs() <= 1e-6 * (1.0 + before.abs()),
+                "ledger conservation violated on release: {before} -> {after}, \
+                 schedule holds {released}"
+            );
+        }
+        entry
+    }
+
+    /// Re-commit a previously released admission unchanged (the scheduler
+    /// declined to re-plan), restoring the ledger and the tracked entry at
+    /// position `i`.
+    pub fn recommit_tracked(&mut self, i: usize, entry: TrackedAdmission) {
+        #[cfg(debug_assertions)]
+        let before = self.ledger.total_used();
+        self.ledger.commit(&entry.job, &entry.schedule);
+        #[cfg(debug_assertions)]
+        {
+            let committed = schedule_demand(&entry.job, &entry.schedule);
+            let after = self.ledger.total_used();
+            debug_assert!(
+                (after - before - committed).abs() <= 1e-6 * (1.0 + after.abs()),
+                "ledger conservation violated on re-commit"
+            );
+        }
+        debug_assert!(
+            self.ledger.within_capacity(1e-6),
+            "re-committing a released schedule exceeded capacity"
+        );
+        self.tracked.insert(i, entry);
+    }
+
+    /// Track the re-solved schedule the scheduler committed for a released
+    /// admission (insert back at position `i`); returns the new planned
+    /// completion credit.
+    pub fn adopt_replanned(
+        &mut self,
+        i: usize,
+        job: Job,
+        schedule: Schedule,
+    ) -> Option<PlannedFinish> {
+        debug_assert!(
+            self.ledger.within_capacity(1e-6),
+            "replanned schedule exceeded capacity"
+        );
+        debug_assert!(schedule.respects_arrival(&job));
+        debug_assert!(schedule.respects_worker_cap(&job));
+        let finish = planned_finish(&job, &schedule);
+        self.tracked.insert(i, TrackedAdmission { job, schedule, finish });
+        finish
+    }
+
+    /// Promote deferred active job `d` to a full admission under
+    /// `schedule` (already committed to the ledger by the scheduler);
+    /// returns the planned completion credit. Callers must only promote
+    /// jobs that have received no grants yet.
+    pub fn promote_deferred(
+        &mut self,
+        d: usize,
+        schedule: Schedule,
+    ) -> Option<PlannedFinish> {
+        let aj = self.active.remove(d);
+        debug_assert!(
+            (aj.remaining - aj.job.total_workload()).abs() <= 1e-9,
+            "promoting a deferred job that already received grants"
+        );
+        debug_assert!(self.ledger.within_capacity(1e-6));
+        let finish = planned_finish(&aj.job, &schedule);
+        if self.track_replan {
+            self.tracked.push(TrackedAdmission { job: aj.job, schedule, finish });
+        }
+        finish
     }
 
     /// Submit one job to the scheduler (its arrival slot is `job.arrival`).
@@ -100,14 +260,14 @@ impl AdmissionCore {
                 debug_assert!(s.respects_worker_cap(job));
                 debug_assert!(s.respects_arrival(job));
                 let completion = s.completion_time();
-                let finish = match (s.covers_workload(job, 1.0), completion) {
-                    (true, Some(ct)) => Some(PlannedFinish {
-                        slot: ct,
-                        utility: job.utility_at(ct),
-                        training_time: (ct - job.arrival + 1) as f64,
-                    }),
-                    _ => None,
-                };
+                let finish = planned_finish(job, &s);
+                if self.track_replan {
+                    self.tracked.push(TrackedAdmission {
+                        job: job.clone(),
+                        schedule: s.clone(),
+                        finish,
+                    });
+                }
                 AdmissionOutcome::Admitted { schedule: s, completion, finish }
             }
             ArrivalDecision::Reject => AdmissionOutcome::Rejected,

@@ -37,6 +37,7 @@
 
 use crate::cluster::{AllocLedger, Cluster};
 use crate::jobs::{Job, Schedule};
+use crate::sched::replan::{run_replan_pass, ReplanPolicy};
 use crate::sched::solver::SolverStats;
 
 use super::admission::{AdmissionCore, AdmissionOutcome};
@@ -115,6 +116,31 @@ pub trait Scheduler {
     fn solver_stats(&self) -> SolverStats {
         SolverStats::default()
     }
+
+    /// Elastic re-planning (see [`crate::sched::replan`]): can this policy
+    /// re-solve not-yet-started jobs at slot boundaries? While this is
+    /// `false` the replan pass is a strict no-op around this scheduler —
+    /// no RNG draws, no events, no ledger traffic. Default: not capable.
+    fn replan_capable(&self) -> bool {
+        false
+    }
+
+    /// Re-solve one job from slot `t` against the current ledger. For an
+    /// admitted job, `old` is its previous schedule — already *released*
+    /// from `ledger` by the caller; for a deferred job offered a full
+    /// admission, `old` is `None`. Return a new schedule **already
+    /// committed to `ledger`** (the `on_arrival` contract) to adopt it, or
+    /// `None` to keep the status quo (the caller re-commits `old`
+    /// byte-for-byte). Only called when [`Scheduler::replan_capable`].
+    fn replan_job(
+        &mut self,
+        _job: &Job,
+        _old: Option<&Schedule>,
+        _t: usize,
+        _ledger: &mut AllocLedger,
+    ) -> Option<Schedule> {
+        None
+    }
 }
 
 /// Builder for [`SimEngine`]; `jobs`, `cluster`, and `horizon` are
@@ -126,6 +152,7 @@ pub struct SimEngineBuilder<'a> {
     cluster: Option<&'a Cluster>,
     horizon: Option<usize>,
     observers: Vec<&'a mut dyn SimObserver>,
+    replan: ReplanPolicy,
 }
 
 impl<'a> SimEngineBuilder<'a> {
@@ -151,6 +178,13 @@ impl<'a> SimEngineBuilder<'a> {
         self
     }
 
+    /// Enable elastic re-planning rounds (default: [`ReplanPolicy::None`],
+    /// which is byte-identical to an engine without the knob).
+    pub fn replan(mut self, policy: ReplanPolicy) -> Self {
+        self.replan = policy;
+        self
+    }
+
     /// Panics if a required field is missing.
     pub fn build(self) -> SimEngine<'a> {
         SimEngine {
@@ -158,6 +192,7 @@ impl<'a> SimEngineBuilder<'a> {
             cluster: self.cluster.expect("SimEngine::builder(): cluster(..) is required"),
             horizon: self.horizon.expect("SimEngine::builder(): horizon(..) is required"),
             observers: self.observers,
+            replan: self.replan,
         }
     }
 
@@ -174,6 +209,7 @@ pub struct SimEngine<'a> {
     cluster: &'a Cluster,
     horizon: usize,
     observers: Vec<&'a mut dyn SimObserver>,
+    replan: ReplanPolicy,
 }
 
 impl<'a> SimEngine<'a> {
@@ -222,6 +258,9 @@ impl<'a> SimEngine<'a> {
         let jobs = self.jobs;
         let horizon = self.horizon;
         let mut core = AdmissionCore::new(self.cluster, horizon);
+        if self.replan.is_enabled() && sched.replan_capable() {
+            core.set_replan_tracking(true);
+        }
         let mut collector = ResultCollector::new();
         let mut next_arrival = 0usize;
         // arrival-driven completions, keyed by completion slot
@@ -234,6 +273,41 @@ impl<'a> SimEngine<'a> {
                 &mut collector,
                 SimEvent::SlotStart { t, active: core.active().len() },
             );
+
+            // Elastic re-planning: revisit not-yet-started commitments at
+            // the slot boundary, before this slot's arrivals see prices.
+            if self.replan.fires_at(t) {
+                let report = run_replan_pass(&mut core, sched, t);
+                for r in &report.records {
+                    if let Some(of) = r.old_finish {
+                        if of.slot < horizon {
+                            pending[of.slot].retain(|&(id, _, _)| id != r.job_id);
+                        }
+                    }
+                    if let Some(nf) = r.new_finish {
+                        debug_assert!(nf.slot < horizon, "replanned beyond horizon");
+                        if nf.slot < horizon {
+                            pending[nf.slot].push((
+                                r.job_id,
+                                nf.utility,
+                                nf.training_time,
+                            ));
+                        }
+                    }
+                    self.emit(
+                        &mut collector,
+                        SimEvent::Replanned {
+                            t,
+                            job_id: r.job_id,
+                            promoted: r.promoted,
+                            old_completion: r.old_completion,
+                            new_completion: r.new_completion,
+                            old_utility: r.old_utility,
+                            new_utility: r.new_utility,
+                        },
+                    );
+                }
+            }
 
             while next_arrival < jobs.len() && jobs[next_arrival].arrival <= t {
                 let job = &jobs[next_arrival];

@@ -32,6 +32,20 @@ pub enum SimEvent {
     Deferred { t: usize, job_id: usize },
     /// A deferred job received workers/PSs for this slot.
     Granted { t: usize, job_id: usize, workers: u64, ps: u64 },
+    /// An elastic replan round moved this job's plan (see
+    /// [`crate::sched::replan`]): its future-slot allocation was released
+    /// and re-solved against current prices. `promoted` marks a deferred
+    /// job lifted to a full admission; the before/after planned utilities
+    /// quantify what the move was worth.
+    Replanned {
+        t: usize,
+        job_id: usize,
+        promoted: bool,
+        old_completion: Option<usize>,
+        new_completion: Option<usize>,
+        old_utility: f64,
+        new_utility: f64,
+    },
     /// A job finished its full workload `E_i K_i` at slot `t`.
     Completed { t: usize, job_id: usize, utility: f64, training_time: f64 },
     /// Cumulative solver counters, polled from the scheduler and emitted
@@ -67,6 +81,9 @@ pub struct SimResult {
     pub total_utility: f64,
     pub admitted: usize,
     pub completed: usize,
+    /// Jobs whose plan an elastic replan round changed (0 with
+    /// `replan = none` — part of the parity contract).
+    pub replanned: usize,
     /// Solver counters polled at the end of the run (all zeros for
     /// policies outside the θ-solver pipeline). Diagnostic only: runs
     /// that differ solely in caching legitimately differ here, so parity
@@ -85,6 +102,7 @@ impl SimResult {
             total_utility,
             admitted,
             completed,
+            replanned: 0,
             solver: SolverStats::default(),
         }
     }
@@ -98,6 +116,7 @@ impl SimResult {
             && self.total_utility == other.total_utility
             && self.admitted == other.admitted
             && self.completed == other.completed
+            && self.replanned == other.replanned
     }
 
     pub fn training_times(&self) -> Vec<f64> {
@@ -112,6 +131,7 @@ impl SimResult {
 pub struct ResultCollector {
     horizon: usize,
     outcomes: BTreeMap<usize, JobOutcome>,
+    replanned: usize,
     solver: SolverStats,
 }
 
@@ -124,6 +144,7 @@ impl ResultCollector {
     pub fn into_result(self, scheduler: String) -> SimResult {
         let mut res =
             SimResult::from_outcomes(scheduler, self.outcomes.into_values().collect());
+        res.replanned = self.replanned;
         res.solver = self.solver;
         res
     }
@@ -155,6 +176,15 @@ impl SimObserver for ResultCollector {
             SimEvent::Granted { job_id, .. } => {
                 if let Some(o) = self.outcomes.get_mut(&job_id) {
                     o.admitted = true;
+                }
+            }
+            SimEvent::Replanned { job_id, new_completion, .. } => {
+                self.replanned += 1;
+                if let Some(o) = self.outcomes.get_mut(&job_id) {
+                    o.admitted = true;
+                    if new_completion.is_some() {
+                        o.completion = new_completion;
+                    }
                 }
             }
             SimEvent::Completed { t, job_id, utility, training_time } => {
@@ -209,6 +239,26 @@ impl SimObserver for TraceObserver {
             SimEvent::Deferred { t, job_id } => format!("t={t:3} job {job_id} queued"),
             SimEvent::Granted { t, job_id, workers, ps } => {
                 format!("t={t:3} job {job_id} granted {workers} workers / {ps} ps")
+            }
+            SimEvent::Replanned {
+                t,
+                job_id,
+                promoted,
+                old_completion,
+                new_completion,
+                old_utility,
+                new_utility,
+            } => {
+                let what = if promoted { "promoted" } else { "replanned" };
+                let fmt = |c: Option<usize>| {
+                    c.map_or("-".to_string(), |x| x.to_string())
+                };
+                format!(
+                    "t={t:3} job {job_id} {what}: completes t={} (was t={}), \
+                     utility {new_utility:.2} (was {old_utility:.2})",
+                    fmt(new_completion),
+                    fmt(old_completion)
+                )
             }
             SimEvent::Completed { t, job_id, utility, .. } => {
                 format!("t={t:3} job {job_id} completed, utility {utility:.2}")

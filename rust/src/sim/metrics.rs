@@ -40,6 +40,8 @@ pub struct StreamingMetrics {
     pub total_utility: f64,
     /// Per-slot grant events (a job granted in k slots counts k times).
     pub grants: usize,
+    /// Plan changes adopted by elastic replan rounds.
+    pub replanned: usize,
     /// Solver counters (arrives once, at the end of the run).
     pub solver: SolverStats,
     granted_jobs: std::collections::BTreeSet<usize>,
@@ -66,6 +68,14 @@ impl SimObserver for StreamingMetrics {
             SimEvent::Completed { utility, .. } => {
                 self.completed += 1;
                 self.total_utility += utility;
+            }
+            SimEvent::Replanned { promoted, .. } => {
+                self.replanned += 1;
+                if promoted {
+                    // a deferred job lifted to a full admission (it will
+                    // never see a Granted event)
+                    self.admitted += 1;
+                }
             }
             SimEvent::Solver { stats } => self.solver = stats,
             SimEvent::Begin { .. }
@@ -100,6 +110,7 @@ mod tests {
             admitted: times.len(),
             completed: times.len(),
             outcomes,
+            replanned: 0,
             solver: SolverStats::default(),
         }
     }

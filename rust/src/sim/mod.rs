@@ -15,7 +15,10 @@ pub mod engine;
 pub mod events;
 pub mod metrics;
 
-pub use admission::{AdmissionCore, AdmissionOutcome, GrantOutcome, PlannedFinish};
+pub use admission::{
+    planned_finish, AdmissionCore, AdmissionOutcome, GrantOutcome, PlannedFinish,
+    TrackedAdmission,
+};
 pub use engine::{
     simulate, ActiveJob, ArrivalDecision, PlacementPolicy, Scheduler, SimEngine,
     SimEngineBuilder, SlotGrant,

@@ -40,6 +40,7 @@ use super::store::{CellRecord, ResultStore};
 /// seeds = 3
 /// schedulers = pd-ors, oasis, fifo
 /// arrivals = diurnal:3      # arrival process for the synthetic workloads
+/// replan = every:4          # elastic re-planning cadence (default none)
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
@@ -52,6 +53,8 @@ pub struct SweepSpec {
     pub schedulers: Vec<String>,
     /// Arrival process applied to the matrix's synthetic workloads.
     pub arrivals: crate::workload::ArrivalProcess,
+    /// Elastic re-planning cadence applied to every cell.
+    pub replan: crate::sched::replan::ReplanPolicy,
 }
 
 impl Default for SweepSpec {
@@ -63,6 +66,7 @@ impl Default for SweepSpec {
             seeds: 3,
             schedulers: Vec::new(),
             arrivals: crate::workload::ArrivalProcess::Alternating,
+            replan: crate::sched::replan::ReplanPolicy::None,
         }
     }
 }
@@ -120,6 +124,12 @@ impl SweepSpec {
                 Err(e) => eprintln!("warning: ignoring sweep.arrivals: {e}"),
             }
         }
+        if let Some(r) = cfg.get("sweep.replan") {
+            match crate::sched::replan::ReplanPolicy::parse(r) {
+                Ok(p) => spec.replan = p,
+                Err(e) => eprintln!("warning: ignoring sweep.replan: {e}"),
+            }
+        }
         spec
     }
 }
@@ -152,10 +162,12 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         .jobs(&jobs)
         .cluster(&cluster)
         .horizon(horizon)
+        .replan(sc.replan)
         .observer(&mut streaming)
         .run(sched.as_mut());
     debug_assert_eq!(streaming.admitted, result.admitted, "observer drift");
     debug_assert_eq!(streaming.completed, result.completed, "observer drift");
+    debug_assert_eq!(streaming.replanned, result.replanned, "observer drift");
     debug_assert_eq!(streaming.solver, result.solver, "observer drift");
     let record = CellRecord {
         key: sc.key(),
@@ -166,6 +178,7 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         jobs: jobs.len(),
         admitted: result.admitted,
         completed: result.completed,
+        replanned: result.replanned,
         total_utility: result.total_utility,
         median_training_time: median_training_time(&result),
         theta_solves: result.solver.theta_solves,
@@ -355,6 +368,7 @@ mod tests {
             workload: WorkloadSpec::synthetic(5, 8, 90),
             cluster: ClusterSpec::homogeneous(3),
             seed: 1,
+            replan: crate::sched::replan::ReplanPolicy::None,
         };
         let reg = SchedulerRegistry::builtin();
         let (result, record) = run_cell(&reg, &sc).unwrap();

@@ -12,6 +12,7 @@
 use crate::cluster::Cluster;
 use crate::config::Config;
 use crate::jobs::Job;
+use crate::sched::replan::ReplanPolicy;
 use crate::util::Rng;
 use crate::workload::synthetic::{paper_cluster, paper_cluster_classes, skewed_classes};
 use crate::workload::{
@@ -251,14 +252,23 @@ pub struct Scenario {
     /// Cell seed: the scheduler's seed, and the offset added to the
     /// workload's base seed.
     pub seed: u64,
+    /// Elastic re-planning cadence for this cell (an independent sweep
+    /// axis; replan-incapable schedulers no-op).
+    pub replan: ReplanPolicy,
 }
 
 impl Scenario {
     /// Stable cell identity — the [`ResultStore`](super::store::ResultStore)
-    /// dedup key.
+    /// dedup key. The replan axis contributes a trailing token only when
+    /// enabled, so every pre-existing store key is unchanged.
     pub fn key(&self) -> String {
+        let replan = self
+            .replan
+            .key_token()
+            .map(|t| format!("|{t}"))
+            .unwrap_or_default();
         format!(
-            "{}|{}|{}|seed{}",
+            "{}|{}|{}|seed{}{replan}",
             self.scheduler,
             self.workload.key(),
             self.cluster.key(),
@@ -278,6 +288,7 @@ pub struct ScenarioMatrix {
     clusters: Vec<ClusterSpec>,
     seeds: Vec<u64>,
     cases: Vec<(WorkloadSpec, ClusterSpec)>,
+    replans: Vec<ReplanPolicy>,
 }
 
 impl ScenarioMatrix {
@@ -324,6 +335,14 @@ impl ScenarioMatrix {
         self
     }
 
+    /// Add one replan-cadence axis value (crossed with everything else,
+    /// innermost in cell order). An empty axis means `[none]` — the
+    /// pre-replan matrix, cell for cell.
+    pub fn replan(mut self, policy: ReplanPolicy) -> ScenarioMatrix {
+        self.replans.push(policy);
+        self
+    }
+
     /// The effective (workload, cluster) columns: explicit cases first,
     /// then the cartesian product of the independent axes.
     pub fn columns(&self) -> Vec<(WorkloadSpec, ClusterSpec)> {
@@ -344,9 +363,20 @@ impl ScenarioMatrix {
         }
     }
 
+    fn replan_values(&self) -> Vec<ReplanPolicy> {
+        if self.replans.is_empty() {
+            vec![ReplanPolicy::None]
+        } else {
+            self.replans.clone()
+        }
+    }
+
     /// Number of cells the matrix expands to.
     pub fn len(&self) -> usize {
-        self.columns().len() * self.schedulers.len() * self.seed_values().len()
+        self.columns().len()
+            * self.schedulers.len()
+            * self.seed_values().len()
+            * self.replan_values().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -354,21 +384,27 @@ impl ScenarioMatrix {
     }
 
     /// Expand into cells. Ordering contract (callers aggregate by index
-    /// arithmetic): columns outermost, then schedulers, then seeds — i.e.
-    /// cell `(ci, si, ki)` lives at index
-    /// `ci * (num_schedulers * num_seeds) + si * num_seeds + ki`.
+    /// arithmetic): columns outermost, then schedulers, then seeds, then
+    /// replan policies — i.e. with a single-valued replan axis (the
+    /// default), cell `(ci, si, ki)` lives at index
+    /// `ci * (num_schedulers * num_seeds) + si * num_seeds + ki`, exactly
+    /// as before the replan axis existed.
     pub fn cells(&self) -> Vec<Scenario> {
         let seeds = self.seed_values();
+        let replans = self.replan_values();
         let mut out = Vec::with_capacity(self.len());
         for (w, c) in self.columns() {
             for s in &self.schedulers {
                 for &seed in &seeds {
-                    out.push(Scenario {
-                        scheduler: s.clone(),
-                        workload: w,
-                        cluster: c.clone(),
-                        seed,
-                    });
+                    for &replan in &replans {
+                        out.push(Scenario {
+                            scheduler: s.clone(),
+                            workload: w,
+                            cluster: c.clone(),
+                            seed,
+                            replan,
+                        });
+                    }
                 }
             }
         }
@@ -396,6 +432,17 @@ mod tests {
         assert_eq!(cells.len(), 24);
         let keys: BTreeSet<String> = cells.iter().map(|c| c.key()).collect();
         assert_eq!(keys.len(), 24, "cell keys must be unique");
+
+        // the replan axis crosses everything (innermost) and keeps keys
+        // unique across policies
+        let m = m.replan(ReplanPolicy::None).replan(ReplanPolicy::Every(2));
+        assert_eq!(m.len(), 48);
+        let cells = m.cells();
+        assert_eq!(cells[0].replan, ReplanPolicy::None);
+        assert_eq!(cells[1].replan, ReplanPolicy::Every(2));
+        assert_eq!(cells[0].seed, cells[1].seed, "replan is the innermost axis");
+        let keys: BTreeSet<String> = cells.iter().map(|c| c.key()).collect();
+        assert_eq!(keys.len(), 48);
     }
 
     #[test]
@@ -448,8 +495,13 @@ mod tests {
             workload: WorkloadSpec::synthetic(50, 20, 1000),
             cluster: ClusterSpec::homogeneous(20),
             seed: 2,
+            replan: ReplanPolicy::None,
         };
         assert_eq!(s.key(), "pd-ors|synth-i50-t20-mixD-b1000|homog-h20|seed2");
+        // the replan axis gets its own trailing token; the default policy
+        // leaves pre-existing keys untouched
+        let r = Scenario { replan: ReplanPolicy::Every(4), ..s.clone() };
+        assert_eq!(r.key(), "pd-ors|synth-i50-t20-mixD-b1000|homog-h20|seed2|re4");
         let t = Scenario { cluster: ClusterSpec::skewed(20, 2.0), ..s.clone() };
         assert_ne!(s.key(), t.key());
         let u = Scenario {

@@ -30,6 +30,9 @@ pub struct CellRecord {
     pub jobs: usize,
     pub admitted: usize,
     pub completed: usize,
+    /// Jobs whose plan an elastic replan round changed (0 with
+    /// `replan = none`; deterministic, so part of the metrics line).
+    pub replanned: usize,
     pub total_utility: f64,
     pub median_training_time: f64,
     /// Solver diagnostics (zeros for non-θ policies; see
@@ -52,6 +55,7 @@ impl CellRecord {
             ("jobs", json::num(self.jobs as f64)),
             ("admitted", json::num(self.admitted as f64)),
             ("completed", json::num(self.completed as f64)),
+            ("replanned", json::num(self.replanned as f64)),
             ("total_utility", json::num(self.total_utility)),
             ("median_training_time", json::num(self.median_training_time)),
         ]
@@ -101,6 +105,8 @@ impl CellRecord {
             jobs: num_field("jobs")? as usize,
             admitted: num_field("admitted")? as usize,
             completed: num_field("completed")? as usize,
+            // tolerate pre-replan lines without the field
+            replanned: opt_u64(v, "replanned") as usize,
             total_utility: num_field("total_utility")?,
             median_training_time: num_field("median_training_time")?,
             // tolerate older/foreign lines without the diagnostic fields
@@ -269,6 +275,7 @@ mod tests {
             jobs: 10,
             admitted: 7,
             completed: 6,
+            replanned: 2,
             total_utility: utility,
             median_training_time: 4.5,
             theta_solves: 200,

@@ -1,0 +1,198 @@
+//! Property tests over the admission stack (PR 5 satellite): across
+//! random jobs × every ZOO scheduler × homogeneous/skewed clusters —
+//! with and without elastic re-planning — the `AllocLedger` never
+//! exceeds per-slot per-machine capacity, no committed schedule leaves
+//! `[arrival, horizon)`, and the credited total utility equals the sum
+//! of the per-job completion credits. 256 seeded cases per scheduler
+//! (`testkit::check` reports the failing case seed for reproduction).
+
+use std::collections::BTreeMap;
+
+use dmlrs::prop_assert;
+use dmlrs::sched::registry::{SchedulerRegistry, SchedulerSpec};
+use dmlrs::sched::replan::{run_replan_pass, ReplanPolicy};
+use dmlrs::sim::{AdmissionCore, AdmissionOutcome};
+use dmlrs::testkit;
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::{paper_cluster, paper_cluster_skewed};
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+const CASES: usize = 256;
+
+/// Drive one randomized scenario through the real admission stack
+/// (AdmissionCore + optional replan rounds, exactly the engine's per-slot
+/// order) and check the invariants after every mutation.
+fn drive_case(rng: &mut Rng, key: &str) -> Result<(), String> {
+    // small random shapes keep 256 cases per scheduler fast while still
+    // spanning machine counts, skew, horizons, and workload sizes
+    let machines = rng.range_usize(2, 6);
+    let horizon = rng.range_usize(6, 12);
+    let num_jobs = rng.range_usize(3, 8);
+    let skewed = rng.chance(0.5);
+    let replan = if rng.chance(0.5) {
+        ReplanPolicy::Every(rng.range_usize(2, 5))
+    } else {
+        ReplanPolicy::None
+    };
+    let cluster = if skewed {
+        paper_cluster_skewed(machines, 2.0)
+    } else {
+        paper_cluster(machines)
+    };
+    let workload_seed = rng.next_u64();
+    let jobs = synthetic_jobs(
+        &SynthConfig::paper(num_jobs, horizon, MIX_DEFAULT),
+        &mut Rng::new(workload_seed),
+    );
+
+    let mut spec = SchedulerSpec::new(key).with_seed(rng.next_u64() & 0xffff);
+    // trimmed solver knobs: the invariants do not depend on resolution
+    spec.pdors.dp_units = 12;
+    spec.pdors.attempts = 8;
+    let reg = SchedulerRegistry::builtin();
+    let mut sched =
+        reg.build(&spec, &jobs, &cluster, horizon).map_err(|e| e.to_string())?;
+
+    let mut core = AdmissionCore::new(&cluster, horizon);
+    if replan.is_enabled() && sched.replan_capable() {
+        core.set_replan_tracking(true);
+    }
+
+    // planned[job] = utility the pending table should eventually credit
+    let mut planned: BTreeMap<usize, f64> = BTreeMap::new();
+    let mut pending: Vec<Vec<(usize, f64)>> = vec![Vec::new(); horizon];
+    let mut slot_credit = 0.0; // utilities of slot-driven completions
+    let mut credited = 0.0; // everything actually credited, engine order
+    let mut next = 0usize;
+
+    let check_capacity = |core: &AdmissionCore, when: &str| -> Result<(), String> {
+        let ledger = core.ledger();
+        for t in 0..horizon {
+            for h in 0..ledger.num_machines() {
+                if !ledger.used(t, h).fits_within(ledger.capacity(h), 1e-6) {
+                    return Err(format!(
+                        "{when}: slot {t} machine {h} over capacity \
+                         (used {:?}, cap {:?})",
+                        ledger.used(t, h),
+                        ledger.capacity(h)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    };
+
+    for t in 0..horizon {
+        if replan.fires_at(t) {
+            let report = run_replan_pass(&mut core, sched.as_mut(), t);
+            for r in &report.records {
+                if let Some(of) = r.old_finish {
+                    prop_assert!(of.slot < horizon, "stale finish beyond horizon");
+                    pending[of.slot].retain(|&(id, _)| id != r.job_id);
+                }
+                planned.remove(&r.job_id);
+                if let Some(nf) = r.new_finish {
+                    prop_assert!(
+                        nf.slot < horizon,
+                        "replanned completion {} beyond horizon {horizon}",
+                        nf.slot
+                    );
+                    prop_assert!(
+                        nf.slot >= t,
+                        "replanned completion {} before the boundary {t}",
+                        nf.slot
+                    );
+                    pending[nf.slot].push((r.job_id, nf.utility));
+                    planned.insert(r.job_id, nf.utility);
+                }
+            }
+            check_capacity(&core, &format!("after replan round at t={t}"))?;
+        }
+
+        while next < jobs.len() && jobs[next].arrival <= t {
+            let job = &jobs[next];
+            next += 1;
+            if let AdmissionOutcome::Admitted { schedule, finish, .. } =
+                core.submit(sched.as_mut(), job)
+            {
+                prop_assert!(
+                    schedule.respects_arrival(job),
+                    "job {} placed before its arrival {}",
+                    job.id,
+                    job.arrival
+                );
+                prop_assert!(
+                    schedule.respects_worker_cap(job),
+                    "job {} exceeds its worker cap",
+                    job.id
+                );
+                prop_assert!(
+                    schedule.slots.iter().all(|s| s.t < horizon),
+                    "job {} scheduled beyond the horizon",
+                    job.id
+                );
+                if let Some(f) = finish {
+                    prop_assert!(f.slot < horizon, "finish beyond horizon");
+                    pending[f.slot].push((job.id, f.utility));
+                    planned.insert(job.id, f.utility);
+                }
+            }
+            check_capacity(&core, &format!("after admitting job {}", job.id))?;
+        }
+
+        for g in core.run_slot(sched.as_mut(), t) {
+            if let Some(f) = g.finish {
+                slot_credit += f.utility;
+                credited += f.utility;
+            }
+        }
+        check_capacity(&core, &format!("after slot {t} grants"))?;
+
+        for (_, u) in std::mem::take(&mut pending[t]) {
+            credited += u;
+        }
+    }
+
+    // total utility == Σ admitted-job credits: every planned completion
+    // (as updated by the replan rounds) plus every slot-driven finish
+    let expected: f64 = planned.values().sum::<f64>() + slot_credit;
+    prop_assert!(
+        (credited - expected).abs() <= 1e-6 * (1.0 + expected.abs()),
+        "utility accounting drift: credited {credited}, expected {expected} \
+         (replan {replan:?})"
+    );
+    prop_assert!(
+        core.ledger().within_capacity(1e-6),
+        "final ledger exceeds capacity"
+    );
+    Ok(())
+}
+
+fn check_scheduler(key: &'static str, base_seed: u64) {
+    testkit::check(key, base_seed, CASES, |rng| drive_case(rng, key));
+}
+
+#[test]
+fn ledger_invariants_pd_ors() {
+    check_scheduler("pd-ors", 0xA1);
+}
+
+#[test]
+fn ledger_invariants_oasis() {
+    check_scheduler("oasis", 0xA2);
+}
+
+#[test]
+fn ledger_invariants_fifo() {
+    check_scheduler("fifo", 0xA3);
+}
+
+#[test]
+fn ledger_invariants_drf() {
+    check_scheduler("drf", 0xA4);
+}
+
+#[test]
+fn ledger_invariants_dorm() {
+    check_scheduler("dorm", 0xA5);
+}

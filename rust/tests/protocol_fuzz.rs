@@ -1,0 +1,222 @@
+//! Protocol fuzz hardening (PR 5 satellite): the admission daemon must
+//! answer every malformed NDJSON request with `"ok":false` and an error —
+//! and never panic, kill the connection's request/response pairing, or
+//! desync the scheduler-core thread. Cases are seeded `testkit`
+//! mutations of a valid `submit` line (truncations, byte flips, interior
+//! NULs, wrong types, unknown ops, oversized numbers) plus a fixed corpus
+//! of known-nasty lines.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use dmlrs::jobs::test_support::test_job;
+use dmlrs::service::{start_daemon, synthetic_service_config, DaemonConfig, Request};
+use dmlrs::testkit;
+use dmlrs::util::json::Json;
+use dmlrs::util::Rng;
+
+/// A valid submit line to mutate.
+fn valid_submit_line() -> String {
+    Request::Submit { job: test_job(1) }.to_line()
+}
+
+/// Seeded mutation of a valid request line. Never returns bytes that
+/// would split into multiple protocol lines (no interior `\n`/`\r`), and
+/// never an all-whitespace line (the daemon ignores those by design).
+fn mutate(rng: &mut Rng) -> Vec<u8> {
+    let base = valid_submit_line().into_bytes();
+    let mut out = base.clone();
+    match rng.range_usize(0, 5) {
+        // truncate mid-JSON
+        0 => {
+            let cut = rng.range_usize(1, out.len() - 1);
+            out.truncate(cut);
+        }
+        // flip a random byte to a random value
+        1 => {
+            let pos = rng.range_usize(0, out.len() - 1);
+            out[pos] = (rng.range_u64(0, 255)) as u8;
+        }
+        // interior NUL
+        2 => {
+            let pos = rng.range_usize(0, out.len() - 1);
+            out.insert(pos, 0u8);
+        }
+        // unknown / mistyped op
+        3 => {
+            out = format!("{{\"op\":\"x{}\"}}", rng.next_u64()).into_bytes();
+        }
+        // oversized numbers inside the job payload
+        4 => {
+            let line = String::from_utf8_lossy(&base)
+                .replace("\"samples\":", "\"samples\":1e999,\"x\":");
+            out = line.into_bytes();
+        }
+        // valid JSON, wrong shapes
+        _ => {
+            let shapes = ["{\"op\":5}", "[1,2,3]", "\"tick\"", "{}", "17"];
+            out = shapes[rng.range_usize(0, shapes.len() - 1)].as_bytes().to_vec();
+        }
+    }
+    // keep it one protocol line
+    for b in out.iter_mut() {
+        if *b == b'\n' || *b == b'\r' {
+            *b = b'X';
+        }
+    }
+    if out.iter().all(|b| b.is_ascii_whitespace()) {
+        out = b"x".to_vec();
+    }
+    out
+}
+
+/// Parser-level fuzz: `Request::parse` must return Ok or Err — never
+/// panic — on arbitrary mutations.
+#[test]
+fn request_parse_never_panics() {
+    testkit::check("request-parse-fuzz", 0xF0, 512, |rng| {
+        let bytes = mutate(rng);
+        let line = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = Request::parse(&line); // Ok or Err both fine; no panic
+        Ok(())
+    });
+}
+
+/// Oversized and non-finite numbers must be rejected at the codec
+/// boundary, not saturated into the scheduler core.
+#[test]
+fn codec_rejects_hostile_numbers() {
+    let cases = [
+        ("{\"op\":\"submit\",\"job\":{\"id\":1e999}}", "finite"),
+        ("{\"op\":\"submit\",\"job\":{\"id\":-1}}", "≥ 0"),
+    ];
+    for (line, needle) in cases {
+        let e = Request::parse(line).unwrap_err();
+        assert!(e.contains(needle), "{line}: {e}");
+    }
+    // a full job with one poisoned field
+    for (field, bad) in [
+        ("\"samples\":", "\"samples\":-5,\"x\":"),
+        ("\"gamma\":", "\"gamma\":0,\"x\":"),
+        ("\"b_int\":", "\"b_int\":1e999,\"x\":"),
+        ("\"batch\":", "\"batch\":0,\"x\":"),
+    ] {
+        let line = valid_submit_line().replace(field, bad);
+        assert!(
+            Request::parse(&line).is_err(),
+            "poisoned {field} accepted: {line}"
+        );
+    }
+    // tau and grad_size_mb are each allowed to be 0 — but not both, or
+    // the per-sample time hits 0 and the speed model divides by it
+    let line = valid_submit_line()
+        .replace("\"tau\":", "\"tau\":0,\"x\":")
+        .replace("\"grad_size_mb\":", "\"grad_size_mb\":0,\"y\":");
+    let e = Request::parse(&line).unwrap_err();
+    assert!(e.contains("per-sample"), "{e}");
+    // the untouched valid line still parses
+    assert!(Request::parse(&valid_submit_line()).is_ok());
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to daemon");
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { reader, stream }
+    }
+
+    fn send_bytes(&mut self, bytes: &[u8]) -> String {
+        self.stream.write_all(bytes).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        assert!(resp.ends_with('\n'), "daemon closed mid-response: {resp:?}");
+        resp
+    }
+}
+
+/// End-to-end fuzz: one live daemon, one connection. Every malformed
+/// line gets exactly one `"ok":false` response, and an immediately
+/// following `status` round-trip proves the connection and the core are
+/// still in sync.
+#[test]
+fn daemon_survives_malformed_lines_without_desync() {
+    let cfg = DaemonConfig::new(synthetic_service_config("pd-ors", 1, 4, 8, 8));
+    let handle = start_daemon(cfg).expect("daemon starts");
+    let mut client = Client::connect(handle.addr);
+
+    let fixed: Vec<Vec<u8>> = [
+        "not json at all",
+        "{\"op\":\"fly\"}",
+        "{\"op\":5}",
+        "{}",
+        "[1,2,3]",
+        "\"status\"",
+        "{\"op\":\"submit\"}",
+        "{\"op\":\"submit\",\"job\":{}}",
+        "{\"op\":\"submit\",\"job\":{\"id\":1e999}}",
+        "{\"op\":\"submit\",\"job\":17}",
+        "{\"op\"",
+        "\u{7f}\u{1}garbage\u{2}",
+    ]
+    .into_iter()
+    .map(|s| s.as_bytes().to_vec())
+    .collect();
+    // interior NUL (not expressible via &str literals above cleanly)
+    let mut with_nul = b"{\"op\":\"st".to_vec();
+    with_nul.push(0);
+    with_nul.extend_from_slice(b"atus\"}");
+
+    let mut seeded = Vec::new();
+    let mut meta = Rng::new(0xFACE);
+    for _ in 0..64 {
+        let mut rng = Rng::new(meta.next_u64());
+        seeded.push(mutate(&mut rng));
+    }
+
+    for (i, bytes) in
+        fixed.iter().chain(std::iter::once(&with_nul)).chain(seeded.iter()).enumerate()
+    {
+        let resp = client.send_bytes(bytes);
+        let v = Json::parse(resp.trim()).unwrap_or_else(|e| {
+            panic!("case {i}: daemon answered non-JSON {resp:?}: {e}")
+        });
+        // a mutation may accidentally stay valid; what matters is a
+        // well-formed tagged response either way
+        let ok = v.get("ok").expect("response carries ok");
+        if ok == &Json::Bool(false) {
+            assert!(v.get("error").is_some(), "case {i}: ok:false without error");
+        }
+        // desync probe: the very next request must answer correctly
+        let status = client.send_bytes(b"{\"op\":\"status\"}");
+        let sv = Json::parse(status.trim()).expect("status is JSON");
+        assert_eq!(sv.get("ok"), Some(&Json::Bool(true)), "case {i}: desynced");
+        assert!(sv.get("slot").is_some(), "case {i}: status lost its fields");
+    }
+
+    // a half-written line followed by connection close must not take the
+    // daemon down ...
+    {
+        let mut half = Client::connect(handle.addr);
+        half.stream.write_all(b"{\"op\":\"submit\",\"job\":{\"id\"").unwrap();
+        half.stream.flush().unwrap();
+        drop(half);
+    }
+    // ... a fresh connection still gets served
+    let mut again = Client::connect(handle.addr);
+    let resp = again.send_bytes(b"{\"op\":\"tick\"}");
+    assert!(resp.contains("\"ok\":true"), "{resp}");
+    let resp = again.send_bytes(b"{\"op\":\"shutdown\"}");
+    assert!(resp.contains("\"draining\":true"), "{resp}");
+    // (a mutation can accidentally stay a *valid* submit, so the core may
+    // have seen a few jobs — what matters is that it drained cleanly and
+    // the one explicit tick is accounted for)
+    let report = handle.join().expect("clean drain");
+    assert_eq!(report.slot, 1, "exactly one tick reached the core");
+}

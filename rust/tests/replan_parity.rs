@@ -1,0 +1,247 @@
+//! The replan-off parity contract (PR 5): with `replan = none` the whole
+//! stack is byte-identical to the pre-replan system — same schedules,
+//! metrics, RNG stream, and solver counters — across the registry ZOO on
+//! homogeneous and skewed clusters. Replan rounds around a
+//! replan-incapable scheduler are likewise a strict no-op. And with
+//! replan *enabled*, the engine and the service core stay in lockstep
+//! (the shared-`AdmissionCore` contract extends to the replan pass).
+
+use dmlrs::cluster::Cluster;
+use dmlrs::jobs::{Job, Schedule, SlotPlacement};
+use dmlrs::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
+use dmlrs::sched::replan::ReplanPolicy;
+use dmlrs::service::{ServiceConfig, ServiceCore};
+use dmlrs::sim::{
+    ArrivalDecision, Scheduler, SimEngine, SimResult, TraceObserver,
+};
+use dmlrs::sweep::{ClusterSpec, WorkloadSpec};
+use dmlrs::util::json::Json;
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::{paper_cluster, paper_cluster_skewed};
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+const JOBS: usize = 12;
+const HORIZON: usize = 14;
+const WORKLOAD_SEED: u64 = 21;
+const SCHED_SEED: u64 = 4;
+
+fn workload() -> Vec<Job> {
+    let mut rng = Rng::new(WORKLOAD_SEED);
+    synthetic_jobs(&SynthConfig::paper(JOBS, HORIZON, MIX_DEFAULT), &mut rng)
+}
+
+fn clusters() -> Vec<(&'static str, Cluster)> {
+    vec![
+        ("homogeneous", paper_cluster(8)),
+        ("skewed", paper_cluster_skewed(8, 2.0)),
+    ]
+}
+
+/// Run `key` through the engine. `replan: None` leaves the builder knob
+/// untouched (the pre-replan call path); `Some(policy)` sets it
+/// explicitly.
+fn run(key: &str, cluster: &Cluster, replan: Option<ReplanPolicy>) -> SimResult {
+    let reg = SchedulerRegistry::builtin();
+    let jobs = workload();
+    let spec = SchedulerSpec::new(key).with_seed(SCHED_SEED);
+    let mut sched = reg.build(&spec, &jobs, cluster, HORIZON).unwrap();
+    let mut builder =
+        SimEngine::builder().jobs(&jobs).cluster(cluster).horizon(HORIZON);
+    if let Some(p) = replan {
+        builder = builder.replan(p);
+    }
+    builder.run(sched.as_mut())
+}
+
+#[test]
+fn replan_none_is_byte_identical_across_the_zoo() {
+    for (shape, cluster) in clusters() {
+        for key in ZOO {
+            let default = run(key, &cluster, None);
+            let explicit_off = run(key, &cluster, Some(ReplanPolicy::None));
+            // full equality — outcomes, utilities, training times, AND the
+            // diagnostic solver counters (an untouched RNG/solve stream)
+            assert_eq!(default, explicit_off, "{key} on {shape}");
+            assert_eq!(explicit_off.replanned, 0, "{key} on {shape}");
+        }
+    }
+}
+
+#[test]
+fn replan_rounds_are_noops_for_incapable_schedulers() {
+    for (shape, cluster) in clusters() {
+        for key in ["fifo", "drf", "dorm"] {
+            let off = run(key, &cluster, None);
+            let on = run(key, &cluster, Some(ReplanPolicy::Every(2)));
+            assert_eq!(off, on, "{key} on {shape}: replan must be a strict no-op");
+            assert_eq!(on.replanned, 0, "{key} on {shape}");
+        }
+    }
+}
+
+#[test]
+fn replan_enabled_service_matches_engine() {
+    // With an active cadence, driving the same arrival sequence through
+    // the ServiceCore (submit + tick) and through SimEngine must agree on
+    // every decision, the replanned count, utility, and solver counters.
+    let horizon = 12usize;
+    let policy = ReplanPolicy::Every(3);
+    let workload = WorkloadSpec::synthetic(16, horizon, 0);
+    let cluster_spec = ClusterSpec::homogeneous(6);
+    for key in ["pd-ors", "oasis", "dorm"] {
+        let seed = 5u64;
+        let jobs = workload.jobs(seed);
+        let cluster = cluster_spec.build();
+        let reg = SchedulerRegistry::builtin();
+        let spec = SchedulerSpec::new(key).with_seed(seed).with_replan(policy);
+        let mut sched = reg.build(&spec, &jobs, &cluster, horizon).unwrap();
+        let sim = SimEngine::builder()
+            .jobs(&jobs)
+            .cluster(&cluster)
+            .horizon(horizon)
+            .replan(policy)
+            .run(sched.as_mut());
+
+        let mut core = ServiceCore::new(ServiceConfig {
+            scheduler: SchedulerSpec::new(key).with_seed(seed).with_replan(policy),
+            cluster: cluster_spec.clone(),
+            workload,
+        })
+        .unwrap();
+        let mut next = 0usize;
+        for t in 0..horizon {
+            while next < jobs.len() && jobs[next].arrival <= t {
+                let resp = core.submit(jobs[next].clone());
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{key}");
+                let id = resp.get("job_id").unwrap().as_usize().unwrap();
+                let decision =
+                    resp.get("decision").and_then(Json::as_str).unwrap().to_string();
+                let outcome = &sim.outcomes[id];
+                match decision.as_str() {
+                    "admitted" => assert!(outcome.admitted, "{key}: job {id}"),
+                    "rejected" => assert!(!outcome.admitted, "{key}: job {id}"),
+                    "deferred" => {}
+                    other => panic!("unknown decision {other}"),
+                }
+                next += 1;
+            }
+            core.tick();
+        }
+        let report = core.report();
+        assert_eq!(report.submitted, jobs.len(), "{key}");
+        assert_eq!(report.replanned, sim.replanned, "{key}: replan lockstep");
+        assert_eq!(report.completed, sim.completed, "{key}");
+        assert!(
+            (report.total_utility - sim.total_utility).abs() < 1e-9,
+            "{key}: utility diverged: service {} vs engine {}",
+            report.total_utility,
+            sim.total_utility
+        );
+        assert_eq!(report.solver, sim.solver, "{key}: same solver work");
+    }
+}
+
+/// Deterministic end-to-end check of the replan mechanics through the
+/// engine: a toy arrival-driven scheduler parks every job far in the
+/// future; each replan round pulls not-yet-started plans to the current
+/// slot, so completions move earlier and utility can only grow.
+struct Procrastinator;
+
+impl Procrastinator {
+    fn plan(job: &Job, t: usize) -> Schedule {
+        Schedule {
+            job_id: job.id,
+            slots: vec![SlotPlacement { t, placements: vec![(0, 2, 1)] }],
+        }
+    }
+}
+
+impl Scheduler for Procrastinator {
+    fn name(&self) -> String {
+        "procrastinator".into()
+    }
+
+    fn on_arrival(
+        &mut self,
+        job: &Job,
+        ledger: &mut dmlrs::cluster::AllocLedger,
+    ) -> ArrivalDecision {
+        let s = Procrastinator::plan(job, ledger.horizon() - 1);
+        ledger.commit(job, &s);
+        ArrivalDecision::Admit(s)
+    }
+
+    fn replan_capable(&self) -> bool {
+        true
+    }
+
+    fn replan_job(
+        &mut self,
+        job: &Job,
+        old: Option<&Schedule>,
+        t: usize,
+        ledger: &mut dmlrs::cluster::AllocLedger,
+    ) -> Option<Schedule> {
+        // only move plans that are not already at the current boundary
+        if old.is_some_and(|o| o.slots.first().is_some_and(|s| s.t == t)) {
+            return None;
+        }
+        let s = Procrastinator::plan(job, t);
+        ledger.commit(job, &s);
+        Some(s)
+    }
+}
+
+#[test]
+fn engine_replan_moves_completions_and_recredits_utility() {
+    let cluster =
+        Cluster::homogeneous(1, dmlrs::cluster::ResVec::new([16.0, 32.0, 64.0, 32.0]));
+    let horizon = 10usize;
+    let mut jobs = Vec::new();
+    for (i, arrival) in [0usize, 1, 2].into_iter().enumerate() {
+        let mut j = dmlrs::jobs::test_support::test_job(i);
+        j.arrival = arrival;
+        j.epochs = 1;
+        j.samples = 100.0; // one 2-worker slot covers it
+        jobs.push(j);
+    }
+
+    // replan off: everything completes at the last slot
+    let off = SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(&cluster)
+        .horizon(horizon)
+        .run(&mut Procrastinator);
+    assert_eq!(off.replanned, 0);
+    assert_eq!(off.completed, 3);
+    assert!(off.outcomes.iter().all(|o| o.completion == Some(horizon - 1)));
+
+    // replan every 4: the t=4 round pulls all three plans to slot 4
+    let mut trace = TraceObserver::new();
+    let on = SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(&cluster)
+        .horizon(horizon)
+        .replan(ReplanPolicy::Every(4))
+        .observer(&mut trace)
+        .run(&mut Procrastinator);
+    assert_eq!(on.replanned, 3, "all three parked plans must move");
+    assert_eq!(on.completed, 3);
+    assert!(
+        on.outcomes.iter().all(|o| o.completion == Some(4)),
+        "completions must move to the replan boundary: {:?}",
+        on.outcomes
+    );
+    assert!(
+        on.total_utility >= off.total_utility,
+        "earlier completions cannot earn less (sigmoid is non-increasing): \
+         on={} off={}",
+        on.total_utility,
+        off.total_utility
+    );
+    assert!(
+        trace.lines().iter().any(|l| l.contains("replanned")),
+        "trace must narrate the replan round: {:?}",
+        trace.lines()
+    );
+}

@@ -13,6 +13,7 @@ use std::net::{SocketAddr, TcpStream};
 
 use dmlrs::jobs::Job;
 use dmlrs::sched::registry::{SchedulerSpec, ZOO};
+use dmlrs::sched::replan::ReplanPolicy;
 use dmlrs::service::{
     start_daemon, DaemonConfig, Request, ServiceConfig, ServiceCore,
 };
@@ -183,4 +184,92 @@ fn daemon_matches_sim_engine_across_the_zoo() {
         );
         assert_eq!(report.solver, sim.solver, "{key}: same solver work");
     }
+}
+
+/// PR 5 crash injection: a daemon dies mid-write of a `replan` op-log
+/// record. `--recover` must repair the journal via the tolerant JSONL
+/// loader (dropping only the in-flight record), replay the surviving
+/// prefix — including the journaled replan rounds — to a byte-identical
+/// ledger, and resume appending cleanly.
+#[test]
+fn recover_repairs_oplog_truncated_mid_replan_record() {
+    let path = tmp_path("replan_crash");
+    let _ = std::fs::remove_file(&path);
+    let service = ServiceConfig {
+        scheduler: SchedulerSpec::new("pd-ors")
+            .with_seed(7)
+            .with_replan(ReplanPolicy::Every(2)),
+        cluster: ClusterSpec::homogeneous(6),
+        workload: WorkloadSpec::synthetic(10, 10, 0),
+    };
+    let jobs = service.workload.jobs(7);
+    let expected = {
+        let mut core = ServiceCore::new(service.clone()).unwrap();
+        core.attach_log(&path).unwrap();
+        let mut next = 0usize;
+        for t in 0..6usize {
+            while next < jobs.len() && jobs[next].arrival <= t {
+                core.submit(jobs[next].clone());
+                next += 1;
+            }
+            if t == 3 {
+                // a wire-triggered round on top of the every:2 cadence —
+                // both kinds must survive the crash
+                let resp = core.replan();
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            }
+            core.tick();
+        }
+        core.report()
+    };
+
+    // crash mid-replan-record: a truncated line with no newline
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"op\":\"replan\",\"slot\":6,\"repla").unwrap();
+    }
+
+    let mut recovered = ServiceCore::recover(service.clone(), &path).unwrap();
+    assert_eq!(
+        recovered.report(),
+        expected,
+        "replay after repair must reproduce the pre-crash state exactly"
+    );
+
+    // the repaired log accepts new ops (including another replan) and
+    // replays again cleanly
+    recovered.replan();
+    recovered.tick();
+    let after = recovered.report();
+    drop(recovered);
+    let again = ServiceCore::recover(service, &path).unwrap();
+    assert_eq!(again.report(), after);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The op-log config header records an enabled replan cadence; replaying
+/// it into a daemon configured without one is config drift and must be
+/// refused.
+#[test]
+fn recover_rejects_replan_config_drift() {
+    let path = tmp_path("replan_drift");
+    let _ = std::fs::remove_file(&path);
+    let with_replan = ServiceConfig {
+        scheduler: SchedulerSpec::new("pd-ors")
+            .with_seed(3)
+            .with_replan(ReplanPolicy::Every(4)),
+        cluster: ClusterSpec::homogeneous(4),
+        workload: WorkloadSpec::synthetic(6, 8, 0),
+    };
+    {
+        let mut core = ServiceCore::new(with_replan.clone()).unwrap();
+        core.attach_log(&path).unwrap();
+        core.tick();
+    }
+    let mut without = with_replan;
+    without.scheduler.replan = ReplanPolicy::None;
+    let e = ServiceCore::recover(without, &path).unwrap_err();
+    assert!(e.to_string().contains("replan"), "{e}");
+    let _ = std::fs::remove_file(&path);
 }

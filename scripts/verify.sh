@@ -114,4 +114,44 @@ for field in p99_ms p50_ms p95_ms achieved_rate; do
     fi
 done
 
+echo "== replan bench (diurnal quick sweep, replan on vs off) =="
+# Run the quick primal-dual sweep on a churny diurnal workload with and
+# without elastic re-planning and emit BENCH_replan.json. The replan run
+# must actually move plans: zero replanned jobs across the whole matrix
+# means the subsystem is wired off, which is a failure.
+REPLAN_OFF=target/bench_replan_off.jsonl
+REPLAN_ON=target/bench_replan_on.jsonl
+rm -f "$REPLAN_OFF" "$REPLAN_ON"
+"$BIN" sweep --quick --arrivals diurnal:4 --schedulers pd-ors,oasis --seeds 3 \
+    --jobs "$PAR" --out "$REPLAN_OFF" >/dev/null
+"$BIN" sweep --quick --arrivals diurnal:4 --schedulers pd-ors,oasis --seeds 3 \
+    --replan every:2 --jobs "$PAR" --out "$REPLAN_ON" >/dev/null
+# sum a numeric field over a JSONL file
+sum_field() {
+    awk -v f="\"$2\":" '{
+        n = index($0, f);
+        if (n) { s = substr($0, n + length(f)); sub(/[,}].*/, "", s); total += s }
+    } END { printf "%.6f", total }' "$1"
+}
+OFF_UTIL=$(sum_field "$REPLAN_OFF" total_utility)
+ON_UTIL=$(sum_field "$REPLAN_ON" total_utility)
+ON_REPLANNED=$(sum_field "$REPLAN_ON" replanned | awk '{printf "%.0f", $0}')
+CELLS=$(wc -l < "$REPLAN_ON" | tr -d ' ')
+awk -v off="$OFF_UTIL" -v on="$ON_UTIL" -v moved="$ON_REPLANNED" -v cells="$CELLS" 'BEGIN {
+    gain = (off > 0) ? (on - off) / off : 0;
+    printf "{\"bench\": \"replan_diurnal_quick\", \"cells\": %d, \"replan\": \"every:2\", \"replanned_jobs\": %d, \"utility_replan_off\": %.3f, \"utility_replan_on\": %.3f, \"utility_gain\": %.4f}\n", cells, moved, off, on, gain;
+}' > ../BENCH_replan.json
+cat ../BENCH_replan.json
+if [ "${ON_REPLANNED:-0}" -eq 0 ]; then
+    echo "error: the replan-enabled sweep reported zero replanned jobs" >&2
+    exit 1
+fi
+# acceptance criterion: re-planning must not lose total utility on the
+# diurnal matrix (per-job adoptions are utility-monotone by construction)
+if awk -v off="$OFF_UTIL" -v on="$ON_UTIL" 'BEGIN { exit !(on + 1e-9 < off) }'; then
+    echo "error: replan-on utility ($ON_UTIL) below replan-off ($OFF_UTIL)" >&2
+    exit 1
+fi
+rm -f "$REPLAN_OFF" "$REPLAN_ON"
+
 echo "verify: OK"
