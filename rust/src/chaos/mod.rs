@@ -1,0 +1,376 @@
+//! Deterministic fault injection: machine churn traces.
+//!
+//! A [`ChurnSpec`] describes *how* machines fail — either a seeded
+//! MTBF/MTTR process (`mtbf:40,mttr:8`) or an explicit event list
+//! (`down@3:1,up@7:1`) — and a [`ChurnTrace`] is its fully materialized,
+//! per-slot realization for one cluster shape. The trace is what the
+//! simulation engine and the service core consume: typed
+//! [`ChurnEvent`]s applied at `SlotStart`, *before* replan rounds, so a
+//! failed machine's capacity leaves the
+//! [`AllocLedger`](crate::cluster::AllocLedger) before any planning at
+//! that slot prices it.
+//!
+//! The default [`ChurnSpec::None`] is the byte-identical no-op (no trace
+//! is built, no RNG is drawn, no events fire) — the same contract the
+//! replan and arrival-process axes follow, extended by
+//! `tests/churn_determinism.rs` and `tests/replan_parity.rs`.
+
+use crate::util::Rng;
+
+/// One typed churn event for one machine at one slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// Hard failure: capacity leaves the ledger from this slot on and
+    /// admissions with remaining work on the machine are interrupted
+    /// (migrated or evicted).
+    Down,
+    /// Graceful drain: no *new* work may be planned on the machine from
+    /// this slot on, but committed schedules run to completion.
+    Drain,
+    /// The machine returns to service from this slot on.
+    Rejoin,
+}
+
+impl ChurnEvent {
+    fn key_char(&self) -> char {
+        match self {
+            ChurnEvent::Down => 'd',
+            ChurnEvent::Drain => 'g',
+            ChurnEvent::Rejoin => 'u',
+        }
+    }
+}
+
+/// Declarative churn model, parsed from `--churn` / `[cluster] churn` /
+/// `[sweep] churn`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnSpec {
+    /// No churn — the default, and a strict no-op end to end.
+    None,
+    /// Memoryless failures: while up, a machine fails each slot with
+    /// probability `1/mtbf`; while down, it rejoins with probability
+    /// `1/mttr` (slot-resolution MTBF/MTTR in expectation).
+    Mtbf { mtbf: f64, mttr: f64 },
+    /// Explicit `(slot, machine, event)` list, applied verbatim.
+    Events(Vec<(usize, usize, ChurnEvent)>),
+}
+
+impl Default for ChurnSpec {
+    fn default() -> ChurnSpec {
+        ChurnSpec::None
+    }
+}
+
+impl ChurnSpec {
+    /// Parse a churn spec string:
+    ///
+    /// * `none` / `off` / empty — no churn;
+    /// * `mtbf:<slots>,mttr:<slots>` — the seeded memoryless process;
+    /// * comma-separated `<kind>@<slot>:<machine>` events, with kind one
+    ///   of `down`, `drain`, `up` — e.g. `down@3:1,up@7:1`.
+    pub fn parse(s: &str) -> Result<ChurnSpec, String> {
+        let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() || s == "none" || s == "off" {
+            return Ok(ChurnSpec::None);
+        }
+        if s.contains('@') {
+            let mut events = Vec::new();
+            for part in s.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (kind, rest) = part.split_once('@').ok_or_else(|| {
+                    format!("invalid churn event {part:?} (expected kind@slot:machine)")
+                })?;
+                let event = match kind.trim() {
+                    "down" => ChurnEvent::Down,
+                    "drain" => ChurnEvent::Drain,
+                    "up" => ChurnEvent::Rejoin,
+                    other => {
+                        return Err(format!(
+                            "invalid churn event kind {other:?} \
+                             (expected down|drain|up)"
+                        ))
+                    }
+                };
+                let (slot, machine) = rest.split_once(':').ok_or_else(|| {
+                    format!("invalid churn event {part:?} (expected kind@slot:machine)")
+                })?;
+                let slot = slot
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("invalid churn event slot {slot:?}"))?;
+                let machine = machine
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("invalid churn event machine {machine:?}"))?;
+                events.push((slot, machine, event));
+            }
+            if events.is_empty() {
+                return Err("empty churn event list".to_string());
+            }
+            events.sort_by_key(|&(t, h, _)| (t, h));
+            return Ok(ChurnSpec::Events(events));
+        }
+        let mut mtbf = None;
+        let mut mttr = None;
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part.split_once(':').ok_or_else(|| {
+                format!("invalid churn field {part:?} (expected mtbf:<n>,mttr:<n>)")
+            })?;
+            let value = value.trim().parse::<f64>().map_err(|_| {
+                format!("invalid churn value {:?} in {part:?}", value.trim())
+            })?;
+            if !(value >= 1.0 && value.is_finite()) {
+                return Err(format!("churn {key} must be >= 1 slot (got {value})"));
+            }
+            match key.trim() {
+                "mtbf" => mtbf = Some(value),
+                "mttr" => mttr = Some(value),
+                other => {
+                    return Err(format!(
+                        "invalid churn field {other:?} (expected mtbf|mttr)"
+                    ))
+                }
+            }
+        }
+        match (mtbf, mttr) {
+            (Some(mtbf), Some(mttr)) => Ok(ChurnSpec::Mtbf { mtbf, mttr }),
+            _ => Err(format!(
+                "invalid churn spec {s:?} (expected \"none\", \
+                 \"mtbf:<n>,mttr:<n>\", or a down@slot:machine event list)"
+            )),
+        }
+    }
+
+    /// Is any churn configured at all?
+    pub fn is_enabled(&self) -> bool {
+        !matches!(self, ChurnSpec::None)
+    }
+
+    /// Human-readable form (the inverse of [`ChurnSpec::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            ChurnSpec::None => "none".to_string(),
+            ChurnSpec::Mtbf { mtbf, mttr } => format!("mtbf:{mtbf},mttr:{mttr}"),
+            ChurnSpec::Events(events) => {
+                let parts: Vec<String> = events
+                    .iter()
+                    .map(|&(t, h, e)| {
+                        let kind = match e {
+                            ChurnEvent::Down => "down",
+                            ChurnEvent::Drain => "drain",
+                            ChurnEvent::Rejoin => "up",
+                        };
+                        format!("{kind}@{t}:{h}")
+                    })
+                    .collect();
+                parts.join(",")
+            }
+        }
+    }
+
+    /// Stable identity token for scenario keys (`|ch…`); `None` for the
+    /// default no-churn spec, so every pre-existing store key is
+    /// unchanged.
+    pub fn key_token(&self) -> Option<String> {
+        match self {
+            ChurnSpec::None => None,
+            ChurnSpec::Mtbf { mtbf, mttr } => Some(format!("chm{mtbf}r{mttr}")),
+            ChurnSpec::Events(events) => {
+                let parts: Vec<String> = events
+                    .iter()
+                    .map(|&(t, h, e)| format!("{}{t}m{h}", e.key_char()))
+                    .collect();
+                Some(format!("ch{}", parts.join("-")))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ChurnSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// A fully materialized churn realization: for each slot, the typed
+/// events to apply at `SlotStart`. Generation is deterministic in
+/// `(spec, machines, horizon, seed)` and draws from its own RNG stream,
+/// so the workload and scheduler streams are untouched — the first half
+/// of the `churn = none` byte-identity contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnTrace {
+    /// `events[t]` = the `(machine, event)` list for slot `t`, sorted by
+    /// machine.
+    events: Vec<Vec<(usize, ChurnEvent)>>,
+}
+
+impl ChurnTrace {
+    /// Materialize `spec` for a cluster of `machines` over `horizon`
+    /// slots. Returns `None` for [`ChurnSpec::None`] — callers skip all
+    /// churn bookkeeping in that case.
+    pub fn generate(
+        spec: &ChurnSpec,
+        machines: usize,
+        horizon: usize,
+        seed: u64,
+    ) -> Option<ChurnTrace> {
+        let mut events: Vec<Vec<(usize, ChurnEvent)>> = vec![Vec::new(); horizon];
+        match spec {
+            ChurnSpec::None => return None,
+            ChurnSpec::Mtbf { mtbf, mttr } => {
+                // dedicated stream, decoupled from the scheduler's
+                // Rng::new(seed) by a fixed tweak
+                let mut rng = Rng::new(seed ^ 0xC0FF_EE00_5EED);
+                let p_fail = 1.0 / mtbf;
+                let p_heal = 1.0 / mttr;
+                // never fail the whole cluster: keep machine 0 immortal so
+                // every slot retains some capacity to migrate onto
+                for h in 1..machines {
+                    let mut up = true;
+                    for (t, slot) in events.iter_mut().enumerate() {
+                        if up {
+                            // no failures at t=0: jobs must exist to interrupt
+                            if t > 0 && rng.chance(p_fail) {
+                                up = false;
+                                slot.push((h, ChurnEvent::Down));
+                            }
+                        } else if rng.chance(p_heal) {
+                            up = true;
+                            slot.push((h, ChurnEvent::Rejoin));
+                        }
+                    }
+                }
+                for slot in &mut events {
+                    slot.sort_by_key(|&(h, _)| h);
+                }
+            }
+            ChurnSpec::Events(list) => {
+                for &(t, h, e) in list {
+                    if t < horizon && h < machines {
+                        events[t].push((h, e));
+                    }
+                }
+            }
+        }
+        Some(ChurnTrace { events })
+    }
+
+    /// The `(machine, event)` list to apply at the start of slot `t`.
+    pub fn events_at(&self, t: usize) -> &[(usize, ChurnEvent)] {
+        self.events.get(t).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Total number of events in the trace.
+    pub fn len(&self) -> usize {
+        self.events.iter().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_none_and_empty() {
+        for s in ["", "none", "off", "  NONE "] {
+            assert_eq!(ChurnSpec::parse(s).unwrap(), ChurnSpec::None);
+        }
+        assert!(!ChurnSpec::None.is_enabled());
+        assert_eq!(ChurnSpec::None.key_token(), None);
+    }
+
+    #[test]
+    fn parse_mtbf_round_trip() {
+        let spec = ChurnSpec::parse("mtbf:40,mttr:8").unwrap();
+        assert_eq!(spec, ChurnSpec::Mtbf { mtbf: 40.0, mttr: 8.0 });
+        assert_eq!(ChurnSpec::parse(&spec.label()).unwrap(), spec);
+        assert_eq!(spec.key_token().as_deref(), Some("chm40r8"));
+        assert!(spec.is_enabled());
+    }
+
+    #[test]
+    fn parse_event_list_round_trip() {
+        let spec = ChurnSpec::parse("down@3:1,up@7:1,drain@2:0").unwrap();
+        let ChurnSpec::Events(events) = &spec else { panic!("not events") };
+        // sorted by (slot, machine)
+        assert_eq!(
+            events,
+            &vec![
+                (2, 0, ChurnEvent::Drain),
+                (3, 1, ChurnEvent::Down),
+                (7, 1, ChurnEvent::Rejoin),
+            ]
+        );
+        assert_eq!(ChurnSpec::parse(&spec.label()).unwrap(), spec);
+        assert_eq!(spec.key_token().as_deref(), Some("chg2m0-d3m1-u7m1"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for s in [
+            "mtbf:40",
+            "mttr:8",
+            "mtbf:0,mttr:8",
+            "mtbf:x,mttr:8",
+            "explode@3:1",
+            "down@x:1",
+            "down@3:y",
+            "gibberish",
+        ] {
+            assert!(ChurnSpec::parse(s).is_err(), "{s:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn none_generates_no_trace() {
+        assert!(ChurnTrace::generate(&ChurnSpec::None, 8, 20, 1).is_none());
+    }
+
+    #[test]
+    fn mtbf_trace_is_deterministic_and_well_formed() {
+        let spec = ChurnSpec::parse("mtbf:10,mttr:3").unwrap();
+        let a = ChurnTrace::generate(&spec, 6, 40, 7).unwrap();
+        let b = ChurnTrace::generate(&spec, 6, 40, 7).unwrap();
+        assert_eq!(a, b, "same seed, same trace");
+        let c = ChurnTrace::generate(&spec, 6, 40, 8).unwrap();
+        assert_ne!(a, c, "different seed should realize differently");
+        assert!(!a.is_empty(), "mtbf 10 over 40 slots x 5 machines must fire");
+        // machine 0 is immortal; events alternate Down/Rejoin per machine
+        let mut up = vec![true; 6];
+        for t in 0..40 {
+            for &(h, e) in a.events_at(t) {
+                assert_ne!(h, 0, "machine 0 never churns");
+                match e {
+                    ChurnEvent::Down => {
+                        assert!(up[h], "down while down");
+                        up[h] = false;
+                    }
+                    ChurnEvent::Rejoin => {
+                        assert!(!up[h], "rejoin while up");
+                        up[h] = true;
+                    }
+                    ChurnEvent::Drain => panic!("mtbf traces never drain"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn event_trace_clips_out_of_range() {
+        let spec = ChurnSpec::parse("down@3:1,down@99:1,down@3:42").unwrap();
+        let trace = ChurnTrace::generate(&spec, 4, 10, 0).unwrap();
+        assert_eq!(trace.len(), 1, "out-of-range slot/machine entries drop");
+        assert_eq!(trace.events_at(3), &[(1, ChurnEvent::Down)]);
+    }
+}

@@ -1,5 +1,6 @@
 //! Subcommand implementations.
 
+use crate::chaos::ChurnSpec;
 use crate::cluster::AllocLedger;
 use crate::config::Config;
 use crate::err;
@@ -62,6 +63,20 @@ fn arrival_process(args: &Args, cfg: Option<&Config>) -> Result<ArrivalProcess> 
     match spec {
         Some(s) => ArrivalProcess::parse(&s).map_err(Error::from),
         None => Ok(ArrivalProcess::Alternating),
+    }
+}
+
+/// Parse the `--churn` flag / `cluster.churn` config key (see
+/// [`crate::chaos`]). The default is `ChurnSpec::None` — the strict
+/// no-op.
+fn churn_spec(args: &Args, cfg: Option<&Config>) -> Result<ChurnSpec> {
+    let spec = args
+        .get("churn")
+        .map(str::to_string)
+        .or_else(|| cfg.and_then(|c| c.get("cluster.churn")).map(str::to_string));
+    match spec {
+        Some(s) => ChurnSpec::parse(&s).map_err(Error::from),
+        None => Ok(ChurnSpec::None),
     }
 }
 
@@ -149,6 +164,7 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
     let reg = SchedulerRegistry::builtin();
     let spec = scheduler_spec(args, cfg.as_ref(), seed)?;
     let replan = spec.replan;
+    let churn = churn_spec(args, cfg.as_ref())?;
     let mut sched = reg.build(&spec, &jobs, &cluster, horizon)?;
 
     let mut trace = TraceObserver::new();
@@ -157,7 +173,8 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
         .jobs(&jobs)
         .cluster(&cluster)
         .horizon(horizon)
-        .replan(replan);
+        .replan(replan)
+        .churn(churn.clone(), seed);
     if want_events {
         builder = builder.observer(&mut trace);
     }
@@ -187,6 +204,15 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
     );
     if replan.is_enabled() {
         println!("replan: policy={} changed={}", replan.label(), res.replanned);
+    }
+    if churn.is_enabled() {
+        println!(
+            "churn: spec={} evicted={} migrated={} ftf={:.3}",
+            churn.label(),
+            res.evicted,
+            res.migrated,
+            res.ftf
+        );
     }
     let sv = res.solver;
     println!(
@@ -228,6 +254,10 @@ pub fn cmd_compare(args: &Args) -> Result<()> {
         .seed_list(&[seed]);
     if let Some(r) = args.get("replan") {
         matrix = matrix.replan(ReplanPolicy::parse(r).map_err(Error::from)?);
+    }
+    let churn = churn_spec(args, cfg.as_ref())?;
+    if churn.is_enabled() {
+        matrix = matrix.churn(churn);
     }
 
     let mut store = match args.get("out") {
@@ -285,7 +315,8 @@ fn sweep_matrix(spec: &SweepSpec, cluster_override: Option<ClusterSpec>) -> Scen
     let mut m = ScenarioMatrix::new()
         .schedulers(&keys)
         .seeds(spec.seeds)
-        .replan(spec.replan);
+        .replan(spec.replan)
+        .churn(spec.churn.clone());
     // the arrival process applies to the synthetic workloads (the trace
     // source has its own regenerated arrival process)
     if spec.quick {
@@ -343,6 +374,9 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(r) = args.get("replan") {
         spec.replan = ReplanPolicy::parse(r).map_err(Error::from)?;
     }
+    if let Some(c) = args.get("churn") {
+        spec.churn = ChurnSpec::parse(c).map_err(Error::from)?;
+    }
     if args.bool("fresh") {
         let _ = std::fs::remove_file(&spec.out);
     }
@@ -388,19 +422,31 @@ pub fn cmd_sweep(args: &Args) -> Result<()> {
     }
     println!();
     println!(
-        "{:<8} {:<26} {:<22} {:>5} {:>12} {:>10} {:>12}",
-        "sched", "workload", "cluster", "seeds", "mean_util", "mean_done", "median_time"
+        "{:<8} {:<26} {:<22} {:>5} {:>12} {:>10} {:>12} {:>7} {:>6} {:>6}",
+        "sched",
+        "workload",
+        "cluster",
+        "seeds",
+        "mean_util",
+        "mean_done",
+        "median_time",
+        "ftf",
+        "migr",
+        "evic"
     );
     for row in store.summary() {
         println!(
-            "{:<8} {:<26} {:<22} {:>5} {:>12.2} {:>10.1} {:>12.1}",
+            "{:<8} {:<26} {:<22} {:>5} {:>12.2} {:>10.1} {:>12.1} {:>7.3} {:>6} {:>6}",
             row.scheduler,
             row.workload,
             row.cluster,
             row.seeds,
             row.mean_utility,
             row.mean_completed,
-            row.mean_median_training_time
+            row.mean_median_training_time,
+            row.mean_ftf,
+            row.total_migrated,
+            row.total_evicted
         );
     }
     println!(
@@ -516,7 +562,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     }
     let cluster = ClusterSpec::from_config(&cluster_cfg, machines);
 
-    let mut dcfg = DaemonConfig::new(ServiceConfig { scheduler: spec, cluster, workload });
+    let churn = churn_spec(args, cfg.as_ref())?;
+    let mut dcfg =
+        DaemonConfig::new(ServiceConfig { scheduler: spec, cluster, workload, churn });
     dcfg.addr = args.str_or("addr", "127.0.0.1:7171");
     dcfg.slot_ms = args.u64_or("slot-ms", 0);
     dcfg.queue_cap = args.usize_or("queue", 64);
@@ -526,13 +574,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     crate::service::install_term_handler();
     let svc = &dcfg.service;
     let banner = format!(
-        "scheduler={} cluster={} workload={} slot_ms={} queue={} replan={}",
+        "scheduler={} cluster={} workload={} slot_ms={} queue={} replan={} churn={}",
         svc.scheduler.name,
         svc.cluster.key(),
         svc.workload.key(),
         dcfg.slot_ms,
         dcfg.queue_cap,
-        svc.scheduler.replan.label()
+        svc.scheduler.replan.label(),
+        svc.churn.label()
     );
     let handle = crate::service::start_daemon(dcfg)?;
     println!("dmlrs serve: listening on {}", handle.addr);
@@ -553,7 +602,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let report = handle.join()?;
     println!(
         "serve: drained at slot {} submitted={} admitted={} rejected={} deferred={} \
-         completed={} replanned={} total_utility={:.2}",
+         completed={} replanned={} evicted={} migrated={} ftf={:.3} \
+         total_utility={:.2}",
         report.slot,
         report.submitted,
         report.admitted,
@@ -561,6 +611,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         report.deferred,
         report.completed,
         report.replanned,
+        report.evicted,
+        report.migrated,
+        report.ftf,
         report.total_utility
     );
     Ok(())

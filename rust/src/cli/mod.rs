@@ -89,17 +89,23 @@ COMMANDS:
               [--replan every:K]  elastic re-planning: release + re-solve
               not-yet-started commitments at every K-th slot boundary
               (default none = the paper's fire-and-forget admission)
+              [--churn mtbf:40,mttr:8 | down@3:1,up@7:1]  deterministic
+              machine failures/drains/rejoins; stranded started jobs are
+              migrated or evicted (default none = no churn, byte-identical
+              to a churn-less run; see chaos/)
               [--dp-units N] [--no-theta-cache]  solver knobs (the cache
               is semantically invisible; disabling it is the parity oracle)
   compare     run the full zoo    (same flags; runs through the parallel
               sweep runner) [--par N] [--out results/compare.jsonl]
-              [--no-theta-cache] [--replan every:K]
+              [--no-theta-cache] [--replan every:K] [--churn SPEC]
   sweep       run a scenario matrix (schedulers x workloads x clusters x
               seeds) in parallel  [--jobs N] (worker threads; default =
               available parallelism) [--quick] [--seeds N]
               [--schedulers a,b,c] [--arrivals diurnal:R]
               [--replan every:K] (replan cadence; its cells get their own
               store keys, so on/off runs coexist in one JSONL)
+              [--churn SPEC] (churn axis; churny cells also get their own
+              store keys)
               [--out results/sweep.jsonl] [--fresh] [--no-theta-cache]
               cells already in the JSONL store are skipped (resumable)
   experiment  regenerate a figure --fig 5..17 [--quick] [--seeds N]
@@ -113,11 +119,13 @@ COMMANDS:
               advanced by tick requests) [--queue N] (request-queue bound)
               [--replan every:K] (elastic replan rounds at slot
               boundaries; a replan request forces one immediately)
+              [--churn SPEC] (trace-driven machine churn inside ticks;
+              also unlocks the machine_down/machine_up wire ops)
               [--oplog PATH] (crash-recovery journal) [--recover PATH]
               (replay a journal, then resume appending to it)
               protocol: one JSON request per line — submit/tick/status/
-              cluster/metrics/replan/shutdown (see
-              rust/src/service/protocol.rs)
+              cluster/metrics/replan/machine_down/machine_up/shutdown
+              (see rust/src/service/protocol.rs)
   load        load generator      --addr HOST:PORT [--connections N]
               [--rate R] (target submissions/sec, open loop) --jobs N
               --horizon N --seed N [--trace] [--arrivals diurnal:R]

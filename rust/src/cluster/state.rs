@@ -12,6 +12,11 @@ pub struct AllocLedger {
     alloc: Vec<Vec<ResVec>>,
     capacity: Vec<ResVec>,
     horizon: usize,
+    /// `avail[t][h]` — machine availability under churn. `None` (the
+    /// no-churn default) means "everything available, no bookkeeping":
+    /// the lazily-allocated mask is what keeps `churn = none`
+    /// byte-identical to the pre-churn ledger.
+    avail: Option<Vec<Vec<bool>>>,
 }
 
 impl AllocLedger {
@@ -20,6 +25,7 @@ impl AllocLedger {
             alloc: vec![vec![ResVec::zero(); cluster.len()]; horizon],
             capacity: cluster.machines.iter().map(|m| m.capacity).collect(),
             horizon,
+            avail: None,
         }
     }
 
@@ -39,8 +45,46 @@ impl AllocLedger {
         &self.capacity[h]
     }
 
+    /// Is machine `h` available at slot `t`? Always true until churn
+    /// marks something unavailable (the mask is allocated lazily).
+    pub fn available(&self, t: usize, h: usize) -> bool {
+        match &self.avail {
+            None => true,
+            Some(a) => a[t][h],
+        }
+    }
+
+    /// True iff any (t, h) is currently masked unavailable — i.e. churn
+    /// has actually touched this ledger.
+    pub fn has_unavailable(&self) -> bool {
+        match &self.avail {
+            None => false,
+            Some(a) => a.iter().any(|row| row.iter().any(|&up| !up)),
+        }
+    }
+
+    /// Mark machine `h` (un)available for every slot in `[from_t, horizon)`
+    /// — the churn subsystem's Down/Drain/Rejoin primitive. Allocates the
+    /// availability mask on first use; the no-churn path never calls this.
+    pub fn set_available_from(&mut self, h: usize, from_t: usize, up: bool) {
+        let machines = self.capacity.len();
+        let horizon = self.horizon;
+        let avail = self
+            .avail
+            .get_or_insert_with(|| vec![vec![true; machines]; horizon]);
+        for row in avail.iter_mut().take(horizon).skip(from_t) {
+            row[h] = up;
+        }
+    }
+
     /// Remaining capacity `Ĉ_h^r[t] = C_h^r − ρ_h^r[t]` (clamped at 0).
+    /// An unavailable (churned-out) machine has zero residual, so both
+    /// the θ-solver's snapshots and the slot-driven baselines price it
+    /// out without any policy-side changes.
     pub fn residual(&self, t: usize, h: usize) -> ResVec {
+        if !self.available(t, h) {
+            return ResVec::zero();
+        }
         let mut out = self.capacity[h];
         out.sub_assign(&self.alloc[t][h]);
         for i in 0..NUM_RESOURCES {
@@ -165,6 +209,33 @@ mod tests {
         l.release(&job, &sched);
         assert_eq!(l.used(1, 0).get(Resource::Cpu), 0.0);
         assert!(l.within_capacity(0.0));
+    }
+
+    #[test]
+    fn availability_masks_zero_residual() {
+        let mut l = ledger();
+        assert!(!l.has_unavailable());
+        assert!(l.available(2, 1));
+        let before = l.residual(2, 1);
+        l.set_available_from(1, 2, false);
+        assert!(l.has_unavailable());
+        assert!(l.available(1, 1), "slots before the event stay live");
+        assert!(!l.available(2, 1));
+        assert!(!l.available(3, 1));
+        assert_eq!(l.residual(2, 1), ResVec::zero());
+        assert_eq!(l.residual(1, 1), before, "earlier slots unchanged");
+        // a placement on the dead machine no longer fits
+        let job = test_job(0);
+        let sched = Schedule {
+            job_id: 0,
+            slots: vec![SlotPlacement { t: 3, placements: vec![(1, 1, 0)] }],
+        };
+        assert!(!l.fits(&job, &sched, 1e-9));
+        // rejoin from slot 3 restores capacity there only
+        l.set_available_from(1, 3, true);
+        assert!(!l.available(2, 1));
+        assert!(l.available(3, 1));
+        assert!(l.fits(&job, &sched, 1e-9));
     }
 
     #[test]

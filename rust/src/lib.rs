@@ -34,6 +34,10 @@
 //!   an op-log for crash recovery and an open-loop load generator with
 //!   latency benchmarks (`dmlrs load`). Shares the simulator's
 //!   `AdmissionCore`, so daemon and `SimEngine` decide identically.
+//! * [`chaos`] — deterministic fault injection: seeded machine-churn
+//!   traces (`ChurnSpec`/`ChurnTrace`) that take capacity out of the
+//!   ledger mid-horizon, forcing started jobs to migrate (or be evicted)
+//!   and surfacing finish-time fairness as a first-class metric.
 //! * [`experiments`] — one driver per paper figure (5–17), executed
 //!   through the sweep runner.
 //! * [`util`], [`testkit`], [`cli`], [`config`] — substrates built from
@@ -57,6 +61,7 @@
 )]
 
 pub mod baselines;
+pub mod chaos;
 pub mod cli;
 pub mod cluster;
 pub mod config;

@@ -110,7 +110,11 @@ pub fn slot_prices(
 
 /// Capture slot `t` of the ledger into an immutable snapshot: prices,
 /// residuals, the caller's eligibility masks, and the deduplicated
-/// machine groups.
+/// machine groups. Machines the churn subsystem has marked unavailable
+/// at `t` are masked out of both eligibility vectors, so the solver only
+/// prices live machines (and the snapshot's group signature — hence the
+/// θ-memo key — reflects the outage). Without churn the masks are cloned
+/// verbatim: the byte-identical no-op path.
 pub fn slot_snapshot(
     ledger: &AllocLedger,
     pricing: &PricingParams,
@@ -121,13 +125,17 @@ pub fn slot_snapshot(
     let prices = slot_prices(ledger, pricing, t);
     let residual: Vec<_> =
         (0..ledger.num_machines()).map(|h| ledger.residual(t, h)).collect();
-    SlotSnapshot::new(
-        prices,
-        residual,
-        masks.allow_worker.clone(),
-        masks.allow_ps.clone(),
-        group_machines,
-    )
+    let mut allow_worker = masks.allow_worker.clone();
+    let mut allow_ps = masks.allow_ps.clone();
+    if ledger.has_unavailable() {
+        for h in 0..ledger.num_machines() {
+            if !ledger.available(t, h) {
+                allow_worker[h] = false;
+                allow_ps[h] = false;
+            }
+        }
+    }
+    SlotSnapshot::new(prices, residual, allow_worker, allow_ps, group_machines)
 }
 
 /// [`plan_job_with`] over a throwaway [`PlannerScratch`] (tests, one-shot

@@ -240,6 +240,38 @@ impl PdOrs {
         }
         Some(plan.schedule)
     }
+
+    /// Churn-migration re-solve: plan the interrupted admission's
+    /// *residual* workload on the surviving machines (the failed ones have
+    /// zero residual capacity, so the snapshot prices them out). Unlike
+    /// [`PdOrs::replan`] there is no keep-the-old-plan option — the
+    /// alternative is eviction, which earns nothing — so *any* feasible
+    /// plan is adopted regardless of payoff.
+    fn migrate(
+        &mut self,
+        job: &Job,
+        t: usize,
+        ledger: &mut AllocLedger,
+    ) -> Option<Schedule> {
+        let cfg = DpConfig::from(&self.cfg);
+        let plan = plan_job_from(
+            job,
+            t,
+            ledger,
+            &self.pricing,
+            &self.masks,
+            &cfg,
+            &mut self.rng,
+            &mut self.scratch,
+        )?;
+        ledger.commit(job, &plan.schedule);
+        if let Some(a) = self.log.iter_mut().rev().find(|a| a.job_id == job.id) {
+            a.admitted = true;
+            a.utility = plan.utility;
+            a.completion = Some(plan.completion);
+        }
+        Some(plan.schedule)
+    }
 }
 
 /// Unified-trait adapter: PD-ORS is arrival-driven — it answers every
@@ -287,6 +319,15 @@ impl crate::sim::Scheduler for PdOrs {
         ledger: &mut AllocLedger,
     ) -> Option<Schedule> {
         PdOrs::replan(self, job, old, t, ledger)
+    }
+
+    fn migrate_job(
+        &mut self,
+        job: &Job,
+        t: usize,
+        ledger: &mut AllocLedger,
+    ) -> Option<Schedule> {
+        PdOrs::migrate(self, job, t, ledger)
     }
 }
 

@@ -157,11 +157,17 @@ pub fn run_replan_pass(
         return report;
     }
     // Jobs whose schedule has begun can no longer move; forget them.
+    // (Under churn tracking the prune is a no-op — started admissions stay
+    // visible for the migration pass — so the loop below skips them.)
     core.prune_started_admissions(t);
 
     // 1. Admitted, not yet started: release → re-solve → adopt or restore.
     let mut i = 0;
     while i < core.tracked_admissions().len() {
+        if core.tracked_admissions()[i].started_before(t) {
+            i += 1;
+            continue;
+        }
         let entry = core.release_tracked(i);
         report.revisited += 1;
         let job_id = entry.job.id;
@@ -222,6 +228,112 @@ pub fn run_replan_pass(
                 // the next candidate
             }
             None => d += 1,
+        }
+    }
+    report
+}
+
+/// One interrupted admission's fate under the churn migration pass.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationRecord {
+    pub job_id: usize,
+    /// True when no feasible migration existed and the job was dropped.
+    pub evicted: bool,
+    pub old_completion: Option<usize>,
+    pub new_completion: Option<usize>,
+    /// Completion credit before/after the interruption (`None` = the
+    /// schedule did not cover the workload).
+    pub old_finish: Option<PlannedFinish>,
+    pub new_finish: Option<PlannedFinish>,
+}
+
+/// Outcome of one churn migration pass.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationReport {
+    /// The slot the pass ran at.
+    pub slot: usize,
+    /// Tracked admissions interrupted (stranded work on a down machine).
+    pub interrupted: usize,
+    /// Fates, in interrupt order. Admissions that had already completed
+    /// before `slot` (only straggler PS-only slots were released) produce
+    /// no record — their credit stands.
+    pub records: Vec<MigrationRecord>,
+}
+
+impl MigrationReport {
+    pub fn migrated(&self) -> usize {
+        self.records.iter().filter(|r| !r.evicted).count()
+    }
+
+    pub fn evicted(&self) -> usize {
+        self.records.iter().filter(|r| r.evicted).count()
+    }
+}
+
+/// Interrupt and re-solve every tracked admission stranded on a machine
+/// that went *Down* at slot `t` (see [`crate::chaos`]). `down` is the
+/// hard-failure list for this slot — drained machines keep their
+/// committed work and never appear here. For each stranded admission the
+/// future (≥ `t`) slots are released, the scheduler is asked to
+/// [`migrate_job`](Scheduler::migrate_job) the residual workload, and the
+/// job is either re-tracked under its merged prefix+tail schedule or
+/// evicted. A strict no-op — no RNG draws, no ledger traffic — while
+/// `down` is empty or the core is not churn-tracking.
+pub fn run_migration_pass(
+    core: &mut AdmissionCore,
+    sched: &mut dyn Scheduler,
+    t: usize,
+    down: &[usize],
+) -> MigrationReport {
+    let mut report = MigrationReport { slot: t, ..MigrationReport::default() };
+    if down.is_empty() || !core.churn_tracking() {
+        return report;
+    }
+    let mut i = 0;
+    while i < core.tracked_admissions().len() {
+        if !core.tracked_admissions()[i].strands_on(down, t) {
+            i += 1;
+            continue;
+        }
+        let old_completion = core.tracked_admissions()[i].schedule.completion_time();
+        let intr = core.interrupt_tracked(i, t);
+        report.interrupted += 1;
+        let job_id = intr.job.id;
+        let old_finish = intr.old_finish;
+        if old_finish.is_some_and(|f| f.slot < t) {
+            // Already completed and credited before the failure; the
+            // released future slots were PS-only stragglers. Retire the
+            // entry silently — the credit stands.
+            continue;
+        }
+        let residual = intr.residual_job();
+        match sched.migrate_job(&residual, t, core.ledger_mut()) {
+            Some(tail) => {
+                let new_finish = core.commit_migrated(i, intr, tail);
+                let new_completion =
+                    core.tracked_admissions()[i].schedule.completion_time();
+                report.records.push(MigrationRecord {
+                    job_id,
+                    evicted: false,
+                    old_completion,
+                    new_completion,
+                    old_finish,
+                    new_finish,
+                });
+                i += 1;
+            }
+            None => {
+                // Evicted: the already-run prefix stays committed (that
+                // history is real resource-time) but the job earns nothing.
+                report.records.push(MigrationRecord {
+                    job_id,
+                    evicted: true,
+                    old_completion,
+                    new_completion: None,
+                    old_finish,
+                    new_finish: None,
+                });
+            }
         }
     }
     report

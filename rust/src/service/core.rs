@@ -13,10 +13,11 @@
 //! an op-log through a freshly built core, verifying the recorded
 //! decisions as it goes, and resumes appending to the same log.
 
+use crate::chaos::{ChurnEvent, ChurnSpec, ChurnTrace};
 use crate::err;
 use crate::jobs::Job;
 use crate::sched::registry::{SchedulerRegistry, SchedulerSpec};
-use crate::sched::replan::{run_replan_pass, ReplanReport};
+use crate::sched::replan::{run_migration_pass, run_replan_pass, ReplanReport};
 use crate::sched::solver::SolverStats;
 use crate::sim::{AdmissionCore, AdmissionOutcome, PlannedFinish, Scheduler};
 use crate::sweep::{ClusterSpec, WorkloadSpec};
@@ -39,6 +40,11 @@ pub struct ServiceConfig {
     pub scheduler: SchedulerSpec,
     pub cluster: ClusterSpec,
     pub workload: WorkloadSpec,
+    /// Machine churn injected while serving (see [`crate::chaos`]).
+    /// `ChurnSpec::None` (the default) is a strict no-op, and the wire
+    /// `machine_down`/`machine_up` ops are refused so untracked started
+    /// jobs can never be stranded silently.
+    pub churn: ChurnSpec,
 }
 
 impl ServiceConfig {
@@ -60,6 +66,9 @@ impl ServiceConfig {
         if self.scheduler.replan.is_enabled() {
             fields.push(("replan", json::s(&self.scheduler.replan.label())));
         }
+        if self.churn.is_enabled() {
+            fields.push(("churn", json::s(&self.churn.label())));
+        }
         json::obj(fields)
     }
 }
@@ -79,6 +88,14 @@ pub struct ServiceReport {
     /// Plan changes adopted by elastic replan rounds (policy-driven and
     /// wire-triggered).
     pub replanned: usize,
+    /// Started admissions dropped by churn (trace-driven and
+    /// wire-triggered machine failures).
+    pub evicted: usize,
+    /// Started admissions re-solved onto surviving machines.
+    pub migrated: usize,
+    /// Mean finish-time fairness over completed jobs (0 when none
+    /// completed).
+    pub ftf: f64,
     pub total_utility: f64,
     /// Full ledger dump: `alloc[t][h]` = the four committed resource
     /// amounts.
@@ -110,6 +127,15 @@ pub struct ServiceCore {
     replan_rounds: usize,
     /// Plan changes adopted across all rounds.
     replanned_total: usize,
+    /// Materialized churn realization (`None` when churn is disabled —
+    /// the strict no-op path).
+    churn_trace: Option<ChurnTrace>,
+    /// Started admissions dropped by machine failures.
+    evicted: usize,
+    /// Started admissions re-solved onto surviving machines.
+    migrated: usize,
+    /// Finish-time fairness accumulator over completed jobs.
+    sum_ftf: f64,
     /// Core-side decision latency per submit, in microseconds.
     latencies_us: Vec<f64>,
     started: Timer,
@@ -137,7 +163,16 @@ impl ServiceCore {
         if cfg.scheduler.replan.is_enabled() && sched.replan_capable() {
             core.set_replan_tracking(true);
         }
-        Ok(ServiceCore {
+        // Churn tracking mirrors the engine: enabled exactly when a trace
+        // exists, so `churn = none` keeps the tracked-admission list (and
+        // every byte of ledger state) identical to a churn-less build.
+        // The daemon's horizon is finite, so the unpruned list is bounded.
+        let churn_trace =
+            ChurnTrace::generate(&cfg.churn, cluster.len(), horizon, cfg.scheduler.seed);
+        if churn_trace.is_some() {
+            core.set_churn_tracking(true);
+        }
+        let mut svc = ServiceCore {
             cfg,
             cluster,
             sched,
@@ -154,10 +189,19 @@ impl ServiceCore {
             pending: vec![Vec::new(); horizon],
             replan_rounds: 0,
             replanned_total: 0,
+            churn_trace,
+            evicted: 0,
+            migrated: 0,
+            sum_ftf: 0.0,
             latencies_us: Vec::new(),
             started: Timer::start(),
             log: None,
-        })
+        };
+        // slot-0 trace events fire before any submission, matching the
+        // engine's SlotStart ordering (nothing is tracked yet, so the
+        // migration pass is a no-op; only the mask moves)
+        svc.apply_trace_events(0);
+        Ok(svc)
     }
 
     /// Attach a fresh op-log (writes the config header). Refuses an
@@ -246,6 +290,41 @@ impl ServiceCore {
                         ));
                     }
                 }
+                Op::MachineDown { slot, machine, evicted, migrated } => {
+                    if slot != core.slot {
+                        return Err(err!(
+                            "op-log {path}: machine_down recorded at slot {slot} but \
+                             replay is at slot {}",
+                            core.slot
+                        ));
+                    }
+                    if !core.core.churn_tracking() {
+                        return Err(err!(
+                            "op-log {path}: machine_down recorded but the daemon is \
+                             configured without churn — refusing to replay"
+                        ));
+                    }
+                    core.core.ledger_mut().set_available_from(machine, slot, false);
+                    let (_, ev, mi) = core.migrate_down(&[machine], slot);
+                    if ev != evicted || mi != migrated {
+                        return Err(err!(
+                            "op-log {path}: machine_down recorded \
+                             evicted={evicted}/migrated={migrated} but replay produced \
+                             evicted={ev}/migrated={mi} — scheduler nondeterminism or \
+                             config drift"
+                        ));
+                    }
+                }
+                Op::MachineUp { slot, machine } => {
+                    if slot != core.slot {
+                        return Err(err!(
+                            "op-log {path}: machine_up recorded at slot {slot} but \
+                             replay is at slot {}",
+                            core.slot
+                        ));
+                    }
+                    core.core.ledger_mut().set_available_from(machine, slot, true);
+                }
             }
         }
         if saw_header {
@@ -259,7 +338,9 @@ impl ServiceCore {
 
     fn check_header(&self, header: &Json, path: &str) -> Result<()> {
         let want = self.cfg.header_json();
-        for key in ["scheduler", "seed", "cluster", "workload", "horizon", "replan"] {
+        for key in
+            ["scheduler", "seed", "cluster", "workload", "horizon", "replan", "churn"]
+        {
             let got = header.get(key);
             let expect = want.get(key);
             if got != expect {
@@ -295,6 +376,8 @@ impl ServiceCore {
             Request::Cluster => self.cluster_json(),
             Request::Metrics => self.metrics_json(),
             Request::Replan => self.replan(),
+            Request::MachineDown { machine } => self.machine_down(*machine),
+            Request::MachineUp { machine } => self.machine_up(*machine),
             Request::Shutdown => ok_response(vec![("draining", Json::Bool(true))]),
         }
     }
@@ -336,6 +419,7 @@ impl ServiceCore {
                         // (the engine's late-arrival path does the same)
                         self.completed += 1;
                         self.total_utility += f.utility;
+                        self.sum_ftf += f.ftf;
                     } else if f.slot < self.horizon() {
                         self.pending[f.slot].push((job.id, f));
                     }
@@ -400,14 +484,20 @@ impl ServiceCore {
             if let Some(f) = g.finish {
                 self.completed += 1;
                 self.total_utility += f.utility;
+                self.sum_ftf += f.ftf;
             }
         }
         for (_, f) in std::mem::take(&mut self.pending[t]) {
             self.completed += 1;
             self.total_utility += f.utility;
+            self.sum_ftf += f.ftf;
         }
         if t + 1 < self.horizon() {
             self.slot = t + 1;
+            // the engine's SlotStart ordering: churn trace events (and
+            // their migration pass) land before the replan round, so a
+            // replan never re-plans onto a machine that just died.
+            self.apply_trace_events(self.slot);
             // the slot boundary the engine replans at: the start of the
             // new slot, before any of its submissions. Gated on tracking
             // so an incapable scheduler reports zero rounds, matching the
@@ -419,6 +509,134 @@ impl ServiceCore {
         } else {
             self.ended = true;
         }
+    }
+
+    /// Apply the churn trace's events for slot `t` (mask moves + the
+    /// migration pass for hard failures). A strict no-op without a trace
+    /// or when the trace has no events at `t`. Trace events are *not*
+    /// journaled — replay rebuilds the same trace from the header config
+    /// and re-fires them inside the replayed ticks.
+    fn apply_trace_events(&mut self, t: usize) {
+        let Some(trace) = &self.churn_trace else { return };
+        let events: Vec<(usize, ChurnEvent)> = trace.events_at(t).to_vec();
+        if events.is_empty() {
+            return;
+        }
+        let mut down_now = Vec::new();
+        for (h, e) in events {
+            match e {
+                ChurnEvent::Down => {
+                    self.core.ledger_mut().set_available_from(h, t, false);
+                    down_now.push(h);
+                }
+                ChurnEvent::Drain => {
+                    self.core.ledger_mut().set_available_from(h, t, false);
+                }
+                ChurnEvent::Rejoin => {
+                    self.core.ledger_mut().set_available_from(h, t, true);
+                }
+            }
+        }
+        self.migrate_down(&down_now, t);
+    }
+
+    /// Run the migration pass for machines that went hard-Down at `t` and
+    /// fold the outcomes into the pending table and churn counters.
+    /// Returns `(interrupted, evicted, migrated)` for this pass.
+    fn migrate_down(&mut self, down: &[usize], t: usize) -> (usize, usize, usize) {
+        let report = run_migration_pass(&mut self.core, self.sched.as_mut(), t, down);
+        let mut evicted = 0usize;
+        let mut migrated = 0usize;
+        for r in &report.records {
+            if let Some(of) = r.old_finish {
+                if of.slot < self.horizon() {
+                    self.pending[of.slot].retain(|&(id, _)| id != r.job_id);
+                }
+            }
+            if r.evicted {
+                evicted += 1;
+            } else {
+                migrated += 1;
+                if let Some(nf) = r.new_finish {
+                    if nf.slot < self.horizon() {
+                        self.pending[nf.slot].push((r.job_id, nf));
+                    }
+                }
+            }
+        }
+        self.evicted += evicted;
+        self.migrated += migrated;
+        (report.interrupted, evicted, migrated)
+    }
+
+    /// Shared gate for the wire churn ops.
+    fn churn_op_guard(&self, op: &str, machine: usize) -> Option<Json> {
+        if !self.core.churn_tracking() {
+            return Some(err_response(&format!(
+                "{op} is unavailable (serve with --churn so started \
+                 admissions are tracked for migration, e.g. --churn \
+                 mtbf:40,mttr:8)"
+            )));
+        }
+        if self.ended {
+            return Some(err_response(
+                "the horizon has ended; the cluster state is frozen",
+            ));
+        }
+        if machine >= self.cluster.len() {
+            return Some(err_response(&format!(
+                "machine {machine} out of range (cluster has {} machines)",
+                self.cluster.len()
+            )));
+        }
+        None
+    }
+
+    /// The wire `machine_down` op: fail one machine at the current slot.
+    /// Its capacity leaves the ledger from this slot on, stranded started
+    /// admissions are migrated or evicted, and the op is journaled with
+    /// the pass outcome (re-checked on replay).
+    pub fn machine_down(&mut self, machine: usize) -> Json {
+        if let Some(err) = self.churn_op_guard("machine_down", machine) {
+            return err;
+        }
+        let t = self.slot;
+        self.core.ledger_mut().set_available_from(machine, t, false);
+        let (interrupted, evicted, migrated) = self.migrate_down(&[machine], t);
+        if let Some(log) = self.log.as_mut() {
+            let op = Op::MachineDown { slot: t, machine, evicted, migrated };
+            if let Err(e) = log.append(&op) {
+                eprintln!("warning: op-log append failed: {e}");
+            }
+        }
+        ok_response(vec![
+            ("slot", json::num(t as f64)),
+            ("machine", json::num(machine as f64)),
+            ("interrupted", json::num(interrupted as f64)),
+            ("migrated", json::num(migrated as f64)),
+            ("evicted", json::num(evicted as f64)),
+        ])
+    }
+
+    /// The wire `machine_up` op: return one machine to service from the
+    /// current slot on. Journaled so replay restores capacity at the same
+    /// point in the op sequence.
+    pub fn machine_up(&mut self, machine: usize) -> Json {
+        if let Some(err) = self.churn_op_guard("machine_up", machine) {
+            return err;
+        }
+        let t = self.slot;
+        self.core.ledger_mut().set_available_from(machine, t, true);
+        if let Some(log) = self.log.as_mut() {
+            let op = Op::MachineUp { slot: t, machine };
+            if let Err(e) = log.append(&op) {
+                eprintln!("warning: op-log append failed: {e}");
+            }
+        }
+        ok_response(vec![
+            ("slot", json::num(t as f64)),
+            ("machine", json::num(machine as f64)),
+        ])
     }
 
     /// Run one elastic replan round at the current slot and fold the
@@ -488,6 +706,15 @@ impl ServiceCore {
         self.core.ledger().total_used()
     }
 
+    /// Mean finish-time fairness over completed jobs (0 when none).
+    fn ftf(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.sum_ftf / self.completed as f64
+        }
+    }
+
     pub fn status_json(&self) -> Json {
         ok_response(vec![
             ("slot", json::num(self.slot as f64)),
@@ -503,6 +730,10 @@ impl ServiceCore {
             ("replan", json::s(&self.cfg.scheduler.replan.label())),
             ("replan_rounds", json::num(self.replan_rounds as f64)),
             ("replanned", json::num(self.replanned_total as f64)),
+            ("churn", json::s(&self.cfg.churn.label())),
+            ("evicted", json::num(self.evicted as f64)),
+            ("migrated", json::num(self.migrated as f64)),
+            ("ftf", json::num(self.ftf())),
             ("total_utility", json::num(self.total_utility)),
             ("ledger_sum", json::num(self.ledger_sum())),
         ])
@@ -568,6 +799,9 @@ impl ServiceCore {
             deferred: self.deferred,
             completed: self.completed,
             replanned: self.replanned_total,
+            evicted: self.evicted,
+            migrated: self.migrated,
+            ftf: self.ftf(),
             total_utility: self.total_utility,
             alloc,
             solver: self.sched.solver_stats(),
@@ -588,6 +822,7 @@ pub fn synthetic_service_config(
         scheduler: SchedulerSpec::new(scheduler).with_seed(seed),
         cluster: ClusterSpec::homogeneous(machines),
         workload: WorkloadSpec::synthetic(num_jobs, horizon, 0),
+        churn: ChurnSpec::None,
     }
 }
 
@@ -751,6 +986,91 @@ mod tests {
         }
         let status = core.apply(&Request::Status);
         assert_eq!(status.get("slot").unwrap().as_usize(), Some(1), "tick advanced");
+    }
+
+    #[test]
+    fn churn_ops_require_churn_serving() {
+        // default config (churn = none): the wire ops are honest errors —
+        // started jobs are untracked, so a silent mask flip would strand
+        // their committed work on a dead machine
+        let mut off = ServiceCore::new(cfg()).unwrap();
+        for req in [Request::MachineDown { machine: 1 }, Request::MachineUp { machine: 1 }]
+        {
+            let resp = off.apply(&req);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{}", resp.to_string());
+            assert!(resp.get("error").unwrap().as_str().unwrap().contains("--churn"));
+        }
+
+        // an out-of-horizon event list is the manual-injection idiom: the
+        // trace is empty but tracking is on, so wire ops are accepted
+        let mut c = cfg();
+        c.churn = ChurnSpec::parse("down@900:1").unwrap();
+        let mut on = ServiceCore::new(c).unwrap();
+        let jobs = on.config().workload.jobs(1);
+        for j in jobs.iter().take(4) {
+            on.submit(j.clone());
+        }
+        on.tick();
+        let resp = on.apply(&Request::MachineDown { machine: 1 });
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+        assert!(resp.get("interrupted").is_some());
+        assert!(on.core.ledger().has_unavailable());
+        let resp = on.apply(&Request::MachineUp { machine: 1 });
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+        let resp = on.apply(&Request::MachineDown { machine: 99 });
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{}", resp.to_string());
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("out of range"));
+    }
+
+    #[test]
+    fn recover_replays_churny_run_identically() {
+        let path = tmp("churny");
+        let _ = std::fs::remove_file(&path);
+        let mut c = cfg();
+        c.churn = ChurnSpec::parse("down@3:1,down@5:2,up@8:1").unwrap();
+        let expected = {
+            let mut core = ServiceCore::new(c.clone()).unwrap();
+            core.attach_log(&path).unwrap();
+            drive(&mut core);
+            core.report()
+        };
+        let recovered = ServiceCore::recover(c.clone(), &path).unwrap();
+        assert_eq!(recovered.report(), expected, "churny replay must be byte-identical");
+        // ...and a churn-less config refuses the churny log outright
+        let e = ServiceCore::recover(cfg(), &path).unwrap_err();
+        assert!(e.to_string().contains("churn"), "{e}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recover_replays_wire_churn_ops_identically() {
+        let path = tmp("wirechurn");
+        let _ = std::fs::remove_file(&path);
+        let mut c = cfg();
+        c.churn = ChurnSpec::parse("down@900:1").unwrap();
+        let expected = {
+            let mut core = ServiceCore::new(c.clone()).unwrap();
+            core.attach_log(&path).unwrap();
+            let jobs = core.config().workload.jobs(1);
+            let mut next = 0usize;
+            for t in 0..core.horizon() {
+                while next < jobs.len() && jobs[next].arrival <= t {
+                    core.submit(jobs[next].clone());
+                    next += 1;
+                }
+                if t == 2 {
+                    core.apply(&Request::MachineDown { machine: 1 });
+                }
+                if t == 6 {
+                    core.apply(&Request::MachineUp { machine: 1 });
+                }
+                core.tick();
+            }
+            core.report()
+        };
+        let recovered = ServiceCore::recover(c, &path).unwrap();
+        assert_eq!(recovered.report(), expected, "wire churn ops must replay");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -37,6 +37,13 @@ pub enum Op {
     /// `--replan every:k` policy runs inside a tick are *not* journaled —
     /// replaying the tick re-runs them deterministically.)
     Replan { slot: usize, replanned: usize },
+    /// A wire-triggered machine failure at `slot`; `evicted`/`migrated`
+    /// record the migration pass outcome, re-checked on replay. (Churn
+    /// events a `--churn` trace injects inside a tick are *not* journaled
+    /// — replaying the tick re-runs them deterministically.)
+    MachineDown { slot: usize, machine: usize, evicted: usize, migrated: usize },
+    /// A wire-triggered machine rejoin at `slot`.
+    MachineUp { slot: usize, machine: usize },
 }
 
 impl Op {
@@ -70,6 +77,18 @@ impl Op {
                 ("op", json::s("replan")),
                 ("slot", json::num(*slot as f64)),
                 ("replanned", json::num(*replanned as f64)),
+            ]),
+            Op::MachineDown { slot, machine, evicted, migrated } => json::obj(vec![
+                ("op", json::s("machine_down")),
+                ("slot", json::num(*slot as f64)),
+                ("machine", json::num(*machine as f64)),
+                ("evicted", json::num(*evicted as f64)),
+                ("migrated", json::num(*migrated as f64)),
+            ]),
+            Op::MachineUp { slot, machine } => json::obj(vec![
+                ("op", json::s("machine_up")),
+                ("slot", json::num(*slot as f64)),
+                ("machine", json::num(*machine as f64)),
             ]),
         }
     }
@@ -108,6 +127,38 @@ impl Op {
                     .get("replanned")
                     .and_then(Json::as_f64)
                     .ok_or("replan op needs replanned")? as usize,
+            }),
+            "machine_down" => Ok(Op::MachineDown {
+                slot: v
+                    .get("slot")
+                    .and_then(Json::as_f64)
+                    .ok_or("machine_down op needs slot")? as usize,
+                machine: v
+                    .get("machine")
+                    .and_then(Json::as_f64)
+                    .ok_or("machine_down op needs machine")?
+                    as usize,
+                evicted: v
+                    .get("evicted")
+                    .and_then(Json::as_f64)
+                    .ok_or("machine_down op needs evicted")?
+                    as usize,
+                migrated: v
+                    .get("migrated")
+                    .and_then(Json::as_f64)
+                    .ok_or("machine_down op needs migrated")?
+                    as usize,
+            }),
+            "machine_up" => Ok(Op::MachineUp {
+                slot: v
+                    .get("slot")
+                    .and_then(Json::as_f64)
+                    .ok_or("machine_up op needs slot")? as usize,
+                machine: v
+                    .get("machine")
+                    .and_then(Json::as_f64)
+                    .ok_or("machine_up op needs machine")?
+                    as usize,
             }),
             other => Err(format!("unknown op-log entry {other:?}")),
         }
@@ -213,11 +264,24 @@ mod tests {
             .unwrap();
             log.append(&Op::Tick { slot: 1 }).unwrap();
             log.append(&Op::Replan { slot: 1, replanned: 2 }).unwrap();
+            log.append(&Op::MachineDown {
+                slot: 1,
+                machine: 3,
+                evicted: 1,
+                migrated: 2,
+            })
+            .unwrap();
+            log.append(&Op::MachineUp { slot: 2, machine: 3 }).unwrap();
         }
         let (ops, repaired) = OpLog::read(&p).unwrap();
         assert!(!repaired);
-        assert_eq!(ops.len(), 4);
+        assert_eq!(ops.len(), 6);
         assert!(matches!(ops[3], Op::Replan { slot: 1, replanned: 2 }));
+        assert!(matches!(
+            ops[4],
+            Op::MachineDown { slot: 1, machine: 3, evicted: 1, migrated: 2 }
+        ));
+        assert!(matches!(ops[5], Op::MachineUp { slot: 2, machine: 3 }));
         assert!(matches!(&ops[0], Op::Open { header }
             if header.get("scheduler").and_then(Json::as_str) == Some("pd-ors")));
         assert!(matches!(&ops[1], Op::Submit { slot: 0, decision, job }

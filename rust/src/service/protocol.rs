@@ -11,6 +11,8 @@
 //! | `cluster`  | —              | `machines`, `horizon`, `capacities` |
 //! | `metrics`  | —              | `decisions`, `solve_us` percentiles, `solver` counters, `uptime_secs` |
 //! | `replan`   | —              | `slot`, `revisited`, `replanned`, `utility_delta` — force one elastic replan round now (see [`crate::sched::replan`]; rounds also run automatically with `--replan every:k`, and the op is an `"ok":false` error on a daemon serving without that flag) |
+//! | `machine_down` | `machine`  | `slot`, `machine`, `interrupted`, `migrated`, `evicted` — take one machine down now: its capacity leaves the ledger from the current slot and stranded started jobs are migrated or evicted (see [`crate::chaos`]) |
+//! | `machine_up` | `machine`    | `slot`, `machine` — bring a downed machine back from the current slot |
 //! | `shutdown` | —              | `draining: true` (the daemon then drains and exits) |
 //!
 //! Every response carries `"ok": true` or `"ok": false` + `"error"`. The
@@ -32,6 +34,8 @@ pub enum Request {
     Cluster,
     Metrics,
     Replan,
+    MachineDown { machine: usize },
+    MachineUp { machine: usize },
     Shutdown,
 }
 
@@ -53,10 +57,23 @@ impl Request {
             "cluster" => Ok(Request::Cluster),
             "metrics" => Ok(Request::Metrics),
             "replan" => Ok(Request::Replan),
+            "machine_down" | "machine_up" => {
+                let machine = v
+                    .get("machine")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("{op} needs a numeric \"machine\" field"))?
+                    as usize;
+                if op == "machine_down" {
+                    Ok(Request::MachineDown { machine })
+                } else {
+                    Ok(Request::MachineUp { machine })
+                }
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!(
                 "unknown op {other:?} (expected \
-                 submit|tick|status|cluster|metrics|replan|shutdown)"
+                 submit|tick|status|cluster|metrics|replan|machine_down|\
+                 machine_up|shutdown)"
             )),
         }
     }
@@ -74,6 +91,14 @@ impl Request {
             Request::Cluster => json::obj(vec![("op", json::s("cluster"))]),
             Request::Metrics => json::obj(vec![("op", json::s("metrics"))]),
             Request::Replan => json::obj(vec![("op", json::s("replan"))]),
+            Request::MachineDown { machine } => json::obj(vec![
+                ("op", json::s("machine_down")),
+                ("machine", json::num(*machine as f64)),
+            ]),
+            Request::MachineUp { machine } => json::obj(vec![
+                ("op", json::s("machine_up")),
+                ("machine", json::num(*machine as f64)),
+            ]),
             Request::Shutdown => json::obj(vec![("op", json::s("shutdown"))]),
         }
     }
@@ -108,6 +133,8 @@ mod tests {
             Request::Cluster,
             Request::Metrics,
             Request::Replan,
+            Request::MachineDown { machine: 2 },
+            Request::MachineUp { machine: 2 },
             Request::Shutdown,
         ] {
             let line = req.to_line();
@@ -127,6 +154,9 @@ mod tests {
         assert!(Request::parse("not json").is_err());
         assert!(Request::parse("{\"op\": \"fly\"}").unwrap_err().contains("fly"));
         assert!(Request::parse("{\"op\": \"submit\"}").unwrap_err().contains("job"));
+        assert!(Request::parse("{\"op\": \"machine_down\"}")
+            .unwrap_err()
+            .contains("machine"));
         assert!(Request::parse("{}").is_err());
     }
 

@@ -31,6 +31,10 @@ pub struct PlannedFinish {
     pub slot: usize,
     pub utility: f64,
     pub training_time: f64,
+    /// Finish-time fairness: `training_time` divided by the job's ideal
+    /// isolated completion time ([`Job::min_completion_slots`]) — 1.0 is
+    /// a perfectly fair share, larger is slower than isolation.
+    pub ftf: f64,
 }
 
 /// The typed result of submitting one job.
@@ -62,12 +66,62 @@ pub struct GrantOutcome {
 
 /// One admitted job the core tracks for elastic re-planning: the job, its
 /// currently committed schedule, and the planned completion credit.
-/// Recorded only while [`AdmissionCore::replan_tracking`] is on.
+/// Recorded only while [`AdmissionCore::replan_tracking`] or
+/// [`AdmissionCore::churn_tracking`] is on.
 #[derive(Debug, Clone)]
 pub struct TrackedAdmission {
     pub job: Job,
     pub schedule: Schedule,
     pub finish: Option<PlannedFinish>,
+}
+
+impl TrackedAdmission {
+    /// Has the schedule already started running before slot `t`?
+    pub fn started_before(&self, t: usize) -> bool {
+        self.schedule.slots.first().is_some_and(|s| s.t < t)
+    }
+
+    /// Does the schedule place any work at slot `t` or later on one of the
+    /// given machines? `machines` is the set that went *Down* this slot —
+    /// drained machines keep their committed work, so the migration pass
+    /// cannot use the ledger's availability mask (it cannot tell Down from
+    /// Drain) and receives the hard-failure list explicitly.
+    pub fn strands_on(&self, machines: &[usize], t: usize) -> bool {
+        self.schedule.slots.iter().filter(|s| s.t >= t).any(|s| {
+            s.placements
+                .iter()
+                .any(|&(h, w, ps)| (w > 0 || ps > 0) && machines.contains(&h))
+        })
+    }
+}
+
+/// A started admission interrupted by machine churn: the already-run
+/// prefix stays committed (and credited); the released future is re-solved
+/// from the residual workload — or the job is evicted if no feasible
+/// migration exists.
+#[derive(Debug, Clone)]
+pub struct InterruptedAdmission {
+    pub job: Job,
+    /// Slots before the interruption boundary — work that already ran.
+    /// Still committed in the ledger.
+    pub kept: Schedule,
+    /// Samples the kept prefix already trained.
+    pub done: f64,
+    /// The completion credit the admission carried before interruption.
+    pub old_finish: Option<PlannedFinish>,
+}
+
+impl InterruptedAdmission {
+    /// The residual job the migration re-solve plans for: the same
+    /// identity, arrival, and utility (so completion credits stay anchored
+    /// at the true arrival), with the workload reduced by what the kept
+    /// prefix already trained.
+    pub fn residual_job(&self) -> Job {
+        let mut j = self.job.clone();
+        j.epochs = 1;
+        j.samples = (self.job.total_workload() - self.done).max(1e-6);
+        j
+    }
 }
 
 /// Total resource-time a committed schedule holds in the ledger (summed
@@ -88,11 +142,15 @@ fn schedule_demand(job: &Job, s: &Schedule) -> f64 {
 /// schedule covers the full workload and has at least one worker slot.
 pub fn planned_finish(job: &Job, s: &Schedule) -> Option<PlannedFinish> {
     match (s.covers_workload(job, 1.0), s.completion_time()) {
-        (true, Some(ct)) => Some(PlannedFinish {
-            slot: ct,
-            utility: job.utility_at(ct),
-            training_time: (ct - job.arrival + 1) as f64,
-        }),
+        (true, Some(ct)) => {
+            let training_time = (ct - job.arrival + 1) as f64;
+            Some(PlannedFinish {
+                slot: ct,
+                utility: job.utility_at(ct),
+                training_time,
+                ftf: training_time / job.min_completion_slots(),
+            })
+        }
         _ => None,
     }
 }
@@ -106,6 +164,10 @@ pub struct AdmissionCore {
     /// default — with `replan = none` nothing is tracked and the core's
     /// behavior is byte-identical to the pre-replan system.
     track_replan: bool,
+    /// Keep tracking admissions *after* they start running — the churn
+    /// migration pass needs started schedules. Off by default (`churn =
+    /// none`): started admissions are pruned exactly as PR 5 did.
+    track_churn: bool,
     tracked: Vec<TrackedAdmission>,
 }
 
@@ -116,6 +178,7 @@ impl AdmissionCore {
             active: Vec::new(),
             horizon,
             track_replan: false,
+            track_churn: false,
             tracked: Vec::new(),
         }
     }
@@ -150,6 +213,16 @@ impl AdmissionCore {
         self.track_replan
     }
 
+    /// Start (or stop) tracking admissions across their start slot, for
+    /// the churn migration pass. Implies admission tracking.
+    pub fn set_churn_tracking(&mut self, on: bool) {
+        self.track_churn = on;
+    }
+
+    pub fn churn_tracking(&self) -> bool {
+        self.track_churn
+    }
+
     /// Admitted jobs currently eligible for re-planning (tracked since
     /// tracking was enabled, minus pruned/started ones).
     pub fn tracked_admissions(&self) -> &[TrackedAdmission] {
@@ -157,8 +230,14 @@ impl AdmissionCore {
     }
 
     /// Drop tracked admissions whose schedule has already begun (first
-    /// slot before `t`) — their allocation can no longer move.
+    /// slot before `t`) — their allocation can no longer move. Under churn
+    /// tracking this is a no-op: started admissions must stay visible so a
+    /// later machine failure can interrupt them (the replan pass skips
+    /// them by [`TrackedAdmission::started_before`] instead).
     pub fn prune_started_admissions(&mut self, t: usize) {
+        if self.track_churn {
+            return;
+        }
         self.tracked
             .retain(|e| e.schedule.slots.first().map_or(false, |s| s.t >= t));
     }
@@ -227,6 +306,69 @@ impl AdmissionCore {
         finish
     }
 
+    /// Interrupt tracked admission `i` at slot `t` (machine churn): the
+    /// entry leaves the tracked set, its future slots (≥ `t`) leave the
+    /// ledger (with a conservation check), and the already-run prefix
+    /// stays committed with its trained samples credited. This is the
+    /// started-job extension of the PR 5 not-yet-started-only release
+    /// rule: only the part of the schedule that has not run yet is ever
+    /// released.
+    pub fn interrupt_tracked(&mut self, i: usize, t: usize) -> InterruptedAdmission {
+        let entry = self.tracked.remove(i);
+        let mut kept = Schedule::empty(entry.job.id);
+        let mut future = Schedule::empty(entry.job.id);
+        for slot in entry.schedule.slots {
+            if slot.t < t {
+                kept.slots.push(slot);
+            } else {
+                future.slots.push(slot);
+            }
+        }
+        #[cfg(debug_assertions)]
+        let before = self.ledger.total_used();
+        self.ledger.release(&entry.job, &future);
+        #[cfg(debug_assertions)]
+        {
+            let released = schedule_demand(&entry.job, &future);
+            let after = self.ledger.total_used();
+            debug_assert!(
+                (before - after - released).abs() <= 1e-6 * (1.0 + before.abs()),
+                "ledger conservation violated on interrupt: {before} -> {after}, \
+                 future slots hold {released}"
+            );
+        }
+        let done = kept
+            .slots
+            .iter()
+            .map(|s| speed::samples_in_slot(&entry.job, &s.placements))
+            .sum();
+        InterruptedAdmission { job: entry.job, kept, done, old_finish: entry.finish }
+    }
+
+    /// Track a migrated admission: splice the re-solved tail (already
+    /// committed to the ledger by the scheduler's `migrate_job`) onto the
+    /// interrupted prefix and re-insert the merged schedule at position
+    /// `i`. Returns the new completion credit of the *whole* job — kept
+    /// prefix plus tail — still anchored at the true arrival.
+    pub fn commit_migrated(
+        &mut self,
+        i: usize,
+        intr: InterruptedAdmission,
+        tail: Schedule,
+    ) -> Option<PlannedFinish> {
+        debug_assert!(
+            self.ledger.within_capacity(1e-6),
+            "migrated schedule exceeded capacity"
+        );
+        let mut schedule = intr.kept;
+        schedule.slots.extend(tail.slots);
+        debug_assert!(schedule.respects_arrival(&intr.job));
+        debug_assert!(schedule.respects_worker_cap(&intr.job));
+        let finish = planned_finish(&intr.job, &schedule);
+        self.tracked.insert(i, TrackedAdmission { job: intr.job, schedule, finish });
+        finish
+    }
+
     /// Promote deferred active job `d` to a full admission under
     /// `schedule` (already committed to the ledger by the scheduler);
     /// returns the planned completion credit. Callers must only promote
@@ -243,7 +385,7 @@ impl AdmissionCore {
         );
         debug_assert!(self.ledger.within_capacity(1e-6));
         let finish = planned_finish(&aj.job, &schedule);
-        if self.track_replan {
+        if self.track_replan || self.track_churn {
             self.tracked.push(TrackedAdmission { job: aj.job, schedule, finish });
         }
         finish
@@ -261,7 +403,7 @@ impl AdmissionCore {
                 debug_assert!(s.respects_arrival(job));
                 let completion = s.completion_time();
                 let finish = planned_finish(job, &s);
-                if self.track_replan {
+                if self.track_replan || self.track_churn {
                     self.tracked.push(TrackedAdmission {
                         job: job.clone(),
                         schedule: s.clone(),
@@ -323,10 +465,12 @@ impl AdmissionCore {
             };
             let finish = if done {
                 finished.push(idx);
+                let training_time = (t - arrival + 1) as f64;
                 Some(PlannedFinish {
                     slot: t,
                     utility: self.active[idx].job.utility_at(t),
-                    training_time: (t - arrival + 1) as f64,
+                    training_time,
+                    ftf: training_time / self.active[idx].job.min_completion_slots(),
                 })
             } else {
                 None

@@ -35,9 +35,10 @@
 //!     .run(scheduler.as_mut());
 //! ```
 
+use crate::chaos::{ChurnEvent, ChurnSpec, ChurnTrace};
 use crate::cluster::{AllocLedger, Cluster};
 use crate::jobs::{Job, Schedule};
-use crate::sched::replan::{run_replan_pass, ReplanPolicy};
+use crate::sched::replan::{run_migration_pass, run_replan_pass, ReplanPolicy};
 use crate::sched::solver::SolverStats;
 
 use super::admission::{AdmissionCore, AdmissionOutcome};
@@ -141,6 +142,23 @@ pub trait Scheduler {
     ) -> Option<Schedule> {
         None
     }
+
+    /// Re-solve an interrupted admission's *residual* workload from slot
+    /// `t` (machine churn took its old machines away; `job` is the
+    /// residual-demand clone from
+    /// [`InterruptedAdmission::residual_job`](crate::sim::InterruptedAdmission::residual_job)).
+    /// Return a tail schedule **already committed to `ledger`** to
+    /// migrate, or `None` if no feasible migration exists — the caller
+    /// evicts the job. Only called when [`Scheduler::replan_capable`]
+    /// would allow planning at all; default: no migration.
+    fn migrate_job(
+        &mut self,
+        _job: &Job,
+        _t: usize,
+        _ledger: &mut AllocLedger,
+    ) -> Option<Schedule> {
+        None
+    }
 }
 
 /// Builder for [`SimEngine`]; `jobs`, `cluster`, and `horizon` are
@@ -153,6 +171,8 @@ pub struct SimEngineBuilder<'a> {
     horizon: Option<usize>,
     observers: Vec<&'a mut dyn SimObserver>,
     replan: ReplanPolicy,
+    churn: ChurnSpec,
+    churn_seed: u64,
 }
 
 impl<'a> SimEngineBuilder<'a> {
@@ -185,6 +205,16 @@ impl<'a> SimEngineBuilder<'a> {
         self
     }
 
+    /// Inject machine churn (default: [`ChurnSpec::None`], byte-identical
+    /// to an engine without the knob). `seed` drives the churn trace's own
+    /// RNG stream for seeded specs like `mtbf:40,mttr:8`; explicit event
+    /// lists ignore it.
+    pub fn churn(mut self, spec: ChurnSpec, seed: u64) -> Self {
+        self.churn = spec;
+        self.churn_seed = seed;
+        self
+    }
+
     /// Panics if a required field is missing.
     pub fn build(self) -> SimEngine<'a> {
         SimEngine {
@@ -193,6 +223,8 @@ impl<'a> SimEngineBuilder<'a> {
             horizon: self.horizon.expect("SimEngine::builder(): horizon(..) is required"),
             observers: self.observers,
             replan: self.replan,
+            churn: self.churn,
+            churn_seed: self.churn_seed,
         }
     }
 
@@ -210,6 +242,8 @@ pub struct SimEngine<'a> {
     horizon: usize,
     observers: Vec<&'a mut dyn SimObserver>,
     replan: ReplanPolicy,
+    churn: ChurnSpec,
+    churn_seed: u64,
 }
 
 impl<'a> SimEngine<'a> {
@@ -234,12 +268,12 @@ impl<'a> SimEngine<'a> {
         core: &mut AdmissionCore,
         t: usize,
         job: &Job,
-    ) -> Option<(usize, f64, f64)> {
+    ) -> Option<(usize, f64, f64, f64)> {
         self.emit(collector, SimEvent::Arrival { t, job_id: job.id });
         match core.submit(sched, job) {
             AdmissionOutcome::Admitted { completion, finish, .. } => {
                 self.emit(collector, SimEvent::Admitted { t, job_id: job.id, completion });
-                finish.map(|f| (f.slot, f.utility, f.training_time))
+                finish.map(|f| (f.slot, f.utility, f.training_time, f.ftf))
             }
             AdmissionOutcome::Rejected => {
                 self.emit(collector, SimEvent::Rejected { t, job_id: job.id });
@@ -261,10 +295,17 @@ impl<'a> SimEngine<'a> {
         if self.replan.is_enabled() && sched.replan_capable() {
             core.set_replan_tracking(true);
         }
+        // With `churn = none` the trace is `None` and the whole block below
+        // — tracking, masks, migration — never runs: byte-identical to the
+        // pre-churn engine.
+        let trace = ChurnTrace::generate(&self.churn, self.cluster.len(), horizon, self.churn_seed);
+        if trace.is_some() {
+            core.set_churn_tracking(true);
+        }
         let mut collector = ResultCollector::new();
         let mut next_arrival = 0usize;
         // arrival-driven completions, keyed by completion slot
-        let mut pending: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new(); horizon];
+        let mut pending: Vec<Vec<(usize, f64, f64, f64)>> = vec![Vec::new(); horizon];
 
         self.emit(&mut collector, SimEvent::Begin { jobs: jobs.len(), horizon });
 
@@ -274,6 +315,74 @@ impl<'a> SimEngine<'a> {
                 SimEvent::SlotStart { t, active: core.active().len() },
             );
 
+            // Machine churn: apply this slot's events to the availability
+            // mask, then interrupt/migrate/evict admissions stranded on
+            // hard-failed machines — all before the replan round and this
+            // slot's arrivals, so both plan against surviving capacity.
+            if let Some(tr) = &trace {
+                let mut down_now: Vec<usize> = Vec::new();
+                for &(h, ev) in tr.events_at(t) {
+                    match ev {
+                        ChurnEvent::Down => {
+                            core.ledger_mut().set_available_from(h, t, false);
+                            self.emit(
+                                &mut collector,
+                                SimEvent::MachineDown { t, machine: h, drain: false },
+                            );
+                            down_now.push(h);
+                        }
+                        ChurnEvent::Drain => {
+                            core.ledger_mut().set_available_from(h, t, false);
+                            self.emit(
+                                &mut collector,
+                                SimEvent::MachineDown { t, machine: h, drain: true },
+                            );
+                        }
+                        ChurnEvent::Rejoin => {
+                            core.ledger_mut().set_available_from(h, t, true);
+                            self.emit(
+                                &mut collector,
+                                SimEvent::MachineRejoined { t, machine: h },
+                            );
+                        }
+                    }
+                }
+                let report = run_migration_pass(&mut core, sched, t, &down_now);
+                for r in &report.records {
+                    if let Some(of) = r.old_finish {
+                        if of.slot < horizon {
+                            pending[of.slot].retain(|&(id, _, _, _)| id != r.job_id);
+                        }
+                    }
+                    if r.evicted {
+                        self.emit(&mut collector, SimEvent::Evicted { t, job_id: r.job_id });
+                        continue;
+                    }
+                    if let Some(nf) = r.new_finish {
+                        debug_assert!(nf.slot < horizon, "migrated beyond horizon");
+                        if nf.slot < horizon {
+                            pending[nf.slot].push((
+                                r.job_id,
+                                nf.utility,
+                                nf.training_time,
+                                nf.ftf,
+                            ));
+                        }
+                    }
+                    self.emit(
+                        &mut collector,
+                        SimEvent::Migrated {
+                            t,
+                            job_id: r.job_id,
+                            old_completion: r.old_completion,
+                            new_completion: r.new_completion,
+                            old_utility: r.old_finish.map_or(0.0, |f| f.utility),
+                            new_utility: r.new_finish.map_or(0.0, |f| f.utility),
+                        },
+                    );
+                }
+            }
+
             // Elastic re-planning: revisit not-yet-started commitments at
             // the slot boundary, before this slot's arrivals see prices.
             if self.replan.fires_at(t) {
@@ -281,7 +390,7 @@ impl<'a> SimEngine<'a> {
                 for r in &report.records {
                     if let Some(of) = r.old_finish {
                         if of.slot < horizon {
-                            pending[of.slot].retain(|&(id, _, _)| id != r.job_id);
+                            pending[of.slot].retain(|&(id, _, _, _)| id != r.job_id);
                         }
                     }
                     if let Some(nf) = r.new_finish {
@@ -291,6 +400,7 @@ impl<'a> SimEngine<'a> {
                                 r.job_id,
                                 nf.utility,
                                 nf.training_time,
+                                nf.ftf,
                             ));
                         }
                     }
@@ -312,12 +422,12 @@ impl<'a> SimEngine<'a> {
             while next_arrival < jobs.len() && jobs[next_arrival].arrival <= t {
                 let job = &jobs[next_arrival];
                 next_arrival += 1;
-                if let Some((ct, utility, training_time)) =
+                if let Some((ct, utility, training_time, ftf)) =
                     self.arrive(&mut collector, sched, &mut core, t, job)
                 {
                     debug_assert!(ct < horizon, "committed schedule beyond horizon");
                     if ct < horizon {
-                        pending[ct].push((job.id, utility, training_time));
+                        pending[ct].push((job.id, utility, training_time, ftf));
                     }
                 }
             }
@@ -335,15 +445,16 @@ impl<'a> SimEngine<'a> {
                             job_id: g.job_id,
                             utility: f.utility,
                             training_time: f.training_time,
+                            ftf: f.ftf,
                         },
                     );
                 }
             }
 
-            for (job_id, utility, training_time) in std::mem::take(&mut pending[t]) {
+            for (job_id, utility, training_time, ftf) in std::mem::take(&mut pending[t]) {
                 self.emit(
                     &mut collector,
-                    SimEvent::Completed { t, job_id, utility, training_time },
+                    SimEvent::Completed { t, job_id, utility, training_time, ftf },
                 );
             }
         }
@@ -355,12 +466,12 @@ impl<'a> SimEngine<'a> {
             let job = &jobs[next_arrival];
             next_arrival += 1;
             let t = job.arrival;
-            if let Some((ct, utility, training_time)) =
+            if let Some((ct, utility, training_time, ftf)) =
                 self.arrive(&mut collector, sched, &mut core, t, job)
             {
                 self.emit(
                     &mut collector,
-                    SimEvent::Completed { t: ct, job_id: job.id, utility, training_time },
+                    SimEvent::Completed { t: ct, job_id: job.id, utility, training_time, ftf },
                 );
             }
         }

@@ -46,8 +46,29 @@ pub enum SimEvent {
         old_utility: f64,
         new_utility: f64,
     },
-    /// A job finished its full workload `E_i K_i` at slot `t`.
-    Completed { t: usize, job_id: usize, utility: f64, training_time: f64 },
+    /// A job finished its full workload `E_i K_i` at slot `t`. `ftf` is
+    /// its finish-time fairness: training time over the job's ideal
+    /// isolated completion time (1.0 = a perfectly fair share).
+    Completed { t: usize, job_id: usize, utility: f64, training_time: f64, ftf: f64 },
+    /// Machine churn took machine `machine` out of service from slot `t`.
+    /// `drain` distinguishes a graceful drain (committed work runs out;
+    /// nothing is interrupted) from a hard failure.
+    MachineDown { t: usize, machine: usize, drain: bool },
+    /// Machine `machine` rejoined the cluster at slot `t`.
+    MachineRejoined { t: usize, machine: usize },
+    /// A started admission stranded on a failed machine was migrated: its
+    /// future slots were re-solved onto surviving machines (the already-run
+    /// prefix stays put).
+    Migrated {
+        t: usize,
+        job_id: usize,
+        old_completion: Option<usize>,
+        new_completion: Option<usize>,
+        old_utility: f64,
+        new_utility: f64,
+    },
+    /// A stranded admission had no feasible migration and was dropped.
+    Evicted { t: usize, job_id: usize },
     /// Cumulative solver counters, polled from the scheduler and emitted
     /// once at the end of the run (right before [`SimEvent::HorizonEnd`]).
     Solver { stats: SolverStats },
@@ -71,6 +92,9 @@ pub struct JobOutcome {
     pub utility: f64,
     /// Completion − arrival; horizon T when unfinished (Fig. 9 convention).
     pub training_time: f64,
+    /// Finish-time fairness (training time / ideal isolated completion
+    /// time); 0 while unfinished.
+    pub ftf: f64,
 }
 
 /// Aggregate simulation result.
@@ -84,6 +108,14 @@ pub struct SimResult {
     /// Jobs whose plan an elastic replan round changed (0 with
     /// `replan = none` — part of the parity contract).
     pub replanned: usize,
+    /// Stranded admissions dropped by machine churn (0 with `churn = none`).
+    pub evicted: usize,
+    /// Stranded admissions successfully re-solved onto surviving machines.
+    pub migrated: usize,
+    /// Mean finish-time fairness over completed jobs (0 when none
+    /// completed). 1.0 = every job finished as fast as it would have run
+    /// in isolation; larger = slower.
+    pub ftf: f64,
     /// Solver counters polled at the end of the run (all zeros for
     /// policies outside the θ-solver pipeline). Diagnostic only: runs
     /// that differ solely in caching legitimately differ here, so parity
@@ -96,6 +128,12 @@ impl SimResult {
         let total_utility = outcomes.iter().map(|o| o.utility).sum();
         let admitted = outcomes.iter().filter(|o| o.admitted).count();
         let completed = outcomes.iter().filter(|o| o.completed).count();
+        let ftf = if completed == 0 {
+            0.0
+        } else {
+            outcomes.iter().filter(|o| o.completed).map(|o| o.ftf).sum::<f64>()
+                / completed as f64
+        };
         SimResult {
             scheduler,
             outcomes,
@@ -103,6 +141,9 @@ impl SimResult {
             admitted,
             completed,
             replanned: 0,
+            evicted: 0,
+            migrated: 0,
+            ftf,
             solver: SolverStats::default(),
         }
     }
@@ -117,6 +158,9 @@ impl SimResult {
             && self.admitted == other.admitted
             && self.completed == other.completed
             && self.replanned == other.replanned
+            && self.evicted == other.evicted
+            && self.migrated == other.migrated
+            && self.ftf == other.ftf
     }
 
     pub fn training_times(&self) -> Vec<f64> {
@@ -132,6 +176,8 @@ pub struct ResultCollector {
     horizon: usize,
     outcomes: BTreeMap<usize, JobOutcome>,
     replanned: usize,
+    evicted: usize,
+    migrated: usize,
     solver: SolverStats,
 }
 
@@ -145,6 +191,8 @@ impl ResultCollector {
         let mut res =
             SimResult::from_outcomes(scheduler, self.outcomes.into_values().collect());
         res.replanned = self.replanned;
+        res.evicted = self.evicted;
+        res.migrated = self.migrated;
         res.solver = self.solver;
         res
     }
@@ -164,6 +212,7 @@ impl SimObserver for ResultCollector {
                         completion: None,
                         utility: 0.0,
                         training_time: self.horizon as f64,
+                        ftf: 0.0,
                     },
                 );
             }
@@ -187,18 +236,38 @@ impl SimObserver for ResultCollector {
                     }
                 }
             }
-            SimEvent::Completed { t, job_id, utility, training_time } => {
+            SimEvent::Completed { t, job_id, utility, training_time, ftf } => {
                 if let Some(o) = self.outcomes.get_mut(&job_id) {
                     o.completed = true;
                     o.completion = Some(t);
                     o.utility = utility;
                     o.training_time = training_time;
+                    o.ftf = ftf;
+                }
+            }
+            SimEvent::Migrated { job_id, new_completion, .. } => {
+                self.migrated += 1;
+                if let Some(o) = self.outcomes.get_mut(&job_id) {
+                    o.completion = new_completion;
+                }
+            }
+            SimEvent::Evicted { job_id, .. } => {
+                self.evicted += 1;
+                if let Some(o) = self.outcomes.get_mut(&job_id) {
+                    // the job will never finish: no planned completion, no
+                    // credit, training time pinned to the horizon
+                    o.completion = None;
+                    o.utility = 0.0;
+                    o.training_time = self.horizon as f64;
+                    o.ftf = 0.0;
                 }
             }
             SimEvent::Solver { stats } => self.solver = stats,
             SimEvent::SlotStart { .. }
             | SimEvent::Rejected { .. }
             | SimEvent::Deferred { .. }
+            | SimEvent::MachineDown { .. }
+            | SimEvent::MachineRejoined { .. }
             | SimEvent::HorizonEnd { .. } => {}
         }
     }
@@ -263,6 +332,34 @@ impl SimObserver for TraceObserver {
             SimEvent::Completed { t, job_id, utility, .. } => {
                 format!("t={t:3} job {job_id} completed, utility {utility:.2}")
             }
+            SimEvent::MachineDown { t, machine, drain } => {
+                let how = if drain { "draining" } else { "DOWN" };
+                format!("t={t:3} machine {machine} {how}")
+            }
+            SimEvent::MachineRejoined { t, machine } => {
+                format!("t={t:3} machine {machine} rejoined")
+            }
+            SimEvent::Migrated {
+                t,
+                job_id,
+                old_completion,
+                new_completion,
+                old_utility,
+                new_utility,
+            } => {
+                let fmt = |c: Option<usize>| {
+                    c.map_or("-".to_string(), |x| x.to_string())
+                };
+                format!(
+                    "t={t:3} job {job_id} migrated: completes t={} (was t={}), \
+                     utility {new_utility:.2} (was {old_utility:.2})",
+                    fmt(new_completion),
+                    fmt(old_completion)
+                )
+            }
+            SimEvent::Evicted { t, job_id } => {
+                format!("t={t:3} job {job_id} evicted (no feasible migration)")
+            }
             SimEvent::Solver { stats } => format!(
                 "solver: {} theta-solves, {} memo hits, {} lp solves, {} pivots, {} roundings",
                 stats.theta_solves,
@@ -291,7 +388,7 @@ mod tests {
             SimEvent::Arrival { t: 1, job_id: 1 },
             SimEvent::Deferred { t: 1, job_id: 1 },
             SimEvent::Granted { t: 1, job_id: 0, workers: 2, ps: 1 },
-            SimEvent::Completed { t: 3, job_id: 0, utility: 5.0, training_time: 4.0 },
+            SimEvent::Completed { t: 3, job_id: 0, utility: 5.0, training_time: 4.0, ftf: 2.0 },
             SimEvent::HorizonEnd { horizon: 10 },
         ] {
             c.on_event(&ev);

@@ -42,14 +42,29 @@ pub struct StreamingMetrics {
     pub grants: usize,
     /// Plan changes adopted by elastic replan rounds.
     pub replanned: usize,
+    /// Stranded admissions dropped by machine churn.
+    pub evicted: usize,
+    /// Stranded admissions re-solved onto surviving machines.
+    pub migrated: usize,
     /// Solver counters (arrives once, at the end of the run).
     pub solver: SolverStats,
     granted_jobs: std::collections::BTreeSet<usize>,
+    sum_ftf: f64,
 }
 
 impl StreamingMetrics {
     pub fn new() -> StreamingMetrics {
         StreamingMetrics::default()
+    }
+
+    /// Mean finish-time fairness over completions so far (0 before the
+    /// first completion); matches [`SimResult::ftf`] at `HorizonEnd`.
+    pub fn ftf(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.sum_ftf / self.completed as f64
+        }
     }
 }
 
@@ -65,10 +80,13 @@ impl SimObserver for StreamingMetrics {
                     self.admitted += 1;
                 }
             }
-            SimEvent::Completed { utility, .. } => {
+            SimEvent::Completed { utility, ftf, .. } => {
                 self.completed += 1;
                 self.total_utility += utility;
+                self.sum_ftf += ftf;
             }
+            SimEvent::Migrated { .. } => self.migrated += 1,
+            SimEvent::Evicted { .. } => self.evicted += 1,
             SimEvent::Replanned { promoted, .. } => {
                 self.replanned += 1;
                 if promoted {
@@ -81,6 +99,8 @@ impl SimObserver for StreamingMetrics {
             SimEvent::Begin { .. }
             | SimEvent::SlotStart { .. }
             | SimEvent::Deferred { .. }
+            | SimEvent::MachineDown { .. }
+            | SimEvent::MachineRejoined { .. }
             | SimEvent::HorizonEnd { .. } => {}
         }
     }
@@ -102,6 +122,7 @@ mod tests {
                 completion: Some(t as usize),
                 utility: utility / times.len() as f64,
                 training_time: t,
+                ftf: 1.0,
             })
             .collect();
         SimResult {
@@ -111,6 +132,9 @@ mod tests {
             completed: times.len(),
             outcomes,
             replanned: 0,
+            evicted: 0,
+            migrated: 0,
+            ftf: 1.0,
             solver: SolverStats::default(),
         }
     }
@@ -139,7 +163,7 @@ mod tests {
             SimEvent::Deferred { t: 0, job_id: 0 },
             SimEvent::Granted { t: 0, job_id: 0, workers: 2, ps: 1 },
             SimEvent::Granted { t: 1, job_id: 0, workers: 2, ps: 1 },
-            SimEvent::Completed { t: 1, job_id: 0, utility: 3.0, training_time: 2.0 },
+            SimEvent::Completed { t: 1, job_id: 0, utility: 3.0, training_time: 2.0, ftf: 2.0 },
             SimEvent::Arrival { t: 1, job_id: 1 },
             SimEvent::Rejected { t: 1, job_id: 1 },
         ] {
@@ -151,5 +175,8 @@ mod tests {
         assert_eq!(m.rejected, 1);
         assert_eq!(m.completed, 1);
         assert_eq!(m.total_utility, 3.0);
+        assert_eq!(m.ftf(), 2.0);
+        assert_eq!(m.evicted, 0);
+        assert_eq!(m.migrated, 0);
     }
 }

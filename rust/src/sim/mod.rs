@@ -16,8 +16,8 @@ pub mod events;
 pub mod metrics;
 
 pub use admission::{
-    planned_finish, AdmissionCore, AdmissionOutcome, GrantOutcome, PlannedFinish,
-    TrackedAdmission,
+    planned_finish, AdmissionCore, AdmissionOutcome, GrantOutcome,
+    InterruptedAdmission, PlannedFinish, TrackedAdmission,
 };
 pub use engine::{
     simulate, ActiveJob, ArrivalDecision, PlacementPolicy, Scheduler, SimEngine,

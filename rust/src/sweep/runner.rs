@@ -41,6 +41,7 @@ use super::store::{CellRecord, ResultStore};
 /// schedulers = pd-ors, oasis, fifo
 /// arrivals = diurnal:3      # arrival process for the synthetic workloads
 /// replan = every:4          # elastic re-planning cadence (default none)
+/// churn = mtbf:40,mttr:8    # machine churn injected per cell (default none)
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
@@ -55,6 +56,8 @@ pub struct SweepSpec {
     pub arrivals: crate::workload::ArrivalProcess,
     /// Elastic re-planning cadence applied to every cell.
     pub replan: crate::sched::replan::ReplanPolicy,
+    /// Machine churn injected into every cell.
+    pub churn: crate::chaos::ChurnSpec,
 }
 
 impl Default for SweepSpec {
@@ -67,6 +70,7 @@ impl Default for SweepSpec {
             schedulers: Vec::new(),
             arrivals: crate::workload::ArrivalProcess::Alternating,
             replan: crate::sched::replan::ReplanPolicy::None,
+            churn: crate::chaos::ChurnSpec::None,
         }
     }
 }
@@ -130,6 +134,12 @@ impl SweepSpec {
                 Err(e) => eprintln!("warning: ignoring sweep.replan: {e}"),
             }
         }
+        if let Some(c) = cfg.get("sweep.churn") {
+            match crate::chaos::ChurnSpec::parse(c) {
+                Ok(p) => spec.churn = p,
+                Err(e) => eprintln!("warning: ignoring sweep.churn: {e}"),
+            }
+        }
         spec
     }
 }
@@ -163,12 +173,16 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         .cluster(&cluster)
         .horizon(horizon)
         .replan(sc.replan)
+        .churn(sc.churn.clone(), sc.seed)
         .observer(&mut streaming)
         .run(sched.as_mut());
     debug_assert_eq!(streaming.admitted, result.admitted, "observer drift");
     debug_assert_eq!(streaming.completed, result.completed, "observer drift");
     debug_assert_eq!(streaming.replanned, result.replanned, "observer drift");
+    debug_assert_eq!(streaming.evicted, result.evicted, "observer drift");
+    debug_assert_eq!(streaming.migrated, result.migrated, "observer drift");
     debug_assert_eq!(streaming.solver, result.solver, "observer drift");
+    debug_assert!((streaming.ftf() - result.ftf).abs() <= 1e-12, "observer drift");
     let record = CellRecord {
         key: sc.key(),
         scheduler: sc.scheduler.clone(),
@@ -179,6 +193,9 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         admitted: result.admitted,
         completed: result.completed,
         replanned: result.replanned,
+        evicted: result.evicted,
+        migrated: result.migrated,
+        ftf: result.ftf,
         total_utility: result.total_utility,
         median_training_time: median_training_time(&result),
         theta_solves: result.solver.theta_solves,
@@ -369,6 +386,7 @@ mod tests {
             cluster: ClusterSpec::homogeneous(3),
             seed: 1,
             replan: crate::sched::replan::ReplanPolicy::None,
+            churn: crate::chaos::ChurnSpec::None,
         };
         let reg = SchedulerRegistry::builtin();
         let (result, record) = run_cell(&reg, &sc).unwrap();

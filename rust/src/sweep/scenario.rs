@@ -9,6 +9,7 @@
 //! [`Scenario::key`] is what the [`ResultStore`](super::store::ResultStore)
 //! uses to skip cells already on disk (resumable sweeps).
 
+use crate::chaos::ChurnSpec;
 use crate::cluster::Cluster;
 use crate::config::Config;
 use crate::jobs::Job;
@@ -255,20 +256,29 @@ pub struct Scenario {
     /// Elastic re-planning cadence for this cell (an independent sweep
     /// axis; replan-incapable schedulers no-op).
     pub replan: ReplanPolicy,
+    /// Machine-churn spec for this cell (an independent sweep axis; the
+    /// default [`ChurnSpec::None`] is the byte-identical no-op). Seeded
+    /// specs draw their trace from the cell seed.
+    pub churn: ChurnSpec,
 }
 
 impl Scenario {
     /// Stable cell identity — the [`ResultStore`](super::store::ResultStore)
-    /// dedup key. The replan axis contributes a trailing token only when
-    /// enabled, so every pre-existing store key is unchanged.
+    /// dedup key. The replan and churn axes contribute trailing tokens only
+    /// when enabled, so every pre-existing store key is unchanged.
     pub fn key(&self) -> String {
         let replan = self
             .replan
             .key_token()
             .map(|t| format!("|{t}"))
             .unwrap_or_default();
+        let churn = self
+            .churn
+            .key_token()
+            .map(|t| format!("|{t}"))
+            .unwrap_or_default();
         format!(
-            "{}|{}|{}|seed{}{replan}",
+            "{}|{}|{}|seed{}{replan}{churn}",
             self.scheduler,
             self.workload.key(),
             self.cluster.key(),
@@ -289,6 +299,7 @@ pub struct ScenarioMatrix {
     seeds: Vec<u64>,
     cases: Vec<(WorkloadSpec, ClusterSpec)>,
     replans: Vec<ReplanPolicy>,
+    churns: Vec<ChurnSpec>,
 }
 
 impl ScenarioMatrix {
@@ -336,10 +347,18 @@ impl ScenarioMatrix {
     }
 
     /// Add one replan-cadence axis value (crossed with everything else,
-    /// innermost in cell order). An empty axis means `[none]` — the
+    /// second-innermost in cell order). An empty axis means `[none]` — the
     /// pre-replan matrix, cell for cell.
     pub fn replan(mut self, policy: ReplanPolicy) -> ScenarioMatrix {
         self.replans.push(policy);
+        self
+    }
+
+    /// Add one machine-churn axis value (crossed with everything else,
+    /// innermost in cell order). An empty axis means `[none]` — the
+    /// pre-churn matrix, cell for cell.
+    pub fn churn(mut self, spec: ChurnSpec) -> ScenarioMatrix {
+        self.churns.push(spec);
         self
     }
 
@@ -371,12 +390,21 @@ impl ScenarioMatrix {
         }
     }
 
+    fn churn_values(&self) -> Vec<ChurnSpec> {
+        if self.churns.is_empty() {
+            vec![ChurnSpec::None]
+        } else {
+            self.churns.clone()
+        }
+    }
+
     /// Number of cells the matrix expands to.
     pub fn len(&self) -> usize {
         self.columns().len()
             * self.schedulers.len()
             * self.seed_values().len()
             * self.replan_values().len()
+            * self.churn_values().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -385,25 +413,29 @@ impl ScenarioMatrix {
 
     /// Expand into cells. Ordering contract (callers aggregate by index
     /// arithmetic): columns outermost, then schedulers, then seeds, then
-    /// replan policies — i.e. with a single-valued replan axis (the
-    /// default), cell `(ci, si, ki)` lives at index
+    /// replan policies, then churn specs — i.e. with single-valued replan
+    /// and churn axes (the default), cell `(ci, si, ki)` lives at index
     /// `ci * (num_schedulers * num_seeds) + si * num_seeds + ki`, exactly
-    /// as before the replan axis existed.
+    /// as before those axes existed.
     pub fn cells(&self) -> Vec<Scenario> {
         let seeds = self.seed_values();
         let replans = self.replan_values();
+        let churns = self.churn_values();
         let mut out = Vec::with_capacity(self.len());
         for (w, c) in self.columns() {
             for s in &self.schedulers {
                 for &seed in &seeds {
                     for &replan in &replans {
-                        out.push(Scenario {
-                            scheduler: s.clone(),
-                            workload: w,
-                            cluster: c.clone(),
-                            seed,
-                            replan,
-                        });
+                        for churn in &churns {
+                            out.push(Scenario {
+                                scheduler: s.clone(),
+                                workload: w,
+                                cluster: c.clone(),
+                                seed,
+                                replan,
+                                churn: churn.clone(),
+                            });
+                        }
                     }
                 }
             }
@@ -433,16 +465,28 @@ mod tests {
         let keys: BTreeSet<String> = cells.iter().map(|c| c.key()).collect();
         assert_eq!(keys.len(), 24, "cell keys must be unique");
 
-        // the replan axis crosses everything (innermost) and keeps keys
-        // unique across policies
+        // the replan axis crosses everything and keeps keys unique across
+        // policies
         let m = m.replan(ReplanPolicy::None).replan(ReplanPolicy::Every(2));
         assert_eq!(m.len(), 48);
         let cells = m.cells();
         assert_eq!(cells[0].replan, ReplanPolicy::None);
         assert_eq!(cells[1].replan, ReplanPolicy::Every(2));
-        assert_eq!(cells[0].seed, cells[1].seed, "replan is the innermost axis");
+        assert_eq!(cells[0].seed, cells[1].seed, "replan is inside the seed axis");
         let keys: BTreeSet<String> = cells.iter().map(|c| c.key()).collect();
         assert_eq!(keys.len(), 48);
+
+        // the churn axis is innermost of all
+        let m = m
+            .churn(ChurnSpec::None)
+            .churn(ChurnSpec::Mtbf { mtbf: 40.0, mttr: 8.0 });
+        assert_eq!(m.len(), 96);
+        let cells = m.cells();
+        assert_eq!(cells[0].churn, ChurnSpec::None);
+        assert_eq!(cells[1].churn, ChurnSpec::Mtbf { mtbf: 40.0, mttr: 8.0 });
+        assert_eq!(cells[0].replan, cells[1].replan, "churn is the innermost axis");
+        let keys: BTreeSet<String> = cells.iter().map(|c| c.key()).collect();
+        assert_eq!(keys.len(), 96);
     }
 
     #[test]
@@ -496,12 +540,31 @@ mod tests {
             cluster: ClusterSpec::homogeneous(20),
             seed: 2,
             replan: ReplanPolicy::None,
+            churn: ChurnSpec::None,
         };
         assert_eq!(s.key(), "pd-ors|synth-i50-t20-mixD-b1000|homog-h20|seed2");
         // the replan axis gets its own trailing token; the default policy
         // leaves pre-existing keys untouched
         let r = Scenario { replan: ReplanPolicy::Every(4), ..s.clone() };
         assert_eq!(r.key(), "pd-ors|synth-i50-t20-mixD-b1000|homog-h20|seed2|re4");
+        // churn appends after replan, and alone when replan is off
+        let c = Scenario {
+            churn: ChurnSpec::Mtbf { mtbf: 40.0, mttr: 8.0 },
+            ..s.clone()
+        };
+        assert_eq!(
+            c.key(),
+            "pd-ors|synth-i50-t20-mixD-b1000|homog-h20|seed2|chm40r8"
+        );
+        let rc = Scenario {
+            replan: ReplanPolicy::Every(4),
+            churn: ChurnSpec::Mtbf { mtbf: 40.0, mttr: 8.0 },
+            ..s.clone()
+        };
+        assert_eq!(
+            rc.key(),
+            "pd-ors|synth-i50-t20-mixD-b1000|homog-h20|seed2|re4|chm40r8"
+        );
         let t = Scenario { cluster: ClusterSpec::skewed(20, 2.0), ..s.clone() };
         assert_ne!(s.key(), t.key());
         let u = Scenario {

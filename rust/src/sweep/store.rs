@@ -33,6 +33,14 @@ pub struct CellRecord {
     /// Jobs whose plan an elastic replan round changed (0 with
     /// `replan = none`; deterministic, so part of the metrics line).
     pub replanned: usize,
+    /// Stranded admissions dropped by machine churn (0 with
+    /// `churn = none`; deterministic, so part of the metrics line).
+    pub evicted: usize,
+    /// Stranded admissions re-solved onto surviving machines.
+    pub migrated: usize,
+    /// Mean finish-time fairness over completed jobs (0 when none
+    /// completed).
+    pub ftf: f64,
     pub total_utility: f64,
     pub median_training_time: f64,
     /// Solver diagnostics (zeros for non-θ policies; see
@@ -56,6 +64,9 @@ impl CellRecord {
             ("admitted", json::num(self.admitted as f64)),
             ("completed", json::num(self.completed as f64)),
             ("replanned", json::num(self.replanned as f64)),
+            ("evicted", json::num(self.evicted as f64)),
+            ("migrated", json::num(self.migrated as f64)),
+            ("ftf", json::num(self.ftf)),
             ("total_utility", json::num(self.total_utility)),
             ("median_training_time", json::num(self.median_training_time)),
         ]
@@ -107,6 +118,10 @@ impl CellRecord {
             completed: num_field("completed")? as usize,
             // tolerate pre-replan lines without the field
             replanned: opt_u64(v, "replanned") as usize,
+            // tolerate pre-churn lines without the fields
+            evicted: opt_u64(v, "evicted") as usize,
+            migrated: opt_u64(v, "migrated") as usize,
+            ftf: opt_f64(v, "ftf"),
             total_utility: num_field("total_utility")?,
             median_training_time: num_field("median_training_time")?,
             // tolerate older/foreign lines without the diagnostic fields
@@ -129,6 +144,12 @@ fn opt_u64(v: &Json, key: &str) -> u64 {
     v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
 }
 
+/// Optional float field (0.0 when absent — older lines predate the churn
+/// metrics).
+fn opt_f64(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
 /// One aggregated row of [`ResultStore::summary`]: all seeds of one
 /// (scheduler, workload, cluster) scenario group.
 #[derive(Debug, Clone, PartialEq)]
@@ -140,6 +161,12 @@ pub struct SummaryRow {
     pub mean_utility: f64,
     pub mean_completed: f64,
     pub mean_median_training_time: f64,
+    /// Mean finish-time fairness across seeds (0 when no jobs completed).
+    pub mean_ftf: f64,
+    /// Totals across seeds for the elastic/churn counters.
+    pub total_replanned: usize,
+    pub total_evicted: usize,
+    pub total_migrated: usize,
     pub total_wall_secs: f64,
 }
 
@@ -254,6 +281,10 @@ impl ResultStore {
                         .map(|r| r.median_training_time)
                         .sum::<f64>()
                         / n,
+                    mean_ftf: rs.iter().map(|r| r.ftf).sum::<f64>() / n,
+                    total_replanned: rs.iter().map(|r| r.replanned).sum(),
+                    total_evicted: rs.iter().map(|r| r.evicted).sum(),
+                    total_migrated: rs.iter().map(|r| r.migrated).sum(),
                     total_wall_secs: rs.iter().map(|r| r.wall_secs).sum(),
                 }
             })
@@ -276,6 +307,9 @@ mod tests {
             admitted: 7,
             completed: 6,
             replanned: 2,
+            evicted: 1,
+            migrated: 3,
+            ftf: 1.25,
             total_utility: utility,
             median_training_time: 4.5,
             theta_solves: 200,
@@ -365,6 +399,10 @@ mod tests {
         assert_eq!(rows[0].seeds, 4);
         assert!((rows[0].mean_utility - 15.0).abs() < 1e-12);
         assert!((rows[0].total_wall_secs - 2.0).abs() < 1e-12);
+        assert!((rows[0].mean_ftf - 1.25).abs() < 1e-12);
+        assert_eq!(rows[0].total_replanned, 8);
+        assert_eq!(rows[0].total_evicted, 4);
+        assert_eq!(rows[0].total_migrated, 12);
         let _ = std::fs::remove_file(&path_a);
         let _ = std::fs::remove_file(&path_b);
     }

@@ -1,16 +1,20 @@
-//! Property tests over the admission stack (PR 5 satellite): across
-//! random jobs × every ZOO scheduler × homogeneous/skewed clusters —
-//! with and without elastic re-planning — the `AllocLedger` never
-//! exceeds per-slot per-machine capacity, no committed schedule leaves
-//! `[arrival, horizon)`, and the credited total utility equals the sum
-//! of the per-job completion credits. 256 seeded cases per scheduler
+//! Property tests over the admission stack (PR 5 satellite, extended
+//! with machine churn in PR 6): across random jobs × every ZOO scheduler
+//! × homogeneous/skewed clusters — with and without elastic re-planning
+//! and seeded MTBF/MTTR churn — the `AllocLedger` never exceeds per-slot
+//! per-machine capacity, no committed schedule leaves `[arrival,
+//! horizon)`, no tracked admission keeps work on a hard-down machine
+//! after the migration pass, and the credited total utility equals the
+//! sum of the per-job completion credits (as rewritten by replans,
+//! migrations, and evictions). 256 seeded cases per scheduler
 //! (`testkit::check` reports the failing case seed for reproduction).
 
 use std::collections::BTreeMap;
 
+use dmlrs::chaos::{ChurnEvent, ChurnSpec, ChurnTrace};
 use dmlrs::prop_assert;
 use dmlrs::sched::registry::{SchedulerRegistry, SchedulerSpec};
-use dmlrs::sched::replan::{run_replan_pass, ReplanPolicy};
+use dmlrs::sched::replan::{run_migration_pass, run_replan_pass, ReplanPolicy};
 use dmlrs::sim::{AdmissionCore, AdmissionOutcome};
 use dmlrs::testkit;
 use dmlrs::util::Rng;
@@ -39,6 +43,15 @@ fn drive_case(rng: &mut Rng, key: &str) -> Result<(), String> {
     } else {
         paper_cluster(machines)
     };
+    let churn = if rng.chance(0.4) {
+        ChurnSpec::Mtbf {
+            mtbf: rng.range_usize(3, 8) as f64,
+            mttr: rng.range_usize(2, 4) as f64,
+        }
+    } else {
+        ChurnSpec::None
+    };
+    let churn_seed = rng.next_u64();
     let workload_seed = rng.next_u64();
     let jobs = synthetic_jobs(
         &SynthConfig::paper(num_jobs, horizon, MIX_DEFAULT),
@@ -57,6 +70,13 @@ fn drive_case(rng: &mut Rng, key: &str) -> Result<(), String> {
     if replan.is_enabled() && sched.replan_capable() {
         core.set_replan_tracking(true);
     }
+    let trace = ChurnTrace::generate(&churn, machines, horizon, churn_seed);
+    if trace.is_some() {
+        core.set_churn_tracking(true);
+    }
+    // machines currently hard-down (MTBF traces never drain, so a masked
+    // machine must hold no tracked work from its failure slot on)
+    let mut down_set: Vec<bool> = vec![false; machines];
 
     // planned[job] = utility the pending table should eventually credit
     let mut planned: BTreeMap<usize, f64> = BTreeMap::new();
@@ -83,6 +103,65 @@ fn drive_case(rng: &mut Rng, key: &str) -> Result<(), String> {
     };
 
     for t in 0..horizon {
+        // the engine's SlotStart order: churn events + migration pass
+        // land before any replan round at the same boundary
+        if let Some(tr) = &trace {
+            let mut down_now = Vec::new();
+            for &(h, e) in tr.events_at(t) {
+                match e {
+                    ChurnEvent::Down => {
+                        core.ledger_mut().set_available_from(h, t, false);
+                        down_set[h] = true;
+                        down_now.push(h);
+                    }
+                    ChurnEvent::Drain => {
+                        core.ledger_mut().set_available_from(h, t, false);
+                        down_set[h] = true;
+                    }
+                    ChurnEvent::Rejoin => {
+                        core.ledger_mut().set_available_from(h, t, true);
+                        down_set[h] = false;
+                    }
+                }
+            }
+            let report = run_migration_pass(&mut core, sched.as_mut(), t, &down_now);
+            for r in &report.records {
+                if let Some(of) = r.old_finish {
+                    prop_assert!(of.slot < horizon, "stale finish beyond horizon");
+                    pending[of.slot].retain(|&(id, _)| id != r.job_id);
+                }
+                planned.remove(&r.job_id);
+                if !r.evicted {
+                    if let Some(nf) = r.new_finish {
+                        prop_assert!(
+                            nf.slot < horizon && nf.slot >= t,
+                            "migrated completion {} outside [{t}, {horizon})",
+                            nf.slot
+                        );
+                        pending[nf.slot].push((r.job_id, nf.utility));
+                        planned.insert(r.job_id, nf.utility);
+                    }
+                }
+            }
+            let down_list: Vec<usize> = down_set
+                .iter()
+                .enumerate()
+                .filter(|&(_, d)| *d)
+                .map(|(h, _)| h)
+                .collect();
+            for ta in core.tracked_admissions() {
+                prop_assert!(
+                    !ta.strands_on(&down_list, t),
+                    "tracked admission for job {} still holds work on a down \
+                     machine after the migration pass at t={t}",
+                    ta.job.id
+                );
+            }
+            if !tr.events_at(t).is_empty() {
+                check_capacity(&core, &format!("after churn events at t={t}"))?;
+            }
+        }
+
         if replan.fires_at(t) {
             let report = run_replan_pass(&mut core, sched.as_mut(), t);
             for r in &report.records {
@@ -159,7 +238,7 @@ fn drive_case(rng: &mut Rng, key: &str) -> Result<(), String> {
     prop_assert!(
         (credited - expected).abs() <= 1e-6 * (1.0 + expected.abs()),
         "utility accounting drift: credited {credited}, expected {expected} \
-         (replan {replan:?})"
+         (replan {replan:?}, churn {churn:?})"
     );
     prop_assert!(
         core.ledger().within_capacity(1e-6),

@@ -68,6 +68,32 @@ fn replan_none_is_byte_identical_across_the_zoo() {
 }
 
 #[test]
+fn churn_none_is_byte_identical_across_the_zoo() {
+    // The PR 6 half of the no-op contract: `churn = none` must leave the
+    // whole stack untouched — explicit-off and knob-untouched runs are
+    // fully equal (outcomes, ftf, solver counters, zero churn activity).
+    use dmlrs::chaos::ChurnSpec;
+    for (shape, cluster) in clusters() {
+        for key in ZOO {
+            let default = run(key, &cluster, None);
+            let reg = SchedulerRegistry::builtin();
+            let jobs = workload();
+            let spec = SchedulerSpec::new(key).with_seed(SCHED_SEED);
+            let mut sched = reg.build(&spec, &jobs, &cluster, HORIZON).unwrap();
+            let explicit_off = SimEngine::builder()
+                .jobs(&jobs)
+                .cluster(&cluster)
+                .horizon(HORIZON)
+                .churn(ChurnSpec::None, SCHED_SEED)
+                .run(sched.as_mut());
+            assert_eq!(default, explicit_off, "{key} on {shape}");
+            assert_eq!(explicit_off.evicted, 0, "{key} on {shape}");
+            assert_eq!(explicit_off.migrated, 0, "{key} on {shape}");
+        }
+    }
+}
+
+#[test]
 fn replan_rounds_are_noops_for_incapable_schedulers() {
     for (shape, cluster) in clusters() {
         for key in ["fifo", "drf", "dorm"] {
@@ -106,6 +132,7 @@ fn replan_enabled_service_matches_engine() {
             scheduler: SchedulerSpec::new(key).with_seed(seed).with_replan(policy),
             cluster: cluster_spec.clone(),
             workload,
+            churn: dmlrs::chaos::ChurnSpec::None,
         })
         .unwrap();
         let mut next = 0usize;

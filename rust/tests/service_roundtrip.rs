@@ -11,13 +11,14 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 
+use dmlrs::chaos::ChurnSpec;
 use dmlrs::jobs::Job;
 use dmlrs::sched::registry::{SchedulerSpec, ZOO};
 use dmlrs::sched::replan::ReplanPolicy;
 use dmlrs::service::{
     start_daemon, DaemonConfig, Request, ServiceConfig, ServiceCore,
 };
-use dmlrs::sim::simulate;
+use dmlrs::sim::{simulate, SimEngine};
 use dmlrs::sweep::{ClusterSpec, WorkloadSpec};
 use dmlrs::util::json::Json;
 
@@ -61,6 +62,7 @@ fn concurrent_submits_recover_to_identical_state() {
         scheduler: SchedulerSpec::new("pd-ors").with_seed(2),
         cluster: ClusterSpec::homogeneous(6),
         workload: WorkloadSpec::synthetic(16, 10, 0),
+        churn: ChurnSpec::None,
     };
     let mut dcfg = DaemonConfig::new(service.clone());
     dcfg.oplog = Some(path.clone());
@@ -133,6 +135,7 @@ fn daemon_matches_sim_engine_across_the_zoo() {
             scheduler: SchedulerSpec::new(key).with_seed(seed),
             cluster: cluster_spec.clone(),
             workload,
+            churn: ChurnSpec::None,
         };
         let handle = start_daemon(DaemonConfig::new(service)).expect("daemon starts");
         let mut client = Client::connect(handle.addr);
@@ -201,6 +204,7 @@ fn recover_repairs_oplog_truncated_mid_replan_record() {
             .with_replan(ReplanPolicy::Every(2)),
         cluster: ClusterSpec::homogeneous(6),
         workload: WorkloadSpec::synthetic(10, 10, 0),
+        churn: ChurnSpec::None,
     };
     let jobs = service.workload.jobs(7);
     let expected = {
@@ -248,6 +252,175 @@ fn recover_repairs_oplog_truncated_mid_replan_record() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// PR 6 lockstep parity: the same arrival sequence plus the same machine
+/// failures/rejoins — injected into the daemon as `machine_down` /
+/// `machine_up` wire ops, and into the engine as an explicit churn event
+/// list — must produce identical completions, migrations, evictions,
+/// finish-time fairness, utility, and solver work. The daemon serves with
+/// an out-of-horizon event list (the manual-injection idiom: tracking on,
+/// nothing fires automatically) so the wire ops are the only churn.
+#[test]
+fn daemon_matches_sim_engine_under_wire_churn() {
+    let horizon = 12usize;
+    let seed = 3u64;
+    let workload = WorkloadSpec::synthetic(20, horizon, 0);
+    let cluster_spec = ClusterSpec::homogeneous(8);
+    let churn = ChurnSpec::parse("down@3:1,down@5:2,up@8:1").unwrap();
+
+    // --- engine side: the trace fires the events at SlotStart ---
+    let jobs = workload.jobs(seed);
+    let cluster = cluster_spec.build();
+    let reg = dmlrs::sched::SchedulerRegistry::builtin();
+    let mut sched = reg.build_named("pd-ors", seed, &jobs, &cluster, horizon).unwrap();
+    let sim = SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(&cluster)
+        .horizon(horizon)
+        .churn(churn, seed)
+        .run(sched.as_mut());
+
+    // --- daemon side: the same events as wire ops at the same slots ---
+    let service = ServiceConfig {
+        scheduler: SchedulerSpec::new("pd-ors").with_seed(seed),
+        cluster: cluster_spec,
+        workload,
+        churn: ChurnSpec::parse("down@900:1").unwrap(),
+    };
+    let handle = start_daemon(DaemonConfig::new(service)).expect("daemon starts");
+    let mut client = Client::connect(handle.addr);
+    let mut next = 0usize;
+    for t in 0..horizon {
+        // SlotStart ordering: churn ops land before this slot's arrivals,
+        // exactly where the engine applies its trace events
+        if t == 3 {
+            client.roundtrip(&Request::MachineDown { machine: 1 });
+        }
+        if t == 5 {
+            client.roundtrip(&Request::MachineDown { machine: 2 });
+        }
+        if t == 8 {
+            client.roundtrip(&Request::MachineUp { machine: 1 });
+        }
+        while next < jobs.len() && jobs[next].arrival <= t {
+            client.roundtrip(&Request::Submit { job: jobs[next].clone() });
+            next += 1;
+        }
+        client.roundtrip(&Request::Tick);
+    }
+    client.roundtrip(&Request::Shutdown);
+    let report = handle.join().expect("clean drain");
+
+    assert_eq!(report.submitted, jobs.len());
+    assert_eq!(report.completed, sim.completed, "completions diverged");
+    assert_eq!(report.evicted, sim.evicted, "evictions diverged");
+    assert_eq!(report.migrated, sim.migrated, "migrations diverged");
+    assert!(
+        (report.total_utility - sim.total_utility).abs() < 1e-9,
+        "utility diverged: daemon {} vs engine {}",
+        report.total_utility,
+        sim.total_utility
+    );
+    assert!(
+        (report.ftf - sim.ftf).abs() < 1e-9,
+        "ftf diverged: daemon {} vs engine {}",
+        report.ftf,
+        sim.ftf
+    );
+    assert_eq!(report.solver, sim.solver, "same solver work");
+}
+
+/// PR 6 crash injection: a daemon dies mid-write of a `machine_down`
+/// op-log record. `--recover` must repair the journal, replay the
+/// surviving prefix — including the journaled wire churn ops — to a
+/// byte-identical ledger, and resume appending cleanly.
+#[test]
+fn recover_repairs_oplog_truncated_mid_machine_down_record() {
+    let path = tmp_path("churn_crash");
+    let _ = std::fs::remove_file(&path);
+    let service = ServiceConfig {
+        scheduler: SchedulerSpec::new("pd-ors").with_seed(7),
+        cluster: ClusterSpec::homogeneous(6),
+        workload: WorkloadSpec::synthetic(10, 10, 0),
+        churn: ChurnSpec::parse("down@900:1").unwrap(),
+    };
+    let jobs = service.workload.jobs(7);
+    let expected = {
+        let mut core = ServiceCore::new(service.clone()).unwrap();
+        core.attach_log(&path).unwrap();
+        let mut next = 0usize;
+        for t in 0..6usize {
+            if t == 3 {
+                let resp = core.machine_down(1);
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+            }
+            if t == 5 {
+                let resp = core.machine_up(1);
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+            }
+            while next < jobs.len() && jobs[next].arrival <= t {
+                core.submit(jobs[next].clone());
+                next += 1;
+            }
+            core.tick();
+        }
+        core.report()
+    };
+
+    // crash mid-machine_down-record: a truncated line with no newline
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"op\":\"machine_down\",\"slot\":6,\"mach").unwrap();
+    }
+
+    let mut recovered = ServiceCore::recover(service.clone(), &path).unwrap();
+    assert_eq!(
+        recovered.report(),
+        expected,
+        "replay after repair must reproduce the pre-crash state exactly"
+    );
+
+    // the repaired log accepts new churn ops and replays again cleanly
+    recovered.machine_down(2);
+    recovered.tick();
+    let after = recovered.report();
+    drop(recovered);
+    let again = ServiceCore::recover(service, &path).unwrap();
+    assert_eq!(again.report(), after);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The op-log config header records an enabled churn spec; replaying it
+/// into a daemon configured without one (or with a different one) is
+/// config drift and must be refused.
+#[test]
+fn recover_rejects_churn_config_drift() {
+    let path = tmp_path("churn_drift");
+    let _ = std::fs::remove_file(&path);
+    let with_churn = ServiceConfig {
+        scheduler: SchedulerSpec::new("pd-ors").with_seed(3),
+        cluster: ClusterSpec::homogeneous(4),
+        workload: WorkloadSpec::synthetic(6, 8, 0),
+        churn: ChurnSpec::parse("down@3:1,up@5:1").unwrap(),
+    };
+    {
+        let mut core = ServiceCore::new(with_churn.clone()).unwrap();
+        core.attach_log(&path).unwrap();
+        core.tick();
+    }
+    // churn-less daemon refuses the churny log
+    let mut without = with_churn.clone();
+    without.churn = ChurnSpec::None;
+    let e = ServiceCore::recover(without, &path).unwrap_err();
+    assert!(e.to_string().contains("churn"), "{e}");
+    // ...and so does a daemon with a *different* churn spec
+    let mut other = with_churn;
+    other.churn = ChurnSpec::parse("mtbf:40,mttr:8").unwrap();
+    let e = ServiceCore::recover(other, &path).unwrap_err();
+    assert!(e.to_string().contains("churn"), "{e}");
+    let _ = std::fs::remove_file(&path);
+}
+
 /// The op-log config header records an enabled replan cadence; replaying
 /// it into a daemon configured without one is config drift and must be
 /// refused.
@@ -261,6 +434,7 @@ fn recover_rejects_replan_config_drift() {
             .with_replan(ReplanPolicy::Every(4)),
         cluster: ClusterSpec::homogeneous(4),
         workload: WorkloadSpec::synthetic(6, 8, 0),
+        churn: ChurnSpec::None,
     };
     {
         let mut core = ServiceCore::new(with_replan.clone()).unwrap();

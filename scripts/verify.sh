@@ -154,4 +154,77 @@ if awk -v off="$OFF_UTIL" -v on="$ON_UTIL" 'BEGIN { exit !(on + 1e-9 < off) }'; 
 fi
 rm -f "$REPLAN_OFF" "$REPLAN_ON"
 
+echo "== churn bench (churny quick sweep: faults, migrations, FTF) =="
+# Run the quick sweep with seeded MTBF/MTTR machine churn plus elastic
+# re-planning and emit BENCH_churn.json. The churny run must actually
+# interrupt and migrate started jobs (zero migrations means the fault
+# path is wired off) and every cell must report finish-time fairness.
+CHURN_OFF=target/bench_churn_off.jsonl
+CHURN_ON=target/bench_churn_on.jsonl
+rm -f "$CHURN_OFF" "$CHURN_ON"
+"$BIN" sweep --quick --schedulers pd-ors,oasis --seeds 3 \
+    --replan every:2 --jobs "$PAR" --out "$CHURN_OFF" >/dev/null
+"$BIN" sweep --quick --schedulers pd-ors,oasis --seeds 3 \
+    --replan every:2 --churn mtbf:40,mttr:8 --jobs "$PAR" --out "$CHURN_ON" >/dev/null
+OFF_UTIL=$(sum_field "$CHURN_OFF" total_utility)
+ON_UTIL=$(sum_field "$CHURN_ON" total_utility)
+EVICTED=$(sum_field "$CHURN_ON" evicted | awk '{printf "%.0f", $0}')
+MIGRATED=$(sum_field "$CHURN_ON" migrated | awk '{printf "%.0f", $0}')
+FTF_SUM=$(sum_field "$CHURN_ON" ftf)
+CELLS=$(wc -l < "$CHURN_ON" | tr -d ' ')
+FTF_LINES=$(grep -c '"ftf":' "$CHURN_ON" || true)
+awk -v off="$OFF_UTIL" -v on="$ON_UTIL" -v ev="$EVICTED" -v mi="$MIGRATED" \
+    -v ftf="$FTF_SUM" -v cells="$CELLS" 'BEGIN {
+    loss = (off > 0) ? (off - on) / off : 0;
+    mean_ftf = (cells > 0) ? ftf / cells : 0;
+    printf "{\"bench\": \"churn_quick_sweep\", \"cells\": %d, \"churn\": \"mtbf:40,mttr:8\", \"evicted_jobs\": %d, \"migrated_jobs\": %d, \"mean_ftf\": %.3f, \"utility_churn_off\": %.3f, \"utility_churn_on\": %.3f, \"utility_loss\": %.4f}\n", cells, ev, mi, mean_ftf, off, on, loss;
+}' > ../BENCH_churn.json
+cat ../BENCH_churn.json
+if [ "${MIGRATED:-0}" -eq 0 ]; then
+    echo "error: the churny sweep migrated zero started jobs" >&2
+    exit 1
+fi
+if [ "${FTF_LINES:-0}" -ne "$CELLS" ]; then
+    echo "error: only $FTF_LINES of $CELLS churny cells report an ftf field" >&2
+    exit 1
+fi
+rm -f "$CHURN_OFF" "$CHURN_ON"
+
+echo "== bench baseline gate (BENCH_TREND.json) =="
+# Committed per-PR bench baselines: BENCH_TREND.json holds one JSON line
+# per bench. Deterministic metrics are compared against the baseline and
+# regressions beyond the thresholds are fatal; a bench with no baseline
+# entry yet records one (commit the updated file to pin it).
+TREND=../BENCH_TREND.json
+touch "$TREND"
+# extract "<field>": <value> from a single JSON line on stdin
+json_field() {
+    awk -v f="\"$1\":" '{
+        n = index($0, f);
+        if (n) { s = substr($0, n + length(f)); sub(/[,}].*/, "", s); gsub(/[" ]/, "", s); print s; exit }
+    }'
+}
+CURRENT=$(cat ../BENCH_churn.json)
+BASE=$(grep '"bench": "churn_quick_sweep"' "$TREND" | head -n 1 || true)
+if [ -n "$BASE" ]; then
+    BASE_UTIL=$(printf '%s\n' "$BASE" | json_field utility_churn_on)
+    NEW_UTIL=$(printf '%s\n' "$CURRENT" | json_field utility_churn_on)
+    BASE_FTF=$(printf '%s\n' "$BASE" | json_field mean_ftf)
+    NEW_FTF=$(printf '%s\n' "$CURRENT" | json_field mean_ftf)
+    # utility under churn must not drop >5% below the pinned baseline
+    if awk -v b="$BASE_UTIL" -v n="$NEW_UTIL" 'BEGIN { exit !(b > 0 && n < 0.95 * b) }'; then
+        echo "error: churny utility regressed beyond 5%: $NEW_UTIL vs baseline $BASE_UTIL" >&2
+        exit 1
+    fi
+    # mean FTF (training time / ideal; higher = worse) must not grow >10%
+    if awk -v b="$BASE_FTF" -v n="$NEW_FTF" 'BEGIN { exit !(b > 0 && n > 1.10 * b) }'; then
+        echo "error: mean finish-time fairness regressed beyond 10%: $NEW_FTF vs baseline $BASE_FTF" >&2
+        exit 1
+    fi
+    echo "churn bench within baseline thresholds (utility $NEW_UTIL vs $BASE_UTIL, ftf $NEW_FTF vs $BASE_FTF)"
+else
+    printf '%s\n' "$CURRENT" >> "$TREND"
+    echo "recorded new churn baseline in BENCH_TREND.json — commit it to pin"
+fi
+
 echo "verify: OK"
