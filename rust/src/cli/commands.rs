@@ -169,6 +169,14 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
 
     let mut trace = TraceObserver::new();
     let want_events = args.bool("events");
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let mut telemetry = crate::obs::export::TelemetryObserver::new();
+    if trace_out.is_some() {
+        // full instrumentation for the exported trace; telemetry is
+        // deterministically inert, so the schedule is unchanged
+        crate::obs::set_flags(crate::obs::ALL);
+        crate::obs::reset();
+    }
     let mut builder = SimEngine::builder()
         .jobs(&jobs)
         .cluster(&cluster)
@@ -178,9 +186,20 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
     if want_events {
         builder = builder.observer(&mut trace);
     }
+    if trace_out.is_some() {
+        builder = builder.observer(&mut telemetry);
+    }
     let res = builder.run(sched.as_mut());
     for line in trace.lines() {
         println!("{line}");
+    }
+    if let Some(path) = &trace_out {
+        crate::obs::flush_local();
+        telemetry
+            .write_chrome_trace(path)
+            .map_err(|e| err!("--trace-out {path}: {e}"))?;
+        crate::obs::set_flags(0);
+        eprintln!("wrote {path} (open in Perfetto or chrome://tracing)");
     }
 
     println!(
@@ -570,6 +589,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     dcfg.queue_cap = args.usize_or("queue", 64);
     dcfg.oplog = args.get("oplog").map(str::to_string);
     dcfg.recover = args.get("recover").map(str::to_string);
+    dcfg.prom_addr = args.get("prom-addr").map(str::to_string);
+
+    // the daemon always records span histograms + the flight ring (the
+    // metrics_prom/debug_dump ops serve them); the per-span trace buffer
+    // stays off — nothing drains it while serving
+    crate::obs::set_flags(crate::obs::SPANS | crate::obs::FLIGHT);
+    crate::obs::flight::install_panic_dump();
 
     crate::service::install_term_handler();
     let svc = &dcfg.service;
@@ -647,8 +673,8 @@ pub fn cmd_load(args: &Args) -> Result<()> {
         report.admitted, report.rejected, report.deferred, report.errors
     );
     println!(
-        "  admission latency ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3} max={:.3}",
-        report.p50_ms, report.p95_ms, report.p99_ms, report.mean_ms, report.max_ms
+        "  admission latency ms: p50={:.3} p95={:.3} p99={:.3} p999={:.3} mean={:.3} max={:.3}",
+        report.p50_ms, report.p95_ms, report.p99_ms, report.p999_ms, report.mean_ms, report.max_ms
     );
     // write the artifact before failing on errors — the numbers that
     // explain a bad run are exactly the ones worth keeping

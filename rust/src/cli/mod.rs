@@ -44,6 +44,12 @@ fn dispatch(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    // Logging is wired before any command runs: --log-level wins, the
+    // DMLRS_LOG env var is the fallback, Info is the default.
+    if let Err(e) = crate::util::logger::init_from(args.get("log-level")) {
+        eprintln!("error: {e}");
+        return 2;
+    }
     let result = match cmd.as_str() {
         "schedule" => commands::cmd_schedule(&args),
         "compare" => commands::cmd_compare(&args),
@@ -95,6 +101,9 @@ COMMANDS:
               to a churn-less run; see chaos/)
               [--dp-units N] [--no-theta-cache]  solver knobs (the cache
               is semantically invisible; disabling it is the parity oracle)
+              [--trace-out run.json]  write a Chrome trace-event JSON of
+              the run's pipeline spans + engine events (open in Perfetto
+              or chrome://tracing; telemetry never changes the schedule)
   compare     run the full zoo    (same flags; runs through the parallel
               sweep runner) [--par N] [--out results/compare.jsonl]
               [--no-theta-cache] [--replan every:K] [--churn SPEC]
@@ -123,8 +132,11 @@ COMMANDS:
               also unlocks the machine_down/machine_up wire ops)
               [--oplog PATH] (crash-recovery journal) [--recover PATH]
               (replay a journal, then resume appending to it)
+              [--prom-addr 127.0.0.1:9901] (also serve the Prometheus
+              text exposition over plain HTTP at this address)
               protocol: one JSON request per line — submit/tick/status/
-              cluster/metrics/replan/machine_down/machine_up/shutdown
+              cluster/metrics/metrics_prom/debug_dump/replan/
+              machine_down/machine_up/shutdown
               (see rust/src/service/protocol.rs)
   load        load generator      --addr HOST:PORT [--connections N]
               [--rate R] (target submissions/sec, open loop) --jobs N
@@ -135,6 +147,9 @@ COMMANDS:
               p50/p95/p99 admission latency
   bounds      pricing constants   --machines N --jobs N --horizon N
   help        this text
+
+Global flags: --log-level error|warn|info|debug|trace (every command;
+the DMLRS_LOG environment variable is the fallback, default info)
 
 Config file: --config path.conf (keys mirror the flags; a [scheduler]
 section feeds the typed SchedulerSpec, a [sweep] section the typed

@@ -38,6 +38,11 @@
 //!   traces (`ChurnSpec`/`ChurnTrace`) that take capacity out of the
 //!   ledger mid-horizon, forcing started jobs to migrate (or be evicted)
 //!   and surfacing finish-time fairness as a first-class metric.
+//! * [`obs`] — unified telemetry: RAII pipeline spans into mergeable
+//!   log₂ histograms, a bounded flight recorder, Chrome-trace/Perfetto
+//!   export for any engine run, and Prometheus text exposition from the
+//!   daemon. Deterministically inert: no RNG, no schedule perturbation,
+//!   one relaxed atomic load when disabled.
 //! * [`experiments`] — one driver per paper figure (5–17), executed
 //!   through the sweep runner.
 //! * [`util`], [`testkit`], [`cli`], [`config`] — substrates built from
@@ -70,6 +75,7 @@ pub mod experiments;
 pub mod ilp;
 pub mod jobs;
 pub mod lp;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod service;

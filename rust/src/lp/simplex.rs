@@ -224,6 +224,7 @@ impl LpWorkspace {
     /// Solve `p` in place. Allocation-free once the buffers have grown to
     /// the problem size; the solution stays in the workspace.
     pub fn solve(&mut self, p: &LpProblem) -> LpStatus {
+        let _span = crate::obs::span(crate::obs::Stage::LpSolve);
         let nv = p.num_vars;
         let m = p.rows.len();
         self.x.clear();

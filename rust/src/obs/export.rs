@@ -1,0 +1,215 @@
+//! Telemetry export: Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing`) and Prometheus text exposition.
+
+use std::sync::Mutex;
+
+use crate::obs::hist::Histogram;
+use crate::obs::{Stage, StageSet, ALL_STAGES};
+use crate::sim::events::{SimEvent, SimObserver};
+use crate::util::json::{self, Json};
+
+/// Trace-buffer cap; beyond it events are dropped and counted (a quick
+/// figure run emits a few thousand spans, nowhere near this).
+const TRACE_CAPACITY: usize = 1 << 20;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpan {
+    pub stage: Stage,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+}
+
+struct TraceBuf {
+    spans: Vec<TraceSpan>,
+    dropped: u64,
+}
+
+static TRACE_BUF: Mutex<TraceBuf> = Mutex::new(TraceBuf { spans: Vec::new(), dropped: 0 });
+
+pub(crate) fn push_trace(stage: Stage, ts_us: u64, dur_us: u64, tid: u64) {
+    let mut buf = TRACE_BUF.lock().unwrap();
+    if buf.spans.len() >= TRACE_CAPACITY {
+        buf.dropped += 1;
+        return;
+    }
+    buf.spans.push(TraceSpan { stage, ts_us, dur_us, tid });
+}
+
+pub(crate) fn clear_trace() {
+    let mut buf = TRACE_BUF.lock().unwrap();
+    buf.spans.clear();
+    buf.dropped = 0;
+}
+
+/// Drain the buffered spans (and the drop count) for export.
+pub fn drain_trace() -> (Vec<TraceSpan>, u64) {
+    let mut buf = TRACE_BUF.lock().unwrap();
+    let dropped = buf.dropped;
+    buf.dropped = 0;
+    (std::mem::take(&mut buf.spans), dropped)
+}
+
+/// A [`SimObserver`] that timestamps every engine event as a Chrome
+/// trace *instant* event, to interleave with the span rows. Purely
+/// passive: it never touches the schedule or the RNG.
+#[derive(Default)]
+pub struct TelemetryObserver {
+    instants: Vec<(&'static str, u64, u64)>, // (label, ts_us, tid)
+}
+
+impl TelemetryObserver {
+    pub fn new() -> TelemetryObserver {
+        TelemetryObserver::default()
+    }
+
+    /// Drain the span buffer plus this observer's instants into one
+    /// Chrome trace-event JSON document.
+    pub fn chrome_trace_json(&mut self) -> String {
+        let (spans, dropped) = drain_trace();
+        let instants = std::mem::take(&mut self.instants);
+        chrome_trace_json(&spans, &instants, dropped)
+    }
+
+    pub fn write_chrome_trace(&mut self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_trace_json())
+    }
+}
+
+impl SimObserver for TelemetryObserver {
+    fn on_event(&mut self, ev: &SimEvent) {
+        if crate::obs::flags() & crate::obs::TRACE != 0 {
+            self.instants.push((ev.kind(), crate::obs::now_us(), crate::obs::thread_id()));
+        }
+    }
+}
+
+/// Serialize spans + instants in the Chrome trace-event format
+/// (`ph:"X"` complete events, `ph:"i"` instants) that Perfetto and
+/// `chrome://tracing` load directly.
+pub fn chrome_trace_json(
+    spans: &[TraceSpan],
+    instants: &[(&'static str, u64, u64)],
+    dropped: u64,
+) -> String {
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + instants.len());
+    for s in spans {
+        events.push(json::obj(vec![
+            ("name", json::s(s.stage.name())),
+            ("cat", json::s("dmlrs")),
+            ("ph", json::s("X")),
+            ("ts", json::num(s.ts_us as f64)),
+            ("dur", json::num(s.dur_us as f64)),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(s.tid as f64)),
+        ]));
+    }
+    for (label, ts_us, tid) in instants {
+        events.push(json::obj(vec![
+            ("name", json::s(label)),
+            ("cat", json::s("dmlrs-event")),
+            ("ph", json::s("i")),
+            ("s", json::s("t")),
+            ("ts", json::num(*ts_us as f64)),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(*tid as f64)),
+        ]));
+    }
+    json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+        ("otherData", json::obj(vec![("dropped_spans", json::num(dropped as f64))])),
+    ])
+    .to_string()
+}
+
+/// Render a [`StageSet`] as Prometheus text exposition (format 0.0.4):
+/// one `dmlrs_stage_duration_us` histogram family with a `stage` label,
+/// cumulative log₂ `le` bounds, `_sum`/`_count` per stage, plus a
+/// `dmlrs_stage_max_us` gauge.
+pub fn prometheus_text(stages: &StageSet) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    out.push_str(
+        "# HELP dmlrs_stage_duration_us Pipeline span durations per stage (microseconds).\n",
+    );
+    out.push_str("# TYPE dmlrs_stage_duration_us histogram\n");
+    for st in ALL_STAGES {
+        let h = stages.get(st);
+        let name = st.name();
+        let mut cum = 0u64;
+        for (i, b) in h.buckets().iter().enumerate() {
+            cum += b;
+            // skip interior empty buckets once everything is counted,
+            // but always emit the +Inf bound
+            let bound = Histogram::bucket_bound(i);
+            if bound == u64::MAX {
+                let _ = writeln!(
+                    out,
+                    "dmlrs_stage_duration_us_bucket{{stage=\"{name}\",le=\"+Inf\"}} {cum}"
+                );
+            } else if *b > 0 || cum < h.count() {
+                let _ = writeln!(
+                    out,
+                    "dmlrs_stage_duration_us_bucket{{stage=\"{name}\",le=\"{bound}\"}} {cum}"
+                );
+            }
+        }
+        let _ = writeln!(out, "dmlrs_stage_duration_us_sum{{stage=\"{name}\"}} {}", h.sum_us());
+        let _ = writeln!(out, "dmlrs_stage_duration_us_count{{stage=\"{name}\"}} {}", h.count());
+    }
+    out.push_str("# HELP dmlrs_stage_max_us Maximum observed span duration per stage.\n");
+    out.push_str("# TYPE dmlrs_stage_max_us gauge\n");
+    for st in ALL_STAGES {
+        let _ = writeln!(
+            out,
+            "dmlrs_stage_max_us{{stage=\"{}\"}} {}",
+            st.name(),
+            stages.get(st).max_us()
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_span_and_instant() {
+        let spans = [TraceSpan { stage: Stage::LpSolve, ts_us: 10, dur_us: 5, tid: 2 }];
+        let instants = [("arrival", 12u64, 2u64)];
+        let text = chrome_trace_json(&spans, &instants, 0);
+        let v = Json::parse(&text).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("name").unwrap().as_str(), Some("lp_solve"));
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].get("dur").unwrap().as_f64(), Some(5.0));
+        assert_eq!(evs[1].get("ph").unwrap().as_str(), Some("i"));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let mut stages = StageSet::new();
+        stages.record(Stage::ThetaSolve, 3);
+        stages.record(Stage::ThetaSolve, 300);
+        let text = prometheus_text(&stages);
+        assert!(text.contains("# TYPE dmlrs_stage_duration_us histogram"));
+        assert!(text
+            .contains("dmlrs_stage_duration_us_bucket{stage=\"theta_solve\",le=\"3\"} 1"));
+        assert!(text
+            .contains("dmlrs_stage_duration_us_bucket{stage=\"theta_solve\",le=\"+Inf\"} 2"));
+        assert!(text.contains("dmlrs_stage_duration_us_sum{stage=\"theta_solve\"} 303"));
+        assert!(text.contains("dmlrs_stage_duration_us_count{stage=\"theta_solve\"} 2"));
+        // every stage appears even when empty
+        assert!(text.contains("dmlrs_stage_duration_us_count{stage=\"queue_wait\"} 0"));
+        // cumulative counts are monotone per stage
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("stage=\"theta_solve\",le=")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= last);
+            last = n;
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Flight recorder: a bounded ring of the most recent spans and events,
+//! dumped as JSON on panic, on request, or via the daemon's
+//! `{"op":"debug_dump"}` wire op — so a stuck or slow daemon is
+//! diagnosable post-hoc without having had tracing on from the start.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::obs::Stage;
+use crate::util::json::{self, Json};
+
+/// Ring capacity (entries, not bytes). Old entries are dropped and
+/// counted, so the dump says how much history it lost.
+pub const FLIGHT_CAPACITY: usize = 256;
+
+#[derive(Debug, Clone)]
+pub struct FlightEntry {
+    /// Global monotonic sequence number (allocation order across threads).
+    pub seq: u64,
+    /// Stage name for spans, or a free-form event label.
+    pub label: &'static str,
+    /// Start, µs since the process telemetry epoch.
+    pub ts_us: u64,
+    /// Duration; 0 for instant events.
+    pub dur_us: u64,
+    /// Small integer id of the recording thread.
+    pub tid: u64,
+}
+
+struct Ring {
+    entries: VecDeque<FlightEntry>,
+    dropped: u64,
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring { entries: VecDeque::new(), dropped: 0 });
+
+pub(crate) fn push_span(seq: u64, stage: Stage, ts_us: u64, dur_us: u64, tid: u64) {
+    push(FlightEntry { seq, label: stage.name(), ts_us, dur_us, tid });
+}
+
+pub(crate) fn push(e: FlightEntry) {
+    let mut ring = RING.lock().unwrap();
+    if ring.entries.len() >= FLIGHT_CAPACITY {
+        ring.entries.pop_front();
+        ring.dropped += 1;
+    }
+    ring.entries.push_back(e);
+}
+
+pub(crate) fn clear() {
+    let mut ring = RING.lock().unwrap();
+    ring.entries.clear();
+    ring.dropped = 0;
+}
+
+/// Number of entries currently held.
+pub fn len() -> usize {
+    RING.lock().unwrap().entries.len()
+}
+
+/// Dump the ring as a JSON value: `{"capacity":…,"dropped":…,"entries":[…]}`.
+pub fn dump_json() -> Json {
+    let ring = RING.lock().unwrap();
+    let entries: Vec<Json> = ring
+        .entries
+        .iter()
+        .map(|e| {
+            json::obj(vec![
+                ("seq", json::num(e.seq as f64)),
+                ("label", json::s(e.label)),
+                ("ts_us", json::num(e.ts_us as f64)),
+                ("dur_us", json::num(e.dur_us as f64)),
+                ("tid", json::num(e.tid as f64)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("capacity", json::num(FLIGHT_CAPACITY as f64)),
+        ("dropped", json::num(ring.dropped as f64)),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
+/// Install a panic hook that prints the flight-recorder dump to stderr
+/// (chained in front of the previous hook). Used by the daemon so a
+/// crash leaves the last ~256 spans behind.
+pub fn install_panic_dump() {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        eprintln!("flight recorder dump: {}", dump_json().to_string());
+        prev(info);
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        clear();
+        for i in 0..(FLIGHT_CAPACITY as u64 + 10) {
+            push(FlightEntry { seq: i, label: "x", ts_us: i, dur_us: 1, tid: 0 });
+        }
+        assert_eq!(len(), FLIGHT_CAPACITY);
+        let d = dump_json();
+        assert_eq!(d.get("dropped").unwrap().as_f64(), Some(10.0));
+        let entries = d.get("entries").unwrap().as_arr().unwrap();
+        // oldest surviving entry is seq 10
+        assert_eq!(entries[0].get("seq").unwrap().as_f64(), Some(10.0));
+        clear();
+    }
+}

@@ -1,0 +1,215 @@
+//! Mergeable log₂-bucketed duration histograms.
+//!
+//! A [`Histogram`] is a fixed array of power-of-two buckets over
+//! microseconds: bucket 0 holds 0 µs, bucket `i` holds durations in
+//! `[2^(i-1), 2^i)` µs, and the last bucket absorbs everything above.
+//! Merging is plain bucket-wise `u64` addition — associative and
+//! commutative — so per-thread recorders can be folded into a global
+//! aggregate in any order (the sweep pool's `--jobs 1` vs `--jobs N`
+//! invariance rests on exactly this).
+
+use crate::obs::{Stage, ALL_STAGES, NUM_STAGES};
+
+/// Number of log₂ buckets. Bucket 30 covers up to ~2^29 µs ≈ 9 min;
+/// anything longer lands in the overflow bucket.
+pub const NUM_BUCKETS: usize = 31;
+
+/// One mergeable duration histogram (microsecond log₂ buckets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; NUM_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram { buckets: [0; NUM_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// Bucket index for a duration: 0 for 0 µs, else `floor(log2(us)) + 1`,
+    /// clamped to the overflow bucket.
+    pub fn bucket_index(us: u64) -> usize {
+        ((64 - us.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (`u64::MAX` for the overflow
+    /// bucket) — the Prometheus `le` label.
+    pub fn bucket_bound(i: usize) -> u64 {
+        if i + 1 >= NUM_BUCKETS {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[Self::bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Bucket-wise addition; the merged histogram is identical no matter
+    /// how the recorders are grouped or ordered.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn buckets(&self) -> &[u64; NUM_BUCKETS] {
+        &self.buckets
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// One histogram per instrumented [`Stage`] — the unit that per-thread
+/// recorders hold and the global registry merges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageSet {
+    hists: [Histogram; NUM_STAGES],
+}
+
+impl StageSet {
+    pub const fn new() -> StageSet {
+        StageSet { hists: [Histogram::new(); NUM_STAGES] }
+    }
+
+    pub fn record(&mut self, stage: Stage, us: u64) {
+        self.hists[stage as usize].record_us(us);
+    }
+
+    pub fn merge(&mut self, other: &StageSet) {
+        for (h, o) in self.hists.iter_mut().zip(other.hists.iter()) {
+            h.merge(o);
+        }
+    }
+
+    pub fn get(&self, stage: Stage) -> &Histogram {
+        &self.hists[stage as usize]
+    }
+
+    /// `(count, sum_us)` per stage, in [`ALL_STAGES`] order.
+    pub fn totals(&self) -> [(u64, u64); NUM_STAGES] {
+        let mut out = [(0u64, 0u64); NUM_STAGES];
+        for (i, st) in ALL_STAGES.iter().enumerate() {
+            let h = self.get(*st);
+            out[i] = (h.count(), h.sum_us());
+        }
+        out
+    }
+
+    pub fn clear(&mut self) {
+        *self = StageSet::new();
+    }
+}
+
+impl Default for StageSet {
+    fn default() -> StageSet {
+        StageSet::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        // every recorded value is ≤ its bucket's le bound
+        for us in [0u64, 1, 2, 3, 7, 8, 1000, 1 << 40] {
+            assert!(us <= Histogram::bucket_bound(Histogram::bucket_index(us)));
+        }
+    }
+
+    #[test]
+    fn merge_is_order_insensitive() {
+        let samples = [3u64, 0, 17, 2048, 9, 9, 1 << 35];
+        let mut serial = Histogram::new();
+        for s in samples {
+            serial.record_us(s);
+        }
+        // split across three recorders, merge in two different orders
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for (i, s) in samples.iter().enumerate() {
+            [&mut a, &mut b, &mut c][i % 3].record_us(*s);
+        }
+        let mut m1 = Histogram::new();
+        m1.merge(&a);
+        m1.merge(&b);
+        m1.merge(&c);
+        let mut m2 = Histogram::new();
+        m2.merge(&c);
+        m2.merge(&a);
+        m2.merge(&b);
+        assert_eq!(m1, serial);
+        assert_eq!(m2, serial);
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let mut a = Histogram::new();
+        a.record_us(5);
+        let mut b = Histogram::new();
+        b.record_us(500);
+        let mut c = Histogram::new();
+        c.record_us(50_000);
+        // (a + b) + c
+        let mut ab = a;
+        ab.merge(&b);
+        let mut abc1 = ab;
+        abc1.merge(&c);
+        // a + (b + c)
+        let mut bc = b;
+        bc.merge(&c);
+        let mut abc2 = a;
+        abc2.merge(&bc);
+        assert_eq!(abc1, abc2);
+    }
+
+    #[test]
+    fn stage_set_totals() {
+        let mut s = StageSet::new();
+        s.record(Stage::LpSolve, 10);
+        s.record(Stage::LpSolve, 20);
+        s.record(Stage::Rounding, 1);
+        let t = s.totals();
+        assert_eq!(t[Stage::LpSolve as usize], (2, 30));
+        assert_eq!(t[Stage::Rounding as usize], (1, 1));
+        assert_eq!(t[Stage::ThetaSolve as usize], (0, 0));
+    }
+}

@@ -1,0 +1,333 @@
+//! Unified telemetry: pipeline spans, mergeable histograms, a flight
+//! recorder, and Perfetto/Prometheus export.
+//!
+//! The admission pipeline is instrumented with RAII [`span`] guards at
+//! nine stages (snapshot build, θ-solve, memo lookup, LP solve,
+//! rounding, replan pass, migration pass, admission commit, daemon
+//! queue-wait). Spans record into a per-thread [`hist::StageSet`] of
+//! log₂-bucketed [`hist::Histogram`]s; [`flush_local`] folds a thread's
+//! recorder into the global aggregate (bucket addition is associative
+//! and commutative, so merge order never matters — the sweep pool calls
+//! it once per worker and `--jobs 1` vs `--jobs N` aggregate
+//! identically).
+//!
+//! Three consumers sit on top:
+//! * [`export::TelemetryObserver`] + [`export::chrome_trace_json`] —
+//!   Chrome trace-event JSON for Perfetto / `chrome://tracing`
+//!   (`dmlrs schedule --trace-out run.json`);
+//! * [`export::prometheus_text`] — Prometheus text exposition served by
+//!   the daemon (`{"op":"metrics_prom"}` and `--prom-addr`);
+//! * [`flight`] — a bounded ring of recent spans dumped on panic or via
+//!   `{"op":"debug_dump"}`.
+//!
+//! **Determinism contract** (same discipline as [`crate::util::logger`]):
+//! telemetry draws no RNG, never changes a schedule, and costs one
+//! relaxed atomic load per site when disabled. `tests/telemetry_parity.rs`
+//! enforces byte-identity of fully-instrumented runs against
+//! telemetry-off runs across the scheduler zoo.
+
+pub mod export;
+pub mod flight;
+pub mod hist;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+pub use hist::{Histogram, StageSet};
+
+/// The instrumented pipeline stages. Variant order is the canonical
+/// reporting order; `name()` strings are stable identifiers used in
+/// Perfetto traces, Prometheus labels, sweep JSONL fields, and
+/// `verify.sh` assertions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum Stage {
+    /// Ledger slot → immutable `SlotSnapshot` (prices, residuals, groups).
+    SnapshotBuild = 0,
+    /// One θ(t, v) solve (Algorithm 3), cached or not.
+    ThetaSolve = 1,
+    /// θ-memo probe (hit or miss) under the snapshot signature key.
+    MemoLookup = 2,
+    /// One simplex solve in the external-placement LP.
+    LpSolve = 3,
+    /// Randomized-rounding attempt loop of one θ-solve.
+    Rounding = 4,
+    /// One elastic re-planning pass (release → re-solve → adopt).
+    ReplanPass = 5,
+    /// One churn migration pass (interrupt → re-plan → migrate/evict).
+    MigrationPass = 6,
+    /// One admission decision end-to-end (`AdmissionCore::submit`).
+    AdmissionCommit = 7,
+    /// Daemon request time spent queued before the core thread picked it up.
+    QueueWait = 8,
+}
+
+pub const NUM_STAGES: usize = 9;
+
+pub const ALL_STAGES: [Stage; NUM_STAGES] = [
+    Stage::SnapshotBuild,
+    Stage::ThetaSolve,
+    Stage::MemoLookup,
+    Stage::LpSolve,
+    Stage::Rounding,
+    Stage::ReplanPass,
+    Stage::MigrationPass,
+    Stage::AdmissionCommit,
+    Stage::QueueWait,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::SnapshotBuild => "snapshot_build",
+            Stage::ThetaSolve => "theta_solve",
+            Stage::MemoLookup => "memo_lookup",
+            Stage::LpSolve => "lp_solve",
+            Stage::Rounding => "rounding",
+            Stage::ReplanPass => "replan_pass",
+            Stage::MigrationPass => "migration_pass",
+            Stage::AdmissionCommit => "admission_commit",
+            Stage::QueueWait => "queue_wait",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enable flags — one relaxed atomic load on the disabled fast path.
+
+/// Record span durations into per-thread histograms.
+pub const SPANS: u8 = 1;
+/// Keep the bounded flight-recorder ring of recent spans.
+pub const FLIGHT: u8 = 2;
+/// Buffer individual span events for Chrome-trace export.
+pub const TRACE: u8 = 4;
+/// Everything on.
+pub const ALL: u8 = SPANS | FLIGHT | TRACE;
+
+static FLAGS: AtomicU8 = AtomicU8::new(0);
+
+pub fn set_flags(flags: u8) {
+    FLAGS.store(flags, Ordering::Relaxed);
+}
+
+pub fn flags() -> u8 {
+    FLAGS.load(Ordering::Relaxed)
+}
+
+pub fn spans_on() -> bool {
+    flags() & SPANS != 0
+}
+
+// ---------------------------------------------------------------------------
+// Clock, thread ids, sequence numbers.
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// µs since the first telemetry touch of this process (monotonic).
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static NEXT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    static LOCAL: RefCell<StageSet> = const { RefCell::new(StageSet::new()) };
+}
+
+/// Small integer id of the calling thread (stable for its lifetime).
+pub fn thread_id() -> u64 {
+    TID.with(|t| *t)
+}
+
+// ---------------------------------------------------------------------------
+// Recording.
+
+static GLOBAL: Mutex<StageSet> = Mutex::new(StageSet::new());
+
+/// Record one duration into the calling thread's recorder (histogram
+/// path only — no flight/trace entry; used for externally-measured
+/// durations like the daemon queue-wait).
+pub fn record(stage: Stage, us: u64) {
+    if flags() == 0 {
+        return;
+    }
+    record_full(stage, now_us().saturating_sub(us), us);
+}
+
+fn record_full(stage: Stage, ts_us: u64, dur_us: u64) {
+    let f = flags();
+    if f & SPANS != 0 {
+        LOCAL.with(|l| l.borrow_mut().record(stage, dur_us));
+    }
+    if f & (FLIGHT | TRACE) != 0 {
+        let seq = NEXT_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tid = thread_id();
+        if f & FLIGHT != 0 {
+            flight::push_span(seq, stage, ts_us, dur_us, tid);
+        }
+        if f & TRACE != 0 {
+            export::push_trace(stage, ts_us, dur_us, tid);
+        }
+    }
+}
+
+/// RAII span guard: measures from construction to drop. When telemetry
+/// is disabled this is a single relaxed atomic load and no clock read.
+pub struct SpanGuard {
+    live: Option<(Stage, Instant, u64)>, // (stage, start, start ts_us)
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((stage, start, ts_us)) = self.live.take() {
+            record_full(stage, ts_us, start.elapsed().as_micros() as u64);
+        }
+    }
+}
+
+/// Open a span for `stage`; close it by dropping the guard.
+pub fn span(stage: Stage) -> SpanGuard {
+    if flags() == 0 {
+        return SpanGuard { live: None };
+    }
+    let ts_us = now_us();
+    SpanGuard { live: Some((stage, Instant::now(), ts_us)) }
+}
+
+/// `let _g = span!(Stage::LpSolve);` — sugar over [`obs::span`](span).
+#[macro_export]
+macro_rules! span {
+    ($stage:expr) => {
+        $crate::obs::span($stage)
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Registry: per-thread recorders → global aggregate.
+
+/// Fold the calling thread's recorder into the global aggregate and
+/// clear it. Workers call this before exiting (and the daemon core after
+/// each request) so [`global_totals`]/Prometheus see everything.
+pub fn flush_local() {
+    LOCAL.with(|l| {
+        let mut local = l.borrow_mut();
+        let mut global = GLOBAL.lock().unwrap();
+        global.merge(&local);
+        local.clear();
+    });
+}
+
+/// Snapshot of the global (post-flush) aggregate.
+pub fn global_stages() -> StageSet {
+    *GLOBAL.lock().unwrap()
+}
+
+/// `(count, sum_us)` per stage of the global aggregate, [`ALL_STAGES`] order.
+pub fn global_totals() -> [(u64, u64); NUM_STAGES] {
+    global_stages().totals()
+}
+
+/// `(count, sum_us)` per stage of the calling thread's (unflushed)
+/// recorder — the sweep runner diffs this around each cell to attribute
+/// stage time per cell.
+pub fn local_totals() -> [(u64, u64); NUM_STAGES] {
+    LOCAL.with(|l| l.borrow().totals())
+}
+
+/// Test/CLI hook: clear the global aggregate, the calling thread's
+/// recorder, the flight ring, and the trace buffer.
+pub fn reset() {
+    GLOBAL.lock().unwrap().clear();
+    LOCAL.with(|l| l.borrow_mut().clear());
+    flight::clear();
+    export::clear_trace();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The flag word is process-global; in-crate tests touching it run in
+    // one binary, so serialize them.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    // These tests assert on the *thread-local* recorder (unpollutable)
+    // and on before/after deltas of the global one: whenever an obs test
+    // turns SPANS on, concurrently running crate tests may legitimately
+    // record and flush spans of their own, so exact global equality
+    // would be flaky.
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_flags(0);
+        {
+            let _s = span(Stage::LpSolve);
+        }
+        record(Stage::QueueWait, 5);
+        let local = local_totals();
+        assert_eq!(local[Stage::LpSolve as usize], (0, 0));
+        assert_eq!(local[Stage::QueueWait as usize], (0, 0));
+    }
+
+    #[test]
+    fn enabled_span_lands_in_histogram() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_flags(SPANS);
+        let before = global_totals()[Stage::QueueWait as usize];
+        {
+            let _s = span(Stage::ThetaSolve);
+        }
+        record(Stage::QueueWait, 17);
+        let local = local_totals();
+        assert_eq!(local[Stage::ThetaSolve as usize].0, 1);
+        assert_eq!(local[Stage::QueueWait as usize], (1, 17));
+        flush_local();
+        assert_eq!(local_totals()[Stage::ThetaSolve as usize], (0, 0));
+        let after = global_totals()[Stage::QueueWait as usize];
+        assert!(after.0 >= before.0 + 1 && after.1 >= before.1 + 17, "{after:?}");
+        set_flags(0);
+    }
+
+    #[test]
+    fn cross_thread_flush_merges() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_flags(SPANS);
+        let before = global_totals()[Stage::AdmissionCommit as usize];
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    record(Stage::AdmissionCommit, 10);
+                    record(Stage::AdmissionCommit, 20);
+                    flush_local();
+                });
+            }
+        });
+        let after = global_totals()[Stage::AdmissionCommit as usize];
+        assert!(after.0 >= before.0 + 6 && after.1 >= before.1 + 90, "{after:?}");
+        set_flags(0);
+    }
+
+    #[test]
+    fn stage_names_are_stable() {
+        let names: Vec<&str> = ALL_STAGES.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "snapshot_build",
+                "theta_solve",
+                "memo_lookup",
+                "lp_solve",
+                "rounding",
+                "replan_pass",
+                "migration_pass",
+                "admission_commit",
+                "queue_wait",
+            ]
+        );
+    }
+}

@@ -122,6 +122,7 @@ pub fn slot_snapshot(
     t: usize,
     group_machines: bool,
 ) -> SlotSnapshot {
+    let _span = crate::obs::span(crate::obs::Stage::SnapshotBuild);
     let prices = slot_prices(ledger, pricing, t);
     let residual: Vec<_> =
         (0..ledger.num_machines()).map(|h| ledger.residual(t, h)).collect();

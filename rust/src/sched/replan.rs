@@ -156,6 +156,7 @@ pub fn run_replan_pass(
     if !sched.replan_capable() || !core.replan_tracking() {
         return report;
     }
+    let _span = crate::obs::span(crate::obs::Stage::ReplanPass);
     // Jobs whose schedule has begun can no longer move; forget them.
     // (Under churn tracking the prune is a no-op — started admissions stay
     // visible for the migration pass — so the loop below skips them.)
@@ -289,6 +290,7 @@ pub fn run_migration_pass(
     if down.is_empty() || !core.churn_tracking() {
         return report;
     }
+    let _span = crate::obs::span(crate::obs::Stage::MigrationPass);
     let mut i = 0;
     while i < core.tracked_admissions().len() {
         if !core.tracked_admissions()[i].strands_on(down, t) {

@@ -29,6 +29,7 @@
 use crate::cluster::{SlotSnapshot, NUM_RESOURCES};
 use crate::jobs::{speed, Job, Locality};
 use crate::lp::LpStatus;
+use crate::obs::{self, Stage};
 use crate::util::Rng;
 
 use super::super::rounding::{gdelta_cover, gdelta_packing, round_coord};
@@ -145,7 +146,11 @@ fn solve_internal(
 
     let key = (ctx.sig, v.to_bits());
     if let Some(memo) = ctx.memo.as_deref_mut() {
-        if let Some(hit) = memo.internal.get(&key) {
+        let probe = {
+            let _span = obs::span(Stage::MemoLookup);
+            memo.internal.get(&key)
+        };
+        if let Some(hit) = probe {
             ctx.stats.memo_hits += 1;
             return hit.map(|m| ThetaSolution {
                 cost: m.cost,
@@ -281,7 +286,11 @@ fn solve_external(
     let key = (ctx.sig, v.to_bits());
     let mut resolved = false;
     if let Some(memo) = ctx.memo.as_deref_mut() {
-        if let Some(cached) = memo.external.get(&key) {
+        let probe = {
+            let _span = obs::span(Stage::MemoLookup);
+            memo.external.get(&key)
+        };
+        if let Some(cached) = probe {
             ctx.stats.memo_hits += 1;
             match cached {
                 None => return None, // LP infeasible at this signature
@@ -369,6 +378,7 @@ fn solve_external(
     // G_δ the success probability per attempt is tiny and the paper's
     // S = 5000 budget exists precisely to brute-force that tail.
     const EARLY_STOP_FEASIBLE: usize = 1;
+    let _span = obs::span(Stage::Rounding);
     let mut feasible_found = 0usize;
     let mut best: Option<ThetaSolution> = None;
     let mut attempts_used = 0;
@@ -449,6 +459,7 @@ pub fn solve_theta_ctx(
         });
     }
     ctx.stats.theta_solves += 1;
+    let _span = obs::span(Stage::ThetaSolve);
     let internal = solve_internal(job, snap, v, ctx);
     let external = solve_external(job, snap, v, cfg, ctx);
     match (internal, external) {

@@ -16,6 +16,7 @@
 use crate::chaos::{ChurnEvent, ChurnSpec, ChurnTrace};
 use crate::err;
 use crate::jobs::Job;
+use crate::obs;
 use crate::sched::registry::{SchedulerRegistry, SchedulerSpec};
 use crate::sched::replan::{run_migration_pass, run_replan_pass, ReplanReport};
 use crate::sched::solver::SolverStats;
@@ -375,6 +376,10 @@ impl ServiceCore {
             Request::Status => self.status_json(),
             Request::Cluster => self.cluster_json(),
             Request::Metrics => self.metrics_json(),
+            Request::MetricsProm => self.metrics_prom_json(),
+            Request::DebugDump => {
+                ok_response(vec![("flight", crate::obs::flight::dump_json())])
+            }
             Request::Replan => self.replan(),
             Request::MachineDown { machine } => self.machine_down(*machine),
             Request::MachineUp { machine } => self.machine_up(*machine),
@@ -755,13 +760,15 @@ impl ServiceCore {
     }
 
     pub fn metrics_json(&self) -> Json {
-        let us = &self.latencies_us;
+        let s = stats::Summary::of(&self.latencies_us);
         let solve = json::obj(vec![
-            ("p50", json::num(stats::percentile(us, 50.0))),
-            ("p95", json::num(stats::percentile(us, 95.0))),
-            ("p99", json::num(stats::percentile(us, 99.0))),
-            ("mean", json::num(stats::mean(us))),
-            ("max", json::num(us.iter().cloned().fold(0.0, f64::max))),
+            ("count", json::num(s.count() as f64)),
+            ("p50", json::num(s.p50)),
+            ("p95", json::num(s.p95)),
+            ("p99", json::num(s.p99)),
+            ("p999", json::num(s.p999)),
+            ("mean", json::num(s.mean)),
+            ("max", json::num(s.max)),
         ]);
         let sv = self.sched.solver_stats();
         let solver = json::obj(vec![
@@ -772,11 +779,31 @@ impl ServiceCore {
             ("rounding_attempts", json::num(sv.rounding_attempts as f64)),
         ]);
         ok_response(vec![
-            ("decisions", json::num(us.len() as f64)),
+            ("decisions", json::num(s.count() as f64)),
             ("solve_us", solve),
             ("solver", solver),
             ("uptime_secs", json::num(self.started.elapsed_secs())),
         ])
+    }
+
+    /// The wire `metrics_prom` op: Prometheus text exposition 0.0.4 of
+    /// the global per-stage span histograms plus the decision counters.
+    /// Flushes this thread's local recorders first — the daemon core
+    /// thread owns every span recorded inside the solve path, so the
+    /// merged global set is complete at this point.
+    fn metrics_prom_json(&self) -> Json {
+        obs::flush_local();
+        let mut body = crate::obs::export::prometheus_text(&obs::global_stages());
+        for (name, v) in [
+            ("dmlrs_submitted_total", self.submitted),
+            ("dmlrs_admitted_total", self.admitted),
+            ("dmlrs_rejected_total", self.rejected),
+            ("dmlrs_deferred_total", self.deferred),
+            ("dmlrs_completed_total", self.completed),
+        ] {
+            body.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        ok_response(vec![("prom", json::s(&body))])
     }
 
     /// The deterministic end-state snapshot (see [`ServiceReport`]).
@@ -977,6 +1004,8 @@ mod tests {
             (Request::Status, "submitted"),
             (Request::Cluster, "capacities"),
             (Request::Metrics, "solve_us"),
+            (Request::MetricsProm, "prom"),
+            (Request::DebugDump, "flight"),
             (Request::Tick, "slot"),
             (Request::Shutdown, "draining"),
         ] {
@@ -986,6 +1015,11 @@ mod tests {
         }
         let status = core.apply(&Request::Status);
         assert_eq!(status.get("slot").unwrap().as_usize(), Some(1), "tick advanced");
+        // the Prometheus body is the text exposition, not JSON
+        let prom = core.apply(&Request::MetricsProm);
+        let body = prom.get("prom").unwrap().as_str().unwrap();
+        assert!(body.contains("dmlrs_submitted_total 0"), "{body}");
+        assert!(body.contains("# TYPE dmlrs_stage_duration_us histogram"), "{body}");
     }
 
     #[test]

@@ -34,10 +34,13 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::err;
+use crate::obs::{self, Stage};
 use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+use crate::{log_debug, log_info};
 
 use super::core::{ServiceConfig, ServiceCore, ServiceReport};
 use super::protocol::{err_response, Request};
@@ -59,6 +62,9 @@ pub struct DaemonConfig {
     pub oplog: Option<String>,
     /// Replay this op-log at startup, then continue appending to it.
     pub recover: Option<String>,
+    /// Also serve the Prometheus text exposition over plain HTTP at this
+    /// address (`GET` anything → the `metrics_prom` body).
+    pub prom_addr: Option<String>,
 }
 
 impl DaemonConfig {
@@ -70,6 +76,7 @@ impl DaemonConfig {
             queue_cap: 64,
             oplog: None,
             recover: None,
+            prom_addr: None,
         }
     }
 }
@@ -78,6 +85,15 @@ struct CoreMsg {
     req: Request,
     /// Response channel; `None` for internally generated ticks.
     resp: Option<Sender<String>>,
+    /// When the message entered the queue — the core measures the gap
+    /// into the `queue_wait` telemetry stage on receipt.
+    enqueued: Instant,
+}
+
+impl CoreMsg {
+    fn new(req: Request, resp: Option<Sender<String>>) -> CoreMsg {
+        CoreMsg { req, resp, enqueued: Instant::now() }
+    }
 }
 
 /// A running daemon. Dropping the handle does not stop the daemon; call
@@ -91,6 +107,9 @@ pub struct DaemonHandle {
     core: JoinHandle<Option<ServiceReport>>,
     accept: JoinHandle<()>,
     timer: Option<JoinHandle<()>>,
+    prom: Option<JoinHandle<()>>,
+    /// The bound Prometheus scrape address, when `--prom-addr` was given.
+    pub prom_addr: Option<SocketAddr>,
 }
 
 impl DaemonHandle {
@@ -112,6 +131,9 @@ impl DaemonHandle {
         self.accept.join().map_err(|_| err!("accept thread panicked"))?;
         if let Some(t) = self.timer {
             t.join().map_err(|_| err!("slot-timer thread panicked"))?;
+        }
+        if let Some(p) = self.prom {
+            p.join().map_err(|_| err!("prometheus thread panicked"))?;
         }
         self.core
             .join()
@@ -190,6 +212,26 @@ pub fn start(cfg: DaemonConfig) -> Result<DaemonHandle> {
     let accept_thread =
         std::thread::spawn(move || accept_loop(listener, accept_tx, accept_flag));
 
+    // Optional Prometheus scrape endpoint: a second listener whose
+    // connections fetch the `metrics_prom` body through the same bounded
+    // queue (so the core thread renders it — no shared counters).
+    let (prom_thread, prom_addr) = match &cfg.prom_addr {
+        Some(addr) => {
+            let prom_listener = TcpListener::bind(addr)
+                .map_err(|e| err!("bind --prom-addr {addr}: {e}"))?;
+            let bound = prom_listener.local_addr().map_err(Error::from)?;
+            prom_listener.set_nonblocking(true).map_err(Error::from)?;
+            log_info!("prometheus exposition at http://{bound}/metrics");
+            let prom_flag = shutdown.clone();
+            let prom_tx = tx.clone();
+            let t = std::thread::spawn(move || {
+                prom_loop(prom_listener, prom_tx, prom_flag)
+            });
+            (Some(t), Some(bound))
+        }
+        None => (None, None),
+    };
+
     let timer_thread = if cfg.slot_ms > 0 {
         let timer_flag = shutdown.clone();
         let timer_tx = tx;
@@ -206,7 +248,7 @@ pub fn start(cfg: DaemonConfig) -> Result<DaemonHandle> {
                 }
                 remaining -= chunk;
             }
-            if timer_tx.send(CoreMsg { req: Request::Tick, resp: None }).is_err() {
+            if timer_tx.send(CoreMsg::new(Request::Tick, None)).is_err() {
                 break;
             }
         }))
@@ -220,6 +262,8 @@ pub fn start(cfg: DaemonConfig) -> Result<DaemonHandle> {
         core: core_thread,
         accept: accept_thread,
         timer: timer_thread,
+        prom: prom_thread,
+        prom_addr,
     })
 }
 
@@ -235,6 +279,12 @@ fn core_loop(
     loop {
         match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(msg) => {
+                if obs::flags() != 0 {
+                    obs::record(
+                        Stage::QueueWait,
+                        msg.enqueued.elapsed().as_micros() as u64,
+                    );
+                }
                 let response = core.apply(&msg.req);
                 if matches!(msg.req, Request::Shutdown) {
                     shutdown.store(true, Ordering::SeqCst);
@@ -247,7 +297,53 @@ fn core_loop(
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
+    log_debug!("core: queue drained, computing final report");
     core.report()
+}
+
+/// Serve the Prometheus text exposition over plain HTTP: any request on
+/// the `--prom-addr` listener is answered with the `metrics_prom` body
+/// (fetched through the bounded queue, so the core thread renders it).
+fn prom_loop(listener: TcpListener, tx: SyncSender<CoreMsg>, shutdown: Arc<AtomicBool>) {
+    use std::io::Read as _;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((mut stream, peer)) => {
+                log_debug!("prom: scrape from {peer}");
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                // consume the request head best-effort; every path is
+                // answered with the exposition
+                let mut head = [0u8; 1024];
+                let _ = stream.read(&mut head);
+                let Some(body) = fetch_prom_body(&tx) else { break };
+                let resp = format!(
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.write_all(resp.as_bytes());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Round-trip a `metrics_prom` request through the core queue and pull
+/// the text body out of the JSON response. `None` when the daemon is
+/// draining (the queue or core is gone).
+fn fetch_prom_body(tx: &SyncSender<CoreMsg>) -> Option<String> {
+    let (rtx, rrx) = channel();
+    tx.send(CoreMsg::new(Request::MetricsProm, Some(rtx))).ok()?;
+    let line = rrx.recv().ok()?;
+    let v = Json::parse(&line).ok()?;
+    v.get("prom").and_then(Json::as_str).map(str::to_string)
 }
 
 /// Accept connections until shutdown, spawning one handler thread per
@@ -260,7 +356,8 @@ fn accept_loop(listener: TcpListener, tx: SyncSender<CoreMsg>, shutdown: Arc<Ato
             break;
         }
         match listener.accept() {
-            Ok((stream, _peer)) => {
+            Ok((stream, peer)) => {
+                log_debug!("conn: accepted {peer}");
                 let tx = tx.clone();
                 let flag = shutdown.clone();
                 handlers.push(std::thread::spawn(move || handle_connection(stream, tx, flag)));
@@ -271,9 +368,11 @@ fn accept_loop(listener: TcpListener, tx: SyncSender<CoreMsg>, shutdown: Arc<Ato
             Err(_) => std::thread::sleep(Duration::from_millis(5)),
         }
     }
+    log_debug!("drain: joining {} connection handler(s)", handlers.len());
     for h in handlers {
         let _ = h.join();
     }
+    log_debug!("drain: frontend closed");
 }
 
 /// One connection: read NDJSON request lines, forward each through the
@@ -310,7 +409,7 @@ fn handle_connection(stream: TcpStream, tx: SyncSender<CoreMsg>, shutdown: Arc<A
                 Err(e) => err_response(&e).to_string(),
                 Ok(req) => {
                     let (rtx, rrx) = channel();
-                    if tx.send(CoreMsg { req, resp: Some(rtx) }).is_err() {
+                    if tx.send(CoreMsg::new(req, Some(rtx))).is_err() {
                         break 'conn;
                     }
                     match rrx.recv() {
@@ -332,6 +431,9 @@ fn handle_connection(stream: TcpStream, tx: SyncSender<CoreMsg>, shutdown: Arc<A
         if at_eof || shutdown.load(Ordering::SeqCst) {
             break 'conn;
         }
+    }
+    if let Ok(peer) = stream.peer_addr() {
+        log_debug!("conn: closed {peer}");
     }
 }
 
@@ -419,6 +521,33 @@ mod tests {
         let report = handle.join().unwrap();
         assert_eq!(report.slot, 1);
         assert_eq!(report.submitted, 0);
+    }
+
+    #[test]
+    fn prom_endpoint_serves_text_exposition_over_http() {
+        let mut cfg = DaemonConfig::new(synthetic_service_config("fifo", 1, 4, 6, 8));
+        cfg.prom_addr = Some("127.0.0.1:0".to_string());
+        let handle = start(cfg).unwrap();
+        let prom = handle.prom_addr.expect("prom listener bound");
+        let mut stream = TcpStream::connect(prom).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        stream.flush().unwrap();
+        let mut resp = String::new();
+        use std::io::Read as _;
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        assert!(resp.contains("# TYPE dmlrs_stage_duration_us histogram"), "{resp}");
+        assert!(resp.contains("dmlrs_submitted_total 0"), "{resp}");
+        // the NDJSON op answers with the same body wrapped in JSON
+        let (mut reader, mut ndstream) = client(handle.addr);
+        let m = roundtrip(&mut reader, &mut ndstream, "{\"op\":\"metrics_prom\"}");
+        assert!(m.contains("\"ok\":true"), "{m}");
+        assert!(m.contains("dmlrs_stage_duration_us"), "{m}");
+        let dump = roundtrip(&mut reader, &mut ndstream, "{\"op\":\"debug_dump\"}");
+        assert!(dump.contains("\"flight\""), "{dump}");
+        handle.shutdown();
+        handle.join().unwrap();
     }
 
     #[test]

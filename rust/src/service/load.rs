@@ -67,6 +67,7 @@ pub struct LoadReport {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    pub p999_ms: f64,
     pub mean_ms: f64,
     pub max_ms: f64,
 }
@@ -87,6 +88,7 @@ impl LoadReport {
             ("p50_ms", json::num(self.p50_ms)),
             ("p95_ms", json::num(self.p95_ms)),
             ("p99_ms", json::num(self.p99_ms)),
+            ("p999_ms", json::num(self.p999_ms)),
             ("mean_ms", json::num(self.mean_ms)),
             ("max_ms", json::num(self.max_ms)),
         ])
@@ -255,6 +257,7 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
         let _ = reader.read_line(&mut resp);
     }
 
+    let tail = stats::Summary::of(&latencies);
     Ok(LoadReport {
         requests: latencies.len(),
         admitted,
@@ -269,11 +272,12 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
             0.0
         },
         elapsed_secs,
-        p50_ms: stats::percentile(&latencies, 50.0),
-        p95_ms: stats::percentile(&latencies, 95.0),
-        p99_ms: stats::percentile(&latencies, 99.0),
-        mean_ms: stats::mean(&latencies),
-        max_ms: latencies.iter().cloned().fold(0.0, f64::max),
+        p50_ms: tail.p50,
+        p95_ms: tail.p95,
+        p99_ms: tail.p99,
+        p999_ms: tail.p999,
+        mean_ms: tail.mean,
+        max_ms: tail.max,
     })
 }
 
@@ -296,11 +300,12 @@ mod tests {
             p50_ms: 1.5,
             p95_ms: 4.0,
             p99_ms: 9.75,
+            p999_ms: 11.5,
             mean_ms: 2.0,
             max_ms: 12.0,
         };
         let line = r.to_json().to_string();
-        for field in ["\"bench\":\"service_load\"", "\"p50_ms\":1.5", "\"p95_ms\":4", "\"p99_ms\":9.75", "\"achieved_rate\":480.5", "\"requests\":100"] {
+        for field in ["\"bench\":\"service_load\"", "\"p50_ms\":1.5", "\"p95_ms\":4", "\"p99_ms\":9.75", "\"p999_ms\":11.5", "\"achieved_rate\":480.5", "\"requests\":100"] {
             assert!(line.contains(field), "{field} missing from {line}");
         }
     }

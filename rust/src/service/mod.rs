@@ -10,7 +10,7 @@
 //!   handler threads feed a bounded MPSC queue into the one core thread
 //!   (backpressure on queue-full, graceful drain on shutdown/SIGTERM).
 //! * [`protocol`] — the NDJSON wire protocol (`submit`, `tick`, `status`,
-//!   `cluster`, `metrics`, `shutdown`).
+//!   `cluster`, `metrics`, `metrics_prom`, `debug_dump`, `shutdown`).
 //! * [`codec`]    — `Job`/`Schedule` ⇄ JSON with bit-identical `f64`
 //!   round-trips (what makes op-log replay exact).
 //! * [`oplog`]    — the append-only JSONL crash-recovery journal

@@ -13,6 +13,8 @@
 //! | `replan`   | —              | `slot`, `revisited`, `replanned`, `utility_delta` — force one elastic replan round now (see [`crate::sched::replan`]; rounds also run automatically with `--replan every:k`, and the op is an `"ok":false` error on a daemon serving without that flag) |
 //! | `machine_down` | `machine`  | `slot`, `machine`, `interrupted`, `migrated`, `evicted` — take one machine down now: its capacity leaves the ledger from the current slot and stranded started jobs are migrated or evicted (see [`crate::chaos`]) |
 //! | `machine_up` | `machine`    | `slot`, `machine` — bring a downed machine back from the current slot |
+//! | `metrics_prom` | —          | `prom` — Prometheus text exposition (per-stage span histograms + decision counters); also served raw over HTTP by `--prom-addr` |
+//! | `debug_dump` | —            | `flight` — the telemetry flight recorder's ring of recent spans (see [`crate::obs::flight`]) |
 //! | `shutdown` | —              | `draining: true` (the daemon then drains and exits) |
 //!
 //! Every response carries `"ok": true` or `"ok": false` + `"error"`. The
@@ -36,6 +38,8 @@ pub enum Request {
     Replan,
     MachineDown { machine: usize },
     MachineUp { machine: usize },
+    MetricsProm,
+    DebugDump,
     Shutdown,
 }
 
@@ -69,11 +73,13 @@ impl Request {
                     Ok(Request::MachineUp { machine })
                 }
             }
+            "metrics_prom" => Ok(Request::MetricsProm),
+            "debug_dump" => Ok(Request::DebugDump),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!(
                 "unknown op {other:?} (expected \
-                 submit|tick|status|cluster|metrics|replan|machine_down|\
-                 machine_up|shutdown)"
+                 submit|tick|status|cluster|metrics|metrics_prom|debug_dump|\
+                 replan|machine_down|machine_up|shutdown)"
             )),
         }
     }
@@ -99,6 +105,8 @@ impl Request {
                 ("op", json::s("machine_up")),
                 ("machine", json::num(*machine as f64)),
             ]),
+            Request::MetricsProm => json::obj(vec![("op", json::s("metrics_prom"))]),
+            Request::DebugDump => json::obj(vec![("op", json::s("debug_dump"))]),
             Request::Shutdown => json::obj(vec![("op", json::s("shutdown"))]),
         }
     }
@@ -135,6 +143,8 @@ mod tests {
             Request::Replan,
             Request::MachineDown { machine: 2 },
             Request::MachineUp { machine: 2 },
+            Request::MetricsProm,
+            Request::DebugDump,
             Request::Shutdown,
         ] {
             let line = req.to_line();

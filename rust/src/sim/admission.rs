@@ -397,6 +397,7 @@ impl AdmissionCore {
         sched: &mut dyn Scheduler,
         job: &Job,
     ) -> AdmissionOutcome {
+        let _span = crate::obs::span(crate::obs::Stage::AdmissionCommit);
         match sched.on_arrival(job, &mut self.ledger) {
             ArrivalDecision::Admit(s) => {
                 debug_assert!(s.respects_worker_cap(job));

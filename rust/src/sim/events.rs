@@ -76,6 +76,30 @@ pub enum SimEvent {
     HorizonEnd { horizon: usize },
 }
 
+impl SimEvent {
+    /// Stable short label of the event kind (Perfetto instant-event
+    /// names, flight-recorder labels).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SimEvent::Begin { .. } => "begin",
+            SimEvent::SlotStart { .. } => "slot_start",
+            SimEvent::Arrival { .. } => "arrival",
+            SimEvent::Admitted { .. } => "admitted",
+            SimEvent::Rejected { .. } => "rejected",
+            SimEvent::Deferred { .. } => "deferred",
+            SimEvent::Granted { .. } => "granted",
+            SimEvent::Replanned { .. } => "replanned",
+            SimEvent::Completed { .. } => "completed",
+            SimEvent::MachineDown { .. } => "machine_down",
+            SimEvent::MachineRejoined { .. } => "machine_rejoined",
+            SimEvent::Migrated { .. } => "migrated",
+            SimEvent::Evicted { .. } => "evicted",
+            SimEvent::Solver { .. } => "solver",
+            SimEvent::HorizonEnd { .. } => "horizon_end",
+        }
+    }
+}
+
 /// Observer of the engine's event stream. Attach via
 /// [`SimEngineBuilder::observer`](super::SimEngineBuilder::observer).
 pub trait SimObserver {

@@ -163,6 +163,9 @@ pub struct CellOutcome {
 /// a [`CellRecord`].
 pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, CellRecord)> {
     let timer = Timer::start();
+    // Diff the thread-local span recorder around the run to attribute
+    // per-stage time to this cell (all zeros with telemetry off).
+    let stages_before = crate::obs::local_totals();
     let jobs = sc.workload.jobs(sc.seed);
     let cluster = sc.cluster.build();
     let horizon = sc.workload.horizon;
@@ -183,6 +186,12 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
     debug_assert_eq!(streaming.migrated, result.migrated, "observer drift");
     debug_assert_eq!(streaming.solver, result.solver, "observer drift");
     debug_assert!((streaming.ftf() - result.ftf).abs() <= 1e-12, "observer drift");
+    let stages_after = crate::obs::local_totals();
+    let mut stage_us = [0.0; crate::obs::NUM_STAGES];
+    for i in 0..crate::obs::NUM_STAGES {
+        stage_us[i] = stages_after[i].1.saturating_sub(stages_before[i].1) as f64;
+    }
+    let ratio = |num: u64, den: u64| if den == 0 { 0.0 } else { num as f64 / den as f64 };
     let record = CellRecord {
         key: sc.key(),
         scheduler: sc.scheduler.clone(),
@@ -200,8 +209,13 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         median_training_time: median_training_time(&result),
         theta_solves: result.solver.theta_solves,
         memo_hits: result.solver.memo_hits,
+        lp_solves: result.solver.lp_solves,
         lp_pivots: result.solver.lp_pivots,
         rounding_attempts: result.solver.rounding_attempts,
+        memo_hit_rate: ratio(result.solver.memo_hits, result.solver.theta_solves),
+        pivots_per_solve: ratio(result.solver.lp_pivots, result.solver.lp_solves),
+        theta_per_admission: ratio(result.solver.theta_solves, result.admitted as u64),
+        stage_us,
         wall_secs: timer.elapsed_secs(),
     };
     Ok((result, record))
@@ -304,6 +318,11 @@ pub fn run_matrix_with(
                             }
                         }
                     }
+                    // Fold this worker's span recorder into the global
+                    // aggregate before the thread exits. Histogram merge
+                    // is order-insensitive, so --jobs 1 and --jobs N
+                    // aggregate identically.
+                    crate::obs::flush_local();
                 });
             }
         });

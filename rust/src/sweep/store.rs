@@ -11,6 +11,7 @@
 use std::collections::BTreeMap;
 use std::io::Write as _;
 
+use crate::obs;
 use crate::util::json::{self, Json};
 
 /// One completed cell: the scenario identity plus its metrics, solver
@@ -47,8 +48,19 @@ pub struct CellRecord {
     /// [`crate::sched::SolverStats`]).
     pub theta_solves: u64,
     pub memo_hits: u64,
+    pub lp_solves: u64,
     pub lp_pivots: u64,
     pub rounding_attempts: u64,
+    /// Machine-normalized solver ratios (counter quotients, not wall
+    /// time — safe to trend-gate across machines): memo hits per
+    /// θ-solve, simplex pivots per LP solve, θ-solves per admission.
+    pub memo_hit_rate: f64,
+    pub pivots_per_solve: f64,
+    pub theta_per_admission: f64,
+    /// Telemetry: per-stage span time (µs) spent inside this cell, in
+    /// [`obs::ALL_STAGES`] order (all zeros when telemetry is off).
+    /// Serialized as `us_<stage_name>` fields.
+    pub stage_us: [f64; obs::NUM_STAGES],
     pub wall_secs: f64,
 }
 
@@ -76,10 +88,20 @@ impl CellRecord {
         let mut fields = self.metric_fields();
         fields.push(("theta_solves", json::num(self.theta_solves as f64)));
         fields.push(("memo_hits", json::num(self.memo_hits as f64)));
+        fields.push(("lp_solves", json::num(self.lp_solves as f64)));
         fields.push(("lp_pivots", json::num(self.lp_pivots as f64)));
         fields.push(("rounding_attempts", json::num(self.rounding_attempts as f64)));
+        fields.push(("memo_hit_rate", json::num(self.memo_hit_rate)));
+        fields.push(("pivots_per_solve", json::num(self.pivots_per_solve)));
+        fields.push(("theta_per_admission", json::num(self.theta_per_admission)));
         fields.push(("wall_secs", json::num(self.wall_secs)));
-        json::obj(fields)
+        let mut out = json::obj(fields);
+        if let Json::Obj(m) = &mut out {
+            for (i, st) in obs::ALL_STAGES.iter().enumerate() {
+                m.insert(format!("us_{}", st.name()), json::num(self.stage_us[i]));
+            }
+        }
+        out
     }
 
     /// One compact JSONL line (what [`ResultStore::append`] writes).
@@ -127,8 +149,19 @@ impl CellRecord {
             // tolerate older/foreign lines without the diagnostic fields
             theta_solves: opt_u64(v, "theta_solves"),
             memo_hits: opt_u64(v, "memo_hits"),
+            lp_solves: opt_u64(v, "lp_solves"),
             lp_pivots: opt_u64(v, "lp_pivots"),
             rounding_attempts: opt_u64(v, "rounding_attempts"),
+            memo_hit_rate: opt_f64(v, "memo_hit_rate"),
+            pivots_per_solve: opt_f64(v, "pivots_per_solve"),
+            theta_per_admission: opt_f64(v, "theta_per_admission"),
+            stage_us: {
+                let mut us = [0.0; obs::NUM_STAGES];
+                for (i, st) in obs::ALL_STAGES.iter().enumerate() {
+                    us[i] = opt_f64(v, &format!("us_{}", st.name()));
+                }
+                us
+            },
             wall_secs: v.get("wall_secs").and_then(Json::as_f64).unwrap_or(0.0),
         })
     }
@@ -314,8 +347,13 @@ mod tests {
             median_training_time: 4.5,
             theta_solves: 200,
             memo_hits: 150,
+            lp_solves: 50,
             lp_pivots: 900,
             rounding_attempts: 40,
+            memo_hit_rate: 0.75,
+            pivots_per_solve: 18.0,
+            theta_per_admission: 28.5,
+            stage_us: [10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0],
             wall_secs: 0.012,
         }
     }
@@ -335,9 +373,16 @@ mod tests {
         // metrics_line drops the diagnostic fields, keeps the metrics
         assert!(r.to_line().contains("wall_secs"));
         assert!(r.to_line().contains("memo_hits"));
+        assert!(r.to_line().contains("memo_hit_rate"));
+        assert!(r.to_line().contains("pivots_per_solve"));
+        assert!(r.to_line().contains("us_theta_solve"));
+        assert!(r.to_line().contains("us_queue_wait"));
         assert!(!r.metrics_line().contains("wall_secs"));
         assert!(!r.metrics_line().contains("memo_hits"));
         assert!(!r.metrics_line().contains("theta_solves"));
+        assert!(!r.metrics_line().contains("lp_solves"));
+        assert!(!r.metrics_line().contains("memo_hit_rate"));
+        assert!(!r.metrics_line().contains("us_"));
         assert!(r.metrics_line().contains("total_utility"));
     }
 

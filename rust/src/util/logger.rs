@@ -13,7 +13,44 @@ pub enum Level {
     Trace = 4,
 }
 
+impl Level {
+    /// Parse a CLI/env level name (`error|warn|info|debug|trace`,
+    /// case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Wire the logger to the outside world: an explicit `--log-level` value
+/// wins, else the `DMLRS_LOG` environment variable, else the Info
+/// default stands. Returns an error naming the bad value.
+pub fn init_from(cli_level: Option<&str>) -> Result<(), String> {
+    let (source, value) = match cli_level {
+        Some(v) => ("--log-level", v.to_string()),
+        None => match std::env::var("DMLRS_LOG") {
+            Ok(v) if !v.is_empty() => ("DMLRS_LOG", v),
+            _ => return Ok(()),
+        },
+    };
+    match Level::parse(&value) {
+        Some(l) => {
+            set_level(l);
+            Ok(())
+        }
+        None => Err(format!(
+            "{source}: unknown log level {value:?} (want error|warn|info|debug|trace)"
+        )),
+    }
+}
 
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -72,5 +109,21 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_accepts_known_names_case_insensitively() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("Debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), Some(Level::Trace));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn init_from_rejects_bad_cli_value() {
+        let err = init_from(Some("loud")).unwrap_err();
+        assert!(err.contains("--log-level"));
+        assert!(err.contains("loud"));
     }
 }

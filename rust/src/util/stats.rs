@@ -42,7 +42,10 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
-/// Summary of a sample, used for bench reporting.
+/// Summary of a sample, used for bench reporting. The single percentile
+/// block behind the daemon `metrics` op, the load generator's report,
+/// and the bench summaries — extend it here rather than hand-rolling
+/// another `percentile(...)` cluster at a call site.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
     pub n: usize,
@@ -51,6 +54,8 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
     pub max: f64,
 }
 
@@ -65,8 +70,15 @@ impl Summary {
             min: if xs.is_empty() { 0.0 } else { min },
             p50: percentile(xs, 50.0),
             p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
+            p999: percentile(xs, 99.9),
             max: if xs.is_empty() { 0.0 } else { max },
         }
+    }
+
+    /// Sample count (alias of `n`, for call sites reporting it as a field).
+    pub fn count(&self) -> usize {
+        self.n
     }
 }
 
@@ -74,8 +86,16 @@ impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "n={} mean={:.4} sd={:.4} min={:.4} p50={:.4} p95={:.4} max={:.4}",
-            self.n, self.mean, self.std_dev, self.min, self.p50, self.p95, self.max
+            "n={} mean={:.4} sd={:.4} min={:.4} p50={:.4} p95={:.4} p99={:.4} p999={:.4} max={:.4}",
+            self.n,
+            self.mean,
+            self.std_dev,
+            self.min,
+            self.p50,
+            self.p95,
+            self.p99,
+            self.p999,
+            self.max
         )
     }
 }
@@ -119,8 +139,19 @@ mod tests {
         let xs = [1.0, 2.0, 3.0];
         let s = Summary::of(&xs);
         assert_eq!(s.n, 3);
+        assert_eq!(s.count(), 3);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.p50, 2.0);
+        // tail percentiles are ordered and bounded by max
+        assert!(s.p95 <= s.p99 && s.p99 <= s.p999 && s.p999 <= s.max);
+    }
+
+    #[test]
+    fn summary_tail_percentiles() {
+        let xs: Vec<f64> = (0..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!((s.p99 - 990.0).abs() < 1e-9);
+        assert!((s.p999 - 999.0).abs() < 1e-9);
     }
 }

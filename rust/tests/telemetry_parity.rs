@@ -1,0 +1,203 @@
+//! The telemetry inertness contract (PR 7): turning the full telemetry
+//! stack on (span histograms + flight recorder + trace buffer + the
+//! engine-event observer) is byte-invisible to every deterministic
+//! artifact — `SimResult` across the scheduler zoo with replan and churn
+//! active, and the `ServiceReport` snapshot of a driven service core.
+//! Separately, the per-thread histogram merge is order-insensitive: a
+//! sweep run on 1 worker and on 4 workers aggregates identical per-stage
+//! span counts.
+//!
+//! The obs flag word and aggregates are process-global; every test here
+//! takes `LOCK` (poison-tolerant, so one failing test doesn't cascade)
+//! and restores flags-off + reset state before releasing it.
+
+use std::sync::Mutex;
+
+use dmlrs::chaos::ChurnSpec;
+use dmlrs::cluster::Cluster;
+use dmlrs::jobs::Job;
+use dmlrs::obs::{self, export::TelemetryObserver, Stage};
+use dmlrs::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
+use dmlrs::sched::replan::ReplanPolicy;
+use dmlrs::service::{ServiceConfig, ServiceCore, ServiceReport};
+use dmlrs::sim::{SimEngine, SimResult};
+use dmlrs::sweep::{run_matrix, ClusterSpec, ScenarioMatrix, WorkloadSpec};
+use dmlrs::util::json::Json;
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::{paper_cluster, paper_cluster_skewed};
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+const JOBS: usize = 12;
+const HORIZON: usize = 14;
+const WORKLOAD_SEED: u64 = 21;
+const SCHED_SEED: u64 = 4;
+
+fn workload() -> Vec<Job> {
+    let mut rng = Rng::new(WORKLOAD_SEED);
+    synthetic_jobs(&SynthConfig::paper(JOBS, HORIZON, MIX_DEFAULT), &mut rng)
+}
+
+fn clusters() -> Vec<(&'static str, Cluster)> {
+    vec![
+        ("homogeneous", paper_cluster(8)),
+        ("skewed", paper_cluster_skewed(8, 2.0)),
+    ]
+}
+
+/// Run `key` through the engine with replan + churn active (the busiest
+/// code path: every instrumented engine stage fires), optionally with
+/// the telemetry observer attached.
+fn run(key: &str, cluster: &Cluster, telemetry: Option<&mut TelemetryObserver>) -> SimResult {
+    let reg = SchedulerRegistry::builtin();
+    let jobs = workload();
+    let spec = SchedulerSpec::new(key).with_seed(SCHED_SEED);
+    let mut sched = reg.build(&spec, &jobs, cluster, HORIZON).unwrap();
+    let mut builder = SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(cluster)
+        .horizon(HORIZON)
+        .replan(ReplanPolicy::Every(3))
+        .churn(ChurnSpec::parse("down@3:1,up@7:1").unwrap(), SCHED_SEED);
+    if let Some(t) = telemetry {
+        builder = builder.observer(t);
+    }
+    builder.run(sched.as_mut())
+}
+
+#[test]
+fn full_telemetry_is_byte_inert_across_the_zoo() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for (shape, cluster) in clusters() {
+        for key in ZOO {
+            obs::set_flags(0);
+            let off = run(key, &cluster, None);
+
+            obs::set_flags(obs::ALL);
+            obs::reset();
+            let mut telemetry = TelemetryObserver::new();
+            let on = run(key, &cluster, Some(&mut telemetry));
+            obs::flush_local();
+            let totals = obs::global_totals();
+            let trace = telemetry.chrome_trace_json();
+            obs::set_flags(0);
+            obs::reset();
+
+            // byte-identity: outcomes, utilities, ftf, churn/replan
+            // counters, AND the solver diagnostic counters (an untouched
+            // RNG/solve stream)
+            assert_eq!(off, on, "{key} on {shape}: telemetry must be inert");
+
+            // ... and the instrumentation actually observed the run
+            assert!(
+                totals[Stage::AdmissionCommit as usize].0 >= JOBS as u64,
+                "{key} on {shape}: every submit opens an admission span: {totals:?}"
+            );
+            assert!(
+                totals[Stage::MigrationPass as usize].0 >= 1,
+                "{key} on {shape}: the churn trace forces migration passes"
+            );
+            let doc = Json::parse(&trace).unwrap_or_else(|e| {
+                panic!("{key} on {shape}: trace must be valid JSON: {e}")
+            });
+            assert!(
+                !doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty(),
+                "{key} on {shape}: trace must carry events"
+            );
+            assert!(trace.contains("\"admission_commit\""), "{key} on {shape}");
+            assert!(
+                trace.contains("\"ph\":\"i\""),
+                "{key} on {shape}: engine events must land as instants"
+            );
+            if key == "pd-ors" {
+                assert!(
+                    totals[Stage::ThetaSolve as usize].0 > 0
+                        && totals[Stage::LpSolve as usize].0 > 0
+                        && totals[Stage::Rounding as usize].0 > 0,
+                    "pd-ors on {shape}: solver stages must record: {totals:?}"
+                );
+                assert!(trace.contains("\"theta_solve\""), "{shape}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_span_counts_are_worker_count_invariant() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let matrix = ScenarioMatrix::new()
+        .schedulers(&["pd-ors", "fifo"])
+        .workload(WorkloadSpec::synthetic(10, 10, 0))
+        .cluster(ClusterSpec::homogeneous(5))
+        .seeds(2);
+
+    obs::set_flags(obs::SPANS);
+    obs::reset();
+    let serial = run_matrix(&matrix, 1, None).unwrap();
+    let counts_1: Vec<u64> = obs::global_totals().iter().map(|t| t.0).collect();
+
+    obs::reset();
+    let parallel = run_matrix(&matrix, 4, None).unwrap();
+    let counts_4: Vec<u64> = obs::global_totals().iter().map(|t| t.0).collect();
+    obs::set_flags(0);
+    obs::reset();
+
+    assert_eq!(serial.len(), parallel.len());
+    // span *counts* are deterministic per cell (durations are not), and
+    // the per-worker flush_local merge is order-insensitive — so the
+    // aggregate must not depend on how cells were dealt to workers
+    assert_eq!(counts_1, counts_4, "histogram merge must be order-insensitive");
+    assert!(
+        counts_1[Stage::ThetaSolve as usize] > 0
+            && counts_1[Stage::SnapshotBuild as usize] > 0,
+        "the pd-ors cells must have recorded solver spans: {counts_1:?}"
+    );
+}
+
+#[test]
+fn service_report_is_telemetry_inert() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let drive = || -> ServiceReport {
+        let horizon = 12usize;
+        let workload = WorkloadSpec::synthetic(16, horizon, 0);
+        let jobs = workload.jobs(5);
+        let mut core = ServiceCore::new(ServiceConfig {
+            scheduler: SchedulerSpec::new("pd-ors")
+                .with_seed(5)
+                .with_replan(ReplanPolicy::Every(3)),
+            cluster: ClusterSpec::homogeneous(6),
+            workload,
+            churn: ChurnSpec::None,
+        })
+        .unwrap();
+        let mut next = 0usize;
+        for t in 0..horizon {
+            while next < jobs.len() && jobs[next].arrival <= t {
+                let resp = core.submit(jobs[next].clone());
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+                next += 1;
+            }
+            core.tick();
+        }
+        core.report()
+    };
+
+    obs::set_flags(0);
+    let off = drive();
+
+    obs::set_flags(obs::ALL);
+    obs::reset();
+    let on = drive();
+    let flight = dmlrs::obs::flight::dump_json();
+    obs::set_flags(0);
+    obs::reset();
+
+    // the report snapshot excludes wall-clock latencies by design, so
+    // full equality is the right oracle
+    assert_eq!(off, on, "telemetry must not perturb the service core");
+    assert!(
+        flight.get("entries").and_then(Json::as_arr).is_some_and(|a| !a.is_empty()),
+        "the flight recorder must have captured spans"
+    );
+}

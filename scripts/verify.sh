@@ -81,14 +81,16 @@ if [ "${UNCACHED_HITS:-0}" -ne 0 ]; then
     exit 1
 fi
 
-echo "== service bench (admission daemon + open-loop load) =="
-# Boot the daemon on an ephemeral port, fire a quick load burst at it,
-# and emit BENCH_service.json (throughput + p50/p95/p99 admission
-# latency). Fails if the daemon does not come up or the report lacks the
-# latency/throughput fields.
+echo "== service bench (admission daemon + open-loop load + prom scrape) =="
+# Boot the daemon on an ephemeral port (with the Prometheus HTTP
+# exposition on a second ephemeral port), fire a quick load burst at it,
+# scrape /metrics into PROM_snapshot.txt, then drain over the wire.
+# Fails if the daemon does not come up, the report lacks the
+# latency/throughput fields, or the exposition lacks the stage histogram.
 SERVE_LOG=target/serve_bench.log
-rm -f ../BENCH_service.json "$SERVE_LOG"
-"$BIN" serve --addr 127.0.0.1:0 --machines 8 --jobs 24 --horizon 12 --seed 1 \
+rm -f ../BENCH_service.json ../PROM_snapshot.txt "$SERVE_LOG"
+"$BIN" serve --addr 127.0.0.1:0 --prom-addr 127.0.0.1:0 \
+    --machines 8 --jobs 24 --horizon 12 --seed 1 \
     >"$SERVE_LOG" 2>&1 &
 SERVE_PID=$!
 ADDR=""
@@ -104,10 +106,42 @@ if [ -z "$ADDR" ]; then
     exit 1
 fi
 "$BIN" load --addr "$ADDR" --connections 4 --rate 400 \
-    --jobs 24 --horizon 12 --seed 1 --shutdown --bench-out ../BENCH_service.json
+    --jobs 24 --horizon 12 --seed 1 --bench-out ../BENCH_service.json
+# Scrape the Prometheus endpoint (plain HTTP over bash's /dev/tcp) after
+# the burst so the stage histograms and decision counters are non-empty.
+PROM_URL=$(awk '/prometheus exposition at /{print $NF; exit}' "$SERVE_LOG")
+if [ -z "$PROM_URL" ]; then
+    echo "error: daemon did not announce the prometheus endpoint" >&2
+    cat "$SERVE_LOG" >&2
+    exit 1
+fi
+PROM_HP=${PROM_URL#http://}; PROM_HP=${PROM_HP%/metrics}
+exec 3<>"/dev/tcp/${PROM_HP%:*}/${PROM_HP##*:}"
+printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
+cat <&3 > ../PROM_snapshot.txt
+exec 3<&- 3>&-
+for want in 'dmlrs_stage_duration_us_bucket' 'dmlrs_stage_max_us' \
+            'stage="admission_commit"' 'dmlrs_submitted_total'; do
+    if ! grep -q "$want" ../PROM_snapshot.txt; then
+        echo "error: PROM_snapshot.txt lacks $want" >&2
+        cat ../PROM_snapshot.txt >&2
+        exit 1
+    fi
+done
+if grep -q 'dmlrs_submitted_total 0$' ../PROM_snapshot.txt; then
+    echo "error: prom scrape saw zero submissions after the load burst" >&2
+    exit 1
+fi
+echo "prom scrape OK ($(wc -l < ../PROM_snapshot.txt | tr -d ' ') exposition lines)"
+# drain the daemon over the wire (the load run no longer does it, so the
+# prom scrape above could observe the live counters)
+exec 3<>"/dev/tcp/${ADDR%:*}/${ADDR##*:}"
+printf '{"op":"shutdown"}\n' >&3
+read -r _ <&3 || true
+exec 3<&- 3>&-
 wait "$SERVE_PID"
 cat ../BENCH_service.json
-for field in p99_ms p50_ms p95_ms achieved_rate; do
+for field in p99_ms p50_ms p95_ms p999_ms achieved_rate; do
     if ! grep -q "\"$field\":" ../BENCH_service.json; then
         echo "error: BENCH_service.json lacks $field" >&2
         exit 1
@@ -190,6 +224,28 @@ if [ "${FTF_LINES:-0}" -ne "$CELLS" ]; then
 fi
 rm -f "$CHURN_OFF" "$CHURN_ON"
 
+echo "== telemetry trace smoke (schedule --trace-out) =="
+# One busy quick run (replan + churn active, so every instrumented
+# engine stage fires) exported as Chrome trace-event JSON. The trace
+# must contain at least one span per instrumented pipeline stage
+# (queue_wait is daemon-only and covered by the prom scrape above).
+TRACE_OUT=../trace_quick.json
+rm -f "$TRACE_OUT"
+"$BIN" schedule --scheduler pd-ors --machines 8 --jobs 16 --horizon 12 --seed 3 \
+    --replan every:2 --churn down@2:1,up@5:1 --trace-out "$TRACE_OUT" >/dev/null
+for stage in snapshot_build theta_solve memo_lookup lp_solve rounding \
+             replan_pass migration_pass admission_commit; do
+    if ! grep -q "\"name\":\"$stage\"" "$TRACE_OUT"; then
+        echo "error: trace_quick.json lacks a $stage span" >&2
+        exit 1
+    fi
+done
+if ! grep -q '"traceEvents"' "$TRACE_OUT" || ! grep -q '"ph":"i"' "$TRACE_OUT"; then
+    echo "error: trace_quick.json is not a Chrome trace with engine instants" >&2
+    exit 1
+fi
+echo "trace OK: all instrumented engine stages present in trace_quick.json"
+
 echo "== bench baseline gate (BENCH_TREND.json) =="
 # Committed per-PR bench baselines: BENCH_TREND.json holds one JSON line
 # per bench. Deterministic metrics are compared against the baseline and
@@ -225,6 +281,50 @@ if [ -n "$BASE" ]; then
 else
     printf '%s\n' "$CURRENT" >> "$TREND"
     echo "recorded new churn baseline in BENCH_TREND.json — commit it to pin"
+fi
+
+# Derived machine-normalized trend metrics: counter ratios only, never
+# raw wall time, so the gate is stable across runner hardware.
+#   memo_hit_rate      — θ-memo hits / probes on the quick Fig. 6 run
+#                        (solver caching efficiency)
+#   replan_utility_gain — relative utility gained by replan on the
+#                        diurnal quick sweep (deterministic given seeds)
+#   churn_disruption   — evicted + migrated jobs on the churny quick
+#                        sweep (the seeded fault path's footprint)
+THETA=$(cat ../BENCH_solver.json | json_field theta_solves)
+HITS=$(cat ../BENCH_solver.json | json_field memo_hits)
+HIT_RATE=$(awk -v t="$THETA" -v h="$HITS" 'BEGIN { printf "%.4f", (t + h > 0) ? h / (t + h) : 0 }')
+GAIN=$(cat ../BENCH_replan.json | json_field utility_gain)
+EVICTED=$(cat ../BENCH_churn.json | json_field evicted_jobs)
+MIGRATED=$(cat ../BENCH_churn.json | json_field migrated_jobs)
+DISRUPTION=$((EVICTED + MIGRATED))
+CURRENT=$(printf '{"bench": "derived_trend_metrics", "memo_hit_rate": %s, "replan_utility_gain": %s, "churn_disruption": %d}' \
+    "$HIT_RATE" "$GAIN" "$DISRUPTION")
+BASE=$(grep '"bench": "derived_trend_metrics"' "$TREND" | head -n 1 || true)
+if [ -n "$BASE" ]; then
+    BASE_RATE=$(printf '%s\n' "$BASE" | json_field memo_hit_rate)
+    BASE_GAIN=$(printf '%s\n' "$BASE" | json_field replan_utility_gain)
+    BASE_DISRUPT=$(printf '%s\n' "$BASE" | json_field churn_disruption)
+    # the θ-memo must stay effective: hit rate not >10% (relative) below baseline
+    if awk -v b="$BASE_RATE" -v n="$HIT_RATE" 'BEGIN { exit !(b > 0 && n < 0.90 * b) }'; then
+        echo "error: memo hit rate regressed beyond 10%: $HIT_RATE vs baseline $BASE_RATE" >&2
+        exit 1
+    fi
+    # replan must keep earning: gain not more than 0.05 (absolute) below baseline
+    if awk -v b="$BASE_GAIN" -v n="$GAIN" 'BEGIN { exit !(n < b - 0.05) }'; then
+        echo "error: replan utility gain regressed: $GAIN vs baseline $BASE_GAIN" >&2
+        exit 1
+    fi
+    # the seeded fault path is deterministic; large drift means churn or
+    # migration behavior changed silently (re-pin the baseline if intended)
+    if awk -v b="$BASE_DISRUPT" -v n="$DISRUPTION" 'BEGIN { exit !(b > 0 && (n > 1.25 * b || n < 0.75 * b)) }'; then
+        echo "error: churn disruption drifted beyond 25%: $DISRUPTION vs baseline $BASE_DISRUPT" >&2
+        exit 1
+    fi
+    echo "derived trend metrics within thresholds (hit_rate $HIT_RATE vs $BASE_RATE, gain $GAIN vs $BASE_GAIN, disruption $DISRUPTION vs $BASE_DISRUPT)"
+else
+    printf '%s\n' "$CURRENT" >> "$TREND"
+    echo "recorded derived trend baseline in BENCH_TREND.json — commit it to pin"
 fi
 
 echo "verify: OK"
