@@ -1,12 +1,12 @@
 //! Subcommand implementations.
 
 use crate::chaos::ChurnSpec;
-use crate::cluster::AllocLedger;
+use crate::cluster::{AllocLedger, Cluster};
 use crate::config::Config;
 use crate::err;
 use crate::exec::{execute_schedule, ExecConfig};
 use crate::experiments::figures::{run_figure, ExpParams};
-use crate::jobs::Job;
+use crate::jobs::{Job, Schedule};
 use crate::runtime::{ModelBundle, XlaRuntime};
 use crate::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
 use crate::sched::replan::ReplanPolicy;
@@ -20,9 +20,11 @@ use crate::sweep::{
     run_matrix_with, ClusterSpec, ResultStore, ScenarioMatrix, SweepSpec, WorkloadSpec,
 };
 use crate::util::error::{Error, Result};
+use crate::util::json::{self, Json};
+use crate::util::stats;
 use crate::util::timer::Timer;
 use crate::util::Rng;
-use crate::workload::synthetic::paper_cluster;
+use crate::workload::synthetic::{paper_cluster, paper_cluster_skewed};
 use crate::workload::{
     google_trace_jobs, google_trace_jobs_from_events, load_trace_csv, synthetic_jobs,
     ArrivalProcess, SynthConfig, MIX_DEFAULT, MIX_TRACE,
@@ -120,8 +122,8 @@ fn workload_spec(args: &Args, cfg: Option<&Config>) -> Result<WorkloadSpec> {
 /// Resolve the scheduler spec: `[scheduler]` config section overridden
 /// by the `--scheduler` flag. Seed precedence: explicit `--seed` flag >
 /// `scheduler.seed` config key > the workload default. Solver knobs:
-/// `--dp-units N` and `--no-theta-cache` override their config keys;
-/// `--replan every:<k>` overrides `scheduler.replan`.
+/// `--dp-units N`, `--no-theta-cache`, and `--cold-solver` override
+/// their config keys; `--replan every:<k>` overrides `scheduler.replan`.
 fn scheduler_spec(
     args: &Args,
     cfg: Option<&Config>,
@@ -150,6 +152,9 @@ fn scheduler_spec(
     }
     if args.bool("no-theta-cache") {
         spec.pdors.theta_cache = false;
+    }
+    if args.bool("cold-solver") {
+        spec.pdors.cold_solver = true;
     }
     if let Some(r) = args.get("replan") {
         spec.replan = ReplanPolicy::parse(r).map_err(Error::from)?;
@@ -237,6 +242,15 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
     println!(
         "solver: theta_solves={} memo_hits={} lp_solves={} lp_pivots={} rounding_attempts={}",
         sv.theta_solves, sv.memo_hits, sv.lp_solves, sv.lp_pivots, sv.rounding_attempts
+    );
+    println!(
+        "reuse: warm_hits={} warm_fallbacks={} warm_pivots_saved={} memo_invalidated={} \
+         snapshot_delta_updates={}",
+        sv.warm_hits,
+        sv.warm_fallbacks,
+        sv.warm_pivots_saved,
+        sv.memo_invalidated,
+        sv.snapshot_delta_updates
     );
     Ok(())
 }
@@ -705,5 +719,177 @@ pub fn cmd_bounds(args: &Args) -> Result<()> {
         "competitive ratio bound (Thm 5, G_delta={g}, delta={delta}): {:.1}",
         6.0 * g / delta * pricing.epsilon()
     );
+    Ok(())
+}
+
+/// One full admission pass for `admission-bench`: every job planned and
+/// (maybe) committed in arrival order against a fresh ledger, with the
+/// per-arrival wall clock captured around each `on_arrival`.
+struct AdmissionPass {
+    schedules: Vec<Option<Schedule>>,
+    latencies_ms: Vec<f64>,
+    stats: crate::sched::SolverStats,
+    total_utility: f64,
+    admitted: usize,
+}
+
+fn run_admission_pass(
+    jobs: &[Job],
+    cluster: &Cluster,
+    horizon: usize,
+    seed: u64,
+    cold_solver: bool,
+) -> AdmissionPass {
+    let cfg = PdOrsConfig { seed, cold_solver, ..Default::default() };
+    let mut pdors = PdOrs::new(cfg, jobs, cluster, horizon);
+    let mut ledger = AllocLedger::new(cluster, horizon);
+    let mut schedules = Vec::with_capacity(jobs.len());
+    let mut latencies_ms = Vec::with_capacity(jobs.len());
+    let mut admitted = 0;
+    for job in jobs {
+        let t = Timer::start();
+        let s = pdors.on_arrival(job, &mut ledger);
+        latencies_ms.push(t.elapsed_ms());
+        admitted += s.is_some() as usize;
+        schedules.push(s);
+    }
+    AdmissionPass {
+        schedules,
+        latencies_ms,
+        stats: pdors.solver_stats(),
+        total_utility: pdors.total_utility(),
+        admitted,
+    }
+}
+
+fn max_of(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
+fn pass_json(p: &AdmissionPass) -> Json {
+    let sv = p.stats;
+    json::obj(vec![
+        ("p50_ms", json::num(stats::percentile(&p.latencies_ms, 50.0))),
+        ("p99_ms", json::num(stats::percentile(&p.latencies_ms, 99.0))),
+        ("mean_ms", json::num(stats::mean(&p.latencies_ms))),
+        ("max_ms", json::num(max_of(&p.latencies_ms))),
+        ("theta_solves", json::num(sv.theta_solves as f64)),
+        ("memo_hits", json::num(sv.memo_hits as f64)),
+        ("lp_solves", json::num(sv.lp_solves as f64)),
+        ("lp_pivots", json::num(sv.lp_pivots as f64)),
+        (
+            "pivots_per_theta",
+            json::num(sv.lp_pivots as f64 / sv.theta_solves.max(1) as f64),
+        ),
+        ("warm_hits", json::num(sv.warm_hits as f64)),
+        ("warm_fallbacks", json::num(sv.warm_fallbacks as f64)),
+        ("warm_pivots_saved", json::num(sv.warm_pivots_saved as f64)),
+        ("memo_invalidated", json::num(sv.memo_invalidated as f64)),
+        ("snapshot_delta_updates", json::num(sv.snapshot_delta_updates as f64)),
+    ])
+}
+
+/// `admission-bench`: the incremental-solver acceptance harness. Runs
+/// the same arrival stream twice over one large (default 1024-machine,
+/// skewed) cluster — once with `--cold-solver` semantics and once on the
+/// default incremental path — enforces byte parity between the two, and
+/// reports per-admission latency percentiles plus the solver counters
+/// that explain the difference. `--out BENCH_admission.json` writes the
+/// single-line artifact `scripts/verify.sh` trends.
+pub fn cmd_admission_bench(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let machines = usize_of(args, cfg.as_ref(), "machines", 1024);
+    let num_jobs = usize_of(args, cfg.as_ref(), "jobs", 96);
+    let horizon = usize_of(args, cfg.as_ref(), "horizon", 48);
+    let seed = args.u64_or("seed", 1);
+    let skew = args.f64_or("skew", 2.0);
+
+    let cluster = if skew > 1.0 {
+        paper_cluster_skewed(machines, skew)
+    } else {
+        paper_cluster(machines)
+    };
+    let mut rng = Rng::new(seed);
+    let jobs = synthetic_jobs(&SynthConfig::paper(num_jobs, horizon, MIX_DEFAULT), &mut rng);
+
+    eprintln!(
+        "admission-bench: machines={machines} skew={skew} jobs={num_jobs} \
+         horizon={horizon} seed={seed}"
+    );
+    let t = Timer::start();
+    let cold = run_admission_pass(&jobs, &cluster, horizon, seed, true);
+    eprintln!("  cold pass done ({:.1}s)", t.elapsed_secs());
+    let t = Timer::start();
+    let incr = run_admission_pass(&jobs, &cluster, horizon, seed, false);
+    eprintln!("  incremental pass done ({:.1}s)", t.elapsed_secs());
+
+    // The safety property the incremental solver hangs on: reuse is an
+    // optimization, never a policy change. Any divergence is a bug, and
+    // a bench that benchmarks two different policies is worthless — so
+    // the artifact is only ever written for byte-identical outcomes.
+    if cold.schedules != incr.schedules
+        || cold.total_utility.to_bits() != incr.total_utility.to_bits()
+    {
+        return Err(err!(
+            "cold/incremental parity violation: admitted {} vs {}, utility {} vs {}",
+            cold.admitted,
+            incr.admitted,
+            cold.total_utility,
+            incr.total_utility
+        ));
+    }
+
+    for (label, p) in [("cold       ", &cold), ("incremental", &incr)] {
+        let sv = p.stats;
+        println!(
+            "{label}: admitted={}/{} p50={:.2}ms p99={:.2}ms max={:.2}ms \
+             theta_solves={} lp_solves={} lp_pivots={} pivots_per_theta={:.3}",
+            p.admitted,
+            jobs.len(),
+            stats::percentile(&p.latencies_ms, 50.0),
+            stats::percentile(&p.latencies_ms, 99.0),
+            max_of(&p.latencies_ms),
+            sv.theta_solves,
+            sv.lp_solves,
+            sv.lp_pivots,
+            sv.lp_pivots as f64 / sv.theta_solves.max(1) as f64,
+        );
+    }
+    let sv = incr.stats;
+    println!(
+        "reuse: warm_hits={} warm_fallbacks={} warm_pivots_saved={} memo_hits={} \
+         memo_invalidated={} snapshot_delta_updates={}",
+        sv.warm_hits,
+        sv.warm_fallbacks,
+        sv.warm_pivots_saved,
+        sv.memo_hits,
+        sv.memo_invalidated,
+        sv.snapshot_delta_updates
+    );
+
+    if let Some(out) = args.get("out") {
+        let p50_gain = stats::percentile(&cold.latencies_ms, 50.0)
+            / stats::percentile(&incr.latencies_ms, 50.0).max(1e-9);
+        let p99_gain = stats::percentile(&cold.latencies_ms, 99.0)
+            / stats::percentile(&incr.latencies_ms, 99.0).max(1e-9);
+        let j = json::obj(vec![
+            ("bench", json::s("admission")),
+            ("machines", json::num(machines as f64)),
+            ("skew", json::num(skew)),
+            ("jobs", json::num(num_jobs as f64)),
+            ("horizon", json::num(horizon as f64)),
+            ("seed", json::num(seed as f64)),
+            ("parity", Json::Bool(true)),
+            ("admitted", json::num(cold.admitted as f64)),
+            ("cold", pass_json(&cold)),
+            ("incremental", pass_json(&incr)),
+            ("speedup_p50", json::num(p50_gain)),
+            ("speedup_p99", json::num(p99_gain)),
+        ]);
+        let mut line = j.to_string();
+        line.push('\n');
+        std::fs::write(out, line).map_err(|e| err!("{out}: {e}"))?;
+        eprintln!("wrote {out}");
+    }
     Ok(())
 }

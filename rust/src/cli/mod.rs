@@ -17,6 +17,8 @@
 //!   a running daemon.
 //! * `bounds`     — print the pricing constants and competitive-ratio
 //!   bound for a workload.
+//! * `admission-bench` — cold vs incremental per-admission solve latency
+//!   at production cluster sizes, with internal byte-parity enforcement.
 
 pub mod args;
 pub mod commands;
@@ -59,6 +61,7 @@ fn dispatch(argv: &[String]) -> i32 {
         "serve" => commands::cmd_serve(&args),
         "load" => commands::cmd_load(&args),
         "bounds" => commands::cmd_bounds(&args),
+        "admission-bench" => commands::cmd_admission_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -99,8 +102,10 @@ COMMANDS:
               machine failures/drains/rejoins; stranded started jobs are
               migrated or evicted (default none = no churn, byte-identical
               to a churn-less run; see chaos/)
-              [--dp-units N] [--no-theta-cache]  solver knobs (the cache
-              is semantically invisible; disabling it is the parity oracle)
+              [--dp-units N] [--no-theta-cache] [--cold-solver]  solver
+              knobs (the caches are semantically invisible; --cold-solver
+              disables every cross-arrival reuse — warm simplex, memo
+              carry-over, persistent snapshots — and is the parity oracle)
               [--trace-out run.json]  write a Chrome trace-event JSON of
               the run's pipeline spans + engine events (open in Perfetto
               or chrome://tracing; telemetry never changes the schedule)
@@ -146,6 +151,13 @@ COMMANDS:
               [--bench-out BENCH_service.json]  reports throughput and
               p50/p95/p99 admission latency
   bounds      pricing constants   --machines N --jobs N --horizon N
+  admission-bench  cold vs incremental admission latency at scale
+              [--machines N] (default 1024) [--jobs N] (default 96)
+              [--horizon N] (default 48) [--seed N] [--skew S] (default
+              2.0; <=1 = homogeneous) [--out BENCH_admission.json]
+              runs the same arrival stream twice (cold solver, then
+              incremental reuse), asserts byte-identical schedules, and
+              reports p50/p99 per-admission latency + pivots-per-solve
   help        this text
 
 Global flags: --log-level error|warn|info|debug|trace (every command;

@@ -85,40 +85,73 @@ impl SlotSnapshot {
         assert_eq!(prices.len(), n, "prices/residual length mismatch");
         assert_eq!(allow_worker.len(), n, "allow_worker length mismatch");
         assert_eq!(allow_ps.len(), n, "allow_ps length mismatch");
-        let mut groups: Vec<MachineGroup> = Vec::new();
+        let mut snap = SlotSnapshot {
+            prices,
+            residual,
+            allow_worker,
+            allow_ps,
+            groups: Vec::new(),
+        };
+        snap.regroup(group_machines);
+        snap
+    }
+
+    /// Overwrite machine `h`'s structural entry — the delta path's
+    /// per-machine update. The caller must [`regroup`](Self::regroup)
+    /// afterwards; until then `groups` is stale.
+    pub fn set_machine(
+        &mut self,
+        h: usize,
+        price: [f64; NUM_RESOURCES],
+        residual: ResVec,
+        allow_worker: bool,
+        allow_ps: bool,
+    ) {
+        self.prices[h] = price;
+        self.residual[h] = residual;
+        self.allow_worker[h] = allow_worker;
+        self.allow_ps[h] = allow_ps;
+    }
+
+    /// Rebuild `groups` from the per-machine vectors — the single grouping
+    /// routine shared by [`new`](Self::new) and the incremental delta path
+    /// (`sched::solver::snapcache`), so a delta-updated snapshot is
+    /// structurally indistinguishable from a from-scratch build.
+    pub fn regroup(&mut self, group_machines: bool) {
+        let n = self.residual.len();
+        self.groups.clear();
         let mut index: HashMap<GroupKey, usize> = HashMap::new();
         for h in 0..n {
-            let aw = allow_worker[h];
-            let ap = allow_ps[h];
+            let aw = self.allow_worker[h];
+            let ap = self.allow_ps[h];
             if !aw && !ap {
                 continue;
             }
             if !group_machines {
-                groups.push(MachineGroup {
+                self.groups.push(MachineGroup {
                     members: vec![h],
-                    price: prices[h],
-                    residual: residual[h],
+                    price: self.prices[h],
+                    residual: self.residual[h],
                     allow_worker: aw,
                     allow_ps: ap,
                 });
                 continue;
             }
-            let key = group_key(&prices[h], &residual[h], aw, ap);
+            let key = group_key(&self.prices[h], &self.residual[h], aw, ap);
             match index.get(&key) {
-                Some(&g) => groups[g].members.push(h),
+                Some(&g) => self.groups[g].members.push(h),
                 None => {
-                    index.insert(key, groups.len());
-                    groups.push(MachineGroup {
+                    index.insert(key, self.groups.len());
+                    self.groups.push(MachineGroup {
                         members: vec![h],
-                        price: prices[h],
-                        residual: residual[h],
+                        price: self.prices[h],
+                        residual: self.residual[h],
                         allow_worker: aw,
                         allow_ps: ap,
                     });
                 }
             }
         }
-        SlotSnapshot { prices, residual, allow_worker, allow_ps, groups }
     }
 
     pub fn num_machines(&self) -> usize {
@@ -158,6 +191,14 @@ pub struct PriceView<'a> {
 #[derive(Debug, Default)]
 pub struct SignatureInterner {
     ids: HashMap<Vec<u64>, u32>,
+    /// Next id to hand out. Monotone except across [`clear`]: selective
+    /// removal ([`remove_ids`]) never resets it, so an id freed by garbage
+    /// collection is **never reused** — the property that lets memo
+    /// entries keyed by old ids stay merely dead instead of wrong.
+    ///
+    /// [`clear`]: SignatureInterner::clear
+    /// [`remove_ids`]: SignatureInterner::remove_ids
+    next_id: u32,
 }
 
 impl SignatureInterner {
@@ -165,17 +206,23 @@ impl SignatureInterner {
         SignatureInterner::default()
     }
 
-    /// Drop all interned signatures (ids restart from 0). The planner
-    /// clears the interner together with its θ-memo before each arrival:
-    /// prices move between arrivals (Eq. (12)), so ids must not leak
-    /// across planning episodes.
+    /// Drop all interned signatures (ids restart from 0) — the cold
+    /// oracle's episode boundary (`--cold-solver`, and the historical
+    /// per-arrival behavior). The incremental path never calls this; it
+    /// retires ids selectively via [`remove_ids`](Self::remove_ids).
     pub fn clear(&mut self) {
         self.ids.clear();
+        self.next_id = 0;
     }
 
-    /// Number of distinct signatures seen since the last [`clear`].
-    ///
-    /// [`clear`]: SignatureInterner::clear
+    /// Forget the signatures behind the given ids (incremental-path GC:
+    /// no cached slot references them anymore). Ids are *not* reused —
+    /// see `next_id`.
+    pub fn remove_ids(&mut self, dead: &std::collections::HashSet<u32>) {
+        self.ids.retain(|_, id| !dead.contains(id));
+    }
+
+    /// Number of currently interned signatures.
     pub fn len(&self) -> usize {
         self.ids.len()
     }
@@ -193,8 +240,14 @@ impl SignatureInterner {
             key.extend_from_slice(&gk);
             key.push(g.members.len() as u64);
         }
-        let next = self.ids.len() as u32;
-        *self.ids.entry(key).or_insert(next)
+        match self.ids.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let id = self.next_id;
+                self.next_id += 1;
+                *e.insert(id)
+            }
+        }
     }
 }
 
@@ -312,6 +365,43 @@ mod tests {
         let mut interner = SignatureInterner::new();
         assert_eq!(interner.intern(&a), interner.intern(&b));
         assert_ne!(a.groups[0].members, b.groups[0].members);
+    }
+
+    #[test]
+    fn set_machine_plus_regroup_matches_from_scratch() {
+        // mutate one machine of a grouped snapshot via the delta path and
+        // check it is structurally identical to a fresh build
+        let mut snap = flat(6, 1.0, 60.0);
+        snap.set_machine(2, [2.5; NUM_RESOURCES], ResVec::new([30.0; NUM_RESOURCES]), true, false);
+        snap.regroup(true);
+
+        let mut prices = vec![[1.0; NUM_RESOURCES]; 6];
+        prices[2] = [2.5; NUM_RESOURCES];
+        let mut resid = vec![ResVec::new([60.0; NUM_RESOURCES]); 6];
+        resid[2] = ResVec::new([30.0; NUM_RESOURCES]);
+        let mut aps = vec![true; 6];
+        aps[2] = false;
+        let fresh = SlotSnapshot::new(prices, resid, vec![true; 6], aps, true);
+        assert_eq!(snap, fresh);
+        assert_eq!(snap.groups.len(), 2);
+    }
+
+    #[test]
+    fn remove_ids_never_reuses_ids() {
+        let mut interner = SignatureInterner::new();
+        let a = flat(4, 1.0, 10.0);
+        let b = flat(4, 2.0, 10.0);
+        let ia = interner.intern(&a);
+        let ib = interner.intern(&b);
+        let dead: std::collections::HashSet<u32> = [ia].into_iter().collect();
+        interner.remove_ids(&dead);
+        assert_eq!(interner.len(), 1);
+        // re-interning the removed structure yields a brand-new id, and
+        // the surviving id is untouched
+        let ia2 = interner.intern(&a);
+        assert_ne!(ia2, ia);
+        assert_ne!(ia2, ib);
+        assert_eq!(interner.intern(&b), ib);
     }
 
     #[test]

@@ -1,12 +1,31 @@
 //! Per-(t, h, r) allocation ledger `ρ_h^r[t]` — the committed resource
 //! amounts the primal-dual scheduler prices against (Algorithm 1 step 3).
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use super::resource::{ResVec, NUM_RESOURCES};
 use super::Cluster;
 use crate::jobs::{Job, Schedule};
 
+/// Process-wide ledger-instance counter (see [`AllocLedger::id`]).
+static NEXT_LEDGER_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Bound on the retained change log. Between two consecutive planning
+/// episodes the event count is a handful of commits/releases (schedule
+/// slots × placements each), so this is generous headroom; overflow is
+/// handled by readers falling back to full snapshot rebuilds.
+const CHANGE_LOG_CAP: usize = 1 << 16;
+
 /// Tracks allocated resources for every future time slot.
-#[derive(Debug, Clone)]
+///
+/// Every mutation (commit / release / availability change) bumps a
+/// per-slot version and appends a `(slot, machine)` event to a bounded
+/// change log — the incremental-snapshot subsystem
+/// (`sched::solver::snapcache`) reads both to delta-update only the
+/// entries a committed schedule touched. Versions are authoritative for
+/// staleness; the log is only a delta *hint* (truncation ⇒ rebuild).
+#[derive(Debug)]
 pub struct AllocLedger {
     /// `alloc[t][h]` = ρ_h[t] (vector over r).
     alloc: Vec<Vec<ResVec>>,
@@ -17,6 +36,34 @@ pub struct AllocLedger {
     /// the lazily-allocated mask is what keeps `churn = none`
     /// byte-identical to the pre-churn ledger.
     avail: Option<Vec<Vec<bool>>>,
+    /// Unique instance id (never reused within a process; clones get a
+    /// fresh one) — lets snapshot caches detect "different ledger".
+    id: u64,
+    /// Monotone per-slot mutation counters.
+    slot_version: Vec<u64>,
+    /// Sequence number of `log[0]`; `log_start + log.len()` is the next
+    /// sequence number to be assigned.
+    log_start: u64,
+    /// Bounded `(t, h)` mutation events in sequence order.
+    log: VecDeque<(u32, u32)>,
+}
+
+impl Clone for AllocLedger {
+    /// Clones carry the allocation state but get a **fresh id** (and an
+    /// empty change log): a clone diverges from its source, and version
+    /// numbers alone cannot distinguish the two histories.
+    fn clone(&self) -> AllocLedger {
+        AllocLedger {
+            alloc: self.alloc.clone(),
+            capacity: self.capacity.clone(),
+            horizon: self.horizon,
+            avail: self.avail.clone(),
+            id: NEXT_LEDGER_ID.fetch_add(1, Ordering::Relaxed),
+            slot_version: self.slot_version.clone(),
+            log_start: 0,
+            log: VecDeque::new(),
+        }
+    }
 }
 
 impl AllocLedger {
@@ -26,7 +73,52 @@ impl AllocLedger {
             capacity: cluster.machines.iter().map(|m| m.capacity).collect(),
             horizon,
             avail: None,
+            id: NEXT_LEDGER_ID.fetch_add(1, Ordering::Relaxed),
+            slot_version: vec![0; horizon],
+            log_start: 0,
+            log: VecDeque::new(),
         }
+    }
+
+    /// Unique instance id of this ledger (process-wide, never reused).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Monotone mutation counter of slot `t`.
+    pub fn slot_version(&self, t: usize) -> u64 {
+        self.slot_version[t]
+    }
+
+    /// The next change-log sequence number (== total events ever logged).
+    pub fn change_seq(&self) -> u64 {
+        self.log_start + self.log.len() as u64
+    }
+
+    /// All `(t, h)` mutation events with sequence number `>= since`, in
+    /// order — or `None` if the bounded log has dropped events past
+    /// `since` (the reader must fall back to full rebuilds).
+    pub fn changes_since(
+        &self,
+        since: u64,
+    ) -> Option<impl Iterator<Item = (usize, usize)> + '_> {
+        if since < self.log_start {
+            return None;
+        }
+        let skip = (since - self.log_start) as usize;
+        Some(self.log.iter().skip(skip).map(|&(t, h)| (t as usize, h as usize)))
+    }
+
+    /// Record a mutation of `(t, h)`: bump the slot version and append the
+    /// delta hint (dropping the oldest hint when the log is full).
+    #[inline]
+    fn touch(&mut self, t: usize, h: usize) {
+        self.slot_version[t] += 1;
+        if self.log.len() == CHANGE_LOG_CAP {
+            self.log.pop_front();
+            self.log_start += 1;
+        }
+        self.log.push_back((t as u32, h as u32));
     }
 
     pub fn horizon(&self) -> usize {
@@ -75,6 +167,9 @@ impl AllocLedger {
         for row in avail.iter_mut().take(horizon).skip(from_t) {
             row[h] = up;
         }
+        for t in from_t..horizon {
+            self.touch(t, h);
+        }
     }
 
     /// Remaining capacity `Ĉ_h^r[t] = C_h^r − ρ_h^r[t]` (clamped at 0).
@@ -104,6 +199,7 @@ impl AllocLedger {
                     .scaled(w as f64)
                     .axpy(s as f64, &job.ps_demand);
                 self.alloc[slot.t][h].add_assign(&add);
+                self.touch(slot.t, h);
             }
         }
     }
@@ -117,6 +213,7 @@ impl AllocLedger {
                     .scaled(w as f64)
                     .axpy(s as f64, &job.ps_demand);
                 self.alloc[slot.t][h].sub_assign(&sub);
+                self.touch(slot.t, h);
             }
         }
     }
@@ -236,6 +333,44 @@ mod tests {
         assert!(!l.available(2, 1));
         assert!(l.available(3, 1));
         assert!(l.fits(&job, &sched, 1e-9));
+    }
+
+    #[test]
+    fn versions_and_change_log_track_mutations() {
+        let mut l = ledger();
+        let other = ledger();
+        assert_ne!(l.id(), other.id(), "instances get distinct ids");
+        assert_eq!(l.change_seq(), 0);
+        let v1_before = l.slot_version(1);
+
+        let job = test_job(0);
+        let sched = Schedule {
+            job_id: 0,
+            slots: vec![SlotPlacement { t: 1, placements: vec![(0, 2, 1)] }],
+        };
+        l.commit(&job, &sched);
+        assert_eq!(l.slot_version(1), v1_before + 1);
+        assert_eq!(l.slot_version(0), 0, "untouched slots keep their version");
+        let events: Vec<_> = l.changes_since(0).unwrap().collect();
+        assert_eq!(events, vec![(1, 0)]);
+
+        l.release(&job, &sched);
+        assert_eq!(l.slot_version(1), v1_before + 2, "release also bumps");
+        // churn events touch one machine across a slot suffix
+        l.set_available_from(1, 2, false);
+        assert_eq!(l.slot_version(2), 1);
+        assert_eq!(l.slot_version(3), 1);
+        let tail: Vec<_> = l.changes_since(2).unwrap().collect();
+        assert_eq!(tail, vec![(2, 1), (3, 1)]);
+        assert_eq!(l.change_seq(), 4);
+        // readers behind the (here: un-truncated) log still resolve
+        assert!(l.changes_since(0).is_some());
+
+        // a clone is a *different* ledger as far as caches are concerned
+        let c = l.clone();
+        assert_ne!(c.id(), l.id());
+        assert_eq!(c.change_seq(), 0, "clone starts a fresh log");
+        assert_eq!(c.slot_version(2), l.slot_version(2));
     }
 
     #[test]

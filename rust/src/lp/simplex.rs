@@ -179,6 +179,90 @@ impl Tableau {
     }
 }
 
+/// The warm-start result cache of [`LpWorkspace::solve_warm`]: the
+/// byte-encoded problem of the most recent warm solve plus its full
+/// outcome. Coefficients are compared through `f64::to_bits`, so a hit
+/// certifies the incoming problem is **bit-identical** — and since
+/// [`LpWorkspace::solve`] is a pure function of the problem (the tableau
+/// is rebuilt from scratch every call; `dirty_workspace_matches_fresh_solve`
+/// is the regression test), replaying the stored result is exact, not an
+/// approximation. That is what keeps `--cold-solver` parity byte-level.
+#[derive(Debug, Default)]
+struct WarmCache {
+    valid: bool,
+    num_vars: usize,
+    /// Objective coefficient bits.
+    objective: Vec<u64>,
+    /// Row coefficient bits, row-major (each row is `num_vars` wide).
+    coeffs: Vec<u64>,
+    cmps: Vec<Cmp>,
+    /// RHS bits per row.
+    rhs: Vec<u64>,
+    infeasible: bool,
+    unbounded: bool,
+    x: Vec<f64>,
+    objective_value: f64,
+    /// Pivots the cached solve spent (reported as saved on each hit).
+    pivots: u64,
+}
+
+impl WarmCache {
+    fn matches(&self, p: &LpProblem) -> bool {
+        if !self.valid
+            || self.num_vars != p.num_vars
+            || self.rhs.len() != p.rows.len()
+        {
+            return false;
+        }
+        if !p.objective.iter().zip(&self.objective).all(|(v, b)| v.to_bits() == *b) {
+            return false;
+        }
+        let mut off = 0;
+        for (i, (a, cmp, b)) in p.rows.iter().enumerate() {
+            if *cmp != self.cmps[i] || b.to_bits() != self.rhs[i] {
+                return false;
+            }
+            let stored = &self.coeffs[off..off + a.len()];
+            if !a.iter().zip(stored).all(|(v, bb)| v.to_bits() == *bb) {
+                return false;
+            }
+            off += a.len();
+        }
+        true
+    }
+
+    fn store(&mut self, p: &LpProblem, status: LpStatus, x: &[f64], obj: f64, pivots: u64) {
+        self.valid = true;
+        self.num_vars = p.num_vars;
+        self.objective.clear();
+        self.objective.extend(p.objective.iter().map(|v| v.to_bits()));
+        self.coeffs.clear();
+        self.cmps.clear();
+        self.rhs.clear();
+        for (a, cmp, b) in &p.rows {
+            self.coeffs.extend(a.iter().map(|v| v.to_bits()));
+            self.cmps.push(*cmp);
+            self.rhs.push(b.to_bits());
+        }
+        self.infeasible = status == LpStatus::Infeasible;
+        self.unbounded = status == LpStatus::Unbounded;
+        self.x.clear();
+        self.x.extend_from_slice(x);
+        self.objective_value = obj;
+        self.pivots = pivots;
+    }
+
+    fn status(&self) -> LpStatus {
+        if self.infeasible {
+            LpStatus::Infeasible
+        } else if self.unbounded {
+            LpStatus::Unbounded
+        } else {
+            LpStatus::Optimal
+        }
+    }
+}
+
 /// Caller-owned solver buffers (see module docs). Construct once, pass to
 /// [`LpWorkspace::solve`] / [`solve_with`] for every LP; the tableau and
 /// all side vectors are recycled in place.
@@ -197,6 +281,7 @@ pub struct LpWorkspace {
     allowed: Vec<bool>,
     x: Vec<f64>,
     objective: f64,
+    warm: WarmCache,
 }
 
 impl LpWorkspace {
@@ -219,6 +304,42 @@ impl LpWorkspace {
     /// (the `SolverStats` LP-pivot counter reads deltas of this).
     pub fn total_pivots(&self) -> u64 {
         self.t.pivots
+    }
+
+    /// Pivot count of the solve currently held by the warm-start cache —
+    /// i.e. the pivots a [`solve_warm`](LpWorkspace::solve_warm) hit did
+    /// *not* have to spend (feeds `SolverStats::warm_pivots_saved`).
+    pub fn warm_saved_pivots(&self) -> u64 {
+        self.warm.pivots
+    }
+
+    /// Solve `p`, replaying the cached result when `p` is **bit-identical**
+    /// to the previous `solve_warm` problem. Returns the status plus
+    /// `true` on a warm hit (zero pivots spent, `x`/`objective` restored
+    /// from the cache) or `false` when it fell back to a cold
+    /// [`solve`](LpWorkspace::solve) and re-remembered.
+    ///
+    /// Exactness: a hit is only declared when every coefficient matches by
+    /// `f64::to_bits` (so `-0.0` vs `0.0` or NaN payloads can't alias), and
+    /// `solve` is a pure function of the problem, so the replayed result is
+    /// the same bytes the cold path would produce. Interleaved plain
+    /// [`solve`](LpWorkspace::solve) calls never touch the cache; a hit
+    /// restores the stored `x` copy, so staleness is impossible.
+    pub fn solve_warm(&mut self, p: &LpProblem) -> (LpStatus, bool) {
+        if self.warm.matches(p) {
+            self.x.clear();
+            self.x.extend_from_slice(&self.warm.x);
+            self.objective = self.warm.objective_value;
+            return (self.warm.status(), true);
+        }
+        let before = self.t.pivots;
+        let status = self.solve(p);
+        let spent = self.t.pivots - before;
+        // Move x out to appease the borrow checker, then put it back.
+        let x = std::mem::take(&mut self.x);
+        self.warm.store(p, status, &x, self.objective, spent);
+        self.x = x;
+        (status, false)
     }
 
     /// Solve `p` in place. Allocation-free once the buffers have grown to
@@ -582,6 +703,81 @@ mod tests {
         assert_eq!(ws.solve(&good), LpStatus::Optimal);
         let f = solve(&good);
         assert_eq!(ws.x(), &f.optimal().unwrap().x[..]);
+    }
+
+    /// `solve_warm` hits must replay the exact bytes of the cold solve —
+    /// x, objective, status — and spend zero pivots doing it, including
+    /// when plain `solve` calls ran in between (stored-x restore) and for
+    /// non-optimal statuses.
+    #[test]
+    fn solve_warm_replays_bit_identical_results() {
+        let mut a = LpProblem::new(2);
+        a.set_objective(vec![-1.0, -1.0]);
+        a.add_row(vec![1.0, 2.0], Cmp::Le, 4.0);
+        a.add_row(vec![3.0, 1.0], Cmp::Le, 6.0);
+        let mut b = LpProblem::new(2);
+        b.set_objective(vec![2.0, 3.0]);
+        b.add_row(vec![1.0, 1.0], Cmp::Ge, 10.0);
+        b.add_row(vec![1.0, 0.0], Cmp::Le, 6.0);
+
+        let mut ws = LpWorkspace::new();
+        let (st, hit) = ws.solve_warm(&a);
+        assert_eq!((st, hit), (LpStatus::Optimal, false), "first solve is cold");
+        let cold_x = ws.x().to_vec();
+        let cold_obj = ws.objective();
+        let saved = ws.warm_saved_pivots();
+        assert!(saved > 0);
+
+        // Identical problem => hit, no pivots, byte-identical result.
+        let pivots_before = ws.total_pivots();
+        let (st, hit) = ws.solve_warm(&a);
+        assert_eq!((st, hit), (LpStatus::Optimal, true));
+        assert_eq!(ws.total_pivots(), pivots_before, "hit spends no pivots");
+        assert_eq!(ws.x(), &cold_x[..]);
+        assert_eq!(ws.objective(), cold_obj);
+
+        // An interleaved *plain* solve overwrites x but not the cache:
+        // the next warm call on `a` must restore the stored copy.
+        assert_eq!(ws.solve(&b), LpStatus::Optimal);
+        assert_ne!(ws.x(), &cold_x[..]);
+        let (st, hit) = ws.solve_warm(&a);
+        assert_eq!((st, hit), (LpStatus::Optimal, true));
+        assert_eq!(ws.x(), &cold_x[..]);
+        assert_eq!(ws.objective(), cold_obj);
+
+        // A different problem through solve_warm => fallback + re-remember.
+        let (st, hit) = ws.solve_warm(&b);
+        assert_eq!((st, hit), (LpStatus::Optimal, false));
+        let (st, hit) = ws.solve_warm(&b);
+        assert_eq!((st, hit), (LpStatus::Optimal, true));
+        // `a` is forgotten now (single-entry cache).
+        let (_, hit) = ws.solve_warm(&a);
+        assert!(!hit);
+
+        // A flipped sign bit (0.0 vs -0.0, equal under `==`) must NOT
+        // hit: exactness is bit-level, not numeric.
+        let mut zero = LpProblem::new(2);
+        zero.set_objective(vec![2.0, 3.0]);
+        zero.add_row(vec![1.0, 0.0], Cmp::Le, 6.0);
+        let (_, hit) = ws.solve_warm(&zero);
+        assert!(!hit);
+        let mut negzero = LpProblem::new(2);
+        negzero.set_objective(vec![2.0, 3.0]);
+        negzero.add_row(vec![1.0, -0.0], Cmp::Le, 6.0);
+        let (_, hit) = ws.solve_warm(&negzero);
+        assert!(!hit, "-0.0 differs from 0.0 at the bit level");
+        let (_, hit) = ws.solve_warm(&negzero);
+        assert!(hit);
+
+        // Infeasible outcomes replay too.
+        let mut inf = LpProblem::new(1);
+        inf.set_objective(vec![1.0]);
+        inf.add_row(vec![1.0], Cmp::Ge, 5.0);
+        inf.add_row(vec![1.0], Cmp::Le, 3.0);
+        let (st, hit) = ws.solve_warm(&inf);
+        assert_eq!((st, hit), (LpStatus::Infeasible, false));
+        let (st, hit) = ws.solve_warm(&inf);
+        assert_eq!((st, hit), (LpStatus::Infeasible, true));
     }
 
     /// `LpProblem::reset` recycles row buffers without changing semantics.

@@ -18,12 +18,17 @@
 //!    saves a factor of T.
 //!
 //! The forward pass runs on the layered solver core: each slot's
-//! [`SlotSnapshot`] is built **once per arrival** (groups deduplicated at
-//! the source), its signature interned, and every θ-solve goes through
-//! [`solve_theta_ctx`] with the planner's [`PlannerScratch`] — memoized
-//! per `(signature, v)` unless the caller disabled the cache
+//! [`SlotSnapshot`] lives in the planner's persistent snapshot cache
+//! (refreshed from the ledger's change journal — full rebuilds only for
+//! cold or invalidated slots), its signature interned, and every θ-solve
+//! goes through [`solve_theta_ctx`] with the planner's
+//! [`PlannerScratch`] — memoized per `(snapshot signature, job
+//! signature, v)` unless the caller disabled the cache
 //! (`DpConfig::theta_cache = false`, the `--no-theta-cache` parity
-//! oracle).
+//! oracle). `DpConfig::cold_solver` (`--cold-solver`) additionally
+//! disables every cross-arrival reuse — persistent snapshots,
+//! cross-episode memo, warm-started simplex — rebuilding each episode
+//! from scratch as the byte-parity oracle.
 
 use crate::cluster::{AllocLedger, SlotSnapshot, NUM_RESOURCES};
 use crate::jobs::{speed, Job, Locality, Schedule, SlotPlacement};
@@ -39,15 +44,26 @@ use super::solver::{
 pub struct DpConfig {
     /// Workload discretization granularity (units per job).
     pub units: usize,
-    /// Memoize θ-solutions per (snapshot signature, v) during the forward
-    /// pass. `false` = the parity oracle: every θ-solve hits the LP.
+    /// Memoize θ-solutions per (snapshot signature, job signature, v)
+    /// during the forward pass. `false` = the memo parity oracle: every
+    /// θ-solve hits the LP.
     pub theta_cache: bool,
+    /// Disable *all* cross-arrival reuse (persistent snapshots, the
+    /// cross-episode memo, the warm-started simplex): every episode
+    /// rebuilds from the ledger exactly like the pre-PR 8 planner — the
+    /// `--cold-solver` byte-parity oracle.
+    pub cold_solver: bool,
     pub theta: ThetaConfig,
 }
 
 impl Default for DpConfig {
     fn default() -> DpConfig {
-        DpConfig { units: 120, theta_cache: true, theta: ThetaConfig::default() }
+        DpConfig {
+            units: 120,
+            theta_cache: true,
+            cold_solver: false,
+            theta: ThetaConfig::default(),
+        }
     }
 }
 
@@ -159,9 +175,11 @@ pub fn plan_job(
 /// within the horizon (the payoff may still be ≤ 0 — admission is the
 /// caller's call, per Algorithm 1 steps 3–4).
 ///
-/// `scratch` carries the interner/memo/workspace across calls; its memo
-/// and interner are cleared here (prices move between arrivals), its
-/// buffers and cumulative [`SolverStats`] are not.
+/// `scratch` carries the interners/memo/snapshots/workspace across
+/// calls; the episode boundary is opened through
+/// [`PlannerScratch::begin_episode`] — cross-arrival reuse by default,
+/// a full clear under `cfg.cold_solver`. Buffers and cumulative
+/// [`SolverStats`] are never cleared.
 pub fn plan_job_with(
     job: &Job,
     ledger: &AllocLedger,
@@ -206,11 +224,14 @@ pub fn plan_job_from(
         return None; // even one unit cannot be trained in a slot
     }
 
-    // A memo is only valid within one planning episode — prices are a
-    // pure function of the (immutable, for the duration of this call)
-    // ledger, and they move as soon as an admission commits.
-    scratch.interner.clear();
-    scratch.memo.clear();
+    // Episode boundary: the single policy point (PlannerScratch docs).
+    // Cold = drop all cross-arrival structure (the historical per-arrival
+    // clears); incremental = GC dead signatures and sync the persistent
+    // snapshot cache against the ledger's change journal.
+    let cold = cfg.cold_solver;
+    scratch.begin_episode(cold, ledger, masks, cfg.theta.group_machines);
+    let job_sig =
+        if cold || !cfg.theta_cache { 0 } else { scratch.job_sigs.intern(job) };
     let stats_before = scratch.stats;
 
     const INF: f64 = f64::INFINITY;
@@ -230,8 +251,22 @@ pub fn plan_job_from(
 
     for ti in 0..window {
         let t = start + ti;
-        let snap = slot_snapshot(ledger, pricing, masks, t, cfg.theta.group_machines);
-        let sig = if cfg.theta_cache { scratch.interner.intern(&snap) } else { 0 };
+        // Cold: build a throwaway snapshot (the pre-PR 8 behavior).
+        // Incremental: refresh the persistent cache (version hit / delta /
+        // rebuild) and borrow the slot from it.
+        let cold_snap = if cold {
+            Some(slot_snapshot(ledger, pricing, masks, t, cfg.theta.group_machines))
+        } else {
+            scratch.refresh_slot(ledger, pricing, masks, t, cfg.theta.group_machines);
+            None
+        };
+        let (snap, sig) = match &cold_snap {
+            Some(s) => {
+                let sig = if cfg.theta_cache { scratch.interner.intern(s) } else { 0 };
+                (s, sig)
+            }
+            None => scratch.snapshots.get(t),
+        };
         // θ(t, dv) for dv = 1..=cap_units
         for dv in 1..=cap_units {
             let mut ctx = SolverCtx {
@@ -239,9 +274,11 @@ pub fn plan_job_from(
                 ws: &mut scratch.ws,
                 memo: if cfg.theta_cache { Some(&mut scratch.memo) } else { None },
                 sig,
+                job_sig,
+                warm_lp: !cold,
                 stats: &mut scratch.stats,
             };
-            let sol = solve_theta_ctx(job, &snap, dv as f64 * unit, &cfg.theta, &mut ctx);
+            let sol = solve_theta_ctx(job, snap, dv as f64 * unit, &cfg.theta, &mut ctx);
             if let Some(s) = &sol {
                 rounding_attempts += s.rounding_attempts;
             }

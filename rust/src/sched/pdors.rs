@@ -33,9 +33,15 @@ pub struct PdOrsConfig {
     pub attempts: usize,
     /// Accepted cover fraction (see [`ThetaConfig::cover_fraction`]).
     pub cover_fraction: f64,
-    /// Memoize θ-solutions within each arrival's planning episode
-    /// (`--no-theta-cache` disables it — the parity oracle).
+    /// Memoize θ-solutions (`--no-theta-cache` disables it — the memo
+    /// parity oracle).
     pub theta_cache: bool,
+    /// Disable every cross-arrival reuse — persistent snapshots, the
+    /// cross-episode θ-memo, the warm-started simplex — and rebuild each
+    /// planning episode from the ledger (`--cold-solver` /
+    /// `scheduler.cold_solver`: the byte-parity oracle; schedules,
+    /// metrics, and the RNG stream must not move).
+    pub cold_solver: bool,
     pub seed: u64,
 }
 
@@ -49,6 +55,7 @@ impl Default for PdOrsConfig {
             attempts: 50,
             cover_fraction: 1.0,
             theta_cache: true,
+            cold_solver: false,
             seed: 0,
         }
     }
@@ -74,6 +81,7 @@ impl From<&PdOrsConfig> for DpConfig {
         DpConfig {
             units: cfg.dp_units,
             theta_cache: cfg.theta_cache,
+            cold_solver: cfg.cold_solver,
             theta: ThetaConfig::from(cfg),
         }
     }
@@ -96,8 +104,9 @@ pub struct PdOrs {
     pricing: PricingParams,
     masks: Masks,
     rng: Rng,
-    /// Long-lived solver scratch: interner + θ-memo (cleared per arrival)
-    /// plus the LP/rounding buffers and cumulative [`SolverStats`].
+    /// Long-lived solver scratch: interners, θ-memo, persistent snapshot
+    /// cache (kept across arrivals unless `cold_solver`), the LP/rounding
+    /// buffers, and cumulative [`SolverStats`].
     scratch: PlannerScratch,
     /// Admission log (one entry per arrival, in order).
     pub log: Vec<Admission>,
@@ -512,6 +521,7 @@ mod tests {
             attempts: 123,
             cover_fraction: 0.9,
             theta_cache: false,
+            cold_solver: true,
             gdelta: GdeltaMode::Cover,
             ..Default::default()
         };
@@ -524,6 +534,7 @@ mod tests {
         let dp = DpConfig::from(&cfg);
         assert_eq!(dp.units, 64);
         assert!(!dp.theta_cache);
+        assert!(dp.cold_solver);
         assert_eq!(dp.theta.attempts, 123);
     }
 }

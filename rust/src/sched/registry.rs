@@ -79,6 +79,8 @@ impl SchedulerSpec {
     /// attempts = 50
     /// cover_fraction = 1.0
     /// theta_cache = true  # false = the --no-theta-cache parity oracle
+    /// cold_solver = false # true = the --cold-solver oracle: no
+    ///                     # cross-arrival reuse (snapshots/memo/warm LP)
     /// replan = every:4    # elastic re-planning cadence; default "none"
     /// ```
     pub fn from_config(cfg: &Config) -> SchedulerSpec {
@@ -97,6 +99,8 @@ impl SchedulerSpec {
             cfg.f64("scheduler.cover_fraction", spec.pdors.cover_fraction);
         spec.pdors.theta_cache =
             cfg.bool("scheduler.theta_cache", spec.pdors.theta_cache);
+        spec.pdors.cold_solver =
+            cfg.bool("scheduler.cold_solver", spec.pdors.cold_solver);
         if let Some(v) = cfg.get("scheduler.gdelta") {
             match v.to_ascii_lowercase().as_str() {
                 "packing" => spec.pdors.gdelta = GdeltaMode::Packing,
@@ -430,7 +434,8 @@ mod tests {
     fn spec_from_config_reads_scheduler_section() {
         let cfg = Config::parse(
             "[scheduler]\nname = OASIS\nseed = 9\ndp_units = 64\ndelta = 0.5\n\
-             gdelta = 0.8\nattempts = 123\ncover_fraction = 0.9\ntheta_cache = false\n",
+             gdelta = 0.8\nattempts = 123\ncover_fraction = 0.9\ntheta_cache = false\n\
+             cold_solver = true\n",
         )
         .unwrap();
         let spec = SchedulerSpec::from_config(&cfg);
@@ -444,6 +449,7 @@ mod tests {
         assert!(matches!(spec.pdors.gdelta, GdeltaMode::Fixed(g) if g == 0.8));
         assert_eq!(spec.pdors.cover_fraction, 0.9);
         assert!(!spec.pdors.theta_cache);
+        assert!(spec.pdors.cold_solver);
     }
 
     #[test]
@@ -468,6 +474,7 @@ mod tests {
         assert_eq!(spec.name, "pd-ors");
         assert_eq!(spec.pdors.dp_units, PdOrsConfig::default().dp_units);
         assert!(spec.pdors.theta_cache, "the memo is on by default");
+        assert!(!spec.pdors.cold_solver, "incremental reuse is on by default");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! pair, and on quiet stretches of the horizon consecutive slots carry
 //! bit-identical price/residual snapshots. [`ThetaMemo`] caches the
 //! **deterministic** sub-results per `(interned snapshot signature,
-//! v-bits, locality-case)`:
+//! interned job signature, v-bits, locality-case)`:
 //!
 //! * *internal case* — the closed-form group scan's winner (group index,
 //!   worker/PS counts, cost);
@@ -19,13 +19,45 @@
 //! is semantically invisible; the parity oracle and
 //! `tests/solver_parity.rs` enforce it).
 //!
-//! A memo is valid only *within one arrival's planning episode*: admitting
-//! a job moves the prices (Eq. (12)), so the planner clears the memo (and
-//! its signature interner) before each arrival. Within one episode the
-//! ledger — and therefore every per-slot price — is immutable, so a
-//! signature hit is an exact replay.
+//! # Why cross-arrival reuse preserves exactness
+//!
+//! Through PR 7 the memo lived one arrival: the planner cleared it (and
+//! the snapshot-signature interner) before every `plan_job_with`, because
+//! admitting a job moves the prices (Eq. (12)) and the key said nothing
+//! about *which* job was being planned. The incremental path (PR 8) keeps
+//! both alive across arrivals, and the argument that this is still an
+//! exact replay — not an approximation — has three legs:
+//!
+//! 1. **The key pins every input.** θ(t, v) is a deterministic function of
+//!    (a) the slot's price/residual/eligibility snapshot and (b) the job
+//!    fields the solver reads: demands, `batch`, `gamma`, `tau`,
+//!    `grad_size_mb`, `b_int`/`b_ext` (the inputs of `per_sample_time`).
+//!    The snapshot signature is interned structurally (bit-level equality
+//!    over prices, residuals and eligibility masks), and [`JobSigInterner`]
+//!    interns the job fields the same way. Equal key ⇒ bit-identical
+//!    subproblem ⇒ the cached sub-result is the bytes a fresh solve would
+//!    produce.
+//! 2. **Price deltas retire signatures, they never mutate them.** A commit
+//!    re-prices the touched (slot, machine) entries; the persistent
+//!    snapshot cache rebuilds those slots' snapshots in place and interns
+//!    them anew. A dirtied slot therefore gets a *different* signature
+//!    (or, if the bytes genuinely match an existing one, an equal
+//!    signature that is still exact by leg 1). Interner ids are monotone —
+//!    never reused after removal — so a stale entry can never be aliased
+//!    by a new snapshot.
+//! 3. **Invalidation is garbage collection, not correctness.** Entries
+//!    whose snapshot signature is no longer referenced by any cached slot
+//!    can never hit again (leg 2), so [`ThetaMemo::retain_live`] drops
+//!    them purely to bound memory; the `memo_invalidated` counter tracks
+//!    it. Keeping them longer would waste space, never corrupt a result.
+//!
+//! The `--cold-solver` oracle restores the per-episode clear and the
+//! byte-parity suite diffs full runs against it.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+
+use crate::cluster::NUM_RESOURCES;
+use crate::jobs::Job;
 
 /// Memoized winner of the internal (co-located) closed form.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,12 +72,71 @@ pub struct InternalSol {
     pub cost: f64,
 }
 
-/// Memo key: (interned snapshot signature, `v.to_bits()`); the job is
-/// fixed within a planning episode, so it is not part of the key.
-pub type MemoKey = (u32, u64);
+/// Memo key: (interned snapshot signature, interned job signature,
+/// `v.to_bits()`). The job signature pins the arrival being planned, which
+/// is what makes entries safe to keep across arrivals (see module docs).
+pub type MemoKey = (u32, u32, u64);
 
-/// Per-arrival θ-memo (see module docs). Cleared, not dropped, between
-/// arrivals so its hash-map capacity is recycled.
+/// Interns the θ-relevant job fields into a dense `u32` id, bit-level:
+/// two jobs get the same signature iff every field the θ-solver reads is
+/// byte-identical. Ids are monotone and survive `clear()` so a signature
+/// handed out before a flush can never alias a different job after it.
+#[derive(Debug, Default)]
+pub struct JobSigInterner {
+    ids: HashMap<[u64; 2 * NUM_RESOURCES + 6], u32>,
+    next_id: u32,
+}
+
+impl JobSigInterner {
+    pub fn new() -> JobSigInterner {
+        JobSigInterner::default()
+    }
+
+    /// Signature of the fields θ reads (demands, `batch`, `gamma`, `tau`,
+    /// `grad_size_mb`, `b_int`, `b_ext`). Deliberately excludes `id`,
+    /// `arrival`, `epochs`, `samples` and the utility — θ(t, v) never
+    /// reads them, so distinct arrivals of an identical job template can
+    /// share memo entries.
+    pub fn intern(&mut self, job: &Job) -> u32 {
+        let mut key = [0u64; 2 * NUM_RESOURCES + 6];
+        for r in 0..NUM_RESOURCES {
+            key[r] = job.worker_demand.0[r].to_bits();
+            key[NUM_RESOURCES + r] = job.ps_demand.0[r].to_bits();
+        }
+        let tail = 2 * NUM_RESOURCES;
+        key[tail] = job.batch;
+        key[tail + 1] = job.gamma.to_bits();
+        key[tail + 2] = job.tau.to_bits();
+        key[tail + 3] = job.grad_size_mb.to_bits();
+        key[tail + 4] = job.b_int.to_bits();
+        key[tail + 5] = job.b_ext.to_bits();
+        match self.ids.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let id = self.next_id;
+                self.next_id += 1;
+                *e.insert(id)
+            }
+        }
+    }
+
+    /// Forget the mapping but keep the id counter monotone.
+    pub fn clear(&mut self) {
+        self.ids.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// θ-memo (see module docs). Under `--cold-solver` it is cleared per
+/// arrival; on the incremental path it persists and is garbage-collected
+/// by snapshot signature.
 #[derive(Debug, Default)]
 pub struct ThetaMemo {
     /// `None` = the internal case is infeasible at this (signature, v).
@@ -60,10 +151,24 @@ impl ThetaMemo {
         ThetaMemo::default()
     }
 
-    /// Forget everything (start of a new planning episode).
+    /// Forget everything (cold-oracle episode start, or soft-cap flush).
     pub fn clear(&mut self) {
         self.internal.clear();
         self.external.clear();
+    }
+
+    /// Drop every entry whose snapshot signature is in `dead` (signatures
+    /// no longer referenced by any cached slot — pure GC, see module
+    /// docs). Returns the number of entries dropped, which feeds
+    /// `SolverStats::memo_invalidated`.
+    pub fn retain_live(&mut self, dead: &HashSet<u32>) -> u64 {
+        if dead.is_empty() {
+            return 0;
+        }
+        let before = self.len();
+        self.internal.retain(|k, _| !dead.contains(&k.0));
+        self.external.retain(|k, _| !dead.contains(&k.0));
+        (before - self.len()) as u64
     }
 
     /// Number of memoized entries across both cases.
@@ -79,15 +184,67 @@ impl ThetaMemo {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
+    use crate::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
 
     #[test]
     fn clear_empties_both_cases() {
         let mut m = ThetaMemo::new();
-        m.internal.insert((0, 1), None);
-        m.external.insert((0, 1), Some(vec![1.0, 0.5]));
+        m.internal.insert((0, 0, 1), None);
+        m.external.insert((0, 0, 1), Some(vec![1.0, 0.5]));
         assert_eq!(m.len(), 2);
         assert!(!m.is_empty());
         m.clear();
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn retain_live_drops_only_dead_signatures() {
+        let mut m = ThetaMemo::new();
+        m.internal.insert((1, 0, 10), None);
+        m.internal.insert((2, 0, 10), None);
+        m.external.insert((1, 0, 10), None);
+        m.external.insert((3, 1, 10), Some(vec![0.5]));
+        let mut dead = HashSet::new();
+        assert_eq!(m.retain_live(&dead), 0, "empty dead set is a no-op");
+        dead.insert(1);
+        dead.insert(9); // never interned — harmless
+        assert_eq!(m.retain_live(&dead), 2);
+        assert_eq!(m.len(), 2);
+        assert!(m.internal.contains_key(&(2, 0, 10)));
+        assert!(m.external.contains_key(&(3, 1, 10)));
+    }
+
+    #[test]
+    fn job_signatures_are_bitwise_and_monotone() {
+        let mut rng = Rng::new(7);
+        let jobs = synthetic_jobs(&SynthConfig::paper(4, 8, MIX_DEFAULT), &mut rng);
+        let mut sigs = JobSigInterner::new();
+        let a = sigs.intern(&jobs[0]);
+        let b = sigs.intern(&jobs[1]);
+        assert_eq!(sigs.intern(&jobs[0]), a, "re-intern is stable");
+
+        // A clone with a different id/arrival shares the signature: θ
+        // never reads those fields.
+        let mut twin = jobs[0].clone();
+        twin.id = 999;
+        twin.arrival += 3;
+        assert_eq!(sigs.intern(&twin), a);
+
+        // Any θ-relevant field flips the signature — even by one bit.
+        let mut tweaked = jobs[0].clone();
+        tweaked.tau = -tweaked.tau; // sign-bit flip
+        tweaked.tau = -tweaked.tau;
+        assert_eq!(sigs.intern(&tweaked), a, "round-trip negation is identity");
+        tweaked.gamma += 1e-9;
+        let c = sigs.intern(&tweaked);
+        assert_ne!(c, a);
+
+        // Ids stay monotone across clear(): no aliasing after a flush.
+        let max_before = a.max(b).max(c);
+        sigs.clear();
+        assert!(sigs.is_empty());
+        let d = sigs.intern(&jobs[0]);
+        assert!(d > max_before, "cleared interner must not reuse ids");
     }
 }

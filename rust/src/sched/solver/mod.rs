@@ -10,23 +10,32 @@
 //!   [`SlotSnapshot`](crate::cluster::SlotSnapshot)s with machine groups
 //!   deduplicated at the source, plus the exact
 //!   [`SignatureInterner`](crate::cluster::SignatureInterner);
-//! * [`memo`] — per-arrival memoization of the *deterministic*
-//!   sub-results keyed by `(interned signature, v)`; the randomized
-//!   rounding always replays, keeping fixed-seed schedules byte-identical
-//!   with the `--no-theta-cache` parity oracle;
+//! * [`snapcache`] — persistent snapshots across arrivals: the ledger's
+//!   change journal drives per-machine delta updates instead of full
+//!   rebuilds (PR 8; the `--cold-solver` oracle disables it);
+//! * [`memo`] — memoization of the *deterministic* sub-results keyed by
+//!   `(snapshot signature, job signature, v)`, kept across arrivals on
+//!   the incremental path and garbage-collected by dead signature; the
+//!   randomized rounding always replays, keeping fixed-seed schedules
+//!   byte-identical with the `--no-theta-cache`/`--cold-solver` parity
+//!   oracles;
 //! * [`workspace`] — reusable LP/rounding buffers
 //!   ([`SolverWorkspace`], [`PlannerScratch`]) over
-//!   [`crate::lp::LpWorkspace`];
-//! * [`theta`] — Algorithm 4 itself, internal + external cases;
+//!   [`crate::lp::LpWorkspace`], plus the episode-boundary policy
+//!   ([`PlannerScratch::begin_episode`]);
+//! * [`theta`] — Algorithm 4 itself, internal + external cases (the
+//!   external LP goes through `LpWorkspace::solve_warm` unless cold);
 //! * [`stats`] — [`SolverStats`] counters surfaced through
 //!   [`SimResult`](crate::sim::SimResult) and the sweep JSONL rows.
 
 pub mod memo;
+pub mod snapcache;
 pub mod stats;
 pub mod theta;
 pub mod workspace;
 
-pub use memo::{InternalSol, ThetaMemo};
+pub use memo::{InternalSol, JobSigInterner, ThetaMemo};
+pub use snapcache::SnapshotCache;
 pub use stats::SolverStats;
 pub use theta::{
     solve_theta, solve_theta_ctx, GdeltaMode, SolverCtx, ThetaConfig, ThetaSolution,

@@ -1,0 +1,380 @@
+//! Persistent per-slot snapshot cache — the incremental front of the
+//! solver pipeline (PR 8 tentpole, layer 1).
+//!
+//! Through PR 7 every arrival rebuilt all `horizon` [`SlotSnapshot`]s
+//! from the ledger, even though one admission re-prices only the
+//! (slot, machine) cells its committed schedule touched. The ledger now
+//! journals exactly those cells (`AllocLedger::changes_since` +
+//! per-slot versions), and [`SnapshotCache`] keeps the snapshots alive in
+//! [`PlannerScratch`](super::PlannerScratch) across episodes:
+//!
+//! * **version hit** — the slot's ledger version is unchanged since the
+//!   cached build: the snapshot is reused as-is, zero work;
+//! * **delta** — only some machines of the slot were touched: each dirty
+//!   machine's `(price, residual, eligibility)` entry is recomputed from
+//!   the ledger ([`SlotSnapshot::set_machine`]) and the slot re-grouped
+//!   through the same [`SlotSnapshot::regroup`] the from-scratch builder
+//!   uses, so the result is structurally indistinguishable from a rebuild
+//!   (`tests/snapshot_incremental.rs` is the property test; the
+//!   `snapshot_delta_updates` counter tracks the per-machine updates);
+//! * **rebuild** — the change journal was truncated, the ledger was
+//!   swapped (instance ids differ), or the masks/grouping config changed:
+//!   fall back to [`slot_snapshot`].
+//!
+//! The cache also refcounts interned snapshot signatures per slot. When a
+//! refresh retires a slot's last reference to a signature, the signature
+//! is queued as *dead*; [`PlannerScratch::begin_episode`] drains the queue
+//! to garbage-collect θ-memo entries and interner ids (exactness argument
+//! in `super::memo`'s module docs).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cluster::{AllocLedger, SignatureInterner, SlotSnapshot};
+
+use super::super::dp::{slot_snapshot, Masks};
+use super::super::pricing::PricingParams;
+use super::stats::SolverStats;
+
+/// One cached slot: the snapshot, the ledger slot-version it reflects,
+/// and its interned signature.
+#[derive(Debug)]
+struct CachedSlot {
+    version: u64,
+    sig: u32,
+    snap: SlotSnapshot,
+}
+
+/// Persistent snapshot cache (see module docs). One per
+/// [`PlannerScratch`](super::PlannerScratch); assumes the scratch is
+/// driven with one `(ledger, pricing, masks, group_machines)` lineage —
+/// ledger swaps and mask/grouping changes are detected and degrade to
+/// full rebuilds, while a pricing-parameter swap mid-lineage is the one
+/// thing the cache cannot see (engine runs construct `PricingParams`
+/// once, so this never happens in practice; a fresh scratch is the
+/// escape hatch).
+#[derive(Debug, Default)]
+pub struct SnapshotCache {
+    /// `AllocLedger::id` the cache is bound to; 0 = unbound.
+    ledger_id: u64,
+    /// Change-journal sequence consumed so far.
+    synced_seq: u64,
+    /// Mask/grouping fingerprint the cached snapshots were built under.
+    masks_fp: Vec<u64>,
+    slots: Vec<Option<CachedSlot>>,
+    /// Per-slot dirty-machine hints drained from the ledger journal
+    /// (possibly with duplicates; deduplicated at refresh).
+    hints: Vec<Vec<u32>>,
+    /// Live references per interned signature across cached slots.
+    sig_refs: HashMap<u32, u32>,
+    /// Signatures whose last cached reference was retired — pending GC.
+    dead: HashSet<u32>,
+    /// Dedup scratch for the delta path (machine-indexed epoch marks).
+    seen: Vec<u64>,
+    seen_epoch: u64,
+}
+
+fn masks_fingerprint(masks: &Masks, group_machines: bool) -> Vec<u64> {
+    let n = masks.allow_worker.len();
+    let mut fp = Vec::with_capacity(2 * n + 1);
+    fp.push(group_machines as u64);
+    fp.extend(masks.allow_worker.iter().map(|&b| b as u64));
+    fp.extend(masks.allow_ps.iter().map(|&b| b as u64));
+    fp
+}
+
+impl SnapshotCache {
+    pub fn new() -> SnapshotCache {
+        SnapshotCache::default()
+    }
+
+    /// Drop everything, including the pending-GC queue (the cold oracle's
+    /// reset — the surrounding clear of interner and memo makes the dead
+    /// set moot).
+    pub fn reset(&mut self) {
+        self.ledger_id = 0;
+        self.synced_seq = 0;
+        self.masks_fp.clear();
+        self.slots.clear();
+        self.hints.clear();
+        self.sig_refs.clear();
+        self.dead.clear();
+    }
+
+    /// Retire every cached slot (their signatures go to the dead queue)
+    /// but stay bound to the ledger. Used when the journal was truncated
+    /// or the masks changed: versions are authoritative, the hints are
+    /// not, so everything must rebuild.
+    fn invalidate_all(&mut self) {
+        for t in 0..self.slots.len() {
+            if let Some(slot) = self.slots[t].take() {
+                self.release_sig(slot.sig);
+            }
+            self.hints[t].clear();
+        }
+    }
+
+    fn retain_sig(&mut self, sig: u32) {
+        *self.sig_refs.entry(sig).or_insert(0) += 1;
+        // A signature can come back from the dead within one episode
+        // (slot A retires it, slot B re-derives the same structure — the
+        // interner still holds it, so the id is identical).
+        self.dead.remove(&sig);
+    }
+
+    fn release_sig(&mut self, sig: u32) {
+        if let Some(refs) = self.sig_refs.get_mut(&sig) {
+            *refs -= 1;
+            if *refs == 0 {
+                self.sig_refs.remove(&sig);
+                self.dead.insert(sig);
+            }
+        }
+    }
+
+    /// Signatures no longer referenced by any cached slot, for memo GC.
+    /// Draining resets the queue.
+    pub fn take_dead_sigs(&mut self) -> HashSet<u32> {
+        std::mem::take(&mut self.dead)
+    }
+
+    /// Episode-start bookkeeping: bind to `ledger` (resetting if it is a
+    /// different instance or shape than last time) and drain its change
+    /// journal into per-slot dirty hints. Called once per planning episode
+    /// by [`PlannerScratch::begin_episode`](super::PlannerScratch).
+    pub fn sync(&mut self, ledger: &AllocLedger, masks: &Masks, group_machines: bool) {
+        let horizon = ledger.horizon();
+        let fp = masks_fingerprint(masks, group_machines);
+        if self.ledger_id != ledger.id() || self.slots.len() != horizon {
+            self.reset();
+            self.ledger_id = ledger.id();
+            self.slots.resize_with(horizon, || None);
+            self.hints.resize_with(horizon, Vec::new);
+            self.seen = vec![0; ledger.num_machines()];
+            self.seen_epoch = 0;
+            self.masks_fp = fp;
+            self.synced_seq = ledger.change_seq();
+            return;
+        }
+        if self.masks_fp != fp {
+            self.invalidate_all();
+            self.masks_fp = fp;
+            self.synced_seq = ledger.change_seq();
+            return;
+        }
+        match ledger.changes_since(self.synced_seq) {
+            Some(changes) => {
+                for (t, h) in changes {
+                    self.hints[t].push(h as u32);
+                }
+            }
+            None => self.invalidate_all(), // journal truncated under us
+        }
+        self.synced_seq = ledger.change_seq();
+    }
+
+    /// Bring slot `t` up to date with the ledger (version hit / delta /
+    /// rebuild — see module docs) and intern its signature. Must follow a
+    /// [`sync`](Self::sync) against the same ledger this episode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refresh(
+        &mut self,
+        ledger: &AllocLedger,
+        pricing: &PricingParams,
+        masks: &Masks,
+        t: usize,
+        group_machines: bool,
+        interner: &mut SignatureInterner,
+        stats: &mut SolverStats,
+    ) {
+        debug_assert_eq!(self.ledger_id, ledger.id(), "refresh without sync");
+        let version = ledger.slot_version(t);
+        if let Some(slot) = &mut self.slots[t] {
+            if slot.version == version {
+                self.hints[t].clear();
+                return;
+            }
+            // Delta path: recompute only the journaled machines, then
+            // re-group through the shared routine.
+            let _span = crate::obs::span(crate::obs::Stage::SnapshotBuild);
+            self.seen_epoch += 1;
+            let mut dirty = 0u64;
+            let mut hints = std::mem::take(&mut self.hints[t]);
+            for &h in &hints {
+                let h = h as usize;
+                if self.seen[h] == self.seen_epoch {
+                    continue;
+                }
+                self.seen[h] = self.seen_epoch;
+                dirty += 1;
+                let used = ledger.used(t, h);
+                let cap = ledger.capacity(h);
+                let mut price = [0.0; crate::cluster::NUM_RESOURCES];
+                for r in 0..crate::cluster::NUM_RESOURCES {
+                    price[r] = pricing.price(r, used.0[r], cap.0[r]);
+                }
+                let up = ledger.available(t, h);
+                slot.snap.set_machine(
+                    h,
+                    price,
+                    ledger.residual(t, h),
+                    masks.allow_worker[h] && up,
+                    masks.allow_ps[h] && up,
+                );
+            }
+            hints.clear();
+            self.hints[t] = hints;
+            slot.snap.regroup(group_machines);
+            slot.version = version;
+            stats.snapshot_delta_updates += dirty;
+            let new_sig = interner.intern(&slot.snap);
+            let old_sig = std::mem::replace(&mut slot.sig, new_sig);
+            if old_sig != new_sig {
+                self.retain_sig(new_sig);
+                self.release_sig(old_sig);
+            }
+            return;
+        }
+        // Rebuild path (cold slot).
+        let snap = slot_snapshot(ledger, pricing, masks, t, group_machines);
+        let sig = interner.intern(&snap);
+        self.retain_sig(sig);
+        self.hints[t].clear();
+        self.slots[t] = Some(CachedSlot { version, sig, snap });
+    }
+
+    /// The cached snapshot and interned signature of slot `t` (panics if
+    /// the slot was never [`refresh`](Self::refresh)ed).
+    pub fn get(&self, t: usize) -> (&SlotSnapshot, u32) {
+        let slot = self.slots[t].as_ref().expect("slot not refreshed");
+        (&slot.snap, slot.sig)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::jobs::test_support::test_job;
+    use crate::sched::dp::{plan_job, DpConfig};
+    use crate::util::Rng;
+    use crate::workload::synthetic::paper_machine_capacity;
+
+    fn setup(n: usize, horizon: usize) -> (AllocLedger, PricingParams) {
+        let cluster = Cluster::homogeneous(n, paper_machine_capacity());
+        let ledger = AllocLedger::new(&cluster, horizon);
+        let jobs = vec![test_job(0)];
+        let pricing = PricingParams::from_jobs(&jobs, &cluster, horizon);
+        (ledger, pricing)
+    }
+
+    fn refresh_all(
+        cache: &mut SnapshotCache,
+        ledger: &AllocLedger,
+        pricing: &PricingParams,
+        masks: &Masks,
+        interner: &mut SignatureInterner,
+        stats: &mut SolverStats,
+    ) {
+        cache.sync(ledger, masks, true);
+        for t in 0..ledger.horizon() {
+            cache.refresh(ledger, pricing, masks, t, true, interner, stats);
+        }
+    }
+
+    /// Version hit, delta, and rebuild must all land on the same bytes as
+    /// `slot_snapshot` (the from-scratch oracle).
+    #[test]
+    fn cache_matches_from_scratch_across_a_commit() {
+        let (mut ledger, pricing) = setup(6, 8);
+        let masks = Masks::all(6);
+        let mut cache = SnapshotCache::new();
+        let mut interner = SignatureInterner::new();
+        let mut stats = SolverStats::default();
+
+        refresh_all(&mut cache, &ledger, &pricing, &masks, &mut interner, &mut stats);
+        assert_eq!(stats.snapshot_delta_updates, 0, "first pass is all rebuilds");
+
+        // Commit a plan, dirtying a few (slot, machine) cells.
+        let job = test_job(0);
+        let mut rng = Rng::new(1);
+        let plan = plan_job(&job, &ledger, &pricing, &masks, &DpConfig::default(), &mut rng)
+            .expect("feasible");
+        ledger.commit(&job, &plan.schedule);
+
+        refresh_all(&mut cache, &ledger, &pricing, &masks, &mut interner, &mut stats);
+        assert!(stats.snapshot_delta_updates > 0, "commit must take the delta path");
+        for t in 0..ledger.horizon() {
+            let oracle = slot_snapshot(&ledger, &pricing, &masks, t, true);
+            let (cached, sig) = cache.get(t);
+            assert_eq!(cached, &oracle, "slot {} diverged", t);
+            assert_eq!(sig, interner.intern(&oracle), "sig must be the oracle's");
+        }
+    }
+
+    /// Retiring a slot's last signature reference queues it for GC;
+    /// re-deriving the same structure resurrects it.
+    #[test]
+    fn dead_signature_bookkeeping() {
+        let (mut ledger, pricing) = setup(4, 4);
+        let masks = Masks::all(4);
+        let mut cache = SnapshotCache::new();
+        let mut interner = SignatureInterner::new();
+        let mut stats = SolverStats::default();
+
+        refresh_all(&mut cache, &ledger, &pricing, &masks, &mut interner, &mut stats);
+        // Homogeneous empty ledger: every slot shares one signature.
+        let (_, sig0) = cache.get(0);
+        assert!(cache.take_dead_sigs().is_empty());
+
+        // Commit on every slot, then release again: slots first leave
+        // sig0 (on commit)…
+        let job = test_job(0);
+        let mut rng = Rng::new(2);
+        let plan = plan_job(&job, &ledger, &pricing, &masks, &DpConfig::default(), &mut rng)
+            .expect("feasible");
+        ledger.commit(&job, &plan.schedule);
+        refresh_all(&mut cache, &ledger, &pricing, &masks, &mut interner, &mut stats);
+        let committed_dead = cache.take_dead_sigs();
+        // …and return to it on release (sig0 was freed only if *every*
+        // slot was touched by the commit).
+        ledger.release(&job, &plan.schedule);
+        refresh_all(&mut cache, &ledger, &pricing, &masks, &mut interner, &mut stats);
+        let (_, sig_back) = cache.get(0);
+        assert_eq!(sig_back, sig0, "released ledger re-derives the old structure");
+        let released_dead = cache.take_dead_sigs();
+        assert!(!committed_dead.contains(&sig0) || !released_dead.is_empty());
+        assert!(
+            !released_dead.contains(&sig0),
+            "sig0 is live again; only the commit-era signatures may die"
+        );
+    }
+
+    /// A different ledger instance (same shape) or changed masks must not
+    /// serve stale snapshots.
+    #[test]
+    fn ledger_swap_and_mask_change_invalidate() {
+        let (ledger_a, pricing) = setup(4, 5);
+        let masks = Masks::all(4);
+        let mut cache = SnapshotCache::new();
+        let mut interner = SignatureInterner::new();
+        let mut stats = SolverStats::default();
+        refresh_all(&mut cache, &ledger_a, &pricing, &masks, &mut interner, &mut stats);
+
+        // Clone = new instance id; must rebuild rather than trust versions.
+        let ledger_b = ledger_a.clone();
+        refresh_all(&mut cache, &ledger_b, &pricing, &masks, &mut interner, &mut stats);
+        for t in 0..ledger_b.horizon() {
+            let oracle = slot_snapshot(&ledger_b, &pricing, &masks, t, true);
+            assert_eq!(cache.get(t).0, &oracle);
+        }
+
+        // Mask change under the same ledger.
+        let separated = Masks::separated(4);
+        cache.sync(&ledger_b, &separated, true);
+        for t in 0..ledger_b.horizon() {
+            cache.refresh(&ledger_b, &pricing, &separated, t, true, &mut interner, &mut stats);
+            let oracle = slot_snapshot(&ledger_b, &pricing, &separated, t, true);
+            assert_eq!(cache.get(t).0, &oracle);
+        }
+    }
+}

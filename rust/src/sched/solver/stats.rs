@@ -7,21 +7,39 @@
 /// [`since`](SolverStats::since).
 ///
 /// Diagnostic by design: two runs that produce byte-identical schedules
-/// (e.g. cached vs `--no-theta-cache`) legitimately differ here, so these
-/// counters are excluded from every determinism/parity comparison (like
-/// wall time).
+/// (e.g. cached vs `--no-theta-cache`, or incremental vs `--cold-solver`)
+/// legitimately differ here, so these counters are excluded from every
+/// determinism/parity comparison (like wall time).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct SolverStats {
     /// θ(t, v) solves with positive workload (Algorithm 4 invocations).
     pub theta_solves: u64,
     /// Memo hits across the internal and external sub-solvers.
     pub memo_hits: u64,
-    /// LP relaxations actually solved (misses of the external memo).
+    /// LP relaxations actually solved (misses of the external memo that
+    /// also missed the warm-start result cache).
     pub lp_solves: u64,
     /// Simplex pivots spent in those solves.
     pub lp_pivots: u64,
     /// Randomized-rounding attempts consumed (Eqs. (27)–(28)).
     pub rounding_attempts: u64,
+    /// `LpWorkspace::solve_warm` hits: the LP was byte-identical to the
+    /// previous solve, so its stored optimum was replayed pivot-free.
+    pub warm_hits: u64,
+    /// `solve_warm` calls that fell back to a cold solve (problem bytes
+    /// changed since the previous solve).
+    pub warm_fallbacks: u64,
+    /// Pivots the warm hits did *not* have to spend (each hit credits the
+    /// pivot count of the cached solve it replayed).
+    pub warm_pivots_saved: u64,
+    /// θ-memo entries garbage-collected because their snapshot signature
+    /// stopped being referenced by any cached slot (plus full flushes:
+    /// cap overflow counts every dropped entry).
+    pub memo_invalidated: u64,
+    /// Per-machine snapshot entries refreshed through the persistent
+    /// snapshot cache's delta path (one count per dirty machine per slot
+    /// re-grouped in place, instead of a full snapshot rebuild).
+    pub snapshot_delta_updates: u64,
 }
 
 impl SolverStats {
@@ -32,6 +50,11 @@ impl SolverStats {
         self.lp_solves += other.lp_solves;
         self.lp_pivots += other.lp_pivots;
         self.rounding_attempts += other.rounding_attempts;
+        self.warm_hits += other.warm_hits;
+        self.warm_fallbacks += other.warm_fallbacks;
+        self.warm_pivots_saved += other.warm_pivots_saved;
+        self.memo_invalidated += other.memo_invalidated;
+        self.snapshot_delta_updates += other.snapshot_delta_updates;
     }
 
     /// The delta accumulated since `earlier` (counters are monotone).
@@ -42,6 +65,12 @@ impl SolverStats {
             lp_solves: self.lp_solves - earlier.lp_solves,
             lp_pivots: self.lp_pivots - earlier.lp_pivots,
             rounding_attempts: self.rounding_attempts - earlier.rounding_attempts,
+            warm_hits: self.warm_hits - earlier.warm_hits,
+            warm_fallbacks: self.warm_fallbacks - earlier.warm_fallbacks,
+            warm_pivots_saved: self.warm_pivots_saved - earlier.warm_pivots_saved,
+            memo_invalidated: self.memo_invalidated - earlier.memo_invalidated,
+            snapshot_delta_updates: self.snapshot_delta_updates
+                - earlier.snapshot_delta_updates,
         }
     }
 }
@@ -58,6 +87,11 @@ mod tests {
             lp_solves: 6,
             lp_pivots: 120,
             rounding_attempts: 30,
+            warm_hits: 3,
+            warm_fallbacks: 2,
+            warm_pivots_saved: 40,
+            memo_invalidated: 7,
+            snapshot_delta_updates: 9,
         };
         let before = a;
         let b = SolverStats {
@@ -66,11 +100,21 @@ mod tests {
             lp_solves: 2,
             lp_pivots: 15,
             rounding_attempts: 5,
+            warm_hits: 1,
+            warm_fallbacks: 1,
+            warm_pivots_saved: 8,
+            memo_invalidated: 2,
+            snapshot_delta_updates: 4,
         };
         a.merge(&b);
         assert_eq!(a.theta_solves, 13);
         assert_eq!(a.lp_pivots, 135);
+        assert_eq!(a.warm_hits, 4);
+        assert_eq!(a.warm_pivots_saved, 48);
+        assert_eq!(a.memo_invalidated, 9);
+        assert_eq!(a.snapshot_delta_updates, 13);
         assert_eq!(a.since(&before), b);
         assert_eq!(SolverStats::default().theta_solves, 0);
+        assert_eq!(SolverStats::default().warm_hits, 0);
     }
 }

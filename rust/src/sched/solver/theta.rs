@@ -108,6 +108,13 @@ pub struct SolverCtx<'a> {
     pub memo: Option<&'a mut ThetaMemo>,
     /// Interned snapshot signature (meaningless when `memo` is `None`).
     pub sig: u32,
+    /// Interned job signature — pins the arrival in cross-episode memo
+    /// keys (0 whenever the memo is per-episode or absent).
+    pub job_sig: u32,
+    /// Route external LPs through `LpWorkspace::solve_warm` (disabled by
+    /// the `--cold-solver` oracle; a warm hit is an exact replay, so this
+    /// is a perf knob, not a semantic one).
+    pub warm_lp: bool,
     pub stats: &'a mut SolverStats,
 }
 
@@ -144,7 +151,7 @@ fn solve_internal(
     }
     let s = ((w as f64 / job.gamma).ceil() as u64).max(1);
 
-    let key = (ctx.sig, v.to_bits());
+    let key = (ctx.sig, ctx.job_sig, v.to_bits());
     if let Some(memo) = ctx.memo.as_deref_mut() {
         let probe = {
             let _span = obs::span(Stage::MemoLookup);
@@ -283,7 +290,7 @@ fn solve_external(
 
     // Resolve the fractional solution: memo hit or a fresh LP solve. Only
     // this deterministic stage is cached — the rounding below always runs.
-    let key = (ctx.sig, v.to_bits());
+    let key = (ctx.sig, ctx.job_sig, v.to_bits());
     let mut resolved = false;
     if let Some(memo) = ctx.memo.as_deref_mut() {
         let probe = {
@@ -303,10 +310,24 @@ fn solve_external(
     }
     if !resolved {
         build_group_lp(job, snap, w1, ctx.ws);
-        ctx.stats.lp_solves += 1;
-        let pivots_before = ctx.ws.lp.total_pivots();
-        let status = ctx.ws.lp.solve(&ctx.ws.problem);
-        ctx.stats.lp_pivots += ctx.ws.lp.total_pivots() - pivots_before;
+        let status = if ctx.warm_lp {
+            let (status, hit) = ctx.ws.lp.solve_warm(&ctx.ws.problem);
+            if hit {
+                ctx.stats.warm_hits += 1;
+                ctx.stats.warm_pivots_saved += ctx.ws.lp.warm_saved_pivots();
+            } else {
+                ctx.stats.warm_fallbacks += 1;
+                ctx.stats.lp_solves += 1;
+                ctx.stats.lp_pivots += ctx.ws.lp.warm_saved_pivots();
+            }
+            status
+        } else {
+            ctx.stats.lp_solves += 1;
+            let pivots_before = ctx.ws.lp.total_pivots();
+            let status = ctx.ws.lp.solve(&ctx.ws.problem);
+            ctx.stats.lp_pivots += ctx.ws.lp.total_pivots() - pivots_before;
+            status
+        };
         let solved: Option<Vec<f64>> = match status {
             LpStatus::Optimal => Some(ctx.ws.lp.x().to_vec()),
             _ => None,
@@ -481,7 +502,15 @@ pub fn solve_theta(
 ) -> Option<ThetaSolution> {
     let mut ws = SolverWorkspace::new();
     let mut stats = SolverStats::default();
-    let mut ctx = SolverCtx { rng, ws: &mut ws, memo: None, sig: 0, stats: &mut stats };
+    let mut ctx = SolverCtx {
+        rng,
+        ws: &mut ws,
+        memo: None,
+        sig: 0,
+        job_sig: 0,
+        warm_lp: false,
+        stats: &mut stats,
+    };
     solve_theta_ctx(job, snap, v, cfg, &mut ctx)
 }
 
@@ -689,6 +718,8 @@ mod tests {
                         ws: &mut ws,
                         memo: if use_memo { Some(&mut memo) } else { None },
                         sig,
+                        job_sig: 0,
+                        warm_lp: false,
                         stats: &mut stats,
                     };
                     out.push(solve_theta_ctx(&job, snap, v, &cfg, &mut ctx));

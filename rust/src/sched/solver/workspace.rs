@@ -1,11 +1,22 @@
 //! Reusable solver scratch — the allocation-free substrate of the θ hot
-//! path (snapshot → memo → **LP workspace** → rounding).
+//! path (snapshot → memo → **LP workspace** → rounding) — and the
+//! episode-boundary policy ([`PlannerScratch::begin_episode`]).
 
-use crate::cluster::SignatureInterner;
+use crate::cluster::{AllocLedger, SignatureInterner};
 use crate::lp::{LpProblem, LpWorkspace};
 
-use super::memo::ThetaMemo;
+use super::super::dp::Masks;
+use super::super::pricing::PricingParams;
+use super::memo::{JobSigInterner, ThetaMemo};
+use super::snapcache::SnapshotCache;
 use super::stats::SolverStats;
+
+/// Soft cap on live θ-memo entries on the incremental path. Crossing it
+/// at an episode boundary triggers a counted full flush — cross-arrival
+/// reuse trades memory for latency, and an unbounded service run must
+/// not grow without bound. Generous: an entry is tens of bytes, so the
+/// cap is a few tens of MB worst-case.
+const MEMO_SOFT_CAP: usize = 262_144;
 
 /// Scratch buffers one θ-solve draws on. Everything here is recycled
 /// across solves: the LP tableau ([`LpWorkspace`]), the problem rows
@@ -47,15 +58,27 @@ impl Default for SolverWorkspace {
 }
 
 /// Everything a planner (one `plan_job` caller) owns across arrivals:
-/// the signature interner, the per-arrival θ-memo, the LP/rounding
-/// scratch, and the cumulative solver counters. `PdOrs` keeps one of
-/// these for its whole lifetime; `plan_job_with` clears the
-/// interner/memo (never the buffers or counters) at the start of each
-/// planning episode.
+/// the signature interners, the θ-memo, the persistent snapshot cache,
+/// the LP/rounding scratch, and the cumulative solver counters. `PdOrs`
+/// keeps one of these for its whole lifetime; `plan_job_with` opens each
+/// planning episode through [`begin_episode`](Self::begin_episode) —
+/// the **single** place that decides between the cold oracle (clear
+/// everything) and the incremental path (GC + delta sync). Buffers and
+/// counters are never cleared.
+///
+/// Invariant: one scratch serves one `(ledger lineage, pricing, masks,
+/// group_machines)` stream. Ledger swaps and mask changes are detected
+/// by the snapshot cache and degrade to rebuilds; a mid-stream
+/// `PricingParams` change requires a fresh scratch (never happens inside
+/// an engine run — pricing is fixed at construction).
 #[derive(Debug, Default)]
 pub struct PlannerScratch {
     pub interner: SignatureInterner,
     pub memo: ThetaMemo,
+    /// Job-field interner for the memo's cross-arrival key component.
+    pub job_sigs: JobSigInterner,
+    /// Persistent per-slot snapshots (incremental path only).
+    pub snapshots: SnapshotCache,
     pub ws: SolverWorkspace,
     /// Cumulative counters across every plan on this scratch.
     pub stats: SolverStats,
@@ -64,5 +87,66 @@ pub struct PlannerScratch {
 impl PlannerScratch {
     pub fn new() -> PlannerScratch {
         PlannerScratch::default()
+    }
+
+    /// Open a planning episode. This is the only episode-boundary entry
+    /// point — the historical scattered `interner.clear()` / `memo.clear()`
+    /// calls live here now, behind the policy switch:
+    ///
+    /// * `cold = true` (`--cold-solver`, and any pre-PR 8 caller
+    ///   semantics): drop every cross-arrival structure. Interner ids
+    ///   restart from 0, the memo and snapshot cache empty — byte-for-byte
+    ///   the old per-arrival behavior.
+    /// * `cold = false`: keep everything; garbage-collect memo entries
+    ///   whose snapshot signature died (counted in
+    ///   `SolverStats::memo_invalidated`), flush wholesale past
+    ///   [`MEMO_SOFT_CAP`], and sync the snapshot cache against the
+    ///   ledger's change journal.
+    pub fn begin_episode(
+        &mut self,
+        cold: bool,
+        ledger: &AllocLedger,
+        masks: &Masks,
+        group_machines: bool,
+    ) {
+        if cold {
+            self.interner.clear();
+            self.memo.clear();
+            self.job_sigs.clear();
+            self.snapshots.reset();
+            return;
+        }
+        let dead = self.snapshots.take_dead_sigs();
+        if !dead.is_empty() {
+            self.stats.memo_invalidated += self.memo.retain_live(&dead);
+            self.interner.remove_ids(&dead);
+        }
+        if self.memo.len() > MEMO_SOFT_CAP {
+            self.stats.memo_invalidated += self.memo.len() as u64;
+            self.memo.clear();
+        }
+        self.snapshots.sync(ledger, masks, group_machines);
+    }
+
+    /// Bring slot `t`'s cached snapshot up to date (see
+    /// [`SnapshotCache::refresh`]); a field-splitting shim so `plan_job`
+    /// can hold `&self.snapshots` borrows alongside `&mut self.ws` etc.
+    pub fn refresh_slot(
+        &mut self,
+        ledger: &AllocLedger,
+        pricing: &PricingParams,
+        masks: &Masks,
+        t: usize,
+        group_machines: bool,
+    ) {
+        self.snapshots.refresh(
+            ledger,
+            pricing,
+            masks,
+            t,
+            group_machines,
+            &mut self.interner,
+            &mut self.stats,
+        );
     }
 }

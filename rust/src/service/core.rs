@@ -777,6 +777,10 @@ impl ServiceCore {
             ("lp_solves", json::num(sv.lp_solves as f64)),
             ("lp_pivots", json::num(sv.lp_pivots as f64)),
             ("rounding_attempts", json::num(sv.rounding_attempts as f64)),
+            ("warm_hits", json::num(sv.warm_hits as f64)),
+            ("warm_fallbacks", json::num(sv.warm_fallbacks as f64)),
+            ("memo_invalidated", json::num(sv.memo_invalidated as f64)),
+            ("snapshot_delta_updates", json::num(sv.snapshot_delta_updates as f64)),
         ]);
         ok_response(vec![
             ("decisions", json::num(s.count() as f64)),

@@ -212,9 +212,14 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         lp_solves: result.solver.lp_solves,
         lp_pivots: result.solver.lp_pivots,
         rounding_attempts: result.solver.rounding_attempts,
+        warm_hits: result.solver.warm_hits,
+        warm_fallbacks: result.solver.warm_fallbacks,
+        memo_invalidated: result.solver.memo_invalidated,
+        snapshot_delta_updates: result.solver.snapshot_delta_updates,
         memo_hit_rate: ratio(result.solver.memo_hits, result.solver.theta_solves),
         pivots_per_solve: ratio(result.solver.lp_pivots, result.solver.lp_solves),
         theta_per_admission: ratio(result.solver.theta_solves, result.admitted as u64),
+        warm_hit_rate: ratio(result.solver.warm_hits, result.solver.theta_solves),
         stage_us,
         wall_secs: timer.elapsed_secs(),
     };

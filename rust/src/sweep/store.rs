@@ -51,12 +51,20 @@ pub struct CellRecord {
     pub lp_solves: u64,
     pub lp_pivots: u64,
     pub rounding_attempts: u64,
+    /// Incremental-solver reuse counters (all zero under `--cold-solver`
+    /// and for non-θ policies; see [`crate::sched::SolverStats`]).
+    pub warm_hits: u64,
+    pub warm_fallbacks: u64,
+    pub memo_invalidated: u64,
+    pub snapshot_delta_updates: u64,
     /// Machine-normalized solver ratios (counter quotients, not wall
     /// time — safe to trend-gate across machines): memo hits per
-    /// θ-solve, simplex pivots per LP solve, θ-solves per admission.
+    /// θ-solve, simplex pivots per LP solve, θ-solves per admission,
+    /// warm-simplex hits per θ-solve.
     pub memo_hit_rate: f64,
     pub pivots_per_solve: f64,
     pub theta_per_admission: f64,
+    pub warm_hit_rate: f64,
     /// Telemetry: per-stage span time (µs) spent inside this cell, in
     /// [`obs::ALL_STAGES`] order (all zeros when telemetry is off).
     /// Serialized as `us_<stage_name>` fields.
@@ -91,9 +99,15 @@ impl CellRecord {
         fields.push(("lp_solves", json::num(self.lp_solves as f64)));
         fields.push(("lp_pivots", json::num(self.lp_pivots as f64)));
         fields.push(("rounding_attempts", json::num(self.rounding_attempts as f64)));
+        fields.push(("warm_hits", json::num(self.warm_hits as f64)));
+        fields.push(("warm_fallbacks", json::num(self.warm_fallbacks as f64)));
+        fields.push(("memo_invalidated", json::num(self.memo_invalidated as f64)));
+        fields
+            .push(("snapshot_delta_updates", json::num(self.snapshot_delta_updates as f64)));
         fields.push(("memo_hit_rate", json::num(self.memo_hit_rate)));
         fields.push(("pivots_per_solve", json::num(self.pivots_per_solve)));
         fields.push(("theta_per_admission", json::num(self.theta_per_admission)));
+        fields.push(("warm_hit_rate", json::num(self.warm_hit_rate)));
         fields.push(("wall_secs", json::num(self.wall_secs)));
         let mut out = json::obj(fields);
         if let Json::Obj(m) = &mut out {
@@ -152,9 +166,14 @@ impl CellRecord {
             lp_solves: opt_u64(v, "lp_solves"),
             lp_pivots: opt_u64(v, "lp_pivots"),
             rounding_attempts: opt_u64(v, "rounding_attempts"),
+            warm_hits: opt_u64(v, "warm_hits"),
+            warm_fallbacks: opt_u64(v, "warm_fallbacks"),
+            memo_invalidated: opt_u64(v, "memo_invalidated"),
+            snapshot_delta_updates: opt_u64(v, "snapshot_delta_updates"),
             memo_hit_rate: opt_f64(v, "memo_hit_rate"),
             pivots_per_solve: opt_f64(v, "pivots_per_solve"),
             theta_per_admission: opt_f64(v, "theta_per_admission"),
+            warm_hit_rate: opt_f64(v, "warm_hit_rate"),
             stage_us: {
                 let mut us = [0.0; obs::NUM_STAGES];
                 for (i, st) in obs::ALL_STAGES.iter().enumerate() {
@@ -350,9 +369,14 @@ mod tests {
             lp_solves: 50,
             lp_pivots: 900,
             rounding_attempts: 40,
+            warm_hits: 30,
+            warm_fallbacks: 20,
+            memo_invalidated: 12,
+            snapshot_delta_updates: 44,
             memo_hit_rate: 0.75,
             pivots_per_solve: 18.0,
             theta_per_admission: 28.5,
+            warm_hit_rate: 0.15,
             stage_us: [10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0],
             wall_secs: 0.012,
         }
@@ -375,6 +399,11 @@ mod tests {
         assert!(r.to_line().contains("memo_hits"));
         assert!(r.to_line().contains("memo_hit_rate"));
         assert!(r.to_line().contains("pivots_per_solve"));
+        assert!(r.to_line().contains("warm_hits"));
+        assert!(r.to_line().contains("warm_fallbacks"));
+        assert!(r.to_line().contains("memo_invalidated"));
+        assert!(r.to_line().contains("snapshot_delta_updates"));
+        assert!(r.to_line().contains("warm_hit_rate"));
         assert!(r.to_line().contains("us_theta_solve"));
         assert!(r.to_line().contains("us_queue_wait"));
         assert!(!r.metrics_line().contains("wall_secs"));
@@ -382,6 +411,8 @@ mod tests {
         assert!(!r.metrics_line().contains("theta_solves"));
         assert!(!r.metrics_line().contains("lp_solves"));
         assert!(!r.metrics_line().contains("memo_hit_rate"));
+        assert!(!r.metrics_line().contains("warm_hits"));
+        assert!(!r.metrics_line().contains("snapshot_delta_updates"));
         assert!(!r.metrics_line().contains("us_"));
         assert!(r.metrics_line().contains("total_utility"));
     }

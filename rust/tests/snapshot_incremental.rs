@@ -1,0 +1,200 @@
+//! Property test for the persistent snapshot cache (PR 8): across
+//! seeded random sequences of ledger mutations — admission commits,
+//! releases, and churn-style availability flips — the delta-updated
+//! snapshots held by a long-lived [`PlannerScratch`] must be
+//! *structurally identical* to snapshots rebuilt from the ledger from
+//! scratch. This is the invariant the `--cold-solver` byte-parity
+//! contract rests on: if every cached snapshot equals its rebuild, the
+//! θ-solver sees bit-identical inputs on both paths.
+//!
+//! 256 trials vary the cluster shape (homogeneous / skewed), the
+//! eligibility masks (PD-ORS all-true / OASiS separated), machine
+//! grouping on/off, and the mutation mix; every trial verifies every
+//! slot after every mutation batch.
+
+use dmlrs::cluster::AllocLedger;
+use dmlrs::jobs::{Job, Schedule};
+use dmlrs::sched::dp::{plan_job_with, slot_snapshot, DpConfig, Masks};
+use dmlrs::sched::solver::PlannerScratch;
+use dmlrs::sched::PricingParams;
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::{paper_cluster, paper_cluster_skewed};
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+const TRIALS: u64 = 256;
+const HORIZON: usize = 10;
+const JOBS: usize = 10;
+
+/// Bring every slot up to date through the scratch's incremental path
+/// and compare each against a from-scratch rebuild.
+fn assert_slots_match_rebuild(
+    scratch: &mut PlannerScratch,
+    ledger: &AllocLedger,
+    pricing: &PricingParams,
+    masks: &Masks,
+    group: bool,
+    ctx: &str,
+) {
+    scratch.begin_episode(false, ledger, masks, group);
+    for t in 0..HORIZON {
+        scratch.refresh_slot(ledger, pricing, masks, t, group);
+        let (cached, _sig) = scratch.snapshots.get(t);
+        let fresh = slot_snapshot(ledger, pricing, masks, t, group);
+        assert_eq!(
+            *cached, fresh,
+            "{ctx}: slot {t} cached snapshot diverged from rebuild"
+        );
+    }
+}
+
+#[test]
+fn delta_updated_snapshots_match_rebuilds_over_random_mutation_sequences() {
+    let mut total_delta_updates = 0u64;
+    for trial in 0..TRIALS {
+        let mut rng = Rng::new(0x5eed_0000 + trial);
+        let machines = 4 + (trial % 5) as usize;
+        let cluster = if trial % 2 == 0 {
+            paper_cluster(machines)
+        } else {
+            paper_cluster_skewed(machines, 2.0)
+        };
+        let masks = if trial % 3 == 0 {
+            Masks::separated(machines)
+        } else {
+            Masks::all(machines)
+        };
+        let group = trial % 4 < 2;
+        let jobs = synthetic_jobs(
+            &SynthConfig::paper(JOBS, HORIZON, MIX_DEFAULT),
+            &mut rng.fork(1),
+        );
+        let pricing = PricingParams::from_jobs(&jobs, &cluster, HORIZON);
+        let cfg = DpConfig::default();
+        let mut ledger = AllocLedger::new(&cluster, HORIZON);
+        let mut scratch = PlannerScratch::new();
+        let mut committed: Vec<(Job, Schedule)> = Vec::new();
+        let mut next_job = 0usize;
+
+        let ops = 8 + (trial % 7) as usize;
+        for op in 0..ops {
+            // range_usize is inclusive: 0 = commit, 1 = release, 2 = churn
+            match rng.range_usize(0, 2) {
+                // plan + commit the next arrival (through the same
+                // scratch, so planning itself runs the incremental path)
+                0 if next_job < jobs.len() => {
+                    let job = jobs[next_job].clone();
+                    next_job += 1;
+                    let plan = plan_job_with(
+                        &job,
+                        &ledger,
+                        &pricing,
+                        &masks,
+                        &cfg,
+                        &mut rng.fork(2 + op as u64),
+                        &mut scratch,
+                    );
+                    if let Some(p) = plan {
+                        if p.payoff > 0.0 {
+                            ledger.commit(&job, &p.schedule);
+                            committed.push((job, p.schedule));
+                        }
+                    }
+                }
+                // release a random committed schedule (replan/migration)
+                1 if !committed.is_empty() => {
+                    let i = rng.range_usize(0, committed.len() - 1);
+                    let (job, sched) = committed.swap_remove(i);
+                    ledger.release(&job, &sched);
+                }
+                // churn: flip one machine's availability from a slot on
+                _ => {
+                    let h = rng.range_usize(0, machines - 1);
+                    let from = rng.range_usize(0, HORIZON - 1);
+                    let up = rng.chance(0.5);
+                    ledger.set_available_from(h, from, up);
+                }
+            }
+            assert_slots_match_rebuild(
+                &mut scratch,
+                &ledger,
+                &pricing,
+                &masks,
+                group,
+                &format!("trial {trial} op {op}"),
+            );
+        }
+        total_delta_updates += scratch.stats.snapshot_delta_updates;
+    }
+    // the point of the exercise: the cheap path must actually run —
+    // a suite where every refresh fell back to a full rebuild would
+    // vacuously pass the equality checks
+    assert!(
+        total_delta_updates > 0,
+        "no snapshot was ever delta-updated across {TRIALS} trials"
+    );
+}
+
+#[test]
+fn snapshot_cache_survives_interleaved_planning_and_churn_exactly() {
+    // A tighter end-to-end variant: two scratches plan the same arrival
+    // stream over the same mutating ledger — one long-lived (incremental),
+    // one rebuilt cold before every plan — and must produce identical
+    // plans throughout.
+    for trial in 0..16u64 {
+        let mut rng = Rng::new(0xabcd + trial);
+        let machines = 6;
+        let cluster = paper_cluster_skewed(machines, 2.0);
+        let masks = Masks::all(machines);
+        let jobs = synthetic_jobs(
+            &SynthConfig::paper(JOBS, HORIZON, MIX_DEFAULT),
+            &mut rng.fork(1),
+        );
+        let pricing = PricingParams::from_jobs(&jobs, &cluster, HORIZON);
+        let warm_cfg = DpConfig::default();
+        let cold_cfg = DpConfig { cold_solver: true, ..Default::default() };
+        let mut ledger = AllocLedger::new(&cluster, HORIZON);
+        let mut warm_scratch = PlannerScratch::new();
+        let mut cold_scratch = PlannerScratch::new();
+
+        for (i, job) in jobs.iter().enumerate() {
+            // identical RNG streams for both planners (rounding replays)
+            let mut rng_a = rng.fork(100 + i as u64);
+            let mut rng_b = rng.fork(100 + i as u64);
+            let warm = plan_job_with(
+                job, &ledger, &pricing, &masks, &warm_cfg, &mut rng_a,
+                &mut warm_scratch,
+            );
+            let cold = plan_job_with(
+                job, &ledger, &pricing, &masks, &cold_cfg, &mut rng_b,
+                &mut cold_scratch,
+            );
+            match (&warm, &cold) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.schedule, b.schedule, "trial {trial} job {i}");
+                    assert_eq!(
+                        a.payoff.to_bits(),
+                        b.payoff.to_bits(),
+                        "trial {trial} job {i}: payoff bits diverged"
+                    );
+                }
+                (None, None) => {}
+                _ => panic!("trial {trial} job {i}: admit/reject diverged"),
+            }
+            if let Some(p) = warm {
+                if p.payoff > 0.0 {
+                    ledger.commit(job, &p.schedule);
+                }
+            }
+            if i == JOBS / 2 {
+                // mid-stream churn: down a machine, then bring it back
+                ledger.set_available_from(1, i % HORIZON, false);
+                ledger.set_available_from(1, (i + 2) % HORIZON, true);
+            }
+        }
+        assert!(
+            warm_scratch.stats.snapshot_delta_updates > 0
+                || warm_scratch.stats.warm_hits > 0,
+            "trial {trial}: incremental planner never reused anything"
+        );
+    }
+}

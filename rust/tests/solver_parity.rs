@@ -5,10 +5,19 @@
 //! byte-identical schedules and metrics — only the diagnostic solver
 //! counters may differ, and for the primal-dual schedulers they must
 //! differ in the expected direction (memo hits > 0, fewer LP solves).
+//!
+//! The incremental solver (PR 8) widens the contract: the default path
+//! additionally reuses warm-simplex results, θ-memo entries, and slot
+//! snapshots *across* arrivals, and `--cold-solver` is its oracle —
+//! byte-identical schedules, metrics, and RNG streams even under elastic
+//! replanning and machine churn (the ledger mutations that exercise the
+//! change journal and delta snapshot updates).
 
+use dmlrs::chaos::ChurnSpec;
 use dmlrs::cluster::Cluster;
 use dmlrs::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
-use dmlrs::sim::{simulate, SimResult};
+use dmlrs::sched::replan::ReplanPolicy;
+use dmlrs::sim::{simulate, SimEngine, SimResult};
 use dmlrs::util::Rng;
 use dmlrs::workload::synthetic::{paper_cluster, paper_cluster_skewed};
 use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
@@ -102,6 +111,92 @@ fn baselines_report_zero_solver_work() {
     for key in ["fifo", "drf", "dorm"] {
         let res = run(key, &cluster, true);
         assert_eq!(res.solver, Default::default(), "{key}");
+    }
+}
+
+/// A run with every ledger-mutation source active: arrivals commit,
+/// elastic replan rounds release + re-commit, and scripted churn takes a
+/// machine down mid-run and brings it back — the journal traffic the
+/// persistent snapshot cache has to digest correctly.
+fn run_full(key: &str, cluster: &Cluster, cold_solver: bool) -> SimResult {
+    let reg = SchedulerRegistry::builtin();
+    let jobs = workload();
+    let mut spec = SchedulerSpec::new(key).with_seed(SCHED_SEED);
+    spec.pdors.cold_solver = cold_solver;
+    let replan = ReplanPolicy::parse("every:3").unwrap();
+    let churn = ChurnSpec::parse("down@4:1,up@9:1").unwrap();
+    let mut sched = reg.build(&spec, &jobs, cluster, HORIZON).unwrap();
+    let mut engine = SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(cluster)
+        .horizon(HORIZON)
+        .replan(replan)
+        .churn(churn, SCHED_SEED)
+        .build();
+    engine.run(sched.as_mut())
+}
+
+#[test]
+fn cold_solver_oracle_is_byte_identical_across_the_zoo() {
+    for (shape, cluster) in clusters() {
+        for key in ZOO {
+            let incremental = run_full(key, &cluster, false);
+            let cold = run_full(key, &cluster, true);
+            assert!(
+                incremental.parity_eq(&cold),
+                "{key} on {shape}: incremental vs --cold-solver diverged\n\
+                 incremental: u={} admitted={} completed={} replanned={} \
+                 evicted={} migrated={}\n\
+                 cold:        u={} admitted={} completed={} replanned={} \
+                 evicted={} migrated={}",
+                incremental.total_utility,
+                incremental.admitted,
+                incremental.completed,
+                incremental.replanned,
+                incremental.evicted,
+                incremental.migrated,
+                cold.total_utility,
+                cold.admitted,
+                cold.completed,
+                cold.replanned,
+                cold.evicted,
+                cold.migrated,
+            );
+            assert_eq!(incremental.outcomes, cold.outcomes, "{key} on {shape}");
+        }
+    }
+}
+
+#[test]
+fn incremental_path_actually_reuses_state() {
+    for (shape, cluster) in clusters() {
+        for key in ["pd-ors", "oasis"] {
+            let incremental = run_full(key, &cluster, false);
+            let cold = run_full(key, &cluster, true);
+            assert_eq!(
+                incremental.solver.theta_solves, cold.solver.theta_solves,
+                "{key} on {shape}: θ-solve counts must match"
+            );
+            assert!(
+                incremental.solver.warm_hits > 0,
+                "{key} on {shape}: warm simplex never hit"
+            );
+            assert!(
+                incremental.solver.snapshot_delta_updates > 0,
+                "{key} on {shape}: snapshots were never delta-updated"
+            );
+            // the cold oracle must not touch any cross-arrival structure
+            assert_eq!(cold.solver.warm_hits, 0, "{key} on {shape}");
+            assert_eq!(cold.solver.warm_fallbacks, 0, "{key} on {shape}");
+            assert_eq!(cold.solver.memo_invalidated, 0, "{key} on {shape}");
+            assert_eq!(cold.solver.snapshot_delta_updates, 0, "{key} on {shape}");
+            assert!(
+                incremental.solver.lp_solves < cold.solver.lp_solves,
+                "{key} on {shape}: reuse should absorb LP solves ({} vs {})",
+                incremental.solver.lp_solves,
+                cold.solver.lp_solves
+            );
+        }
     }
 }
 

@@ -246,6 +246,55 @@ if ! grep -q '"traceEvents"' "$TRACE_OUT" || ! grep -q '"ph":"i"' "$TRACE_OUT"; 
 fi
 echo "trace OK: all instrumented engine stages present in trace_quick.json"
 
+echo "== admission bench (1024-machine cold vs incremental solver) =="
+# The incremental-solver acceptance harness: one long-horizon arrival
+# stream over a 1024-machine skewed cluster, solved twice — cold (every
+# cross-arrival cache disabled, the --cold-solver oracle) and
+# incrementally (persistent snapshots + memo carry-over + warm simplex).
+# The command itself enforces byte parity between the passes and exits
+# nonzero on divergence; the gates below check the point of the
+# exercise: strictly less simplex work and a lower p99 admission latency
+# on the incremental path.
+rm -f ../BENCH_admission.json
+"$BIN" admission-bench --machines 1024 --jobs 96 --horizon 48 --seed 1 \
+    --out ../BENCH_admission.json
+cat ../BENCH_admission.json
+ADMISSION_JSON=$(cat ../BENCH_admission.json)
+# the artifact nests per-pass objects; slice at the pass key first, then
+# reuse the flat json_field extractor on the remainder
+COLD_PART=${ADMISSION_JSON#*\"cold\":}
+INC_PART=${ADMISSION_JSON#*\"incremental\":}
+json_field() {
+    awk -v f="\"$1\":" '{
+        n = index($0, f);
+        if (n) { s = substr($0, n + length(f)); sub(/[,}].*/, "", s); gsub(/[" ]/, "", s); print s; exit }
+    }'
+}
+COLD_PPT=$(printf '%s\n' "$COLD_PART" | json_field pivots_per_theta)
+INC_PPT=$(printf '%s\n' "$INC_PART" | json_field pivots_per_theta)
+INC_WARM=$(printf '%s\n' "$INC_PART" | json_field warm_hits)
+INC_THETA=$(printf '%s\n' "$INC_PART" | json_field theta_solves)
+INC_DELTAS=$(printf '%s\n' "$INC_PART" | json_field snapshot_delta_updates)
+SPEEDUP_P99=$(printf '%s\n' "$ADMISSION_JSON" | json_field speedup_p99)
+ADM_JOBS=$(printf '%s\n' "$ADMISSION_JSON" | json_field jobs)
+if awk -v c="$COLD_PPT" -v i="$INC_PPT" 'BEGIN { exit !(i >= c) }'; then
+    echo "error: incremental solver did not reduce pivots-per-solve ($INC_PPT vs cold $COLD_PPT)" >&2
+    exit 1
+fi
+if awk -v s="$SPEEDUP_P99" 'BEGIN { exit !(s <= 1.0) }'; then
+    echo "error: incremental p99 admission latency did not beat cold (speedup_p99=$SPEEDUP_P99)" >&2
+    exit 1
+fi
+if [ "${INC_WARM:-0}" -eq 0 ]; then
+    echo "error: the incremental pass recorded zero warm-simplex hits" >&2
+    exit 1
+fi
+if [ "${INC_DELTAS:-0}" -eq 0 ]; then
+    echo "error: the incremental pass never delta-updated a snapshot" >&2
+    exit 1
+fi
+echo "admission bench OK (pivots/solve $INC_PPT vs $COLD_PPT cold, p99 speedup ${SPEEDUP_P99}x)"
+
 echo "== bench baseline gate (BENCH_TREND.json) =="
 # Committed per-PR bench baselines: BENCH_TREND.json holds one JSON line
 # per bench. Deterministic metrics are compared against the baseline and
@@ -291,6 +340,15 @@ fi
 #                        diurnal quick sweep (deterministic given seeds)
 #   churn_disruption   — evicted + migrated jobs on the churny quick
 #                        sweep (the seeded fault path's footprint)
+#   warm_hit_rate      — warm-simplex hits / θ-solves on the 1024-machine
+#                        admission bench's incremental pass
+#   snapshot_deltas_per_admission — per-machine snapshot entries carried
+#                        over (delta-updated instead of rebuilt) per
+#                        admission on the same bench
+#   spans_per_admission — total instrumented span count across all
+#                        pipeline stages over admitted jobs, from the
+#                        service bench's prometheus scrape (the PR 7
+#                        carried-over instrumentation-drift canary)
 THETA=$(cat ../BENCH_solver.json | json_field theta_solves)
 HITS=$(cat ../BENCH_solver.json | json_field memo_hits)
 HIT_RATE=$(awk -v t="$THETA" -v h="$HITS" 'BEGIN { printf "%.4f", (t + h > 0) ? h / (t + h) : 0 }')
@@ -298,13 +356,21 @@ GAIN=$(cat ../BENCH_replan.json | json_field utility_gain)
 EVICTED=$(cat ../BENCH_churn.json | json_field evicted_jobs)
 MIGRATED=$(cat ../BENCH_churn.json | json_field migrated_jobs)
 DISRUPTION=$((EVICTED + MIGRATED))
-CURRENT=$(printf '{"bench": "derived_trend_metrics", "memo_hit_rate": %s, "replan_utility_gain": %s, "churn_disruption": %d}' \
-    "$HIT_RATE" "$GAIN" "$DISRUPTION")
+WARM_RATE=$(awk -v w="$INC_WARM" -v t="$INC_THETA" 'BEGIN { printf "%.4f", (t > 0) ? w / t : 0 }')
+DELTAS_PER_ADM=$(awk -v d="$INC_DELTAS" -v j="$ADM_JOBS" 'BEGIN { printf "%.2f", (j > 0) ? d / j : 0 }')
+SPAN_COUNT=$(awk '/^dmlrs_stage_duration_us_count/ { total += $NF } END { printf "%.0f", total }' ../PROM_snapshot.txt)
+PROM_ADMITTED=$(awk '/^dmlrs_admitted_total / { printf "%.0f", $2; exit }' ../PROM_snapshot.txt)
+SPANS_PER_ADM=$(awk -v s="$SPAN_COUNT" -v a="$PROM_ADMITTED" 'BEGIN { printf "%.2f", (a > 0) ? s / a : 0 }')
+CURRENT=$(printf '{"bench": "derived_trend_metrics", "memo_hit_rate": %s, "replan_utility_gain": %s, "churn_disruption": %d, "warm_hit_rate": %s, "snapshot_deltas_per_admission": %s, "spans_per_admission": %s}' \
+    "$HIT_RATE" "$GAIN" "$DISRUPTION" "$WARM_RATE" "$DELTAS_PER_ADM" "$SPANS_PER_ADM")
 BASE=$(grep '"bench": "derived_trend_metrics"' "$TREND" | head -n 1 || true)
 if [ -n "$BASE" ]; then
     BASE_RATE=$(printf '%s\n' "$BASE" | json_field memo_hit_rate)
     BASE_GAIN=$(printf '%s\n' "$BASE" | json_field replan_utility_gain)
     BASE_DISRUPT=$(printf '%s\n' "$BASE" | json_field churn_disruption)
+    BASE_WARM=$(printf '%s\n' "$BASE" | json_field warm_hit_rate)
+    BASE_DELTAS=$(printf '%s\n' "$BASE" | json_field snapshot_deltas_per_admission)
+    BASE_SPANS=$(printf '%s\n' "$BASE" | json_field spans_per_admission)
     # the θ-memo must stay effective: hit rate not >10% (relative) below baseline
     if awk -v b="$BASE_RATE" -v n="$HIT_RATE" 'BEGIN { exit !(b > 0 && n < 0.90 * b) }'; then
         echo "error: memo hit rate regressed beyond 10%: $HIT_RATE vs baseline $BASE_RATE" >&2
@@ -321,7 +387,26 @@ if [ -n "$BASE" ]; then
         echo "error: churn disruption drifted beyond 25%: $DISRUPTION vs baseline $BASE_DISRUPT" >&2
         exit 1
     fi
-    echo "derived trend metrics within thresholds (hit_rate $HIT_RATE vs $BASE_RATE, gain $GAIN vs $BASE_GAIN, disruption $DISRUPTION vs $BASE_DISRUPT)"
+    # the warm simplex must stay effective (a baseline that predates the
+    # field parses as empty and skips the gate until re-pinned)
+    if awk -v b="${BASE_WARM:-0}" -v n="$WARM_RATE" 'BEGIN { exit !(b > 0 && n < 0.90 * b) }'; then
+        echo "error: warm-simplex hit rate regressed beyond 10%: $WARM_RATE vs baseline $BASE_WARM" >&2
+        exit 1
+    fi
+    # snapshot carry-over is deterministic on the seeded bench; drift
+    # means the delta path silently changed shape
+    if awk -v b="${BASE_DELTAS:-0}" -v n="$DELTAS_PER_ADM" 'BEGIN { exit !(b > 0 && (n > 1.25 * b || n < 0.75 * b)) }'; then
+        echo "error: snapshot deltas per admission drifted beyond 25%: $DELTAS_PER_ADM vs baseline $BASE_DELTAS" >&2
+        exit 1
+    fi
+    # instrumentation drift: span counts per admission on the service
+    # bench are a counter ratio — large movement means a stage gained or
+    # lost spans silently (re-pin the baseline if intended)
+    if awk -v b="${BASE_SPANS:-0}" -v n="$SPANS_PER_ADM" 'BEGIN { exit !(b > 0 && (n > 1.25 * b || n < 0.75 * b)) }'; then
+        echo "error: spans per admission drifted beyond 25%: $SPANS_PER_ADM vs baseline $BASE_SPANS" >&2
+        exit 1
+    fi
+    echo "derived trend metrics within thresholds (hit_rate $HIT_RATE vs $BASE_RATE, gain $GAIN vs $BASE_GAIN, disruption $DISRUPTION vs $BASE_DISRUPT, warm_rate $WARM_RATE vs ${BASE_WARM:-unpinned}, deltas/adm $DELTAS_PER_ADM vs ${BASE_DELTAS:-unpinned}, spans/adm $SPANS_PER_ADM vs ${BASE_SPANS:-unpinned})"
 else
     printf '%s\n' "$CURRENT" >> "$TREND"
     echo "recorded derived trend baseline in BENCH_TREND.json — commit it to pin"
