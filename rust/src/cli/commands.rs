@@ -175,11 +175,23 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
     let mut trace = TraceObserver::new();
     let want_events = args.bool("events");
     let trace_out = args.get("trace-out").map(str::to_string);
+    let explain = args.bool("explain");
+    let explain_out = args.get("explain-out").map(str::to_string);
+    let price_out = args.get("price-out").map(str::to_string);
+    let want_prov = explain || explain_out.is_some() || price_out.is_some();
     let mut telemetry = crate::obs::export::TelemetryObserver::new();
+    let mut flags = 0u8;
     if trace_out.is_some() {
-        // full instrumentation for the exported trace; telemetry is
-        // deterministically inert, so the schedule is unchanged
-        crate::obs::set_flags(crate::obs::ALL);
+        flags |= crate::obs::ALL;
+    }
+    if want_prov {
+        flags |= crate::obs::PROV;
+    }
+    if flags != 0 {
+        // full instrumentation for the exported artifacts; telemetry and
+        // decision provenance are both deterministically inert, so the
+        // schedule is unchanged
+        crate::obs::set_flags(flags);
         crate::obs::reset();
     }
     let mut builder = SimEngine::builder()
@@ -203,8 +215,10 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
         telemetry
             .write_chrome_trace(path)
             .map_err(|e| err!("--trace-out {path}: {e}"))?;
-        crate::obs::set_flags(0);
         eprintln!("wrote {path} (open in Perfetto or chrome://tracing)");
+    }
+    if flags != 0 {
+        crate::obs::set_flags(0);
     }
 
     println!(
@@ -218,6 +232,13 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
             "  job {:3}  admitted={} completed={} completion={:?} utility={:.2}",
             o.job_id, o.admitted as u8, o.completed as u8, o.completion, o.utility
         );
+    }
+    if explain {
+        // the Algorithm 1 "why" behind every admission decision: utility
+        // vs the dual-price bill, locality case, and reuse provenance
+        for tr in &res.decisions {
+            println!("  {}", tr.explain_line());
+        }
     }
     println!(
         "total_utility={:.2} admitted={} completed={} median_training_time={:.1}",
@@ -252,6 +273,21 @@ pub fn cmd_schedule(args: &Args) -> Result<()> {
         sv.memo_invalidated,
         sv.snapshot_delta_updates
     );
+    if let Some(path) = &explain_out {
+        let mut body = String::new();
+        for tr in &res.decisions {
+            body.push_str(&tr.to_json().to_string());
+            body.push('\n');
+        }
+        std::fs::write(path, body).map_err(|e| err!("--explain-out {path}: {e}"))?;
+        eprintln!("wrote {path} ({} decision traces)", res.decisions.len());
+    }
+    if let Some(path) = &price_out {
+        let mut line = crate::obs::provenance::price_series_json(&res.prices).to_string();
+        line.push('\n');
+        std::fs::write(path, line).map_err(|e| err!("--price-out {path}: {e}"))?;
+        eprintln!("wrote {path} ({} price samples)", res.prices.len());
+    }
     Ok(())
 }
 
@@ -605,10 +641,11 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     dcfg.recover = args.get("recover").map(str::to_string);
     dcfg.prom_addr = args.get("prom-addr").map(str::to_string);
 
-    // the daemon always records span histograms + the flight ring (the
-    // metrics_prom/debug_dump ops serve them); the per-span trace buffer
-    // stays off — nothing drains it while serving
-    crate::obs::set_flags(crate::obs::SPANS | crate::obs::FLIGHT);
+    // the daemon always records span histograms, the flight ring, and
+    // decision provenance (the metrics_prom/debug_dump/explain ops serve
+    // them); the per-span trace buffer stays off — nothing drains it
+    // while serving
+    crate::obs::set_flags(crate::obs::SPANS | crate::obs::FLIGHT | crate::obs::PROV);
     crate::obs::flight::install_panic_dump();
 
     crate::service::install_term_handler();

@@ -109,6 +109,13 @@ COMMANDS:
               [--trace-out run.json]  write a Chrome trace-event JSON of
               the run's pipeline spans + engine events (open in Perfetto
               or chrome://tracing; telemetry never changes the schedule)
+              [--explain]  print a per-job \"why\" line for every
+              admission decision: utility vs the dual-price bill, the
+              margin, the winning slot window, and locality/reuse counts
+              [--explain-out FILE]  write those decision traces as JSONL
+              [--price-out FILE]  write the per-slot cluster dual-price +
+              utilization series as one JSON object (provenance is
+              deterministically inert — the schedule never changes)
   compare     run the full zoo    (same flags; runs through the parallel
               sweep runner) [--par N] [--out results/compare.jsonl]
               [--no-theta-cache] [--replan every:K] [--churn SPEC]
@@ -141,8 +148,10 @@ COMMANDS:
               text exposition over plain HTTP at this address)
               protocol: one JSON request per line — submit/tick/status/
               cluster/metrics/metrics_prom/debug_dump/replan/
-              machine_down/machine_up/shutdown
-              (see rust/src/service/protocol.rs)
+              machine_down/machine_up/explain/shutdown
+              (explain {\"job_id\": N} answers with the job's decision
+              trace + a human-readable \"why\" line; journaled ops replay
+              under --recover; see rust/src/service/protocol.rs)
   load        load generator      --addr HOST:PORT [--connections N]
               [--rate R] (target submissions/sec, open loop) --jobs N
               --horizon N --seed N [--trace] [--arrivals diurnal:R]

@@ -29,6 +29,7 @@
 pub mod export;
 pub mod flight;
 pub mod hist;
+pub mod provenance;
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
@@ -105,6 +106,10 @@ pub const FLIGHT: u8 = 2;
 pub const TRACE: u8 = 4;
 /// Everything on.
 pub const ALL: u8 = SPANS | FLIGHT | TRACE;
+/// Emit decision provenance + price samples (see [`provenance`]).
+/// Deliberately *not* part of [`ALL`]: the Chrome-trace export path
+/// predates provenance and its consumers expect the PR 7 event set.
+pub const PROV: u8 = 8;
 
 static FLAGS: AtomicU8 = AtomicU8::new(0);
 
@@ -118,6 +123,11 @@ pub fn flags() -> u8 {
 
 pub fn spans_on() -> bool {
     flags() & SPANS != 0
+}
+
+/// Is decision-provenance emission on (the [`PROV`] flag)?
+pub fn prov_on() -> bool {
+    flags() & PROV != 0
 }
 
 // ---------------------------------------------------------------------------

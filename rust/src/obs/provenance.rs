@@ -1,0 +1,338 @@
+//! Decision provenance: *why* each job was admitted or rejected, and
+//! what the dual prices looked like while the scheduler decided.
+//!
+//! The paper's admission rule (Algorithm 1) is economic — a job enters
+//! iff its utility beats the total dual price `Σ p_h^r[t]` along the
+//! best θ-schedule — so the explanation of every decision is a handful
+//! of numbers the solver already computes: the utility at the planned
+//! completion, the price it paid, their difference (the λ margin), the
+//! winning slot window, and how many θ-solves landed on the internal
+//! (co-located) vs external (LP + rounding) locality case. This module
+//! holds the two record types that carry those numbers out of the
+//! solver:
+//!
+//! * [`DecisionTrace`] — one record per arrival decision, captured by
+//!   [`PdOrs`](crate::sched::PdOrs) from the [`PlanResult`]
+//!   (`crate::sched::dp::PlanResult`) it just evaluated (or synthesized
+//!   by the engine for policies that do not price, reason `"policy"`);
+//! * [`PriceSample`] — the cluster's mean dual price and utilization per
+//!   resource, sampled at each `SlotStart`.
+//!
+//! Provenance is **deterministically inert**: building a trace reads
+//! only data the solve already produced (zero RNG draws, no ledger
+//! mutation), and traces are *emitted* only when the [`PROV`]
+//! flag (`crate::obs::PROV`) or the engine's `provenance` builder switch
+//! is on — with it off, results are byte-identical to a build that never
+//! heard of this module (`tests/provenance_parity.rs`).
+
+use crate::cluster::{AllocLedger, Resource, NUM_RESOURCES};
+use crate::util::json::{self, Json};
+
+/// The provenance of one arrival decision (see module docs). `Copy` so
+/// event collectors can move it out of a matched [`SimEvent`]
+/// (`crate::sim::SimEvent::Decision`) by value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecisionTrace {
+    pub job_id: usize,
+    /// The slot the decision was made at (the engine/daemon stamp this
+    /// with the actual submission slot).
+    pub t: usize,
+    /// `"admit"`, `"reject"`, or `"defer"`.
+    pub decision: &'static str,
+    /// Machine-readable reason: `"margin"` (admitted, utility beat the
+    /// price), `"price"` (a feasible plan existed but priced out),
+    /// `"infeasible"` (no feasible θ-schedule in the window), or
+    /// `"policy"` (a non-pricing scheduler decided; no economics to
+    /// report).
+    pub reason: &'static str,
+    /// Utility at the planned completion slot (0 for infeasible/policy).
+    pub utility: f64,
+    /// Total dual price of the best plan (Eq. (12) summed along the
+    /// θ-schedule; 0 for infeasible/policy).
+    pub price: f64,
+    /// The λ margin from Algorithm 1: `utility - price`. Positive iff
+    /// admitted.
+    pub margin: f64,
+    /// The winning plan's slot window `(first_slot, completion_slot)`;
+    /// `None` when no plan existed.
+    pub window: Option<(usize, usize)>,
+    /// θ-solves of the winning plan that used the internal (co-located,
+    /// closed-form) locality case.
+    pub internal_slots: usize,
+    /// θ-solves of the winning plan that used the external case (LP +
+    /// randomized rounding).
+    pub external_slots: usize,
+    /// Randomized-rounding attempts spent on this plan.
+    pub rounding_attempts: usize,
+    /// Slots the DP considered (the arrival-to-horizon window).
+    pub slots_considered: usize,
+    /// Reuse provenance: θ-memo hits during this plan.
+    pub memo_hits: u64,
+    /// Warm-simplex hits during this plan.
+    pub warm_hits: u64,
+    /// Snapshot delta-refreshes during this plan.
+    pub snapshot_delta_updates: u64,
+}
+
+impl DecisionTrace {
+    /// A trace for a scheduler that does not price (fifo/drf/dorm — or a
+    /// third-party `Scheduler` that never reports provenance): the
+    /// decision is recorded, the economics are all zero.
+    pub fn fallback(job_id: usize, decision: &'static str) -> DecisionTrace {
+        DecisionTrace {
+            job_id,
+            t: 0,
+            decision,
+            reason: "policy",
+            utility: 0.0,
+            price: 0.0,
+            margin: 0.0,
+            window: None,
+            internal_slots: 0,
+            external_slots: 0,
+            rounding_attempts: 0,
+            slots_considered: 0,
+            memo_hits: 0,
+            warm_hits: 0,
+            snapshot_delta_updates: 0,
+        }
+    }
+
+    /// A rejection because no feasible θ-schedule existed in the
+    /// `slots_considered`-slot window. All economics stay finite zeros
+    /// (there is no price to report), keeping the JSON clean.
+    pub fn infeasible(job_id: usize, slots_considered: usize) -> DecisionTrace {
+        DecisionTrace {
+            reason: "infeasible",
+            slots_considered,
+            ..DecisionTrace::fallback(job_id, "reject")
+        }
+    }
+
+    /// One human-readable "why" line (what `dmlrs schedule --explain`
+    /// prints).
+    pub fn explain_line(&self) -> String {
+        let reuse = format!(
+            "memo={} warm={} deltas={}",
+            self.memo_hits, self.warm_hits, self.snapshot_delta_updates
+        );
+        match self.reason {
+            "margin" => {
+                let (w0, w1) = self.window.unwrap_or((self.t, self.t));
+                format!(
+                    "t={:3} job {:3} admitted: utility {:.3} - price {:.3} = margin {:+.3} \
+                     > 0; slots [{w0}, {w1}], locality internal={} external={}, \
+                     roundings={}, {reuse}",
+                    self.t,
+                    self.job_id,
+                    self.utility,
+                    self.price,
+                    self.margin,
+                    self.internal_slots,
+                    self.external_slots,
+                    self.rounding_attempts
+                )
+            }
+            "price" => format!(
+                "t={:3} job {:3} rejected (priced out): utility {:.3} - price {:.3} = \
+                 margin {:+.3} <= 0 over {} candidate slots, {reuse}",
+                self.t,
+                self.job_id,
+                self.utility,
+                self.price,
+                self.margin,
+                self.slots_considered
+            ),
+            "infeasible" => format!(
+                "t={:3} job {:3} rejected (infeasible): no feasible schedule in {} \
+                 candidate slots",
+                self.t, self.job_id, self.slots_considered
+            ),
+            _ => format!(
+                "t={:3} job {:3} {}: policy decision (scheduler reports no prices)",
+                self.t, self.job_id, self.decision
+            ),
+        }
+    }
+
+    /// One compact JSON object (what `--explain-out` writes per line and
+    /// the daemon's `explain` op returns).
+    pub fn to_json(&self) -> Json {
+        let (ws, we) = match self.window {
+            Some((a, b)) => (json::num(a as f64), json::num(b as f64)),
+            None => (Json::Null, Json::Null),
+        };
+        json::obj(vec![
+            ("job_id", json::num(self.job_id as f64)),
+            ("t", json::num(self.t as f64)),
+            ("decision", json::s(self.decision)),
+            ("reason", json::s(self.reason)),
+            ("utility", json::num(self.utility)),
+            ("price", json::num(self.price)),
+            ("margin", json::num(self.margin)),
+            ("window_start", ws),
+            ("window_end", we),
+            ("internal_slots", json::num(self.internal_slots as f64)),
+            ("external_slots", json::num(self.external_slots as f64)),
+            ("rounding_attempts", json::num(self.rounding_attempts as f64)),
+            ("slots_considered", json::num(self.slots_considered as f64)),
+            ("memo_hits", json::num(self.memo_hits as f64)),
+            ("warm_hits", json::num(self.warm_hits as f64)),
+            ("snapshot_delta_updates", json::num(self.snapshot_delta_updates as f64)),
+        ])
+    }
+}
+
+/// One point of the per-slot cluster price & utilization time-series
+/// (the dual dynamics the paper plots): the machine-mean dual price and
+/// the used/capacity ratio per resource at slot `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriceSample {
+    pub t: usize,
+    /// Machine-mean dual price per resource.
+    pub price: [f64; NUM_RESOURCES],
+    /// The largest per-resource mean price (a quick congestion scalar).
+    pub max_price: f64,
+    /// Cluster utilization per resource: total used / total capacity.
+    pub utilization: [f64; NUM_RESOURCES],
+}
+
+impl PriceSample {
+    /// Scalar price level: the mean over resources of the machine-mean
+    /// prices (what the sweep's `mean_price_level` aggregates).
+    pub fn mean_price(&self) -> f64 {
+        self.price.iter().sum::<f64>() / NUM_RESOURCES as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let named = |xs: &[f64; NUM_RESOURCES]| {
+            Json::Obj(
+                Resource::ALL
+                    .iter()
+                    .map(|&r| (r.name().to_string(), json::num(xs[r as usize])))
+                    .collect(),
+            )
+        };
+        json::obj(vec![
+            ("t", json::num(self.t as f64)),
+            ("price", named(&self.price)),
+            ("mean_price", json::num(self.mean_price())),
+            ("max_price", json::num(self.max_price)),
+            ("utilization", named(&self.utilization)),
+        ])
+    }
+}
+
+/// Machine-mean per-resource prices from a per-machine price table (what
+/// [`crate::sched::dp::slot_prices`] returns).
+pub fn mean_prices(per_machine: &[[f64; NUM_RESOURCES]]) -> [f64; NUM_RESOURCES] {
+    let mut mean = [0.0; NUM_RESOURCES];
+    if per_machine.is_empty() {
+        return mean;
+    }
+    for row in per_machine {
+        for r in 0..NUM_RESOURCES {
+            mean[r] += row[r];
+        }
+    }
+    for m in &mut mean {
+        *m /= per_machine.len() as f64;
+    }
+    mean
+}
+
+/// Cluster utilization per resource at slot `t`: total committed
+/// allocation over total capacity (0 where the cluster has none of a
+/// resource).
+pub fn utilization(ledger: &AllocLedger, t: usize) -> [f64; NUM_RESOURCES] {
+    let mut used = [0.0; NUM_RESOURCES];
+    let mut cap = [0.0; NUM_RESOURCES];
+    for h in 0..ledger.num_machines() {
+        for r in 0..NUM_RESOURCES {
+            used[r] += ledger.used(t, h).0[r];
+            cap[r] += ledger.capacity(h).0[r];
+        }
+    }
+    let mut out = [0.0; NUM_RESOURCES];
+    for r in 0..NUM_RESOURCES {
+        out[r] = if cap[r] > 0.0 { used[r] / cap[r] } else { 0.0 };
+    }
+    out
+}
+
+/// The whole price series as one JSON document (what
+/// `dmlrs schedule --price-out` writes).
+pub fn price_series_json(samples: &[PriceSample]) -> Json {
+    json::obj(vec![
+        ("series", json::s("cluster_prices")),
+        ("slots", json::num(samples.len() as f64)),
+        ("samples", Json::Arr(samples.iter().map(PriceSample::to_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_and_infeasible_traces_are_finite() {
+        let f = DecisionTrace::fallback(3, "defer");
+        assert_eq!(f.reason, "policy");
+        assert!(f.margin.is_finite() && f.price.is_finite());
+        let i = DecisionTrace::infeasible(4, 7);
+        assert_eq!(i.decision, "reject");
+        assert_eq!(i.reason, "infeasible");
+        assert_eq!(i.slots_considered, 7);
+        assert!(i.explain_line().contains("infeasible"));
+        // the JSON never contains a non-finite number
+        assert!(!i.to_json().to_string().contains("inf"));
+    }
+
+    #[test]
+    fn explain_line_carries_the_margin() {
+        let tr = DecisionTrace {
+            job_id: 5,
+            t: 2,
+            decision: "admit",
+            reason: "margin",
+            utility: 10.0,
+            price: 4.0,
+            margin: 6.0,
+            window: Some((2, 6)),
+            internal_slots: 3,
+            external_slots: 1,
+            rounding_attempts: 2,
+            slots_considered: 10,
+            memo_hits: 8,
+            warm_hits: 1,
+            snapshot_delta_updates: 4,
+        };
+        let line = tr.explain_line();
+        assert!(line.contains("admitted"), "{line}");
+        assert!(line.contains("10.000") && line.contains("4.000"), "{line}");
+        assert!(line.contains("+6.000"), "{line}");
+        let j = tr.to_json();
+        assert_eq!(j.get("window_start").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("reason").and_then(Json::as_str), Some("margin"));
+    }
+
+    #[test]
+    fn mean_prices_and_series_shape() {
+        let table = vec![[1.0, 2.0, 3.0, 4.0], [3.0, 2.0, 1.0, 0.0]];
+        let mean = mean_prices(&table);
+        assert_eq!(mean, [2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(mean_prices(&[]), [0.0; NUM_RESOURCES]);
+        let s = PriceSample {
+            t: 1,
+            price: mean,
+            max_price: 2.0,
+            utilization: [0.5, 0.25, 0.0, 1.0],
+        };
+        assert!((s.mean_price() - 2.0).abs() < 1e-12);
+        let doc = price_series_json(&[s]);
+        assert_eq!(doc.get("slots").and_then(Json::as_usize), Some(1));
+        let first = &doc.get("samples").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("t").and_then(Json::as_usize), Some(1));
+        assert!(first.get("price").unwrap().get("gpu").is_some());
+    }
+}

@@ -81,6 +81,15 @@ pub struct PlanResult {
     pub rounding_attempts: usize,
     /// Solver counters for this planning episode.
     pub solver: SolverStats,
+    /// Winning-plan θ-solves that used the internal (co-located,
+    /// closed-form) locality case. Pure derived bookkeeping for decision
+    /// provenance ([`crate::obs::provenance`]) — always computed, never
+    /// consulted by the planner itself.
+    pub internal_slots: usize,
+    /// Winning-plan θ-solves that used the external case (LP + rounding).
+    pub external_slots: usize,
+    /// Candidate slots the DP window covered (`start..horizon`).
+    pub slots_considered: usize,
 }
 
 /// Machine-eligibility masks (PD-ORS: all true; OASiS: disjoint sets).
@@ -322,6 +331,8 @@ pub fn plan_job_from(
     // because costs only relax forward, re-walking from the recorded
     // choices reproduces a valid optimal path.
     let mut slots: Vec<SlotPlacement> = Vec::new();
+    let mut internal_slots = 0usize;
+    let mut external_slots = 0usize;
     let mut v = units;
     let mut ti = best_ti as isize;
     while v > 0 && ti >= 0 {
@@ -330,6 +341,11 @@ pub fn plan_job_from(
             let th = theta_table[ti as usize][dv - 1]
                 .as_ref()
                 .expect("choice points at a computed θ");
+            if th.internal {
+                internal_slots += 1;
+            } else {
+                external_slots += 1;
+            }
             slots.push(SlotPlacement {
                 t: start + ti as usize,
                 placements: th.placements.clone(),
@@ -357,6 +373,9 @@ pub fn plan_job_from(
         completion,
         rounding_attempts,
         solver,
+        internal_slots,
+        external_slots,
+        slots_considered: window,
     })
 }
 
@@ -393,6 +412,12 @@ mod tests {
         assert!((plan.utility - job.utility_at(plan.completion)).abs() < 1e-9);
         assert!((plan.payoff - (plan.utility - plan.cost)).abs() < 1e-9);
         assert!(plan.solver.theta_solves > 0, "DP must account its θ-solves");
+        assert_eq!(
+            plan.internal_slots + plan.external_slots,
+            plan.schedule.slots.len(),
+            "every winning slot carries a locality case"
+        );
+        assert_eq!(plan.slots_considered, 10, "arrival-0 window spans the horizon");
     }
 
     #[test]

@@ -4,11 +4,12 @@
 //! admit iff the payoff λ_i is positive (complementary slackness), commit
 //! the allocation ledger, and let the exponential prices (Eq. (12)) rise.
 
-use crate::cluster::{AllocLedger, Cluster};
+use crate::cluster::{AllocLedger, Cluster, NUM_RESOURCES};
 use crate::jobs::{Job, Schedule};
+use crate::obs::provenance::DecisionTrace;
 use crate::util::Rng;
 
-use super::dp::{plan_job_from, plan_job_with, DpConfig, Masks, PlanResult};
+use super::dp::{plan_job_from, plan_job_with, slot_prices, DpConfig, Masks, PlanResult};
 use super::pricing::PricingParams;
 use super::solver::{GdeltaMode, PlannerScratch, SolverStats, ThetaConfig};
 
@@ -110,6 +111,13 @@ pub struct PdOrs {
     scratch: PlannerScratch,
     /// Admission log (one entry per arrival, in order).
     pub log: Vec<Admission>,
+    /// Provenance of the latest arrival decision (see
+    /// [`crate::obs::provenance`]): pure derived data from the plan the
+    /// decision was made on — zero RNG, no ledger reads beyond the
+    /// window size — captured unconditionally and *taken* by the engine
+    /// or daemon only when provenance emission is on. Replan/migrate
+    /// re-solves never touch it: provenance describes arrival decisions.
+    last_trace: Option<DecisionTrace>,
 }
 
 impl PdOrs {
@@ -136,6 +144,7 @@ impl PdOrs {
             rng: Rng::new(cfg.seed),
             scratch: PlannerScratch::new(),
             log: Vec::new(),
+            last_trace: None,
         }
     }
 
@@ -162,9 +171,39 @@ impl PdOrs {
         )
     }
 
+    /// Build the [`DecisionTrace`] of one arrival decision from the plan
+    /// it was made on (pure bookkeeping — no solver state is touched).
+    fn trace_of(job: &Job, horizon: usize, plan: Option<&PlanResult>) -> DecisionTrace {
+        let Some(p) = plan else {
+            return DecisionTrace::infeasible(job.id, horizon.saturating_sub(job.arrival));
+        };
+        let admitted = p.payoff > 0.0;
+        DecisionTrace {
+            job_id: job.id,
+            t: job.arrival,
+            decision: if admitted { "admit" } else { "reject" },
+            reason: if admitted { "margin" } else { "price" },
+            utility: p.utility,
+            price: p.cost,
+            margin: p.payoff,
+            window: Some((
+                p.schedule.slots.first().map_or(p.completion, |s| s.t),
+                p.completion,
+            )),
+            internal_slots: p.internal_slots,
+            external_slots: p.external_slots,
+            rounding_attempts: p.rounding_attempts,
+            slots_considered: p.slots_considered,
+            memo_hits: p.solver.memo_hits,
+            warm_hits: p.solver.warm_hits,
+            snapshot_delta_updates: p.solver.snapshot_delta_updates,
+        }
+    }
+
     /// Algorithm 1 steps 2–4: plan, admit iff λ > 0, commit the ledger.
     pub fn on_arrival(&mut self, job: &Job, ledger: &mut AllocLedger) -> Option<Schedule> {
         let plan = self.plan(job, ledger);
+        self.last_trace = Some(PdOrs::trace_of(job, ledger.horizon(), plan.as_ref()));
         match plan {
             Some(p) if p.payoff > 0.0 => {
                 ledger.commit(job, &p.schedule);
@@ -338,6 +377,18 @@ impl crate::sim::Scheduler for PdOrs {
     ) -> Option<Schedule> {
         PdOrs::migrate(self, job, t, ledger)
     }
+
+    fn take_decision_trace(&mut self) -> Option<DecisionTrace> {
+        self.last_trace.take()
+    }
+
+    fn price_sample(&self, ledger: &AllocLedger, t: usize) -> Option<[f64; NUM_RESOURCES]> {
+        Some(crate::obs::provenance::mean_prices(&slot_prices(
+            ledger,
+            &self.pricing,
+            t,
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -490,6 +541,50 @@ mod tests {
         }
         assert!(!admitted.is_empty(), "scenario admitted nothing");
         let _ = checked; // candidate count depends on the seed's arrival mix
+    }
+
+    #[test]
+    fn every_arrival_captures_a_decision_trace() {
+        use crate::sim::Scheduler as _;
+        let cluster = paper_cluster(8);
+        let mut rng = Rng::new(21);
+        let jobs = synthetic_jobs(&SynthConfig::paper(15, 14, MIX_DEFAULT), &mut rng);
+        let mut sched = PdOrs::new(PdOrsConfig::default(), &jobs, &cluster, 14);
+        let mut ledger = AllocLedger::new(&cluster, 14);
+        let mut admits = 0;
+        for job in &jobs {
+            let s = PdOrs::on_arrival(&mut sched, job, &mut ledger);
+            let tr =
+                sched.take_decision_trace().expect("every arrival leaves a trace");
+            assert_eq!(tr.job_id, job.id);
+            match s {
+                Some(committed) => {
+                    admits += 1;
+                    assert_eq!(tr.decision, "admit");
+                    assert_eq!(tr.reason, "margin");
+                    assert!(tr.margin > 0.0, "admitted with margin {}", tr.margin);
+                    assert!((tr.margin - (tr.utility - tr.price)).abs() < 1e-9);
+                    let (w0, w1) = tr.window.expect("admitted plans have a window");
+                    assert_eq!(Some(w0), committed.slots.first().map(|s| s.t));
+                    assert_eq!(Some(w1), committed.completion_time());
+                }
+                None => {
+                    assert_eq!(tr.decision, "reject");
+                    assert!(
+                        tr.reason == "price" || tr.reason == "infeasible",
+                        "rejection reason {:?}",
+                        tr.reason
+                    );
+                    if tr.reason == "price" {
+                        assert!(tr.margin <= 0.0);
+                    }
+                }
+            }
+            assert!(sched.take_decision_trace().is_none(), "traces are take-once");
+        }
+        assert!(admits > 0, "scenario admitted nothing");
+        let p = sched.price_sample(&ledger, 0).expect("PD-ORS prices slots");
+        assert!(p.iter().all(|x| x.is_finite() && *x >= 0.0));
     }
 
     #[test]

@@ -13,10 +13,13 @@
 //! an op-log through a freshly built core, verifying the recorded
 //! decisions as it goes, and resumes appending to the same log.
 
+use std::collections::BTreeMap;
+
 use crate::chaos::{ChurnEvent, ChurnSpec, ChurnTrace};
 use crate::err;
 use crate::jobs::Job;
 use crate::obs;
+use crate::obs::provenance::DecisionTrace;
 use crate::sched::registry::{SchedulerRegistry, SchedulerSpec};
 use crate::sched::replan::{run_migration_pass, run_replan_pass, ReplanReport};
 use crate::sched::solver::SolverStats;
@@ -139,6 +142,14 @@ pub struct ServiceCore {
     sum_ftf: f64,
     /// Core-side decision latency per submit, in microseconds.
     latencies_us: Vec<f64>,
+    /// Decision provenance, one trace per submitted job (the `explain`
+    /// wire op's store). Pure derived bookkeeping like `latencies_us`:
+    /// never consulted by the scheduling path, rebuilt identically by
+    /// op-log replay.
+    traces: BTreeMap<usize, DecisionTrace>,
+    /// `(decision, reason)` → count, fed to `metrics`/`metrics_prom` as
+    /// `dmlrs_decisions_total{decision,reason}`.
+    decision_counts: BTreeMap<(&'static str, &'static str), u64>,
     started: Timer,
     log: Option<OpLog>,
 }
@@ -195,6 +206,8 @@ impl ServiceCore {
             migrated: 0,
             sum_ftf: 0.0,
             latencies_us: Vec::new(),
+            traces: BTreeMap::new(),
+            decision_counts: BTreeMap::new(),
             started: Timer::start(),
             log: None,
         };
@@ -326,6 +339,24 @@ impl ServiceCore {
                     }
                     core.core.ledger_mut().set_available_from(machine, slot, true);
                 }
+                Op::Explain { slot, job_id } => {
+                    if slot != core.slot {
+                        return Err(err!(
+                            "op-log {path}: explain recorded at slot {slot} but \
+                             replay is at slot {}",
+                            core.slot
+                        ));
+                    }
+                    // a pure read: the original daemon answered it, so the
+                    // rebuilt provenance store must be able to as well
+                    let resp = core.explain_inner(job_id);
+                    if resp.get("ok") != Some(&Json::Bool(true)) {
+                        return Err(err!(
+                            "op-log {path}: explain for job {job_id} was served but \
+                             replay cannot answer it — provenance store drift"
+                        ));
+                    }
+                }
             }
         }
         if saw_header {
@@ -383,6 +414,7 @@ impl ServiceCore {
             Request::Replan => self.replan(),
             Request::MachineDown { machine } => self.machine_down(*machine),
             Request::MachineUp { machine } => self.machine_up(*machine),
+            Request::Explain { job_id } => self.explain(*job_id),
             Request::Shutdown => ok_response(vec![("draining", Json::Bool(true))]),
         }
     }
@@ -413,6 +445,24 @@ impl ServiceCore {
         let timer = Timer::start();
         let outcome = self.core.submit(self.sched.as_mut(), &job);
         self.latencies_us.push(timer.elapsed_us());
+        // Capture the decision trace (pricing schedulers hand one over;
+        // everyone else gets the "policy" fallback) before the outcome is
+        // consumed. Replay re-runs this path, so the provenance store and
+        // the reason counters rebuild identically under --recover.
+        let decision = match &outcome {
+            AdmissionOutcome::Admitted { .. } => "admit",
+            AdmissionOutcome::Rejected => "reject",
+            AdmissionOutcome::Deferred => "defer",
+        };
+        let mut trace = self
+            .sched
+            .take_decision_trace()
+            .filter(|tr| tr.job_id == job.id)
+            .unwrap_or_else(|| DecisionTrace::fallback(job.id, decision));
+        trace.t = job.arrival;
+        trace.decision = decision;
+        *self.decision_counts.entry((decision, trace.reason)).or_insert(0) += 1;
+        self.traces.insert(job.id, trace);
         match outcome {
             AdmissionOutcome::Admitted { schedule, completion, finish } => {
                 self.admitted += 1;
@@ -644,6 +694,42 @@ impl ServiceCore {
         ])
     }
 
+    /// Answer one `explain` query without journaling (shared by the wire
+    /// op and op-log replay): the job's decision trace as flat response
+    /// fields plus an `explain` "why" line.
+    fn explain_inner(&self, job_id: usize) -> Json {
+        let Some(trace) = self.traces.get(&job_id) else {
+            return err_response(&format!(
+                "no decision trace for job {job_id} (ids are daemon-assigned; \
+                 {} submitted so far)",
+                self.submitted
+            ));
+        };
+        let mut out = trace.to_json();
+        if let Json::Obj(m) = &mut out {
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("explain".to_string(), json::s(&trace.explain_line()));
+        }
+        out
+    }
+
+    /// The wire `explain` op: why was this job admitted/rejected?
+    /// Successful answers are journaled so `--recover` re-answers them
+    /// against the rebuilt provenance store — a read-only replay check
+    /// that the recovered daemon explains the same decisions.
+    pub fn explain(&mut self, job_id: usize) -> Json {
+        let resp = self.explain_inner(job_id);
+        if resp.get("ok") == Some(&Json::Bool(true)) {
+            if let Some(log) = self.log.as_mut() {
+                let op = Op::Explain { slot: self.slot, job_id };
+                if let Err(e) = log.append(&op) {
+                    eprintln!("warning: op-log append failed: {e}");
+                }
+            }
+        }
+        resp
+    }
+
     /// Run one elastic replan round at the current slot and fold the
     /// moved completions into the pending table. Shared by the policy
     /// ticks, the wire op, and op-log replay (which is why it does not
@@ -782,8 +868,13 @@ impl ServiceCore {
             ("memo_invalidated", json::num(sv.memo_invalidated as f64)),
             ("snapshot_delta_updates", json::num(sv.snapshot_delta_updates as f64)),
         ]);
+        let mut by_reason = std::collections::BTreeMap::new();
+        for (&(d, r), &v) in &self.decision_counts {
+            by_reason.insert(format!("{d}/{r}"), json::num(v as f64));
+        }
         ok_response(vec![
             ("decisions", json::num(s.count() as f64)),
+            ("decisions_by_reason", Json::Obj(by_reason)),
             ("solve_us", solve),
             ("solver", solver),
             ("uptime_secs", json::num(self.started.elapsed_secs())),
@@ -807,6 +898,16 @@ impl ServiceCore {
         ] {
             body.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
         }
+        body.push_str("# TYPE dmlrs_decisions_total counter\n");
+        for (&(d, r), &v) in &self.decision_counts {
+            body.push_str(&format!(
+                "dmlrs_decisions_total{{decision=\"{d}\",reason=\"{r}\"}} {v}\n"
+            ));
+        }
+        body.push_str(&format!(
+            "# TYPE dmlrs_log_warnings_total counter\ndmlrs_log_warnings_total {}\n",
+            crate::util::logger::warnings()
+        ));
         ok_response(vec![("prom", json::s(&body))])
     }
 
@@ -1157,5 +1258,58 @@ mod tests {
         assert_eq!(status.get("replan_rounds").unwrap().as_usize(), Some(0));
         let resp = fifo.apply(&Request::Replan);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{}", resp.to_string());
+    }
+
+    #[test]
+    fn explain_answers_for_submitted_jobs() {
+        let mut core = ServiceCore::new(cfg()).unwrap();
+        let jobs = core.config().workload.jobs(1);
+        for j in jobs.iter().take(3) {
+            core.submit(j.clone());
+        }
+        let resp = core.apply(&Request::Explain { job_id: 0 });
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+        assert!(resp.get("margin").unwrap().as_f64().is_some());
+        let line = resp.get("explain").unwrap().as_str().unwrap();
+        assert!(line.contains("job"), "{line}");
+        let reason = resp.get("reason").unwrap().as_str().unwrap();
+        assert!(
+            ["margin", "price", "infeasible"].contains(&reason),
+            "PD-ORS decisions carry a pricing reason, got {reason:?}"
+        );
+        // unknown ids are honest errors
+        let resp = core.apply(&Request::Explain { job_id: 99 });
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{}", resp.to_string());
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("99"));
+        // decision counters surface in both metrics flavors
+        let m = core.metrics_json();
+        assert!(m.get("decisions_by_reason").is_some());
+        let prom = core.apply(&Request::MetricsProm);
+        let body = prom.get("prom").unwrap().as_str().unwrap();
+        assert!(body.contains("dmlrs_decisions_total{decision="), "{body}");
+    }
+
+    #[test]
+    fn recover_replays_explain_ops() {
+        let path = tmp("explain");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut core = ServiceCore::new(cfg()).unwrap();
+            core.attach_log(&path).unwrap();
+            let jobs = core.config().workload.jobs(1);
+            core.submit(jobs[0].clone());
+            let resp = core.apply(&Request::Explain { job_id: 0 });
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            // failed lookups are not journaled
+            core.apply(&Request::Explain { job_id: 77 });
+            core.tick();
+        }
+        let (ops, _) = OpLog::read(&path).unwrap();
+        let explains = ops.iter().filter(|op| matches!(op, Op::Explain { .. })).count();
+        assert_eq!(explains, 1, "only the answered explain is journaled");
+        let mut rec = ServiceCore::recover(cfg(), &path).unwrap();
+        let resp = rec.apply(&Request::Explain { job_id: 0 });
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -44,6 +44,10 @@ pub enum Op {
     MachineDown { slot: usize, machine: usize, evicted: usize, migrated: usize },
     /// A wire-triggered machine rejoin at `slot`.
     MachineUp { slot: usize, machine: usize },
+    /// A served `explain` query at `slot`. A pure read — replay just
+    /// re-answers it against the rebuilt provenance store, proving the
+    /// recovered daemon explains the same decisions the original did.
+    Explain { slot: usize, job_id: usize },
 }
 
 impl Op {
@@ -89,6 +93,11 @@ impl Op {
                 ("op", json::s("machine_up")),
                 ("slot", json::num(*slot as f64)),
                 ("machine", json::num(*machine as f64)),
+            ]),
+            Op::Explain { slot, job_id } => json::obj(vec![
+                ("op", json::s("explain")),
+                ("slot", json::num(*slot as f64)),
+                ("job_id", json::num(*job_id as f64)),
             ]),
         }
     }
@@ -158,6 +167,17 @@ impl Op {
                     .get("machine")
                     .and_then(Json::as_f64)
                     .ok_or("machine_up op needs machine")?
+                    as usize,
+            }),
+            "explain" => Ok(Op::Explain {
+                slot: v
+                    .get("slot")
+                    .and_then(Json::as_f64)
+                    .ok_or("explain op needs slot")? as usize,
+                job_id: v
+                    .get("job_id")
+                    .and_then(Json::as_f64)
+                    .ok_or("explain op needs job_id")?
                     as usize,
             }),
             other => Err(format!("unknown op-log entry {other:?}")),
@@ -272,10 +292,12 @@ mod tests {
             })
             .unwrap();
             log.append(&Op::MachineUp { slot: 2, machine: 3 }).unwrap();
+            log.append(&Op::Explain { slot: 2, job_id: 0 }).unwrap();
         }
         let (ops, repaired) = OpLog::read(&p).unwrap();
         assert!(!repaired);
-        assert_eq!(ops.len(), 6);
+        assert_eq!(ops.len(), 7);
+        assert!(matches!(ops[6], Op::Explain { slot: 2, job_id: 0 }));
         assert!(matches!(ops[3], Op::Replan { slot: 1, replanned: 2 }));
         assert!(matches!(
             ops[4],

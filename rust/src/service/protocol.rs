@@ -13,6 +13,7 @@
 //! | `replan`   | —              | `slot`, `revisited`, `replanned`, `utility_delta` — force one elastic replan round now (see [`crate::sched::replan`]; rounds also run automatically with `--replan every:k`, and the op is an `"ok":false` error on a daemon serving without that flag) |
 //! | `machine_down` | `machine`  | `slot`, `machine`, `interrupted`, `migrated`, `evicted` — take one machine down now: its capacity leaves the ledger from the current slot and stranded started jobs are migrated or evicted (see [`crate::chaos`]) |
 //! | `machine_up` | `machine`    | `slot`, `machine` — bring a downed machine back from the current slot |
+//! | `explain`  | `job_id`       | the job's decision trace (`decision`, `reason`, `utility`, `price`, `margin`, window/locality/reuse fields) + `explain`, a human-readable "why" line — requires the daemon's provenance store (see [`crate::obs::provenance`]) |
 //! | `metrics_prom` | —          | `prom` — Prometheus text exposition (per-stage span histograms + decision counters); also served raw over HTTP by `--prom-addr` |
 //! | `debug_dump` | —            | `flight` — the telemetry flight recorder's ring of recent spans (see [`crate::obs::flight`]) |
 //! | `shutdown` | —              | `draining: true` (the daemon then drains and exits) |
@@ -38,6 +39,7 @@ pub enum Request {
     Replan,
     MachineDown { machine: usize },
     MachineUp { machine: usize },
+    Explain { job_id: usize },
     MetricsProm,
     DebugDump,
     Shutdown,
@@ -73,13 +75,21 @@ impl Request {
                     Ok(Request::MachineUp { machine })
                 }
             }
+            "explain" => {
+                let job_id = v
+                    .get("job_id")
+                    .and_then(Json::as_f64)
+                    .ok_or("explain needs a numeric \"job_id\" field")?
+                    as usize;
+                Ok(Request::Explain { job_id })
+            }
             "metrics_prom" => Ok(Request::MetricsProm),
             "debug_dump" => Ok(Request::DebugDump),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!(
                 "unknown op {other:?} (expected \
                  submit|tick|status|cluster|metrics|metrics_prom|debug_dump|\
-                 replan|machine_down|machine_up|shutdown)"
+                 replan|machine_down|machine_up|explain|shutdown)"
             )),
         }
     }
@@ -104,6 +114,10 @@ impl Request {
             Request::MachineUp { machine } => json::obj(vec![
                 ("op", json::s("machine_up")),
                 ("machine", json::num(*machine as f64)),
+            ]),
+            Request::Explain { job_id } => json::obj(vec![
+                ("op", json::s("explain")),
+                ("job_id", json::num(*job_id as f64)),
             ]),
             Request::MetricsProm => json::obj(vec![("op", json::s("metrics_prom"))]),
             Request::DebugDump => json::obj(vec![("op", json::s("debug_dump"))]),
@@ -143,6 +157,7 @@ mod tests {
             Request::Replan,
             Request::MachineDown { machine: 2 },
             Request::MachineUp { machine: 2 },
+            Request::Explain { job_id: 7 },
             Request::MetricsProm,
             Request::DebugDump,
             Request::Shutdown,
@@ -167,6 +182,9 @@ mod tests {
         assert!(Request::parse("{\"op\": \"machine_down\"}")
             .unwrap_err()
             .contains("machine"));
+        assert!(Request::parse("{\"op\": \"explain\"}")
+            .unwrap_err()
+            .contains("job_id"));
         assert!(Request::parse("{}").is_err());
     }
 

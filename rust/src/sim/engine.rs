@@ -36,8 +36,9 @@
 //! ```
 
 use crate::chaos::{ChurnEvent, ChurnSpec, ChurnTrace};
-use crate::cluster::{AllocLedger, Cluster};
+use crate::cluster::{AllocLedger, Cluster, NUM_RESOURCES};
 use crate::jobs::{Job, Schedule};
+use crate::obs::provenance::{self, DecisionTrace, PriceSample};
 use crate::sched::replan::{run_migration_pass, run_replan_pass, ReplanPolicy};
 use crate::sched::solver::SolverStats;
 
@@ -159,6 +160,21 @@ pub trait Scheduler {
     ) -> Option<Schedule> {
         None
     }
+
+    /// Take the [`DecisionTrace`] of the most recent `on_arrival` call
+    /// (take-once: the scheduler hands it over and forgets it). Pricing
+    /// schedulers capture one per arrival; the engine synthesizes a
+    /// `"policy"` fallback for everyone else, so the default is `None`.
+    fn take_decision_trace(&mut self) -> Option<DecisionTrace> {
+        None
+    }
+
+    /// The cluster's machine-mean dual price per resource at slot `t`, or
+    /// `None` for policies with no price concept (the engine then skips
+    /// the slot's [`SimEvent::PriceSample`]).
+    fn price_sample(&self, _ledger: &AllocLedger, _t: usize) -> Option<[f64; NUM_RESOURCES]> {
+        None
+    }
 }
 
 /// Builder for [`SimEngine`]; `jobs`, `cluster`, and `horizon` are
@@ -173,6 +189,7 @@ pub struct SimEngineBuilder<'a> {
     replan: ReplanPolicy,
     churn: ChurnSpec,
     churn_seed: u64,
+    provenance: bool,
 }
 
 impl<'a> SimEngineBuilder<'a> {
@@ -215,6 +232,17 @@ impl<'a> SimEngineBuilder<'a> {
         self
     }
 
+    /// Emit decision provenance ([`SimEvent::Decision`] per arrival,
+    /// [`SimEvent::PriceSample`] per slot) for this run regardless of the
+    /// global [`crate::obs::PROV`] flag. Default: off — the run also
+    /// emits provenance when the global flag is set. Provenance is
+    /// deterministically inert either way: zero RNG draws, no ledger
+    /// traffic, byte-identical schedules and metrics.
+    pub fn provenance(mut self, on: bool) -> Self {
+        self.provenance = on;
+        self
+    }
+
     /// Panics if a required field is missing.
     pub fn build(self) -> SimEngine<'a> {
         SimEngine {
@@ -225,6 +253,7 @@ impl<'a> SimEngineBuilder<'a> {
             replan: self.replan,
             churn: self.churn,
             churn_seed: self.churn_seed,
+            provenance: self.provenance,
         }
     }
 
@@ -244,6 +273,7 @@ pub struct SimEngine<'a> {
     replan: ReplanPolicy,
     churn: ChurnSpec,
     churn_seed: u64,
+    provenance: bool,
 }
 
 impl<'a> SimEngine<'a> {
@@ -268,22 +298,33 @@ impl<'a> SimEngine<'a> {
         core: &mut AdmissionCore,
         t: usize,
         job: &Job,
+        prov: bool,
     ) -> Option<(usize, f64, f64, f64)> {
         self.emit(collector, SimEvent::Arrival { t, job_id: job.id });
-        match core.submit(sched, job) {
-            AdmissionOutcome::Admitted { completion, finish, .. } => {
-                self.emit(collector, SimEvent::Admitted { t, job_id: job.id, completion });
-                finish.map(|f| (f.slot, f.utility, f.training_time, f.ftf))
-            }
+        let (decision, outcome_ev, finish) = match core.submit(sched, job) {
+            AdmissionOutcome::Admitted { completion, finish, .. } => (
+                "admit",
+                SimEvent::Admitted { t, job_id: job.id, completion },
+                finish.map(|f| (f.slot, f.utility, f.training_time, f.ftf)),
+            ),
             AdmissionOutcome::Rejected => {
-                self.emit(collector, SimEvent::Rejected { t, job_id: job.id });
-                None
+                ("reject", SimEvent::Rejected { t, job_id: job.id }, None)
             }
             AdmissionOutcome::Deferred => {
-                self.emit(collector, SimEvent::Deferred { t, job_id: job.id });
-                None
+                ("defer", SimEvent::Deferred { t, job_id: job.id }, None)
             }
+        };
+        self.emit(collector, outcome_ev);
+        if prov {
+            let mut trace = sched
+                .take_decision_trace()
+                .filter(|tr| tr.job_id == job.id)
+                .unwrap_or_else(|| DecisionTrace::fallback(job.id, decision));
+            trace.t = t;
+            trace.decision = decision;
+            self.emit(collector, SimEvent::Decision { trace });
         }
+        finish
     }
 
     /// Run the scheduler over the job list and return the aggregated
@@ -302,6 +343,10 @@ impl<'a> SimEngine<'a> {
         if trace.is_some() {
             core.set_churn_tracking(true);
         }
+        // Evaluated once per run: the builder switch (per-cell in sweeps)
+        // or the process-global flag. When false the provenance sites
+        // below are dead branches — no events, no extra work.
+        let prov = self.provenance || crate::obs::prov_on();
         let mut collector = ResultCollector::new();
         let mut next_arrival = 0usize;
         // arrival-driven completions, keyed by completion slot
@@ -314,6 +359,21 @@ impl<'a> SimEngine<'a> {
                 &mut collector,
                 SimEvent::SlotStart { t, active: core.active().len() },
             );
+
+            // Price & utilization sample at the slot boundary, before any
+            // churn/replan/arrival touches the ledger — the prices this
+            // slot's arrivals will be charged against.
+            if prov {
+                if let Some(price) = sched.price_sample(core.ledger(), t) {
+                    let sample = PriceSample {
+                        t,
+                        price,
+                        max_price: price.iter().fold(0.0f64, |a, &b| a.max(b)),
+                        utilization: provenance::utilization(core.ledger(), t),
+                    };
+                    self.emit(&mut collector, SimEvent::PriceSample { sample });
+                }
+            }
 
             // Machine churn: apply this slot's events to the availability
             // mask, then interrupt/migrate/evict admissions stranded on
@@ -423,7 +483,7 @@ impl<'a> SimEngine<'a> {
                 let job = &jobs[next_arrival];
                 next_arrival += 1;
                 if let Some((ct, utility, training_time, ftf)) =
-                    self.arrive(&mut collector, sched, &mut core, t, job)
+                    self.arrive(&mut collector, sched, &mut core, t, job, prov)
                 {
                     debug_assert!(ct < horizon, "committed schedule beyond horizon");
                     if ct < horizon {
@@ -467,7 +527,7 @@ impl<'a> SimEngine<'a> {
             next_arrival += 1;
             let t = job.arrival;
             if let Some((ct, utility, training_time, ftf)) =
-                self.arrive(&mut collector, sched, &mut core, t, job)
+                self.arrive(&mut collector, sched, &mut core, t, job, prov)
             {
                 self.emit(
                     &mut collector,
@@ -635,5 +695,39 @@ mod tests {
     fn builder_requires_cluster() {
         let jobs: Vec<Job> = Vec::new();
         let _ = SimEngine::builder().jobs(&jobs).horizon(5).build();
+    }
+
+    #[test]
+    fn provenance_switch_synthesizes_fallback_traces() {
+        let cluster = Cluster::homogeneous(1, ResVec::new([16.0, 32.0, 64.0, 32.0]));
+        let mut job = test_job(0);
+        job.epochs = 1;
+        job.samples = 1000.0;
+        let jobs = [job];
+
+        // Off by default: no decisions, no price samples.
+        let off = SimEngine::builder()
+            .jobs(&jobs)
+            .cluster(&cluster)
+            .horizon(10)
+            .run(&mut Greedy1);
+        assert!(off.decisions.is_empty() && off.prices.is_empty());
+
+        // On: one fallback trace per arrival (Greedy1 reports neither
+        // traces nor prices, so the price series stays empty).
+        let on = SimEngine::builder()
+            .jobs(&jobs)
+            .cluster(&cluster)
+            .horizon(10)
+            .provenance(true)
+            .run(&mut Greedy1);
+        assert_eq!(on.decisions.len(), 1);
+        let tr = &on.decisions[0];
+        assert_eq!((tr.job_id, tr.decision, tr.reason), (0, "defer", "policy"));
+        assert!(on.prices.is_empty());
+
+        // Provenance never perturbs the run itself.
+        assert_eq!(off.admitted, on.admitted);
+        assert_eq!(off.outcomes, on.outcomes);
     }
 }

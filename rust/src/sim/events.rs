@@ -10,6 +10,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::obs::provenance::{DecisionTrace, PriceSample};
 use crate::sched::solver::SolverStats;
 
 /// One typed simulation event. `t` is the slot index; `job_id` refers to
@@ -72,6 +73,13 @@ pub enum SimEvent {
     /// Cumulative solver counters, polled from the scheduler and emitted
     /// once at the end of the run (right before [`SimEvent::HorizonEnd`]).
     Solver { stats: SolverStats },
+    /// Decision provenance of one arrival (emitted right after the
+    /// Admitted/Rejected/Deferred event, only when provenance is on).
+    Decision { trace: DecisionTrace },
+    /// Cluster price & utilization sample at a slot boundary (emitted
+    /// right after [`SimEvent::SlotStart`], only when provenance is on
+    /// and the scheduler prices).
+    PriceSample { sample: PriceSample },
     /// Emitted once after the last slot (and the late-arrival flush).
     HorizonEnd { horizon: usize },
 }
@@ -95,6 +103,8 @@ impl SimEvent {
             SimEvent::Migrated { .. } => "migrated",
             SimEvent::Evicted { .. } => "evicted",
             SimEvent::Solver { .. } => "solver",
+            SimEvent::Decision { .. } => "decision",
+            SimEvent::PriceSample { .. } => "price_sample",
             SimEvent::HorizonEnd { .. } => "horizon_end",
         }
     }
@@ -145,6 +155,14 @@ pub struct SimResult {
     /// that differ solely in caching legitimately differ here, so parity
     /// comparisons go through [`SimResult::parity_eq`].
     pub solver: SolverStats,
+    /// Decision provenance, one trace per arrival — empty unless
+    /// provenance was on for the run. Diagnostic only (excluded from
+    /// [`SimResult::parity_eq`]).
+    pub decisions: Vec<DecisionTrace>,
+    /// Per-slot cluster price & utilization series — empty unless
+    /// provenance was on and the scheduler prices. Diagnostic only
+    /// (excluded from [`SimResult::parity_eq`]).
+    pub prices: Vec<PriceSample>,
 }
 
 impl SimResult {
@@ -169,6 +187,8 @@ impl SimResult {
             migrated: 0,
             ftf,
             solver: SolverStats::default(),
+            decisions: Vec::new(),
+            prices: Vec::new(),
         }
     }
 
@@ -203,6 +223,8 @@ pub struct ResultCollector {
     evicted: usize,
     migrated: usize,
     solver: SolverStats,
+    decisions: Vec<DecisionTrace>,
+    prices: Vec<PriceSample>,
 }
 
 impl ResultCollector {
@@ -218,6 +240,8 @@ impl ResultCollector {
         res.evicted = self.evicted;
         res.migrated = self.migrated;
         res.solver = self.solver;
+        res.decisions = self.decisions;
+        res.prices = self.prices;
         res
     }
 }
@@ -287,6 +311,8 @@ impl SimObserver for ResultCollector {
                 }
             }
             SimEvent::Solver { stats } => self.solver = stats,
+            SimEvent::Decision { trace } => self.decisions.push(trace),
+            SimEvent::PriceSample { sample } => self.prices.push(sample),
             SimEvent::SlotStart { .. }
             | SimEvent::Rejected { .. }
             | SimEvent::Deferred { .. }
@@ -392,6 +418,13 @@ impl SimObserver for TraceObserver {
                 stats.lp_pivots,
                 stats.rounding_attempts
             ),
+            SimEvent::Decision { trace } => trace.explain_line(),
+            SimEvent::PriceSample { sample } => format!(
+                "t={:3} prices: mean {:.3}, max {:.3}",
+                sample.t,
+                sample.mean_price(),
+                sample.max_price
+            ),
             SimEvent::HorizonEnd { horizon } => format!("horizon end (T={horizon})"),
         };
         self.lines.push(line);
@@ -459,6 +492,7 @@ mod tests {
             lp_solves: 25,
             lp_pivots: 300,
             rounding_attempts: 80,
+            ..Default::default()
         };
         for ev in [
             SimEvent::Begin { jobs: 0, horizon: 4 },
@@ -474,6 +508,36 @@ mod tests {
         other.solver = SolverStats::default();
         assert!(res.parity_eq(&other));
         assert_ne!(res, other);
+    }
+
+    #[test]
+    fn collector_folds_provenance_events() {
+        let mut c = ResultCollector::new();
+        let trace = DecisionTrace::fallback(7, "reject");
+        let sample = PriceSample {
+            t: 2,
+            price: [1.0, 0.5, 0.0, 0.25],
+            max_price: 1.0,
+            utilization: [0.5; 4],
+        };
+        for ev in [
+            SimEvent::Begin { jobs: 1, horizon: 4 },
+            SimEvent::PriceSample { sample },
+            SimEvent::Arrival { t: 2, job_id: 7 },
+            SimEvent::Rejected { t: 2, job_id: 7 },
+            SimEvent::Decision { trace },
+            SimEvent::HorizonEnd { horizon: 4 },
+        ] {
+            c.on_event(&ev);
+        }
+        let res = c.into_result("test".into());
+        assert_eq!(res.decisions, vec![trace]);
+        assert_eq!(res.prices, vec![sample]);
+        // provenance stays out of the parity contract
+        let mut bare = res.clone();
+        bare.decisions.clear();
+        bare.prices.clear();
+        assert!(res.parity_eq(&bare));
     }
 
     #[test]

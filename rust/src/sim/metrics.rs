@@ -101,6 +101,8 @@ impl SimObserver for StreamingMetrics {
             | SimEvent::Deferred { .. }
             | SimEvent::MachineDown { .. }
             | SimEvent::MachineRejoined { .. }
+            | SimEvent::Decision { .. }
+            | SimEvent::PriceSample { .. }
             | SimEvent::HorizonEnd { .. } => {}
         }
     }
@@ -136,6 +138,8 @@ mod tests {
             migrated: 0,
             ftf: 1.0,
             solver: SolverStats::default(),
+            decisions: Vec::new(),
+            prices: Vec::new(),
         }
     }
 

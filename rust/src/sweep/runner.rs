@@ -171,12 +171,17 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
     let horizon = sc.workload.horizon;
     let mut sched = reg.build_named(&sc.scheduler, sc.seed, &jobs, &cluster, horizon)?;
     let mut streaming = StreamingMetrics::new();
+    // Provenance is on for every cell (per-run builder switch, not the
+    // global flag — worker threads must not race on process state): the
+    // rejection-reason breakdown below comes from the decision traces,
+    // and provenance never perturbs the schedules themselves.
     let result = SimEngine::builder()
         .jobs(&jobs)
         .cluster(&cluster)
         .horizon(horizon)
         .replan(sc.replan)
         .churn(sc.churn.clone(), sc.seed)
+        .provenance(true)
         .observer(&mut streaming)
         .run(sched.as_mut());
     debug_assert_eq!(streaming.admitted, result.admitted, "observer drift");
@@ -192,6 +197,33 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         stage_us[i] = stages_after[i].1.saturating_sub(stages_before[i].1) as f64;
     }
     let ratio = |num: u64, den: u64| if den == 0 { 0.0 } else { num as f64 / den as f64 };
+    let rej_price = result
+        .decisions
+        .iter()
+        .filter(|d| d.decision == "reject" && d.reason == "price")
+        .count();
+    let rej_infeasible = result
+        .decisions
+        .iter()
+        .filter(|d| d.decision == "reject" && d.reason == "infeasible")
+        .count();
+    let margins: Vec<f64> = result
+        .decisions
+        .iter()
+        .filter(|d| d.decision == "admit")
+        .map(|d| d.margin)
+        .collect();
+    let mean_admit_margin = if margins.is_empty() {
+        0.0
+    } else {
+        margins.iter().sum::<f64>() / margins.len() as f64
+    };
+    let mean_price_level = if result.prices.is_empty() {
+        0.0
+    } else {
+        result.prices.iter().map(|p| p.mean_price()).sum::<f64>()
+            / result.prices.len() as f64
+    };
     let record = CellRecord {
         key: sc.key(),
         scheduler: sc.scheduler.clone(),
@@ -207,6 +239,10 @@ pub fn run_cell(reg: &SchedulerRegistry, sc: &Scenario) -> Result<(SimResult, Ce
         ftf: result.ftf,
         total_utility: result.total_utility,
         median_training_time: median_training_time(&result),
+        rej_price,
+        rej_infeasible,
+        mean_admit_margin,
+        mean_price_level,
         theta_solves: result.solver.theta_solves,
         memo_hits: result.solver.memo_hits,
         lp_solves: result.solver.lp_solves,
@@ -413,11 +449,18 @@ mod tests {
             churn: crate::chaos::ChurnSpec::None,
         };
         let reg = SchedulerRegistry::builtin();
-        let (result, record) = run_cell(&reg, &sc).unwrap();
+        let (mut result, record) = run_cell(&reg, &sc).unwrap();
         let jobs = sc.workload.jobs(sc.seed);
         let cluster = sc.cluster.build();
         let mut direct = reg.build_named("fifo", 1, &jobs, &cluster, 8).unwrap();
         let expect = simulate(&jobs, &cluster, 8, direct.as_mut());
+        // run_cell runs with provenance on; the bare simulate() does not —
+        // one fallback trace per arrival is the only allowed difference
+        assert!(result.parity_eq(&expect));
+        assert_eq!(result.decisions.len(), jobs.len());
+        assert!(expect.decisions.is_empty());
+        result.decisions.clear();
+        result.prices.clear();
         assert_eq!(result, expect);
         assert_eq!(record.total_utility, expect.total_utility);
         assert_eq!(record.jobs, jobs.len());

@@ -44,6 +44,17 @@ pub struct CellRecord {
     pub ftf: f64,
     pub total_utility: f64,
     pub median_training_time: f64,
+    /// Rejection-reason breakdown from decision provenance (the sweep
+    /// runner runs every cell with provenance on; deterministic, so part
+    /// of the metrics line): rejections because the dual prices beat the
+    /// utility, and rejections because no feasible θ-schedule existed.
+    pub rej_price: usize,
+    pub rej_infeasible: usize,
+    /// Mean λ margin (utility − price) over admitted jobs (0 when none).
+    pub mean_admit_margin: f64,
+    /// Mean scalar price level over the cell's slot samples (0 for
+    /// non-pricing policies).
+    pub mean_price_level: f64,
     /// Solver diagnostics (zeros for non-θ policies; see
     /// [`crate::sched::SolverStats`]).
     pub theta_solves: u64,
@@ -89,6 +100,10 @@ impl CellRecord {
             ("ftf", json::num(self.ftf)),
             ("total_utility", json::num(self.total_utility)),
             ("median_training_time", json::num(self.median_training_time)),
+            ("rej_price", json::num(self.rej_price as f64)),
+            ("rej_infeasible", json::num(self.rej_infeasible as f64)),
+            ("mean_admit_margin", json::num(self.mean_admit_margin)),
+            ("mean_price_level", json::num(self.mean_price_level)),
         ]
     }
 
@@ -160,6 +175,11 @@ impl CellRecord {
             ftf: opt_f64(v, "ftf"),
             total_utility: num_field("total_utility")?,
             median_training_time: num_field("median_training_time")?,
+            // tolerate pre-provenance lines without the reason breakdown
+            rej_price: opt_u64(v, "rej_price") as usize,
+            rej_infeasible: opt_u64(v, "rej_infeasible") as usize,
+            mean_admit_margin: opt_f64(v, "mean_admit_margin"),
+            mean_price_level: opt_f64(v, "mean_price_level"),
             // tolerate older/foreign lines without the diagnostic fields
             theta_solves: opt_u64(v, "theta_solves"),
             memo_hits: opt_u64(v, "memo_hits"),
@@ -219,6 +239,12 @@ pub struct SummaryRow {
     pub total_replanned: usize,
     pub total_evicted: usize,
     pub total_migrated: usize,
+    /// Totals across seeds for the rejection-reason breakdown.
+    pub total_rej_price: usize,
+    pub total_rej_infeasible: usize,
+    /// Means across seeds of the provenance economics.
+    pub mean_admit_margin: f64,
+    pub mean_price_level: f64,
     pub total_wall_secs: f64,
 }
 
@@ -337,6 +363,12 @@ impl ResultStore {
                     total_replanned: rs.iter().map(|r| r.replanned).sum(),
                     total_evicted: rs.iter().map(|r| r.evicted).sum(),
                     total_migrated: rs.iter().map(|r| r.migrated).sum(),
+                    total_rej_price: rs.iter().map(|r| r.rej_price).sum(),
+                    total_rej_infeasible: rs.iter().map(|r| r.rej_infeasible).sum(),
+                    mean_admit_margin: rs.iter().map(|r| r.mean_admit_margin).sum::<f64>()
+                        / n,
+                    mean_price_level: rs.iter().map(|r| r.mean_price_level).sum::<f64>()
+                        / n,
                     total_wall_secs: rs.iter().map(|r| r.wall_secs).sum(),
                 }
             })
@@ -364,6 +396,10 @@ mod tests {
             ftf: 1.25,
             total_utility: utility,
             median_training_time: 4.5,
+            rej_price: 2,
+            rej_infeasible: 1,
+            mean_admit_margin: 3.5,
+            mean_price_level: 0.8,
             theta_solves: 200,
             memo_hits: 150,
             lp_solves: 50,
@@ -415,6 +451,11 @@ mod tests {
         assert!(!r.metrics_line().contains("snapshot_delta_updates"));
         assert!(!r.metrics_line().contains("us_"));
         assert!(r.metrics_line().contains("total_utility"));
+        // the reason breakdown is deterministic and part of the metrics line
+        assert!(r.metrics_line().contains("rej_price"));
+        assert!(r.metrics_line().contains("rej_infeasible"));
+        assert!(r.metrics_line().contains("mean_admit_margin"));
+        assert!(r.metrics_line().contains("mean_price_level"));
     }
 
     #[test]
@@ -479,6 +520,10 @@ mod tests {
         assert_eq!(rows[0].total_replanned, 8);
         assert_eq!(rows[0].total_evicted, 4);
         assert_eq!(rows[0].total_migrated, 12);
+        assert_eq!(rows[0].total_rej_price, 8);
+        assert_eq!(rows[0].total_rej_infeasible, 4);
+        assert!((rows[0].mean_admit_margin - 3.5).abs() < 1e-12);
+        assert!((rows[0].mean_price_level - 0.8).abs() < 1e-12);
         let _ = std::fs::remove_file(&path_a);
         let _ = std::fs::remove_file(&path_b);
     }

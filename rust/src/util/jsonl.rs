@@ -48,8 +48,8 @@ pub fn load_tolerant(path: &str) -> Result<JsonlLoad, String> {
                 // Only the final line (nothing but whitespace after it)
                 // gets the crashed-writer tolerance.
                 if text[offset..].trim().is_empty() {
-                    eprintln!(
-                        "warning: {path}:{lineno}: dropping truncated final \
+                    crate::log_warn!(
+                        "{path}:{lineno}: dropping truncated final \
                          line ({e}); truncating file to last complete record"
                     );
                     truncate_to(path, start as u64)?;

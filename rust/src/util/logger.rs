@@ -1,7 +1,7 @@
 //! Minimal leveled logger (the `log` facade is vendored but a full env
 //! logger is not; this keeps the hot path free of locking when disabled).
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -29,6 +29,16 @@ impl Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Process-wide count of warning-or-worse log calls. Counted even when
+/// the level suppresses the output, so a quiet run still reports how
+/// many problems it swallowed (surfaced as `dmlrs_log_warnings_total`).
+static WARNINGS: AtomicU64 = AtomicU64::new(0);
+
+/// Total warning-or-worse log calls since process start.
+pub fn warnings() -> u64 {
+    WARNINGS.load(Ordering::Relaxed)
+}
 
 /// Wire the logger to the outside world: an explicit `--log-level` value
 /// wins, else the `DMLRS_LOG` environment variable, else the Info
@@ -71,6 +81,9 @@ pub fn enabled(l: Level) -> bool {
 }
 
 pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if l <= Level::Warn {
+        WARNINGS.fetch_add(1, Ordering::Relaxed);
+    }
     if enabled(l) {
         let tag = match l {
             Level::Error => "ERROR",
@@ -125,5 +138,17 @@ mod tests {
         let err = init_from(Some("loud")).unwrap_err();
         assert!(err.contains("--log-level"));
         assert!(err.contains("loud"));
+    }
+
+    #[test]
+    fn warnings_are_counted_even_when_suppressed() {
+        let before = warnings();
+        set_level(Level::Error); // Warn output suppressed...
+        log(Level::Warn, format_args!("suppressed but counted"));
+        log(Level::Error, format_args!("errors count too"));
+        log(Level::Info, format_args!("info does not"));
+        set_level(Level::Info);
+        // >= : other tests may log warnings concurrently
+        assert!(warnings() - before >= 2, "warn+error must both count");
     }
 }

@@ -76,7 +76,8 @@ impl TraceEvents {
 }
 
 /// Parse a trace snippet, skipping malformed rows (see module docs).
-/// Emits one `warning:` line with the skip count when any row was bad.
+/// Emits one counted `WARN` log line (see [`crate::util::logger`]) with
+/// the skip count when any row was bad.
 pub fn parse_trace_csv(text: &str) -> TraceEvents {
     let mut ev = TraceEvents::default();
     for line in text.lines() {
@@ -96,8 +97,8 @@ pub fn parse_trace_csv(text: &str) -> TraceEvents {
         }
     }
     if ev.skipped > 0 {
-        eprintln!(
-            "warning: google trace: skipped {} malformed row{} ({} parsed)",
+        crate::log_warn!(
+            "google trace: skipped {} malformed row{} ({} parsed)",
             ev.skipped,
             if ev.skipped == 1 { "" } else { "s" },
             ev.rows.len()

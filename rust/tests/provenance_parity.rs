@@ -1,0 +1,283 @@
+//! The decision-provenance inertness contract (PR 9): capturing per-job
+//! `DecisionTrace`s and the per-slot cluster price series is
+//! byte-invisible to every deterministic artifact — `SimResult` across
+//! the scheduler zoo with replan and churn active, the sweep runner's
+//! per-cell rejection-reason fields across worker counts, and the
+//! daemon's `explain` answers across an op-log recovery.
+//!
+//! The obs flag word is process-global; every test here takes `LOCK`
+//! (poison-tolerant, so one failing test doesn't cascade) and restores
+//! flags-off state before releasing it.
+
+use std::sync::Mutex;
+
+use dmlrs::chaos::ChurnSpec;
+use dmlrs::cluster::Cluster;
+use dmlrs::jobs::Job;
+use dmlrs::obs;
+use dmlrs::sched::registry::{SchedulerRegistry, SchedulerSpec, ZOO};
+use dmlrs::sched::replan::ReplanPolicy;
+use dmlrs::service::{ServiceConfig, ServiceCore};
+use dmlrs::sim::{SimEngine, SimResult};
+use dmlrs::sweep::{run_matrix, ClusterSpec, ScenarioMatrix, WorkloadSpec};
+use dmlrs::util::Rng;
+use dmlrs::workload::synthetic::{paper_cluster, paper_cluster_skewed};
+use dmlrs::workload::{synthetic_jobs, SynthConfig, MIX_DEFAULT};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+const JOBS: usize = 12;
+const HORIZON: usize = 14;
+const WORKLOAD_SEED: u64 = 21;
+const SCHED_SEED: u64 = 4;
+
+fn workload() -> Vec<Job> {
+    let mut rng = Rng::new(WORKLOAD_SEED);
+    synthetic_jobs(&SynthConfig::paper(JOBS, HORIZON, MIX_DEFAULT), &mut rng)
+}
+
+fn clusters() -> Vec<(&'static str, Cluster)> {
+    vec![
+        ("homogeneous", paper_cluster(8)),
+        ("skewed", paper_cluster_skewed(8, 2.0)),
+    ]
+}
+
+/// Run `key` through the engine with replan + churn active (the busiest
+/// code path — evictions, migrations, and re-solves all interleave with
+/// the admission decisions being traced).
+fn run(key: &str, cluster: &Cluster) -> SimResult {
+    let reg = SchedulerRegistry::builtin();
+    let jobs = workload();
+    let spec = SchedulerSpec::new(key).with_seed(SCHED_SEED);
+    let mut sched = reg.build(&spec, &jobs, cluster, HORIZON).unwrap();
+    SimEngine::builder()
+        .jobs(&jobs)
+        .cluster(cluster)
+        .horizon(HORIZON)
+        .replan(ReplanPolicy::Every(3))
+        .churn(ChurnSpec::parse("down@3:1,up@7:1").unwrap(), SCHED_SEED)
+        .run(sched.as_mut())
+}
+
+#[test]
+fn provenance_is_byte_inert_across_the_zoo() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for (shape, cluster) in clusters() {
+        for key in ZOO {
+            obs::set_flags(0);
+            let off = run(key, &cluster);
+
+            obs::set_flags(obs::PROV);
+            let mut on = run(key, &cluster);
+            obs::set_flags(0);
+
+            // off: the provenance channel stays completely silent
+            assert!(off.decisions.is_empty(), "{key} on {shape}");
+            assert!(off.prices.is_empty(), "{key} on {shape}");
+
+            // on: every decision is explained, and the explanation is
+            // internally consistent with Algorithm 1
+            assert!(
+                !on.decisions.is_empty(),
+                "{key} on {shape}: every arrival must leave a trace"
+            );
+            for d in &on.decisions {
+                match d.decision {
+                    "admit" => assert!(
+                        d.reason != "price" && d.reason != "infeasible",
+                        "{key} on {shape}: job {} admitted with a rejection \
+                         reason {:?}",
+                        d.job_id,
+                        d.reason
+                    ),
+                    "reject" => assert!(
+                        d.reason == "price"
+                            || d.reason == "infeasible"
+                            || d.reason == "policy",
+                        "{key} on {shape}: job {} rejected without a \
+                         machine-readable reason: {:?}",
+                        d.job_id,
+                        d.reason
+                    ),
+                    "defer" => {}
+                    other => panic!("{key} on {shape}: unknown decision {other:?}"),
+                }
+                assert!(d.margin.is_finite(), "{key} on {shape}: job {}", d.job_id);
+            }
+            if key == "pd-ors" {
+                assert_eq!(
+                    on.decisions.len(),
+                    JOBS,
+                    "pd-ors on {shape}: one trace per arrival"
+                );
+                for d in &on.decisions {
+                    match d.decision {
+                        "admit" => {
+                            assert_eq!(d.reason, "margin", "job {}", d.job_id);
+                            assert!(
+                                d.margin > 0.0,
+                                "job {} admitted at non-positive margin {}",
+                                d.job_id,
+                                d.margin
+                            );
+                        }
+                        "reject" => assert!(
+                            d.reason == "price" || d.reason == "infeasible",
+                            "job {}: {:?}",
+                            d.job_id,
+                            d.reason
+                        ),
+                        other => panic!("pd-ors never defers, got {other:?}"),
+                    }
+                }
+                assert!(
+                    on.decisions.iter().any(|d| d.decision == "admit"),
+                    "pd-ors on {shape}: the workload admits something"
+                );
+                // the dual-price series: one sample per slot, all finite
+                assert_eq!(on.prices.len(), HORIZON, "pd-ors on {shape}");
+                for p in &on.prices {
+                    assert!(
+                        p.max_price.is_finite() && p.max_price >= 0.0,
+                        "pd-ors on {shape}: t={}",
+                        p.t
+                    );
+                    assert!(p.mean_price().is_finite(), "pd-ors on {shape}: t={}", p.t);
+                }
+            } else {
+                // only pricing schedulers expose a dual-price sample
+                assert!(on.prices.is_empty(), "{key} on {shape}");
+            }
+
+            // byte-identity: with the provenance channel cleared, the two
+            // results — outcomes, utilities, ftf, churn/replan counters,
+            // AND the solver diagnostic counters — are fully equal
+            on.decisions.clear();
+            on.prices.clear();
+            assert_eq!(off, on, "{key} on {shape}: provenance must be inert");
+        }
+    }
+}
+
+#[test]
+fn sweep_reason_fields_are_worker_count_invariant() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_flags(0);
+    let cell_jobs = 10usize;
+    let matrix = ScenarioMatrix::new()
+        .schedulers(&["pd-ors", "fifo"])
+        .workload(WorkloadSpec::synthetic(cell_jobs, 10, 0))
+        .cluster(ClusterSpec::homogeneous(5))
+        .seeds(2);
+
+    let fields = |outcomes: &[dmlrs::sweep::CellOutcome]| -> Vec<(String, usize, usize, u64, u64)> {
+        let mut rows: Vec<_> = outcomes
+            .iter()
+            .map(|o| {
+                (
+                    format!(
+                        "{}/{}/{}/{}",
+                        o.record.scheduler, o.record.workload, o.record.cluster, o.record.seed
+                    ),
+                    o.record.rej_price,
+                    o.record.rej_infeasible,
+                    o.record.mean_admit_margin.to_bits(),
+                    o.record.mean_price_level.to_bits(),
+                )
+            })
+            .collect();
+        rows.sort();
+        rows
+    };
+
+    let serial = run_matrix(&matrix, 1, None).unwrap();
+    let parallel = run_matrix(&matrix, 4, None).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    assert_eq!(
+        fields(&serial),
+        fields(&parallel),
+        "rejection-reason fields are deterministic per cell, not per worker count"
+    );
+
+    // every rejection in a pd-ors cell carries a machine-readable reason
+    for o in &serial {
+        if o.record.scheduler == "pd-ors" {
+            assert_eq!(
+                o.record.admitted + o.record.rej_price + o.record.rej_infeasible,
+                cell_jobs,
+                "cell {}/{}/{}: unexplained rejections",
+                o.record.workload,
+                o.record.cluster,
+                o.record.seed
+            );
+            if o.record.admitted > 0 {
+                assert!(
+                    o.record.mean_admit_margin > 0.0,
+                    "admissions happen at positive margin"
+                );
+            }
+            assert!(o.record.mean_price_level >= 0.0);
+        } else {
+            assert_eq!(o.record.rej_price, 0, "fifo has no pricing rejections");
+        }
+    }
+}
+
+#[test]
+fn daemon_explain_survives_oplog_recovery() {
+    let _g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_flags(0);
+    let path = std::env::temp_dir()
+        .join(format!("dmlrs_prov_parity_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let _ = std::fs::remove_file(&path);
+
+    let horizon = 12usize;
+    let cfg = || ServiceConfig {
+        scheduler: SchedulerSpec::new("pd-ors")
+            .with_seed(5)
+            .with_replan(ReplanPolicy::Every(3)),
+        cluster: ClusterSpec::homogeneous(6),
+        workload: WorkloadSpec::synthetic(16, 12, 0),
+        churn: ChurnSpec::None,
+    };
+    let (report, explains) = {
+        let mut core = ServiceCore::new(cfg()).unwrap();
+        core.attach_log(&path).unwrap();
+        let jobs = core.config().workload.jobs(5);
+        let mut next = 0usize;
+        for t in 0..horizon {
+            while next < jobs.len() && jobs[next].arrival <= t {
+                core.submit(jobs[next].clone());
+                next += 1;
+            }
+            core.tick();
+        }
+        let explains: Vec<String> =
+            (0..next).map(|id| core.explain(id).to_string()).collect();
+        (core.report(), explains)
+    };
+    assert!(!explains.is_empty());
+    assert!(
+        explains.iter().any(|e| e.contains("\"decision\":\"admit\"")),
+        "at least one admission is explained"
+    );
+    if report.rejected > 0 {
+        assert!(
+            explains.iter().any(|e| e.contains("\"decision\":\"reject\"")),
+            "every rejection is explained"
+        );
+    }
+
+    // replay rebuilds the provenance store: identical report, identical
+    // answers, and the journaled explain ops themselves replay cleanly
+    let mut rec = ServiceCore::recover(cfg(), &path).unwrap();
+    assert_eq!(rec.report(), report, "replay must rebuild identical state");
+    for (id, want) in explains.iter().enumerate() {
+        let got = rec.explain(id).to_string();
+        assert_eq!(&got, want, "job {id}: explain must survive recovery");
+    }
+    let _ = std::fs::remove_file(&path);
+}

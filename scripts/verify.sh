@@ -81,16 +81,18 @@ if [ "${UNCACHED_HITS:-0}" -ne 0 ]; then
     exit 1
 fi
 
-echo "== service bench (admission daemon + open-loop load + prom scrape) =="
-# Boot the daemon on an ephemeral port (with the Prometheus HTTP
-# exposition on a second ephemeral port), fire a quick load burst at it,
-# scrape /metrics into PROM_snapshot.txt, then drain over the wire.
-# Fails if the daemon does not come up, the report lacks the
-# latency/throughput fields, or the exposition lacks the stage histogram.
+echo "== service bench (1024-machine admission daemon + open-loop load + prom scrape) =="
+# Boot the daemon at service scale (a 1024-machine ledger, the same
+# cluster size as the admission bench below) on an ephemeral port (with
+# the Prometheus HTTP exposition on a second ephemeral port), fire a
+# quick load burst at it, scrape /metrics into PROM_snapshot.txt, then
+# drain over the wire. Fails if the daemon does not come up, the report
+# lacks the latency/throughput fields, or the exposition lacks the stage
+# histogram / decision counters.
 SERVE_LOG=target/serve_bench.log
 rm -f ../BENCH_service.json ../PROM_snapshot.txt "$SERVE_LOG"
 "$BIN" serve --addr 127.0.0.1:0 --prom-addr 127.0.0.1:0 \
-    --machines 8 --jobs 24 --horizon 12 --seed 1 \
+    --machines 1024 --jobs 24 --horizon 12 --seed 1 \
     >"$SERVE_LOG" 2>&1 &
 SERVE_PID=$!
 ADDR=""
@@ -121,7 +123,8 @@ printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
 cat <&3 > ../PROM_snapshot.txt
 exec 3<&- 3>&-
 for want in 'dmlrs_stage_duration_us_bucket' 'dmlrs_stage_max_us' \
-            'stage="admission_commit"' 'dmlrs_submitted_total'; do
+            'stage="admission_commit"' 'dmlrs_submitted_total' \
+            'dmlrs_decisions_total{decision=' 'dmlrs_log_warnings_total'; do
     if ! grep -q "$want" ../PROM_snapshot.txt; then
         echo "error: PROM_snapshot.txt lacks $want" >&2
         cat ../PROM_snapshot.txt >&2
@@ -246,6 +249,44 @@ if ! grep -q '"traceEvents"' "$TRACE_OUT" || ! grep -q '"ph":"i"' "$TRACE_OUT"; 
 fi
 echo "trace OK: all instrumented engine stages present in trace_quick.json"
 
+echo "== provenance smoke (schedule --explain / --explain-out / --price-out) =="
+# One overloaded quick run (32 jobs on 6 machines, so the dual prices
+# actually price jobs out) with full decision provenance exported. The
+# gates check the point of the subsystem: at least one admitted AND one
+# rejected job carry a machine-readable explanation, the human-readable
+# --explain lines show the utility-vs-price margins, and the price
+# series is non-empty.
+EXPLAIN_OUT=../explain_quick.jsonl
+PRICES_OUT=../prices_quick.json
+rm -f "$EXPLAIN_OUT" "$PRICES_OUT"
+EXPLAIN_LOG=$("$BIN" schedule --scheduler pd-ors --machines 6 --jobs 32 --horizon 12 \
+    --seed 3 --replan every:2 --churn down@2:1,up@5:1 \
+    --explain --explain-out "$EXPLAIN_OUT" --price-out "$PRICES_OUT")
+ADMIT_LINES=$(grep -c '"decision":"admit"' "$EXPLAIN_OUT" || true)
+REJECT_LINES=$(grep -c '"decision":"reject"' "$EXPLAIN_OUT" || true)
+if [ "${ADMIT_LINES:-0}" -eq 0 ] || [ "${REJECT_LINES:-0}" -eq 0 ]; then
+    echo "error: explain_quick.jsonl must explain >=1 admitted and >=1 rejected job (admit=$ADMIT_LINES reject=$REJECT_LINES)" >&2
+    cat "$EXPLAIN_OUT" >&2
+    exit 1
+fi
+if grep -v -q '"reason":"' "$EXPLAIN_OUT"; then
+    echo "error: explain_quick.jsonl has a decision without a machine-readable reason" >&2
+    exit 1
+fi
+if ! printf '%s\n' "$EXPLAIN_LOG" | grep -q 'margin'; then
+    echo "error: schedule --explain printed no margin lines" >&2
+    printf '%s\n' "$EXPLAIN_LOG" >&2
+    exit 1
+fi
+for want in '"series":"cluster_prices"' '"samples":' '"utilization"'; do
+    if ! grep -q "$want" "$PRICES_OUT"; then
+        echo "error: prices_quick.json lacks $want" >&2
+        cat "$PRICES_OUT" >&2
+        exit 1
+    fi
+done
+echo "provenance OK: $ADMIT_LINES admits + $REJECT_LINES rejects explained, price series exported"
+
 echo "== admission bench (1024-machine cold vs incremental solver) =="
 # The incremental-solver acceptance harness: one long-horizon arrival
 # stream over a 1024-machine skewed cluster, solved twice — cold (every
@@ -349,6 +390,10 @@ fi
 #                        pipeline stages over admitted jobs, from the
 #                        service bench's prometheus scrape (the PR 7
 #                        carried-over instrumentation-drift canary)
+#   mean_admit_margin  — mean utility-minus-price margin over admitted
+#                        jobs in the provenance smoke run (deterministic
+#                        given seeds; drift means the pricing or the
+#                        admission rule changed silently)
 THETA=$(cat ../BENCH_solver.json | json_field theta_solves)
 HITS=$(cat ../BENCH_solver.json | json_field memo_hits)
 HIT_RATE=$(awk -v t="$THETA" -v h="$HITS" 'BEGIN { printf "%.4f", (t + h > 0) ? h / (t + h) : 0 }')
@@ -361,8 +406,12 @@ DELTAS_PER_ADM=$(awk -v d="$INC_DELTAS" -v j="$ADM_JOBS" 'BEGIN { printf "%.2f",
 SPAN_COUNT=$(awk '/^dmlrs_stage_duration_us_count/ { total += $NF } END { printf "%.0f", total }' ../PROM_snapshot.txt)
 PROM_ADMITTED=$(awk '/^dmlrs_admitted_total / { printf "%.0f", $2; exit }' ../PROM_snapshot.txt)
 SPANS_PER_ADM=$(awk -v s="$SPAN_COUNT" -v a="$PROM_ADMITTED" 'BEGIN { printf "%.2f", (a > 0) ? s / a : 0 }')
-CURRENT=$(printf '{"bench": "derived_trend_metrics", "memo_hit_rate": %s, "replan_utility_gain": %s, "churn_disruption": %d, "warm_hit_rate": %s, "snapshot_deltas_per_admission": %s, "spans_per_admission": %s}' \
-    "$HIT_RATE" "$GAIN" "$DISRUPTION" "$WARM_RATE" "$DELTAS_PER_ADM" "$SPANS_PER_ADM")
+MEAN_MARGIN=$(awk '/"decision":"admit"/ {
+    n = index($0, "\"margin\":");
+    if (n) { s = substr($0, n + 9); sub(/[,}].*/, "", s); total += s; cnt++ }
+} END { printf "%.4f", (cnt > 0) ? total / cnt : 0 }' ../explain_quick.jsonl)
+CURRENT=$(printf '{"bench": "derived_trend_metrics", "memo_hit_rate": %s, "replan_utility_gain": %s, "churn_disruption": %d, "warm_hit_rate": %s, "snapshot_deltas_per_admission": %s, "spans_per_admission": %s, "mean_admit_margin": %s}' \
+    "$HIT_RATE" "$GAIN" "$DISRUPTION" "$WARM_RATE" "$DELTAS_PER_ADM" "$SPANS_PER_ADM" "$MEAN_MARGIN")
 BASE=$(grep '"bench": "derived_trend_metrics"' "$TREND" | head -n 1 || true)
 if [ -n "$BASE" ]; then
     BASE_RATE=$(printf '%s\n' "$BASE" | json_field memo_hit_rate)
@@ -371,6 +420,7 @@ if [ -n "$BASE" ]; then
     BASE_WARM=$(printf '%s\n' "$BASE" | json_field warm_hit_rate)
     BASE_DELTAS=$(printf '%s\n' "$BASE" | json_field snapshot_deltas_per_admission)
     BASE_SPANS=$(printf '%s\n' "$BASE" | json_field spans_per_admission)
+    BASE_MARGIN=$(printf '%s\n' "$BASE" | json_field mean_admit_margin)
     # the θ-memo must stay effective: hit rate not >10% (relative) below baseline
     if awk -v b="$BASE_RATE" -v n="$HIT_RATE" 'BEGIN { exit !(b > 0 && n < 0.90 * b) }'; then
         echo "error: memo hit rate regressed beyond 10%: $HIT_RATE vs baseline $BASE_RATE" >&2
@@ -406,7 +456,13 @@ if [ -n "$BASE" ]; then
         echo "error: spans per admission drifted beyond 25%: $SPANS_PER_ADM vs baseline $BASE_SPANS" >&2
         exit 1
     fi
-    echo "derived trend metrics within thresholds (hit_rate $HIT_RATE vs $BASE_RATE, gain $GAIN vs $BASE_GAIN, disruption $DISRUPTION vs $BASE_DISRUPT, warm_rate $WARM_RATE vs ${BASE_WARM:-unpinned}, deltas/adm $DELTAS_PER_ADM vs ${BASE_DELTAS:-unpinned}, spans/adm $SPANS_PER_ADM vs ${BASE_SPANS:-unpinned})"
+    # the admit margin on the seeded provenance run is deterministic;
+    # drift means the dual prices or the admission rule moved silently
+    if awk -v b="${BASE_MARGIN:-0}" -v n="$MEAN_MARGIN" 'BEGIN { exit !(b > 0 && (n > 1.25 * b || n < 0.75 * b)) }'; then
+        echo "error: mean admit margin drifted beyond 25%: $MEAN_MARGIN vs baseline $BASE_MARGIN" >&2
+        exit 1
+    fi
+    echo "derived trend metrics within thresholds (hit_rate $HIT_RATE vs $BASE_RATE, gain $GAIN vs $BASE_GAIN, disruption $DISRUPTION vs $BASE_DISRUPT, warm_rate $WARM_RATE vs ${BASE_WARM:-unpinned}, deltas/adm $DELTAS_PER_ADM vs ${BASE_DELTAS:-unpinned}, spans/adm $SPANS_PER_ADM vs ${BASE_SPANS:-unpinned}, admit_margin $MEAN_MARGIN vs ${BASE_MARGIN:-unpinned})"
 else
     printf '%s\n' "$CURRENT" >> "$TREND"
     echo "recorded derived trend baseline in BENCH_TREND.json — commit it to pin"
