@@ -56,6 +56,21 @@ fn usize_of(args: &Args, cfg: Option<&Config>, key: &str, default: usize) -> usi
     effective(args, cfg, key, &default.to_string()).parse().unwrap_or(default)
 }
 
+/// A `--flag` / dotted-config-key pair, e.g. `--shards` / `service.shards`
+/// (flags win over the config file, like everywhere else).
+fn usize_flag_or_key(
+    args: &Args,
+    cfg: Option<&Config>,
+    flag: &str,
+    key: &str,
+    default: usize,
+) -> usize {
+    args.get(flag)
+        .and_then(|v| v.parse().ok())
+        .or_else(|| cfg.and_then(|c| c.get(key)).and_then(|v| v.parse().ok()))
+        .unwrap_or(default)
+}
+
 /// Parse the `--arrivals` flag / `workload.arrivals` config key.
 fn arrival_process(args: &Args, cfg: Option<&Config>) -> Result<ArrivalProcess> {
     let spec = args
@@ -640,6 +655,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     dcfg.oplog = args.get("oplog").map(str::to_string);
     dcfg.recover = args.get("recover").map(str::to_string);
     dcfg.prom_addr = args.get("prom-addr").map(str::to_string);
+    dcfg.shards = usize_flag_or_key(args, cfg.as_ref(), "shards", "service.shards", 1);
+    dcfg.batch = usize_flag_or_key(args, cfg.as_ref(), "batch", "service.batch", 8);
+    dcfg.reactors =
+        usize_flag_or_key(args, cfg.as_ref(), "reactors", "service.reactors", 4);
 
     // the daemon always records span histograms, the flight ring, and
     // decision provenance (the metrics_prom/debug_dump/explain ops serve
@@ -651,12 +670,16 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     crate::service::install_term_handler();
     let svc = &dcfg.service;
     let banner = format!(
-        "scheduler={} cluster={} workload={} slot_ms={} queue={} replan={} churn={}",
+        "scheduler={} cluster={} workload={} slot_ms={} queue={} shards={} batch={} \
+         reactors={} replan={} churn={}",
         svc.scheduler.name,
         svc.cluster.key(),
         svc.workload.key(),
         dcfg.slot_ms,
         dcfg.queue_cap,
+        dcfg.shards,
+        dcfg.batch,
+        dcfg.reactors,
         svc.scheduler.replan.label(),
         svc.churn.label()
     );
@@ -720,8 +743,8 @@ pub fn cmd_load(args: &Args) -> Result<()> {
         report.achieved_rate
     );
     println!(
-        "  decisions: admitted={} rejected={} deferred={} errors={}",
-        report.admitted, report.rejected, report.deferred, report.errors
+        "  decisions: admitted={} rejected={} deferred={} errors={} conn_failures={}",
+        report.admitted, report.rejected, report.deferred, report.errors, report.conn_failures
     );
     println!(
         "  admission latency ms: p50={:.3} p95={:.3} p99={:.3} p999={:.3} mean={:.3} max={:.3}",

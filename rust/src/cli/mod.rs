@@ -146,6 +146,14 @@ COMMANDS:
               (replay a journal, then resume appending to it)
               [--prom-addr 127.0.0.1:9901] (also serve the Prometheus
               text exposition over plain HTTP at this address)
+              [--shards K] (partition the cluster into K cells, each a
+              scheduler core over a disjoint machine slice; submits go to
+              the least-loaded compatible cell, cluster-wide ops fan out
+              and merge; per-cell op-logs PATH.cellI) [--batch M] (drain
+              up to M queued requests per core wakeup; --batch 1 is the
+              byte-identical oracle) [--reactors N] (nonblocking reactor
+              threads serving all connections; config keys
+              service.shards/service.batch/service.reactors)
               protocol: one JSON request per line — submit/tick/status/
               cluster/metrics/metrics_prom/debug_dump/replan/
               machine_down/machine_up/explain/shutdown
@@ -158,7 +166,9 @@ COMMANDS:
               [--ticks] (replay slot boundaries; needs --connections 1)
               [--shutdown] (drain the daemon afterwards)
               [--bench-out BENCH_service.json]  reports throughput and
-              p50/p95/p99 admission latency
+              p50/p95/p99 admission latency; a failed connection is
+              counted (conn_failures) and its jobs resent on a healthy
+              one instead of skewing the open-loop schedule
   bounds      pricing constants   --machines N --jobs N --horizon N
   admission-bench  cold vs incremental admission latency at scale
               [--machines N] (default 1024) [--jobs N] (default 96)

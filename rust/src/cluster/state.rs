@@ -260,6 +260,49 @@ impl AllocLedger {
         sum
     }
 
+    /// Total committed resource-time restricted to machines `[start, end)`
+    /// — the per-cell share of [`AllocLedger::total_used`]. The sharded
+    /// service's conservation invariant is that the cell ledgers' totals
+    /// sum to the whole-cluster accounting: for any partition of
+    /// `0..num_machines` into ranges, the `total_used_in` values add up to
+    /// `total_used()` exactly (same additions in the same f64 order).
+    pub fn total_used_in(&self, start: usize, end: usize) -> f64 {
+        let mut sum = 0.0;
+        for t in 0..self.horizon {
+            for h in start..end.min(self.capacity.len()) {
+                sum += self.alloc[t][h].sum();
+            }
+        }
+        sum
+    }
+
+    /// A standalone sub-ledger over machines `[start, end)`: allocation
+    /// columns, capacities, and the availability mask are copied for the
+    /// range; the clone gets a fresh id and an empty change log (it is a
+    /// different ledger as far as snapshot caches are concerned). Used by
+    /// the sharding tests to compare a cell's ledger against the matching
+    /// column range of the whole-cluster ledger.
+    pub fn slice_machines(&self, start: usize, end: usize) -> AllocLedger {
+        assert!(start <= end && end <= self.capacity.len(), "slice out of range");
+        AllocLedger {
+            alloc: self
+                .alloc
+                .iter()
+                .map(|row| row[start..end].to_vec())
+                .collect(),
+            capacity: self.capacity[start..end].to_vec(),
+            horizon: self.horizon,
+            avail: self
+                .avail
+                .as_ref()
+                .map(|a| a.iter().map(|row| row[start..end].to_vec()).collect()),
+            id: NEXT_LEDGER_ID.fetch_add(1, Ordering::Relaxed),
+            slot_version: vec![0; self.horizon],
+            log_start: 0,
+            log: VecDeque::new(),
+        }
+    }
+
     /// Overall utilization of resource `r` in `[0, horizon)`: used / capacity.
     pub fn utilization(&self, r: usize) -> f64 {
         let mut used = 0.0;
@@ -371,6 +414,32 @@ mod tests {
         assert_ne!(c.id(), l.id());
         assert_eq!(c.change_seq(), 0, "clone starts a fresh log");
         assert_eq!(c.slot_version(2), l.slot_version(2));
+    }
+
+    #[test]
+    fn machine_range_accounting_partitions_the_total() {
+        let mut l = ledger();
+        let job = test_job(0);
+        for (t, h) in [(0, 0), (1, 1), (2, 0), (3, 1)] {
+            let sched = Schedule {
+                job_id: 0,
+                slots: vec![SlotPlacement { t, placements: vec![(h, 1, 1)] }],
+            };
+            l.commit(&job, &sched);
+        }
+        let total = l.total_used();
+        assert!(total > 0.0);
+        assert_eq!(l.total_used_in(0, 1) + l.total_used_in(1, 2), total);
+        assert_eq!(l.total_used_in(0, 2), total);
+        // the sliced sub-ledger carries exactly the range's columns
+        l.set_available_from(1, 2, false);
+        let s = l.slice_machines(1, 2);
+        assert_eq!(s.num_machines(), 1);
+        assert_eq!(s.total_used(), l.total_used_in(1, 2));
+        assert_eq!(s.used(1, 0), l.used(1, 1));
+        assert!(!s.available(2, 0), "the availability mask is sliced too");
+        assert!(s.available(1, 0));
+        assert_ne!(s.id(), l.id());
     }
 
     #[test]

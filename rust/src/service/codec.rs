@@ -140,6 +140,15 @@ pub fn job_from_json(v: &Json) -> Result<Job, String> {
 }
 
 pub fn schedule_to_json(s: &Schedule) -> Json {
+    schedule_to_json_cell(s, s.job_id, 0)
+}
+
+/// Serialize a schedule in a cell's *global* namespace: the reported
+/// `job_id` is the caller-supplied global id and every placement's
+/// machine index is offset by `machine_base` (a cell shard owns machines
+/// `[base, base + len)` of the whole cluster). With `machine_base = 0`
+/// and the schedule's own id this is exactly [`schedule_to_json`].
+pub fn schedule_to_json_cell(s: &Schedule, job_id: usize, machine_base: usize) -> Json {
     let slots: Vec<Json> = s
         .slots
         .iter()
@@ -149,7 +158,7 @@ pub fn schedule_to_json(s: &Schedule) -> Json {
                 .iter()
                 .map(|&(h, w, ps)| {
                     Json::Arr(vec![
-                        json::num(h as f64),
+                        json::num((h + machine_base) as f64),
                         json::num(w as f64),
                         json::num(ps as f64),
                     ])
@@ -162,7 +171,7 @@ pub fn schedule_to_json(s: &Schedule) -> Json {
         })
         .collect();
     json::obj(vec![
-        ("job_id", json::num(s.job_id as f64)),
+        ("job_id", json::num(job_id as f64)),
         ("slots", Json::Arr(slots)),
     ])
 }

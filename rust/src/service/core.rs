@@ -77,6 +77,47 @@ impl ServiceConfig {
     }
 }
 
+/// A cell's identity inside a sharded service: this core is shard
+/// `index` of `stride`, owning machines `[machine_base, machine_base +
+/// cluster.len())` of the whole cluster. Job ids are *interleaved*
+/// across cells — `global = local * stride + index` — so each cell still
+/// assigns sequential local ids (what the op-log replay contract
+/// verifies) while global ids stay unique service-wide and the owning
+/// cell of any global id is just `id % stride`. The default is the
+/// identity cell: one shard, global == local, base 0 — byte-identical to
+/// the pre-sharding core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellId {
+    pub index: usize,
+    pub stride: usize,
+    pub machine_base: usize,
+}
+
+impl Default for CellId {
+    fn default() -> CellId {
+        CellId { index: 0, stride: 1, machine_base: 0 }
+    }
+}
+
+impl CellId {
+    /// The global id of this cell's `local`-th job.
+    pub fn global_job_id(&self, local: usize) -> usize {
+        local * self.stride + self.index
+    }
+
+    /// The global machine id of this cell's local machine `h` — or, via
+    /// [`CellId::local_machine`], the inverse.
+    pub fn global_machine(&self, local: usize) -> usize {
+        local + self.machine_base
+    }
+
+    /// The cell-local index of a global machine id, if this cell (with
+    /// `len` machines) owns it.
+    pub fn local_machine(&self, global: usize, len: usize) -> Option<usize> {
+        global.checked_sub(self.machine_base).filter(|&l| l < len)
+    }
+}
+
 /// Deterministic end-of-run state snapshot: everything the recovery
 /// contract promises to reproduce byte-identically (ledger allocations,
 /// counters, solver stats — not wall-clock latencies).
@@ -152,6 +193,8 @@ pub struct ServiceCore {
     decision_counts: BTreeMap<(&'static str, &'static str), u64>,
     started: Timer,
     log: Option<OpLog>,
+    /// This core's place in a sharded service (identity when unsharded).
+    cell: CellId,
 }
 
 impl ServiceCore {
@@ -210,6 +253,7 @@ impl ServiceCore {
             decision_counts: BTreeMap::new(),
             started: Timer::start(),
             log: None,
+            cell: CellId::default(),
         };
         // slot-0 trace events fire before any submission, matching the
         // engine's SlotStart ordering (nothing is tracked yet, so the
@@ -226,16 +270,39 @@ impl ServiceCore {
         Ok(())
     }
 
+    /// Declare this core to be one cell of a sharded service (see
+    /// [`CellId`]). Must be set before any traffic or replay: responses,
+    /// provenance traces, and journaled `explain` ops carry ids in the
+    /// global namespace the cell was configured with.
+    pub fn set_cell(&mut self, cell: CellId) {
+        assert!(cell.stride > 0 && cell.index < cell.stride, "invalid cell id");
+        assert_eq!(self.submitted, 0, "cell identity must be set before traffic");
+        self.cell = cell;
+    }
+
+    pub fn cell(&self) -> CellId {
+        self.cell
+    }
+
     /// Replay the op-log at `path` through a freshly built core and
     /// resume appending to it. Replay verifies the header against `cfg`
     /// and every recorded decision against the recomputed one, so silent
     /// nondeterminism cannot masquerade as a successful recovery.
     pub fn recover(cfg: ServiceConfig, path: &str) -> Result<ServiceCore> {
+        ServiceCore::recover_cell(cfg, CellId::default(), path)
+    }
+
+    /// [`ServiceCore::recover`] for one cell of a sharded service: the
+    /// cell identity is applied *before* replay so the rebuilt provenance
+    /// store and journaled explain ids land in the same global namespace
+    /// the original cell served.
+    pub fn recover_cell(cfg: ServiceConfig, cell: CellId, path: &str) -> Result<ServiceCore> {
         let (ops, repaired) = OpLog::read(path).map_err(Error::from)?;
         if repaired {
             eprintln!("warning: op-log {path}: dropped a truncated in-flight entry");
         }
         let mut core = ServiceCore::new(cfg)?;
+        core.set_cell(cell);
         let mut iter = ops.into_iter();
         let saw_header = match iter.next() {
             None => false, // empty/missing log: nothing to replay
@@ -415,6 +482,7 @@ impl ServiceCore {
             Request::MachineDown { machine } => self.machine_down(*machine),
             Request::MachineUp { machine } => self.machine_up(*machine),
             Request::Explain { job_id } => self.explain(*job_id),
+            Request::Cells => self.cells_json(),
             Request::Shutdown => ok_response(vec![("draining", Json::Bool(true))]),
         }
     }
@@ -422,18 +490,34 @@ impl ServiceCore {
     /// Submit one job at the current virtual slot (the daemon assigns the
     /// job id and arrival; client-supplied values are ignored). Appends
     /// to the op-log after the decision.
-    pub fn submit(&mut self, mut job: Job) -> Json {
-        job.id = self.next_id;
-        job.arrival = self.slot;
-        let logged = job.clone();
-        let (decision, response) = self.submit_inner(job);
+    pub fn submit(&mut self, job: Job) -> Json {
+        self.submit_batch(vec![job]).pop().expect("one response per job")
+    }
+
+    /// Submit a drain burst of jobs in order, journaling the whole burst
+    /// with **one** op-log write + flush. Decisions, responses, and the
+    /// journaled bytes are identical to submitting the jobs one by one —
+    /// the `--batch 1` oracle the sharding tests enforce; only the
+    /// journal syscall count changes.
+    pub fn submit_batch(&mut self, jobs: Vec<Job>) -> Vec<Json> {
+        let mut ops = Vec::new();
+        let mut out = Vec::with_capacity(jobs.len());
+        for mut job in jobs {
+            job.id = self.next_id;
+            job.arrival = self.slot;
+            let logged = if self.log.is_some() { Some(job.clone()) } else { None };
+            let (decision, response) = self.submit_inner(job);
+            if let Some(job) = logged {
+                ops.push(Op::Submit { slot: job.arrival, decision, job });
+            }
+            out.push(response);
+        }
         if let Some(log) = self.log.as_mut() {
-            let op = Op::Submit { slot: logged.arrival, decision, job: logged };
-            if let Err(e) = log.append(&op) {
+            if let Err(e) = log.append_all(&ops) {
                 eprintln!("warning: op-log append failed: {e}");
             }
         }
-        response
+        out
     }
 
     /// The replay-shared submit path: counters, latency, pending credit,
@@ -442,6 +526,10 @@ impl ServiceCore {
     fn submit_inner(&mut self, job: Job) -> (String, Json) {
         self.next_id += 1;
         self.submitted += 1;
+        // everything internal (pending table, journal, scheduler) speaks
+        // local ids; only the wire artifacts — response, provenance trace
+        // — carry the cell's global namespace
+        let global_id = self.cell.global_job_id(job.id);
         let timer = Timer::start();
         let outcome = self.core.submit(self.sched.as_mut(), &job);
         self.latencies_us.push(timer.elapsed_us());
@@ -461,8 +549,9 @@ impl ServiceCore {
             .unwrap_or_else(|| DecisionTrace::fallback(job.id, decision));
         trace.t = job.arrival;
         trace.decision = decision;
+        trace.job_id = global_id;
         *self.decision_counts.entry((decision, trace.reason)).or_insert(0) += 1;
-        self.traces.insert(job.id, trace);
+        self.traces.insert(global_id, trace);
         match outcome {
             AdmissionOutcome::Admitted { schedule, completion, finish } => {
                 self.admitted += 1;
@@ -482,17 +571,24 @@ impl ServiceCore {
                 let completion_json =
                     completion.map_or(Json::Null, |c| json::num(c as f64));
                 let resp = ok_response(vec![
-                    ("job_id", json::num(job.id as f64)),
+                    ("job_id", json::num(global_id as f64)),
                     ("decision", json::s("admitted")),
                     ("completion", completion_json),
-                    ("schedule", codec::schedule_to_json(&schedule)),
+                    (
+                        "schedule",
+                        codec::schedule_to_json_cell(
+                            &schedule,
+                            global_id,
+                            self.cell.machine_base,
+                        ),
+                    ),
                 ]);
                 ("admitted".to_string(), resp)
             }
             AdmissionOutcome::Rejected => {
                 self.rejected += 1;
                 let resp = ok_response(vec![
-                    ("job_id", json::num(job.id as f64)),
+                    ("job_id", json::num(global_id as f64)),
                     ("decision", json::s("rejected")),
                 ]);
                 ("rejected".to_string(), resp)
@@ -500,7 +596,7 @@ impl ServiceCore {
             AdmissionOutcome::Deferred => {
                 self.deferred += 1;
                 let resp = ok_response(vec![
-                    ("job_id", json::num(job.id as f64)),
+                    ("job_id", json::num(global_id as f64)),
                     ("decision", json::s("deferred")),
                 ]);
                 ("deferred".to_string(), resp)
@@ -624,42 +720,46 @@ impl ServiceCore {
         (report.interrupted, evicted, migrated)
     }
 
-    /// Shared gate for the wire churn ops.
-    fn churn_op_guard(&self, op: &str, machine: usize) -> Option<Json> {
+    /// Shared gate for the wire churn ops: validates the op is available
+    /// and maps the *global* machine id onto this cell's local range.
+    fn churn_op_guard(&self, op: &str, machine: usize) -> Result<usize, Json> {
         if !self.core.churn_tracking() {
-            return Some(err_response(&format!(
+            return Err(err_response(&format!(
                 "{op} is unavailable (serve with --churn so started \
                  admissions are tracked for migration, e.g. --churn \
                  mtbf:40,mttr:8)"
             )));
         }
         if self.ended {
-            return Some(err_response(
+            return Err(err_response(
                 "the horizon has ended; the cluster state is frozen",
             ));
         }
-        if machine >= self.cluster.len() {
-            return Some(err_response(&format!(
-                "machine {machine} out of range (cluster has {} machines)",
-                self.cluster.len()
-            )));
-        }
-        None
+        self.cell.local_machine(machine, self.cluster.len()).ok_or_else(|| {
+            err_response(&format!(
+                "machine {machine} out of range (this cell owns machines \
+                 {}..{})",
+                self.cell.machine_base,
+                self.cell.machine_base + self.cluster.len()
+            ))
+        })
     }
 
-    /// The wire `machine_down` op: fail one machine at the current slot.
-    /// Its capacity leaves the ledger from this slot on, stranded started
-    /// admissions are migrated or evicted, and the op is journaled with
-    /// the pass outcome (re-checked on replay).
+    /// The wire `machine_down` op: fail one machine (global id) at the
+    /// current slot. Its capacity leaves the ledger from this slot on,
+    /// stranded started admissions are migrated or evicted, and the op is
+    /// journaled — with the cell-local machine id, like every journaled
+    /// op — with the pass outcome (re-checked on replay).
     pub fn machine_down(&mut self, machine: usize) -> Json {
-        if let Some(err) = self.churn_op_guard("machine_down", machine) {
-            return err;
-        }
+        let local = match self.churn_op_guard("machine_down", machine) {
+            Ok(local) => local,
+            Err(resp) => return resp,
+        };
         let t = self.slot;
-        self.core.ledger_mut().set_available_from(machine, t, false);
-        let (interrupted, evicted, migrated) = self.migrate_down(&[machine], t);
+        self.core.ledger_mut().set_available_from(local, t, false);
+        let (interrupted, evicted, migrated) = self.migrate_down(&[local], t);
         if let Some(log) = self.log.as_mut() {
-            let op = Op::MachineDown { slot: t, machine, evicted, migrated };
+            let op = Op::MachineDown { slot: t, machine: local, evicted, migrated };
             if let Err(e) = log.append(&op) {
                 eprintln!("warning: op-log append failed: {e}");
             }
@@ -673,17 +773,18 @@ impl ServiceCore {
         ])
     }
 
-    /// The wire `machine_up` op: return one machine to service from the
-    /// current slot on. Journaled so replay restores capacity at the same
-    /// point in the op sequence.
+    /// The wire `machine_up` op: return one machine (global id) to
+    /// service from the current slot on. Journaled so replay restores
+    /// capacity at the same point in the op sequence.
     pub fn machine_up(&mut self, machine: usize) -> Json {
-        if let Some(err) = self.churn_op_guard("machine_up", machine) {
-            return err;
-        }
+        let local = match self.churn_op_guard("machine_up", machine) {
+            Ok(local) => local,
+            Err(resp) => return resp,
+        };
         let t = self.slot;
-        self.core.ledger_mut().set_available_from(machine, t, true);
+        self.core.ledger_mut().set_available_from(local, t, true);
         if let Some(log) = self.log.as_mut() {
-            let op = Op::MachineUp { slot: t, machine };
+            let op = Op::MachineUp { slot: t, machine: local };
             if let Err(e) = log.append(&op) {
                 eprintln!("warning: op-log append failed: {e}");
             }
@@ -793,8 +894,27 @@ impl ServiceCore {
         ])
     }
 
-    fn ledger_sum(&self) -> f64 {
+    /// Total committed resource-time in this core's ledger (the router's
+    /// least-loaded placement signal and the `status` op's
+    /// `ledger_sum` field).
+    pub fn ledger_sum(&self) -> f64 {
         self.core.ledger().total_used()
+    }
+
+    /// The `cells` op answered by a single core: its own cell entry. The
+    /// sharded router answers this op itself with one entry per cell; a
+    /// plain (or 1-shard) daemon reports the identity cell here, so the
+    /// response shape is the same either way.
+    fn cells_json(&self) -> Json {
+        ok_response(vec![
+            ("shards", json::num(self.cell.stride as f64)),
+            ("cells", Json::Arr(vec![cell_entry_json(
+                self.cell.index,
+                self.cell.machine_base,
+                self.cluster.len(),
+                self.ledger_sum(),
+            )])),
+        ])
     }
 
     /// Mean finish-time fairness over completed jobs (0 when none).
@@ -881,33 +1001,34 @@ impl ServiceCore {
         ])
     }
 
+    /// This core's counter block of the Prometheus exposition —
+    /// everything except the process-global stage histograms and logger
+    /// warnings. Flushes this thread's local span recorders into the
+    /// global set first, so a cell thread calling this hands its spans
+    /// over before the router renders the merged body.
+    pub fn prom_counters(&self) -> PromCounters {
+        obs::flush_local();
+        PromCounters {
+            submitted: self.submitted,
+            admitted: self.admitted,
+            rejected: self.rejected,
+            deferred: self.deferred,
+            completed: self.completed,
+            decisions: self
+                .decision_counts
+                .iter()
+                .map(|(&(d, r), &v)| ((d.to_string(), r.to_string()), v))
+                .collect(),
+        }
+    }
+
     /// The wire `metrics_prom` op: Prometheus text exposition 0.0.4 of
     /// the global per-stage span histograms plus the decision counters.
-    /// Flushes this thread's local recorders first — the daemon core
-    /// thread owns every span recorded inside the solve path, so the
+    /// Flushes this thread's local recorders first — an unsharded daemon
+    /// core thread owns every span recorded inside the solve path, so the
     /// merged global set is complete at this point.
     fn metrics_prom_json(&self) -> Json {
-        obs::flush_local();
-        let mut body = crate::obs::export::prometheus_text(&obs::global_stages());
-        for (name, v) in [
-            ("dmlrs_submitted_total", self.submitted),
-            ("dmlrs_admitted_total", self.admitted),
-            ("dmlrs_rejected_total", self.rejected),
-            ("dmlrs_deferred_total", self.deferred),
-            ("dmlrs_completed_total", self.completed),
-        ] {
-            body.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
-        }
-        body.push_str("# TYPE dmlrs_decisions_total counter\n");
-        for (&(d, r), &v) in &self.decision_counts {
-            body.push_str(&format!(
-                "dmlrs_decisions_total{{decision=\"{d}\",reason=\"{r}\"}} {v}\n"
-            ));
-        }
-        body.push_str(&format!(
-            "# TYPE dmlrs_log_warnings_total counter\ndmlrs_log_warnings_total {}\n",
-            crate::util::logger::warnings()
-        ));
+        let body = render_prom_body(&self.prom_counters());
         ok_response(vec![("prom", json::s(&body))])
     }
 
@@ -939,6 +1060,76 @@ impl ServiceCore {
             solver: self.sched.solver_stats(),
         }
     }
+}
+
+/// One core's counter block of the Prometheus exposition, detached from
+/// the core so the sharded router can collect one per cell, merge them,
+/// and render a single body (see [`render_prom_body`]).
+#[derive(Debug, Clone, Default)]
+pub struct PromCounters {
+    pub submitted: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub deferred: usize,
+    pub completed: usize,
+    /// `(decision, reason) → count`.
+    pub decisions: BTreeMap<(String, String), u64>,
+}
+
+impl PromCounters {
+    /// Fold another cell's counters in (sums everywhere).
+    pub fn merge(&mut self, other: &PromCounters) {
+        self.submitted += other.submitted;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.deferred += other.deferred;
+        self.completed += other.completed;
+        for (k, v) in &other.decisions {
+            *self.decisions.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+}
+
+/// Render the full Prometheus text body: the process-global stage
+/// histograms, then the (possibly cell-merged) service counters, then
+/// the logger warning counter. The single-core
+/// `ServiceCore::metrics_prom_json` and the sharded router both go
+/// through here, so the exposition format is defined once.
+pub fn render_prom_body(counters: &PromCounters) -> String {
+    let mut body = crate::obs::export::prometheus_text(&obs::global_stages());
+    for (name, v) in [
+        ("dmlrs_submitted_total", counters.submitted),
+        ("dmlrs_admitted_total", counters.admitted),
+        ("dmlrs_rejected_total", counters.rejected),
+        ("dmlrs_deferred_total", counters.deferred),
+        ("dmlrs_completed_total", counters.completed),
+    ] {
+        body.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    body.push_str("# TYPE dmlrs_decisions_total counter\n");
+    for ((d, r), v) in &counters.decisions {
+        body.push_str(&format!(
+            "dmlrs_decisions_total{{decision=\"{d}\",reason=\"{r}\"}} {v}\n"
+        ));
+    }
+    body.push_str(&format!(
+        "# TYPE dmlrs_log_warnings_total counter\ndmlrs_log_warnings_total {}\n",
+        crate::util::logger::warnings()
+    ));
+    body
+}
+
+/// One entry of a `cells` response: the cell's global machine range and
+/// current ledger load. Shared by the single-core answer and the sharded
+/// router's merged answer so both render the same shape.
+pub fn cell_entry_json(index: usize, base: usize, machines: usize, load: f64) -> Json {
+    json::obj(vec![
+        ("cell", json::num(index as f64)),
+        ("machines_start", json::num(base as f64)),
+        ("machines_end", json::num((base + machines) as f64)),
+        ("machines", json::num(machines as f64)),
+        ("load", json::num(load)),
+    ])
 }
 
 /// Convenience: the default service config over a synthetic workload —
@@ -1258,6 +1449,120 @@ mod tests {
         assert_eq!(status.get("replan_rounds").unwrap().as_usize(), Some(0));
         let resp = fifo.apply(&Request::Replan);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{}", resp.to_string());
+    }
+
+    #[test]
+    fn cell_namespace_translates_ids_at_the_wire_edge() {
+        // cell 1 of 2, owning global machines 4..8 (a 4-machine slice)
+        let mut c = synthetic_service_config("pd-ors", 1, 4, 12, 12);
+        c.churn = ChurnSpec::parse("down@900:1").unwrap();
+        let mut core = ServiceCore::new(c).unwrap();
+        core.set_cell(CellId { index: 1, stride: 2, machine_base: 4 });
+        let jobs = core.config().workload.jobs(1);
+        let mut admitted_global = None;
+        for (k, job) in jobs.iter().take(6).enumerate() {
+            let resp = core.submit(job.clone());
+            let gid = resp.get("job_id").unwrap().as_usize().unwrap();
+            assert_eq!(gid, k * 2 + 1, "interleaved global ids");
+            if resp.get("decision").unwrap().as_str() == Some("admitted") {
+                admitted_global = Some((gid, resp.clone()));
+            }
+        }
+        let (gid, resp) = admitted_global.expect("pd-ors should admit something");
+        // the reported schedule lives in the global namespace
+        let sched = resp.get("schedule").unwrap();
+        assert_eq!(sched.get("job_id").unwrap().as_usize(), Some(gid));
+        for slot in sched.get("slots").unwrap().as_arr().unwrap() {
+            for p in slot.get("placements").unwrap().as_arr().unwrap() {
+                let h = p.as_arr().unwrap()[0].as_usize().unwrap();
+                assert!((4..8).contains(&h), "global machine id {h} outside 4..8");
+            }
+        }
+        // explain answers under the global id (and echoes it); ids homed
+        // on the other cell are honest errors
+        let e = core.apply(&Request::Explain { job_id: gid });
+        assert_eq!(e.get("ok"), Some(&Json::Bool(true)), "{}", e.to_string());
+        assert_eq!(e.get("job_id").unwrap().as_usize(), Some(gid));
+        let e = core.apply(&Request::Explain { job_id: 2 });
+        assert_eq!(e.get("ok"), Some(&Json::Bool(false)), "{}", e.to_string());
+        // machine ops speak global ids; ids outside the cell's range are
+        // honest errors
+        let down = core.apply(&Request::MachineDown { machine: 5 });
+        assert_eq!(down.get("ok"), Some(&Json::Bool(true)), "{}", down.to_string());
+        assert_eq!(down.get("machine").unwrap().as_usize(), Some(5));
+        let bad = core.apply(&Request::MachineDown { machine: 2 });
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)), "{}", bad.to_string());
+        assert!(bad.get("error").unwrap().as_str().unwrap().contains("out of range"));
+        // the cells op reports the global range
+        let cells = core.apply(&Request::Cells);
+        assert_eq!(cells.get("shards").unwrap().as_usize(), Some(2));
+        let entry = &cells.get("cells").unwrap().as_arr().unwrap()[0];
+        assert_eq!(entry.get("machines_start").unwrap().as_usize(), Some(4));
+        assert_eq!(entry.get("machines_end").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn cell_recovery_replays_the_global_namespace() {
+        let path = tmp("cellrec");
+        let _ = std::fs::remove_file(&path);
+        let cell = CellId { index: 1, stride: 4, machine_base: 2 };
+        let expected = {
+            let mut core = ServiceCore::new(cfg()).unwrap();
+            core.set_cell(cell);
+            core.attach_log(&path).unwrap();
+            let jobs = core.config().workload.jobs(1);
+            for j in jobs.iter().take(4) {
+                core.submit(j.clone());
+            }
+            // journal an explain under the global id — replay must
+            // re-answer it against the rebuilt (global-keyed) store
+            let e = core.apply(&Request::Explain { job_id: 5 });
+            assert_eq!(e.get("ok"), Some(&Json::Bool(true)), "{}", e.to_string());
+            core.tick();
+            core.report()
+        };
+        let recovered = ServiceCore::recover_cell(cfg(), cell, &path).unwrap();
+        assert_eq!(recovered.report(), expected);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn submit_batch_matches_singles_byte_for_byte() {
+        let (p1, p2) = (tmp("single"), tmp("batch"));
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+        let jobs = cfg().workload.jobs(1);
+        let (singles, report1) = {
+            let mut core = ServiceCore::new(cfg()).unwrap();
+            core.attach_log(&p1).unwrap();
+            let out: Vec<String> = jobs
+                .iter()
+                .take(6)
+                .map(|j| core.submit(j.clone()).to_string())
+                .collect();
+            core.tick();
+            (out, core.report())
+        };
+        let (batched, report2) = {
+            let mut core = ServiceCore::new(cfg()).unwrap();
+            core.attach_log(&p2).unwrap();
+            let out: Vec<String> = core
+                .submit_batch(jobs.iter().take(6).cloned().collect())
+                .iter()
+                .map(Json::to_string)
+                .collect();
+            core.tick();
+            (out, core.report())
+        };
+        assert_eq!(singles, batched, "responses must be byte-identical");
+        assert_eq!(report1, report2, "end state must be byte-identical");
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "journal bytes must be identical"
+        );
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
     }
 
     #[test]

@@ -1,49 +1,55 @@
-//! The admission daemon: std-only TCP frontend around a [`ServiceCore`].
+//! The admission daemon: std-only TCP frontend around the sharded
+//! service ([`super::shard`]).
 //!
-//! Architecture (one box per thread):
+//! Architecture (one box per thread; `R` reactors, `k` cells):
 //!
 //! ```text
-//!  client ──► connection handler ─┐
-//!  client ──► connection handler ─┼─► bounded MPSC queue ─► scheduler core
-//!  slot timer (optional) ─────────┘        (backpressure)     (owns the
-//!                                                              ledger +
-//!                                                              solver
-//!                                                              scratch)
+//!  clients ──► acceptor ─┬─► reactor 0 ─┐                    ┌─► cell 0
+//!   (10k conns, no       ├─► reactor 1 ─┼─► bounded MPSC ─► router ─► cell 1
+//!    thread per conn)    └─► reactor ⋯ ─┘   (backpressure)   └─► cell ⋯
+//!  slot timer (optional) ────────────────────────┘
 //! ```
 //!
-//! * One handler thread per accepted connection reads NDJSON requests and
-//!   forwards them through a *bounded* `sync_channel`; a full queue blocks
-//!   the handler — natural backpressure toward the client — while the
-//!   single core thread preserves PR 3's no-locks-in-the-solve-path
-//!   determinism contract.
-//! * Responses travel back on a per-request channel, so each connection
-//!   sees its own request/response ordering.
+//! * The acceptor drains a **nonblocking** listener and deals accepted
+//!   sockets round-robin to a small fixed pool of reactor threads; each
+//!   reactor polls its connections' nonblocking sockets in a readiness
+//!   loop (read what's ready, parse complete NDJSON lines, flush what's
+//!   writable) — 10k concurrent `dmlrs load` connections cost 10k
+//!   buffers, not 10k OS threads.
+//! * Parsed requests flow through a *bounded* `sync_channel` into the
+//!   router; a full queue blocks the reactor — natural backpressure
+//!   toward the clients — while each single-threaded cell core preserves
+//!   PR 3's no-locks-in-the-solve-path determinism contract.
+//! * Responses travel back on a per-request channel and are written in
+//!   request order per connection, so every connection sees its own
+//!   request/response ordering.
 //! * `--slot-ms N` starts a wall-clock timer thread that enqueues a
 //!   `tick` every N ms; with `N = 0` the clock is purely virtual (driven
 //!   by `tick` requests — what the parity tests and `dmlrs load --ticks`
 //!   use).
 //! * Graceful drain: a `shutdown` request (or SIGTERM/SIGINT in
 //!   `dmlrs serve`) sets the shared stop flag; the acceptor stops
-//!   accepting, handlers finish their in-flight request and close, and
-//!   the core exits once every sender is gone — no request is dropped
-//!   after it was accepted into the queue.
+//!   accepting, reactors stop reading, flush every in-flight response,
+//!   and close; the router and cells exit once every sender is gone — no
+//!   request is dropped after it was accepted into the queue.
 
-use std::io::{BufRead, BufReader, Write as _};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read as _, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::err;
-use crate::obs::{self, Stage};
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 use crate::{log_debug, log_info};
 
-use super::core::{ServiceConfig, ServiceCore, ServiceReport};
+use super::core::{ServiceConfig, ServiceReport};
 use super::protocol::{err_response, Request};
+use super::shard::{self, RouterMsg, ShardConfig};
 
 /// Daemon configuration on top of the core's [`ServiceConfig`].
 #[derive(Debug, Clone)]
@@ -55,16 +61,25 @@ pub struct DaemonConfig {
     /// Wall-clock slot length in ms; 0 = virtual clock (tick requests
     /// only).
     pub slot_ms: u64,
-    /// Bound of the request queue between the connection handlers and
-    /// the scheduler core.
+    /// Bound of the request queue between the reactors and the router.
     pub queue_cap: usize,
-    /// Start a fresh op-log at this path.
+    /// Start a fresh op-log at this path (cell `i` of a multi-shard
+    /// daemon appends to `<path>.cell<i>`).
     pub oplog: Option<String>,
-    /// Replay this op-log at startup, then continue appending to it.
+    /// Replay this op-log at startup (same per-cell suffix rule), then
+    /// continue appending to it.
     pub recover: Option<String>,
     /// Also serve the Prometheus text exposition over plain HTTP at this
     /// address (`GET` anything → the `metrics_prom` body).
     pub prom_addr: Option<String>,
+    /// Number of cluster cells (`--shards`); 1 = the unsharded
+    /// byte-parity passthrough.
+    pub shards: usize,
+    /// Cell drain-batch bound (`--batch`); 1 = decide strictly one
+    /// message at a time (the byte-parity oracle).
+    pub batch: usize,
+    /// Readiness-loop reactor threads (`--reactors`).
+    pub reactors: usize,
 }
 
 impl DaemonConfig {
@@ -77,22 +92,10 @@ impl DaemonConfig {
             oplog: None,
             recover: None,
             prom_addr: None,
+            shards: 1,
+            batch: 8,
+            reactors: 4,
         }
-    }
-}
-
-struct CoreMsg {
-    req: Request,
-    /// Response channel; `None` for internally generated ticks.
-    resp: Option<Sender<String>>,
-    /// When the message entered the queue — the core measures the gap
-    /// into the `queue_wait` telemetry stage on receipt.
-    enqueued: Instant,
-}
-
-impl CoreMsg {
-    fn new(req: Request, resp: Option<Sender<String>>) -> CoreMsg {
-        CoreMsg { req, resp, enqueued: Instant::now() }
     }
 }
 
@@ -103,7 +106,8 @@ pub struct DaemonHandle {
     /// The actually bound address (resolves port 0).
     pub addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    /// `None` only when startup failed (which `start` already reported).
+    /// The router thread; `None` only when startup failed (which `start`
+    /// already reported).
     core: JoinHandle<Option<ServiceReport>>,
     accept: JoinHandle<()>,
     timer: Option<JoinHandle<()>>,
@@ -124,7 +128,7 @@ impl DaemonHandle {
         self.shutdown.load(Ordering::SeqCst)
     }
 
-    /// Wait for the daemon to finish draining and return the core's
+    /// Wait for the daemon to finish draining and return the merged
     /// final deterministic state snapshot. Blocks until a shutdown was
     /// requested by someone.
     pub fn join(self) -> Result<ServiceReport> {
@@ -137,13 +141,20 @@ impl DaemonHandle {
         }
         self.core
             .join()
-            .map_err(|_| err!("scheduler-core thread panicked"))?
-            .ok_or_else(|| err!("scheduler core never started"))
+            .map_err(|_| err!("router thread panicked"))?
+            .ok_or_else(|| err!("scheduler cells never started"))
     }
 }
 
-/// Build the core (fresh, fresh+log, or recovered) per the config.
-fn build_core(cfg: &DaemonConfig) -> Result<ServiceCore> {
+/// Start the daemon: bind, spawn the cell / router / acceptor / reactor
+/// threads (plus the optional slot timer and Prometheus listener), and
+/// return once every cell is up.
+pub fn start(cfg: DaemonConfig) -> Result<DaemonHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| err!("bind {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr().map_err(Error::from)?;
+    listener.set_nonblocking(true).map_err(Error::from)?;
+
     if let (Some(o), Some(r)) = (&cfg.oplog, &cfg.recover) {
         if o != r {
             return Err(err!(
@@ -152,69 +163,36 @@ fn build_core(cfg: &DaemonConfig) -> Result<ServiceCore> {
             ));
         }
     }
-    match &cfg.recover {
-        Some(path) => ServiceCore::recover(cfg.service.clone(), path),
-        None => {
-            let mut core = ServiceCore::new(cfg.service.clone())?;
-            if let Some(path) = &cfg.oplog {
-                core.attach_log(path)?;
-            }
-            Ok(core)
-        }
-    }
-}
-
-/// Start the daemon: bind, spawn the scheduler-core / acceptor / optional
-/// slot-timer threads, and return once the core is up.
-pub fn start(cfg: DaemonConfig) -> Result<DaemonHandle> {
-    let listener = TcpListener::bind(&cfg.addr)
-        .map_err(|e| err!("bind {}: {e}", cfg.addr))?;
-    let addr = listener.local_addr().map_err(Error::from)?;
-    listener.set_nonblocking(true).map_err(Error::from)?;
 
     let shutdown = Arc::new(AtomicBool::new(false));
-    let (tx, rx) = sync_channel::<CoreMsg>(cfg.queue_cap.max(1));
+    let (tx, rx) = sync_channel::<RouterMsg>(cfg.queue_cap.max(1));
 
-    // The boxed scheduler is not Send by contract (the registry builds
-    // per-thread, like the sweep pool), so the core is CONSTRUCTED on
-    // the thread that will own it; startup errors come back over a
-    // ready-channel before any traffic is accepted.
-    let core_flag = shutdown.clone();
-    let core_cfg = cfg.clone();
-    let (ready_tx, ready_rx) = channel::<Result<()>>();
-    let core_thread = std::thread::spawn(move || {
-        let core = match build_core(&core_cfg) {
-            Ok(core) => {
-                let _ = ready_tx.send(Ok(()));
-                core
-            }
-            Err(e) => {
-                let _ = ready_tx.send(Err(e));
-                return None;
-            }
-        };
-        Some(core_loop(core, rx, core_flag))
-    });
-    match ready_rx.recv() {
-        Ok(Ok(())) => {}
-        Ok(Err(e)) => {
-            let _ = core_thread.join();
-            return Err(e);
-        }
-        Err(_) => {
-            let _ = core_thread.join();
-            return Err(err!("scheduler-core thread died during startup"));
-        }
-    }
+    // Cells are constructed on their owning threads (the boxed scheduler
+    // is not Send by contract, like the sweep pool); shard::spawn blocks
+    // until every cell reported ready, so startup errors surface here
+    // before any traffic is accepted.
+    let core_thread = shard::spawn(
+        ShardConfig {
+            service: cfg.service.clone(),
+            shards: cfg.shards,
+            batch: cfg.batch,
+            oplog: cfg.oplog.clone(),
+            recover: cfg.recover.clone(),
+        },
+        rx,
+        shutdown.clone(),
+    )?;
 
     let accept_flag = shutdown.clone();
     let accept_tx = tx.clone();
+    let reactors = cfg.reactors.max(1);
     let accept_thread =
-        std::thread::spawn(move || accept_loop(listener, accept_tx, accept_flag));
+        std::thread::spawn(move || accept_loop(listener, accept_tx, accept_flag, reactors));
 
     // Optional Prometheus scrape endpoint: a second listener whose
     // connections fetch the `metrics_prom` body through the same bounded
-    // queue (so the core thread renders it — no shared counters).
+    // queue (so the router renders the merged exposition — no shared
+    // counters).
     let (prom_thread, prom_addr) = match &cfg.prom_addr {
         Some(addr) => {
             let prom_listener = TcpListener::bind(addr)
@@ -248,7 +226,7 @@ pub fn start(cfg: DaemonConfig) -> Result<DaemonHandle> {
                 }
                 remaining -= chunk;
             }
-            if timer_tx.send(CoreMsg::new(Request::Tick, None)).is_err() {
+            if timer_tx.send(RouterMsg::new(Request::Tick, None)).is_err() {
                 break;
             }
         }))
@@ -267,45 +245,10 @@ pub fn start(cfg: DaemonConfig) -> Result<DaemonHandle> {
     })
 }
 
-/// The single scheduler-core thread: applies requests in queue order and
-/// exits when every sender is gone (acceptor + handlers + timer have
-/// drained and closed). Requests accepted into the queue are always
-/// answered, shutdown or not.
-fn core_loop(
-    mut core: ServiceCore,
-    rx: Receiver<CoreMsg>,
-    shutdown: Arc<AtomicBool>,
-) -> ServiceReport {
-    loop {
-        match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(msg) => {
-                if obs::flags() != 0 {
-                    obs::record(
-                        Stage::QueueWait,
-                        msg.enqueued.elapsed().as_micros() as u64,
-                    );
-                }
-                let response = core.apply(&msg.req);
-                if matches!(msg.req, Request::Shutdown) {
-                    shutdown.store(true, Ordering::SeqCst);
-                }
-                if let Some(ch) = msg.resp {
-                    let _ = ch.send(response.to_string());
-                }
-            }
-            Err(RecvTimeoutError::Timeout) => {} // keep serving until senders drop
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    log_debug!("core: queue drained, computing final report");
-    core.report()
-}
-
 /// Serve the Prometheus text exposition over plain HTTP: any request on
 /// the `--prom-addr` listener is answered with the `metrics_prom` body
-/// (fetched through the bounded queue, so the core thread renders it).
-fn prom_loop(listener: TcpListener, tx: SyncSender<CoreMsg>, shutdown: Arc<AtomicBool>) {
-    use std::io::Read as _;
+/// (fetched through the bounded queue, so the router renders it).
+fn prom_loop(listener: TcpListener, tx: SyncSender<RouterMsg>, shutdown: Arc<AtomicBool>) {
     loop {
         if shutdown.load(Ordering::SeqCst) {
             break;
@@ -327,7 +270,7 @@ fn prom_loop(listener: TcpListener, tx: SyncSender<CoreMsg>, shutdown: Arc<Atomi
                 );
                 let _ = stream.write_all(resp.as_bytes());
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
             }
             Err(_) => std::thread::sleep(Duration::from_millis(5)),
@@ -335,105 +278,269 @@ fn prom_loop(listener: TcpListener, tx: SyncSender<CoreMsg>, shutdown: Arc<Atomi
     }
 }
 
-/// Round-trip a `metrics_prom` request through the core queue and pull
+/// Round-trip a `metrics_prom` request through the router queue and pull
 /// the text body out of the JSON response. `None` when the daemon is
-/// draining (the queue or core is gone).
-fn fetch_prom_body(tx: &SyncSender<CoreMsg>) -> Option<String> {
+/// draining (the queue or router is gone).
+fn fetch_prom_body(tx: &SyncSender<RouterMsg>) -> Option<String> {
     let (rtx, rrx) = channel();
-    tx.send(CoreMsg::new(Request::MetricsProm, Some(rtx))).ok()?;
+    tx.send(RouterMsg::new(Request::MetricsProm, Some(rtx))).ok()?;
     let line = rrx.recv().ok()?;
     let v = Json::parse(&line).ok()?;
     v.get("prom").and_then(Json::as_str).map(str::to_string)
 }
 
-/// Accept connections until shutdown, spawning one handler thread per
-/// connection; joins the handlers before exiting (so `DaemonHandle::join`
-/// observes a fully drained frontend).
-fn accept_loop(listener: TcpListener, tx: SyncSender<CoreMsg>, shutdown: Arc<AtomicBool>) {
-    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+/// Accept connections until shutdown, dealing accepted sockets
+/// round-robin to a fixed pool of reactor threads; joins the reactors
+/// before exiting (so `DaemonHandle::join` observes a fully drained
+/// frontend).
+fn accept_loop(
+    listener: TcpListener,
+    tx: SyncSender<RouterMsg>,
+    shutdown: Arc<AtomicBool>,
+    reactors: usize,
+) {
+    let mut deals: Vec<Sender<TcpStream>> = Vec::with_capacity(reactors);
+    let mut handles: Vec<JoinHandle<()>> = Vec::with_capacity(reactors);
+    for _ in 0..reactors {
+        let (deal_tx, deal_rx) = channel::<TcpStream>();
+        let tx = tx.clone();
+        let flag = shutdown.clone();
+        handles.push(std::thread::spawn(move || reactor_loop(deal_rx, tx, flag)));
+        deals.push(deal_tx);
+    }
+    drop(tx);
+    let mut next = 0usize;
     loop {
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                log_debug!("conn: accepted {peer}");
-                let tx = tx.clone();
-                let flag = shutdown.clone();
-                handlers.push(std::thread::spawn(move || handle_connection(stream, tx, flag)));
+        // drain the whole accept backlog before sleeping: a load test
+        // opening thousands of connections at once lands in one sweep
+        let mut accepted = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    log_debug!("conn: accepted {peer}");
+                    let _ = deals[next % deals.len()].send(stream);
+                    next = next.wrapping_add(1);
+                    accepted = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+        if !accepted {
+            std::thread::sleep(Duration::from_millis(1));
         }
     }
-    log_debug!("drain: joining {} connection handler(s)", handlers.len());
-    for h in handlers {
+    log_debug!("drain: closing {} reactor(s)", handles.len());
+    drop(deals); // reactors stop adopting, drain, and exit
+    for h in handles {
         let _ = h.join();
     }
     log_debug!("drain: frontend closed");
 }
 
-/// One connection: read NDJSON request lines, forward each through the
-/// bounded queue (blocking on queue-full = backpressure), write the
-/// response line. Closes on EOF, I/O error, or shutdown.
-fn handle_connection(stream: TcpStream, tx: SyncSender<CoreMsg>, shutdown: Arc<AtomicBool>) {
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(read_half);
-    let mut stream = stream;
-    let mut line = String::new();
-    'conn: loop {
-        // Accumulate one full line; a read timeout leaves partial data in
-        // `line` and is retried (checking the shutdown flag in between).
-        let at_eof = loop {
-            match reader.read_line(&mut line) {
-                Ok(0) => break true,
-                Ok(_) => break !line.ends_with('\n'),
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    if shutdown.load(Ordering::SeqCst) {
-                        break 'conn;
-                    }
-                }
-                Err(_) => break 'conn,
-            }
-        };
-        let trimmed = line.trim();
-        if !trimmed.is_empty() {
-            let response = match Request::parse(trimmed) {
-                Err(e) => err_response(&e).to_string(),
-                Ok(req) => {
-                    let (rtx, rrx) = channel();
-                    if tx.send(CoreMsg::new(req, Some(rtx))).is_err() {
-                        break 'conn;
-                    }
-                    match rrx.recv() {
-                        Ok(s) => s,
-                        Err(_) => break 'conn,
-                    }
-                }
-            };
-            if stream
-                .write_all(response.as_bytes())
-                .and_then(|_| stream.write_all(b"\n"))
-                .and_then(|_| stream.flush())
-                .is_err()
-            {
-                break 'conn;
-            }
-        }
-        line.clear();
-        if at_eof || shutdown.load(Ordering::SeqCst) {
-            break 'conn;
+/// An in-flight response slot: answers are written back in request
+/// order, so a parse error answered inline queues behind earlier
+/// requests still at the router.
+enum Pending {
+    Ready(String),
+    Waiting(Receiver<String>),
+}
+
+/// Reject request lines above this size without a newline — a hostile
+/// client streaming an endless line would otherwise grow the read
+/// buffer without bound.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// One nonblocking connection owned by a reactor.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet terminated by a newline.
+    rbuf: Vec<u8>,
+    /// In-flight responses, in request order.
+    pending: VecDeque<Pending>,
+    /// Serialized responses not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// Peer sent EOF (or the daemon is draining): read no further
+    /// requests, but flush what is owed.
+    closing: bool,
+    /// Tear down regardless of owed bytes (I/O error, hostile input).
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_nonblocking(true);
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            pending: VecDeque::new(),
+            wbuf: Vec::new(),
+            closing: false,
+            dead: false,
         }
     }
-    if let Ok(peer) = stream.peer_addr() {
-        log_debug!("conn: closed {peer}");
+
+    /// Read everything the socket has ready and enqueue a response slot
+    /// per complete line. Returns true if any progress was made.
+    fn pump_reads(&mut self, chunk: &mut [u8], tx: &SyncSender<RouterMsg>) -> bool {
+        if self.closing || self.dead {
+            return false;
+        }
+        let mut progress = false;
+        loop {
+            match self.stream.read(chunk) {
+                Ok(0) => {
+                    self.closing = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return progress;
+                }
+            }
+        }
+        while let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = self.rbuf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&raw);
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            match Request::parse(trimmed) {
+                Err(e) => self.pending.push_back(Pending::Ready(err_response(&e).to_string())),
+                Ok(req) => {
+                    let (rtx, rrx) = channel();
+                    // blocking on a full queue = backpressure toward
+                    // every connection this reactor owns
+                    if tx.send(RouterMsg::new(req, Some(rtx))).is_err() {
+                        self.dead = true;
+                        return true;
+                    }
+                    self.pending.push_back(Pending::Waiting(rrx));
+                }
+            }
+            progress = true;
+        }
+        if self.rbuf.len() > MAX_LINE_BYTES {
+            log_debug!("conn: dropping peer with an unterminated {}-byte line", self.rbuf.len());
+            self.dead = true;
+        }
+        progress
+    }
+
+    /// Move arrived responses (in request order) into the write buffer
+    /// and flush what the socket will take. Returns true on progress.
+    fn pump_writes(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        let mut progress = false;
+        while let Some(front) = self.pending.front_mut() {
+            match front {
+                Pending::Ready(_) => {
+                    let Some(Pending::Ready(s)) = self.pending.pop_front() else {
+                        unreachable!()
+                    };
+                    self.wbuf.extend_from_slice(s.as_bytes());
+                    self.wbuf.push(b'\n');
+                    progress = true;
+                }
+                Pending::Waiting(rx) => match rx.try_recv() {
+                    Ok(s) => {
+                        self.wbuf.extend_from_slice(s.as_bytes());
+                        self.wbuf.push(b'\n');
+                        self.pending.pop_front();
+                        progress = true;
+                    }
+                    Err(TryRecvError::Empty) => break, // preserve order
+                    Err(TryRecvError::Disconnected) => {
+                        self.dead = true;
+                        return progress;
+                    }
+                },
+            }
+        }
+        let mut written = 0;
+        while written < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[written..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    written += n;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if written > 0 {
+            self.wbuf.drain(..written);
+        }
+        progress
+    }
+
+    /// Nothing left to serve: every accepted request answered and
+    /// flushed.
+    fn drained(&self) -> bool {
+        self.pending.is_empty() && self.wbuf.is_empty()
+    }
+}
+
+/// One reactor thread: adopt connections dealt by the acceptor and poll
+/// them in a readiness loop. Exits when the acceptor is gone and every
+/// owned connection has drained.
+fn reactor_loop(
+    deal_rx: Receiver<TcpStream>,
+    tx: SyncSender<RouterMsg>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut chunk = vec![0u8; 64 * 1024];
+    let mut acceptor_gone = false;
+    loop {
+        let draining = shutdown.load(Ordering::SeqCst);
+        loop {
+            match deal_rx.try_recv() {
+                Ok(stream) => conns.push(Conn::new(stream)),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    acceptor_gone = true;
+                    break;
+                }
+            }
+        }
+        let mut progress = false;
+        for conn in conns.iter_mut() {
+            if draining {
+                // stop reading; finish answering what was accepted
+                conn.closing = true;
+            }
+            progress |= conn.pump_reads(&mut chunk, &tx);
+            progress |= conn.pump_writes();
+        }
+        conns.retain(|c| !c.dead && !(c.closing && c.drained()));
+        if acceptor_gone && conns.is_empty() {
+            break;
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 }
 
@@ -484,6 +591,7 @@ pub fn termination_requested() -> bool {
 mod tests {
     use super::super::core::synthetic_service_config;
     use super::*;
+    use std::io::{BufRead, BufReader};
 
     fn client(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
         let stream = TcpStream::connect(addr).unwrap();
@@ -533,7 +641,6 @@ mod tests {
         stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
         stream.flush().unwrap();
         let mut resp = String::new();
-        use std::io::Read as _;
         stream.read_to_string(&mut resp).unwrap();
         assert!(resp.starts_with("HTTP/1.0 200 OK"), "{resp}");
         assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
@@ -571,5 +678,56 @@ mod tests {
         handle.shutdown();
         let report = handle.join().unwrap();
         assert!(report.slot > 0);
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_order() {
+        // several requests written before any response is read: the
+        // readiness loop must answer them strictly in request order
+        let cfg = DaemonConfig::new(synthetic_service_config("fifo", 1, 4, 6, 8));
+        let handle = start(cfg).unwrap();
+        let (mut reader, mut stream) = client(handle.addr);
+        let mut batch = String::new();
+        batch.push_str("{\"op\":\"status\"}\n");
+        batch.push_str("not json\n");
+        batch.push_str("{\"op\":\"tick\"}\n");
+        batch.push_str("{\"op\":\"status\"}\n");
+        stream.write_all(batch.as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut lines = Vec::new();
+        for _ in 0..4 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            lines.push(line);
+        }
+        assert!(lines[0].contains("\"slot\":0"), "{}", lines[0]);
+        assert!(lines[1].contains("\"ok\":false"), "{}", lines[1]);
+        assert!(lines[2].contains("\"slot\":1"), "{}", lines[2]);
+        assert!(lines[3].contains("\"slot\":1"), "{}", lines[3]);
+        handle.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn sharded_daemon_serves_and_merges_over_the_wire() {
+        let mut cfg = DaemonConfig::new(synthetic_service_config("fifo", 1, 8, 12, 8));
+        cfg.shards = 4;
+        cfg.batch = 4;
+        let handle = start(cfg).unwrap();
+        let (mut reader, mut stream) = client(handle.addr);
+        let cells = roundtrip(&mut reader, &mut stream, "{\"op\":\"cells\"}");
+        assert!(cells.contains("\"shards\":4"), "{cells}");
+        let cluster = roundtrip(&mut reader, &mut stream, "{\"op\":\"cluster\"}");
+        assert!(cluster.contains("\"machines\":8"), "{cluster}");
+        let tick = roundtrip(&mut reader, &mut stream, "{\"op\":\"tick\"}");
+        assert!(tick.contains("\"slot\":1"), "{tick}");
+        let status = roundtrip(&mut reader, &mut stream, "{\"op\":\"status\"}");
+        assert!(status.contains("\"slot\":1"), "{status}");
+        assert!(status.contains("\"submitted\":0"), "{status}");
+        let down = roundtrip(&mut reader, &mut stream, "{\"op\":\"shutdown\"}");
+        assert!(down.contains("\"draining\":true"), "{down}");
+        let report = handle.join().unwrap();
+        assert_eq!(report.slot, 1);
+        assert_eq!(report.alloc[0].len(), 8);
     }
 }

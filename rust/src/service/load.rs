@@ -13,18 +13,29 @@
 //! throughput plus p50/p95/p99 latency and serializes to
 //! `BENCH_service.json`.
 //!
+//! A failed connection does **not** skew or abort the send schedule:
+//! its unsent jobs move to a shared orphan list that healthy
+//! connections drain after their own share (latency still measured from
+//! the original scheduled send time), the failure is counted in
+//! `conn_failures`, and only jobs no connection could deliver count as
+//! `errors`.
+//!
 //! `--ticks` additionally replays the workload's slot boundaries as
 //! `tick` requests (virtual-clock mode) — every arrival slot and the
 //! remaining horizon, which makes the daemon traverse the exact arrival
 //! sequence and slot schedule a `SimEngine` run would see; it requires a
 //! single connection, since slot ordering across connections is
-//! unordered by design.
+//! unordered by design. Tick replay is a parity tool, not a soak tool,
+//! so there a connection failure stays fatal.
 
 use std::io::{BufRead, BufReader, Write as _};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::err;
+use crate::jobs::Job;
 use crate::sweep::WorkloadSpec;
 use crate::util::error::{Error, Result};
 use crate::util::json::{self, Json};
@@ -60,6 +71,9 @@ pub struct LoadReport {
     pub rejected: usize,
     pub deferred: usize,
     pub errors: usize,
+    /// Connections that failed (connect or mid-run I/O); their jobs were
+    /// resent on healthy connections.
+    pub conn_failures: usize,
     pub connections: usize,
     pub target_rate: f64,
     pub achieved_rate: f64,
@@ -81,6 +95,7 @@ impl LoadReport {
             ("rejected", json::num(self.rejected as f64)),
             ("deferred", json::num(self.deferred as f64)),
             ("errors", json::num(self.errors as f64)),
+            ("conn_failures", json::num(self.conn_failures as f64)),
             ("connections", json::num(self.connections as f64)),
             ("target_rate", json::num(self.target_rate)),
             ("achieved_rate", json::num(self.achieved_rate)),
@@ -103,6 +118,7 @@ impl LoadReport {
     }
 }
 
+#[derive(Default)]
 struct ConnStats {
     latencies_ms: Vec<f64>,
     admitted: usize,
@@ -111,47 +127,100 @@ struct ConnStats {
     errors: usize,
 }
 
-/// One client connection worker: submit its share of the jobs at their
-/// scheduled send times (`ticks` only ever true for the single-connection
-/// case; `horizon` bounds the post-arrival tick drain).
-fn run_connection(
-    addr: &str,
-    jobs: &[(usize, &crate::jobs::Job)],
-    start: Instant,
-    interval_secs: f64,
-    ticks: bool,
-    horizon: usize,
-) -> Result<ConnStats> {
-    let stream = TcpStream::connect(addr).map_err(|e| err!("connect {addr}: {e}"))?;
-    let _ = stream.set_nodelay(true);
-    let mut reader = BufReader::new(stream.try_clone().map_err(Error::from)?);
-    let mut stream = stream;
-    let mut st = ConnStats {
-        latencies_ms: Vec::with_capacity(jobs.len()),
-        admitted: 0,
-        rejected: 0,
-        deferred: 0,
-        errors: 0,
-    };
-    let roundtrip = |stream: &mut TcpStream,
-                     reader: &mut BufReader<TcpStream>,
-                     req: &Request|
-     -> Result<String> {
+impl ConnStats {
+    /// Record one submit response; latency from the *scheduled* send
+    /// time (see module docs).
+    fn record(&mut self, target: Instant, resp: &str) {
+        self.latencies_ms
+            .push(Instant::now().duration_since(target).as_secs_f64() * 1e3);
+        match Json::parse(resp.trim()) {
+            Ok(v) if v.get("ok") == Some(&Json::Bool(true)) => {
+                match v.get("decision").and_then(Json::as_str) {
+                    Some("admitted") => self.admitted += 1,
+                    Some("rejected") => self.rejected += 1,
+                    Some("deferred") => self.deferred += 1,
+                    _ => self.errors += 1,
+                }
+            }
+            _ => self.errors += 1,
+        }
+    }
+
+    fn absorb(&mut self, other: ConnStats) {
+        self.latencies_ms.extend_from_slice(&other.latencies_ms);
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.deferred += other.deferred;
+        self.errors += other.errors;
+    }
+}
+
+/// One NDJSON client connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).map_err(|e| err!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone().map_err(Error::from)?);
+        Ok(Client { reader, stream })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<String> {
         let mut line = req.to_line();
         line.push('\n');
-        stream.write_all(line.as_bytes()).map_err(Error::from)?;
+        self.stream.write_all(line.as_bytes()).map_err(Error::from)?;
         let mut resp = String::new();
-        reader.read_line(&mut resp).map_err(Error::from)?;
+        self.reader.read_line(&mut resp).map_err(Error::from)?;
         if resp.is_empty() {
             return Err(err!("daemon closed the connection"));
         }
         Ok(resp)
+    }
+}
+
+/// Jobs whose connection died before they could be sent, waiting for a
+/// healthy connection to pick them up (in scheduled order).
+type Orphans = Mutex<Vec<(usize, Job)>>;
+
+/// One client connection worker: submit its share of the jobs at their
+/// scheduled send times, then drain any orphans stranded by failed
+/// sibling connections (`ticks` only ever true for the single-connection
+/// case, where failures stay fatal; `horizon` bounds the post-arrival
+/// tick drain).
+fn run_connection(
+    addr: &str,
+    jobs: &[(usize, &Job)],
+    start: Instant,
+    interval_secs: f64,
+    ticks: bool,
+    horizon: usize,
+    orphans: &Orphans,
+    conn_failures: &AtomicUsize,
+) -> Result<ConnStats> {
+    let mut st = ConnStats::default();
+    let mut client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            if ticks {
+                return Err(e);
+            }
+            // the schedule survives this connection: every job it owned
+            // waits for a healthy sibling
+            conn_failures.fetch_add(1, Ordering::Relaxed);
+            let mut o = orphans.lock().unwrap();
+            o.extend(jobs.iter().map(|&(k, job)| (k, job.clone())));
+            return Ok(st);
+        }
     };
     let mut slot = 0usize;
-    for &(k, job) in jobs {
+    for (idx, &(k, job)) in jobs.iter().enumerate() {
         if ticks {
             while slot < job.arrival {
-                roundtrip(&mut stream, &mut reader, &Request::Tick)?;
+                client.roundtrip(&Request::Tick)?;
                 slot += 1;
             }
         }
@@ -160,29 +229,44 @@ fn run_connection(
         if target > now {
             std::thread::sleep(target - now);
         }
-        let resp = roundtrip(&mut stream, &mut reader, &Request::Submit { job: job.clone() })?;
-        // latency from the *scheduled* send time: a request that had to
-        // wait for its connection reports that wait (see module docs)
-        st.latencies_ms
-            .push(Instant::now().duration_since(target).as_secs_f64() * 1e3);
-        match Json::parse(resp.trim()) {
-            Ok(v) if v.get("ok") == Some(&Json::Bool(true)) => {
-                match v.get("decision").and_then(Json::as_str) {
-                    Some("admitted") => st.admitted += 1,
-                    Some("rejected") => st.rejected += 1,
-                    Some("deferred") => st.deferred += 1,
-                    _ => st.errors += 1,
+        match client.roundtrip(&Request::Submit { job: job.clone() }) {
+            Ok(resp) => st.record(target, &resp),
+            Err(e) => {
+                if ticks {
+                    return Err(e);
                 }
+                conn_failures.fetch_add(1, Ordering::Relaxed);
+                let mut o = orphans.lock().unwrap();
+                o.extend(jobs[idx..].iter().map(|&(k, job)| (k, job.clone())));
+                return Ok(st);
             }
-            _ => st.errors += 1,
         }
     }
     if ticks {
         // finalize the remaining slots so slot-driven schedulers run
         // their whole horizon before any --shutdown drain
         while slot < horizon {
-            roundtrip(&mut stream, &mut reader, &Request::Tick)?;
+            client.roundtrip(&Request::Tick)?;
             slot += 1;
+        }
+        return Ok(st);
+    }
+    // own share delivered: adopt jobs stranded by failed siblings
+    loop {
+        let next = orphans.lock().unwrap().pop();
+        let Some((k, job)) = next else { break };
+        let target = start + Duration::from_secs_f64(k as f64 * interval_secs);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        match client.roundtrip(&Request::Submit { job: job.clone() }) {
+            Ok(resp) => st.record(target, &resp),
+            Err(_) => {
+                conn_failures.fetch_add(1, Ordering::Relaxed);
+                orphans.lock().unwrap().push((k, job));
+                break;
+            }
         }
     }
     Ok(st)
@@ -208,19 +292,30 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
 
     // Round-robin job assignment, keeping each connection's share in
     // global submission order.
-    let mut shares: Vec<Vec<(usize, &crate::jobs::Job)>> = vec![Vec::new(); connections];
+    let mut shares: Vec<Vec<(usize, &Job)>> = vec![Vec::new(); connections];
     for (k, job) in jobs.iter().enumerate() {
         shares[k % connections].push((k, job));
     }
 
     let horizon = cfg.workload.horizon;
+    let orphans: Orphans = Mutex::new(Vec::new());
+    let conn_failures = AtomicUsize::new(0);
     let start = Instant::now();
     let results: Vec<Result<ConnStats>> = std::thread::scope(|scope| {
         let handles: Vec<_> = shares
             .iter()
             .map(|share| {
                 scope.spawn(|| {
-                    run_connection(&cfg.addr, share, start, interval_secs, cfg.ticks, horizon)
+                    run_connection(
+                        &cfg.addr,
+                        share,
+                        start,
+                        interval_secs,
+                        cfg.ticks,
+                        horizon,
+                        &orphans,
+                        &conn_failures,
+                    )
                 })
             })
             .collect();
@@ -229,45 +324,52 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
             .map(|h| h.join().unwrap_or_else(|_| Err(err!("load worker panicked"))))
             .collect()
     });
+
+    let mut total = ConnStats::default();
+    for r in results {
+        total.absorb(r?);
+    }
+
+    // Last resort: every connection died with jobs still owed. One fresh
+    // connection tries to deliver them; what it cannot becomes errors.
+    let mut leftovers = orphans.into_inner().unwrap();
+    if !leftovers.is_empty() {
+        if let Ok(mut client) = Client::connect(&cfg.addr) {
+            while let Some((k, job)) = leftovers.pop() {
+                let target = start + Duration::from_secs_f64(k as f64 * interval_secs);
+                match client.roundtrip(&Request::Submit { job }) {
+                    Ok(resp) => total.record(target, &resp),
+                    Err(_) => {
+                        conn_failures.fetch_add(1, Ordering::Relaxed);
+                        total.errors += 1;
+                        break;
+                    }
+                }
+            }
+        } else {
+            conn_failures.fetch_add(1, Ordering::Relaxed);
+        }
+        total.errors += leftovers.len();
+    }
     let elapsed_secs = start.elapsed().as_secs_f64();
 
-    let mut latencies: Vec<f64> = Vec::with_capacity(jobs.len());
-    let mut admitted = 0;
-    let mut rejected = 0;
-    let mut deferred = 0;
-    let mut errors = 0;
-    for r in results {
-        let st = r?;
-        latencies.extend_from_slice(&st.latencies_ms);
-        admitted += st.admitted;
-        rejected += st.rejected;
-        deferred += st.deferred;
-        errors += st.errors;
-    }
-
     if cfg.shutdown {
-        let stream =
-            TcpStream::connect(&cfg.addr).map_err(|e| err!("connect {}: {e}", cfg.addr))?;
-        let mut reader = BufReader::new(stream.try_clone().map_err(Error::from)?);
-        let mut stream = stream;
-        let mut line = Request::Shutdown.to_line();
-        line.push('\n');
-        stream.write_all(line.as_bytes()).map_err(Error::from)?;
-        let mut resp = String::new();
-        let _ = reader.read_line(&mut resp);
+        let mut client = Client::connect(&cfg.addr)?;
+        let _ = client.roundtrip(&Request::Shutdown);
     }
 
-    let tail = stats::Summary::of(&latencies);
+    let tail = stats::Summary::of(&total.latencies_ms);
     Ok(LoadReport {
-        requests: latencies.len(),
-        admitted,
-        rejected,
-        deferred,
-        errors,
+        requests: total.latencies_ms.len(),
+        admitted: total.admitted,
+        rejected: total.rejected,
+        deferred: total.deferred,
+        errors: total.errors,
+        conn_failures: conn_failures.into_inner(),
         connections,
         target_rate: cfg.rate,
         achieved_rate: if elapsed_secs > 0.0 {
-            latencies.len() as f64 / elapsed_secs
+            total.latencies_ms.len() as f64 / elapsed_secs
         } else {
             0.0
         },
@@ -293,6 +395,7 @@ mod tests {
             rejected: 30,
             deferred: 10,
             errors: 0,
+            conn_failures: 2,
             connections: 4,
             target_rate: 500.0,
             achieved_rate: 480.5,
@@ -305,7 +408,7 @@ mod tests {
             max_ms: 12.0,
         };
         let line = r.to_json().to_string();
-        for field in ["\"bench\":\"service_load\"", "\"p50_ms\":1.5", "\"p95_ms\":4", "\"p99_ms\":9.75", "\"p999_ms\":11.5", "\"achieved_rate\":480.5", "\"requests\":100"] {
+        for field in ["\"bench\":\"service_load\"", "\"p50_ms\":1.5", "\"p95_ms\":4", "\"p99_ms\":9.75", "\"p999_ms\":11.5", "\"achieved_rate\":480.5", "\"requests\":100", "\"conn_failures\":2"] {
             assert!(line.contains(field), "{field} missing from {line}");
         }
     }
@@ -322,5 +425,24 @@ mod tests {
             shutdown: false,
         };
         assert!(run_load(&cfg).unwrap_err().to_string().contains("connections 1"));
+    }
+
+    #[test]
+    fn dead_daemon_counts_failures_instead_of_panicking() {
+        // nothing listens on a reserved port: every connection fails,
+        // every job ends up an error, and the run still reports
+        let cfg = LoadConfig {
+            addr: "127.0.0.1:1".into(),
+            connections: 3,
+            rate: 100000.0,
+            workload: WorkloadSpec::synthetic(6, 8, 0),
+            seed: 1,
+            ticks: false,
+            shutdown: false,
+        };
+        let report = run_load(&cfg).unwrap();
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.errors, 6, "all jobs undeliverable");
+        assert!(report.conn_failures >= 3, "{}", report.conn_failures);
     }
 }

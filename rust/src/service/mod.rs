@@ -6,9 +6,14 @@
 //!   (boxed scheduler + the shared
 //!   [`AdmissionCore`](crate::sim::AdmissionCore) + virtual slot clock +
 //!   metrics + op-log). Also the `--recover` replay engine.
-//! * [`daemon`]   — `dmlrs serve`: std-only TCP daemon; connection
-//!   handler threads feed a bounded MPSC queue into the one core thread
+//! * [`daemon`]   — `dmlrs serve`: std-only TCP daemon; a nonblocking
+//!   readiness loop (fixed reactor-thread pool, no thread per
+//!   connection) feeds a bounded MPSC queue into the sharded router
 //!   (backpressure on queue-full, graceful drain on shutdown/SIGTERM).
+//! * [`shard`]    — `--shards k`: the cluster partitioned into cells,
+//!   each a full [`ServiceCore`] over a disjoint ledger slice on its own
+//!   thread, behind a router that places submits on the least-loaded
+//!   compatible cell and fans cluster-wide ops out to all cells.
 //! * [`protocol`] — the NDJSON wire protocol (`submit`, `tick`, `status`,
 //!   `cluster`, `metrics`, `metrics_prom`, `debug_dump`, `shutdown`).
 //! * [`codec`]    — `Job`/`Schedule` ⇄ JSON with bit-identical `f64`
@@ -32,8 +37,12 @@ pub mod daemon;
 pub mod load;
 pub mod oplog;
 pub mod protocol;
+pub mod shard;
 
-pub use self::core::{synthetic_service_config, ServiceConfig, ServiceCore, ServiceReport};
+pub use self::core::{
+    synthetic_service_config, CellId, PromCounters, ServiceConfig, ServiceCore,
+    ServiceReport,
+};
 pub use daemon::{
     install_term_handler, start as start_daemon, termination_requested, DaemonConfig,
     DaemonHandle,
@@ -41,3 +50,4 @@ pub use daemon::{
 pub use load::{run_load, LoadConfig, LoadReport};
 pub use oplog::{Op, OpLog};
 pub use protocol::Request;
+pub use shard::{merge_reports, RouterMsg, ShardConfig, ShardSpec};

@@ -14,6 +14,7 @@
 //! | `machine_down` | `machine`  | `slot`, `machine`, `interrupted`, `migrated`, `evicted` — take one machine down now: its capacity leaves the ledger from the current slot and stranded started jobs are migrated or evicted (see [`crate::chaos`]) |
 //! | `machine_up` | `machine`    | `slot`, `machine` — bring a downed machine back from the current slot |
 //! | `explain`  | `job_id`       | the job's decision trace (`decision`, `reason`, `utility`, `price`, `margin`, window/locality/reuse fields) + `explain`, a human-readable "why" line — requires the daemon's provenance store (see [`crate::obs::provenance`]) |
+//! | `cells`    | —              | `shards`, `cells` — the sharded daemon's cell layout: one entry per cell with its global machine range (`machines_start`/`machines_end`) and current ledger load (see [`super::shard`]); a single-core daemon answers for its one cell |
 //! | `metrics_prom` | —          | `prom` — Prometheus text exposition (per-stage span histograms + decision counters); also served raw over HTTP by `--prom-addr` |
 //! | `debug_dump` | —            | `flight` — the telemetry flight recorder's ring of recent spans (see [`crate::obs::flight`]) |
 //! | `shutdown` | —              | `draining: true` (the daemon then drains and exits) |
@@ -40,6 +41,7 @@ pub enum Request {
     MachineDown { machine: usize },
     MachineUp { machine: usize },
     Explain { job_id: usize },
+    Cells,
     MetricsProm,
     DebugDump,
     Shutdown,
@@ -83,12 +85,13 @@ impl Request {
                     as usize;
                 Ok(Request::Explain { job_id })
             }
+            "cells" => Ok(Request::Cells),
             "metrics_prom" => Ok(Request::MetricsProm),
             "debug_dump" => Ok(Request::DebugDump),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!(
                 "unknown op {other:?} (expected \
-                 submit|tick|status|cluster|metrics|metrics_prom|debug_dump|\
+                 submit|tick|status|cluster|cells|metrics|metrics_prom|debug_dump|\
                  replan|machine_down|machine_up|explain|shutdown)"
             )),
         }
@@ -119,6 +122,7 @@ impl Request {
                 ("op", json::s("explain")),
                 ("job_id", json::num(*job_id as f64)),
             ]),
+            Request::Cells => json::obj(vec![("op", json::s("cells"))]),
             Request::MetricsProm => json::obj(vec![("op", json::s("metrics_prom"))]),
             Request::DebugDump => json::obj(vec![("op", json::s("debug_dump"))]),
             Request::Shutdown => json::obj(vec![("op", json::s("shutdown"))]),
@@ -158,6 +162,7 @@ mod tests {
             Request::MachineDown { machine: 2 },
             Request::MachineUp { machine: 2 },
             Request::Explain { job_id: 7 },
+            Request::Cells,
             Request::MetricsProm,
             Request::DebugDump,
             Request::Shutdown,

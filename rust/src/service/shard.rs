@@ -1,0 +1,918 @@
+//! Sharded admission service: cluster **cells** behind a router.
+//!
+//! The cluster is partitioned into `k` cells; each cell is a full
+//! [`ServiceCore`] shard owning a disjoint machine range of the cluster
+//! (an [`AllocLedger`](crate::cluster::AllocLedger) slice via
+//! [`ClusterSpec::slice`](crate::sweep::ClusterSpec::slice)) and running
+//! on its own thread — so `k` independent solver scratches admit jobs in
+//! parallel while each cell keeps PR 3's single-threaded determinism
+//! contract intact.
+//!
+//! ```text
+//!                       ┌─► cell 0 (machines 0..m₁,  ids ≡ 0 mod k)
+//!  frontend queue ─► router ─► cell 1 (machines m₁..m₂, ids ≡ 1 mod k)
+//!                       └─► cell ⋯
+//! ```
+//!
+//! * **Submit** routes to the least-loaded *compatible* cell (every
+//!   demand dimension fits some machine of the cell) and the client's
+//!   response channel travels with it — the router never blocks on a
+//!   decision, so cells solve concurrently.
+//! * **tick / status / metrics / replan / metrics_prom** fan out to all
+//!   cells and the responses are merged (counters sum, fairness is
+//!   completion-weighted, latency percentiles report the worst cell).
+//! * **machine_down / machine_up / explain** forward to the owning cell
+//!   (machine ranges; job ids are interleaved, owner = `id % k`).
+//! * Each cell appends to its **own op-log** (`<path>.cell<i>` when
+//!   `k > 1`), so `--recover` replays every cell independently.
+//! * Inside a cell the queue drains in **batches** (`--batch M`): a run
+//!   of consecutive submits goes through
+//!   [`ServiceCore::submit_batch`], amortizing the journal write +
+//!   queue wakeup while staying byte-identical to `--batch 1` (the
+//!   oracle the sharding tests enforce).
+//!
+//! With `k = 1` the router is a pure passthrough — every message is
+//! forwarded to cell 0 verbatim, response channel and all — so a
+//! 1-shard daemon is byte-identical to the unsharded one.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{ResVec, NUM_RESOURCES};
+use crate::err;
+use crate::jobs::Job;
+use crate::obs::{self, Stage};
+use crate::sched::solver::SolverStats;
+use crate::util::error::Result;
+use crate::util::json::{self, Json};
+use crate::log_debug;
+
+use super::codec;
+use super::core::{
+    cell_entry_json, render_prom_body, CellId, PromCounters, ServiceConfig,
+    ServiceCore, ServiceReport,
+};
+use super::protocol::{err_response, ok_response, Request};
+
+/// How a `k`-shard service splits `machines` into contiguous cells:
+/// cell `i` owns global machines `[i·M/k, (i+1)·M/k)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub shards: usize,
+    pub machines: usize,
+}
+
+impl ShardSpec {
+    pub fn new(shards: usize, machines: usize) -> Result<ShardSpec> {
+        if shards == 0 {
+            return Err(err!("--shards must be ≥ 1"));
+        }
+        if shards > machines {
+            return Err(err!(
+                "--shards {shards} exceeds the cluster's {machines} machines \
+                 (every cell needs at least one machine)"
+            ));
+        }
+        Ok(ShardSpec { shards, machines })
+    }
+
+    /// Cell `i`'s global machine range `[start, end)`.
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        debug_assert!(i < self.shards);
+        (i * self.machines / self.shards, (i + 1) * self.machines / self.shards)
+    }
+
+    /// The cell owning global machine `m`, if any.
+    pub fn of_machine(&self, m: usize) -> Option<usize> {
+        (0..self.shards).find(|&i| {
+            let (start, end) = self.range(i);
+            (start..end).contains(&m)
+        })
+    }
+}
+
+/// Sharded-service configuration (the daemon carves this out of its own
+/// config).
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    pub service: ServiceConfig,
+    /// Number of cells; 1 = the unsharded passthrough.
+    pub shards: usize,
+    /// Cell drain-batch bound (≥ 1); consecutive submits in one drain go
+    /// through [`ServiceCore::submit_batch`].
+    pub batch: usize,
+    /// Op-log path base; cell `i` of a `k > 1` service appends to
+    /// `<path>.cell<i>`.
+    pub oplog: Option<String>,
+    /// Replay path base at startup (same per-cell suffix rule), then
+    /// continue appending.
+    pub recover: Option<String>,
+}
+
+/// One message into the router (the daemon frontend's queue element).
+pub struct RouterMsg {
+    pub req: Request,
+    /// Response channel; `None` for internally generated ticks.
+    pub resp: Option<Sender<String>>,
+    /// When the message entered the queue — the router measures the gap
+    /// into the `queue_wait` telemetry stage on receipt.
+    pub enqueued: Instant,
+}
+
+impl RouterMsg {
+    pub fn new(req: Request, resp: Option<Sender<String>>) -> RouterMsg {
+        RouterMsg { req, resp, enqueued: Instant::now() }
+    }
+}
+
+/// One message into a cell.
+struct CellMsg {
+    req: CellReq,
+    resp: Option<Sender<String>>,
+}
+
+enum CellReq {
+    /// A wire request; the cell serializes its own response.
+    Wire(Request),
+    /// Hand over the cell's Prometheus counter block (flushing the cell
+    /// thread's local span recorders) for the router to merge.
+    Prom(Sender<PromCounters>),
+}
+
+/// Everything the router knows about one cell.
+struct Cell {
+    tx: Sender<CellMsg>,
+    /// The cell's current ledger sum (`f64` bits), stored by the cell
+    /// thread after every drain burst — the router's placement signal.
+    load: Arc<AtomicU64>,
+    /// Elementwise max machine capacity of the cell: a job is
+    /// *compatible* when every demand dimension fits some machine.
+    max_cap: ResVec,
+    /// Total capacity (normalizes `load` so unequal cells compare
+    /// fairly).
+    cap_norm: f64,
+    base: usize,
+    len: usize,
+}
+
+/// Start the sharded service: spawn `k` cell threads (each constructing
+/// its core on its own thread — the boxed scheduler is not `Send`) and
+/// the router thread draining `rx`. Returns the router's join handle;
+/// joining it (after the queue's senders drop) yields the merged final
+/// report.
+pub fn spawn(
+    cfg: ShardConfig,
+    rx: Receiver<RouterMsg>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<JoinHandle<Option<ServiceReport>>> {
+    let spec = ShardSpec::new(cfg.shards, cfg.service.cluster.machines())?;
+    let batch = cfg.batch.max(1);
+
+    let mut cells = Vec::with_capacity(spec.shards);
+    let mut joins: Vec<JoinHandle<Option<ServiceReport>>> =
+        Vec::with_capacity(spec.shards);
+    for i in 0..spec.shards {
+        let (start, end) = spec.range(i);
+        let slice = cfg.service.cluster.slice(start, end).build();
+        let mut max_cap = ResVec::zero();
+        let mut cap_norm = 0.0;
+        for m in &slice.machines {
+            for r in 0..NUM_RESOURCES {
+                max_cap.0[r] = max_cap.0[r].max(m.capacity.0[r]);
+            }
+            cap_norm += m.capacity.sum();
+        }
+        let (tx, cell_rx) = channel::<CellMsg>();
+        let load = Arc::new(AtomicU64::new(0));
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let cell_cfg = cfg.clone();
+        let cell_load = load.clone();
+        let cell_flag = shutdown.clone();
+        joins.push(std::thread::spawn(move || {
+            let core = match build_cell_core(&cell_cfg, spec, i) {
+                Ok(core) => {
+                    let _ = ready_tx.send(Ok(()));
+                    core
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return None;
+                }
+            };
+            Some(cell_loop(core, cell_rx, batch, cell_load, cell_flag))
+        }));
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            outcome => {
+                // tear down the cells spawned so far and fail startup
+                drop(tx);
+                drop(cells);
+                for j in joins {
+                    let _ = j.join();
+                }
+                return Err(match outcome {
+                    Ok(Err(e)) => e,
+                    _ => err!("cell {i} thread died during startup"),
+                });
+            }
+        }
+        cells.push(Cell {
+            tx,
+            load,
+            max_cap,
+            cap_norm: cap_norm.max(1e-12),
+            base: start,
+            len: end - start,
+        });
+    }
+
+    let router_flag = shutdown;
+    let router_cfg = cfg;
+    Ok(std::thread::spawn(move || {
+        Some(router_loop(router_cfg, spec, cells, joins, rx, router_flag))
+    }))
+}
+
+/// Build cell `i`'s core: sliced cluster, interleaved id namespace,
+/// per-cell op-log / recovery.
+fn build_cell_core(cfg: &ShardConfig, spec: ShardSpec, i: usize) -> Result<ServiceCore> {
+    let (start, end) = spec.range(i);
+    let mut service = cfg.service.clone();
+    service.cluster = cfg.service.cluster.slice(start, end);
+    let cell = CellId { index: i, stride: spec.shards, machine_base: start };
+    match &cfg.recover {
+        Some(path) => {
+            ServiceCore::recover_cell(service, cell, &cell_log_path(path, i, spec.shards))
+        }
+        None => {
+            let mut core = ServiceCore::new(service)?;
+            core.set_cell(cell);
+            if let Some(path) = &cfg.oplog {
+                core.attach_log(&cell_log_path(path, i, spec.shards))?;
+            }
+            Ok(core)
+        }
+    }
+}
+
+/// Cell `i`'s op-log path: the base path itself for an unsharded (or
+/// 1-shard) service, `<base>.cell<i>` otherwise.
+pub fn cell_log_path(base: &str, i: usize, shards: usize) -> String {
+    if shards == 1 {
+        base.to_string()
+    } else {
+        format!("{base}.cell{i}")
+    }
+}
+
+/// One cell thread: drain the queue in batches, serving runs of
+/// consecutive submits through [`ServiceCore::submit_batch`] (one
+/// journal write per run). Exits — returning the cell's final report —
+/// when the router drops the sender.
+fn cell_loop(
+    mut core: ServiceCore,
+    rx: Receiver<CellMsg>,
+    batch: usize,
+    load: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+) -> ServiceReport {
+    load.store(core.ledger_sum().to_bits(), Ordering::Relaxed);
+    let mut burst: Vec<CellMsg> = Vec::new();
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(msg) => {
+                burst.push(msg);
+                while burst.len() < batch {
+                    match rx.try_recv() {
+                        Ok(m) => burst.push(m),
+                        Err(_) => break,
+                    }
+                }
+                serve_burst(&mut core, &mut burst, &shutdown);
+                load.store(core.ledger_sum().to_bits(), Ordering::Relaxed);
+            }
+            Err(RecvTimeoutError::Timeout) => {} // serve until the router drops us
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    log_debug!("cell {}: queue drained, computing final report", core.cell().index);
+    core.report()
+}
+
+/// Serve one drain burst in arrival order. Runs of consecutive submits
+/// are decided through the batch path; everything else applies singly.
+fn serve_burst(core: &mut ServiceCore, burst: &mut Vec<CellMsg>, shutdown: &AtomicBool) {
+    let mut i = 0;
+    while i < burst.len() {
+        let mut j = i;
+        while j < burst.len()
+            && matches!(&burst[j].req, CellReq::Wire(Request::Submit { .. }))
+        {
+            j += 1;
+        }
+        if j > i {
+            let jobs: Vec<Job> = burst[i..j]
+                .iter()
+                .map(|m| match &m.req {
+                    CellReq::Wire(Request::Submit { job }) => job.clone(),
+                    _ => unreachable!("run contains only submits"),
+                })
+                .collect();
+            let responses = core.submit_batch(jobs);
+            for (m, r) in burst[i..j].iter().zip(responses) {
+                if let Some(ch) = &m.resp {
+                    let _ = ch.send(r.to_string());
+                }
+            }
+            i = j;
+            continue;
+        }
+        let msg = &burst[i];
+        match &msg.req {
+            CellReq::Wire(req) => {
+                let response = core.apply(req);
+                if matches!(req, Request::Shutdown) {
+                    shutdown.store(true, Ordering::SeqCst);
+                }
+                if let Some(ch) = &msg.resp {
+                    let _ = ch.send(response.to_string());
+                }
+            }
+            CellReq::Prom(ch) => {
+                let _ = ch.send(core.prom_counters());
+            }
+        }
+        i += 1;
+    }
+    burst.clear();
+}
+
+/// The router thread: place/forward/fan-out until the frontend drops its
+/// senders, then drop the cell senders, join the cells, and merge their
+/// final reports.
+fn router_loop(
+    cfg: ShardConfig,
+    spec: ShardSpec,
+    cells: Vec<Cell>,
+    joins: Vec<JoinHandle<Option<ServiceReport>>>,
+    rx: Receiver<RouterMsg>,
+    shutdown: Arc<AtomicBool>,
+) -> ServiceReport {
+    // `cluster` never changes: answer it from the spec without a fan-out
+    // (byte-identical to the unsharded core's answer).
+    let cluster_answer = {
+        let full = cfg.service.cluster.build();
+        let caps: Vec<Json> =
+            full.machines.iter().map(|m| codec::resvec_to_json(&m.capacity)).collect();
+        ok_response(vec![
+            ("machines", json::num(full.machines.len() as f64)),
+            ("horizon", json::num(cfg.service.horizon() as f64)),
+            ("cluster", json::s(&cfg.service.cluster.key())),
+            ("capacities", Json::Arr(caps)),
+        ])
+    };
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(msg) => {
+                if obs::flags() != 0 {
+                    obs::record(
+                        Stage::QueueWait,
+                        msg.enqueued.elapsed().as_micros() as u64,
+                    );
+                }
+                route(&cfg, spec, &cells, &shutdown, &cluster_answer, msg);
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    log_debug!("router: frontend gone, draining {} cell(s)", cells.len());
+    drop(cells); // cells see Disconnected and return their reports
+    let mut reports = Vec::new();
+    for j in joins {
+        if let Ok(Some(r)) = j.join() {
+            reports.push(r);
+        }
+    }
+    merge_reports(&reports)
+}
+
+fn reply(resp: &Option<Sender<String>>, body: Json) {
+    if let Some(ch) = resp {
+        let _ = ch.send(body.to_string());
+    }
+}
+
+/// Route one frontend message. With one cell this is a pure passthrough
+/// (the byte-parity contract); with `k > 1` submits place, point ops
+/// forward to their owner, and cluster-wide ops fan out and merge.
+fn route(
+    cfg: &ShardConfig,
+    spec: ShardSpec,
+    cells: &[Cell],
+    shutdown: &AtomicBool,
+    cluster_answer: &Json,
+    msg: RouterMsg,
+) {
+    if cells.len() == 1 {
+        let _ = cells[0].tx.send(CellMsg { req: CellReq::Wire(msg.req), resp: msg.resp });
+        return;
+    }
+    match msg.req {
+        Request::Submit { job } => {
+            let cell = pick_cell(&job, cells);
+            let _ = cells[cell]
+                .tx
+                .send(CellMsg { req: CellReq::Wire(Request::Submit { job }), resp: msg.resp });
+        }
+        Request::Explain { job_id } => {
+            // interleaved id namespace: the owner is the residue class
+            let cell = job_id % cells.len();
+            let _ = cells[cell]
+                .tx
+                .send(CellMsg { req: CellReq::Wire(Request::Explain { job_id }), resp: msg.resp });
+        }
+        Request::MachineDown { machine } | Request::MachineUp { machine } => {
+            match spec.of_machine(machine) {
+                Some(cell) => {
+                    let _ = cells[cell]
+                        .tx
+                        .send(CellMsg { req: CellReq::Wire(msg.req), resp: msg.resp });
+                }
+                None => reply(
+                    &msg.resp,
+                    err_response(&format!(
+                        "machine {machine} out of range (cluster has {} machines)",
+                        spec.machines
+                    )),
+                ),
+            }
+        }
+        Request::Tick => match fan_out(cells, &Request::Tick) {
+            Some(responses) => reply(&msg.resp, responses[0].clone()),
+            None => reply(&msg.resp, err_response("daemon is draining")),
+        },
+        Request::Status => match fan_out(cells, &Request::Status) {
+            Some(responses) => reply(&msg.resp, merge_status(&responses)),
+            None => reply(&msg.resp, err_response("daemon is draining")),
+        },
+        Request::Metrics => match fan_out(cells, &Request::Metrics) {
+            Some(responses) => reply(&msg.resp, merge_metrics(&responses)),
+            None => reply(&msg.resp, err_response("daemon is draining")),
+        },
+        Request::Replan => match fan_out(cells, &Request::Replan) {
+            Some(responses) => reply(&msg.resp, merge_replan(&responses)),
+            None => reply(&msg.resp, err_response("daemon is draining")),
+        },
+        Request::MetricsProm => {
+            let mut waits = Vec::with_capacity(cells.len());
+            for c in cells {
+                let (ptx, prx) = channel();
+                let _ = c.tx.send(CellMsg { req: CellReq::Prom(ptx), resp: None });
+                waits.push(prx);
+            }
+            let mut merged = PromCounters::default();
+            let mut got = 0;
+            for w in waits {
+                if let Ok(c) = w.recv() {
+                    merged.merge(&c);
+                    got += 1;
+                }
+            }
+            if got < cells.len() {
+                reply(&msg.resp, err_response("daemon is draining"));
+            } else {
+                // the router's own spans (queue_wait) live in this
+                // thread's local recorders — hand them over too
+                obs::flush_local();
+                let body = render_prom_body(&merged);
+                reply(&msg.resp, ok_response(vec![("prom", json::s(&body))]));
+            }
+        }
+        Request::Cluster => reply(&msg.resp, cluster_answer.clone()),
+        Request::Cells => {
+            let entries: Vec<Json> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let load = f64::from_bits(c.load.load(Ordering::Relaxed));
+                    cell_entry_json(i, c.base, c.len, load)
+                })
+                .collect();
+            reply(
+                &msg.resp,
+                ok_response(vec![
+                    ("shards", json::num(cfg.shards as f64)),
+                    ("cells", Json::Arr(entries)),
+                ]),
+            );
+        }
+        Request::DebugDump => reply(
+            &msg.resp,
+            ok_response(vec![("flight", crate::obs::flight::dump_json())]),
+        ),
+        Request::Shutdown => {
+            shutdown.store(true, Ordering::SeqCst);
+            reply(&msg.resp, ok_response(vec![("draining", Json::Bool(true))]));
+        }
+    }
+}
+
+/// Least-loaded *compatible* cell for `job` (every demand dimension must
+/// fit the cell's biggest machine); falls back to least-loaded overall
+/// when no cell is compatible — the owning cell then rejects honestly,
+/// exactly like an unsharded cluster that cannot place the job.
+fn pick_cell(job: &Job, cells: &[Cell]) -> usize {
+    let load_of = |c: &Cell| f64::from_bits(c.load.load(Ordering::Relaxed)) / c.cap_norm;
+    let mut best: Option<(usize, f64)> = None;
+    for (i, c) in cells.iter().enumerate() {
+        if !job.worker_demand.fits_within(&c.max_cap, 1e-9)
+            || !job.ps_demand.fits_within(&c.max_cap, 1e-9)
+        {
+            continue;
+        }
+        let load = load_of(c);
+        if best.map_or(true, |(_, b)| load < b) {
+            best = Some((i, load));
+        }
+    }
+    if let Some((i, _)) = best {
+        return i;
+    }
+    let mut fallback = (0, f64::INFINITY);
+    for (i, c) in cells.iter().enumerate() {
+        let load = load_of(c);
+        if load < fallback.1 {
+            fallback = (i, load);
+        }
+    }
+    fallback.0
+}
+
+/// Send `req` to every cell and wait for all responses, in cell order.
+/// `None` when any cell is gone (the service is draining).
+fn fan_out(cells: &[Cell], req: &Request) -> Option<Vec<Json>> {
+    let mut waits = Vec::with_capacity(cells.len());
+    for c in cells {
+        let (rtx, rrx) = channel();
+        c.tx.send(CellMsg { req: CellReq::Wire(req.clone()), resp: Some(rtx) }).ok()?;
+        waits.push(rrx);
+    }
+    let mut out = Vec::with_capacity(cells.len());
+    for w in waits {
+        out.push(Json::parse(&w.recv().ok()?).ok()?);
+    }
+    Some(out)
+}
+
+fn num_of(v: &Json, k: &str) -> f64 {
+    v.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn field_sum(cells: &[Json], k: &str) -> f64 {
+    cells.iter().map(|c| num_of(c, k)).sum()
+}
+
+fn field_max(cells: &[Json], k: &str) -> f64 {
+    cells.iter().map(|c| num_of(c, k)).fold(0.0, f64::max)
+}
+
+/// Sum every numeric field of an object across cells (key union).
+fn merge_obj_sum(cells: &[&Json]) -> Json {
+    let mut out: BTreeMap<String, Json> = BTreeMap::new();
+    for c in cells {
+        if let Json::Obj(map) = c {
+            for (k, v) in map {
+                let cur = out.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                out.insert(k.clone(), json::num(cur + v.as_f64().unwrap_or(0.0)));
+            }
+        }
+    }
+    Json::Obj(out)
+}
+
+/// Merge per-cell `status` responses: counters sum, fairness is
+/// completion-weighted, labels/clock come from cell 0 (identical
+/// everywhere by construction).
+fn merge_status(cells: &[Json]) -> Json {
+    let c0 = &cells[0];
+    let completed = field_sum(cells, "completed");
+    let ftf = if completed > 0.0 {
+        cells.iter().map(|c| num_of(c, "ftf") * num_of(c, "completed")).sum::<f64>()
+            / completed
+    } else {
+        0.0
+    };
+    let label = |k: &str| c0.get(k).cloned().unwrap_or(Json::Null);
+    ok_response(vec![
+        ("slot", json::num(num_of(c0, "slot"))),
+        ("ended", label("ended")),
+        ("horizon", json::num(num_of(c0, "horizon"))),
+        ("scheduler", label("scheduler")),
+        ("submitted", json::num(field_sum(cells, "submitted"))),
+        ("admitted", json::num(field_sum(cells, "admitted"))),
+        ("rejected", json::num(field_sum(cells, "rejected"))),
+        ("deferred", json::num(field_sum(cells, "deferred"))),
+        ("completed", json::num(completed)),
+        ("active", json::num(field_sum(cells, "active"))),
+        ("replan", label("replan")),
+        ("replan_rounds", json::num(field_sum(cells, "replan_rounds"))),
+        ("replanned", json::num(field_sum(cells, "replanned"))),
+        ("churn", label("churn")),
+        ("evicted", json::num(field_sum(cells, "evicted"))),
+        ("migrated", json::num(field_sum(cells, "migrated"))),
+        ("ftf", json::num(ftf)),
+        ("total_utility", json::num(field_sum(cells, "total_utility"))),
+        ("ledger_sum", json::num(field_sum(cells, "ledger_sum"))),
+    ])
+}
+
+/// Merge per-cell `metrics` responses. Counters and reason/solver maps
+/// sum; latency percentiles report the **worst cell** (a merged
+/// percentile cannot be recovered from per-cell summaries, and the
+/// worst-cell tail is the operationally honest bound); the mean is
+/// count-weighted.
+fn merge_metrics(cells: &[Json]) -> Json {
+    let solves: Vec<Json> =
+        cells.iter().map(|c| c.get("solve_us").cloned().unwrap_or(Json::Null)).collect();
+    let count = field_sum(&solves, "count");
+    let mean = if count > 0.0 {
+        solves.iter().map(|s| num_of(s, "mean") * num_of(s, "count")).sum::<f64>() / count
+    } else {
+        0.0
+    };
+    let solve = json::obj(vec![
+        ("count", json::num(count)),
+        ("p50", json::num(field_max(&solves, "p50"))),
+        ("p95", json::num(field_max(&solves, "p95"))),
+        ("p99", json::num(field_max(&solves, "p99"))),
+        ("p999", json::num(field_max(&solves, "p999"))),
+        ("mean", json::num(mean)),
+        ("max", json::num(field_max(&solves, "max"))),
+    ]);
+    let solver_cells: Vec<&Json> =
+        cells.iter().filter_map(|c| c.get("solver")).collect();
+    let reason_cells: Vec<&Json> =
+        cells.iter().filter_map(|c| c.get("decisions_by_reason")).collect();
+    ok_response(vec![
+        ("decisions", json::num(field_sum(cells, "decisions"))),
+        ("decisions_by_reason", merge_obj_sum(&reason_cells)),
+        ("solve_us", solve),
+        ("solver", merge_obj_sum(&solver_cells)),
+        ("uptime_secs", json::num(field_max(cells, "uptime_secs"))),
+    ])
+}
+
+/// Merge per-cell `replan` responses; an error (replanning not enabled)
+/// is identical across cells, so the first one speaks for all.
+fn merge_replan(cells: &[Json]) -> Json {
+    if let Some(bad) = cells.iter().find(|c| c.get("ok") != Some(&Json::Bool(true))) {
+        return bad.clone();
+    }
+    ok_response(vec![
+        ("slot", json::num(num_of(&cells[0], "slot"))),
+        ("revisited", json::num(field_sum(cells, "revisited"))),
+        ("replanned", json::num(field_sum(cells, "replanned"))),
+        ("utility_delta", json::num(field_sum(cells, "utility_delta"))),
+    ])
+}
+
+/// Merge per-cell final reports into one whole-cluster report: counters
+/// sum, fairness is completion-weighted, the alloc dump concatenates the
+/// cells' machine columns in cell order (= global machine order), solver
+/// counters accumulate. A single report passes through unchanged.
+pub fn merge_reports(reports: &[ServiceReport]) -> ServiceReport {
+    assert!(!reports.is_empty(), "merge_reports needs at least one cell report");
+    if reports.len() == 1 {
+        return reports[0].clone();
+    }
+    let completed: usize = reports.iter().map(|r| r.completed).sum();
+    let ftf = if completed == 0 {
+        0.0
+    } else {
+        reports.iter().map(|r| r.ftf * r.completed as f64).sum::<f64>()
+            / completed as f64
+    };
+    let horizon = reports[0].alloc.len();
+    let mut alloc = Vec::with_capacity(horizon);
+    for t in 0..horizon {
+        let mut row = Vec::new();
+        for r in reports {
+            row.extend_from_slice(&r.alloc[t]);
+        }
+        alloc.push(row);
+    }
+    let mut solver = SolverStats::default();
+    for r in reports {
+        solver.merge(&r.solver);
+    }
+    ServiceReport {
+        slot: reports[0].slot,
+        ended: reports[0].ended,
+        submitted: reports.iter().map(|r| r.submitted).sum(),
+        admitted: reports.iter().map(|r| r.admitted).sum(),
+        rejected: reports.iter().map(|r| r.rejected).sum(),
+        deferred: reports.iter().map(|r| r.deferred).sum(),
+        completed,
+        replanned: reports.iter().map(|r| r.replanned).sum(),
+        evicted: reports.iter().map(|r| r.evicted).sum(),
+        migrated: reports.iter().map(|r| r.migrated).sum(),
+        ftf,
+        total_utility: reports.iter().map(|r| r.total_utility).sum(),
+        alloc,
+        solver,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::core::synthetic_service_config;
+    use super::*;
+
+    #[test]
+    fn shard_spec_partitions_the_machines() {
+        let spec = ShardSpec::new(4, 10).unwrap();
+        let mut covered = Vec::new();
+        for i in 0..4 {
+            let (start, end) = spec.range(i);
+            assert!(start < end, "cell {i} must own at least one machine");
+            for m in start..end {
+                assert_eq!(spec.of_machine(m), Some(i));
+                covered.push(m);
+            }
+        }
+        assert_eq!(covered, (0..10).collect::<Vec<_>>());
+        assert_eq!(spec.of_machine(10), None);
+        assert!(ShardSpec::new(0, 10).is_err());
+        assert!(ShardSpec::new(11, 10).is_err());
+    }
+
+    #[test]
+    fn report_merge_sums_and_concatenates() {
+        let mk = |submitted: usize, completed: usize, ftf: f64, util: f64, col: f64| {
+            ServiceReport {
+                slot: 12,
+                ended: true,
+                submitted,
+                admitted: submitted,
+                rejected: 0,
+                deferred: 0,
+                completed,
+                replanned: 1,
+                evicted: 0,
+                migrated: 0,
+                ftf,
+                total_utility: util,
+                alloc: vec![vec![[col, 0.0, 0.0, 0.0]; 2]; 3],
+                solver: SolverStats { lp_solves: 5, ..SolverStats::default() },
+            }
+        };
+        let merged = merge_reports(&[mk(3, 2, 1.0, 10.0, 1.0), mk(5, 6, 2.0, 4.0, 2.0)]);
+        assert_eq!(merged.submitted, 8);
+        assert_eq!(merged.completed, 8);
+        assert_eq!(merged.replanned, 2);
+        assert!((merged.ftf - (1.0 * 2.0 + 2.0 * 6.0) / 8.0).abs() < 1e-12);
+        assert!((merged.total_utility - 14.0).abs() < 1e-12);
+        assert_eq!(merged.solver.lp_solves, 10);
+        // alloc columns concatenate in cell order: 2 + 2 machines
+        assert_eq!(merged.alloc.len(), 3);
+        assert_eq!(merged.alloc[0].len(), 4);
+        assert_eq!(merged.alloc[0][1][0], 1.0);
+        assert_eq!(merged.alloc[0][2][0], 2.0);
+        // a single report passes through unchanged
+        let one = mk(3, 2, 1.0, 10.0, 1.0);
+        assert_eq!(merge_reports(&[one.clone()]), one);
+    }
+
+    #[test]
+    fn status_merge_weights_fairness_by_completions() {
+        let cell = |submitted: f64, completed: f64, ftf: f64| {
+            ok_response(vec![
+                ("slot", json::num(4.0)),
+                ("ended", Json::Bool(false)),
+                ("horizon", json::num(12.0)),
+                ("scheduler", json::s("pd-ors")),
+                ("submitted", json::num(submitted)),
+                ("completed", json::num(completed)),
+                ("ftf", json::num(ftf)),
+                ("ledger_sum", json::num(1.5)),
+            ])
+        };
+        let merged = merge_status(&[cell(4.0, 2.0, 1.0), cell(6.0, 0.0, 9.0)]);
+        assert_eq!(merged.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(merged.get("slot").unwrap().as_usize(), Some(4));
+        assert_eq!(merged.get("submitted").unwrap().as_usize(), Some(10));
+        // the empty cell's ftf carries zero weight
+        assert!((merged.get("ftf").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert!((merged.get("ledger_sum").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_merge_reports_the_worst_cell_tail() {
+        let cell = |count: f64, p99: f64, mean: f64, lp: f64| {
+            ok_response(vec![
+                ("decisions", json::num(count)),
+                (
+                    "decisions_by_reason",
+                    json::obj(vec![("admit/priced", json::num(count))]),
+                ),
+                (
+                    "solve_us",
+                    json::obj(vec![
+                        ("count", json::num(count)),
+                        ("p50", json::num(p99 / 2.0)),
+                        ("p95", json::num(p99)),
+                        ("p99", json::num(p99)),
+                        ("p999", json::num(p99)),
+                        ("mean", json::num(mean)),
+                        ("max", json::num(p99)),
+                    ]),
+                ),
+                ("solver", json::obj(vec![("lp_solves", json::num(lp))])),
+                ("uptime_secs", json::num(1.0)),
+            ])
+        };
+        let merged = merge_metrics(&[cell(4.0, 100.0, 10.0, 7.0), cell(12.0, 300.0, 30.0, 9.0)]);
+        assert_eq!(merged.get("decisions").unwrap().as_usize(), Some(16));
+        let solve = merged.get("solve_us").unwrap();
+        assert_eq!(solve.get("count").unwrap().as_usize(), Some(16));
+        assert_eq!(solve.get("p99").unwrap().as_f64(), Some(300.0));
+        // count-weighted mean: (10*4 + 30*12) / 16 = 25
+        assert!((solve.get("mean").unwrap().as_f64().unwrap() - 25.0).abs() < 1e-12);
+        let solver = merged.get("solver").unwrap();
+        assert_eq!(solver.get("lp_solves").unwrap().as_usize(), Some(16));
+        let reasons = merged.get("decisions_by_reason").unwrap();
+        assert_eq!(reasons.get("admit/priced").unwrap().as_usize(), Some(16));
+    }
+
+    #[test]
+    fn two_cells_serve_the_wire_surface_and_merge() {
+        let service = synthetic_service_config("pd-ors", 1, 8, 16, 12);
+        let jobs = service.workload.jobs(1);
+        let cfg = ShardConfig {
+            service,
+            shards: 2,
+            batch: 4,
+            oplog: None,
+            recover: None,
+        };
+        let (tx, rx) = channel::<RouterMsg>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handle = spawn(cfg, rx, shutdown.clone()).unwrap();
+        let ask = |req: Request| -> Json {
+            let (rtx, rrx) = channel();
+            tx.send(RouterMsg::new(req, Some(rtx))).unwrap();
+            Json::parse(&rrx.recv().unwrap()).unwrap()
+        };
+        let mut ids = Vec::new();
+        for job in jobs.iter().take(8) {
+            let resp = ask(Request::Submit { job: job.clone() });
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+            ids.push(resp.get("job_id").unwrap().as_usize().unwrap());
+        }
+        let mut unique = ids.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), ids.len(), "global job ids must be distinct: {ids:?}");
+        // the interleaved namespace answers explains at the router
+        let e = ask(Request::Explain { job_id: ids[0] });
+        assert_eq!(e.get("ok"), Some(&Json::Bool(true)), "{}", e.to_string());
+        assert_eq!(e.get("job_id").unwrap().as_usize(), Some(ids[0]));
+        // merged status sees every cell's counters
+        let status = ask(Request::Status);
+        assert_eq!(status.get("submitted").unwrap().as_usize(), Some(8));
+        assert_eq!(status.get("slot").unwrap().as_usize(), Some(0));
+        // cell layout over the wire
+        let cells = ask(Request::Cells);
+        assert_eq!(cells.get("shards").unwrap().as_usize(), Some(2));
+        let entries = cells.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("machines_start").unwrap().as_usize(), Some(0));
+        assert_eq!(entries[1].get("machines_start").unwrap().as_usize(), Some(4));
+        assert_eq!(entries[1].get("machines_end").unwrap().as_usize(), Some(8));
+        // cluster answers for the whole cluster
+        let cluster = ask(Request::Cluster);
+        assert_eq!(cluster.get("machines").unwrap().as_usize(), Some(8));
+        // machine ops outside every cell fail at the router
+        let bad = ask(Request::MachineDown { machine: 99 });
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)), "{}", bad.to_string());
+        assert!(bad.get("error").unwrap().as_str().unwrap().contains("out of range"));
+        // a tick advances every cell in lockstep
+        let tick = ask(Request::Tick);
+        assert_eq!(tick.get("slot").unwrap().as_usize(), Some(1));
+        // shutdown is answered by the router and raises the drain flag
+        let down = ask(Request::Shutdown);
+        assert_eq!(down.get("draining"), Some(&Json::Bool(true)));
+        assert!(shutdown.load(Ordering::SeqCst));
+        drop(tx);
+        let report = handle.join().unwrap().unwrap();
+        assert_eq!(report.submitted, 8);
+        assert_eq!(report.admitted + report.rejected + report.deferred, 8);
+        assert_eq!(report.slot, 1);
+        assert_eq!(report.alloc[0].len(), 8, "merged alloc spans the whole cluster");
+    }
+}

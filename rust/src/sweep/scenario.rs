@@ -173,6 +173,36 @@ impl ClusterSpec {
         }
     }
 
+    /// The sub-cluster spec covering machines `[start, end)` of this
+    /// spec's machine order (homogeneous stays homogeneous; heterogeneous
+    /// classes are cut at the range boundaries). This is how the sharded
+    /// admission service derives each cell's cluster: contiguous machine
+    /// ranges of the full spec, so global machine id = cell base + local
+    /// id and the concatenation of the cell clusters is the whole
+    /// cluster.
+    pub fn slice(&self, start: usize, end: usize) -> ClusterSpec {
+        assert!(start <= end && end <= self.machines(), "slice out of range");
+        match self {
+            ClusterSpec::Homogeneous { .. } => {
+                ClusterSpec::Homogeneous { machines: end - start }
+            }
+            ClusterSpec::Heterogeneous { classes } => {
+                let mut out = Vec::new();
+                let mut base = 0usize;
+                for &(n, scale) in classes {
+                    let class_end = base + n;
+                    let lo = start.max(base);
+                    let hi = end.min(class_end);
+                    if lo < hi {
+                        out.push((hi - lo, scale));
+                    }
+                    base = class_end;
+                }
+                ClusterSpec::Heterogeneous { classes: out }
+            }
+        }
+    }
+
     /// Stable identity string (part of [`Scenario::key`]).
     pub fn key(&self) -> String {
         match self {
@@ -449,6 +479,32 @@ mod tests {
     use super::*;
     use crate::workload::synthetic::paper_cluster_skewed;
     use std::collections::BTreeSet;
+
+    #[test]
+    fn cluster_slices_concatenate_to_the_whole() {
+        let homog = ClusterSpec::homogeneous(10);
+        assert_eq!(homog.slice(0, 4).machines(), 4);
+        assert_eq!(homog.slice(4, 10).machines(), 6);
+        let het = ClusterSpec::Heterogeneous {
+            classes: vec![(2, 2.0), (4, 1.0), (2, 0.5)],
+        };
+        // cut points inside and across class boundaries
+        let a = het.slice(0, 3);
+        let b = het.slice(3, 8);
+        assert_eq!(a, ClusterSpec::Heterogeneous { classes: vec![(2, 2.0), (1, 1.0)] });
+        assert_eq!(
+            b,
+            ClusterSpec::Heterogeneous { classes: vec![(3, 1.0), (2, 0.5)] }
+        );
+        // machine-by-machine, the concatenated slices ARE the cluster
+        let whole = het.build();
+        let mut joined = a.build().machines;
+        joined.extend(b.build().machines);
+        assert_eq!(whole.machines.len(), joined.len());
+        for (w, j) in whole.machines.iter().zip(&joined) {
+            assert_eq!(w.capacity, j.capacity);
+        }
+    }
 
     #[test]
     fn matrix_expands_cartesian_product() {

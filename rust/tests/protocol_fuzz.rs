@@ -9,8 +9,13 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 
+use dmlrs::chaos::ChurnSpec;
 use dmlrs::jobs::test_support::test_job;
-use dmlrs::service::{start_daemon, synthetic_service_config, DaemonConfig, Request};
+use dmlrs::sched::registry::SchedulerSpec;
+use dmlrs::service::{
+    start_daemon, synthetic_service_config, DaemonConfig, Request, ServiceConfig,
+};
+use dmlrs::sweep::{ClusterSpec, WorkloadSpec};
 use dmlrs::testkit;
 use dmlrs::util::json::Json;
 use dmlrs::util::Rng;
@@ -219,4 +224,119 @@ fn daemon_survives_malformed_lines_without_desync() {
     // the one explicit tick is accounted for)
     let report = handle.join().expect("clean drain");
     assert_eq!(report.slot, 1, "exactly one tick reached the core");
+}
+
+/// PR 10: the same hardening contract holds for the **sharded** router
+/// surface. A 2-cell daemon faces hostile ids (explains for jobs that
+/// were never submitted, machine ops outside every cell), malformed
+/// lines, and submits racing a `machine_down` on the other cell — no
+/// panic, no desync, every response tagged. Then both per-cell op-logs
+/// are truncated mid-record (a crash while two cells were appending
+/// concurrently) and `--recover` must repair and replay every cell to
+/// the exact pre-crash state.
+#[test]
+fn sharded_daemon_survives_hostile_ops_and_recovers_every_cell() {
+    let base = std::env::temp_dir()
+        .join(format!("dmlrs_fuzz_cells_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    for i in 0..2 {
+        let _ = std::fs::remove_file(format!("{base}.cell{i}"));
+    }
+    // out-of-horizon churn spec: the manual-injection idiom — tracking
+    // on, nothing fires automatically, the wire ops are the only churn
+    let service = ServiceConfig {
+        scheduler: SchedulerSpec::new("pd-ors").with_seed(1),
+        cluster: ClusterSpec::homogeneous(8),
+        workload: WorkloadSpec::synthetic(16, 10, 0),
+        churn: ChurnSpec::parse("down@900:1").unwrap(),
+    };
+    let mut cfg = DaemonConfig::new(service.clone());
+    cfg.shards = 2;
+    cfg.batch = 4;
+    cfg.oplog = Some(base.clone());
+    let handle = start_daemon(cfg).expect("daemon starts");
+    let addr = handle.addr;
+
+    // submits racing churn on the other cell: machine 7 lives on cell 1
+    // (machines 4..8), while cell 0 keeps admitting — both interleavings
+    // are valid, but every response must be ok and every op journaled in
+    // the order its cell served it
+    let jobs = service.workload.jobs(1);
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            let mut c = Client::connect(addr);
+            for job in &jobs {
+                let line = Request::Submit { job: job.clone() }.to_line();
+                let resp = c.send_bytes(line.as_bytes());
+                assert!(resp.contains("\"ok\":true"), "{resp}");
+            }
+        });
+        scope.spawn(|| {
+            let mut c = Client::connect(addr);
+            let resp = c.send_bytes(b"{\"op\":\"machine_down\",\"machine\":7}");
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+            let resp = c.send_bytes(b"{\"op\":\"machine_up\",\"machine\":7}");
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+        });
+    });
+
+    let mut client = Client::connect(addr);
+    // hostile ids against the router: an explain homed on a cell that
+    // never saw the job, and machine ops outside every cell's range
+    for (bytes, needle) in [
+        (b"{\"op\":\"explain\",\"job_id\":999}".as_slice(), "\"ok\":false"),
+        (b"{\"op\":\"machine_down\",\"machine\":99}".as_slice(), "out of range"),
+        (b"{\"op\":\"machine_up\",\"machine\":12345}".as_slice(), "out of range"),
+        (b"{\"op\":\"fly\"}".as_slice(), "\"ok\":false"),
+        (b"not json at all".as_slice(), "\"ok\":false"),
+    ] {
+        let resp = client.send_bytes(bytes);
+        assert!(resp.contains(needle), "{resp}");
+        // desync probe after every hostile line
+        let status = client.send_bytes(b"{\"op\":\"status\"}");
+        let sv = Json::parse(status.trim()).expect("status is JSON");
+        assert_eq!(sv.get("ok"), Some(&Json::Bool(true)), "desynced: {status}");
+        assert_eq!(sv.get("submitted").unwrap().as_usize(), Some(16), "{status}");
+    }
+    // the merged surface still reports the cell layout
+    let cells = client.send_bytes(b"{\"op\":\"cells\"}");
+    let cv = Json::parse(cells.trim()).unwrap();
+    assert_eq!(cv.get("shards").unwrap().as_usize(), Some(2), "{cells}");
+
+    client.send_bytes(b"{\"op\":\"tick\"}");
+    let resp = client.send_bytes(b"{\"op\":\"shutdown\"}");
+    assert!(resp.contains("\"draining\":true"), "{resp}");
+    let report = handle.join().expect("clean drain");
+    assert_eq!(report.submitted, 16);
+    assert_eq!(report.slot, 1);
+
+    // crash injection: both cells die mid-append
+    for i in 0..2 {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(format!("{base}.cell{i}"))
+            .unwrap();
+        f.write_all(b"{\"op\":\"submit\",\"job\":{\"id").unwrap();
+    }
+
+    // --recover repairs and replays every cell independently
+    let mut rcfg = DaemonConfig::new(service);
+    rcfg.shards = 2;
+    rcfg.batch = 4;
+    rcfg.recover = Some(base.clone());
+    let handle = start_daemon(rcfg).expect("recovery starts");
+    let mut client = Client::connect(handle.addr);
+    let status = client.send_bytes(b"{\"op\":\"status\"}");
+    let sv = Json::parse(status.trim()).unwrap();
+    assert_eq!(sv.get("ok"), Some(&Json::Bool(true)), "{status}");
+    assert_eq!(sv.get("submitted").unwrap().as_usize(), Some(16), "{status}");
+    assert_eq!(sv.get("slot").unwrap().as_usize(), Some(1), "{status}");
+    client.send_bytes(b"{\"op\":\"shutdown\"}");
+    let replayed = handle.join().expect("clean drain after recovery");
+    assert_eq!(replayed, report, "per-cell replay must reproduce the crash state");
+    for i in 0..2 {
+        let _ = std::fs::remove_file(format!("{base}.cell{i}"));
+    }
 }

@@ -1,0 +1,354 @@
+//! Sharding parity suite (PR 10): the cell/router architecture must be
+//! invisible at the protocol level.
+//!
+//! * A **1-shard** router is a pure passthrough: every deterministic
+//!   response (submit / tick / status / cells / cluster) is
+//!   byte-identical to the plain [`ServiceCore`] fed the same request
+//!   sequence, for every scheduler in the zoo, and the final reports are
+//!   equal — decisions, completions, utility, and solver counters
+//!   included.
+//! * A **k-shard** service conserves the ledger: the per-cell loads
+//!   reported by the `cells` op sum to the merged `status.ledger_sum`,
+//!   and both equal the whole-cluster usage recomputed independently
+//!   from the admitted schedules' placements. No placement ever lands
+//!   outside its owner cell's machine range.
+//! * **Batch drain** is unobservable: `--batch 16` produces the same
+//!   response bytes, the same final report (RNG stream and solver
+//!   counters included), and the same op-log journal bytes as the
+//!   `--batch 1` oracle.
+//! * **Per-cell op-logs** recover independently: replaying every
+//!   `<path>.cell<i>` journal reproduces the merged pre-shutdown report
+//!   exactly.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use dmlrs::chaos::ChurnSpec;
+use dmlrs::cluster::NUM_RESOURCES;
+use dmlrs::sched::registry::{SchedulerSpec, ZOO};
+use dmlrs::service::{
+    Request, RouterMsg, ServiceConfig, ServiceCore, ShardConfig,
+};
+use dmlrs::service::shard::{cell_log_path, spawn};
+use dmlrs::sweep::{ClusterSpec, WorkloadSpec};
+use dmlrs::util::json::Json;
+
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("dmlrs_shard_parity_{tag}_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// A live router: send requests, read raw response strings (the bytes a
+/// wire client would see).
+struct Router {
+    tx: Sender<RouterMsg>,
+    handle: std::thread::JoinHandle<Option<dmlrs::service::ServiceReport>>,
+}
+
+impl Router {
+    fn start(cfg: ShardConfig) -> Router {
+        let (tx, rx) = channel::<RouterMsg>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handle = spawn(cfg, rx, shutdown).expect("router starts");
+        Router { tx, handle }
+    }
+
+    /// One blocking round-trip, returning the raw response line.
+    fn ask(&self, req: Request) -> String {
+        let (rtx, rrx) = channel();
+        self.tx.send(RouterMsg::new(req, Some(rtx))).expect("router alive");
+        rrx.recv().expect("router answers")
+    }
+
+    /// Enqueue without waiting (what a pipelining client does); the
+    /// response arrives on the returned channel.
+    fn send(&self, req: Request) -> Receiver<String> {
+        let (rtx, rrx) = channel();
+        self.tx.send(RouterMsg::new(req, Some(rtx))).expect("router alive");
+        rrx
+    }
+
+    fn finish(self) -> dmlrs::service::ServiceReport {
+        drop(self.tx);
+        self.handle.join().expect("router thread").expect("merged report")
+    }
+}
+
+fn service(key: &str, seed: u64, machines: usize, jobs: usize) -> ServiceConfig {
+    ServiceConfig {
+        scheduler: SchedulerSpec::new(key).with_seed(seed),
+        cluster: ClusterSpec::homogeneous(machines),
+        workload: WorkloadSpec::synthetic(jobs, 12, 0),
+        churn: ChurnSpec::None,
+    }
+}
+
+/// The deterministic request sequence both sides replay: every arrival
+/// in submission order, a tick per slot, and periodic status probes.
+/// (`metrics` is excluded on purpose — its latency percentiles are
+/// wall-clock and legitimately differ between runs.)
+fn parity_sequence(svc: &ServiceConfig) -> Vec<Request> {
+    let jobs = svc.workload.jobs(svc.scheduler.seed);
+    let horizon = svc.horizon();
+    let mut seq = Vec::new();
+    let mut next = 0usize;
+    for t in 0..horizon {
+        while next < jobs.len() && jobs[next].arrival <= t {
+            seq.push(Request::Submit { job: jobs[next].clone() });
+            next += 1;
+        }
+        seq.push(Request::Tick);
+        if t % 4 == 0 {
+            seq.push(Request::Status);
+        }
+    }
+    seq.push(Request::Status);
+    seq.push(Request::Cells);
+    seq.push(Request::Cluster);
+    seq
+}
+
+#[test]
+fn one_shard_router_is_byte_identical_to_the_plain_core() {
+    for key in ZOO {
+        let svc = service(key, 3, 8, 20);
+        let seq = parity_sequence(&svc);
+
+        // plain, unsharded core
+        let mut core = ServiceCore::new(svc.clone()).expect("core builds");
+        let plain: Vec<String> =
+            seq.iter().map(|req| core.apply(req).to_string()).collect();
+        let plain_report = core.report();
+
+        // the same sequence through a 1-shard router
+        let router = Router::start(ShardConfig {
+            service: svc,
+            shards: 1,
+            batch: 8,
+            oplog: None,
+            recover: None,
+        });
+        let routed: Vec<String> =
+            seq.iter().map(|req| router.ask(req.clone())).collect();
+        let report = router.finish();
+
+        for (i, (a, b)) in plain.iter().zip(&routed).enumerate() {
+            assert_eq!(a, b, "{key}: response {i} diverged for {:?}", seq[i]);
+        }
+        assert_eq!(report, plain_report, "{key}: final reports diverged");
+    }
+}
+
+#[test]
+fn four_shards_conserve_the_ledger_and_respect_cell_ranges() {
+    let shards = 4usize;
+    let svc = service("pd-ors", 1, 8, 24);
+    let jobs = svc.workload.jobs(1);
+    let router = Router::start(ShardConfig {
+        service: svc,
+        shards,
+        batch: 8,
+        oplog: None,
+        recover: None,
+    });
+
+    // submit everything up front (slot 0 — the ledger then holds each
+    // admitted schedule's full future allocation, which is what the
+    // conservation check recomputes below)
+    let mut responses = Vec::new();
+    for job in &jobs {
+        let resp = Json::parse(&router.ask(Request::Submit { job: job.clone() }))
+            .expect("submit answers JSON");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.to_string());
+        responses.push(resp);
+    }
+
+    // global job ids are distinct across cells
+    let mut ids: Vec<usize> = responses
+        .iter()
+        .map(|r| r.get("job_id").unwrap().as_usize().unwrap())
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), jobs.len(), "duplicate global job ids");
+
+    // cell layout: owner of global id g is cell g % k, owning a
+    // contiguous machine range
+    let cells = Json::parse(&router.ask(Request::Cells)).unwrap();
+    assert_eq!(cells.get("shards").unwrap().as_usize(), Some(shards));
+    let entries = cells.get("cells").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(entries.len(), shards);
+    let range_of = |cell: usize| -> (usize, usize) {
+        let e = &entries[cell];
+        assert_eq!(e.get("cell").unwrap().as_usize(), Some(cell));
+        (
+            e.get("machines_start").unwrap().as_usize().unwrap(),
+            e.get("machines_end").unwrap().as_usize().unwrap(),
+        )
+    };
+
+    // every admitted placement stays inside its owner cell's range, and
+    // the whole-cluster usage recomputes from the wire artifacts
+    let mut expected_usage = 0.0f64;
+    let mut admitted = 0usize;
+    for (resp, job) in responses.iter().zip(&jobs) {
+        if resp.get("decision").and_then(Json::as_str) != Some("admitted") {
+            continue;
+        }
+        admitted += 1;
+        let gid = resp.get("job_id").unwrap().as_usize().unwrap();
+        let (start, end) = range_of(gid % shards);
+        let sched = resp.get("schedule").unwrap();
+        for slot in sched.get("slots").unwrap().as_arr().unwrap() {
+            for p in slot.get("placements").unwrap().as_arr().unwrap() {
+                let p = p.as_arr().unwrap();
+                let h = p[0].as_usize().unwrap();
+                let w = p[1].as_f64().unwrap();
+                let ps = p[2].as_f64().unwrap();
+                assert!(
+                    (start..end).contains(&h),
+                    "job {gid} (cell {}) placed on machine {h} outside {start}..{end}",
+                    gid % shards
+                );
+                for r in 0..NUM_RESOURCES {
+                    expected_usage +=
+                        w * job.worker_demand.0[r] + ps * job.ps_demand.0[r];
+                }
+            }
+        }
+    }
+    assert!(admitted > 0, "pd-ors should admit something at slot 0");
+
+    // conservation: per-cell loads sum to the merged ledger_sum, and
+    // both equal the independently recomputed usage
+    let cell_load_sum: f64 =
+        entries.iter().map(|e| e.get("load").unwrap().as_f64().unwrap()).sum();
+    let status = Json::parse(&router.ask(Request::Status)).unwrap();
+    let ledger_sum = status.get("ledger_sum").unwrap().as_f64().unwrap();
+    assert!(
+        (cell_load_sum - ledger_sum).abs() < 1e-9,
+        "cell loads {cell_load_sum} vs merged ledger {ledger_sum}"
+    );
+    assert!(
+        (ledger_sum - expected_usage).abs() < 1e-6,
+        "ledger {ledger_sum} vs usage recomputed from schedules {expected_usage}"
+    );
+
+    // merged counters account for every submission
+    let submitted = status.get("submitted").unwrap().as_usize().unwrap();
+    let decided = status.get("admitted").unwrap().as_usize().unwrap()
+        + status.get("rejected").unwrap().as_usize().unwrap()
+        + status.get("deferred").unwrap().as_usize().unwrap();
+    assert_eq!(submitted, jobs.len());
+    assert_eq!(decided, jobs.len());
+
+    // run the horizon out and check the merged final report
+    for _ in 0..12 {
+        router.ask(Request::Tick);
+    }
+    let report = router.finish();
+    assert_eq!(report.submitted, jobs.len());
+    assert_eq!(report.admitted, admitted);
+    assert_eq!(report.alloc[0].len(), 8, "merged alloc spans the whole cluster");
+}
+
+#[test]
+fn batch_16_matches_batch_1_byte_for_byte_including_the_journal() {
+    let run = |batch: usize, path: &str| {
+        let _ = std::fs::remove_file(path);
+        let svc = service("pd-ors", 2, 6, 16);
+        let jobs = svc.workload.jobs(2);
+        let router = Router::start(ShardConfig {
+            service: svc,
+            shards: 1,
+            batch,
+            oplog: Some(path.to_string()),
+            recover: None,
+        });
+        // pipeline all submits without waiting, so a batch > 1 cell
+        // actually drains them in bursts; then a tick and a status probe
+        let waits: Vec<_> = jobs
+            .iter()
+            .map(|job| router.send(Request::Submit { job: job.clone() }))
+            .collect();
+        let mut out: Vec<String> =
+            waits.into_iter().map(|w| w.recv().unwrap()).collect();
+        out.push(router.ask(Request::Tick));
+        out.push(router.ask(Request::Status));
+        let report = router.finish();
+        let journal = std::fs::read(path).expect("journal written");
+        (out, report, journal)
+    };
+
+    let path1 = tmp_path("batch1");
+    let path16 = tmp_path("batch16");
+    let (out1, report1, journal1) = run(1, &path1);
+    let (out16, report16, journal16) = run(16, &path16);
+
+    assert_eq!(out1, out16, "responses must not depend on the drain batch");
+    assert_eq!(report1, report16, "reports (RNG + solver counters) diverged");
+    assert_eq!(journal1, journal16, "op-log bytes diverged");
+    let _ = std::fs::remove_file(&path1);
+    let _ = std::fs::remove_file(&path16);
+}
+
+#[test]
+fn per_cell_oplogs_recover_each_cell_independently() {
+    let shards = 3usize;
+    let base = tmp_path("cells");
+    for i in 0..shards {
+        let _ = std::fs::remove_file(cell_log_path(&base, i, shards));
+    }
+    let svc = service("pd-ors", 5, 6, 18);
+    let jobs = svc.workload.jobs(5);
+
+    let router = Router::start(ShardConfig {
+        service: svc.clone(),
+        shards,
+        batch: 4,
+        oplog: Some(base.clone()),
+        recover: None,
+    });
+    let mut next = 0usize;
+    for t in 0..svc.horizon() {
+        while next < jobs.len() && jobs[next].arrival <= t {
+            router.ask(Request::Submit { job: jobs[next].clone() });
+            next += 1;
+        }
+        router.ask(Request::Tick);
+    }
+    let report = router.finish();
+
+    // every cell wrote its own journal ...
+    for i in 0..shards {
+        let path = cell_log_path(&base, i, shards);
+        assert!(
+            std::fs::metadata(&path).map(|m| m.len() > 0).unwrap_or(false),
+            "cell {i} journal missing at {path}"
+        );
+    }
+
+    // ... and replaying them reproduces the merged state exactly
+    let recovered = Router::start(ShardConfig {
+        service: svc,
+        shards,
+        batch: 4,
+        oplog: None,
+        recover: Some(base.clone()),
+    });
+    let status = Json::parse(&recovered.ask(Request::Status)).unwrap();
+    assert_eq!(
+        status.get("submitted").unwrap().as_usize(),
+        Some(jobs.len()),
+        "{}",
+        status.to_string()
+    );
+    let replayed = recovered.finish();
+    assert_eq!(replayed, report, "per-cell replay must be byte-identical");
+    for i in 0..shards {
+        let _ = std::fs::remove_file(cell_log_path(&base, i, shards));
+    }
+}

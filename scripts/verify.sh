@@ -151,6 +151,76 @@ for field in p99_ms p50_ms p95_ms p999_ms achieved_rate; do
     fi
 done
 
+echo "== shard soak (1/2/4-cell daemon under 10k concurrent connections) =="
+# The PR 10 scaling gate: the same open-loop burst — one job per
+# connection, ~10k concurrent connections against the readiness-loop
+# frontend — at 1, 2, and 4 shards. Sharding must buy admission
+# throughput (the cells solve concurrently) without regressing the p99
+# admission latency. Emits BENCH_shard.json.
+ulimit -n 32768 2>/dev/null || true
+NOFILE=$(ulimit -n)
+SOAK_CONNS=10000
+if [ "$NOFILE" != "unlimited" ] && [ "$NOFILE" -lt 10500 ]; then
+    # leave headroom below the fd ceiling the environment actually grants
+    SOAK_CONNS=$(( NOFILE > 600 ? NOFILE - 500 : 100 ))
+    echo "note: fd limit $NOFILE caps the soak at $SOAK_CONNS connections"
+fi
+SHARD_LOG=target/serve_shard.log
+shard_field() {
+    awk -v f="\"$1\":" '{
+        n = index($0, f);
+        if (n) { s = substr($0, n + length(f)); sub(/[,}].*/, "", s); gsub(/[" ]/, "", s); print s; exit }
+    }'
+}
+run_shard_soak() { # $1 = shards; sets SOAK_THR / SOAK_P99 / SOAK_FAILURES
+    rm -f "$SHARD_LOG" target/bench_shard_run.json
+    "$BIN" serve --addr 127.0.0.1:0 --machines 64 --jobs 64 --horizon 12 --seed 1 \
+        --shards "$1" --batch 16 >"$SHARD_LOG" 2>&1 &
+    local pid=$!
+    local addr=""
+    for _ in $(seq 1 100); do
+        addr=$(awk '/listening on /{print $NF; exit}' "$SHARD_LOG" 2>/dev/null || true)
+        [ -n "$addr" ] && break
+        sleep 0.1
+    done
+    if [ -z "$addr" ]; then
+        echo "error: $1-shard daemon did not come up" >&2
+        cat "$SHARD_LOG" >&2
+        kill "$pid" 2>/dev/null || true
+        exit 1
+    fi
+    "$BIN" load --addr "$addr" --connections "$SOAK_CONNS" --rate 100000 \
+        --jobs "$SOAK_CONNS" --horizon 12 --seed 1 --shutdown \
+        --bench-out target/bench_shard_run.json >/dev/null
+    wait "$pid"
+    SOAK_THR=$(shard_field achieved_rate < target/bench_shard_run.json)
+    SOAK_P99=$(shard_field p99_ms < target/bench_shard_run.json)
+    SOAK_FAILURES=$(shard_field conn_failures < target/bench_shard_run.json)
+}
+run_shard_soak 1; THR1=$SOAK_THR; P99_1=$SOAK_P99; FAIL1=$SOAK_FAILURES
+run_shard_soak 2; THR2=$SOAK_THR; P99_2=$SOAK_P99
+run_shard_soak 4; THR4=$SOAK_THR; P99_4=$SOAK_P99
+awk -v conns="$SOAK_CONNS" -v t1="$THR1" -v p1="$P99_1" -v t2="$THR2" -v p2="$P99_2" \
+    -v t4="$THR4" -v p4="$P99_4" -v f1="$FAIL1" 'BEGIN {
+    speedup = (t1 > 0) ? t4 / t1 : 0;
+    printf "{\"bench\": \"shard_soak\", \"connections\": %d, \"machines\": 64, \"batch\": 16, \"conn_failures\": %d, \"thr_1\": %.1f, \"p99_ms_1\": %.3f, \"thr_2\": %.1f, \"p99_ms_2\": %.3f, \"thr_4\": %.1f, \"p99_ms_4\": %.3f, \"shard_speedup\": %.2f}\n", conns, f1, t1, p1, t2, p2, t4, p4, speedup;
+}' > ../BENCH_shard.json
+cat ../BENCH_shard.json
+SHARD_SPEEDUP=$(shard_field shard_speedup < ../BENCH_shard.json)
+# the scaling gate needs cores for the cells to run on; on a starved
+# runner (< 4 cores) sharding can only interleave, so the bar drops
+MIN_SPEEDUP=$(awk -v par="$PAR" 'BEGIN { print (par >= 4) ? 2.0 : 1.2 }')
+if awk -v s="$SHARD_SPEEDUP" -v m="$MIN_SPEEDUP" 'BEGIN { exit !(s < m) }'; then
+    echo "error: 4-shard throughput speedup $SHARD_SPEEDUP below ${MIN_SPEEDUP}x (thr $THR4 vs $THR1)" >&2
+    exit 1
+fi
+# sharding must not regress the tail: 4-shard p99 within 10% of 1-shard
+if awk -v p1="$P99_1" -v p4="$P99_4" 'BEGIN { exit !(p1 > 0 && p4 > 1.10 * p1) }'; then
+    echo "error: 4-shard p99 ${P99_4}ms regressed beyond 1-shard ${P99_1}ms" >&2
+    exit 1
+fi
+echo "shard soak OK ($SOAK_CONNS conns: ${THR1}/s -> ${THR4}/s, speedup ${SHARD_SPEEDUP}x, p99 ${P99_1}ms -> ${P99_4}ms)"
+
 echo "== replan bench (diurnal quick sweep, replan on vs off) =="
 # Run the quick primal-dual sweep on a churny diurnal workload with and
 # without elastic re-planning and emit BENCH_replan.json. The replan run
@@ -394,6 +464,10 @@ fi
 #                        jobs in the provenance smoke run (deterministic
 #                        given seeds; drift means the pricing or the
 #                        admission rule changed silently)
+#   shard_speedup      — 4-shard vs 1-shard admission throughput on the
+#                        soak (the one hardware-sensitive entry, so its
+#                        gate is deliberately loose: it only catches the
+#                        sharding being wired off, not runner noise)
 THETA=$(cat ../BENCH_solver.json | json_field theta_solves)
 HITS=$(cat ../BENCH_solver.json | json_field memo_hits)
 HIT_RATE=$(awk -v t="$THETA" -v h="$HITS" 'BEGIN { printf "%.4f", (t + h > 0) ? h / (t + h) : 0 }')
@@ -410,8 +484,8 @@ MEAN_MARGIN=$(awk '/"decision":"admit"/ {
     n = index($0, "\"margin\":");
     if (n) { s = substr($0, n + 9); sub(/[,}].*/, "", s); total += s; cnt++ }
 } END { printf "%.4f", (cnt > 0) ? total / cnt : 0 }' ../explain_quick.jsonl)
-CURRENT=$(printf '{"bench": "derived_trend_metrics", "memo_hit_rate": %s, "replan_utility_gain": %s, "churn_disruption": %d, "warm_hit_rate": %s, "snapshot_deltas_per_admission": %s, "spans_per_admission": %s, "mean_admit_margin": %s}' \
-    "$HIT_RATE" "$GAIN" "$DISRUPTION" "$WARM_RATE" "$DELTAS_PER_ADM" "$SPANS_PER_ADM" "$MEAN_MARGIN")
+CURRENT=$(printf '{"bench": "derived_trend_metrics", "memo_hit_rate": %s, "replan_utility_gain": %s, "churn_disruption": %d, "warm_hit_rate": %s, "snapshot_deltas_per_admission": %s, "spans_per_admission": %s, "mean_admit_margin": %s, "shard_speedup": %s}' \
+    "$HIT_RATE" "$GAIN" "$DISRUPTION" "$WARM_RATE" "$DELTAS_PER_ADM" "$SPANS_PER_ADM" "$MEAN_MARGIN" "$SHARD_SPEEDUP")
 BASE=$(grep '"bench": "derived_trend_metrics"' "$TREND" | head -n 1 || true)
 if [ -n "$BASE" ]; then
     BASE_RATE=$(printf '%s\n' "$BASE" | json_field memo_hit_rate)
@@ -460,6 +534,14 @@ if [ -n "$BASE" ]; then
     # drift means the dual prices or the admission rule moved silently
     if awk -v b="${BASE_MARGIN:-0}" -v n="$MEAN_MARGIN" 'BEGIN { exit !(b > 0 && (n > 1.25 * b || n < 0.75 * b)) }'; then
         echo "error: mean admit margin drifted beyond 25%: $MEAN_MARGIN vs baseline $BASE_MARGIN" >&2
+        exit 1
+    fi
+    # shard speedup is hardware-sensitive, so only a collapse (< 60% of
+    # the pinned baseline) fails — that means the cells stopped solving
+    # concurrently, not that the runner was busy
+    BASE_SHARD=$(printf '%s\n' "$BASE" | json_field shard_speedup)
+    if awk -v b="${BASE_SHARD:-0}" -v n="$SHARD_SPEEDUP" 'BEGIN { exit !(b > 0 && n < 0.60 * b) }'; then
+        echo "error: shard speedup collapsed: $SHARD_SPEEDUP vs baseline $BASE_SHARD" >&2
         exit 1
     fi
     echo "derived trend metrics within thresholds (hit_rate $HIT_RATE vs $BASE_RATE, gain $GAIN vs $BASE_GAIN, disruption $DISRUPTION vs $BASE_DISRUPT, warm_rate $WARM_RATE vs ${BASE_WARM:-unpinned}, deltas/adm $DELTAS_PER_ADM vs ${BASE_DELTAS:-unpinned}, spans/adm $SPANS_PER_ADM vs ${BASE_SPANS:-unpinned}, admit_margin $MEAN_MARGIN vs ${BASE_MARGIN:-unpinned})"
